@@ -1,0 +1,106 @@
+//! Elastic-precision serving demo (paper §5.4): one int8 master model
+//! serves a mixed workload of int2/int4/int8 requests through the dynamic
+//! batcher, then the deployment planner picks a config for a memory budget
+//! the hardware's native precisions can't hit exactly (the paper's
+//! "int3-sized budget on int2/int4 hardware" scenario).
+//!
+//! Run: `cargo run --release --example elastic_serving -- [--requests N]
+//!       [--ckpt checkpoints/….mqck]`
+
+use matquant::coordinator::trainer::init_params;
+use matquant::model::{
+    manifest::default_artifacts_dir, Checkpoint, PrecisionAssignment, QuantizedModel,
+};
+use matquant::runtime::Engine;
+use matquant::serve::{plan_deployment, PrecisionReq, Request, Server, ServerConfig};
+use matquant::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let preset = args.get_or("preset", "tiny").to_string();
+    let n = args.get_usize("requests", 96)?;
+    let engine = Engine::new(default_artifacts_dir())?;
+    let info = engine.manifest().preset(&preset)?.clone();
+
+    // model: checkpoint if given, fresh otherwise
+    let model = match args.get("ckpt") {
+        Some(path) => {
+            let ck = Checkpoint::load(path)?;
+            let mut params = std::collections::BTreeMap::new();
+            let mut aux = std::collections::BTreeMap::new();
+            for (name, t) in &ck.tensors {
+                if let Some(a) = name.strip_prefix("aux:") {
+                    aux.insert(a.to_string(), t.clone());
+                } else if name != "final_losses" {
+                    params.insert(name.clone(), t.clone());
+                }
+            }
+            QuantizedModel::build(&info, &params, if aux.is_empty() { None } else { Some(&aux) })?
+        }
+        None => QuantizedModel::build(&info, &init_params(&engine, &preset, 3)?, None)?,
+    };
+
+    // ---- deployment planning (paper §5.4) --------------------------------
+    let int4 = model.storage_bytes(&PrecisionAssignment::uniform(4));
+    let int2 = model.storage_bytes(&PrecisionAssignment::uniform(2));
+    let budget = (int2 + int4) / 2; // "int3-sized" budget
+    println!("storage: int2={int2}B int4={int4}B; planning for budget={budget}B on int2/int4/int8 hardware");
+    let plan = plan_deployment(&model, info.model.n_layers, budget, &[8, 4, 2], |_, bpp| {
+        // coarse quality prior: more bits/param → better, saturating
+        1.0 - (-0.5 * bpp).exp()
+    })
+    .expect("budget is feasible");
+    println!(
+        "planner chose: {} ({} bytes, {:.3} bits/param)\n",
+        plan.label, plan.storage_bytes, plan.bits_per_param
+    );
+
+    // ---- mixed-precision serving -----------------------------------------
+    let seq = info.model.seq_len;
+    drop(engine); // worker builds its own (Engine is not Send)
+    let server = Server::start(
+        default_artifacts_dir(),
+        model,
+        ServerConfig {
+            preset: preset.clone(),
+            max_wait_ms: args.get_f32("wait-ms", 2.0)? as f64,
+            warm_bits: vec![8, 4, 2],
+        },
+    )?;
+
+    let corpus = matquant::data::Corpus::new(11);
+    let mut rng = matquant::data::Rng::new(11);
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for id in 0..n as u64 {
+        // workload mix: half cheap, 30% mid, 20% best
+        let precision = match rng.below(10) {
+            0..=4 => PrecisionReq::Cheapest,
+            5..=7 => PrecisionReq::Bits(4),
+            _ => PrecisionReq::Best,
+        };
+        rxs.push(server.submit(Request {
+            id,
+            prompt: corpus.sequence(&mut rng, seq.min(32)),
+            precision,
+        })?);
+    }
+    let mut by_bits = std::collections::BTreeMap::<u32, (usize, f64)>::new();
+    for rx in rxs {
+        let r = rx.recv()?;
+        let e = by_bits.entry(r.bits).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += r.compute_ms;
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("served {n} requests in {wall:.2}s ({:.1} req/s)", n as f64 / wall);
+    for (bits, (count, ms)) in &by_bits {
+        println!(
+            "  int{bits}: {count} requests, mean compute {:.2} ms/request",
+            ms / *count as f64
+        );
+    }
+    println!("{}", server.metrics_report()?);
+    server.shutdown()?;
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Mix'n'Match sweep (paper Fig. 2): evaluate every per-layer precision
+//! composition under all four strategies and print the accuracy-vs-bits
+//! curve + pareto frontier.  Uses a cached/trained checkpoint when given.
+//!
+//! Run: `cargo run --release --example mixnmatch_sweep --
+//!       [--ckpt checkpoints/cache/<label>.mqck] [--probes 25]`
+
+use matquant::coordinator::trainer::init_params;
+use matquant::eval::{task_suite, Evaluator};
+use matquant::mixnmatch::strategy::{assignments_for, compositions, STRATEGIES};
+use matquant::mixnmatch::{pareto_frontier, Point};
+use matquant::model::{
+    manifest::default_artifacts_dir, Checkpoint, PrecisionAssignment, QuantizedModel,
+};
+use matquant::runtime::Engine;
+use matquant::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let preset = args.get_or("preset", "tiny").to_string();
+    let probes = args.get_usize("probes", 15)?;
+    let engine = Engine::new(default_artifacts_dir())?;
+    let info = engine.manifest().preset(&preset)?.clone();
+
+    let model = match args.get("ckpt") {
+        Some(path) => {
+            let ck = Checkpoint::load(path)?;
+            let mut params = std::collections::BTreeMap::new();
+            let mut aux = std::collections::BTreeMap::new();
+            for (name, t) in &ck.tensors {
+                if let Some(a) = name.strip_prefix("aux:") {
+                    aux.insert(a.to_string(), t.clone());
+                } else if name != "final_losses" {
+                    params.insert(name.clone(), t.clone());
+                }
+            }
+            QuantizedModel::build(&info, &params, if aux.is_empty() { None } else { Some(&aux) })?
+        }
+        None => {
+            eprintln!("note: no --ckpt given; sweeping an untrained model (curve will be flat)");
+            QuantizedModel::build(&info, &init_params(&engine, &preset, 5)?, None)?
+        }
+    };
+
+    let ev = Evaluator::new(&engine, &preset)?;
+    let layers = info.model.n_layers;
+    let mut points = Vec::new();
+    for comp in compositions(layers) {
+        for s in STRATEGIES {
+            let bits = assignments_for(s, comp, layers);
+            let assign = PrecisionAssignment::PerLayer {
+                bits: bits.clone(),
+                extra_precision: false,
+            };
+            let (w, b) = model.materialize(&assign)?;
+            let session = ev.session(&w, &b)?;
+            let tasks = task_suite(&ev, &w, &b, 42, 42 ^ 0x9999, probes)?;
+            let pplx = ev.log_perplexity(&session, 42, 42 ^ 0xEAA1, 4)?;
+            println!(
+                "{:<18} {:?} bits/param {:.3}  acc {:.2}%  pplx {:.3}",
+                s.name(),
+                bits,
+                model.bits_per_param(&assign),
+                tasks.avg * 100.0,
+                pplx
+            );
+            points.push(Point {
+                label: format!("{}-{comp:?}", s.name()),
+                bits_per_param: model.bits_per_param(&assign),
+                accuracy: tasks.avg,
+                log_pplx: pplx,
+            });
+            if comp.0 == layers || comp.1 == layers || comp.2 == layers {
+                break; // homogeneous — identical under every strategy
+            }
+        }
+    }
+    println!("\n{}", matquant::mixnmatch::pareto::render_curve(&points, 64, 16));
+    println!("pareto frontier:");
+    for p in pareto_frontier(&points) {
+        println!(
+            "  {:<28} bits/param {:.3}  acc {:.2}%",
+            p.label,
+            p.bits_per_param,
+            p.accuracy * 100.0
+        );
+    }
+    Ok(())
+}

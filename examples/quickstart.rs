@@ -1,0 +1,85 @@
+//! Quickstart: the Matryoshka property in five minutes.
+//!
+//! Initializes a model via PJRT, quantizes it to a single int8 master,
+//! slices out int8/6/4/3/2 (and extra-precision int2) variants, and runs
+//! a forward pass at each precision — all from one stored tensor set.
+//!
+//! Run: `cargo run --release --example quickstart`  (needs `make artifacts`)
+
+use matquant::coordinator::trainer::init_params;
+use matquant::model::{manifest::default_artifacts_dir, PrecisionAssignment, QuantizedModel};
+use matquant::runtime::{lit_i32, lit_tensor, Engine};
+
+fn main() -> anyhow::Result<()> {
+    let engine = Engine::new(default_artifacts_dir())?;
+    let preset = "tiny";
+    let info = engine.manifest().preset(preset)?.clone();
+    println!(
+        "model: {} params, {} quantized FFN tensors",
+        info.n_model_params(),
+        info.quantized.len()
+    );
+
+    // 1. get parameters (normally: a trained checkpoint)
+    let params = init_params(&engine, preset, 42)?;
+
+    // 2. build the int8 master registry — this is the ONLY stored model
+    let model = QuantizedModel::build(&info, &params, None)?;
+
+    // 3. slice any precision you need, at serve time, for free
+    let seq = info.model.seq_len;
+    let tokens: Vec<i32> = (0..seq as i32).map(|i| 16 + (i % 7)).collect();
+    println!(
+        "\n{:>10} {:>12} {:>14} {:>12}",
+        "precision", "bits/param", "storage(B)", "top logit"
+    );
+    for bits in [8u32, 6, 4, 3, 2] {
+        let assign = PrecisionAssignment::uniform(bits);
+        let (weights, biases) = model.materialize(&assign)?;
+        let mut args: Vec<xla::Literal> = Vec::new();
+        for w in &weights {
+            args.push(lit_tensor(w)?);
+        }
+        for b in &biases {
+            args.push(lit_tensor(b)?);
+        }
+        args.push(lit_i32(&[1, seq], &tokens)?);
+        let out = engine.run(preset, "fwd_b1", &args)?;
+        let logits = &out[0];
+        let last = &logits.data[(seq - 1) * info.model.vocab..];
+        let top = last.iter().cloned().fold(f32::MIN, f32::max);
+        println!(
+            "{:>10} {:>12.3} {:>14} {:>12.3}",
+            format!("int{bits}"),
+            model.bits_per_param(&assign),
+            model.storage_bytes(&assign),
+            top
+        );
+    }
+
+    // 4. extra-precision int2 (paper Eq. 8): ~2.05 effective bits
+    let ep = PrecisionAssignment::Uniform {
+        bits: 2,
+        extra_precision: true,
+    };
+    println!(
+        "{:>10} {:>12.3} {:>14}    (Eq. 8 outlier bucket)",
+        "int2-EP",
+        model.bits_per_param(&ep),
+        model.storage_bytes(&ep),
+    );
+
+    // 5. a Mix'n'Match assignment (paper §4.3): pyramid 2-8-8-2
+    let mix = PrecisionAssignment::PerLayer {
+        bits: vec![2, 8, 8, 2],
+        extra_precision: false,
+    };
+    println!(
+        "{:>10} {:>12.3} {:>14}    (pyramid Mix'n'Match)",
+        "2-8-8-2",
+        model.bits_per_param(&mix),
+        model.storage_bytes(&mix),
+    );
+    println!("\nOne int8 master served every row above — that is MatQuant.");
+    Ok(())
+}

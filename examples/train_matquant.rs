@@ -1,0 +1,162 @@
+//! End-to-end driver (DESIGN.md §End-to-end validation): train a
+//! transformer with MatQuant and an int2 baseline on the synthetic corpus,
+//! log both loss curves, then evaluate every sliced precision — the
+//! headline claim (MatQuant int2 ≫ baseline int2, int8/int4 ≈ baseline)
+//! reproduced on this testbed.
+//!
+//! Run: `cargo run --release --example train_matquant -- [--steps N]
+//!       [--preset tiny|small]`; results land in results/e2e_train.txt and
+//!       EXPERIMENTS.md cites them.
+
+use std::fmt::Write as _;
+
+use matquant::coordinator::{train, Mode, Objective, TrainSpec};
+use matquant::eval::{task_suite, Evaluator};
+use matquant::model::{manifest::default_artifacts_dir, PrecisionAssignment, QuantizedModel};
+use matquant::runtime::Engine;
+use matquant::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env()?;
+    let preset = args.get_or("preset", "tiny").to_string();
+    let steps = args.get_u64("steps", 300)?;
+    let seed = args.get_u64("seed", 42)?;
+    let engine = Engine::new(default_artifacts_dir())?;
+    let info = engine.manifest().preset(&preset)?.clone();
+    println!(
+        "e2e: preset={preset} ({} params), {steps} steps, seed={seed}",
+        info.n_model_params()
+    );
+
+    let mut report = String::new();
+    let _ = writeln!(report, "# E2E MatQuant training run");
+    let _ = writeln!(
+        report,
+        "preset={preset} params={} steps={steps} seed={seed}",
+        info.n_model_params()
+    );
+
+    // --- FP pretraining (the base model both methods start from) ---------
+    let pre_steps = args.get_u64("pretrain-steps", steps * 2)?;
+    let mut spec_fp = TrainSpec::new(&preset, Mode::Qat, Objective::Fp, pre_steps);
+    spec_fp.seed = seed;
+    spec_fp.log_every = (pre_steps / 10).max(1);
+    let t0 = std::time::Instant::now();
+    let base = train(&engine, &spec_fp)?;
+    let pre_secs = t0.elapsed().as_secs_f64();
+    let _ = writeln!(
+        report,
+        "pretrain: {pre_steps} steps in {pre_secs:.1}s, loss {:.4} -> {:.4}",
+        base.loss_history[0][0],
+        base.tail_loss(0, 5)
+    );
+    std::fs::create_dir_all("checkpoints").ok();
+    let base_path = std::path::PathBuf::from("checkpoints/e2e_base.mqck");
+    {
+        let mut ck = matquant::model::Checkpoint::new(spec_fp.meta_json());
+        for (n, t) in &base.params {
+            ck.insert(n.clone(), t.clone());
+        }
+        ck.save(&base_path)?;
+    }
+
+    // --- fine-tune MatQuant (QAT base) + int2 baseline --------------------
+    let mut spec_mat = TrainSpec::new(&preset, Mode::Qat, Objective::matquant_default(), steps);
+    spec_mat.seed = seed;
+    spec_mat.log_every = steps / 10;
+    spec_mat.init_ckpt = Some(base_path.clone());
+    let t0 = std::time::Instant::now();
+    let mat = train(&engine, &spec_mat)?;
+    let mat_secs = t0.elapsed().as_secs_f64();
+
+    let mut spec_b2 = TrainSpec::new(&preset, Mode::Qat, Objective::Direct { bits: 2 }, steps);
+    spec_b2.seed = seed;
+    spec_b2.log_every = steps / 10;
+    spec_b2.init_ckpt = Some(base_path.clone());
+    let t0 = std::time::Instant::now();
+    let base2 = train(&engine, &spec_b2)?;
+    let b2_secs = t0.elapsed().as_secs_f64();
+
+    let _ = writeln!(
+        report,
+        "matquant: {mat_secs:.1}s ({:.0} ms/step); baseline-int2: {b2_secs:.1}s",
+        mat_secs * 1e3 / steps as f64
+    );
+
+    // --- loss curves ------------------------------------------------------
+    let _ = writeln!(report, "\n## Loss curves (every {} steps)", steps / 20);
+    let _ = writeln!(
+        report,
+        "{:>6} {:>10} {:>10} {:>10} {:>12}",
+        "step", "mat_int8", "mat_int4", "mat_int2", "baseline_b2"
+    );
+    let stride = (steps as usize / 20).max(1);
+    for i in (0..steps as usize).step_by(stride) {
+        let m = &mat.loss_history[i];
+        let b = &base2.loss_history[i];
+        let _ = writeln!(
+            report,
+            "{:>6} {:>10.4} {:>10.4} {:>10.4} {:>12.4}",
+            i, m[0], m[1], m[2], b[0]
+        );
+    }
+
+    // --- evaluate all precisions -----------------------------------------
+    let mat_model = QuantizedModel::build(&info, &mat.params, None)?;
+    let b2_model = QuantizedModel::build(&info, &base2.params, None)?;
+    let ev = Evaluator::new(&engine, &preset)?;
+    let _ = writeln!(report, "\n## Eval (task avg % / log pplx)");
+    let _ = writeln!(
+        report,
+        "{:>10} {:>18} {:>18}",
+        "precision", "MatQuant(sliced)", "baseline-int2"
+    );
+    let mut mat_int2 = 0.0;
+    let mut base_int2 = 0.0;
+    let mut mat_int2_pplx = 0.0;
+    let mut base_int2_pplx = 0.0;
+    for bits in [8u32, 6, 4, 3, 2] {
+        let assign = PrecisionAssignment::uniform(bits);
+        let (w, bi) = mat_model.materialize(&assign)?;
+        let session = ev.session(&w, &bi)?;
+        let pplx = ev.log_perplexity(&session, seed, seed ^ 0xEAA1, 6)?;
+        let tasks = task_suite(&ev, &w, &bi, seed, seed ^ 0x9999, 50)?;
+        let mut row = format!(
+            "{:>10} {:>9.2}/{:<8.3}",
+            format!("int{bits}"),
+            tasks.avg * 100.0,
+            pplx
+        );
+        if bits == 2 {
+            mat_int2 = tasks.avg;
+            mat_int2_pplx = pplx;
+            let (w2, bi2) = b2_model.materialize(&assign)?;
+            let s2 = ev.session(&w2, &bi2)?;
+            let p2 = ev.log_perplexity(&s2, seed, seed ^ 0xEAA1, 6)?;
+            let t2 = task_suite(&ev, &w2, &bi2, seed, seed ^ 0x9999, 50)?;
+            base_int2 = t2.avg;
+            base_int2_pplx = p2;
+            let _ = write!(row, " {:>9.2}/{:<8.3}", t2.avg * 100.0, p2);
+        }
+        let _ = writeln!(report, "{row}");
+    }
+    let _ = writeln!(
+        report,
+        "\nheadline: int2 log pplx {:.3} (MatQuant) vs {:.3} (baseline) — {};\n          int2 task avg {:.2}% vs {:.2}% (±~4% probe noise at 300 probes)",
+        mat_int2_pplx,
+        base_int2_pplx,
+        if mat_int2_pplx < base_int2_pplx {
+            "MatQuant better, matching the paper"
+        } else {
+            "baseline better — NOT the paper shape, investigate"
+        },
+        mat_int2 * 100.0,
+        base_int2 * 100.0
+    );
+
+    println!("{report}");
+    std::fs::create_dir_all("results").ok();
+    std::fs::write("results/e2e_train.txt", &report)?;
+    println!("written to results/e2e_train.txt");
+    Ok(())
+}

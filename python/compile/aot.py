@@ -1,0 +1,248 @@
+"""AOT exporter: lower every L2 step to HLO *text* + write the manifest.
+
+HLO text (NOT ``.serialize()``) is the interchange format: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which the image's xla_extension
+0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+round-trips cleanly.  See /opt/xla-example/README.md.
+
+Run once via ``make artifacts``; the Rust binary is self-contained after.
+
+Outputs in ``artifacts/``:
+  * ``<preset>/<name>.hlo.txt`` — one per executable (see steps.py).
+  * ``manifest.json`` — model configs, parameter manifests, artifact
+    signatures; parsed by rust/src/model/manifest.rs.
+  * ``goldens.json`` — quantization test vectors binding the Rust quant
+    module bit-for-bit to the L1 kernels.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import steps
+from .configs import ALL_BITS, FWD_BATCH_SIZES, MATQUANT_BITS, PRESETS, ModelConfig, TrainConfig
+from .kernels import ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def to_hlo_text(lowered) -> str:
+    # return_tuple=False → one HLO output per result leaf, so the Rust
+    # train loop chains device buffers between steps without a host tuple
+    # round-trip (EXPERIMENTS.md §Perf item 4).
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=False
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _param_specs(cfg: ModelConfig):
+    return [_spec(s) for _, s in cfg.param_manifest()]
+
+
+def _aux_specs(cfg: ModelConfig):
+    return [_spec(s) for _, s in cfg.aux_manifest()]
+
+
+def _write(path: str, text: str, verbose: bool = True):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write(text)
+    if verbose:
+        print(f"  wrote {path} ({len(text) / 1e6:.2f} MB)")
+
+
+def export_preset(cfg: ModelConfig, out_dir: str, train_batch: int) -> List[Dict[str, Any]]:
+    """Lower all artifacts for one model preset; returns artifact records."""
+    arts: List[Dict[str, Any]] = []
+    pdir = os.path.join(out_dir, cfg.name)
+    t1 = cfg.seq_len + 1
+    p_specs = _param_specs(cfg)
+    a_specs = _aux_specs(cfg)
+    n, a = len(p_specs), len(a_specs)
+
+    def emit(name, fn, specs, inputs, outputs):
+        path = os.path.join(pdir, f"{name}.hlo.txt")
+        lowered = jax.jit(fn, keep_unused=True).lower(*specs)
+        _write(path, to_hlo_text(lowered))
+        arts.append(
+            {
+                "preset": cfg.name,
+                "name": name,
+                "path": os.path.relpath(path, out_dir),
+                "inputs": inputs,
+                "outputs": outputs,
+            }
+        )
+
+    tok_tr = _spec((train_batch, t1), jnp.int32)
+    step_s = _spec((), jnp.int32)
+    lam = _spec((len(MATQUANT_BITS),))
+    wd = _spec((len(MATQUANT_BITS),))
+
+    # --- FP pretraining ------------------------------------------------------
+    emit(
+        "train_fp",
+        steps.make_train_fp(cfg, TrainConfig(mode="qat")),
+        p_specs * 3 + [step_s, tok_tr],
+        ["params*n", "m*n", "v*n", "step", "tokens"],
+        ["params*n", "m*n", "v*n", "losses1"],
+    )
+
+    # --- QAT ---------------------------------------------------------------
+    tc = TrainConfig(mode="qat", batch=train_batch)
+    emit(
+        "train_qat_mat",
+        steps.make_train_qat_mat(cfg, tc),
+        p_specs * 3 + [step_s, tok_tr, lam, wd],
+        ["params*n", "m*n", "v*n", "step", "tokens", "lambdas", "wdist"],
+        ["params*n", "m*n", "v*n", "losses3"],
+    )
+    emit(
+        "train_qat_mat_ep",
+        steps.make_train_qat_mat(cfg, TrainConfig(mode="qat", extra_precision=True)),
+        p_specs * 3 + [step_s, tok_tr, lam, wd],
+        ["params*n", "m*n", "v*n", "step", "tokens", "lambdas", "wdist"],
+        ["params*n", "m*n", "v*n", "losses3"],
+    )
+    for b in ALL_BITS:
+        emit(
+            f"train_qat_direct_b{b}",
+            steps.make_train_qat_direct(cfg, TrainConfig(mode="qat", direct_bits=b)),
+            p_specs * 3 + [step_s, tok_tr],
+            ["params*n", "m*n", "v*n", "step", "tokens"],
+            ["params*n", "m*n", "v*n", "losses1"],
+        )
+
+    # --- OmniQuant ----------------------------------------------------------
+    emit(
+        "train_omni_mat",
+        steps.make_train_omni_mat(cfg, TrainConfig(mode="omni")),
+        p_specs + a_specs * 3 + [step_s, tok_tr, lam, wd],
+        ["params*n", "aux*a", "m*a", "v*a", "step", "tokens", "lambdas", "wdist"],
+        ["aux*a", "m*a", "v*a", "losses3"],
+    )
+    emit(
+        "train_omni_mat_ep",
+        steps.make_train_omni_mat(cfg, TrainConfig(mode="omni", extra_precision=True)),
+        p_specs + a_specs * 3 + [step_s, tok_tr, lam, wd],
+        ["params*n", "aux*a", "m*a", "v*a", "step", "tokens", "lambdas", "wdist"],
+        ["aux*a", "m*a", "v*a", "losses3"],
+    )
+    for b in ALL_BITS:
+        emit(
+            f"train_omni_direct_b{b}",
+            steps.make_train_omni_direct(cfg, TrainConfig(mode="omni", direct_bits=b)),
+            p_specs + a_specs * 3 + [step_s, tok_tr],
+            ["params*n", "aux*a", "m*a", "v*a", "step", "tokens"],
+            ["aux*a", "m*a", "v*a", "losses1"],
+        )
+
+    # --- Eval / forward / init ----------------------------------------------
+    shapes = dict(cfg.param_manifest())
+    b_specs = [_spec((shapes[qn][1],)) for qn in cfg.quantized_names()]
+    emit(
+        "eval",
+        steps.make_eval(cfg),
+        p_specs
+        + b_specs
+        + [_spec((train_batch, t1), jnp.int32), _spec((train_batch, cfg.seq_len))],
+        ["params*n", "biases*q", "tokens", "mask"],
+        ["ce_sum", "mask_sum", "seq_ll"],
+    )
+    for bsz in FWD_BATCH_SIZES:
+        emit(
+            f"fwd_b{bsz}",
+            steps.make_fwd(cfg),
+            p_specs + b_specs + [_spec((bsz, cfg.seq_len), jnp.int32)],
+            ["params*n", "biases*q", "tokens"],
+            ["logits"],
+        )
+    emit("init", steps.make_init(cfg), [step_s], ["seed"], ["params*n"])
+    return arts
+
+
+def write_goldens(out_dir: str):
+    """Cross-layer test vectors: the Rust quant module must reproduce these
+    (generated by the L1 oracles) bit-for-bit."""
+    rng = np.random.default_rng(42)
+    cases = []
+    for d_in, d_out in [(16, 4), (64, 8)]:
+        w = rng.standard_normal((d_in, d_out)).astype(np.float32)
+        rec: Dict[str, Any] = {"w": w.flatten().tolist(), "d_in": d_in, "d_out": d_out, "bits": {}}
+        alpha8, zero8 = ref.minmax_scales(jnp.asarray(w), 8)
+        q8 = ref.quantize(jnp.asarray(w), 8, alpha8, zero8)
+        rec["alpha8"] = np.asarray(alpha8).flatten().tolist()
+        rec["zero8"] = np.asarray(zero8).flatten().tolist()
+        rec["q8"] = np.asarray(q8).flatten().tolist()
+        for r in ALL_BITS:
+            sl = ref.slice_codes(q8, 8, r)
+            sl_ep = ref.slice_codes(q8, 8, r, extra_precision=True)
+            deq = ref.dequantize(sl, alpha8, zero8)
+            rec["bits"][str(r)] = {
+                "sliced": np.asarray(sl).flatten().tolist(),
+                "sliced_ep": np.asarray(sl_ep).flatten().tolist(),
+                "dequant": np.asarray(deq).flatten().tolist(),
+                "effective_bits": float(ref.effective_bits(q8, 8, r)),
+            }
+            # direct per-bit baseline quantization
+            ab, zb = ref.minmax_scales(jnp.asarray(w), r)
+            qb = ref.quantize(jnp.asarray(w), r, ab, zb)
+            rec["bits"][str(r)]["direct_q"] = np.asarray(qb).flatten().tolist()
+            rec["bits"][str(r)]["direct_alpha"] = np.asarray(ab).flatten().tolist()
+            rec["bits"][str(r)]["direct_zero"] = np.asarray(zb).flatten().tolist()
+        cases.append(rec)
+    _write(os.path.join(out_dir, "goldens.json"), json.dumps({"cases": cases}))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--presets", default="tiny,small,tiny_attn")
+    ap.add_argument("--train-batch", type=int, default=4)
+    args = ap.parse_args()
+
+    manifest: Dict[str, Any] = {"presets": {}, "artifacts": []}
+    for preset in args.presets.split(","):
+        cfg = PRESETS[preset]
+        print(f"[aot] exporting preset {preset} "
+              f"({sum(int(np.prod(s)) for _, s in cfg.param_manifest())} params)")
+        manifest["presets"][preset] = {
+            "model": {
+                "vocab": cfg.vocab,
+                "d_model": cfg.d_model,
+                "n_layers": cfg.n_layers,
+                "n_heads": cfg.n_heads,
+                "d_ff": cfg.d_ff,
+                "seq_len": cfg.seq_len,
+                "quantize_attn": cfg.quantize_attn,
+            },
+            "params": [[n, list(s)] for n, s in cfg.param_manifest()],
+            "aux": [[n, list(s)] for n, s in cfg.aux_manifest()],
+            "quantized": cfg.quantized_names(),
+            "train_batch": args.train_batch,
+            "matquant_bits": list(MATQUANT_BITS),
+            "all_bits": list(ALL_BITS),
+            "fwd_batch_sizes": list(FWD_BATCH_SIZES),
+        }
+        manifest["artifacts"] += export_preset(cfg, args.out_dir, args.train_batch)
+    write_goldens(args.out_dir)
+    _write(os.path.join(args.out_dir, "manifest.json"), json.dumps(manifest, indent=1))
+    print(f"[aot] done: {len(manifest['artifacts'])} artifacts")
+
+
+if __name__ == "__main__":
+    main()

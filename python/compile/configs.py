@@ -1,0 +1,129 @@
+"""Model / quantization / training configuration shared across L2 exports.
+
+The same dataclasses are serialized into ``artifacts/manifest.json`` so the
+Rust coordinator (L3) knows every parameter name, shape, and artifact
+signature without importing Python at runtime.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+# Bit-widths the paper trains (R = {8, 4, 2}) and interpolates ({6, 3}).
+MATQUANT_BITS: Tuple[int, ...] = (8, 4, 2)
+ALL_BITS: Tuple[int, ...] = (8, 6, 4, 3, 2)
+MASTER_BITS = 8  # c in S(q^c, r)
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Decoder-only transformer (pre-RMSNorm, GELU FFN, learned positions)."""
+
+    # `tiny` is sized for the single-core CPU testbed: 4 layers make
+    # Mix'n'Match meaningful (15 compositions), B=4/T=48 keeps a full
+    # MatQuant train step ~1s so the whole table grid fits the session.
+    name: str = "tiny"
+    vocab: int = 256
+    d_model: int = 96
+    n_layers: int = 4
+    n_heads: int = 4
+    d_ff: int = 384
+    seq_len: int = 48
+    quantize_attn: bool = False  # Table 6: FFN + Attention quantization
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_manifest(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """Ordered (name, shape) list — the canonical flattening order used
+        by every AOT artifact and mirrored by rust/src/model/manifest.rs."""
+        d, v, t, f = self.d_model, self.vocab, self.seq_len, self.d_ff
+        out: List[Tuple[str, Tuple[int, ...]]] = [
+            ("embed", (v, d)),
+            ("pos", (t, d)),
+        ]
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            out += [
+                (p + "ln1", (d,)),
+                (p + "attn.wq", (d, d)),
+                (p + "attn.wk", (d, d)),
+                (p + "attn.wv", (d, d)),
+                (p + "attn.wo", (d, d)),
+                (p + "ln2", (d,)),
+                (p + "ffn.w_in", (d, f)),
+                (p + "ffn.w_out", (f, d)),
+            ]
+        out += [("ln_f", (d,)), ("head", (d, v))]
+        return out
+
+    def quantized_names(self) -> List[str]:
+        """Weights that pass through the MatQuant transform."""
+        names = []
+        for i in range(self.n_layers):
+            p = f"layer{i}."
+            names += [p + "ffn.w_in", p + "ffn.w_out"]
+            if self.quantize_attn:
+                names += [
+                    p + "attn.wq",
+                    p + "attn.wk",
+                    p + "attn.wv",
+                    p + "attn.wo",
+                ]
+        return names
+
+    def aux_manifest(self) -> List[Tuple[str, Tuple[int, ...]]]:
+        """OmniQuant auxiliary parameters, ordered.
+
+        Per quantized weight W (d_in, d_out): clipping logits ``gamma_raw``/
+        ``beta_raw`` (1, d_out) (sigmoid → γ, β of Eq. 3) and the smoothing
+        shift/scale ``delta`` / ``s_raw`` (d_in,) of Eq. 4.
+        """
+        out: List[Tuple[str, Tuple[int, ...]]] = []
+        shapes = dict(self.param_manifest())
+        for name in self.quantized_names():
+            d_in, d_out = shapes[name]
+            out += [
+                (name + ".gamma_raw", (1, d_out)),
+                (name + ".beta_raw", (1, d_out)),
+                (name + ".delta", (d_in,)),
+                (name + ".s_raw", (d_in,)),
+            ]
+        return out
+
+    def n_params(self) -> int:
+        return sum(int(len(s) and __import__("math").prod(s)) for _, s in self.param_manifest())
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    """One training-step artifact's hyperparameters (baked at lowering)."""
+
+    mode: str = "qat"  # "qat" | "omni"
+    objective: str = "matquant"  # "matquant" | "direct" | "codistill"
+    direct_bits: int = 8  # used when objective == "direct"
+    extra_precision: bool = False  # Eq. 8 slicing
+    batch: int = 8
+    lr: float = 1e-3
+    warmup: int = 150  # linear warmup steps (QAT; paper Appendix B)
+    total_steps: int = 1000  # cosine decay horizon (QAT)
+    beta1: float = 0.9
+    beta2: float = 0.999
+    adam_eps: float = 1e-8
+    weight_decay: float = 0.0
+
+
+# Preset model sizes.  ``tiny`` drives tests and table regeneration;
+# ``small`` is the end-to-end example scale.
+PRESETS = {
+    "tiny": ModelConfig(),
+    "small": ModelConfig(
+        name="small", d_model=256, n_layers=4, n_heads=4, d_ff=1024, seq_len=128
+    ),
+    "tiny_attn": ModelConfig(name="tiny_attn", quantize_attn=True),
+}
+
+FWD_BATCH_SIZES = (1, 2, 4, 8, 16)  # bucketed serving executables

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels for Matryoshka Quantization + pure-jnp oracles."""
+
+from . import matmul, quant, ref  # noqa: F401

@@ -1,0 +1,77 @@
+"""Fused dequantize-matmul Pallas kernel (the serving hot spot, L1).
+
+Computes ``x @ dequant(S(q, r))`` where ``q`` holds int8 codes (f32
+storage), without ever materializing the dequantized weight matrix in HBM:
+each (BLOCK_M, BLOCK_N) output tile dequantizes one (K, BLOCK_N) weight
+tile in VMEM and feeds the MXU-shaped ``jnp.dot`` directly.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): BLOCK_M = BLOCK_N = 128
+matches the MXU systolic edge; the K dimension stays resident per tile
+(K ≤ a few thousand ⇒ K·BLOCK_N·4B ≤ 2 MiB, comfortably inside the
+~16 MiB VMEM budget with double buffering).  The paper's CUDA int2/int3
+kernels become: slice + affine dequant fused into the matmul epilogue.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK_M = 128
+BLOCK_N = 128
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls.
+
+
+def _pad(a, m0, m1):
+    p0 = (-a.shape[0]) % m0
+    p1 = (-a.shape[1]) % m1
+    if p0 or p1:
+        a = jnp.pad(a, ((0, p0), (0, p1)))
+    return a
+
+
+def _qmm_kernel(x_ref, q_ref, a_ref, z_ref, o_ref, *, c: int, r: int, ep: bool):
+    x = x_ref[...]
+    q = q_ref[...]
+    alpha = a_ref[...]
+    zero = z_ref[...]
+    if r < c:
+        step = 2.0 ** (c - r)
+        s = jnp.floor(q / step + 0.5)
+        if not ep:
+            s = jnp.clip(s, 0.0, 2.0**r - 1.0)
+        q = s * step
+    w = (q - zero) * alpha
+    o_ref[...] = jnp.dot(x, w, preferred_element_type=jnp.float32)
+
+
+def quantized_matmul(x, q, alpha, zero, c: int, r: int, extra_precision: bool = False):
+    """``x (M,K) @ dequant(S(q (K,N), r))`` with per-column alpha/zero (1,N).
+
+    Output f32 (M, N).  ``r == c`` skips slicing (plain int8 serving).
+    """
+    m, k = x.shape
+    k2, n = q.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    xp = _pad(x, BLOCK_M, 1)
+    qp = _pad(q, 1, BLOCK_N)
+    ap = _pad(jnp.broadcast_to(alpha, (1, n)), 1, BLOCK_N)
+    zp = _pad(jnp.broadcast_to(zero, (1, n)), 1, BLOCK_N)
+    mp, np_ = xp.shape[0], qp.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_qmm_kernel, c=c, r=r, ep=extra_precision),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        grid=(mp // BLOCK_M, np_ // BLOCK_N),
+        in_specs=[
+            pl.BlockSpec((BLOCK_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, BLOCK_N), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BLOCK_N), lambda i, j: (0, j)),
+            pl.BlockSpec((1, BLOCK_N), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N), lambda i, j: (i, j)),
+        interpret=INTERPRET,
+    )(xp, qp, ap, zp)
+    return out[:m, :n]

@@ -1,0 +1,186 @@
+"""Pallas fake-quantization kernels (L1).
+
+TPU-shaped: the grid tiles the *output-channel* dimension in blocks of
+``BLOCK_N`` lanes (128 = one VREG lane group / MXU edge); each block holds
+the full reduction (input) dimension so per-channel min/max is computed in
+VMEM in one pass, then quantize + dequantize happen in-register without a
+second HBM round trip.
+
+All kernels run with ``interpret=True``: the image's CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret mode lowers to plain HLO so the
+same artifact runs everywhere.  Real-TPU perf is estimated structurally in
+DESIGN.md §Hardware-Adaptation.
+
+STE (straight-through estimator) is applied by ``ste`` below — the paper's
+Eq. 2/5 gradients flow through the quantizer as identity.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+BLOCK_N = 128  # lane tile: one MXU edge / f32 VREG lane count
+EPS = ref.EPS
+
+INTERPRET = True  # CPU PJRT cannot run Mosaic custom-calls; see module doc.
+
+
+def _pad_cols(w, block: int):
+    """Pad trailing dim up to a multiple of ``block`` (zeros)."""
+    n = w.shape[-1]
+    pad = (-n) % block
+    if pad:
+        w = jnp.pad(w, [(0, 0)] * (w.ndim - 1) + [(0, pad)])
+    return w, n
+
+
+# ---------------------------------------------------------------------------
+# MinMax fake-quant kernel (Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def _fq_minmax_kernel(w_ref, o_ref, *, bits: int):
+    w = w_ref[...]
+    wmax = jnp.max(w, axis=0, keepdims=True)
+    wmin = jnp.min(w, axis=0, keepdims=True)
+    levels = 2.0**bits - 1.0
+    alpha = (wmax - wmin) / levels
+    alpha = jnp.where(jnp.abs(alpha) < EPS, EPS, alpha)
+    zero = -wmin / alpha
+    q = jnp.clip(jnp.floor(w / alpha + zero + 0.5), 0.0, levels)
+    o_ref[...] = (q - zero) * alpha
+
+
+def fake_quant_minmax(w, bits: int):
+    """Per-output-channel MinMax quantize-dequantize of ``w`` (d_in, d_out)."""
+    wp, n = _pad_cols(w, BLOCK_N)
+    d_in, d_pad = wp.shape
+    out = pl.pallas_call(
+        functools.partial(_fq_minmax_kernel, bits=bits),
+        out_shape=jax.ShapeDtypeStruct(wp.shape, wp.dtype),
+        grid=(d_pad // BLOCK_N,),
+        in_specs=[pl.BlockSpec((d_in, BLOCK_N), lambda j: (0, j))],
+        out_specs=pl.BlockSpec((d_in, BLOCK_N), lambda j: (0, j)),
+        interpret=INTERPRET,
+    )(wp)
+    return out[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# OmniQuant fake-quant kernel (Eq. 3)
+# ---------------------------------------------------------------------------
+
+
+def _fq_omni_kernel(w_ref, g_ref, b_ref, o_ref, *, bits: int):
+    w = w_ref[...]
+    gamma = g_ref[...]
+    beta = b_ref[...]
+    wmax = jnp.max(w, axis=0, keepdims=True)
+    wmin = jnp.min(w, axis=0, keepdims=True)
+    levels = 2.0**bits - 1.0
+    alpha = (gamma * wmax - beta * wmin) / levels
+    alpha = jnp.where(jnp.abs(alpha) < EPS, EPS, alpha)
+    zero = -(beta * wmin) / alpha
+    q = jnp.clip(jnp.floor(w / alpha + zero + 0.5), 0.0, levels)
+    o_ref[...] = (q - zero) * alpha
+
+
+def fake_quant_omni(w, bits: int, gamma, beta):
+    """OmniQuant quantize-dequantize; ``gamma``/``beta`` shaped (1, d_out)."""
+    wp, n = _pad_cols(w, BLOCK_N)
+    gp, _ = _pad_cols(jnp.broadcast_to(gamma, (1, w.shape[1])), BLOCK_N)
+    bp, _ = _pad_cols(jnp.broadcast_to(beta, (1, w.shape[1])), BLOCK_N)
+    d_in, d_pad = wp.shape
+    out = pl.pallas_call(
+        functools.partial(_fq_omni_kernel, bits=bits),
+        out_shape=jax.ShapeDtypeStruct(wp.shape, wp.dtype),
+        grid=(d_pad // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((d_in, BLOCK_N), lambda j: (0, j)),
+            pl.BlockSpec((1, BLOCK_N), lambda j: (0, j)),
+            pl.BlockSpec((1, BLOCK_N), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((d_in, BLOCK_N), lambda j: (0, j)),
+        interpret=INTERPRET,
+    )(wp, gp, bp)
+    return out[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# MatQuant sliced fake-quant kernel: dequant(S(Q(w, c), r))
+# ---------------------------------------------------------------------------
+
+
+def _fq_sliced_kernel(w_ref, g_ref, b_ref, o_ref, *, c: int, r: int, ep: bool):
+    w = w_ref[...]
+    gamma = g_ref[...]
+    beta = b_ref[...]
+    wmax = jnp.max(w, axis=0, keepdims=True)
+    wmin = jnp.min(w, axis=0, keepdims=True)
+    levels = 2.0**c - 1.0
+    alpha = (gamma * wmax - beta * wmin) / levels
+    alpha = jnp.where(jnp.abs(alpha) < EPS, EPS, alpha)
+    zero = -(beta * wmin) / alpha
+    q = jnp.clip(jnp.floor(w / alpha + zero + 0.5), 0.0, levels)
+    if r < c:
+        step = 2.0 ** (c - r)
+        s = jnp.floor(q / step + 0.5)
+        if not ep:
+            s = jnp.clip(s, 0.0, 2.0**r - 1.0)
+        q = s * step
+    o_ref[...] = (q - zero) * alpha
+
+
+def fake_quant_sliced(w, c: int, r: int, gamma=None, beta=None, extra_precision=False):
+    """The full MatQuant weight transform for one target precision ``r``.
+
+    Quantizes ``w`` to ``c`` bits (OmniQuant scales if gamma/beta given,
+    MinMax if None), slices the ``r`` MSBs (Eq. 6, or Eq. 8 when
+    ``extra_precision``), and dequantizes with the shared c-bit scales.
+    """
+    if gamma is None:
+        gamma = jnp.ones((1, w.shape[1]), w.dtype)
+    if beta is None:
+        beta = jnp.ones((1, w.shape[1]), w.dtype)
+    wp, n = _pad_cols(w, BLOCK_N)
+    gp, _ = _pad_cols(jnp.broadcast_to(gamma, (1, w.shape[1])), BLOCK_N)
+    bp, _ = _pad_cols(jnp.broadcast_to(beta, (1, w.shape[1])), BLOCK_N)
+    d_in, d_pad = wp.shape
+    out = pl.pallas_call(
+        functools.partial(_fq_sliced_kernel, c=c, r=r, ep=extra_precision),
+        out_shape=jax.ShapeDtypeStruct(wp.shape, wp.dtype),
+        grid=(d_pad // BLOCK_N,),
+        in_specs=[
+            pl.BlockSpec((d_in, BLOCK_N), lambda j: (0, j)),
+            pl.BlockSpec((1, BLOCK_N), lambda j: (0, j)),
+            pl.BlockSpec((1, BLOCK_N), lambda j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((d_in, BLOCK_N), lambda j: (0, j)),
+        interpret=INTERPRET,
+    )(wp, gp, bp)
+    return out[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# Straight-through estimator
+# ---------------------------------------------------------------------------
+
+
+def ste(w, w_q):
+    """STE: forward ``w_q``, gradient flows to ``w`` as identity (Bengio'13).
+
+    For OmniQuant, gradients also flow into gamma/beta through ``w_q``'s
+    *scale* terms — but the round() itself is non-differentiable, so callers
+    build w_q from differentiable scale expressions + this STE on the codes.
+    In practice (as in the paper) we apply the estimator to the whole
+    quantize-dequantize residual: it passes dL/dw_q straight to w while any
+    auxiliary parameters used inside w_q's computation get their gradient
+    via a separate differentiable path (see model.py).
+    """
+    return w + jax.lax.stop_gradient(w_q - w)

@@ -1,0 +1,189 @@
+"""Pure-jnp reference oracles for every Pallas kernel.
+
+These functions define the *semantics* of Matryoshka Quantization:
+
+  * MinMax quantization (paper Eq. 1) — per output-channel affine
+    quantization to ``c``-bit unsigned codes.
+  * OmniQuant quantization (paper Eq. 3) — MinMax with learnable clipping
+    scales ``gamma`` (on max) and ``beta`` (on min).
+  * The nested MSB slicing operator ``S(q^c, r)`` (paper Eq. 6) and its
+    Extra-Precision variant (paper Eq. 8, the errata section) which omits
+    the clamp and therefore admits ``2^r + 1`` buckets.
+
+Every Pallas kernel in this package is tested against these oracles with
+hypothesis sweeps (see python/tests/).
+
+Rounding convention: the paper rounds *half upward* — the appendix defines
+the r-th retained bit by the value of the (r+1)-th bit, which is exactly
+``floor(x + 0.5)`` for non-negative ``x``.  ``jnp.round`` is
+round-half-to-even and disagrees on exact .5 boundaries, so we use
+``floor(x + 0.5)`` everywhere (and mirror it in the Rust quant module).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+EPS = 1e-8
+
+
+def round_half_up(x):
+    """Paper's rounding: floor(x + 0.5) (non-negative operands only)."""
+    return jnp.floor(x + 0.5)
+
+
+# ---------------------------------------------------------------------------
+# MinMax quantization (Eq. 1)
+# ---------------------------------------------------------------------------
+
+
+def minmax_scales(w, bits: int, axis: int = 0):
+    """Per-channel MinMax scale/zero-point.
+
+    Returns ``(alpha, zero)`` with shapes broadcastable against ``w`` along
+    ``axis``.  ``alpha = (max - min) / (2^c - 1)``, ``zero = -min / alpha``.
+    """
+    wmax = jnp.max(w, axis=axis, keepdims=True)
+    wmin = jnp.min(w, axis=axis, keepdims=True)
+    levels = 2.0**bits - 1.0
+    alpha = (wmax - wmin) / levels
+    alpha = jnp.where(jnp.abs(alpha) < EPS, EPS, alpha)
+    zero = -wmin / alpha
+    return alpha, zero
+
+
+def omni_scales(w, bits: int, gamma, beta, axis: int = 0):
+    """OmniQuant scale/zero-point (Eq. 3): learnable clipping of max/min.
+
+    ``gamma``/``beta`` broadcast against the per-channel max/min (shape
+    (1, d_out) for axis=0 weight matrices, or scalars).
+    """
+    wmax = jnp.max(w, axis=axis, keepdims=True)
+    wmin = jnp.min(w, axis=axis, keepdims=True)
+    levels = 2.0**bits - 1.0
+    alpha = (gamma * wmax - beta * wmin) / levels
+    alpha = jnp.where(jnp.abs(alpha) < EPS, EPS, alpha)
+    zero = -(beta * wmin) / alpha
+    return alpha, zero
+
+
+def quantize(w, bits: int, alpha, zero):
+    """Affine quantize to unsigned ``bits``-bit codes (kept in f32)."""
+    q = round_half_up(w / alpha + zero)
+    return jnp.clip(q, 0.0, 2.0**bits - 1.0)
+
+
+def dequantize(q, alpha, zero):
+    """Inverse affine map: ``(q - z) * alpha``."""
+    return (q - zero) * alpha
+
+
+def fake_quant_minmax(w, bits: int, axis: int = 0):
+    """Quantize-dequantize round trip with MinMax scales (no STE here)."""
+    alpha, zero = minmax_scales(w, bits, axis)
+    return dequantize(quantize(w, bits, alpha, zero), alpha, zero)
+
+
+def fake_quant_omni(w, bits: int, gamma, beta, axis: int = 0):
+    """Quantize-dequantize round trip with OmniQuant scales."""
+    alpha, zero = omni_scales(w, bits, gamma, beta, axis)
+    return dequantize(quantize(w, bits, alpha, zero), alpha, zero)
+
+
+# ---------------------------------------------------------------------------
+# Nested MSB slicing (Eq. 6 / Eq. 8)
+# ---------------------------------------------------------------------------
+
+
+def slice_codes(q, c: int, r: int, extra_precision: bool = False):
+    """Slice the ``r`` most-significant bits from ``c``-bit codes ``q``.
+
+    Returns codes back in ``c``-bit scale space, i.e. multiples of
+    ``2^(c-r)``.  With ``extra_precision`` (paper Eq. 8) the clamp is
+    omitted, so the top value ``2^r * 2^(c-r)`` can occur: ``2^r + 1``
+    distinct buckets, requiring one extra (sparse) bit to store.
+    """
+    if r > c:
+        raise ValueError(f"cannot slice {r} bits out of {c}")
+    if r == c:
+        return q
+    step = 2.0 ** (c - r)
+    s = round_half_up(q / step)
+    if not extra_precision:
+        s = jnp.clip(s, 0.0, 2.0**r - 1.0)
+    return s * step
+
+
+def fake_quant_sliced(w, c: int, r: int, alpha, zero, extra_precision: bool = False):
+    """Full MatQuant weight path: quantize to c bits, slice r MSBs, dequant.
+
+    The sliced model *shares* the c-bit scale/zero-point — that is the
+    Matryoshka property (one stored int8 tensor serves every precision).
+    """
+    q = quantize(w, c, alpha, zero)
+    s = slice_codes(q, c, r, extra_precision)
+    return dequantize(s, alpha, zero)
+
+
+def fake_quant_sliced_soft(w, c: int, r: int, alpha, zero, extra_precision: bool = False):
+    """Differentiable surrogate of :func:`fake_quant_sliced` (round → id).
+
+    This is the STE gradient path: clamps stay (that is how OmniQuant's
+    gamma/beta receive gradient — only clipped elements feel the clipping
+    scales), but the two round() ops are treated as identity.  The model
+    layer combines::
+
+        w_q = soft + stop_grad(hard - soft)
+
+    so the forward value is the exact Pallas kernel output while the
+    backward pass differentiates this expression.
+    """
+    levels = 2.0**c - 1.0
+    q = jnp.clip(w / alpha + zero, 0.0, levels)
+    if r < c:
+        step = 2.0 ** (c - r)
+        s = q / step
+        if not extra_precision:
+            s = jnp.clip(s, 0.0, 2.0**r - 1.0)
+        q = s * step
+    return (q - zero) * alpha
+
+
+# ---------------------------------------------------------------------------
+# Quantized matmul (serving hot path)
+# ---------------------------------------------------------------------------
+
+
+def quantized_matmul(x, q, alpha, zero, c: int, r: int, extra_precision: bool = False):
+    """``x @ dequant(S(q, r))`` — the reference for the fused Pallas kernel.
+
+    ``q`` holds c-bit codes (f32 storage), ``alpha``/``zero`` shaped
+    (1, d_out).
+    """
+    s = slice_codes(q, c, r, extra_precision)
+    return x @ dequantize(s, alpha, zero)
+
+
+# ---------------------------------------------------------------------------
+# Helpers used by tests and the model layer
+# ---------------------------------------------------------------------------
+
+
+def effective_bits(q, c: int, r: int) -> jnp.ndarray:
+    """Average bits/param for extra-precision storage at precision ``r``.
+
+    Params landing in the overflow bucket (code == 2^r after slicing) cost
+    one extra bit each: ``r + frac_overflow`` average bits (paper Table 7
+    reports e.g. 2.05).
+    """
+    step = 2.0 ** (c - r)
+    s = round_half_up(q / step)
+    overflow = jnp.mean((s >= 2.0**r).astype(jnp.float32))
+    return r + overflow
+
+
+def code_histogram(q, bits: int):
+    """Histogram of quantized codes (paper Fig. 1c)."""
+    edges = jnp.arange(2**bits + 1) - 0.5
+    hist, _ = jnp.histogram(q, bins=edges)
+    return hist

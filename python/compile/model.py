@@ -1,0 +1,285 @@
+"""L2 — the JAX transformer whose FFN (optionally attention) weights go
+through the MatQuant transform, calling the L1 Pallas kernels.
+
+Everything here is build-time only: ``aot.py`` lowers jitted closures of
+these functions to HLO text; the Rust coordinator executes them via PJRT.
+
+Weight quantization path (one target precision ``r``)::
+
+    hard = pallas fake_quant_sliced(sg(W), 8, r, sg(γ), sg(β))   # L1 kernel
+    soft = ref.fake_quant_sliced_soft(W, 8, r, α(γ,β), z(γ,β))   # STE path
+    W_r  = soft + sg(hard - soft)
+
+The forward value is the exact kernel output; gradients flow through the
+``soft`` surrogate — to ``W`` (QAT) and to OmniQuant's clipping scales
+γ, β (only clipped elements feel them, as in the paper).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import MASTER_BITS, ModelConfig
+from .kernels import quant, ref
+
+sg = jax.lax.stop_gradient
+
+Params = Dict[str, jnp.ndarray]
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantSpec:
+    """How to transform quantized weights for one forward pass.
+
+    kind:
+      * ``fp``     — no quantization (bfloat16 baseline rows).
+      * ``sliced`` — MatQuant: quantize to 8 bits, slice ``bits`` MSBs.
+      * ``direct`` — per-bit baseline: quantize directly to ``bits``.
+    """
+
+    kind: str = "fp"
+    bits: int = 8
+    extra_precision: bool = False
+
+
+FP = QuantSpec("fp")
+
+
+# ---------------------------------------------------------------------------
+# Initialization
+# ---------------------------------------------------------------------------
+
+
+def init_params(cfg: ModelConfig, seed: int) -> Params:
+    """Scaled-normal init in the canonical manifest order."""
+    key = jax.random.PRNGKey(seed)
+    params: Params = {}
+    for name, shape in cfg.param_manifest():
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif len(shape) == 2:
+            fan_in = shape[0]
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * (fan_in**-0.5)
+        else:
+            params[name] = jnp.zeros(shape, jnp.float32)
+    # positional table: small random so early training isn't degenerate
+    key, sub = jax.random.split(key)
+    params["pos"] = jax.random.normal(sub, params["pos"].shape, jnp.float32) * 0.02
+    return params
+
+
+def init_aux(cfg: ModelConfig) -> Params:
+    """OmniQuant auxiliaries: γ = β = σ(4) ≈ 0.982, s = e^0 = 1, δ = 0."""
+    aux: Params = {}
+    for name, shape in cfg.aux_manifest():
+        if name.endswith(("gamma_raw", "beta_raw")):
+            aux[name] = jnp.full(shape, 4.0, jnp.float32)
+        else:
+            aux[name] = jnp.zeros(shape, jnp.float32)
+    return aux
+
+
+def flatten(cfg: ModelConfig, params: Params, aux: Optional[Params] = None) -> List[jnp.ndarray]:
+    out = [params[n] for n, _ in cfg.param_manifest()]
+    if aux is not None:
+        out += [aux[n] for n, _ in cfg.aux_manifest()]
+    return out
+
+
+def unflatten(cfg: ModelConfig, flat, with_aux: bool = False):
+    names = [n for n, _ in cfg.param_manifest()]
+    params = dict(zip(names, flat[: len(names)]))
+    if not with_aux:
+        return params
+    aux_names = [n for n, _ in cfg.aux_manifest()]
+    aux = dict(zip(aux_names, flat[len(names) : len(names) + len(aux_names)]))
+    return params, aux
+
+
+# ---------------------------------------------------------------------------
+# The MatQuant weight transform
+# ---------------------------------------------------------------------------
+
+
+def quantize_weight(w, spec: QuantSpec, gamma=None, beta=None):
+    """Quantize-dequantize ``w`` per ``spec`` with the STE pattern above."""
+    if spec.kind == "fp":
+        return w
+    if spec.kind == "direct":
+        c = r = spec.bits
+    elif spec.kind == "sliced":
+        c, r = MASTER_BITS, spec.bits
+    else:
+        raise ValueError(spec.kind)
+    if gamma is None:
+        gamma = jnp.ones((1, w.shape[1]), w.dtype)
+    if beta is None:
+        beta = jnp.ones((1, w.shape[1]), w.dtype)
+    alpha, zero = ref.omni_scales(w, c, gamma, beta)
+    soft = ref.fake_quant_sliced_soft(w, c, r, alpha, zero, spec.extra_precision)
+    hard = quant.fake_quant_sliced(
+        sg(w), c, r, sg(gamma), sg(beta), extra_precision=spec.extra_precision
+    )
+    return soft + sg(hard - soft)
+
+
+def _aux_for(aux: Optional[Params], name: str):
+    """Materialize (γ, β, δ, s) for weight ``name`` (None when QAT)."""
+    if aux is None:
+        return None, None, None, None
+    gamma = jax.nn.sigmoid(aux[name + ".gamma_raw"])
+    beta = jax.nn.sigmoid(aux[name + ".beta_raw"])
+    delta = aux[name + ".delta"]
+    s = jnp.exp(aux[name + ".s_raw"])
+    return gamma, beta, delta, s
+
+
+def quantized_affine(x, w, name: str, spec: QuantSpec, aux: Optional[Params]):
+    """Eq. 4: ``XW → ((X-δ) ⊘ s) · Q(W ⊙ s) + δ·W`` (no bias in this model).
+
+    With QAT (aux=None) this reduces to ``X · Q(W)``; with ``spec.kind ==
+    'fp'`` to a plain matmul.
+    """
+    if spec.kind == "fp":
+        return x @ w
+    if aux is None:
+        return x @ quantize_weight(w, spec)
+    gamma, beta, delta, s = _aux_for(aux, name)
+    ws = w * s[:, None]
+    wq = quantize_weight(ws, spec, gamma, beta)
+    return ((x - delta) / s) @ wq + delta @ w
+
+
+# ---------------------------------------------------------------------------
+# Transformer forward
+# ---------------------------------------------------------------------------
+
+
+def _rmsnorm(x, scale):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-6) * scale
+
+
+def _attention(cfg: ModelConfig, params: Params, aux, spec_of, x, prefix: str, biases=None):
+    b, t, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    def _bias(name, y):
+        if biases is not None and name in biases:
+            return y + biases[name]
+        return y
+
+    def proj(name):
+        w = params[name]
+        sp = spec_of(name)
+        if sp.kind == "fp":
+            return _bias(name, x @ w)
+        return _bias(name, quantized_affine(x, w, name, sp, aux))
+
+    q = proj(prefix + "attn.wq").reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    k = proj(prefix + "attn.wk").reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    v = proj(prefix + "attn.wv").reshape(b, t, h, dh).transpose(0, 2, 1, 3)
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k) / (dh**0.5)
+    mask = jnp.tril(jnp.ones((t, t), bool))
+    scores = jnp.where(mask, scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhqk,bhkd->bhqd", probs, v)
+    out = out.transpose(0, 2, 1, 3).reshape(b, t, d)
+    name = prefix + "attn.wo"
+    sp = spec_of(name)
+    if sp.kind == "fp":
+        return _bias(name, out @ params[name])
+    return _bias(name, quantized_affine(out, params[name], name, sp, aux))
+
+
+def forward(
+    cfg: ModelConfig,
+    params: Params,
+    tokens,  # (B, T) int32
+    spec: QuantSpec = FP,
+    aux: Optional[Params] = None,
+    biases: Optional[Params] = None,
+) -> Tuple[jnp.ndarray, List[jnp.ndarray]]:
+    """Returns (logits (B,T,V), per-layer block outputs for OmniQuant's
+    reconstruction loss).  ``biases`` optionally adds a (d_out,) vector
+    after each quantized matmul — the Rust runtime uses this to fold
+    OmniQuant's Eq. 4 shift correction into a plain forward pass."""
+    quantized = set(cfg.quantized_names())
+
+    def spec_of(name: str) -> QuantSpec:
+        return spec if name in quantized else FP
+
+    def _bias(name, y):
+        if biases is not None and name in biases:
+            return y + biases[name]
+        return y
+
+    b, t = tokens.shape
+    x = params["embed"][tokens] + params["pos"][:t][None, :, :]
+    layer_outs: List[jnp.ndarray] = []
+    for i in range(cfg.n_layers):
+        p = f"layer{i}."
+        x = x + _attention(cfg, params, aux, spec_of, _rmsnorm(x, params[p + "ln1"]), p, biases)
+        hgelu = jax.nn.gelu(
+            _bias(
+                p + "ffn.w_in",
+                quantized_affine(
+                    _rmsnorm(x, params[p + "ln2"]),
+                    params[p + "ffn.w_in"],
+                    p + "ffn.w_in",
+                    spec_of(p + "ffn.w_in"),
+                    aux,
+                ),
+            )
+        )
+        x = x + _bias(
+            p + "ffn.w_out",
+            quantized_affine(
+                hgelu, params[p + "ffn.w_out"], p + "ffn.w_out", spec_of(p + "ffn.w_out"), aux
+            ),
+        )
+        layer_outs.append(x)
+    logits = _rmsnorm(x, params["ln_f"]) @ params["head"]
+    return logits, layer_outs
+
+
+# ---------------------------------------------------------------------------
+# Losses
+# ---------------------------------------------------------------------------
+
+
+def ce_loss(logits, labels, mask):
+    """Masked mean cross-entropy (labels int32, mask f32, both (B, T))."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def distill_loss(student_logits, teacher_logits, mask):
+    """Teacher-CE distillation: ``-Σ p_T log p_S`` (BitDistiller-style)."""
+    pt = jax.nn.softmax(sg(teacher_logits), axis=-1)
+    logps = jax.nn.log_softmax(student_logits, axis=-1)
+    xent = -(pt * logps).sum(-1)
+    return (xent * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+def recon_loss(layer_outs_q, layer_outs_ref):
+    """OmniQuant's block-wise L2 reconstruction (Eq. 5), averaged over layers.
+
+    ``layer_outs_ref`` may come from the fp model (ground truth) or from the
+    int8 MatQuant model (co-distillation)."""
+    total = 0.0
+    for a, b in zip(layer_outs_q, layer_outs_ref):
+        total = total + jnp.mean((a - sg(b)) ** 2)
+    return total / len(layer_outs_q)
+
+
+def seq_logprob(logits, labels, mask):
+    """Per-sequence masked label log-likelihood (B,) — task probe scoring."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    return (ll * mask).sum(axis=-1)

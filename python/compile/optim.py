@@ -1,0 +1,55 @@
+"""Adam with warmup+cosine (QAT) or constant (OmniQuant) LR — build-time.
+
+Kept dependency-free (no optax) so the whole optimizer state is an explicit
+flat list of (m, v) tensors mirroring the parameter manifest; the Rust
+coordinator owns these buffers between steps.
+"""
+
+from __future__ import annotations
+
+from typing import List, Tuple
+
+import jax.numpy as jnp
+
+from .configs import TrainConfig
+
+
+def learning_rate(tc: TrainConfig, step):
+    """Paper Appendix B: OmniQuant constant 1e-3; QAT linear warmup to the
+    peak then cosine decay."""
+    step = step.astype(jnp.float32)
+    if tc.mode == "omni":
+        return jnp.float32(tc.lr)
+    warm = jnp.minimum(step / max(tc.warmup, 1), 1.0)
+    prog = jnp.clip(
+        (step - tc.warmup) / max(tc.total_steps - tc.warmup, 1), 0.0, 1.0
+    )
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return tc.lr * warm * cos
+
+
+def adam_update(
+    tc: TrainConfig,
+    params: List[jnp.ndarray],
+    grads: List[jnp.ndarray],
+    m: List[jnp.ndarray],
+    v: List[jnp.ndarray],
+    step,
+) -> Tuple[List[jnp.ndarray], List[jnp.ndarray], List[jnp.ndarray]]:
+    """One Adam step over flat lists; ``step`` is the 0-based i32 counter."""
+    lr = learning_rate(tc, step)
+    t = step.astype(jnp.float32) + 1.0
+    b1, b2 = tc.beta1, tc.beta2
+    bc1 = 1.0 - b1**t
+    bc2 = 1.0 - b2**t
+    new_p, new_m, new_v = [], [], []
+    for p, g, mi, vi in zip(params, grads, m, v):
+        mi = b1 * mi + (1.0 - b1) * g
+        vi = b2 * vi + (1.0 - b2) * (g * g)
+        update = (mi / bc1) / (jnp.sqrt(vi / bc2) + tc.adam_eps)
+        if tc.weight_decay:
+            update = update + tc.weight_decay * p
+        new_p.append(p - lr * update)
+        new_m.append(mi)
+        new_v.append(vi)
+    return new_p, new_m, new_v

@@ -1,0 +1,283 @@
+"""Step builders: every AOT artifact is a jitted closure produced here.
+
+Signatures (flat leaf order == HLO parameter order, documented in
+``artifacts/manifest.json``):
+
+* ``train_{qat,omni}_mat``: MatQuant / Single-Precision / co-distillation in
+  one graph — inputs ``(params…, [aux…,] m…, v…, step, tokens, lambdas(3),
+  wdist(3))``; sliced precisions R = (8, 4, 2).  ``lambdas`` are the paper's
+  λ_r ground-truth loss weights, ``wdist`` the co-distillation weights for
+  distilling r-bit outputs from the int8 model (Table 4 configs).
+* ``train_{qat,omni}_direct_b{B}``: explicitly-trained per-bit baseline.
+* ``eval``: ``(params…, tokens, mask)`` → ``(ce_sum, mask_sum, seq_ll)``.
+* ``fwd``: ``(params…, tokens)`` → logits.
+* ``init``: ``(seed,)`` → params… .
+
+QAT updates model weights (CE loss, Eq. 2); OmniQuant updates only the
+auxiliary γ/β/δ/s parameters against the layer-wise reconstruction loss
+(Eq. 5), with the fp layer outputs as ground-truth target and the int8
+MatQuant outputs as the co-distillation target.
+"""
+
+from __future__ import annotations
+
+from typing import List
+
+import jax
+import jax.numpy as jnp
+
+from . import model as M
+from .configs import MATQUANT_BITS, ModelConfig, TrainConfig
+from .optim import adam_update
+
+sg = jax.lax.stop_gradient
+
+
+def _split_batch(tokens):
+    """(B, T+1) i32 → (inputs, labels, mask)."""
+    inp = tokens[:, :-1]
+    lab = tokens[:, 1:]
+    mask = jnp.ones(lab.shape, jnp.float32)
+    return inp, lab, mask
+
+
+# ---------------------------------------------------------------------------
+# QAT
+# ---------------------------------------------------------------------------
+
+
+def make_train_qat_mat(cfg: ModelConfig, tc: TrainConfig):
+    """Joint MatQuant objective (Eq. 7) + optional co-distillation."""
+    names = [n for n, _ in cfg.param_manifest()]
+    bits = MATQUANT_BITS
+
+    def step_fn(*args):
+        n = len(names)
+        params_flat = list(args[:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        step, tokens, lambdas, wdist = args[3 * n : 3 * n + 4]
+        inp, lab, mask = _split_batch(tokens)
+
+        def loss_fn(params_flat):
+            params = dict(zip(names, params_flat))
+            logits_by_r = []
+            for r in bits:
+                spec = M.QuantSpec("sliced", r, tc.extra_precision)
+                logits, _ = M.forward(cfg, params, inp, spec)
+                logits_by_r.append(logits)
+            teacher = logits_by_r[0]  # int8 — the co-distillation teacher
+            losses = []
+            total = 0.0
+            for i, r in enumerate(bits):
+                lgt = M.ce_loss(logits_by_r[i], lab, mask)
+                ldist = M.distill_loss(logits_by_r[i], teacher, mask)
+                losses.append(lgt)
+                total = total + lambdas[i] * lgt + wdist[i] * ldist
+            return total, jnp.stack(losses)
+
+        (_, losses), grads = jax.value_and_grad(loss_fn, has_aux=True)(params_flat)
+        new_p, new_m, new_v = adam_update(tc, params_flat, grads, m, v, step)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (losses,)
+
+    return step_fn
+
+
+def make_train_fp(cfg: ModelConfig, tc: TrainConfig):
+    """Full-precision pretraining step (the paper's base checkpoint that
+    QAT fine-tunes and OmniQuant calibrates)."""
+    names = [n for n, _ in cfg.param_manifest()]
+
+    def step_fn(*args):
+        n = len(names)
+        params_flat = list(args[:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        step, tokens = args[3 * n : 3 * n + 2]
+        inp, lab, mask = _split_batch(tokens)
+
+        def loss_fn(params_flat):
+            params = dict(zip(names, params_flat))
+            logits, _ = M.forward(cfg, params, inp, M.FP)
+            return M.ce_loss(logits, lab, mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params_flat)
+        new_p, new_m, new_v = adam_update(tc, params_flat, grads, m, v, step)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (jnp.stack([loss]),)
+
+    return step_fn
+
+
+def make_train_qat_direct(cfg: ModelConfig, tc: TrainConfig):
+    """Explicit per-bit baseline (the paper's "Baseline" rows)."""
+    names = [n for n, _ in cfg.param_manifest()]
+
+    def step_fn(*args):
+        n = len(names)
+        params_flat = list(args[:n])
+        m = list(args[n : 2 * n])
+        v = list(args[2 * n : 3 * n])
+        step, tokens = args[3 * n : 3 * n + 2]
+        inp, lab, mask = _split_batch(tokens)
+
+        def loss_fn(params_flat):
+            params = dict(zip(names, params_flat))
+            spec = M.QuantSpec("direct", tc.direct_bits)
+            logits, _ = M.forward(cfg, params, inp, spec)
+            return M.ce_loss(logits, lab, mask)
+
+        loss, grads = jax.value_and_grad(loss_fn)(params_flat)
+        new_p, new_m, new_v = adam_update(tc, params_flat, grads, m, v, step)
+        return tuple(new_p) + tuple(new_m) + tuple(new_v) + (jnp.stack([loss]),)
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# OmniQuant
+# ---------------------------------------------------------------------------
+
+
+def make_train_omni_mat(cfg: ModelConfig, tc: TrainConfig):
+    """MatQuant on OmniQuant: optimize aux (γ, β, δ, s) only, layer-wise L2
+    reconstruction vs the fp forward (Eq. 5), summed over target precisions
+    with λ weights; co-distillation targets the int8 layer outputs."""
+    names = [n for n, _ in cfg.param_manifest()]
+    aux_names = [n for n, _ in cfg.aux_manifest()]
+    bits = MATQUANT_BITS
+
+    def step_fn(*args):
+        n, a = len(names), len(aux_names)
+        params_flat = list(args[:n])
+        aux_flat = list(args[n : n + a])
+        m = list(args[n + a : n + 2 * a])
+        v = list(args[n + 2 * a : n + 3 * a])
+        step, tokens, lambdas, wdist = args[n + 3 * a : n + 3 * a + 4]
+        inp, _, _ = _split_batch(tokens)
+        params = dict(zip(names, [sg(p) for p in params_flat]))
+        _, ref_outs = M.forward(cfg, params, inp, M.FP)
+
+        def loss_fn(aux_flat):
+            aux = dict(zip(aux_names, aux_flat))
+            outs_by_r = []
+            for r in bits:
+                spec = M.QuantSpec("sliced", r, tc.extra_precision)
+                _, outs = M.forward(cfg, params, inp, spec, aux)
+                outs_by_r.append(outs)
+            teacher = outs_by_r[0]
+            losses = []
+            total = 0.0
+            for i, r in enumerate(bits):
+                lgt = M.recon_loss(outs_by_r[i], ref_outs)
+                ldist = M.recon_loss(outs_by_r[i], teacher)
+                losses.append(lgt)
+                total = total + lambdas[i] * lgt + wdist[i] * ldist
+            return total, jnp.stack(losses)
+
+        (_, losses), grads = jax.value_and_grad(loss_fn, has_aux=True)(aux_flat)
+        new_a, new_m, new_v = adam_update(tc, aux_flat, grads, m, v, step)
+        return tuple(new_a) + tuple(new_m) + tuple(new_v) + (losses,)
+
+    return step_fn
+
+
+def make_train_omni_direct(cfg: ModelConfig, tc: TrainConfig):
+    names = [n for n, _ in cfg.param_manifest()]
+    aux_names = [n for n, _ in cfg.aux_manifest()]
+
+    def step_fn(*args):
+        n, a = len(names), len(aux_names)
+        params_flat = list(args[:n])
+        aux_flat = list(args[n : n + a])
+        m = list(args[n + a : n + 2 * a])
+        v = list(args[n + 2 * a : n + 3 * a])
+        step, tokens = args[n + 3 * a : n + 3 * a + 2]
+        inp, _, _ = _split_batch(tokens)
+        params = dict(zip(names, [sg(p) for p in params_flat]))
+        _, ref_outs = M.forward(cfg, params, inp, M.FP)
+
+        def loss_fn(aux_flat):
+            aux = dict(zip(aux_names, aux_flat))
+            spec = M.QuantSpec("direct", tc.direct_bits)
+            _, outs = M.forward(cfg, params, inp, spec, aux)
+            return M.recon_loss(outs, ref_outs)
+
+        loss, grads = jax.value_and_grad(loss_fn)(aux_flat)
+        new_a, new_m, new_v = adam_update(tc, aux_flat, grads, m, v, step)
+        return tuple(new_a) + tuple(new_m) + tuple(new_v) + (jnp.stack([loss]),)
+
+    return step_fn
+
+
+# ---------------------------------------------------------------------------
+# Eval / forward / init
+# ---------------------------------------------------------------------------
+
+
+def make_eval(cfg: ModelConfig):
+    """(params…, biases…, tokens (B,T+1), mask (B,T)) → (ce_sum, mask_sum,
+    seq_ll).
+
+    Weights arrive *already dequantized* (the Rust quant module owns
+    slicing), so one artifact evaluates every precision and every
+    Mix'n'Match combination.  ``biases`` (one (d_out,) vector per quantized
+    tensor, in ``quantized_names()`` order) fold OmniQuant's Eq. 4 shift
+    correction ``δ·(W − W_eff)`` into the plain forward; zeros for QAT.
+    ``seq_ll`` scores task-probe options.
+    """
+    names = [n for n, _ in cfg.param_manifest()]
+    qnames = cfg.quantized_names()
+
+    def eval_fn(*args):
+        n, q = len(names), len(qnames)
+        params = dict(zip(names, args[:n]))
+        biases = dict(zip(qnames, args[n : n + q]))
+        tokens, mask = args[n + q], args[n + q + 1]
+        inp = tokens[:, :-1]
+        lab = tokens[:, 1:]
+        logits, _ = M.forward(cfg, params, inp, M.FP, biases=biases)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        ll = jnp.take_along_axis(logp, lab[..., None], axis=-1)[..., 0]
+        ce_sum = -(ll * mask).sum()
+        seq_ll = (ll * mask).sum(axis=-1)
+        return ce_sum, mask.sum(), seq_ll
+
+    return eval_fn
+
+
+def make_fwd(cfg: ModelConfig):
+    """(params…, biases…, tokens (B,T)) → logits — the serving request path."""
+    names = [n for n, _ in cfg.param_manifest()]
+    qnames = cfg.quantized_names()
+
+    def fwd_fn(*args):
+        n, q = len(names), len(qnames)
+        params = dict(zip(names, args[:n]))
+        biases = dict(zip(qnames, args[n : n + q]))
+        tokens = args[n + q]
+        logits, _ = M.forward(cfg, params, tokens, M.FP, biases=biases)
+        return (logits,)
+
+    return fwd_fn
+
+
+def make_init(cfg: ModelConfig):
+    """(seed i32,) → params… — deterministic init executed on PJRT so the
+    Rust binary never needs Python."""
+
+    def init_fn(seed):
+        key = jax.random.PRNGKey(seed)
+        out: List[jnp.ndarray] = []
+        for name, shape in cfg.param_manifest():
+            key, sub = jax.random.split(key)
+            if name.endswith(("ln1", "ln2", "ln_f")):
+                out.append(jnp.ones(shape, jnp.float32))
+            elif name == "pos":
+                out.append(jax.random.normal(sub, shape, jnp.float32) * 0.02)
+            elif len(shape) == 2:
+                out.append(jax.random.normal(sub, shape, jnp.float32) * (shape[0] ** -0.5))
+            else:
+                out.append(jnp.zeros(shape, jnp.float32))
+        return tuple(out)
+
+    return init_fn

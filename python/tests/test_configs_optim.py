@@ -1,0 +1,94 @@
+"""Config manifests and the optimizer — the L2↔L3 contract pieces."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.configs import ALL_BITS, MATQUANT_BITS, PRESETS, ModelConfig, TrainConfig
+from compile.optim import adam_update, learning_rate
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+class TestManifest:
+    def test_param_manifest_order_is_stable(self):
+        cfg = PRESETS["tiny"]
+        a = cfg.param_manifest()
+        b = cfg.param_manifest()
+        assert a == b
+        assert a[0][0] == "embed"
+        assert a[-1][0] == "head"
+
+    def test_quantized_names_subset_of_params(self):
+        for cfg in PRESETS.values():
+            names = {n for n, _ in cfg.param_manifest()}
+            for q in cfg.quantized_names():
+                assert q in names
+
+    def test_attn_preset_quantizes_attention(self):
+        qn = PRESETS["tiny_attn"].quantized_names()
+        assert any("attn.wq" in n for n in qn)
+        assert not any("attn" in n for n in PRESETS["tiny"].quantized_names())
+
+    def test_aux_manifest_four_per_quantized(self):
+        cfg = PRESETS["tiny"]
+        assert len(cfg.aux_manifest()) == 4 * len(cfg.quantized_names())
+
+    def test_aux_shapes_match_weights(self):
+        cfg = PRESETS["tiny"]
+        shapes = dict(cfg.param_manifest())
+        aux = dict(cfg.aux_manifest())
+        for q in cfg.quantized_names():
+            d_in, d_out = shapes[q]
+            assert aux[q + ".gamma_raw"] == (1, d_out)
+            assert aux[q + ".delta"] == (d_in,)
+
+    def test_bits_constants(self):
+        assert MATQUANT_BITS == (8, 4, 2)
+        assert set(MATQUANT_BITS) < set(ALL_BITS) | {8}
+        assert ALL_BITS == (8, 6, 4, 3, 2)
+
+    def test_heads_divide_model_dim(self):
+        for cfg in PRESETS.values():
+            assert cfg.d_model % cfg.n_heads == 0
+
+
+class TestOptim:
+    def test_qat_warmup_then_cosine(self):
+        tc = TrainConfig(mode="qat", lr=1e-3, warmup=10, total_steps=100)
+        lr0 = float(learning_rate(tc, jnp.int32(0)))
+        lr_w = float(learning_rate(tc, jnp.int32(10)))
+        lr_end = float(learning_rate(tc, jnp.int32(100)))
+        assert lr0 == 0.0
+        assert abs(lr_w - 1e-3) < 1e-9
+        assert lr_end < 1e-5
+
+    def test_omni_constant_lr(self):
+        tc = TrainConfig(mode="omni", lr=1e-3)
+        for s in [0, 50, 10_000]:
+            np.testing.assert_allclose(float(learning_rate(tc, jnp.int32(s))), 1e-3, rtol=1e-6)
+
+    def test_adam_moves_against_gradient(self):
+        tc = TrainConfig(mode="omni", lr=0.1)
+        p = [jnp.ones(4)]
+        g = [jnp.ones(4)]
+        m = [jnp.zeros(4)]
+        v = [jnp.zeros(4)]
+        new_p, new_m, new_v = adam_update(tc, p, g, m, v, jnp.int32(0))
+        assert bool(jnp.all(new_p[0] < p[0]))
+        assert bool(jnp.all(new_m[0] > 0))
+        assert bool(jnp.all(new_v[0] > 0))
+
+    def test_adam_zero_grad_is_noop(self):
+        tc = TrainConfig(mode="omni", lr=0.1)
+        p = [jnp.full(3, 2.0)]
+        z = [jnp.zeros(3)]
+        new_p, _, _ = adam_update(tc, p, z, z, z, jnp.int32(5))
+        np.testing.assert_allclose(np.asarray(new_p[0]), np.asarray(p[0]))
+
+    def test_weight_decay_pulls_to_zero(self):
+        tc = TrainConfig(mode="omni", lr=0.1, weight_decay=0.1)
+        p = [jnp.full(3, 2.0)]
+        z = [jnp.zeros(3)]
+        new_p, _, _ = adam_update(tc, p, z, z, z, jnp.int32(5))
+        assert bool(jnp.all(new_p[0] < p[0]))

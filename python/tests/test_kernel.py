@@ -1,0 +1,262 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+Hypothesis sweeps shapes, bit-widths, and value ranges; every kernel must
+match ref.py bit-exactly (codes) or to tight f32 tolerance (dequantized
+values, matmul).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, quant, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+BITS = [2, 3, 4, 6, 8]
+
+
+def rand_w(rng, d_in, d_out, scale=1.0):
+    return jnp.asarray(rng.standard_normal((d_in, d_out), dtype=np.float32) * scale)
+
+
+# ---------------------------------------------------------------------------
+# Oracle self-consistency (semantics of the slicing operator)
+# ---------------------------------------------------------------------------
+
+
+class TestSliceSemantics:
+    def test_paper_example_234(self):
+        """Errata example: S(234, 2) = 192 clamped, 256 extra-precision."""
+        q = jnp.array([234.0])
+        assert float(ref.slice_codes(q, 8, 2)[0]) == 192.0
+        assert float(ref.slice_codes(q, 8, 2, extra_precision=True)[0]) == 256.0
+
+    def test_paper_example_53_rounds_up(self):
+        """Appendix A: 53 = 0b00110101 → 2-bit slice rounds up to bucket 1."""
+        q = jnp.array([53.0])
+        assert float(ref.slice_codes(q, 8, 2)[0]) == 64.0
+
+    def test_paper_example_240_clamps(self):
+        """Appendix A: 240/64 = 3.75 → 4 → clamp → 3 (bucket 192)."""
+        q = jnp.array([240.0])
+        assert float(ref.slice_codes(q, 8, 2)[0]) == 192.0
+
+    def test_slice_full_width_identity(self):
+        q = jnp.arange(256.0)
+        np.testing.assert_array_equal(ref.slice_codes(q, 8, 8), q)
+
+    @pytest.mark.parametrize("r", [2, 3, 4, 6])
+    def test_slice_matches_bit_arithmetic(self, r):
+        """Eq. 6 == (q >> (c-r)) << (c-r) with round-at-boundary semantics."""
+        q = np.arange(256)
+        shift = 8 - r
+        rounded = np.minimum((q + (1 << (shift - 1))) >> shift, (1 << r) - 1)
+        expect = (rounded << shift).astype(np.float32)
+        got = np.asarray(ref.slice_codes(jnp.asarray(q, jnp.float32), 8, r))
+        np.testing.assert_array_equal(got, expect)
+
+    @pytest.mark.parametrize("r", [2, 3, 4, 6])
+    def test_extra_precision_adds_one_bucket(self, r):
+        q = jnp.arange(256.0)
+        s = ref.slice_codes(q, 8, r, extra_precision=True) / 2.0 ** (8 - r)
+        assert int(jnp.max(s)) == 2**r  # overflow bucket present
+        assert len(np.unique(np.asarray(s))) == 2**r + 1
+
+    def test_nestedness_monotone(self):
+        """Slicing to fewer bits only coarsens: 4-bit slice of the 6-bit
+        slice equals the direct 4-bit slice (MSB nesting)."""
+        q = jnp.arange(256.0)
+        direct = ref.slice_codes(q, 8, 2)
+        via4 = ref.slice_codes(ref.slice_codes(q, 8, 4), 8, 2)
+        # Not exactly equal in general (double rounding), but within one
+        # bucket — and equal for >98% of codes.
+        diff = np.abs(np.asarray(direct - via4)) / 64.0
+        assert diff.max() <= 1.0
+        assert (diff == 0).mean() > 0.9
+
+
+class TestQuantOracle:
+    @given(
+        bits=st.sampled_from(BITS),
+        d_in=st.integers(4, 96),
+        d_out=st.integers(1, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_codes_in_range(self, bits, d_in, d_out, seed):
+        w = rand_w(np.random.default_rng(seed), d_in, d_out)
+        alpha, zero = ref.minmax_scales(w, bits)
+        q = ref.quantize(w, bits, alpha, zero)
+        assert float(q.min()) >= 0.0
+        assert float(q.max()) <= 2.0**bits - 1.0
+        assert np.all(np.asarray(q) == np.floor(np.asarray(q)))
+
+    @given(
+        bits=st.sampled_from(BITS),
+        d_in=st.integers(4, 96),
+        d_out=st.integers(1, 40),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=12, deadline=None)
+    def test_minmax_error_bound(self, bits, d_in, d_out, seed):
+        """Quantization error per element ≤ alpha/2 + eps (affine grid)."""
+        w = rand_w(np.random.default_rng(seed), d_in, d_out)
+        alpha, zero = ref.minmax_scales(w, bits)
+        wq = ref.fake_quant_minmax(w, bits)
+        err = jnp.abs(w - wq)
+        bound = jnp.broadcast_to(alpha / 2 + 1e-5, err.shape)
+        assert bool(jnp.all(err <= bound))
+
+    def test_constant_column_stable(self):
+        w = jnp.ones((16, 3))
+        wq = ref.fake_quant_minmax(w, 4)
+        assert np.isfinite(np.asarray(wq)).all()
+
+    def test_omni_unit_scales_equal_minmax(self):
+        rng = np.random.default_rng(0)
+        w = rand_w(rng, 32, 8)
+        a = ref.fake_quant_minmax(w, 4)
+        b = ref.fake_quant_omni(w, 4, jnp.ones((1, 8)), jnp.ones((1, 8)))
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+    def test_omni_clipping_shrinks_range(self):
+        rng = np.random.default_rng(1)
+        w = rand_w(rng, 64, 4)
+        wq = ref.fake_quant_omni(w, 8, jnp.full((1, 4), 0.5), jnp.full((1, 4), 0.5))
+        assert float(jnp.max(wq)) <= float(jnp.max(w)) * 0.5 + 1e-4
+        assert float(jnp.min(wq)) >= float(jnp.min(w)) * 0.5 - 1e-4
+
+    @given(seed=st.integers(0, 2**31 - 1), r=st.sampled_from([2, 3, 4, 6]))
+    @settings(max_examples=10, deadline=None)
+    def test_effective_bits_in_range(self, seed, r):
+        w = rand_w(np.random.default_rng(seed), 64, 16)
+        alpha, zero = ref.minmax_scales(w, 8)
+        q = ref.quantize(w, 8, alpha, zero)
+        eb = float(ref.effective_bits(q, 8, r))
+        assert r <= eb <= r + 1
+
+
+# ---------------------------------------------------------------------------
+# Pallas kernels vs oracles
+# ---------------------------------------------------------------------------
+
+
+class TestFakeQuantKernels:
+    @given(
+        bits=st.sampled_from(BITS),
+        d_in=st.integers(2, 64),
+        d_out=st.integers(1, 200),
+        seed=st.integers(0, 2**31 - 1),
+        scale=st.sampled_from([0.02, 1.0, 30.0]),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_minmax_kernel_matches_ref(self, bits, d_in, d_out, seed, scale):
+        w = rand_w(np.random.default_rng(seed), d_in, d_out, scale)
+        got = quant.fake_quant_minmax(w, bits)
+        want = ref.fake_quant_minmax(w, bits)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+    @given(
+        bits=st.sampled_from(BITS),
+        d_in=st.integers(2, 64),
+        d_out=st.integers(1, 200),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_omni_kernel_matches_ref(self, bits, d_in, d_out, seed):
+        rng = np.random.default_rng(seed)
+        w = rand_w(rng, d_in, d_out)
+        gamma = jnp.asarray(rng.uniform(0.5, 1.0, (1, d_out)).astype(np.float32))
+        beta = jnp.asarray(rng.uniform(0.5, 1.0, (1, d_out)).astype(np.float32))
+        got = quant.fake_quant_omni(w, bits, gamma, beta)
+        want = ref.fake_quant_omni(w, bits, gamma, beta)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+    @given(
+        r=st.sampled_from([2, 3, 4, 6, 8]),
+        ep=st.booleans(),
+        d_in=st.integers(2, 64),
+        d_out=st.integers(1, 200),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_sliced_kernel_matches_ref(self, r, ep, d_in, d_out, seed):
+        rng = np.random.default_rng(seed)
+        w = rand_w(rng, d_in, d_out)
+        gamma = jnp.asarray(rng.uniform(0.7, 1.0, (1, d_out)).astype(np.float32))
+        beta = jnp.asarray(rng.uniform(0.7, 1.0, (1, d_out)).astype(np.float32))
+        got = quant.fake_quant_sliced(w, 8, r, gamma, beta, extra_precision=ep)
+        alpha, zero = ref.omni_scales(w, 8, gamma, beta)
+        want = ref.fake_quant_sliced(w, 8, r, alpha, zero, extra_precision=ep)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+    def test_sliced_kernel_minmax_default(self):
+        w = rand_w(np.random.default_rng(3), 48, 20)
+        got = quant.fake_quant_sliced(w, 8, 4)
+        alpha, zero = ref.minmax_scales(w, 8)
+        want = ref.fake_quant_sliced(w, 8, 4, alpha, zero)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=2e-4, atol=1e-5)
+
+    def test_ste_forward_and_grad(self):
+        w = rand_w(np.random.default_rng(5), 16, 8)
+
+        def loss(w):
+            # stop_gradient must be applied to the *kernel inputs*:
+            # linearization cannot traverse pallas_call, so no tangent may
+            # reach it (the model layer follows the same pattern).
+            hard = quant.fake_quant_minmax(jax.lax.stop_gradient(w), 4)
+            wq = quant.ste(w, hard)
+            return jnp.sum(wq**2)
+
+        g = jax.grad(loss)(w)
+        wq = quant.fake_quant_minmax(w, 4)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(2 * wq), rtol=1e-5)
+
+    def test_soft_path_gradients_reach_gamma_beta(self):
+        """OmniQuant's gamma/beta must receive gradient through the clamped
+        soft path when slicing to low bits (that's how it learns)."""
+        rng = np.random.default_rng(7)
+        w = rand_w(rng, 32, 8)
+
+        def loss(gb):
+            gamma, beta = gb
+            alpha, zero = ref.omni_scales(w, 8, gamma, beta)
+            soft = ref.fake_quant_sliced_soft(w, 8, 2, alpha, zero)
+            return jnp.sum(soft**2)
+
+        g = jax.grad(loss)((jnp.full((1, 8), 0.9), jnp.full((1, 8), 0.9)))
+        assert float(jnp.abs(g[0]).sum()) > 0
+        assert float(jnp.abs(g[1]).sum()) > 0
+
+
+class TestQuantizedMatmul:
+    @given(
+        m=st.integers(1, 70),
+        k=st.integers(1, 48),
+        n=st.integers(1, 200),
+        r=st.sampled_from([2, 4, 8]),
+        ep=st.booleans(),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    @settings(max_examples=10, deadline=None)
+    def test_matches_ref(self, m, k, n, r, ep, seed):
+        rng = np.random.default_rng(seed)
+        x = jnp.asarray(rng.standard_normal((m, k), dtype=np.float32))
+        w = jnp.asarray(rng.standard_normal((k, n), dtype=np.float32))
+        alpha, zero = ref.minmax_scales(w, 8)
+        q = ref.quantize(w, 8, alpha, zero)
+        got = matmul.quantized_matmul(x, q, alpha, zero, 8, r, extra_precision=ep)
+        want = ref.quantized_matmul(x, q, alpha, zero, 8, r, extra_precision=ep)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+    def test_int8_near_float(self):
+        rng = np.random.default_rng(11)
+        x = jnp.asarray(rng.standard_normal((8, 32), dtype=np.float32))
+        w = jnp.asarray(rng.standard_normal((32, 16), dtype=np.float32))
+        alpha, zero = ref.minmax_scales(w, 8)
+        q = ref.quantize(w, 8, alpha, zero)
+        got = matmul.quantized_matmul(x, q, alpha, zero, 8, 8)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(x @ w), rtol=0.05, atol=0.05)

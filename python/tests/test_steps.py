@@ -1,0 +1,223 @@
+"""L2 step builders: shapes, gradients, and actual learning.
+
+These run the exact closures that aot.py lowers, so passing here means the
+HLO artifacts encode a working training system.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile import steps
+from compile.configs import MATQUANT_BITS, ModelConfig, TrainConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+CFG = ModelConfig(name="test", vocab=64, d_model=32, n_layers=1, n_heads=2, d_ff=64, seq_len=16)
+B = 4
+
+
+def make_batch(rng, cfg=CFG, b=B):
+    # learnable structure: tokens follow a fixed cyclic pattern + noise
+    base = np.arange(cfg.seq_len + 1) % 7 + 1
+    toks = np.stack([np.roll(base, rng.integers(0, 7)) for _ in range(b)])
+    return jnp.asarray(toks, jnp.int32)
+
+
+def flat_params(cfg, seed=0):
+    p = M.init_params(cfg, seed)
+    return [p[n] for n, _ in cfg.param_manifest()]
+
+
+def zeros_like_list(xs):
+    return [jnp.zeros_like(x) for x in xs]
+
+
+class TestForward:
+    def test_logit_shapes(self):
+        p = M.init_params(CFG, 0)
+        toks = make_batch(np.random.default_rng(0))[:, :-1]
+        logits, outs = M.forward(CFG, p, toks)
+        assert logits.shape == (B, CFG.seq_len, CFG.vocab)
+        assert len(outs) == CFG.n_layers
+
+    @pytest.mark.parametrize("kind,bits", [("sliced", 8), ("sliced", 2), ("direct", 4)])
+    def test_quantized_forward_finite(self, kind, bits):
+        p = M.init_params(CFG, 0)
+        toks = make_batch(np.random.default_rng(0))[:, :-1]
+        logits, _ = M.forward(CFG, p, toks, M.QuantSpec(kind, bits))
+        assert np.isfinite(np.asarray(logits)).all()
+
+    def test_int8_sliced_close_to_fp(self):
+        p = M.init_params(CFG, 0)
+        toks = make_batch(np.random.default_rng(0))[:, :-1]
+        fp, _ = M.forward(CFG, p, toks)
+        q8, _ = M.forward(CFG, p, toks, M.QuantSpec("sliced", 8))
+        assert float(jnp.mean(jnp.abs(fp - q8))) < 0.05
+
+    def test_int2_worse_than_int8(self):
+        p = M.init_params(CFG, 0)
+        toks = make_batch(np.random.default_rng(0))[:, :-1]
+        fp, _ = M.forward(CFG, p, toks)
+        q8, _ = M.forward(CFG, p, toks, M.QuantSpec("sliced", 8))
+        q2, _ = M.forward(CFG, p, toks, M.QuantSpec("sliced", 2))
+        e8 = float(jnp.mean((fp - q8) ** 2))
+        e2 = float(jnp.mean((fp - q2) ** 2))
+        assert e2 > e8
+
+    def test_omni_aux_identity_at_init_scales(self):
+        """With γ=β=σ(4)≈1, s=1, δ=0, OmniQuant forward ≈ QAT forward."""
+        p = M.init_params(CFG, 0)
+        aux = M.init_aux(CFG)
+        toks = make_batch(np.random.default_rng(0))[:, :-1]
+        qat, _ = M.forward(CFG, p, toks, M.QuantSpec("sliced", 4))
+        omni, _ = M.forward(CFG, p, toks, M.QuantSpec("sliced", 4), aux)
+        assert float(jnp.mean(jnp.abs(qat - omni))) < 0.1
+
+
+class TestQatTrain:
+    def test_matquant_loss_decreases(self):
+        rng = np.random.default_rng(1)
+        step_fn = jax.jit(steps.make_train_qat_mat(CFG, TrainConfig(mode="qat", warmup=5, total_steps=60)))
+        p = flat_params(CFG)
+        m, v = zeros_like_list(p), zeros_like_list(p)
+        lam = jnp.array([0.1, 0.1, 1.0], jnp.float32)
+        wd = jnp.zeros(3, jnp.float32)
+        first = last = None
+        for i in range(40):
+            out = step_fn(*p, *m, *v, jnp.int32(i), make_batch(rng), lam, wd)
+            n = len(p)
+            p, m, v = list(out[:n]), list(out[n : 2 * n]), list(out[2 * n : 3 * n])
+            losses = out[3 * n]
+            if first is None:
+                first = float(losses[2])
+            last = float(losses[2])
+        assert last < first, f"int2 loss did not improve: {first} -> {last}"
+
+    def test_direct_baseline_loss_decreases(self):
+        rng = np.random.default_rng(2)
+        step_fn = jax.jit(steps.make_train_qat_direct(CFG, TrainConfig(mode="qat", direct_bits=4, warmup=5, total_steps=60)))
+        p = flat_params(CFG)
+        m, v = zeros_like_list(p), zeros_like_list(p)
+        hist = []
+        for i in range(30):
+            out = step_fn(*p, *m, *v, jnp.int32(i), make_batch(rng))
+            n = len(p)
+            p, m, v = list(out[:n]), list(out[n : 2 * n]), list(out[2 * n : 3 * n])
+            hist.append(float(out[3 * n][0]))
+        assert hist[-1] < hist[0]
+
+    def test_codistill_weights_change_update(self):
+        rng = np.random.default_rng(3)
+        step_fn = jax.jit(steps.make_train_qat_mat(CFG, TrainConfig(mode="qat", warmup=1)))
+        p = flat_params(CFG)
+        m, v = zeros_like_list(p), zeros_like_list(p)
+        batch = make_batch(rng)
+        lam = jnp.array([1.0, 1.0, 1.0], jnp.float32)
+        # step ≥ warmup so the LR is non-zero and updates are visible
+        out_a = step_fn(*p, *m, *v, jnp.int32(2), batch, lam, jnp.zeros(3))
+        out_b = step_fn(*p, *m, *v, jnp.int32(2), batch, lam, jnp.array([0.0, 0.0, 1.0]))
+        diff = sum(float(jnp.abs(a - b).sum()) for a, b in zip(out_a[: len(p)], out_b[: len(p)]))
+        assert diff > 0
+
+
+class TestOmniTrain:
+    def test_omni_only_updates_aux(self):
+        rng = np.random.default_rng(4)
+        step_fn = jax.jit(steps.make_train_omni_mat(CFG, TrainConfig(mode="omni")))
+        p = flat_params(CFG)
+        aux = M.init_aux(CFG)
+        a_flat = [aux[n] for n, _ in CFG.aux_manifest()]
+        m, v = zeros_like_list(a_flat), zeros_like_list(a_flat)
+        lam = jnp.array([0.1, 0.1, 1.0], jnp.float32)
+        out = step_fn(*p, *a_flat, *m, *v, jnp.int32(0), make_batch(rng), lam, jnp.zeros(3))
+        na = len(a_flat)
+        new_aux = out[:na]
+        changed = sum(float(jnp.abs(x - y).sum()) > 0 for x, y in zip(new_aux, a_flat))
+        assert changed > 0
+
+    def test_omni_recon_loss_decreases(self):
+        rng = np.random.default_rng(5)
+        step_fn = jax.jit(steps.make_train_omni_mat(CFG, TrainConfig(mode="omni", lr=5e-3)))
+        p = flat_params(CFG)
+        aux = M.init_aux(CFG)
+        a_flat = [aux[n] for n, _ in CFG.aux_manifest()]
+        m, v = zeros_like_list(a_flat), zeros_like_list(a_flat)
+        lam = jnp.array([0.1, 0.1, 1.0], jnp.float32)
+        hist = []
+        batch = make_batch(rng)
+        na = len(a_flat)
+        for i in range(25):
+            out = step_fn(*p, *a_flat, *m, *v, jnp.int32(i), batch, lam, jnp.zeros(3))
+            a_flat = list(out[:na])
+            m, v = list(out[na : 2 * na]), list(out[2 * na : 3 * na])
+            hist.append(float(out[3 * na][2]))  # int2 recon loss
+        assert hist[-1] < hist[0], f"omni int2 recon: {hist[0]} -> {hist[-1]}"
+
+
+class TestEvalFwdInit:
+    def _biases(self):
+        shapes = dict(CFG.param_manifest())
+        return [jnp.zeros((shapes[qn][1],), jnp.float32) for qn in CFG.quantized_names()]
+
+    def test_eval_matches_manual_ce(self):
+        p = flat_params(CFG)
+        ev = jax.jit(steps.make_eval(CFG))
+        toks = make_batch(np.random.default_rng(6))
+        mask = jnp.ones((B, CFG.seq_len), jnp.float32)
+        ce_sum, msum, seq_ll = ev(*p, *self._biases(), toks, mask)
+        assert float(msum) == B * CFG.seq_len
+        assert ce_sum.shape == ()
+        assert seq_ll.shape == (B,)
+        np.testing.assert_allclose(float(ce_sum), -float(seq_ll.sum()), rtol=1e-5)
+
+    def test_fwd_shapes(self):
+        p = flat_params(CFG)
+        fw = jax.jit(steps.make_fwd(CFG))
+        toks = make_batch(np.random.default_rng(7))[:, :-1]
+        (logits,) = fw(*p, *self._biases(), toks)
+        assert logits.shape == (B, CFG.seq_len, CFG.vocab)
+
+    def test_omni_fold_identity(self):
+        """The Rust serving path folds OmniQuant's Eq. 4 into plain weights:
+        W_eff = diag(1/s)·Q(W⊙s),  bias = δ·(W − W_eff).
+        forward(sliced r, aux) must equal forward(fp, W→W_eff, biases)."""
+        from compile.kernels import quant as Q
+
+        rng = np.random.default_rng(9)
+        params = M.init_params(CFG, 0)
+        aux = M.init_aux(CFG)
+        # perturb aux away from the identity init
+        for k in aux:
+            aux[k] = aux[k] + jnp.asarray(
+                rng.uniform(-0.3, 0.3, aux[k].shape).astype(np.float32)
+            )
+        toks = make_batch(np.random.default_rng(0))[:, :-1]
+        r = 4
+        want, _ = M.forward(CFG, params, toks, M.QuantSpec("sliced", r), aux)
+
+        folded = dict(params)
+        biases = {}
+        for name in CFG.quantized_names():
+            w = params[name]
+            gamma = jax.nn.sigmoid(aux[name + ".gamma_raw"])
+            beta = jax.nn.sigmoid(aux[name + ".beta_raw"])
+            delta = aux[name + ".delta"]
+            s = jnp.exp(aux[name + ".s_raw"])
+            wq = Q.fake_quant_sliced(w * s[:, None], 8, r, gamma, beta)
+            w_eff = wq / s[:, None]
+            folded[name] = w_eff
+            biases[name] = delta @ (w - w_eff)
+        got, _ = M.forward(CFG, folded, toks, M.FP, biases=biases)
+        np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-3, atol=1e-3)
+
+    def test_init_deterministic(self):
+        ini = jax.jit(steps.make_init(CFG))
+        a = ini(jnp.int32(7))
+        b = ini(jnp.int32(7))
+        c = ini(jnp.int32(8))
+        for x, y in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+        assert any(float(jnp.abs(x - y).sum()) > 0 for x, y in zip(a, c))

@@ -1,0 +1,93 @@
+//! L3 quantization hot paths: pack/unpack, slicing, dequantization — the
+//! per-request work of elastic serving.  Perf targets in DESIGN.md §Perf
+//! (slicing ≥ 1 GB/s of codes on this single-core testbed).
+//!
+//! Run: `cargo bench --bench quant_hot_paths`
+
+use matquant::data::Rng;
+use matquant::model::registry::QuantizedTensor;
+use matquant::model::Tensor;
+use matquant::quant::{self, PackedTensor};
+use matquant::util::bench::{bench, default_budget};
+
+fn main() {
+    let n = 1 << 20; // 1M weights ≈ one large FFN matrix
+    let d_out = 1024;
+    let d_in = n / d_out;
+    let mut rng = Rng::new(1);
+    let w: Vec<f32> = (0..n).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let budget = default_budget();
+
+    // ---- scales + quantize ----
+    let r = bench("minmax_scales 1M", budget, || {
+        std::hint::black_box(quant::minmax_scales(&w, d_in, d_out, 8));
+    });
+    println!("{} | {:.2} Melem/s", r.report(), r.throughput(n as f64) / 1e6);
+
+    let scales = quant::minmax_scales(&w, d_in, d_out, 8);
+    let r = bench("quantize 1M -> int8 codes", budget, || {
+        std::hint::black_box(quant::quantize(&w, d_out, &scales));
+    });
+    println!("{} | {:.2} Melem/s", r.report(), r.throughput(n as f64) / 1e6);
+
+    let codes = quant::quantize(&w, d_out, &scales);
+
+    // ---- slicing (the serve-time Matryoshka op) ----
+    let mut out = vec![0.0f32; n];
+    for bits in [2u32, 4, 6] {
+        let r = bench(&format!("slice 1M int8->int{bits}"), budget, || {
+            quant::slice_codes_into(&codes, 8, bits, false, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!(
+            "{} | {:.2} GB/s of codes",
+            r.report(),
+            r.throughput(n as f64 * 4.0) / 1e9
+        );
+    }
+
+    // ---- dequantize ----
+    let r = bench("dequantize 1M", budget, || {
+        quant::dequantize_into(&codes, d_out, &scales, &mut out);
+        std::hint::black_box(&out);
+    });
+    println!(
+        "{} | {:.2} GB/s out",
+        r.report(),
+        r.throughput(n as f64 * 4.0) / 1e9
+    );
+
+    // ---- bit packing ----
+    for bits in [2u32, 4, 8] {
+        let ids: Vec<f32> = codes
+            .iter()
+            .map(|&c| quant::slice_code(c, 8, bits, false) / (1u32 << (8 - bits)) as f32)
+            .collect();
+        let r = bench(&format!("pack 1M @ {bits}b"), budget, || {
+            std::hint::black_box(PackedTensor::pack(&ids, bits));
+        });
+        println!("{} | {:.2} Melem/s", r.report(), r.throughput(n as f64) / 1e6);
+        let packed = PackedTensor::pack(&ids, bits);
+        let r = bench(&format!("unpack 1M @ {bits}b"), budget, || {
+            packed.unpack_into(&mut out);
+            std::hint::black_box(&out);
+        });
+        println!("{} | {:.2} Melem/s", r.report(), r.throughput(n as f64) / 1e6);
+    }
+
+    // ---- full materialize path (registry → servable weights) ----
+    let fp = Tensor::new(vec![d_in, d_out], w.clone()).unwrap();
+    let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+    for bits in [2u32, 4, 8] {
+        let r = bench(&format!("materialize 1M @ int{bits}"), budget, || {
+            std::hint::black_box(qt.materialize(bits, false).unwrap());
+        });
+        println!("{} | {:.2} Melem/s", r.report(), r.throughput(n as f64) / 1e6);
+    }
+
+    // ---- histogram (fig 1c machinery) ----
+    let r = bench("code_histogram 1M @ int8", budget, || {
+        std::hint::black_box(quant::code_histogram(&codes, 8));
+    });
+    println!("{} | {:.2} Melem/s", r.report(), r.throughput(n as f64) / 1e6);
+}

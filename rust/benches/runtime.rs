@@ -1,0 +1,116 @@
+//! PJRT runtime benchmarks: executable latency for fwd / eval / train-step
+//! artifacts (the L3-visible cost of every L2 graph).
+//!
+//! Run: `cargo bench --bench runtime` (requires `make artifacts`).
+
+use matquant::coordinator::trainer::init_params;
+use matquant::model::{PrecisionAssignment, QuantizedModel, Tensor};
+use matquant::runtime::{lit_i32, lit_scalar_i32, lit_tensor, Engine};
+use matquant::util::bench::{bench, default_budget};
+
+fn main() {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::new(&dir).unwrap();
+    let preset = "tiny";
+    let info = engine.manifest().preset(preset).unwrap().clone();
+    let seq = info.model.seq_len;
+    let t1 = seq + 1;
+    let b = info.train_batch;
+
+    let params = init_params(&engine, preset, 1).unwrap();
+    let model = QuantizedModel::build(&info, &params, None).unwrap();
+    let (weights, biases) = model.materialize(&PrecisionAssignment::uniform(4)).unwrap();
+
+    // ---- fwd_b{B} ----
+    for bsz in [1usize, 4, 8] {
+        if !info.fwd_batch_sizes.contains(&bsz) {
+            continue;
+        }
+        let tokens = vec![1i32; bsz * seq];
+        let name = format!("fwd_b{bsz}");
+        engine.warmup(preset, &[&name]).unwrap();
+        let r = bench(&format!("pjrt {name}"), default_budget(), || {
+            let mut args: Vec<xla::Literal> = Vec::new();
+            for w in &weights {
+                args.push(lit_tensor(w).unwrap());
+            }
+            for bi in &biases {
+                args.push(lit_tensor(bi).unwrap());
+            }
+            args.push(lit_i32(&[bsz, seq], &tokens).unwrap());
+            engine.run(preset, &name, &args).unwrap();
+        });
+        println!(
+            "{} | {:.1} tokens/s",
+            r.report(),
+            r.throughput((bsz * seq) as f64)
+        );
+    }
+
+    // ---- eval ----
+    {
+        let tokens = vec![1i32; b * t1];
+        let mask = Tensor::new(vec![b, seq], vec![1.0; b * seq]).unwrap();
+        engine.warmup(preset, &["eval"]).unwrap();
+        let r = bench("pjrt eval", default_budget(), || {
+            let mut args: Vec<xla::Literal> = Vec::new();
+            for w in &weights {
+                args.push(lit_tensor(w).unwrap());
+            }
+            for bi in &biases {
+                args.push(lit_tensor(bi).unwrap());
+            }
+            args.push(lit_i32(&[b, t1], &tokens).unwrap());
+            args.push(lit_tensor(&mask).unwrap());
+            engine.run(preset, "eval", &args).unwrap();
+        });
+        println!("{}", r.report());
+    }
+
+    // ---- train steps ----
+    for name in ["train_qat_direct_b8", "train_qat_mat"] {
+        let tokens = vec![1i32; b * t1];
+        engine.warmup(preset, &[name]).unwrap();
+        let pflat: Vec<&Tensor> = info
+            .params
+            .iter()
+            .map(|(n, _)| params.get(n).unwrap())
+            .collect();
+        let zeros: Vec<Tensor> = pflat
+            .iter()
+            .map(|t| Tensor::zeros(t.shape.clone()))
+            .collect();
+        let r = bench(&format!("pjrt {name}"), default_budget(), || {
+            let mut args: Vec<xla::Literal> = Vec::new();
+            for p in &pflat {
+                args.push(lit_tensor(p).unwrap());
+            }
+            for z in zeros.iter().chain(zeros.iter()) {
+                args.push(lit_tensor(z).unwrap());
+            }
+            args.push(lit_scalar_i32(0));
+            args.push(lit_i32(&[b, t1], &tokens).unwrap());
+            if name.ends_with("mat") {
+                args.push(
+                    lit_tensor(&Tensor::new(vec![3], vec![0.1, 0.1, 1.0]).unwrap()).unwrap(),
+                );
+                args.push(lit_tensor(&Tensor::new(vec![3], vec![0.0; 3]).unwrap()).unwrap());
+            }
+            engine.run(preset, name, &args).unwrap();
+        });
+        println!("{}", r.report());
+    }
+
+    let st = engine.stats.borrow();
+    println!(
+        "engine: {} compiles ({:.0} ms total), {} executions ({:.1} ms mean)",
+        st.compiles,
+        st.compile_ms,
+        st.executions,
+        st.execute_ms / st.executions.max(1) as f64
+    );
+}

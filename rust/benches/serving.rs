@@ -1,0 +1,102 @@
+//! Serving-stack benchmarks: batcher mechanics (pure L3 overhead — must be
+//! negligible vs PJRT compute) and end-to-end mixed-precision throughput.
+//!
+//! Run: `cargo bench --bench serving` (requires `make artifacts`).
+
+use std::time::Instant;
+
+use matquant::coordinator::trainer::init_params;
+use matquant::data::{Corpus, Rng};
+use matquant::model::{manifest::default_artifacts_dir, QuantizedModel};
+use matquant::runtime::Engine;
+use matquant::serve::{DynamicBatcher, PrecisionReq, Request, Server, ServerConfig};
+use matquant::util::bench::{bench, default_budget};
+
+fn main() {
+    // ---- pure batcher overhead (no PJRT) ---------------------------------
+    let budget = default_budget();
+    let mut rng = Rng::new(1);
+    let prompts: Vec<Vec<i32>> = (0..256)
+        .map(|_| (0..32).map(|_| rng.below(256) as i32).collect())
+        .collect();
+    let r = bench("batcher push+pop 256 reqs", budget, || {
+        let mut b = DynamicBatcher::new(vec![1, 2, 4, 8, 16], 0.0);
+        for (i, p) in prompts.iter().enumerate() {
+            b.push(Request {
+                id: i as u64,
+                prompt: p.clone(),
+                precision: PrecisionReq::Bits([2, 4, 8][i % 3]),
+            });
+        }
+        let now = Instant::now();
+        while let Some(batch) = b.pop_ready(now) {
+            std::hint::black_box(batch);
+        }
+    });
+    println!(
+        "{} | {:.0} ns/request",
+        r.report(),
+        r.mean_ns / 256.0
+    );
+
+    // ---- end-to-end serving throughput ------------------------------------
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping e2e serving: run `make artifacts`");
+        return;
+    }
+    let preset = "tiny";
+    let engine = Engine::new(&dir).unwrap();
+    let info = engine.manifest().preset(preset).unwrap().clone();
+    let model = QuantizedModel::build(&info, &init_params(&engine, preset, 1).unwrap(), None).unwrap();
+    let seq = info.model.seq_len;
+    drop(engine);
+    let server = Server::start(
+        default_artifacts_dir().canonicalize().unwrap_or(dir),
+        model,
+        ServerConfig {
+            preset: preset.into(),
+            max_wait_ms: 1.0,
+            warm_bits: vec![8, 4, 2],
+        },
+    )
+    .unwrap();
+
+    let corpus = Corpus::new(3);
+    let mut rng = Rng::new(3);
+    // warm the executables with one request per precision
+    for (i, bits) in [2u32, 4, 8].iter().enumerate() {
+        let _ = server
+            .infer(Request {
+                id: 1_000_000 + i as u64,
+                prompt: corpus.sequence(&mut rng, seq.min(32)),
+                precision: PrecisionReq::Bits(*bits),
+            })
+            .unwrap();
+    }
+
+    for &n in &[32usize, 128] {
+        let t0 = Instant::now();
+        let rxs: Vec<_> = (0..n)
+            .map(|id| {
+                server
+                    .submit(Request {
+                        id: id as u64,
+                        prompt: corpus.sequence(&mut rng, seq.min(32)),
+                        precision: PrecisionReq::Bits([2, 4, 8][id % 3]),
+                    })
+                    .unwrap()
+            })
+            .collect();
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        let dt = t0.elapsed().as_secs_f64();
+        println!(
+            "e2e mixed-precision: {n} requests in {dt:.3}s = {:.1} req/s",
+            n as f64 / dt
+        );
+    }
+    println!("{}", server.metrics_report().unwrap());
+    server.shutdown().unwrap();
+}

@@ -1,0 +1,191 @@
+//! Experiment configuration: which base algorithm, which objective, which
+//! λ / co-distillation weights — one `TrainSpec` per table row.
+
+use crate::util::Json;
+
+/// Base quantization algorithm (paper §3.1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Mode {
+    /// Quantization-Aware Training: updates model weights, CE loss (Eq. 2).
+    Qat,
+    /// OmniQuant: updates only auxiliary γ/β/δ/s, layer-wise reconstruction
+    /// loss (Eq. 5).
+    Omni,
+}
+
+impl Mode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Mode::Qat => "qat",
+            Mode::Omni => "omni",
+        }
+    }
+}
+
+/// Training objective (paper §3.2 / §5).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Objective {
+    /// MatQuant joint loss over R = (8, 4, 2) with λ weights (Eq. 7), plus
+    /// optional co-distillation weights (Table 4: distill r-bit from int8)
+    /// and the Extra-Precision slicing variant (Eq. 8, Table 7).
+    ///
+    /// Single-Precision MatQuant (Table 5) is `lambdas = [0, 0, 1]`.
+    Matquant {
+        lambdas: [f32; 3],
+        wdist: [f32; 3],
+        extra_precision: bool,
+    },
+    /// Explicitly-trained per-bit baseline (the paper's "Baseline" rows).
+    Direct { bits: u32 },
+    /// Full-precision pretraining — produces the base checkpoint the other
+    /// objectives fine-tune / calibrate (the paper's Gemma/Mistral stand-in).
+    Fp,
+}
+
+impl Objective {
+    pub fn matquant(lambdas: [f32; 3]) -> Self {
+        Objective::Matquant {
+            lambdas,
+            wdist: [0.0; 3],
+            extra_precision: false,
+        }
+    }
+
+    /// The paper's default λ = (0.1, 0.1, 1.0) (Appendix B).
+    pub fn matquant_default() -> Self {
+        Self::matquant([0.1, 0.1, 1.0])
+    }
+
+    /// Single-Precision MatQuant: loss only on the sliced int2 model.
+    pub fn single_precision() -> Self {
+        Self::matquant([0.0, 0.0, 1.0])
+    }
+
+    /// Artifact name suffix this objective executes.
+    pub fn artifact(&self, mode: Mode) -> String {
+        match self {
+            Objective::Matquant {
+                extra_precision, ..
+            } => format!(
+                "train_{}_mat{}",
+                mode.as_str(),
+                if *extra_precision { "_ep" } else { "" }
+            ),
+            Objective::Direct { bits } => format!("train_{}_direct_b{}", mode.as_str(), bits),
+            Objective::Fp => "train_fp".to_string(),
+        }
+    }
+}
+
+/// One training run.
+#[derive(Debug, Clone)]
+pub struct TrainSpec {
+    pub preset: String,
+    pub mode: Mode,
+    pub objective: Objective,
+    pub steps: u64,
+    /// Seed for init + data stream.
+    pub seed: u64,
+    /// Log losses every `log_every` steps (0 = never).
+    pub log_every: u64,
+    /// Start from a pretrained checkpoint instead of fresh init (the
+    /// paper's setting: QAT fine-tunes, OmniQuant calibrates, a base model).
+    pub init_ckpt: Option<std::path::PathBuf>,
+}
+
+impl TrainSpec {
+    pub fn new(preset: &str, mode: Mode, objective: Objective, steps: u64) -> Self {
+        TrainSpec {
+            preset: preset.to_string(),
+            mode,
+            objective,
+            steps,
+            seed: 42,
+            log_every: 0,
+            init_ckpt: None,
+        }
+    }
+
+    /// Compact run label for logs / checkpoints.
+    pub fn label(&self) -> String {
+        let obj = match &self.objective {
+            Objective::Matquant {
+                lambdas,
+                wdist,
+                extra_precision,
+            } => {
+                let mut s = format!("mat[{},{},{}]", lambdas[0], lambdas[1], lambdas[2]);
+                if wdist.iter().any(|&w| w > 0.0) {
+                    s += &format!("+dist[{},{},{}]", wdist[0], wdist[1], wdist[2]);
+                }
+                if *extra_precision {
+                    s += "+ep";
+                }
+                s
+            }
+            Objective::Direct { bits } => format!("direct_b{bits}"),
+            Objective::Fp => "fp".to_string(),
+        };
+        let pre = if self.init_ckpt.is_some() { "-pre" } else { "" };
+        format!(
+            "{}-{}-{}-s{}{}",
+            self.preset,
+            self.mode.as_str(),
+            obj,
+            self.steps,
+            pre
+        )
+    }
+
+    pub fn meta_json(&self) -> String {
+        Json::obj(vec![
+            ("preset", Json::str(&self.preset)),
+            ("mode", Json::str(self.mode.as_str())),
+            ("label", Json::str(self.label())),
+            ("steps", Json::Num(self.steps as f64)),
+            ("seed", Json::Num(self.seed as f64)),
+        ])
+        .to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn artifact_names() {
+        assert_eq!(
+            Objective::matquant_default().artifact(Mode::Qat),
+            "train_qat_mat"
+        );
+        assert_eq!(
+            Objective::Matquant {
+                lambdas: [1.0; 3],
+                wdist: [0.0; 3],
+                extra_precision: true
+            }
+            .artifact(Mode::Omni),
+            "train_omni_mat_ep"
+        );
+        assert_eq!(
+            Objective::Direct { bits: 3 }.artifact(Mode::Qat),
+            "train_qat_direct_b3"
+        );
+    }
+
+    #[test]
+    fn labels_distinguish_runs(){
+        let a = TrainSpec::new("tiny", Mode::Qat, Objective::matquant_default(), 10).label();
+        let b = TrainSpec::new("tiny", Mode::Qat, Objective::single_precision(), 10).label();
+        let c = TrainSpec::new("tiny", Mode::Omni, Objective::Direct { bits: 2 }, 10).label();
+        assert_ne!(a, b);
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn meta_is_valid_json() {
+        let spec = TrainSpec::new("tiny", Mode::Qat, Objective::matquant_default(), 5);
+        assert!(Json::parse(&spec.meta_json()).is_ok());
+    }
+}

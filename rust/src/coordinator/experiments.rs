@@ -1,0 +1,616 @@
+//! Experiment runners — one function per paper table/figure (DESIGN.md
+//! experiment index).  Training runs are cached as checkpoints under
+//! `--cache-dir` keyed by the spec label, so tables that share models
+//! (e.g. the MatQuant-OmniQuant model appears in T1, T7, Fig 1c, Fig 2)
+//! train once.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context};
+
+use super::config::{Mode, Objective, TrainSpec};
+use super::trainer::train;
+use crate::eval::tables::{pct, pplx, TableBuilder};
+use crate::eval::{task_suite, Evaluator};
+use crate::mixnmatch::strategy::{assignments_for, compositions, Strategy, STRATEGIES};
+use crate::mixnmatch::{pareto_frontier, Point};
+use crate::model::{Checkpoint, PrecisionAssignment, QuantizedModel, Tensor};
+use crate::quant;
+use crate::runtime::Engine;
+use crate::util::cli::Args;
+use crate::Result;
+
+/// Shared experiment context.
+pub struct ExperimentCtx<'e> {
+    pub engine: &'e Engine,
+    pub preset: String,
+    pub steps: u64,
+    /// FP pretraining steps for the shared base checkpoint (the
+    /// Gemma/Mistral stand-in all methods fine-tune / calibrate).
+    pub pretrain_steps: u64,
+    pub seed: u64,
+    pub probes: usize,
+    pub eval_batches: usize,
+    pub cache_dir: PathBuf,
+}
+
+/// A trained + registered model ready to evaluate at any precision.
+pub struct TrainedModel {
+    pub model: QuantizedModel,
+    pub final_losses: Vec<f32>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct EvalResult {
+    pub task_avg: f64,
+    pub log_pplx: f64,
+    pub bits_per_param: f64,
+}
+
+impl<'e> ExperimentCtx<'e> {
+    pub fn from_args(engine: &'e Engine, args: &Args) -> Result<Self> {
+        let steps = args.get_u64("steps", 120)?;
+        Ok(ExperimentCtx {
+            engine,
+            preset: args.get_or("preset", "tiny").to_string(),
+            steps,
+            pretrain_steps: args.get_u64("pretrain-steps", steps * 4)?,
+            seed: args.get_u64("seed", 42)?,
+            probes: args.get_usize("probes", 25)?,
+            eval_batches: args.get_usize("eval-batches", 6)?,
+            cache_dir: PathBuf::from(args.get_or("cache-dir", "checkpoints/cache")),
+        })
+    }
+
+    fn spec(&self, mode: Mode, objective: Objective) -> TrainSpec {
+        let mut s = TrainSpec::new(&self.preset, mode, objective, self.steps);
+        s.seed = self.seed;
+        s
+    }
+
+    /// The shared FP base checkpoint (trained once, cached).
+    pub fn pretrained_ckpt(&self) -> Result<PathBuf> {
+        let mut spec = TrainSpec::new(&self.preset, Mode::Qat, Objective::Fp, self.pretrain_steps);
+        spec.seed = self.seed;
+        let path = self.cache_dir.join(format!("{}.mqck", spec.label()));
+        if !path.exists() {
+            eprintln!("[experiment] pretraining base model {}", spec.label());
+            let out = train(self.engine, &spec).context("fp pretraining")?;
+            let mut ck = Checkpoint::new(spec.meta_json());
+            for (n, t) in &out.params {
+                ck.insert(n.clone(), t.clone());
+            }
+            ck.save(&path)?;
+            eprintln!(
+                "[experiment] base model loss {:.4} -> {:.4}",
+                out.loss_history[0][0],
+                out.tail_loss(0, 5)
+            );
+        }
+        Ok(path)
+    }
+
+    /// Train (or load from cache) and build the quantized registry.  Every
+    /// run starts from the shared pretrained base (paper setting).
+    pub fn trained(&self, mode: Mode, objective: Objective) -> Result<TrainedModel> {
+        let mut spec = self.spec(mode, objective);
+        spec.init_ckpt = Some(self.pretrained_ckpt()?);
+        let path = self.cache_dir.join(format!("{}.mqck", spec.label()));
+        let preset_info = self.engine.manifest().preset(&self.preset)?;
+        let (params, aux, final_losses) = if path.exists() {
+            let ck = Checkpoint::load(&path)?;
+            let mut params = BTreeMap::new();
+            let mut aux = BTreeMap::new();
+            let mut losses = Vec::new();
+            for (name, t) in &ck.tensors {
+                if let Some(a) = name.strip_prefix("aux:") {
+                    aux.insert(a.to_string(), t.clone());
+                } else if name == "final_losses" {
+                    losses = t.data.clone();
+                } else {
+                    params.insert(name.clone(), t.clone());
+                }
+            }
+            (params, aux, losses)
+        } else {
+            eprintln!("[experiment] training {}", spec.label());
+            let out =
+                train(self.engine, &spec).with_context(|| format!("training {}", spec.label()))?;
+            let mut ck = Checkpoint::new(spec.meta_json());
+            for (n, t) in &out.params {
+                ck.insert(n.clone(), t.clone());
+            }
+            if let Some(aux) = &out.aux {
+                for (n, t) in aux {
+                    ck.insert(format!("aux:{n}"), t.clone());
+                }
+            }
+            let losses = out.loss_history.last().cloned().unwrap_or_default();
+            ck.insert(
+                "final_losses",
+                Tensor::new(vec![losses.len()], losses.clone())?,
+            );
+            ck.save(&path)?;
+            (out.params, out.aux.unwrap_or_default(), losses)
+        };
+        let model = QuantizedModel::build(
+            preset_info,
+            &params,
+            if aux.is_empty() { None } else { Some(&aux) },
+        )?;
+        Ok(TrainedModel {
+            model,
+            final_losses,
+        })
+    }
+
+    /// Evaluate a model under a precision assignment.
+    pub fn eval_assign(
+        &self,
+        model: &QuantizedModel,
+        assign: &PrecisionAssignment,
+    ) -> Result<EvalResult> {
+        let ev = Evaluator::new(self.engine, &self.preset)?;
+        let (weights, biases) = model.materialize(assign)?;
+        let session = ev.session(&weights, &biases)?;
+        let log_pplx = ev.log_perplexity(
+            &session,
+            self.seed,
+            self.seed ^ 0xEAA1,
+            self.eval_batches,
+        )?;
+        let report = task_suite(
+            &ev,
+            &weights,
+            &biases,
+            self.seed,
+            self.seed ^ 0x9999,
+            self.probes,
+        )?;
+        Ok(EvalResult {
+            task_avg: report.avg,
+            log_pplx,
+            bits_per_param: model.bits_per_param(assign),
+        })
+    }
+
+    fn uniform(&self, bits: u32) -> PrecisionAssignment {
+        PrecisionAssignment::uniform(bits)
+    }
+
+    fn uniform_ep(&self, bits: u32) -> PrecisionAssignment {
+        PrecisionAssignment::Uniform {
+            bits,
+            extra_precision: true,
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Tables
+    // ------------------------------------------------------------------
+
+    pub fn run_table(&self, which: &str) -> Result<String> {
+        match which {
+            "1" => self.table_main(Mode::Omni, "Table 1 | MatQuant with OmniQuant"),
+            "2" => self.table_main(Mode::Qat, "Table 2 | MatQuant with QAT"),
+            "3" => self.table_lambda(),
+            "4" => self.table_codistill(),
+            "5" => self.table_single_precision(),
+            "6" => self.table_attn(),
+            "7" => self.table_extra_precision(),
+            "8" => self.table_ep_codistill(),
+            other => bail!("unknown table {other:?} (1-8)"),
+        }
+    }
+
+    /// Tables 1 & 2: Baseline vs MatQuant vs Sliced-int8 across int8/4/2
+    /// plus interpolated int6/int3.
+    fn table_main(&self, mode: Mode, title: &str) -> Result<String> {
+        let mat = self.trained(mode, Objective::matquant_default())?;
+        let base8 = self.trained(mode, Objective::Direct { bits: 8 })?;
+        let mut table = TableBuilder::new(
+            title,
+            &["Data type", "Method", "Task Avg.", "log pplx", "bits/param"],
+        );
+        let fp = self.eval_assign(&mat.model, &PrecisionAssignment::Fp)?;
+        table.row(&[
+            "bfloat16".into(),
+            "".into(),
+            pct(fp.task_avg),
+            pplx(fp.log_pplx),
+            "32".into(),
+        ]);
+        for &bits in &[8u32, 4, 2, 6, 3] {
+            if bits != 8 {
+                let sliced = self.eval_assign(&base8.model, &self.uniform(bits))?;
+                table.row(&[
+                    format!("int{bits}"),
+                    "Sliced int8".into(),
+                    pct(sliced.task_avg),
+                    pplx(sliced.log_pplx),
+                    format!("{bits}"),
+                ]);
+            }
+            let baseline = self.trained(mode, Objective::Direct { bits })?;
+            let b = self.eval_assign(&baseline.model, &self.uniform(bits))?;
+            table.row(&[
+                format!("int{bits}"),
+                "Baseline".into(),
+                pct(b.task_avg),
+                pplx(b.log_pplx),
+                format!("{bits}"),
+            ]);
+            let m = self.eval_assign(&mat.model, &self.uniform(bits))?;
+            table.row(&[
+                format!("int{bits}"),
+                "MatQuant".into(),
+                pct(m.task_avg),
+                pplx(m.log_pplx),
+                format!("{bits}"),
+            ]);
+        }
+        Ok(table.render())
+    }
+
+    /// Table 3: λ re-weighting ablation (OmniQuant base).
+    fn table_lambda(&self) -> Result<String> {
+        let mut table = TableBuilder::new(
+            "Table 3 | λ re-weighting (OmniQuant base)",
+            &["Data type", "Weightings", "Task Avg.", "log pplx"],
+        );
+        let weightings: [[f32; 3]; 4] = [
+            [0.1, 0.1, 1.0],
+            [0.2, 0.2, 1.0],
+            [0.3, 0.3, 1.0],
+            [0.4, 0.4, 1.0],
+        ];
+        let mut models = Vec::new();
+        for w in weightings {
+            models.push((w, self.trained(Mode::Omni, Objective::matquant(w))?));
+        }
+        for &bits in &[8u32, 4, 2] {
+            for (w, m) in &models {
+                let r = self.eval_assign(&m.model, &self.uniform(bits))?;
+                table.row(&[
+                    format!("int{bits}"),
+                    format!("({}, {}, {})", w[0], w[1], w[2]),
+                    pct(r.task_avg),
+                    pplx(r.log_pplx),
+                ]);
+            }
+        }
+        Ok(table.render())
+    }
+
+    /// Table 4: co-distillation configs, OmniQuant + QAT.
+    fn table_codistill(&self) -> Result<String> {
+        let configs: [(&str, [f32; 3], [f32; 3]); 4] = [
+            ("[8, 4, 2]", [0.1, 0.1, 1.0], [0.0, 0.0, 0.0]),
+            ("[8, 4, 8->2]", [0.1, 0.1, 0.0], [0.0, 0.0, 1.0]),
+            ("[8, 4, 2, 8->2]", [0.1, 0.1, 1.0], [0.0, 0.0, 1.0]),
+            ("[8, 4, 2, 8->4;2]", [0.1, 0.1, 1.0], [0.0, 1.0, 1.0]),
+        ];
+        let mut table = TableBuilder::new(
+            "Table 4 | Co-distillation (int8 teacher)",
+            &["Base", "Data type", "Config", "Task Avg.", "log pplx"],
+        );
+        for mode in [Mode::Omni, Mode::Qat] {
+            for (label, lam, wd) in &configs {
+                let m = self.trained(
+                    mode,
+                    Objective::Matquant {
+                        lambdas: *lam,
+                        wdist: *wd,
+                        extra_precision: false,
+                    },
+                )?;
+                for &bits in &[8u32, 4, 2] {
+                    let r = self.eval_assign(&m.model, &self.uniform(bits))?;
+                    table.row(&[
+                        mode.as_str().into(),
+                        format!("int{bits}"),
+                        label.to_string(),
+                        pct(r.task_avg),
+                        pplx(r.log_pplx),
+                    ]);
+                }
+            }
+        }
+        Ok(table.render())
+    }
+
+    /// Table 5: Single-Precision MatQuant at int2.
+    fn table_single_precision(&self) -> Result<String> {
+        let mut table = TableBuilder::new(
+            "Table 5 | Single-Precision MatQuant (int2)",
+            &["Base", "Method", "Task Avg.", "log pplx"],
+        );
+        for mode in [Mode::Omni, Mode::Qat] {
+            let base = self.trained(mode, Objective::Direct { bits: 2 })?;
+            let sp = self.trained(mode, Objective::single_precision())?;
+            let mat = self.trained(mode, Objective::matquant_default())?;
+            for (name, tm) in [("Baseline", &base), ("S.P. MatQuant", &sp), ("MatQuant", &mat)] {
+                let r = self.eval_assign(&tm.model, &self.uniform(2))?;
+                table.row(&[
+                    mode.as_str().into(),
+                    name.into(),
+                    pct(r.task_avg),
+                    pplx(r.log_pplx),
+                ]);
+            }
+        }
+        Ok(table.render())
+    }
+
+    /// Table 6: FFN + Attention quantization (QAT, `tiny_attn` preset).
+    fn table_attn(&self) -> Result<String> {
+        let sub = ExperimentCtx {
+            engine: self.engine,
+            preset: "tiny_attn".into(),
+            steps: self.steps,
+            pretrain_steps: self.pretrain_steps,
+            seed: self.seed,
+            probes: self.probes,
+            eval_batches: self.eval_batches,
+            cache_dir: self.cache_dir.clone(),
+        };
+        let mat = sub.trained(Mode::Qat, Objective::matquant_default())?;
+        let sp = sub.trained(Mode::Qat, Objective::single_precision())?;
+        let base8 = sub.trained(Mode::Qat, Objective::Direct { bits: 8 })?;
+        let mut table = TableBuilder::new(
+            "Table 6 | FFN + Attention quantization (QAT)",
+            &["Data type", "Method", "Task Avg.", "log pplx"],
+        );
+        let fp = sub.eval_assign(&mat.model, &PrecisionAssignment::Fp)?;
+        table.row(&[
+            "bfloat16".into(),
+            "".into(),
+            pct(fp.task_avg),
+            pplx(fp.log_pplx),
+        ]);
+        for &bits in &[8u32, 4, 2, 6, 3] {
+            if bits != 8 {
+                let sliced = sub.eval_assign(&base8.model, &sub.uniform(bits))?;
+                table.row(&[
+                    format!("int{bits}"),
+                    "Sliced int8".into(),
+                    pct(sliced.task_avg),
+                    pplx(sliced.log_pplx),
+                ]);
+            }
+            // the paper reports baseline int2/int3 as unstable ("-"); we
+            // train them anyway and print whatever happens
+            match sub
+                .trained(Mode::Qat, Objective::Direct { bits })
+                .and_then(|m| sub.eval_assign(&m.model, &sub.uniform(bits)))
+            {
+                Ok(b) if b.log_pplx.is_finite() => {
+                    table.row(&[
+                        format!("int{bits}"),
+                        "Baseline".into(),
+                        pct(b.task_avg),
+                        pplx(b.log_pplx),
+                    ]);
+                }
+                _ => {
+                    table.row(&[
+                        format!("int{bits}"),
+                        "Baseline".into(),
+                        "-".into(),
+                        "-".into(),
+                    ]);
+                }
+            }
+            if bits == 2 || bits == 3 {
+                let r = sub.eval_assign(&sp.model, &sub.uniform(bits))?;
+                table.row(&[
+                    format!("int{bits}"),
+                    "S.P. MatQuant".into(),
+                    pct(r.task_avg),
+                    pplx(r.log_pplx),
+                ]);
+            }
+            let m = sub.eval_assign(&mat.model, &sub.uniform(bits))?;
+            table.row(&[
+                format!("int{bits}"),
+                "MatQuant".into(),
+                pct(m.task_avg),
+                pplx(m.log_pplx),
+            ]);
+        }
+        Ok(table.render())
+    }
+
+    /// Table 7: Extra-Precision MatQuant (Eq. 8), OmniQuant base.
+    fn table_extra_precision(&self) -> Result<String> {
+        let mat = self.trained(Mode::Omni, Objective::matquant_default())?;
+        let ep = self.trained(
+            Mode::Omni,
+            Objective::Matquant {
+                lambdas: [1.0, 1.0, 1.0], // paper Appendix B: EP uses (1,1,1)
+                wdist: [0.0; 3],
+                extra_precision: true,
+            },
+        )?;
+        let mut table = TableBuilder::new(
+            "Table 7 | Extra-Precision MatQuant (OmniQuant)",
+            &["Avg. Bits", "Method", "Task Avg.", "log pplx"],
+        );
+        for &bits in &[8u32, 4, 2, 6, 3] {
+            let rm = self.eval_assign(&mat.model, &self.uniform(bits))?;
+            table.row(&[
+                format!("{bits}"),
+                "MatQuant".into(),
+                pct(rm.task_avg),
+                pplx(rm.log_pplx),
+            ]);
+            let re = self.eval_assign(&ep.model, &self.uniform_ep(bits))?;
+            table.row(&[
+                format!("{:.3}", re.bits_per_param),
+                "Extra-Precision MatQuant".into(),
+                pct(re.task_avg),
+                pplx(re.log_pplx),
+            ]);
+        }
+        Ok(table.render())
+    }
+
+    /// Table 8 / Table 30: E.P. co-distillation + int2 method summary.
+    fn table_ep_codistill(&self) -> Result<String> {
+        let configs: [(&str, [f32; 3], [f32; 3]); 3] = [
+            ("[8, 4, 2]", [1.0, 1.0, 1.0], [0.0, 0.0, 0.0]),
+            ("[8, 4, 8->2]", [1.0, 1.0, 0.0], [0.0, 0.0, 1.0]),
+            ("[8, 4, 2, 8->2]", [1.0, 1.0, 1.0], [0.0, 0.0, 1.0]),
+        ];
+        let mut table = TableBuilder::new(
+            "Table 8 | Extra-Precision co-distillation (OmniQuant, int2-EP)",
+            &["Config", "Avg. Bits", "Task Avg.", "log pplx"],
+        );
+        for (label, lam, wd) in &configs {
+            let m = self.trained(
+                Mode::Omni,
+                Objective::Matquant {
+                    lambdas: *lam,
+                    wdist: *wd,
+                    extra_precision: true,
+                },
+            )?;
+            let r = self.eval_assign(&m.model, &self.uniform_ep(2))?;
+            table.row(&[
+                label.to_string(),
+                format!("{:.3}", r.bits_per_param),
+                pct(r.task_avg),
+                pplx(r.log_pplx),
+            ]);
+        }
+        // int2 method summary (Table 30 shape)
+        let base = self.trained(Mode::Omni, Objective::Direct { bits: 2 })?;
+        let sp = self.trained(Mode::Omni, Objective::single_precision())?;
+        let mat = self.trained(Mode::Omni, Objective::matquant_default())?;
+        for (name, tm) in [
+            ("OmniQuant baseline", &base),
+            ("S.P. MatQuant", &sp),
+            ("MatQuant", &mat),
+        ] {
+            let r = self.eval_assign(&tm.model, &self.uniform(2))?;
+            table.row(&[
+                name.to_string(),
+                format!("{:.3}", r.bits_per_param),
+                pct(r.task_avg),
+                pplx(r.log_pplx),
+            ]);
+        }
+        Ok(table.render())
+    }
+
+    // ------------------------------------------------------------------
+    // Figures
+    // ------------------------------------------------------------------
+
+    pub fn run_figure(&self, which: &str) -> Result<String> {
+        match which {
+            "1c" => self.fig_histograms(),
+            "2" => self.fig_mixnmatch(false),
+            "3" => self.fig_mixnmatch(true),
+            other => bail!("unknown figure {other:?} (1c, 2, 3)"),
+        }
+    }
+
+    /// Fig 1c: right-shifted quantized weight distributions.
+    fn fig_histograms(&self) -> Result<String> {
+        let mat = self.trained(Mode::Omni, Objective::matquant_default())?;
+        let base = self.trained(Mode::Omni, Objective::Direct { bits: 8 })?;
+        let mut out = String::from("### Fig 1c | Quantized weight distributions (OmniQuant)\n");
+        for bits in [2u32, 4] {
+            out += &format!("\n-- int{bits} codes --\n");
+            for (label, tm) in [("Baseline", &base), ("MatQuant", &mat)] {
+                let mut hist = vec![0u64; 1 << bits];
+                let mut mean_num = 0.0f64;
+                let mut total = 0u64;
+                for qt in tm.model.quantized.values() {
+                    let h = qt.sliced_histogram(bits);
+                    for (i, c) in h.iter().enumerate() {
+                        hist[i] += c;
+                        mean_num += (i as f64) * (*c as f64);
+                        total += c;
+                    }
+                }
+                let mean = mean_num / total.max(1) as f64;
+                out += &format!("{label} (mean bucket {mean:.3}):\n");
+                out += &quant::render_histogram(&hist, 40);
+            }
+        }
+        out += "\nExpected shape: MatQuant histograms shifted toward higher buckets.\n";
+        Ok(out)
+    }
+
+    /// Fig 2 (and Fig 3 with `ep`): Mix'n'Match accuracy-vs-bits sweep.
+    fn fig_mixnmatch(&self, ep: bool) -> Result<String> {
+        let mat = if ep {
+            self.trained(
+                Mode::Omni,
+                Objective::Matquant {
+                    lambdas: [1.0, 1.0, 1.0],
+                    wdist: [0.0; 3],
+                    extra_precision: true,
+                },
+            )?
+        } else {
+            self.trained(Mode::Omni, Objective::matquant_default())?
+        };
+        let layers = self.engine.manifest().preset(&self.preset)?.model.n_layers;
+        let comps = compositions(layers);
+        let mut points = Vec::new();
+        let mut strategy_mean: BTreeMap<&str, (f64, usize)> = BTreeMap::new();
+        for comp in &comps {
+            for s in STRATEGIES {
+                let bits = assignments_for(s, *comp, layers);
+                let assign = PrecisionAssignment::PerLayer {
+                    bits,
+                    extra_precision: ep,
+                };
+                let r = self.eval_assign(&mat.model, &assign)?;
+                points.push(Point {
+                    label: format!("{}-{comp:?}", s.name()),
+                    bits_per_param: r.bits_per_param,
+                    accuracy: r.task_avg,
+                    log_pplx: r.log_pplx,
+                });
+                let e = strategy_mean.entry(s.name()).or_insert((0.0, 0));
+                e.0 += r.task_avg;
+                e.1 += 1;
+                // skip redundant strategy repeats for homogeneous comps
+                if comp.0 == layers || comp.1 == layers || comp.2 == layers {
+                    break;
+                }
+            }
+        }
+        let frontier = pareto_frontier(&points);
+        let title = if ep { "Fig 3" } else { "Fig 2" };
+        let mut out = format!(
+            "### {title} | Mix'n'Match accuracy-vs-bits ({} points)\n",
+            points.len()
+        );
+        out += &crate::mixnmatch::pareto::render_curve(&points, 64, 16);
+        out += "\nPareto frontier:\n";
+        for p in &frontier {
+            out += &format!(
+                "  {:>28}  bits/param {:.3}  acc {:.2}%  log_pplx {:.3}\n",
+                p.label,
+                p.bits_per_param,
+                p.accuracy * 100.0,
+                p.log_pplx
+            );
+        }
+        out += "\nMean Task Avg. by strategy (expect pyramid highest):\n";
+        for (s, (sum, n)) in &strategy_mean {
+            out += &format!("  {s:>18}: {:.2}%\n", sum / *n as f64 * 100.0);
+        }
+        Ok(out)
+    }
+}
+
+// Strategy import is used in fig_mixnmatch via STRATEGIES.
+#[allow(unused_imports)]
+use Strategy as _StrategyUsed;

@@ -1,0 +1,9 @@
+//! The training orchestrator (L3): drives the AOT train-step executables,
+//! owns optimizer state between steps, runs the paper's experiment grid.
+
+pub mod config;
+pub mod experiments;
+pub mod trainer;
+
+pub use config::{Mode, Objective, TrainSpec};
+pub use trainer::{train, TrainOutcome};

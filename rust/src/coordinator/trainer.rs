@@ -1,0 +1,218 @@
+//! The train loop: host-side parameter/optimizer state, PJRT step calls.
+//!
+//! One step = assemble literals (params, [aux,] m, v, step, tokens[, λ,
+//! wdist]) → execute the train artifact → read back updated state + losses.
+//! The state round-trips through the host every step; at our model scale
+//! the PJRT compute dominates (see EXPERIMENTS.md §Perf for the numbers
+//! and the literal-reuse optimization).
+
+use std::collections::BTreeMap;
+
+use anyhow::{ensure, Context};
+
+use super::config::{Mode, Objective, TrainSpec};
+use crate::data::{Batcher, Corpus};
+use crate::model::{PresetInfo, Tensor};
+use crate::runtime::{lit_i32, lit_scalar_i32, lit_tensor, Engine};
+use crate::Result;
+
+/// Result of a training run.
+#[derive(Debug, Clone)]
+pub struct TrainOutcome {
+    /// Final model parameters (manifest order names).
+    pub params: BTreeMap<String, Tensor>,
+    /// Final OmniQuant aux (None for QAT).
+    pub aux: Option<BTreeMap<String, Tensor>>,
+    /// Per-step loss vectors (3 entries for MatQuant runs — int8/4/2 — or 1
+    /// for direct runs).
+    pub loss_history: Vec<Vec<f32>>,
+    pub spec_label: String,
+}
+
+impl TrainOutcome {
+    /// Final loss for the `i`-th tracked precision.
+    pub fn final_loss(&self, i: usize) -> f32 {
+        self.loss_history
+            .last()
+            .and_then(|l| l.get(i))
+            .copied()
+            .unwrap_or(f32::NAN)
+    }
+
+    /// Mean of the last `k` losses (smoother readout).
+    pub fn tail_loss(&self, i: usize, k: usize) -> f32 {
+        let n = self.loss_history.len();
+        let take = k.min(n).max(1);
+        let sum: f32 = self.loss_history[n - take..]
+            .iter()
+            .filter_map(|l| l.get(i))
+            .sum();
+        sum / take as f32
+    }
+}
+
+/// OmniQuant aux init mirrors `model.init_aux`: γ_raw = β_raw = 4 (σ ≈
+/// 0.982 ≈ no clipping), s_raw = 0 (s = 1), δ = 0.
+pub fn init_aux(preset: &PresetInfo) -> BTreeMap<String, Tensor> {
+    preset
+        .aux
+        .iter()
+        .map(|(name, shape)| {
+            let v = if name.ends_with("gamma_raw") || name.ends_with("beta_raw") {
+                4.0
+            } else {
+                0.0
+            };
+            (name.clone(), Tensor::full(shape.clone(), v))
+        })
+        .collect()
+}
+
+/// Initialize model parameters on device via the `init` artifact.
+pub fn init_params(
+    engine: &Engine,
+    preset_name: &str,
+    seed: i32,
+) -> Result<BTreeMap<String, Tensor>> {
+    let preset = engine.manifest().preset(preset_name)?.clone();
+    let out = engine
+        .run(preset_name, "init", &[lit_scalar_i32(seed)])
+        .context("running init artifact")?;
+    ensure!(out.len() == preset.params.len(), "init output arity");
+    Ok(preset
+        .params
+        .iter()
+        .map(|(n, _)| n.clone())
+        .zip(out)
+        .collect())
+}
+
+/// Run one training job to completion.
+pub fn train(engine: &Engine, spec: &TrainSpec) -> Result<TrainOutcome> {
+    let preset = engine.manifest().preset(&spec.preset)?.clone();
+    let names: Vec<String> = preset.params.iter().map(|(n, _)| n.clone()).collect();
+    let aux_names: Vec<String> = preset.aux.iter().map(|(n, _)| n.clone()).collect();
+    let artifact = spec.objective.artifact(spec.mode);
+    let t1 = preset.model.seq_len + 1;
+    let b = preset.train_batch;
+
+    let mut params: Vec<Tensor> = match &spec.init_ckpt {
+        Some(path) => {
+            let ck = crate::model::Checkpoint::load(path)
+                .with_context(|| format!("loading pretrained init {path:?}"))?;
+            names
+                .iter()
+                .map(|n| ck.get(n).map(|t| t.clone()))
+                .collect::<Result<_>>()?
+        }
+        None => {
+            let map = init_params(engine, &spec.preset, spec.seed as i32)?;
+            names.iter().map(|n| map[n].clone()).collect()
+        }
+    };
+    let mut aux: Vec<Tensor> = if spec.mode == Mode::Omni {
+        let map = init_aux(&preset);
+        aux_names.iter().map(|n| map[n].clone()).collect()
+    } else {
+        Vec::new()
+    };
+    // optimizer state covers what the step updates: weights (QAT) or aux
+    // (OmniQuant)
+    let opt_shapes: Vec<&Tensor> = match spec.mode {
+        Mode::Qat => params.iter().collect(),
+        Mode::Omni => aux.iter().collect(),
+    };
+    let m: Vec<Tensor> = opt_shapes
+        .iter()
+        .map(|t| Tensor::zeros(t.shape.clone()))
+        .collect();
+    let v: Vec<Tensor> = m.clone();
+
+    let mut batcher = Batcher::new(Corpus::new(spec.seed), spec.seed ^ 0xDA7A, b, t1);
+    let (lambdas, wdist, has_lam) = match &spec.objective {
+        Objective::Matquant {
+            lambdas, wdist, ..
+        } => (*lambdas, *wdist, true),
+        Objective::Direct { .. } | Objective::Fp => ([0.0; 3], [0.0; 3], false),
+    };
+
+    // ---- upload state to device once; it stays resident across steps ----
+    // (EXPERIMENTS.md §Perf: avoids re-serializing every parameter every
+    // step.  Artifacts lowered with untupled outputs chain buffers
+    // directly; tuple-rooted artifacts fall back to one host round trip.)
+    let nu = m.len();
+    let mut state: Vec<xla::PjRtBuffer> = Vec::with_capacity(params.len() + 3 * nu);
+    for p in &params {
+        state.push(engine.to_buffer(lit_tensor(p)?)?);
+    }
+    if spec.mode == Mode::Omni {
+        for a in &aux {
+            state.push(engine.to_buffer(lit_tensor(a)?)?);
+        }
+    }
+    for t in m.iter().chain(v.iter()) {
+        state.push(engine.to_buffer(lit_tensor(t)?)?);
+    }
+    let lam_buf = engine.to_buffer(lit_tensor(&Tensor::new(vec![3], lambdas.to_vec())?)?)?;
+    let wd_buf = engine.to_buffer(lit_tensor(&Tensor::new(vec![3], wdist.to_vec())?)?)?;
+    // frozen model params for OmniQuant (inputs, never updated)
+    let frozen = if spec.mode == Mode::Omni { params.len() } else { 0 };
+
+    let mut loss_history = Vec::with_capacity(spec.steps as usize);
+    for step in 0..spec.steps {
+        let tokens = batcher.next_block();
+        let step_buf = engine.to_buffer(lit_scalar_i32(step as i32))?;
+        let tok_buf = engine.to_buffer(lit_i32(&[b, t1], &tokens)?)?;
+        let mut args: Vec<&xla::PjRtBuffer> = state.iter().collect();
+        args.push(&step_buf);
+        args.push(&tok_buf);
+        if has_lam {
+            args.push(&lam_buf);
+            args.push(&wd_buf);
+        }
+
+        let out = engine.run_b(&spec.preset, &artifact, &args)?;
+        // outputs: updated (params|aux), m, v, losses
+        let mut new_bufs: Vec<xla::PjRtBuffer> = if out.len() == 1 {
+            // legacy tuple-rooted artifact: host round trip
+            let lit = out[0].to_literal_sync()?;
+            let parts = lit.to_tuple().context("decomposing train-step tuple")?;
+            parts
+                .into_iter()
+                .map(|l| engine.to_buffer(l))
+                .collect::<Result<_>>()?
+        } else {
+            out
+        };
+        ensure!(new_bufs.len() == 3 * nu + 1, "train step output arity");
+        let losses = engine.fetch(&new_bufs.pop().unwrap())?.data;
+        // keep frozen params (omni) + splice updated state
+        state.truncate(frozen);
+        state.extend(new_bufs);
+        if spec.log_every > 0 && step % spec.log_every == 0 {
+            eprintln!("[{}] step {step:>5} losses {:?}", spec.label(), &losses);
+        }
+        loss_history.push(losses);
+    }
+
+    // ---- fetch final state back to host ----------------------------------
+    let updated: Vec<Tensor> = state[frozen..frozen + nu]
+        .iter()
+        .map(|b| engine.fetch(b))
+        .collect::<Result<_>>()?;
+    match spec.mode {
+        Mode::Qat => params = updated,
+        Mode::Omni => aux = updated,
+    }
+
+    Ok(TrainOutcome {
+        params: names.into_iter().zip(params).collect(),
+        aux: if spec.mode == Mode::Omni {
+            Some(aux_names.into_iter().zip(aux).collect())
+        } else {
+            None
+        },
+        loss_history,
+        spec_label: spec.label(),
+    })
+}

@@ -1,0 +1,29 @@
+//! Synthetic training data + tokenization (the C4 substitute).
+//!
+//! The paper trains/calibrates on C4 and evaluates on six multiple-choice
+//! benchmarks.  We cannot ship C4, so `corpus` generates a byte-level
+//! corpus from six *pattern families* (cycle, induction, key-value
+//! retrieval, majority runs, parity, Markov n-gram text) mixed with
+//! Zipfian noise — heavy-tailed, genuinely learnable structure.  The eval
+//! probes (`crate::eval::tasks`) draw held-out instances from the same
+//! families and score them by option log-likelihood, exactly like the
+//! paper's task suite mechanism (see DESIGN.md substitution table).
+
+pub mod batcher;
+pub mod corpus;
+pub mod rng;
+
+pub use batcher::Batcher;
+pub use corpus::{Corpus, Family};
+pub use rng::Rng;
+
+/// Byte-level vocabulary: token = byte value.  Tokens 0..16 are reserved
+/// as structural markers by the pattern families.
+pub const VOCAB: usize = 256;
+
+/// Structural marker tokens.
+pub const TOK_BOS: i32 = 0;
+pub const TOK_SEP: i32 = 1;
+pub const TOK_KEY: i32 = 2;
+pub const TOK_VAL: i32 = 3;
+pub const TOK_Q: i32 = 4;

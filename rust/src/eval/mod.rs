@@ -1,0 +1,10 @@
+//! Evaluation: perplexity + the six-probe downstream task suite + the
+//! paper-style table renderer.
+
+pub mod perplexity;
+pub mod tables;
+pub mod tasks;
+
+pub use perplexity::Evaluator;
+pub use tables::TableBuilder;
+pub use tasks::{task_suite, TaskReport};

@@ -1,0 +1,138 @@
+//! Log-perplexity over a held-out corpus stream via the `eval` artifact,
+//! and the option-scoring primitive the task probes build on.
+//!
+//! The artifact takes pre-materialized weights (+ per-quantized-tensor
+//! biases), so ONE compiled executable evaluates every precision and
+//! Mix'n'Match assignment — that is the Matryoshka serving property.
+//!
+//! Perf: a [`WeightsSession`] converts the weight set to XLA literals
+//! once; the task suite then reuses them across its ~150 eval executions
+//! per configuration (see EXPERIMENTS.md §Perf).
+
+use anyhow::ensure;
+
+use crate::data::{Batcher, Corpus};
+use crate::model::{PresetInfo, Tensor};
+use crate::runtime::{lit_i32, lit_tensor, Engine};
+use crate::Result;
+
+/// Evaluation driver bound to one engine + preset.
+pub struct Evaluator<'e> {
+    pub engine: &'e Engine,
+    pub preset_name: String,
+    pub preset: PresetInfo,
+}
+
+/// One materialized weight configuration, pre-converted to literals.
+pub struct WeightsSession {
+    prefix: Vec<xla::Literal>,
+}
+
+impl<'e> Evaluator<'e> {
+    pub fn new(engine: &'e Engine, preset_name: &str) -> Result<Self> {
+        let preset = engine.manifest().preset(preset_name)?.clone();
+        Ok(Evaluator {
+            engine,
+            preset_name: preset_name.to_string(),
+            preset,
+        })
+    }
+
+    /// Convert a materialized (weights, biases) pair once.
+    pub fn session(&self, weights: &[Tensor], biases: &[Tensor]) -> Result<WeightsSession> {
+        ensure!(
+            weights.len() == self.preset.params.len(),
+            "weight count mismatch"
+        );
+        ensure!(
+            biases.len() == self.preset.quantized.len(),
+            "bias count mismatch"
+        );
+        let mut prefix = Vec::with_capacity(weights.len() + biases.len());
+        for w in weights {
+            prefix.push(lit_tensor(w)?);
+        }
+        for b in biases {
+            prefix.push(lit_tensor(b)?);
+        }
+        Ok(WeightsSession { prefix })
+    }
+
+    fn run_eval(
+        &self,
+        session: &WeightsSession,
+        tokens: &[i32],
+        mask: &[f32],
+    ) -> Result<(f32, f32, Vec<f32>)> {
+        let b = self.preset.train_batch;
+        let t1 = self.preset.model.seq_len + 1;
+        let t = self.preset.model.seq_len;
+        ensure!(tokens.len() == b * t1, "tokens shape");
+        ensure!(mask.len() == b * t, "mask shape");
+        let mut args: Vec<&xla::Literal> = session.prefix.iter().collect();
+        let tok_lit = lit_i32(&[b, t1], tokens)?;
+        let mask_lit = lit_tensor(&Tensor::new(vec![b, t], mask.to_vec())?)?;
+        args.push(&tok_lit);
+        args.push(&mask_lit);
+        let out = self.engine.run_refs(&self.preset_name, "eval", &args)?;
+        ensure!(out.len() == 3, "eval output arity");
+        Ok((out[0].data[0], out[1].data[0], out[2].data.clone()))
+    }
+
+    /// Mean log-perplexity (nats/token) over `n_batches` held-out batches.
+    ///
+    /// `eval_seed` must differ from the training stream seed; the corpus
+    /// structure (Markov table) is shared via the corpus seed.
+    pub fn log_perplexity(
+        &self,
+        session: &WeightsSession,
+        corpus_seed: u64,
+        eval_seed: u64,
+        n_batches: usize,
+    ) -> Result<f64> {
+        let b = self.preset.train_batch;
+        let t1 = self.preset.model.seq_len + 1;
+        let t = self.preset.model.seq_len;
+        let mut batcher = Batcher::new(Corpus::new(corpus_seed), eval_seed, b, t1);
+        let ones = vec![1.0f32; b * t];
+        let mut ce = 0.0f64;
+        let mut count = 0.0f64;
+        for _ in 0..n_batches {
+            let tokens = batcher.next_block();
+            let (ce_sum, mask_sum, _) = self.run_eval(session, &tokens, &ones)?;
+            ce += ce_sum as f64;
+            count += mask_sum as f64;
+        }
+        Ok(ce / count.max(1.0))
+    }
+
+    /// Score candidate continuations: for each row, the summed label
+    /// log-likelihood over masked positions.  Rows beyond `rows.len()` in
+    /// the fixed batch are padding.
+    ///
+    /// Each row = (tokens ≤ T+1 incl. the option, option span `[start,
+    /// end)` in token indices).
+    pub fn score_rows(
+        &self,
+        session: &WeightsSession,
+        rows: &[(Vec<i32>, usize, usize)],
+    ) -> Result<Vec<f32>> {
+        let b = self.preset.train_batch;
+        let t1 = self.preset.model.seq_len + 1;
+        let t = self.preset.model.seq_len;
+        ensure!(rows.len() <= b, "too many rows for eval batch");
+        let mut tokens = vec![0i32; b * t1];
+        let mut mask = vec![0.0f32; b * t];
+        for (i, (row, start, end)) in rows.iter().enumerate() {
+            ensure!(row.len() <= t1, "row too long: {}", row.len());
+            ensure!(*start >= 1 && end <= &row.len(), "bad option span");
+            tokens[i * t1..i * t1 + row.len()].copy_from_slice(row);
+            // token at index j is predicted at label position j-1
+            for j in *start..*end {
+                mask[i * t + (j - 1)] = 1.0;
+            }
+        }
+        let (_, _, seq_ll) = self.run_eval(session, &tokens, &mask)?;
+        Ok(seq_ll[..rows.len()].to_vec())
+    }
+}

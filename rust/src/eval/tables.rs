@@ -1,0 +1,123 @@
+//! Paper-style table rendering: fixed-width rows of
+//! `Data type | Method | Task Avg. | log pplx.` matching the layout of
+//! Tables 1–8, so experiment output is directly comparable to the paper.
+
+use std::fmt::Write as _;
+
+#[derive(Debug, Clone)]
+pub struct TableBuilder {
+    title: String,
+    columns: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl TableBuilder {
+    pub fn new(title: impl Into<String>, columns: &[&str]) -> Self {
+        TableBuilder {
+            title: title.into(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        assert_eq!(cells.len(), self.columns.len(), "column count");
+        self.rows.push(cells.to_vec());
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    /// Render with per-column autosizing, the paper's `|` separators.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.columns.iter().map(|c| c.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "### {}", self.title);
+        let line = |cells: &[String], widths: &[usize]| -> String {
+            let mut s = String::from("|");
+            for (c, w) in cells.iter().zip(widths) {
+                let _ = write!(s, " {c:<w$} |");
+            }
+            s
+        };
+        let _ = writeln!(out, "{}", line(&self.columns, &widths));
+        let total: usize = widths.iter().map(|w| w + 3).sum::<usize>() + 1;
+        let _ = writeln!(out, "{}", "-".repeat(total));
+        for row in &self.rows {
+            let _ = writeln!(out, "{}", line(row, &widths));
+        }
+        out
+    }
+
+    /// Machine-readable companion (one JSON object per row).
+    pub fn to_json_lines(&self) -> String {
+        let mut out = String::new();
+        for row in &self.rows {
+            let obj = crate::util::Json::Obj(
+                self.columns
+                    .iter()
+                    .zip(row)
+                    .map(|(k, v)| {
+                        let val = v
+                            .parse::<f64>()
+                            .map(crate::util::Json::Num)
+                            .unwrap_or_else(|_| crate::util::Json::Str(v.clone()));
+                        (k.clone(), val)
+                    })
+                    .collect(),
+            );
+            out.push_str(&obj.to_string());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format helpers matching the paper's number style.
+pub fn pct(x: f64) -> String {
+    format!("{:.2}", x * 100.0)
+}
+
+pub fn pplx(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = TableBuilder::new("Table 1", &["Data type", "Method", "Task Avg."]);
+        t.row_strs(&["int2", "MatQuant", "52.37"]);
+        t.row_strs(&["int8", "Baseline", "68.25"]);
+        let s = t.render();
+        assert!(s.contains("### Table 1"));
+        assert!(s.contains("| int2"));
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[1].len(), lines[3].len()); // aligned
+    }
+
+    #[test]
+    fn json_lines_parse() {
+        let mut t = TableBuilder::new("T", &["a", "b"]);
+        t.row_strs(&["x", "1.5"]);
+        let jl = t.to_json_lines();
+        let v = crate::util::Json::parse(jl.trim()).unwrap();
+        assert_eq!(v.get("b").unwrap().as_f64().unwrap(), 1.5);
+    }
+
+    #[test]
+    #[should_panic]
+    fn wrong_arity_panics() {
+        let mut t = TableBuilder::new("T", &["a", "b"]);
+        t.row_strs(&["only-one"]);
+    }
+}

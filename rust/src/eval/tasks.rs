@@ -1,0 +1,128 @@
+//! The downstream task suite — six multiple-choice probe families standing
+//! in for ARC-c/ARC-e/BoolQ/HellaSwag/PIQA/Winogrande (DESIGN.md).
+//!
+//! Mechanism mirrors the paper's zero-shot evals: each probe presents a
+//! prompt and 4 candidate continuations; the model's choice is the option
+//! with the highest label log-likelihood; we report per-family accuracy
+//! and the macro "Task Avg." used in every table.
+
+use crate::data::corpus::{Corpus, Family, FAMILIES};
+use crate::data::Rng;
+use crate::model::Tensor;
+use crate::Result;
+
+use super::perplexity::Evaluator;
+
+#[derive(Debug, Clone)]
+pub struct TaskReport {
+    /// (family, accuracy) pairs in FAMILIES order.
+    pub per_family: Vec<(Family, f64)>,
+    pub avg: f64,
+    pub n_per_family: usize,
+}
+
+impl TaskReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        for (fam, acc) in &self.per_family {
+            s += &format!("{fam:?}: {:.1}%  ", acc * 100.0);
+        }
+        s += &format!("| Avg: {:.2}%", self.avg * 100.0);
+        s
+    }
+}
+
+/// Evaluate the full probe suite.
+///
+/// `probes_per_family` probes × 4 options each are scored through the
+/// `eval` artifact in batches of `train_batch` rows.
+pub fn task_suite(
+    ev: &Evaluator,
+    weights: &[Tensor],
+    biases: &[Tensor],
+    corpus_seed: u64,
+    probe_seed: u64,
+    probes_per_family: usize,
+) -> Result<TaskReport> {
+    let session = ev.session(weights, biases)?;
+    let corpus = Corpus::new(corpus_seed);
+    let t1 = ev.preset.model.seq_len + 1;
+    // prompt budget: leave room for the longest option (1 token here) and
+    // keep probes comfortably within the context
+    let prompt_len = (t1 - 4).min(48);
+    let batch = ev.preset.train_batch;
+    let mut per_family = Vec::new();
+
+    for fam in FAMILIES {
+        let mut rng = Rng::new(probe_seed ^ (fam as u64).wrapping_mul(0x9E37));
+        let mut correct = 0usize;
+        let mut pending: Vec<(Vec<i32>, usize, usize)> = Vec::new();
+        let mut pending_probes: Vec<usize> = Vec::new(); // correct idx per probe
+        let mut scores: Vec<f32> = Vec::new();
+
+        let flush =
+            |pending: &mut Vec<(Vec<i32>, usize, usize)>, scores: &mut Vec<f32>| -> Result<()> {
+                if pending.is_empty() {
+                    return Ok(());
+                }
+                let got = ev.score_rows(&session, pending)?;
+                scores.extend(got);
+                pending.clear();
+                Ok(())
+            };
+
+        for _ in 0..probes_per_family {
+            let probe = corpus.probe(fam, &mut rng, prompt_len);
+            pending_probes.push(probe.correct);
+            for opt in &probe.options {
+                let mut row = probe.prompt.clone();
+                let start = row.len();
+                row.extend(opt);
+                let end = row.len();
+                debug_assert!(end <= t1);
+                pending.push((row, start, end));
+                if pending.len() == batch {
+                    flush(&mut pending, &mut scores)?;
+                }
+            }
+        }
+        flush(&mut pending, &mut scores)?;
+
+        // decode: 4 consecutive scores per probe
+        for (pi, &correct_idx) in pending_probes.iter().enumerate() {
+            let s = &scores[pi * 4..pi * 4 + 4];
+            let argmax = s
+                .iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .unwrap()
+                .0;
+            if argmax == correct_idx {
+                correct += 1;
+            }
+        }
+        per_family.push((fam, correct as f64 / probes_per_family as f64));
+    }
+
+    let avg = per_family.iter().map(|(_, a)| a).sum::<f64>() / per_family.len() as f64;
+    Ok(TaskReport {
+        per_family,
+        avg,
+        n_per_family: probes_per_family,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn report_render_contains_avg() {
+        let r = TaskReport {
+            per_family: vec![(Family::Cycle, 0.5), (Family::Markov, 0.25)],
+            avg: 0.375,
+            n_per_family: 8,
+        };
+        assert!(r.render().contains("37.50%"));
+    }
+}

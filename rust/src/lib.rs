@@ -1,0 +1,38 @@
+//! # MatQuant — Matryoshka Quantization (ICML 2025) reproduction
+//!
+//! A three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L1 (Pallas, build-time)** — fake-quantization, MSB-slicing, and fused
+//!   dequant-matmul kernels (`python/compile/kernels/`).
+//! * **L2 (JAX, build-time)** — a decoder-only transformer with MatQuant's
+//!   multi-precision joint objective, lowered once to HLO text artifacts
+//!   (`python/compile/`, `make artifacts`).
+//! * **L3 (this crate, run-time)** — the coordinator: PJRT runtime, the
+//!   nested-integer quant algebra, synthetic corpus + probe-task evaluation,
+//!   the training orchestrator regenerating every paper table, layer-wise
+//!   Mix'n'Match, and an elastic-precision serving stack.
+//!
+//! Python never runs on the request path: after `make artifacts`, the
+//! `matquant` binary is self-contained.
+
+pub mod coordinator;
+pub mod data;
+pub mod eval;
+pub mod mixnmatch;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod serve;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;
+
+/// The master bit-width `c` in `S(q^c, r)` — everything nests inside int8.
+pub const MASTER_BITS: u32 = 8;
+
+/// Bit-widths the paper explicitly trains (`R = {8, 4, 2}`).
+pub const MATQUANT_BITS: [u32; 3] = [8, 4, 2];
+
+/// All evaluated bit-widths, including interpolated int6 / int3.
+pub const ALL_BITS: [u32; 5] = [8, 6, 4, 3, 2];

@@ -1,0 +1,262 @@
+//! `matquant` — the L3 coordinator CLI.
+//!
+//! Subcommands:
+//!   info                          — artifacts / presets / platform summary
+//!   train [--preset P] [...]      — one training run + checkpoint
+//!   eval --ckpt F [--bits B]      — evaluate a checkpoint at a precision
+//!   experiment --table N | --fig F — regenerate a paper table/figure
+//!   serve-demo [...]              — elastic-precision serving demo
+
+use anyhow::{bail, Context, Result};
+use matquant::coordinator::{experiments, train, Mode, Objective, TrainSpec};
+use matquant::model::{
+    manifest::default_artifacts_dir, Checkpoint, PrecisionAssignment, QuantizedModel,
+};
+use matquant::runtime::Engine;
+use matquant::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env()?;
+    let cmd = args
+        .positional
+        .first()
+        .map(|s| s.as_str())
+        .unwrap_or("info");
+    match cmd {
+        "info" => info(&args),
+        "train" => cmd_train(&args),
+        "eval" => cmd_eval(&args),
+        "experiment" => cmd_experiment(&args),
+        "serve-demo" => cmd_serve_demo(&args),
+        other => {
+            bail!("unknown command {other:?} (try: info, train, eval, experiment, serve-demo)")
+        }
+    }
+}
+
+fn engine() -> Result<Engine> {
+    Engine::new(default_artifacts_dir())
+}
+
+fn info(_args: &Args) -> Result<()> {
+    let engine = engine()?;
+    println!("platform: {}", engine.platform());
+    for name in engine.manifest().preset_names() {
+        let p = engine.manifest().preset(name)?;
+        println!(
+            "preset {name}: {} params ({} quantized tensors, {} quantized params), d={} L={} T={}",
+            p.n_model_params(),
+            p.quantized.len(),
+            p.n_quantized_params(),
+            p.model.d_model,
+            p.model.n_layers,
+            p.model.seq_len,
+        );
+        println!(
+            "  artifacts: {}",
+            engine.manifest().artifact_names(name).join(", ")
+        );
+    }
+    Ok(())
+}
+
+fn parse_spec(args: &Args) -> Result<TrainSpec> {
+    let preset = args.get_or("preset", "tiny").to_string();
+    let mode = match args.get_or("mode", "qat") {
+        "qat" => Mode::Qat,
+        "omni" => Mode::Omni,
+        m => bail!("unknown mode {m:?}"),
+    };
+    let objective = match args.get_or("objective", "matquant") {
+        "matquant" => Objective::Matquant {
+            lambdas: [
+                args.get_f32("l8", 0.1)?,
+                args.get_f32("l4", 0.1)?,
+                args.get_f32("l2", 1.0)?,
+            ],
+            wdist: [
+                args.get_f32("d8", 0.0)?,
+                args.get_f32("d4", 0.0)?,
+                args.get_f32("d2", 0.0)?,
+            ],
+            extra_precision: args.has_flag("ep"),
+        },
+        "sp" => Objective::single_precision(),
+        "direct" => Objective::Direct {
+            bits: args.get_usize("bits", 8)? as u32,
+        },
+        o => bail!("unknown objective {o:?}"),
+    };
+    let mut spec = TrainSpec::new(&preset, mode, objective, args.get_u64("steps", 100)?);
+    spec.seed = args.get_u64("seed", 42)?;
+    spec.log_every = args.get_u64("log-every", 20)?;
+    Ok(spec)
+}
+
+fn cmd_train(args: &Args) -> Result<()> {
+    let engine = engine()?;
+    let spec = parse_spec(args)?;
+    println!("training {}", spec.label());
+    let t0 = std::time::Instant::now();
+    let out = train(&engine, &spec)?;
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "done in {dt:.1}s ({:.0} ms/step); final losses {:?}",
+        dt * 1e3 / spec.steps as f64,
+        out.loss_history.last().unwrap()
+    );
+    let path = args.get_or("out", "checkpoints/last.mqck").to_string();
+    let mut ck = Checkpoint::new(spec.meta_json());
+    for (n, t) in &out.params {
+        ck.insert(n.clone(), t.clone());
+    }
+    if let Some(aux) = &out.aux {
+        for (n, t) in aux {
+            ck.insert(format!("aux:{n}"), t.clone());
+        }
+    }
+    ck.save(&path)?;
+    println!("checkpoint: {path}");
+    Ok(())
+}
+
+fn load_model(engine: &Engine, preset: &str, ckpt: &str) -> Result<QuantizedModel> {
+    let ck = Checkpoint::load(ckpt)?;
+    let preset_info = engine.manifest().preset(preset)?;
+    let mut params = std::collections::BTreeMap::new();
+    let mut aux = std::collections::BTreeMap::new();
+    for (name, t) in &ck.tensors {
+        if let Some(a) = name.strip_prefix("aux:") {
+            aux.insert(a.to_string(), t.clone());
+        } else {
+            params.insert(name.clone(), t.clone());
+        }
+    }
+    QuantizedModel::build(
+        preset_info,
+        &params,
+        if aux.is_empty() { None } else { Some(&aux) },
+    )
+}
+
+fn cmd_eval(args: &Args) -> Result<()> {
+    let engine = engine()?;
+    let preset = args.get_or("preset", "tiny");
+    let ckpt = args.get("ckpt").context("--ckpt required")?;
+    let model = load_model(&engine, preset, ckpt)?;
+    let ev = matquant::eval::Evaluator::new(&engine, preset)?;
+    let bits_arg = args.get_or("bits", "8");
+    let assign = if bits_arg == "fp" {
+        PrecisionAssignment::Fp
+    } else {
+        PrecisionAssignment::Uniform {
+            bits: bits_arg.parse().context("--bits")?,
+            extra_precision: args.has_flag("ep"),
+        }
+    };
+    let (weights, biases) = model.materialize(&assign)?;
+    let seed = args.get_u64("seed", 42)?;
+    let session = ev.session(&weights, &biases)?;
+    let pplx = ev.log_perplexity(
+        &session,
+        seed,
+        seed ^ 0xEAA1,
+        args.get_usize("eval-batches", 8)?,
+    )?;
+    let report = matquant::eval::task_suite(
+        &ev,
+        &weights,
+        &biases,
+        seed,
+        seed ^ 0x9999,
+        args.get_usize("probes", 25)?,
+    )?;
+    println!("bits={bits_arg} log_pplx={pplx:.3}");
+    println!("{}", report.render());
+    println!(
+        "bits/param={:.3}  storage={} bytes",
+        model.bits_per_param(&assign),
+        model.storage_bytes(&assign)
+    );
+    Ok(())
+}
+
+fn cmd_experiment(args: &Args) -> Result<()> {
+    let engine = engine()?;
+    let ctx = experiments::ExperimentCtx::from_args(&engine, args)?;
+    if let Some(t) = args.get("table") {
+        let out = ctx.run_table(t)?;
+        println!("{out}");
+    } else if let Some(f) = args.get("fig") {
+        let out = ctx.run_figure(f)?;
+        println!("{out}");
+    } else {
+        bail!("--table N or --fig F required (tables 1-8, figs 1c, 2, 3)");
+    }
+    Ok(())
+}
+
+fn cmd_serve_demo(args: &Args) -> Result<()> {
+    use matquant::serve::{PrecisionReq, Request, Server, ServerConfig};
+    let engine = engine()?;
+    let preset = args.get_or("preset", "tiny").to_string();
+    let model = match args.get("ckpt") {
+        Some(ck) => load_model(&engine, &preset, ck)?,
+        None => {
+            // quick fresh model so the demo is self-contained
+            let params = matquant::coordinator::trainer::init_params(&engine, &preset, 1)?;
+            QuantizedModel::build(engine.manifest().preset(&preset)?, &params, None)?
+        }
+    };
+    let seq = engine.manifest().preset(&preset)?.model.seq_len;
+    drop(engine);
+    let server = Server::start(
+        default_artifacts_dir(),
+        model,
+        ServerConfig {
+            preset: preset.clone(),
+            max_wait_ms: args.get_f32("wait-ms", 2.0)? as f64,
+            warm_bits: vec![8, 4, 2],
+        },
+    )?;
+    let n = args.get_usize("requests", 64)?;
+    let mut corpus_rng = matquant::data::Rng::new(7);
+    let corpus = matquant::data::Corpus::new(7);
+    let mut rxs = Vec::new();
+    for id in 0..n as u64 {
+        let bits = [2u32, 4, 8][corpus_rng.below(3)];
+        let prompt = corpus.sequence(&mut corpus_rng, seq.min(32));
+        rxs.push(server.submit(Request {
+            id,
+            prompt,
+            precision: PrecisionReq::Bits(bits),
+        })?);
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        let resp = rx.recv()?;
+        ok += 1;
+        if resp.id < 4 {
+            println!(
+                "req {} int{}: next_token={} batch={} queue={:.2}ms compute={:.2}ms",
+                resp.id,
+                resp.bits,
+                resp.next_token,
+                resp.batch_size,
+                resp.queue_ms,
+                resp.compute_ms
+            );
+        }
+    }
+    println!("{ok}/{n} responses");
+    println!("{}", server.metrics_report()?);
+    server.shutdown()?;
+    Ok(())
+}

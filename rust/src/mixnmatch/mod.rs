@@ -1,0 +1,9 @@
+//! Layer-wise Mix'n'Match (paper §4.3, Fig. 2/3): assign a different
+//! precision to each layer of one MatQuant model, densely spanning the
+//! accuracy-vs-bits trade-off at zero training cost.
+
+pub mod pareto;
+pub mod strategy;
+
+pub use pareto::{pareto_frontier, Point};
+pub use strategy::{assignments_for, compositions, Strategy};

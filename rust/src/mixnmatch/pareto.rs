@@ -1,0 +1,108 @@
+//! Pareto frontier over (bits/param, accuracy) points — Fig. 2 / Fig. 3.
+
+/// One evaluated Mix'n'Match (or uniform) configuration.
+#[derive(Debug, Clone)]
+pub struct Point {
+    pub label: String,
+    /// Average bits per quantized FFN parameter (x-axis).
+    pub bits_per_param: f64,
+    /// Task average accuracy in [0, 1] (y-axis).
+    pub accuracy: f64,
+    /// C4-substitute log perplexity (lower is better).
+    pub log_pplx: f64,
+}
+
+/// Points not dominated by any other (≤ bits AND ≥ accuracy with one
+/// strict), sorted by bits.
+pub fn pareto_frontier(points: &[Point]) -> Vec<Point> {
+    let mut keep: Vec<Point> = Vec::new();
+    for p in points {
+        let dominated = points.iter().any(|q| {
+            (q.bits_per_param < p.bits_per_param && q.accuracy >= p.accuracy)
+                || (q.bits_per_param <= p.bits_per_param && q.accuracy > p.accuracy)
+        });
+        if !dominated {
+            keep.push(p.clone());
+        }
+    }
+    keep.sort_by(|a, b| a.bits_per_param.partial_cmp(&b.bits_per_param).unwrap());
+    keep.dedup_by(|a, b| a.bits_per_param == b.bits_per_param && a.accuracy == b.accuracy);
+    keep
+}
+
+/// Terminal scatter rendering of the accuracy-vs-bits curve.
+pub fn render_curve(points: &[Point], width: usize, height: usize) -> String {
+    if points.is_empty() {
+        return String::from("(no points)\n");
+    }
+    let (min_b, max_b) = points.iter().fold((f64::MAX, f64::MIN), |(lo, hi), p| {
+        (lo.min(p.bits_per_param), hi.max(p.bits_per_param))
+    });
+    let (min_a, max_a) = points.iter().fold((f64::MAX, f64::MIN), |(lo, hi), p| {
+        (lo.min(p.accuracy), hi.max(p.accuracy))
+    });
+    let span_b = (max_b - min_b).max(1e-9);
+    let span_a = (max_a - min_a).max(1e-9);
+    let mut grid = vec![vec![' '; width]; height];
+    for p in points {
+        let x = (((p.bits_per_param - min_b) / span_b) * (width - 1) as f64).round() as usize;
+        let y = (((p.accuracy - min_a) / span_a) * (height - 1) as f64).round() as usize;
+        grid[height - 1 - y][x] = '*';
+    }
+    let mut out = String::new();
+    out.push_str(&format!("accuracy {:.1}%..{:.1}%\n", min_a * 100.0, max_a * 100.0));
+    for row in grid {
+        out.push('|');
+        out.extend(row);
+        out.push('\n');
+    }
+    out.push('+');
+    out.push_str(&"-".repeat(width));
+    out.push('\n');
+    out.push_str(&format!("bits/param {min_b:.2}..{max_b:.2}\n"));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn p(b: f64, a: f64) -> Point {
+        Point {
+            label: format!("{b}-{a}"),
+            bits_per_param: b,
+            accuracy: a,
+            log_pplx: 0.0,
+        }
+    }
+
+    #[test]
+    fn dominated_points_removed() {
+        let pts = vec![p(2.0, 0.5), p(4.0, 0.7), p(4.0, 0.6), p(8.0, 0.72), p(3.0, 0.4)];
+        let f = pareto_frontier(&pts);
+        let labels: Vec<f64> = f.iter().map(|x| x.bits_per_param).collect();
+        assert_eq!(labels, vec![2.0, 4.0, 8.0]);
+        // the 4-bit point kept is the better one
+        assert!(f[1].accuracy == 0.7);
+        // dominated (3.0, 0.4) removed
+        assert!(!f.iter().any(|x| x.bits_per_param == 3.0));
+    }
+
+    #[test]
+    fn frontier_is_monotone() {
+        let pts: Vec<Point> = (0..20)
+            .map(|i| p(2.0 + i as f64 * 0.3, 0.4 + (i % 7) as f64 * 0.05))
+            .collect();
+        let f = pareto_frontier(&pts);
+        for w in f.windows(2) {
+            assert!(w[0].bits_per_param <= w[1].bits_per_param);
+            assert!(w[0].accuracy <= w[1].accuracy);
+        }
+    }
+
+    #[test]
+    fn render_smoke() {
+        let s = render_curve(&[p(2.0, 0.5), p(8.0, 0.7)], 20, 5);
+        assert!(s.contains('*'));
+    }
+}

@@ -1,0 +1,181 @@
+//! Mix'n'Match assignment strategies (paper Appendix B):
+//!
+//! * **Pyramid** — int2/int4 at the ends, int8 in the middle (the paper's
+//!   winner: middle layers carry the critical information).
+//! * **ReversePyramid** — int8 at the ends, int2 in the middle.
+//! * **Increasing / Decreasing** — monotone bit assignment across layers.
+//!
+//! A config is a composition `(n2, n4, n8)` with `n2 + n4 + n8 = L`; each
+//! strategy turns a composition into a per-layer bit vector.
+
+/// Layout strategy for a given (n2, n4, n8) composition.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Strategy {
+    Pyramid,
+    ReversePyramid,
+    Increasing,
+    Decreasing,
+}
+
+pub const STRATEGIES: [Strategy; 4] = [
+    Strategy::Pyramid,
+    Strategy::ReversePyramid,
+    Strategy::Increasing,
+    Strategy::Decreasing,
+];
+
+impl Strategy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Pyramid => "pyramid",
+            Strategy::ReversePyramid => "reverse_pyramid",
+            Strategy::Increasing => "increasing",
+            Strategy::Decreasing => "decreasing",
+        }
+    }
+}
+
+/// All compositions (n2, n4, n8) of `layers`.
+pub fn compositions(layers: usize) -> Vec<(usize, usize, usize)> {
+    let mut out = Vec::new();
+    for n2 in 0..=layers {
+        for n4 in 0..=(layers - n2) {
+            out.push((n2, n4, layers - n2 - n4));
+        }
+    }
+    out
+}
+
+/// Per-layer bits for one composition under `strategy`.
+pub fn assignments_for(
+    strategy: Strategy,
+    (n2, n4, n8): (usize, usize, usize),
+    layers: usize,
+) -> Vec<u32> {
+    assert_eq!(n2 + n4 + n8, layers, "composition must cover all layers");
+    match strategy {
+        Strategy::Increasing => {
+            // low bits first
+            let mut v = vec![2u32; n2];
+            v.extend(std::iter::repeat(4).take(n4));
+            v.extend(std::iter::repeat(8).take(n8));
+            v
+        }
+        Strategy::Decreasing => {
+            let mut v = vec![8u32; n8];
+            v.extend(std::iter::repeat(4).take(n4));
+            v.extend(std::iter::repeat(2).take(n2));
+            v
+        }
+        Strategy::Pyramid => {
+            // int2 split at both ends, then int4, int8 core:
+            // [2…, 4…, 8…, 4…, 2…]
+            let mut v = vec![0u32; layers];
+            let mut lo = 0usize;
+            let mut hi = layers;
+            let mut place = |bits: u32, count: usize, lo: &mut usize, hi: &mut usize| {
+                for i in 0..count {
+                    if i % 2 == 0 {
+                        v_set(&mut v, *lo, bits);
+                        *lo += 1;
+                    } else {
+                        *hi -= 1;
+                        v_set(&mut v, *hi, bits);
+                    }
+                }
+            };
+            place(2, n2, &mut lo, &mut hi);
+            place(4, n4, &mut lo, &mut hi);
+            place(8, n8, &mut lo, &mut hi);
+            v
+        }
+        Strategy::ReversePyramid => {
+            let mut v = vec![0u32; layers];
+            let mut lo = 0usize;
+            let mut hi = layers;
+            let mut place = |bits: u32, count: usize, lo: &mut usize, hi: &mut usize| {
+                for i in 0..count {
+                    if i % 2 == 0 {
+                        v_set(&mut v, *lo, bits);
+                        *lo += 1;
+                    } else {
+                        *hi -= 1;
+                        v_set(&mut v, *hi, bits);
+                    }
+                }
+            };
+            place(8, n8, &mut lo, &mut hi);
+            place(4, n4, &mut lo, &mut hi);
+            place(2, n2, &mut lo, &mut hi);
+            v
+        }
+    }
+}
+
+fn v_set(v: &mut [u32], i: usize, bits: u32) {
+    v[i] = bits;
+}
+
+/// Nominal average bits of an assignment (uniform layer sizes).
+pub fn nominal_bits(assign: &[u32]) -> f64 {
+    assign.iter().map(|&b| b as f64).sum::<f64>() / assign.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn compositions_cover_and_sum() {
+        let cs = compositions(4);
+        assert_eq!(cs.len(), 15); // C(4+2,2)
+        for (a, b, c) in cs {
+            assert_eq!(a + b + c, 4);
+        }
+    }
+
+    #[test]
+    fn all_strategies_are_permutations_of_multiset() {
+        for comp in compositions(6) {
+            for s in STRATEGIES {
+                let v = assignments_for(s, comp, 6);
+                assert_eq!(v.len(), 6);
+                assert_eq!(v.iter().filter(|&&b| b == 2).count(), comp.0, "{s:?} {comp:?}");
+                assert_eq!(v.iter().filter(|&&b| b == 4).count(), comp.1);
+                assert_eq!(v.iter().filter(|&&b| b == 8).count(), comp.2);
+            }
+        }
+    }
+
+    #[test]
+    fn pyramid_puts_high_bits_in_middle() {
+        let v = assignments_for(Strategy::Pyramid, (2, 2, 2), 6);
+        // ends must be int2, middle int8
+        assert_eq!(v[0], 2);
+        assert_eq!(v[5], 2);
+        let mid: Vec<u32> = v[2..4].to_vec();
+        assert!(mid.iter().all(|&b| b == 8), "{v:?}");
+    }
+
+    #[test]
+    fn reverse_pyramid_inverts() {
+        let v = assignments_for(Strategy::ReversePyramid, (2, 2, 2), 6);
+        assert_eq!(v[0], 8);
+        assert_eq!(v[5], 8);
+        assert!(v[2..4].iter().all(|&b| b == 2), "{v:?}");
+    }
+
+    #[test]
+    fn monotone_strategies() {
+        let inc = assignments_for(Strategy::Increasing, (2, 2, 2), 6);
+        assert!(inc.windows(2).all(|w| w[0] <= w[1]));
+        let dec = assignments_for(Strategy::Decreasing, (2, 2, 2), 6);
+        assert!(dec.windows(2).all(|w| w[0] >= w[1]));
+    }
+
+    #[test]
+    fn nominal_bits_example() {
+        let v = assignments_for(Strategy::Increasing, (1, 1, 2), 4);
+        assert!((nominal_bits(&v) - 5.5).abs() < 1e-12);
+    }
+}

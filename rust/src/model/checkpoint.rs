@@ -1,0 +1,158 @@
+//! Checkpoint I/O — a small self-describing binary container ("MQCK").
+//!
+//! Layout: magic(4) version(u32) meta_len(u32) meta(json utf-8) n(u32)
+//! then per tensor: name_len(u16) name ndim(u8) dims(u32×ndim) data(f32 LE).
+//!
+//! Stores trained parameters (and OmniQuant aux) between the coordinator's
+//! training phase and the quantize/serve phases.
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{bail, ensure, Context};
+
+use super::tensor::Tensor;
+use crate::Result;
+
+const MAGIC: &[u8; 4] = b"MQCK";
+const VERSION: u32 = 1;
+
+#[derive(Debug, Clone, Default)]
+pub struct Checkpoint {
+    /// Free-form JSON metadata (experiment config, step count, mode…).
+    pub meta: String,
+    /// Named tensors, sorted for deterministic files.
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Checkpoint {
+    pub fn new(meta: impl Into<String>) -> Self {
+        Checkpoint {
+            meta: meta.into(),
+            tensors: BTreeMap::new(),
+        }
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.tensors.insert(name.into(), t);
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("checkpoint missing tensor {name:?}"))
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let mut buf: Vec<u8> = Vec::new();
+        buf.extend_from_slice(MAGIC);
+        buf.extend_from_slice(&VERSION.to_le_bytes());
+        let meta = self.meta.as_bytes();
+        buf.extend_from_slice(&(meta.len() as u32).to_le_bytes());
+        buf.extend_from_slice(meta);
+        buf.extend_from_slice(&(self.tensors.len() as u32).to_le_bytes());
+        for (name, t) in &self.tensors {
+            ensure!(name.len() < u16::MAX as usize, "name too long");
+            buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+            buf.extend_from_slice(name.as_bytes());
+            ensure!(t.shape.len() < 256, "rank too high");
+            buf.push(t.shape.len() as u8);
+            for &d in &t.shape {
+                buf.extend_from_slice(&(d as u32).to_le_bytes());
+            }
+            for &x in &t.data {
+                buf.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        if let Some(dir) = path.as_ref().parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        let mut f = std::fs::File::create(path.as_ref())
+            .with_context(|| format!("creating {:?}", path.as_ref()))?;
+        f.write_all(&buf)?;
+        Ok(())
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let mut f = std::fs::File::open(path.as_ref())
+            .with_context(|| format!("opening {:?}", path.as_ref()))?;
+        let mut buf = Vec::new();
+        f.read_to_end(&mut buf)?;
+        let mut pos = 0usize;
+
+        fn take<'a>(buf: &'a [u8], pos: &mut usize, n: usize) -> Result<&'a [u8]> {
+            ensure!(*pos + n <= buf.len(), "truncated checkpoint");
+            let s = &buf[*pos..*pos + n];
+            *pos += n;
+            Ok(s)
+        }
+        fn u32_at(buf: &[u8], pos: &mut usize) -> Result<u32> {
+            Ok(u32::from_le_bytes(take(buf, pos, 4)?.try_into().unwrap()))
+        }
+
+        if take(&buf, &mut pos, 4)? != MAGIC {
+            bail!("bad magic: not a MQCK checkpoint");
+        }
+        let ver = u32_at(&buf, &mut pos)?;
+        ensure!(ver == VERSION, "unsupported checkpoint version {ver}");
+        let meta_len = u32_at(&buf, &mut pos)? as usize;
+        let meta = String::from_utf8(take(&buf, &mut pos, meta_len)?.to_vec())
+            .context("meta not utf-8")?;
+        let n = u32_at(&buf, &mut pos)? as usize;
+        let mut tensors = BTreeMap::new();
+        for _ in 0..n {
+            let name_len =
+                u16::from_le_bytes(take(&buf, &mut pos, 2)?.try_into().unwrap()) as usize;
+            let name = String::from_utf8(take(&buf, &mut pos, name_len)?.to_vec())?;
+            let ndim = take(&buf, &mut pos, 1)?[0] as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(u32_at(&buf, &mut pos)? as usize);
+            }
+            let count: usize = shape.iter().product();
+            let raw = take(&buf, &mut pos, count * 4)?;
+            let data: Vec<f32> = raw
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+                .collect();
+            tensors.insert(name, Tensor { shape, data });
+        }
+        Ok(Checkpoint { meta, tensors })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("mq_ckpt_test");
+        let path = dir.join("a.mqck");
+        let mut ck = Checkpoint::new(r#"{"mode":"qat"}"#);
+        ck.insert("w", Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap());
+        ck.insert("s", Tensor::scalar(7.5));
+        ck.save(&path).unwrap();
+        let back = Checkpoint::load(&path).unwrap();
+        assert_eq!(back.meta, ck.meta);
+        assert_eq!(back.tensors, ck.tensors);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        let dir = std::env::temp_dir().join("mq_ckpt_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.mqck");
+        std::fs::write(&path, b"not a checkpoint").unwrap();
+        assert!(Checkpoint::load(&path).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_tensor_errors() {
+        let ck = Checkpoint::new("");
+        assert!(ck.get("nope").is_err());
+    }
+}

@@ -1,0 +1,250 @@
+//! `artifacts/manifest.json` — the contract between L2 (aot.py) and L3.
+//!
+//! The manifest pins parameter order (HLO input order), aux-parameter
+//! order, which tensors are quantized, and the signature of every HLO
+//! artifact, so the Rust side never guesses.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, ensure, Context};
+
+use crate::util::Json;
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct ModelDims {
+    pub vocab: usize,
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub seq_len: usize,
+    pub quantize_attn: bool,
+}
+
+#[derive(Debug, Clone)]
+pub struct PresetInfo {
+    pub model: ModelDims,
+    /// Ordered (name, shape) — HLO parameter order.
+    pub params: Vec<(String, Vec<usize>)>,
+    /// Ordered OmniQuant auxiliary (name, shape).
+    pub aux: Vec<(String, Vec<usize>)>,
+    /// Quantized weight names (bias input order for eval/fwd).
+    pub quantized: Vec<String>,
+    pub train_batch: usize,
+    pub matquant_bits: Vec<u32>,
+    pub all_bits: Vec<u32>,
+    pub fwd_batch_sizes: Vec<usize>,
+}
+
+impl PresetInfo {
+    fn from_json(j: &Json) -> Result<Self> {
+        let md = j.get("model")?;
+        let model = ModelDims {
+            vocab: md.get("vocab")?.as_usize()?,
+            d_model: md.get("d_model")?.as_usize()?,
+            n_layers: md.get("n_layers")?.as_usize()?,
+            n_heads: md.get("n_heads")?.as_usize()?,
+            d_ff: md.get("d_ff")?.as_usize()?,
+            seq_len: md.get("seq_len")?.as_usize()?,
+            quantize_attn: md.get("quantize_attn")?.as_bool()?,
+        };
+        let named_shapes = |key: &str| -> Result<Vec<(String, Vec<usize>)>> {
+            j.get(key)?
+                .as_arr()?
+                .iter()
+                .map(|e| {
+                    let pair = e.as_arr()?;
+                    ensure!(pair.len() == 2, "bad (name, shape) pair");
+                    Ok((pair[0].as_str()?.to_string(), pair[1].as_usize_vec()?))
+                })
+                .collect()
+        };
+        Ok(PresetInfo {
+            model,
+            params: named_shapes("params")?,
+            aux: named_shapes("aux")?,
+            quantized: j
+                .get("quantized")?
+                .as_arr()?
+                .iter()
+                .map(|v| Ok(v.as_str()?.to_string()))
+                .collect::<Result<_>>()?,
+            train_batch: j.get("train_batch")?.as_usize()?,
+            matquant_bits: j
+                .get("matquant_bits")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_u32())
+                .collect::<Result<_>>()?,
+            all_bits: j
+                .get("all_bits")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_u32())
+                .collect::<Result<_>>()?,
+            fwd_batch_sizes: j.get("fwd_batch_sizes")?.as_usize_vec()?,
+        })
+    }
+
+    pub fn param_shape(&self, name: &str) -> Option<&[usize]> {
+        self.params
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, s)| s.as_slice())
+    }
+
+    pub fn n_model_params(&self) -> usize {
+        self.params
+            .iter()
+            .map(|(_, s)| s.iter().product::<usize>())
+            .sum()
+    }
+
+    /// Total elements in quantized tensors (for bits-per-param accounting).
+    pub fn n_quantized_params(&self) -> usize {
+        self.quantized
+            .iter()
+            .filter_map(|q| self.param_shape(q))
+            .map(|s| s.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct ArtifactEntry {
+    pub preset: String,
+    pub name: String,
+    pub path: String,
+    pub inputs: Vec<String>,
+    pub outputs: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub presets: HashMap<String, PresetInfo>,
+    pub artifacts: Vec<ArtifactEntry>,
+    pub root: PathBuf,
+}
+
+impl Manifest {
+    /// Load `artifacts/manifest.json`; `root` is the artifacts directory.
+    pub fn load(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        let path = root.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+        let mut presets = HashMap::new();
+        for (name, pj) in j.get("presets")?.as_obj()? {
+            presets.insert(
+                name.clone(),
+                PresetInfo::from_json(pj).with_context(|| format!("preset {name}"))?,
+            );
+        }
+        let artifacts = j
+            .get("artifacts")?
+            .as_arr()?
+            .iter()
+            .map(|a| {
+                let strs = |key: &str| -> Result<Vec<String>> {
+                    a.get(key)?
+                        .as_arr()?
+                        .iter()
+                        .map(|v| Ok(v.as_str()?.to_string()))
+                        .collect()
+                };
+                Ok(ArtifactEntry {
+                    preset: a.get("preset")?.as_str()?.to_string(),
+                    name: a.get("name")?.as_str()?.to_string(),
+                    path: a.get("path")?.as_str()?.to_string(),
+                    inputs: strs("inputs")?,
+                    outputs: strs("outputs")?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        ensure!(!presets.is_empty(), "manifest has no presets");
+        Ok(Manifest {
+            presets,
+            artifacts,
+            root,
+        })
+    }
+
+    pub fn preset(&self, name: &str) -> Result<&PresetInfo> {
+        self.presets
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown preset {name:?} (have: {:?})", self.preset_names()))
+    }
+
+    pub fn preset_names(&self) -> Vec<&str> {
+        self.presets.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Absolute path of artifact `name` under `preset`.
+    pub fn artifact_path(&self, preset: &str, name: &str) -> Result<PathBuf> {
+        let e = self
+            .artifacts
+            .iter()
+            .find(|a| a.preset == preset && a.name == name)
+            .ok_or_else(|| anyhow!("artifact {preset}/{name} not in manifest"))?;
+        Ok(self.root.join(&e.path))
+    }
+
+    pub fn artifact_names(&self, preset: &str) -> Vec<&str> {
+        self.artifacts
+            .iter()
+            .filter(|a| a.preset == preset)
+            .map(|a| a.name.as_str())
+            .collect()
+    }
+}
+
+/// Locate the artifacts directory: `$MQ_ARTIFACTS` or `./artifacts`.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var("MQ_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts`");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        let tiny = m.preset("tiny").unwrap();
+        assert_eq!(tiny.model.vocab, 256);
+        assert!(tiny.params.iter().any(|(n, _)| n == "embed"));
+        assert!(!tiny.quantized.is_empty());
+        for a in &m.artifacts {
+            assert!(m.root.join(&a.path).exists(), "{} missing", a.path);
+        }
+        for b in &tiny.all_bits {
+            assert!(m
+                .artifact_path("tiny", &format!("train_qat_direct_b{b}"))
+                .is_ok());
+        }
+    }
+
+    #[test]
+    fn unknown_preset_errors() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.preset("nope").is_err());
+    }
+}

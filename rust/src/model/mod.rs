@@ -1,0 +1,12 @@
+//! Model-side substrates: tensors, the artifact manifest, checkpoints, and
+//! the quantized model registry (one stored int8 master → any precision).
+
+pub mod checkpoint;
+pub mod manifest;
+pub mod registry;
+pub mod tensor;
+
+pub use checkpoint::Checkpoint;
+pub use manifest::{ArtifactEntry, Manifest, PresetInfo};
+pub use registry::{PrecisionAssignment, QuantizedModel, QuantizedTensor};
+pub use tensor::Tensor;

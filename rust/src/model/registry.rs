@@ -1,0 +1,383 @@
+//! The quantized model registry — the paper's deployment object (§5.4).
+//!
+//! After training, every quantized weight is stored **once** as int8 codes
+//! (+ per-channel scales).  Any serving precision is derived on demand by
+//! MSB slicing (Eq. 6 / Eq. 8) + dequantization; a Mix'n'Match config just
+//! assigns a different `r` per layer.  OmniQuant's Eq. 4 smoothing is
+//! folded so the plain `fwd`/`eval` artifacts serve it:
+//!
+//!   W_eff = diag(1/s) · dequant(S(Q(W⊙s), r)),   bias = δ·(W − W_eff)
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, ensure};
+
+use super::manifest::PresetInfo;
+use super::tensor::Tensor;
+use crate::quant::{self, ExtraBitOverlay, PackedTensor, Scales};
+use crate::{Result, MASTER_BITS};
+
+/// One int8-master quantized weight.
+#[derive(Debug, Clone)]
+pub struct QuantizedTensor {
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Packed int8 codes of `W⊙s` (or plain `W` for QAT).
+    pub codes: PackedTensor,
+    /// Shared 8-bit scales (per output channel).
+    pub scales: Scales,
+    /// OmniQuant smoothing: per-input-row scale `s` and shift `δ` (None
+    /// for QAT models).
+    pub smooth: Option<(Vec<f32>, Vec<f32>)>, // (s, delta)
+    /// Full-precision weight (needed for the δ·W bias fold; also the
+    /// "bfloat16" reference rows).
+    pub fp: Tensor,
+}
+
+impl QuantizedTensor {
+    /// Quantize a trained weight to the int8 master representation.
+    ///
+    /// For OmniQuant models pass the *trained* per-channel clipping factors
+    /// γ, β (already sigmoided) and smoothing (s, δ).
+    pub fn from_weight(
+        fp: Tensor,
+        gamma: Option<&[f32]>,
+        beta: Option<&[f32]>,
+        smooth: Option<(Vec<f32>, Vec<f32>)>,
+    ) -> Result<Self> {
+        let (d_in, d_out) = fp.dims2()?;
+        let w_eff: Vec<f32> = match &smooth {
+            Some((s, _)) => {
+                ensure!(s.len() == d_in, "smoothing dim mismatch");
+                fp.data
+                    .chunks_exact(d_out)
+                    .enumerate()
+                    .flat_map(|(i, row)| row.iter().map(move |&x| x * s[i]))
+                    .collect()
+            }
+            None => fp.data.clone(),
+        };
+        let scales = quant::minmax::omni_scales(&w_eff, d_in, d_out, MASTER_BITS, gamma, beta);
+        let codes_f = quant::quantize(&w_eff, d_out, &scales);
+        let codes = PackedTensor::pack(&codes_f, 8);
+        Ok(QuantizedTensor {
+            d_in,
+            d_out,
+            codes,
+            scales,
+            smooth,
+            fp,
+        })
+    }
+
+    /// Materialize the effective weight + bias at precision `bits`.
+    ///
+    /// Returns `(W_eff, bias)`; `bias` is all-zero for QAT models.
+    pub fn materialize(&self, bits: u32, extra_precision: bool) -> Result<(Tensor, Vec<f32>)> {
+        ensure!(
+            bits >= 1 && bits <= MASTER_BITS,
+            "bits {bits} out of range"
+        );
+        let mut q = self.codes.unpack();
+        quant::slicing::slice_codes_into(&q.clone(), MASTER_BITS, bits, extra_precision, &mut q);
+        let mut w = vec![0.0f32; q.len()];
+        quant::dequantize_into(&q, self.d_out, &self.scales, &mut w);
+        let mut bias = vec![0.0f32; self.d_out];
+        if let Some((s, delta)) = &self.smooth {
+            // fold: W_eff = diag(1/s)·Wq ; bias = δ·(W − W_eff)
+            for (i, row) in w.chunks_exact_mut(self.d_out).enumerate() {
+                let inv = 1.0 / s[i];
+                for x in row.iter_mut() {
+                    *x *= inv;
+                }
+            }
+            let w_eff = Tensor::new(vec![self.d_in, self.d_out], w.clone())?;
+            let dw = self.fp.vecmat(delta)?;
+            let dweff = w_eff.vecmat(delta)?;
+            for j in 0..self.d_out {
+                bias[j] = dw[j] - dweff[j];
+            }
+        }
+        Ok((Tensor::new(vec![self.d_in, self.d_out], w)?, bias))
+    }
+
+    /// The full-precision weight (paper's bfloat16 rows), with zero bias.
+    pub fn materialize_fp(&self) -> (Tensor, Vec<f32>) {
+        (self.fp.clone(), vec![0.0; self.d_out])
+    }
+
+    /// Deployment storage in bytes at `bits` (packed codes + scales +
+    /// extra-precision overlay when applicable).
+    pub fn storage_bytes(&self, bits: u32, extra_precision: bool) -> usize {
+        let n = self.d_in * self.d_out;
+        let scale_bytes = self.d_out * 8; // alpha + zero f32
+        if bits == MASTER_BITS {
+            return self.codes.bytes() + scale_bytes;
+        }
+        let q = self.codes.unpack();
+        let step = (1u32 << (MASTER_BITS - bits)) as f32;
+        let ids: Vec<f32> = q
+            .iter()
+            .map(|&x| quant::slice_code(x, MASTER_BITS, bits, extra_precision) / step)
+            .collect();
+        if extra_precision {
+            let (ov, dense) = ExtraBitOverlay::split(&ids, bits);
+            PackedTensor::pack(&dense, bits).bytes() + ov.bytes(n) + scale_bytes
+        } else {
+            PackedTensor::pack(&ids, bits).bytes() + scale_bytes
+        }
+    }
+
+    /// Average effective bits/param at `bits` under Eq. 8 storage.
+    pub fn effective_bits(&self, bits: u32) -> f64 {
+        quant::effective_bits(&self.codes.unpack(), MASTER_BITS, bits)
+    }
+
+    /// Code histogram after slicing to `bits` (Fig. 1c).
+    pub fn sliced_histogram(&self, bits: u32) -> Vec<u64> {
+        let q = self.codes.unpack();
+        let step = (1u32 << (MASTER_BITS - bits)) as f32;
+        let ids: Vec<f32> = q
+            .iter()
+            .map(|&x| quant::slice_code(x, MASTER_BITS, bits, false) / step)
+            .collect();
+        quant::code_histogram(&ids, bits)
+    }
+}
+
+/// Per-tensor precision assignment — `Uniform` covers the homogeneous
+/// sliced models; `PerLayer` realizes Mix'n'Match.
+#[derive(Debug, Clone)]
+pub enum PrecisionAssignment {
+    /// Full-precision (the bfloat16 reference rows).
+    Fp,
+    Uniform {
+        bits: u32,
+        extra_precision: bool,
+    },
+    /// `layer index → bits`; tensors of layer *l* share the precision.
+    PerLayer {
+        bits: Vec<u32>,
+        extra_precision: bool,
+    },
+}
+
+impl PrecisionAssignment {
+    pub fn uniform(bits: u32) -> Self {
+        PrecisionAssignment::Uniform {
+            bits,
+            extra_precision: false,
+        }
+    }
+
+    fn bits_for(&self, layer: usize) -> Option<(u32, bool)> {
+        match self {
+            PrecisionAssignment::Fp => None,
+            PrecisionAssignment::Uniform {
+                bits,
+                extra_precision,
+            } => Some((*bits, *extra_precision)),
+            PrecisionAssignment::PerLayer {
+                bits,
+                extra_precision,
+            } => Some((bits[layer.min(bits.len() - 1)], *extra_precision)),
+        }
+    }
+}
+
+/// The registry: non-quantized params in fp32 + int8 masters for the rest.
+#[derive(Debug, Clone)]
+pub struct QuantizedModel {
+    /// All parameters in manifest order (fp copies).
+    pub params: BTreeMap<String, Tensor>,
+    /// Quantized-weight masters, keyed by name.
+    pub quantized: BTreeMap<String, QuantizedTensor>,
+    /// Manifest-order names.
+    pub param_order: Vec<String>,
+    pub quantized_order: Vec<String>,
+}
+
+fn layer_of(name: &str) -> usize {
+    // names look like "layer3.ffn.w_in"
+    name.strip_prefix("layer")
+        .and_then(|s| s.split('.').next())
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0)
+}
+
+impl QuantizedModel {
+    /// Build from trained parameters (+ optional OmniQuant aux tensors,
+    /// keyed `<name>.gamma_raw` etc., already in raw logit space).
+    pub fn build(
+        preset: &PresetInfo,
+        params: &BTreeMap<String, Tensor>,
+        aux: Option<&BTreeMap<String, Tensor>>,
+    ) -> Result<Self> {
+        let mut quantized = BTreeMap::new();
+        for qn in &preset.quantized {
+            let fp = params
+                .get(qn)
+                .ok_or_else(|| anyhow!("missing param {qn}"))?
+                .clone();
+            let (gamma, beta, smooth) = match aux {
+                Some(a) => {
+                    let sig = |t: &Tensor| -> Vec<f32> {
+                        t.data.iter().map(|&x| 1.0 / (1.0 + (-x).exp())).collect()
+                    };
+                    let g = sig(a.get(&format!("{qn}.gamma_raw"))
+                        .ok_or_else(|| anyhow!("missing aux for {qn}"))?);
+                    let b = sig(a.get(&format!("{qn}.beta_raw")).unwrap());
+                    let s: Vec<f32> = a
+                        .get(&format!("{qn}.s_raw"))
+                        .unwrap()
+                        .data
+                        .iter()
+                        .map(|&x| x.exp())
+                        .collect();
+                    let d = a.get(&format!("{qn}.delta")).unwrap().data.clone();
+                    (Some(g), Some(b), Some((s, d)))
+                }
+                None => (None, None, None),
+            };
+            quantized.insert(
+                qn.clone(),
+                QuantizedTensor::from_weight(fp, gamma.as_deref(), beta.as_deref(), smooth)?,
+            );
+        }
+        Ok(QuantizedModel {
+            params: params.clone(),
+            quantized,
+            param_order: preset.params.iter().map(|(n, _)| n.clone()).collect(),
+            quantized_order: preset.quantized.clone(),
+        })
+    }
+
+    /// Materialize full parameter + bias lists (manifest order) for the
+    /// eval/fwd artifacts under `assign`.
+    pub fn materialize(&self, assign: &PrecisionAssignment) -> Result<(Vec<Tensor>, Vec<Tensor>)> {
+        let mut weights = Vec::with_capacity(self.param_order.len());
+        let mut biases = Vec::with_capacity(self.quantized_order.len());
+        let mut derived: BTreeMap<&str, (Tensor, Vec<f32>)> = BTreeMap::new();
+        for qn in &self.quantized_order {
+            let qt = &self.quantized[qn];
+            let wb = match assign.bits_for(layer_of(qn)) {
+                None => qt.materialize_fp(),
+                Some((bits, ep)) => qt.materialize(bits, ep)?,
+            };
+            derived.insert(qn, wb);
+        }
+        for name in &self.param_order {
+            if let Some((w, _)) = derived.get(name.as_str()) {
+                weights.push(w.clone());
+            } else {
+                weights.push(self.params[name].clone());
+            }
+        }
+        for qn in &self.quantized_order {
+            let (_, b) = &derived[qn.as_str()];
+            biases.push(Tensor::new(vec![b.len()], b.clone())?);
+        }
+        Ok((weights, biases))
+    }
+
+    /// Bits per quantized parameter under `assign` (x-axis of Fig. 2/3).
+    pub fn bits_per_param(&self, assign: &PrecisionAssignment) -> f64 {
+        let mut bits_total = 0.0f64;
+        let mut n_total = 0usize;
+        for qn in &self.quantized_order {
+            let qt = &self.quantized[qn];
+            let n = qt.d_in * qt.d_out;
+            let b = match assign.bits_for(layer_of(qn)) {
+                None => 32.0,
+                Some((bits, false)) => bits as f64,
+                Some((bits, true)) => qt.effective_bits(bits),
+            };
+            bits_total += b * n as f64;
+            n_total += n;
+        }
+        if n_total == 0 {
+            0.0
+        } else {
+            bits_total / n_total as f64
+        }
+    }
+
+    /// True packed storage bytes under `assign` (serving planner input).
+    pub fn storage_bytes(&self, assign: &PrecisionAssignment) -> usize {
+        self.quantized_order
+            .iter()
+            .map(|qn| {
+                let qt = &self.quantized[qn];
+                match assign.bits_for(layer_of(qn)) {
+                    None => qt.d_in * qt.d_out * 4,
+                    Some((bits, ep)) => qt.storage_bytes(bits, ep),
+                }
+            })
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+
+    fn toy_weight(seed: u64, d_in: usize, d_out: usize) -> Tensor {
+        let mut rng = Rng::new(seed);
+        let data: Vec<f32> = (0..d_in * d_out)
+            .map(|_| rng.range_f32(-1.0, 1.0))
+            .collect();
+        Tensor::new(vec![d_in, d_out], data).unwrap()
+    }
+
+    #[test]
+    fn qat_materialize_error_shrinks_with_bits() {
+        let fp = toy_weight(1, 32, 16);
+        let qt = QuantizedTensor::from_weight(fp.clone(), None, None, None).unwrap();
+        let mut errs = Vec::new();
+        for bits in [2u32, 4, 8] {
+            let (w, bias) = qt.materialize(bits, false).unwrap();
+            assert!(bias.iter().all(|&b| b == 0.0));
+            let err: f32 = fp
+                .data
+                .iter()
+                .zip(&w.data)
+                .map(|(a, b)| (a - b).powi(2))
+                .sum::<f32>()
+                / fp.data.len() as f32;
+            errs.push(err);
+        }
+        assert!(errs[0] > errs[1] && errs[1] > errs[2], "{errs:?}");
+    }
+
+    #[test]
+    fn smoothing_fold_bias_nonzero() {
+        let fp = toy_weight(2, 16, 8);
+        let s = vec![1.3f32; 16];
+        let mut delta = vec![0.0f32; 16];
+        delta[3] = 0.5;
+        let qt = QuantizedTensor::from_weight(fp, None, None, Some((s, delta))).unwrap();
+        let (_, bias) = qt.materialize(4, false).unwrap();
+        assert!(bias.iter().any(|&b| b != 0.0));
+    }
+
+    #[test]
+    fn effective_bits_reasonable() {
+        let fp = toy_weight(3, 64, 32);
+        let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+        let eb = qt.effective_bits(2);
+        assert!(eb >= 2.0 && eb < 2.3, "{eb}");
+    }
+
+    #[test]
+    fn storage_accounting_monotone() {
+        let fp = toy_weight(4, 64, 64);
+        let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+        let s2 = qt.storage_bytes(2, false);
+        let s4 = qt.storage_bytes(4, false);
+        let s8 = qt.storage_bytes(8, false);
+        assert!(s2 < s4 && s4 < s8);
+        // EP adds overlay cost
+        assert!(qt.storage_bytes(2, true) >= s2);
+    }
+}

@@ -1,0 +1,112 @@
+//! A minimal dense f32 tensor — the host-side currency between the corpus,
+//! the quant algebra, and PJRT literals.
+
+use crate::Result;
+use anyhow::ensure;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn new(shape: Vec<usize>, data: Vec<f32>) -> Result<Self> {
+        let n: usize = shape.iter().product();
+        ensure!(
+            n == data.len(),
+            "shape {:?} wants {} elements, got {}",
+            shape,
+            n,
+            data.len()
+        );
+        Ok(Tensor { shape, data })
+    }
+
+    pub fn zeros(shape: Vec<usize>) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![0.0; n],
+        }
+    }
+
+    pub fn full(shape: Vec<usize>, v: f32) -> Self {
+        let n = shape.iter().product();
+        Tensor {
+            shape,
+            data: vec![v; n],
+        }
+    }
+
+    pub fn scalar(v: f32) -> Self {
+        Tensor {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Rows × cols for 2-D tensors.
+    pub fn dims2(&self) -> Result<(usize, usize)> {
+        ensure!(self.shape.len() == 2, "expected 2-D, got {:?}", self.shape);
+        Ok((self.shape[0], self.shape[1]))
+    }
+
+    /// `v (1,d_in)  @ self (d_in,d_out)` — used to fold OmniQuant's δ·W bias.
+    pub fn vecmat(&self, v: &[f32]) -> Result<Vec<f32>> {
+        let (d_in, d_out) = self.dims2()?;
+        ensure!(v.len() == d_in, "vecmat dim mismatch");
+        let mut out = vec![0.0f32; d_out];
+        for (i, &vi) in v.iter().enumerate() {
+            if vi == 0.0 {
+                continue;
+            }
+            let row = &self.data[i * d_out..(i + 1) * d_out];
+            for (o, &w) in out.iter_mut().zip(row) {
+                *o += vi * w;
+            }
+        }
+        Ok(out)
+    }
+
+    /// Mean absolute value (diagnostics).
+    pub fn mean_abs(&self) -> f32 {
+        if self.data.is_empty() {
+            return 0.0;
+        }
+        self.data.iter().map(|x| x.abs()).sum::<f32>() / self.data.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn new_checks_shape() {
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 6]).is_ok());
+        assert!(Tensor::new(vec![2, 3], vec![0.0; 5]).is_err());
+    }
+
+    #[test]
+    fn vecmat_matches_manual() {
+        let w = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let out = w.vecmat(&[1.0, 10.0]).unwrap();
+        assert_eq!(out, vec![41.0, 52.0, 63.0]);
+    }
+
+    #[test]
+    fn scalar_shape() {
+        let t = Tensor::scalar(3.0);
+        assert!(t.shape.is_empty());
+        assert_eq!(t.len(), 1);
+    }
+}

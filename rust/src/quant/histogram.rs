@@ -1,0 +1,82 @@
+//! Quantized-code histograms (paper Fig. 1c / Fig. 4).
+//!
+//! The paper's key mechanistic observation is that MatQuant training
+//! *right-shifts* the quantized weight distribution — more mass in the
+//! higher-valued buckets — which is what rescues int2.  These helpers
+//! compute and compare the histograms used by `experiment --fig 1c`.
+
+/// Histogram of integer-valued codes over `[0, 2^bits)`.
+pub fn code_histogram(codes: &[f32], bits: u32) -> Vec<u64> {
+    let n = 1usize << bits;
+    let mut h = vec![0u64; n];
+    for &c in codes {
+        let i = (c as i64).clamp(0, n as i64 - 1) as usize;
+        h[i] += 1;
+    }
+    h
+}
+
+/// Mean bucket id — a single-number summary of the right-shift effect.
+pub fn mean_code(codes: &[f32]) -> f64 {
+    if codes.is_empty() {
+        return 0.0;
+    }
+    codes.iter().map(|&c| c as f64).sum::<f64>() / codes.len() as f64
+}
+
+/// Fraction of codes at or above the midpoint bucket.
+pub fn upper_half_mass(codes: &[f32], bits: u32) -> f64 {
+    if codes.is_empty() {
+        return 0.0;
+    }
+    let mid = (1u32 << (bits - 1)) as f32;
+    codes.iter().filter(|&&c| c >= mid).count() as f64 / codes.len() as f64
+}
+
+/// Render a terminal bar chart (used by the fig-1c experiment output).
+pub fn render_histogram(h: &[u64], width: usize) -> String {
+    let max = h.iter().copied().max().unwrap_or(1).max(1);
+    let mut out = String::new();
+    for (i, &v) in h.iter().enumerate() {
+        let bar = "#".repeat(((v as f64 / max as f64) * width as f64).round() as usize);
+        out.push_str(&format!("{i:>4} | {bar} {v}\n"));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_counts() {
+        let codes = vec![0.0, 1.0, 1.0, 3.0, 3.0, 3.0];
+        assert_eq!(code_histogram(&codes, 2), vec![1, 2, 0, 3]);
+    }
+
+    #[test]
+    fn clamps_out_of_range() {
+        let codes = vec![-1.0, 4.0, 2.0];
+        assert_eq!(code_histogram(&codes, 2), vec![1, 0, 1, 1]);
+    }
+
+    #[test]
+    fn upper_half() {
+        let codes = vec![0.0, 1.0, 2.0, 3.0];
+        assert_eq!(upper_half_mass(&codes, 2), 0.5);
+    }
+
+    #[test]
+    fn mean_shift_detects_right_shift() {
+        let baseline = vec![0.0, 1.0, 1.0, 2.0];
+        let shifted = vec![1.0, 2.0, 2.0, 3.0];
+        assert!(mean_code(&shifted) > mean_code(&baseline));
+    }
+
+    #[test]
+    fn render_smoke() {
+        let h = code_histogram(&[0.0, 1.0, 1.0], 1);
+        let s = render_histogram(&h, 10);
+        assert!(s.contains('#'));
+    }
+}

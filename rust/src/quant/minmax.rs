@@ -1,0 +1,194 @@
+//! MinMax (Eq. 1) and OmniQuant (Eq. 3) affine quantization.
+//!
+//! Weight matrices are row-major `(d_in, d_out)`; scales are per *output
+//! channel* (one `(alpha, zero)` per column), matching the L2 model and
+//! the L1 kernels.
+
+use super::{round_half_up, EPS};
+
+/// Per-channel affine quantization parameters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Scales {
+    /// Bit-width the scales were computed for.
+    pub bits: u32,
+    /// `alpha[j] = (γ·max_j − β·min_j) / (2^bits − 1)` per column `j`.
+    pub alpha: Vec<f32>,
+    /// `zero[j] = −β·min_j / alpha[j]`.
+    pub zero: Vec<f32>,
+}
+
+impl Scales {
+    pub fn d_out(&self) -> usize {
+        self.alpha.len()
+    }
+}
+
+/// Column-wise min/max of a row-major `(d_in, d_out)` matrix.
+pub fn col_min_max(w: &[f32], d_in: usize, d_out: usize) -> (Vec<f32>, Vec<f32>) {
+    assert_eq!(w.len(), d_in * d_out, "shape mismatch");
+    let mut mins = vec![f32::INFINITY; d_out];
+    let mut maxs = vec![f32::NEG_INFINITY; d_out];
+    for row in w.chunks_exact(d_out) {
+        for (j, &x) in row.iter().enumerate() {
+            if x < mins[j] {
+                mins[j] = x;
+            }
+            if x > maxs[j] {
+                maxs[j] = x;
+            }
+        }
+    }
+    (mins, maxs)
+}
+
+/// MinMax scales (Eq. 1): `γ = β = 1`.
+pub fn minmax_scales(w: &[f32], d_in: usize, d_out: usize, bits: u32) -> Scales {
+    omni_scales(w, d_in, d_out, bits, None, None)
+}
+
+/// OmniQuant scales (Eq. 3) with optional per-column clipping factors.
+pub fn omni_scales(
+    w: &[f32],
+    d_in: usize,
+    d_out: usize,
+    bits: u32,
+    gamma: Option<&[f32]>,
+    beta: Option<&[f32]>,
+) -> Scales {
+    let (mins, maxs) = col_min_max(w, d_in, d_out);
+    let levels = (1u32 << bits) as f32 - 1.0;
+    let mut alpha = Vec::with_capacity(d_out);
+    let mut zero = Vec::with_capacity(d_out);
+    for j in 0..d_out {
+        let g = gamma.map_or(1.0, |g| g[j]);
+        let b = beta.map_or(1.0, |b| b[j]);
+        let mut a = (g * maxs[j] - b * mins[j]) / levels;
+        if a.abs() < EPS {
+            a = EPS;
+        }
+        alpha.push(a);
+        zero.push(-(b * mins[j]) / a);
+    }
+    Scales { bits, alpha, zero }
+}
+
+/// Quantize one value for column `j`: `clamp(⌊w/α + z⌉, 0, 2^bits − 1)`.
+#[inline(always)]
+pub fn quantize_one(w: f32, alpha: f32, zero: f32, bits: u32) -> f32 {
+    let levels = (1u32 << bits) as f32 - 1.0;
+    round_half_up(w / alpha + zero).clamp(0.0, levels)
+}
+
+/// Quantize a `(d_in, d_out)` matrix to unsigned codes (f32 storage, like
+/// the L1 kernels — integers up to 255 are exact in f32).
+pub fn quantize(w: &[f32], d_out: usize, scales: &Scales) -> Vec<f32> {
+    assert_eq!(scales.d_out(), d_out);
+    w.chunks_exact(d_out)
+        .flat_map(|row| {
+            row.iter()
+                .enumerate()
+                .map(|(j, &x)| quantize_one(x, scales.alpha[j], scales.zero[j], scales.bits))
+        })
+        .collect()
+}
+
+/// Dequantize codes back to weights: `(q − z)·α`.
+pub fn dequantize(q: &[f32], d_out: usize, scales: &Scales) -> Vec<f32> {
+    q.chunks_exact(d_out)
+        .flat_map(|row| {
+            row.iter()
+                .enumerate()
+                .map(|(j, &c)| (c - scales.zero[j]) * scales.alpha[j])
+        })
+        .collect()
+}
+
+/// Dequantize into a caller-provided buffer (hot path, no allocation).
+pub fn dequantize_into(q: &[f32], d_out: usize, scales: &Scales, out: &mut [f32]) {
+    assert_eq!(q.len(), out.len());
+    for (qrow, orow) in q.chunks_exact(d_out).zip(out.chunks_exact_mut(d_out)) {
+        for j in 0..d_out {
+            orow[j] = (qrow[j] - scales.zero[j]) * scales.alpha[j];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy() -> (Vec<f32>, usize, usize) {
+        // 3x2: column 0 spans [-1, 1], column 1 spans [0, 4]
+        (vec![-1.0, 0.0, 0.0, 2.0, 1.0, 4.0], 3, 2)
+    }
+
+    #[test]
+    fn scales_basic() {
+        let (w, di, dd) = toy();
+        let s = minmax_scales(&w, di, dd, 2);
+        // col0: (1 - -1)/3, col1: (4-0)/3
+        assert!((s.alpha[0] - 2.0 / 3.0).abs() < 1e-6);
+        assert!((s.alpha[1] - 4.0 / 3.0).abs() < 1e-6);
+        assert!((s.zero[0] - 1.5).abs() < 1e-6);
+        assert_eq!(s.zero[1], 0.0);
+    }
+
+    #[test]
+    fn quantize_round_trip_error_bound() {
+        let (w, di, dd) = toy();
+        for bits in [2, 3, 4, 6, 8] {
+            let s = minmax_scales(&w, di, dd, bits);
+            let q = quantize(&w, dd, &s);
+            let wq = dequantize(&q, dd, &s);
+            for (i, (&a, &b)) in w.iter().zip(wq.iter()).enumerate() {
+                let j = i % dd;
+                assert!(
+                    (a - b).abs() <= s.alpha[j] / 2.0 + 1e-5,
+                    "bits={bits} i={i}: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn codes_hit_extremes() {
+        let (w, di, dd) = toy();
+        let s = minmax_scales(&w, di, dd, 4);
+        let q = quantize(&w, dd, &s);
+        // min maps to 0, max to 15 in each column
+        assert_eq!(q[0], 0.0); // -1 in col 0
+        assert_eq!(q[4], 15.0); // 1 in col 0
+        assert_eq!(q[1], 0.0); // 0 in col 1
+        assert_eq!(q[5], 15.0); // 4 in col 1
+    }
+
+    #[test]
+    fn constant_column_is_finite() {
+        let w = vec![0.5; 8];
+        let s = minmax_scales(&w, 4, 2, 8);
+        let q = quantize(&w, 2, &s);
+        let wq = dequantize(&q, 2, &s);
+        assert!(wq.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn omni_clipping_halves_range() {
+        let w: Vec<f32> = (0..64).map(|i| (i as f32 / 63.0) * 2.0 - 1.0).collect();
+        let g = vec![0.5f32];
+        let s = omni_scales(&w, 64, 1, 8, Some(&g), Some(&g));
+        let q = quantize(&w, 1, &s);
+        let wq = dequantize(&q, 1, &s);
+        let m = wq.iter().cloned().fold(f32::MIN, f32::max);
+        assert!(m <= 0.5 + 1e-4, "max {m}");
+    }
+
+    #[test]
+    fn round_half_up_matches_paper() {
+        assert_eq!(round_half_up(0.5), 1.0);
+        assert_eq!(round_half_up(1.5), 2.0);
+        assert_eq!(round_half_up(2.5), 3.0); // round-half-even would give 2
+        assert_eq!(round_half_up(0.49), 0.0);
+    }
+
+    use super::super::round_half_up;
+}

@@ -1,0 +1,35 @@
+//! The nested-integer quantization algebra (paper §3), in Rust.
+//!
+//! Semantics are bit-for-bit identical to the L1 oracles in
+//! `python/compile/kernels/ref.py` — enforced by the golden-vector test
+//! (`tests/goldens.rs`) against `artifacts/goldens.json`:
+//!
+//! * round-half-up `floor(x + 0.5)` (the paper's Appendix A rounding),
+//! * per-output-channel MinMax / OmniQuant affine scales (Eq. 1 / Eq. 3),
+//! * MSB slicing `S(q^c, r)` with clamp (Eq. 6) and the Extra-Precision
+//!   variant without clamp (Eq. 8, `2^r + 1` buckets),
+//! * bit-packed storage for 2/3/4/6/8-bit codes plus the sparse
+//!   extra-bit overlay that realizes the paper's 2.05-avg-bits models.
+
+pub mod histogram;
+pub mod minmax;
+pub mod packed;
+pub mod slicing;
+
+pub use histogram::{code_histogram, mean_code, render_histogram, upper_half_mass};
+pub use minmax::{
+    col_min_max, dequantize, dequantize_into, minmax_scales, omni_scales, quantize, Scales,
+};
+pub use packed::{ExtraBitOverlay, PackedTensor};
+pub use slicing::{
+    effective_bits, overflow_fraction, slice_code, slice_codes, slice_codes_into,
+};
+
+/// `floor(x + 0.5)` — the paper's round-half-up for non-negative operands.
+#[inline(always)]
+pub fn round_half_up(x: f32) -> f32 {
+    (x + 0.5).floor()
+}
+
+/// Epsilon guarding degenerate (constant) channels; matches ref.py.
+pub const EPS: f32 = 1e-8;

@@ -1,0 +1,154 @@
+//! The Matryoshka slicing operator `S(q^c, r)` — paper Eq. 6 and Eq. 8.
+//!
+//! Slicing keeps the `r` most-significant bits of a `c`-bit code and
+//! returns the result in c-bit scale space (multiples of `2^(c-r)`), so a
+//! single stored int8 tensor + one `(alpha, zero)` pair serves *every*
+//! precision.  Eq. 6 clamps the rounded value to `2^r − 1`; Eq. 8 (the
+//! errata's Extra-Precision variant) does not, admitting `2^r + 1` buckets
+//! whose overflow entries cost one extra stored bit (→ 2.05-avg-bit int2).
+
+use super::round_half_up;
+
+/// Slice one code. `q` must be an integer-valued f32 in `[0, 2^c)`.
+#[inline(always)]
+pub fn slice_code(q: f32, c: u32, r: u32, extra_precision: bool) -> f32 {
+    debug_assert!(r <= c);
+    if r == c {
+        return q;
+    }
+    let step = (1u32 << (c - r)) as f32;
+    let mut s = round_half_up(q / step);
+    if !extra_precision {
+        s = s.clamp(0.0, (1u32 << r) as f32 - 1.0);
+    }
+    s * step
+}
+
+/// Slice a whole code tensor.
+pub fn slice_codes(q: &[f32], c: u32, r: u32, extra_precision: bool) -> Vec<f32> {
+    q.iter()
+        .map(|&x| slice_code(x, c, r, extra_precision))
+        .collect()
+}
+
+/// Slice into a caller-provided buffer (hot path).
+pub fn slice_codes_into(q: &[f32], c: u32, r: u32, extra_precision: bool, out: &mut [f32]) {
+    assert_eq!(q.len(), out.len());
+    if r == c {
+        out.copy_from_slice(q);
+        return;
+    }
+    let step = (1u32 << (c - r)) as f32;
+    let inv = 1.0 / step;
+    let hi = (1u32 << r) as f32 - 1.0;
+    if extra_precision {
+        for (o, &x) in out.iter_mut().zip(q) {
+            *o = round_half_up(x * inv) * step;
+        }
+    } else {
+        for (o, &x) in out.iter_mut().zip(q) {
+            *o = round_half_up(x * inv).clamp(0.0, hi) * step;
+        }
+    }
+}
+
+/// Average stored bits/param at precision `r` for Extra-Precision slicing:
+/// `r + fraction_of_overflow_codes` (paper Table 7's "Avg. Bits" column).
+pub fn effective_bits(q: &[f32], c: u32, r: u32) -> f64 {
+    if q.is_empty() || r == c {
+        return r as f64;
+    }
+    let step = (1u32 << (c - r)) as f32;
+    let top = (1u32 << r) as f32;
+    let overflow = q
+        .iter()
+        .filter(|&&x| round_half_up(x / step) >= top)
+        .count();
+    r as f64 + overflow as f64 / q.len() as f64
+}
+
+/// Fraction of codes that land in the Eq. 8 overflow bucket.
+pub fn overflow_fraction(q: &[f32], c: u32, r: u32) -> f64 {
+    effective_bits(q, c, r) - r as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_errata_example_234() {
+        // 234 → round(234/64)=4 → clamp 3 → 192; EP keeps 4 → 256.
+        assert_eq!(slice_code(234.0, 8, 2, false), 192.0);
+        assert_eq!(slice_code(234.0, 8, 2, true), 256.0);
+    }
+
+    #[test]
+    fn paper_appendix_example_53() {
+        // 53 = 0b00110101: bit just below the slice boundary is set → round
+        // up into bucket 1 (64), not down to 0.
+        assert_eq!(slice_code(53.0, 8, 2, false), 64.0);
+    }
+
+    #[test]
+    fn paper_appendix_example_240() {
+        assert_eq!(slice_code(240.0, 8, 2, false), 192.0);
+    }
+
+    #[test]
+    fn full_width_is_identity() {
+        for q in 0..256 {
+            assert_eq!(slice_code(q as f32, 8, 8, false), q as f32);
+        }
+    }
+
+    #[test]
+    fn matches_shift_arithmetic_all_codes() {
+        for r in [2u32, 3, 4, 6] {
+            let shift = 8 - r;
+            for q in 0..256u32 {
+                let rounded = ((q + (1 << (shift - 1))) >> shift).min((1 << r) - 1);
+                let expect = (rounded << shift) as f32;
+                assert_eq!(slice_code(q as f32, 8, r, false), expect, "q={q} r={r}");
+            }
+        }
+    }
+
+    #[test]
+    fn extra_precision_has_one_more_bucket() {
+        for r in [2u32, 3, 4, 6] {
+            let codes: Vec<f32> = (0..256).map(|x| x as f32).collect();
+            let sliced = slice_codes(&codes, 8, r, true);
+            let step = (1u32 << (8 - r)) as f32;
+            let mut buckets: Vec<i64> = sliced.iter().map(|&s| (s / step) as i64).collect();
+            buckets.sort_unstable();
+            buckets.dedup();
+            assert_eq!(buckets.len(), (1usize << r) + 1, "r={r}");
+            assert_eq!(*buckets.last().unwrap(), 1i64 << r);
+        }
+    }
+
+    #[test]
+    fn into_matches_alloc_version() {
+        let codes: Vec<f32> = (0..256).map(|x| x as f32).collect();
+        for r in [2u32, 3, 4, 6, 8] {
+            for ep in [false, true] {
+                let a = slice_codes(&codes, 8, r, ep);
+                let mut b = vec![0.0; 256];
+                slice_codes_into(&codes, 8, r, ep, &mut b);
+                assert_eq!(a, b);
+            }
+        }
+    }
+
+    #[test]
+    fn effective_bits_bounds() {
+        let codes: Vec<f32> = (0..256).map(|x| x as f32).collect();
+        for r in [2u32, 3, 4, 6] {
+            let eb = effective_bits(&codes, 8, r);
+            // uniform codes: overflow bucket holds step/2 of 256 codes
+            let expect = r as f64 + (1u32 << (8 - r - 1)) as f64 / 256.0;
+            assert!((eb - expect).abs() < 1e-9, "r={r} eb={eb} expect={expect}");
+        }
+    }
+}

@@ -1,0 +1,214 @@
+//! The PJRT engine: one CPU client, a lazily-populated executable cache.
+//!
+//! HLO **text** is the interchange format (`HloModuleProto::from_text_file`
+//! reassigns instruction ids; serialized jax≥0.5 protos are rejected by
+//! xla_extension 0.5.1 — see DESIGN.md / aot.py).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use anyhow::Context;
+
+use super::literal::tensor_from_literal;
+use crate::model::{Manifest, Tensor};
+use crate::Result;
+
+/// Wraps the PJRT CPU client and caches compiled executables by
+/// `"preset/name"` key.  Not `Send`: keep it on one worker thread (the
+/// serving stack does exactly that).
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    /// Cumulative (compile_ms, execute_ms, executions) metrics.
+    pub stats: RefCell<EngineStats>,
+    /// Literals pending async host→device copies: `BufferFromHostLiteral`
+    /// copies asynchronously, so the source literal must outlive the copy.
+    /// We park them here and drop after the next synchronizing fetch.
+    pending_uploads: RefCell<Vec<xla::Literal>>,
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct EngineStats {
+    pub compile_ms: f64,
+    pub execute_ms: f64,
+    pub executions: u64,
+    pub compiles: u64,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+            pending_uploads: RefCell::new(Vec::new()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile (or fetch cached) `preset/name`.
+    fn executable(&self, preset: &str, name: &str) -> Result<()> {
+        let key = format!("{preset}/{name}");
+        if self.cache.borrow().contains_key(&key) {
+            return Ok(());
+        }
+        let path = self.manifest.artifact_path(preset, name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow::anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {key}"))?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut st = self.stats.borrow_mut();
+        st.compile_ms += ms;
+        st.compiles += 1;
+        drop(st);
+        self.cache.borrow_mut().insert(key, exe);
+        Ok(())
+    }
+
+    /// Pre-compile a set of artifacts (amortize before the hot loop).
+    pub fn warmup(&self, preset: &str, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(preset, n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `preset/name` with literal inputs; returns all outputs as
+    /// host f32 tensors.  Handles both output layouts: a single tuple
+    /// buffer (`return_tuple=True` lowering) or one buffer per output.
+    pub fn run(&self, preset: &str, name: &str, args: &[xla::Literal]) -> Result<Vec<Tensor>> {
+        self.executable(preset, name)?;
+        let key = format!("{preset}/{name}");
+        let cache = self.cache.borrow();
+        let exe = cache.get(&key).unwrap();
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<xla::Literal>(args)
+            .with_context(|| format!("executing {key}"))?;
+        let out = self.collect_host(&result[0])?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut st = self.stats.borrow_mut();
+        st.execute_ms += ms;
+        st.executions += 1;
+        drop(st);
+        Ok(out)
+    }
+
+    /// Like [`Engine::run`] but takes borrowed literals — callers that
+    /// reuse a large argument prefix (the eval weight set) avoid cloning.
+    pub fn run_refs(
+        &self,
+        preset: &str,
+        name: &str,
+        args: &[&xla::Literal],
+    ) -> Result<Vec<Tensor>> {
+        self.executable(preset, name)?;
+        let key = format!("{preset}/{name}");
+        let cache = self.cache.borrow();
+        let exe = cache.get(&key).unwrap();
+        let t0 = Instant::now();
+        let result = exe
+            .execute::<&xla::Literal>(args)
+            .with_context(|| format!("executing {key}"))?;
+        let out = self.collect_host(&result[0])?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut st = self.stats.borrow_mut();
+        st.execute_ms += ms;
+        st.executions += 1;
+        drop(st);
+        Ok(out)
+    }
+
+    fn collect_host(&self, bufs: &[xla::PjRtBuffer]) -> Result<Vec<Tensor>> {
+        if bufs.len() == 1 {
+            let lit = bufs[0]
+                .to_literal_sync()
+                .context("fetching result literal")?;
+            // single tuple output → decompose; single array output → as-is
+            if let Ok(t) = tensor_from_literal(&lit) {
+                return Ok(vec![t]);
+            }
+            return lit.to_tuple()?.iter().map(tensor_from_literal).collect();
+        }
+        bufs.iter()
+            .map(|b| tensor_from_literal(&b.to_literal_sync()?))
+            .collect()
+    }
+
+    /// Upload a host literal to a device buffer (for buffer-resident state).
+    ///
+    /// Takes ownership: the copy is asynchronous, so the literal is parked
+    /// in `pending_uploads` and freed after the next synchronizing
+    /// [`Engine::fetch`].
+    pub fn to_buffer(&self, lit: xla::Literal) -> Result<xla::PjRtBuffer> {
+        let buf = self
+            .client
+            .buffer_from_host_literal(None, &lit)
+            .context("uploading literal to device")?;
+        self.pending_uploads.borrow_mut().push(lit);
+        Ok(buf)
+    }
+
+    /// Execute with device-resident buffer inputs, returning the raw output
+    /// buffers (no host round-trip).  Only meaningful for artifacts lowered
+    /// with untupled outputs (one buffer per output); for tuple-rooted
+    /// artifacts this returns the single tuple buffer.
+    pub fn run_b(
+        &self,
+        preset: &str,
+        name: &str,
+        args: &[&xla::PjRtBuffer],
+    ) -> Result<Vec<xla::PjRtBuffer>> {
+        self.executable(preset, name)?;
+        let key = format!("{preset}/{name}");
+        let cache = self.cache.borrow();
+        let exe = cache.get(&key).unwrap();
+        let t0 = Instant::now();
+        let mut result = exe
+            .execute_b(args)
+            .with_context(|| format!("executing (buffers) {key}"))?;
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        let mut st = self.stats.borrow_mut();
+        st.execute_ms += ms;
+        st.executions += 1;
+        drop(st);
+        Ok(result.swap_remove(0))
+    }
+
+    /// Fetch one output buffer to a host tensor.  This synchronizes the
+    /// device stream, so parked upload literals become safe to free —
+    /// provided `buf` transitively depends on those uploads (true for the
+    /// train loop: the loss buffer is produced by the step execution that
+    /// consumed every upload).
+    pub fn fetch(&self, buf: &xla::PjRtBuffer) -> Result<Tensor> {
+        let t = tensor_from_literal(&buf.to_literal_sync()?)?;
+        self.pending_uploads.borrow_mut().clear();
+        Ok(t)
+    }
+
+    /// Number of compiled executables resident.
+    pub fn compiled_count(&self) -> usize {
+        self.cache.borrow().len()
+    }
+}

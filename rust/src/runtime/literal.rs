@@ -1,0 +1,38 @@
+//! Host `Tensor` ⇄ `xla::Literal` conversions.
+
+use anyhow::Context;
+
+use crate::model::Tensor;
+use crate::Result;
+
+/// f32 tensor → literal with shape.
+pub fn lit_tensor(t: &Tensor) -> Result<xla::Literal> {
+    if t.shape.is_empty() {
+        return Ok(xla::Literal::scalar(t.data[0]));
+    }
+    let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(&t.data)
+        .reshape(&dims)
+        .context("reshaping f32 literal")
+}
+
+/// i32 data + shape → literal (token batches).
+pub fn lit_i32(shape: &[usize], data: &[i32]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .context("reshaping i32 literal")
+}
+
+/// i32 scalar literal (step counters, seeds).
+pub fn lit_scalar_i32(v: i32) -> xla::Literal {
+    xla::Literal::scalar(v)
+}
+
+/// literal → host f32 tensor (shape recovered from the literal).
+pub fn tensor_from_literal(lit: &xla::Literal) -> Result<Tensor> {
+    let shape = lit.array_shape().context("literal has no array shape")?;
+    let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+    let data = lit.to_vec::<f32>().context("literal is not f32")?;
+    Tensor::new(dims, data)
+}

@@ -1,0 +1,8 @@
+//! PJRT runtime — loads `artifacts/*.hlo.txt`, compiles once, executes from
+//! the coordinator hot path.  Python never runs here.
+
+pub mod engine;
+pub mod literal;
+
+pub use engine::Engine;
+pub use literal::{lit_i32, lit_scalar_i32, lit_tensor, tensor_from_literal};

@@ -1,0 +1,196 @@
+//! Dynamic micro-batching: group pending requests by precision, flush on
+//! size or age, pad to the nearest exported batch bucket.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use super::request::Request;
+
+/// A batch ready to execute.
+#[derive(Debug)]
+pub struct ReadyBatch {
+    pub bits: u32,
+    pub requests: Vec<(Request, Instant)>,
+    /// Bucketed batch size (≥ requests.len()).
+    pub bucket: usize,
+}
+
+/// Precision-aware micro-batcher.
+#[derive(Debug)]
+pub struct DynamicBatcher {
+    queues: BTreeMap<u32, Vec<(Request, Instant)>>,
+    pub max_batch: usize,
+    pub max_wait_ms: f64,
+    buckets: Vec<usize>,
+}
+
+impl DynamicBatcher {
+    pub fn new(buckets: Vec<usize>, max_wait_ms: f64) -> Self {
+        let max_batch = buckets.iter().copied().max().unwrap_or(1);
+        DynamicBatcher {
+            queues: BTreeMap::new(),
+            max_batch,
+            max_wait_ms,
+            buckets,
+        }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        let bits = req.precision.bits();
+        self.queues
+            .entry(bits)
+            .or_default()
+            .push((req, Instant::now()));
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queues.values().map(|q| q.len()).sum()
+    }
+
+    /// Smallest exported bucket that fits `n` (or the max bucket).
+    pub fn bucket_for(&self, n: usize) -> usize {
+        self.buckets
+            .iter()
+            .copied()
+            .filter(|&b| b >= n)
+            .min()
+            .unwrap_or(self.max_batch)
+    }
+
+    /// Pop a batch if any queue is full or its oldest entry exceeded the
+    /// wait window.  Full queues win; ties break toward the oldest.
+    pub fn pop_ready(&mut self, now: Instant) -> Option<ReadyBatch> {
+        let mut candidate: Option<(u32, bool, f64)> = None; // (bits, full, age)
+        for (&bits, q) in &self.queues {
+            if q.is_empty() {
+                continue;
+            }
+            let full = q.len() >= self.max_batch;
+            let age = now.duration_since(q[0].1).as_secs_f64() * 1e3;
+            let ready = full || age >= self.max_wait_ms;
+            if !ready {
+                continue;
+            }
+            let better = match candidate {
+                None => true,
+                Some((_, cfull, cage)) => (full && !cfull) || (full == cfull && age > cage),
+            };
+            if better {
+                candidate = Some((bits, full, age));
+            }
+        }
+        let (bits, _, _) = candidate?;
+        let q = self.queues.get_mut(&bits).unwrap();
+        let take = q.len().min(self.max_batch);
+        let requests: Vec<_> = q.drain(..take).collect();
+        let bucket = self.bucket_for(requests.len());
+        Some(ReadyBatch {
+            bits,
+            requests,
+            bucket,
+        })
+    }
+
+    /// Flush everything regardless of age (shutdown path).
+    pub fn drain_all(&mut self) -> Vec<ReadyBatch> {
+        let mut out = Vec::new();
+        let bits_list: Vec<u32> = self.queues.keys().copied().collect();
+        let buckets = self.buckets.clone();
+        let max_batch = self.max_batch;
+        let bucket_for = |n: usize| {
+            buckets
+                .iter()
+                .copied()
+                .filter(|&b| b >= n)
+                .min()
+                .unwrap_or(max_batch)
+        };
+        for bits in bits_list {
+            let q = self.queues.get_mut(&bits).unwrap();
+            while !q.is_empty() {
+                let take = q.len().min(max_batch);
+                let requests: Vec<_> = q.drain(..take).collect();
+                let bucket = bucket_for(requests.len());
+                out.push(ReadyBatch {
+                    bits,
+                    requests,
+                    bucket,
+                });
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::PrecisionReq;
+
+    fn req(id: u64, bits: u32) -> Request {
+        Request {
+            id,
+            prompt: vec![1, 2, 3],
+            precision: PrecisionReq::Bits(bits),
+        }
+    }
+
+    #[test]
+    fn bucket_selection() {
+        let b = DynamicBatcher::new(vec![1, 2, 4, 8, 16], 5.0);
+        assert_eq!(b.bucket_for(1), 1);
+        assert_eq!(b.bucket_for(3), 4);
+        assert_eq!(b.bucket_for(9), 16);
+        assert_eq!(b.bucket_for(40), 16);
+    }
+
+    #[test]
+    fn full_queue_pops_immediately() {
+        let mut b = DynamicBatcher::new(vec![1, 2, 4], 1000.0);
+        for i in 0..4 {
+            b.push(req(i, 4));
+        }
+        let ready = b.pop_ready(Instant::now()).expect("full queue ready");
+        assert_eq!(ready.bits, 4);
+        assert_eq!(ready.requests.len(), 4);
+        assert_eq!(b.pending(), 0);
+    }
+
+    #[test]
+    fn young_partial_queue_waits() {
+        let mut b = DynamicBatcher::new(vec![1, 2, 4], 1000.0);
+        b.push(req(0, 2));
+        assert!(b.pop_ready(Instant::now()).is_none());
+    }
+
+    #[test]
+    fn old_partial_queue_flushes() {
+        let mut b = DynamicBatcher::new(vec![1, 2, 4], 0.0);
+        b.push(req(0, 2));
+        let ready = b.pop_ready(Instant::now()).expect("aged queue ready");
+        assert_eq!(ready.requests.len(), 1);
+        assert_eq!(ready.bucket, 1);
+    }
+
+    #[test]
+    fn precisions_never_mix() {
+        let mut b = DynamicBatcher::new(vec![1, 2, 4], 0.0);
+        b.push(req(0, 2));
+        b.push(req(1, 8));
+        let first = b.pop_ready(Instant::now()).unwrap();
+        assert!(first.requests.iter().all(|(r, _)| r.precision.bits() == first.bits));
+        let second = b.pop_ready(Instant::now()).unwrap();
+        assert_ne!(first.bits, second.bits);
+    }
+
+    #[test]
+    fn drain_all_empties() {
+        let mut b = DynamicBatcher::new(vec![1, 2, 4], 1000.0);
+        for i in 0..9 {
+            b.push(req(i, if i % 2 == 0 { 2 } else { 8 }));
+        }
+        let batches = b.drain_all();
+        assert_eq!(b.pending(), 0);
+        assert_eq!(batches.iter().map(|x| x.requests.len()).sum::<usize>(), 9);
+    }
+}

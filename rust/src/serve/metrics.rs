@@ -1,0 +1,106 @@
+//! Serving telemetry: latency percentiles, throughput, per-precision mix.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+#[derive(Debug)]
+pub struct Metrics {
+    start: Instant,
+    latencies_ms: Vec<f64>,
+    per_bits: BTreeMap<u32, u64>,
+    batch_sizes: Vec<usize>,
+    pub requests: u64,
+    pub batches: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Metrics {
+            start: Instant::now(),
+            latencies_ms: Vec::new(),
+            per_bits: BTreeMap::new(),
+            batch_sizes: Vec::new(),
+            requests: 0,
+            batches: 0,
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record(&mut self, latency_ms: f64, bits: u32, batch_size: usize) {
+        self.latencies_ms.push(latency_ms);
+        *self.per_bits.entry(bits).or_default() += 1;
+        self.requests += 1;
+        if batch_size > 0 {
+            self.batch_sizes.push(batch_size);
+        }
+    }
+
+    pub fn record_batch(&mut self) {
+        self.batches += 1;
+    }
+
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.latencies_ms.is_empty() {
+            return 0.0;
+        }
+        let mut v = self.latencies_ms.clone();
+        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let idx = ((v.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        v[idx]
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        let secs = self.start.elapsed().as_secs_f64().max(1e-9);
+        self.requests as f64 / secs
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batch_sizes.is_empty() {
+            return 0.0;
+        }
+        self.batch_sizes.iter().sum::<usize>() as f64 / self.batch_sizes.len() as f64
+    }
+
+    pub fn report(&self) -> String {
+        let mix: Vec<String> = self
+            .per_bits
+            .iter()
+            .map(|(b, n)| format!("int{b}:{n}"))
+            .collect();
+        format!(
+            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}]",
+            self.requests,
+            self.batches,
+            self.percentile(50.0),
+            self.percentile(99.0),
+            self.throughput_rps(),
+            self.mean_batch_size(),
+            mix.join(" ")
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentiles_ordered() {
+        let mut m = Metrics::default();
+        for i in 0..100 {
+            m.record(i as f64, 4, 1);
+        }
+        assert!(m.percentile(50.0) <= m.percentile(99.0));
+        assert_eq!(m.requests, 100);
+    }
+
+    #[test]
+    fn report_contains_mix() {
+        let mut m = Metrics::default();
+        m.record(1.0, 2, 4);
+        m.record(2.0, 8, 4);
+        let r = m.report();
+        assert!(r.contains("int2:1") && r.contains("int8:1"));
+    }
+}

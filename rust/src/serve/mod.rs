@@ -1,0 +1,19 @@
+//! Elastic-precision serving (paper §5.4): one stored int8 model, every
+//! request chooses its accuracy/latency/memory point.
+//!
+//! Architecture (vLLM-router-like, scaled to one host):
+//!   client → [Router] → per-precision queues → [DynamicBatcher]
+//!          → bucketed `fwd_b{B}` PJRT executables (worker thread owns the
+//!            Engine, which is not Send) → responses via channels.
+
+pub mod batcher;
+pub mod metrics;
+pub mod planner;
+pub mod request;
+pub mod server;
+
+pub use batcher::DynamicBatcher;
+pub use metrics::Metrics;
+pub use planner::{plan_deployment, DeploymentPlan};
+pub use request::{PrecisionReq, Request, Response};
+pub use server::{Server, ServerConfig};

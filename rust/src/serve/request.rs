@@ -1,0 +1,58 @@
+//! Request / response types for the elastic-precision server.
+
+/// What precision the client demands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrecisionReq {
+    /// A specific sliced bit-width (2/3/4/6/8).
+    Bits(u32),
+    /// "Best quality" — int8.
+    Best,
+    /// "Cheapest" — int2.
+    Cheapest,
+}
+
+impl PrecisionReq {
+    pub fn bits(&self) -> u32 {
+        match self {
+            PrecisionReq::Bits(b) => *b,
+            PrecisionReq::Best => 8,
+            PrecisionReq::Cheapest => 2,
+        }
+    }
+}
+
+/// One inference request: a token prompt + precision demand.
+#[derive(Debug, Clone)]
+pub struct Request {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub precision: PrecisionReq,
+}
+
+/// Next-token result + serving telemetry.
+#[derive(Debug, Clone)]
+pub struct Response {
+    pub id: u64,
+    pub next_token: i32,
+    /// Greedy-decode logit of the chosen token.
+    pub logit: f32,
+    pub bits: u32,
+    /// Queue + batch wait, ms.
+    pub queue_ms: f64,
+    /// PJRT execution share attributed to this request, ms.
+    pub compute_ms: f64,
+    /// Size of the batch this request rode in.
+    pub batch_size: usize,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precision_bits() {
+        assert_eq!(PrecisionReq::Best.bits(), 8);
+        assert_eq!(PrecisionReq::Cheapest.bits(), 2);
+        assert_eq!(PrecisionReq::Bits(3).bits(), 3);
+    }
+}

@@ -1,0 +1,260 @@
+//! The serving worker: a dedicated thread owns the (non-Send) PJRT engine
+//! and materialized weight sets; clients submit requests through an mpsc
+//! channel and receive responses on per-request channels.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use super::batcher::{DynamicBatcher, ReadyBatch};
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+use crate::model::{PrecisionAssignment, QuantizedModel, Tensor};
+use crate::runtime::{lit_i32, lit_tensor, Engine};
+use crate::Result;
+
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub preset: String,
+    /// Micro-batch window in ms.
+    pub max_wait_ms: f64,
+    /// Precisions to pre-materialize (others are built lazily).
+    pub warm_bits: Vec<u32>,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            preset: "tiny".into(),
+            max_wait_ms: 2.0,
+            warm_bits: vec![8, 4, 2],
+        }
+    }
+}
+
+enum Msg {
+    Submit(Request, Sender<Response>),
+    Report(Sender<String>),
+    Shutdown,
+}
+
+/// Client handle; the worker thread dies when this is dropped (after a
+/// `shutdown()` or implicitly via channel close + queue drain).
+pub struct Server {
+    tx: Sender<Msg>,
+    worker: Option<JoinHandle<()>>,
+}
+
+impl Server {
+    /// Boot the worker.  The PJRT engine is *not* `Send` (Rc + raw
+    /// pointers), so the worker thread constructs its own from
+    /// `artifacts_dir`; the quantized model registry is plain data and
+    /// moves in.
+    pub fn start(
+        artifacts_dir: std::path::PathBuf,
+        model: QuantizedModel,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let (boot_tx, boot_rx) = mpsc::channel::<Result<()>>();
+        let worker = std::thread::Builder::new()
+            .name("mq-serve-worker".into())
+            .spawn(move || {
+                let engine = match Engine::new(&artifacts_dir) {
+                    Ok(e) => {
+                        let _ = boot_tx.send(Ok(()));
+                        e
+                    }
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                worker_loop(engine, model, cfg, rx)
+            })
+            .context("spawning serve worker")?;
+        boot_rx.recv().context("worker boot")??;
+        Ok(Server {
+            tx,
+            worker: Some(worker),
+        })
+    }
+
+    /// Submit a request; returns the channel the response arrives on.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Response>> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Submit(req, tx))
+            .map_err(|_| anyhow::anyhow!("server worker is gone"))?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, req: Request) -> Result<Response> {
+        let rx = self.submit(req)?;
+        rx.recv().context("waiting for response")
+    }
+
+    pub fn metrics_report(&self) -> Result<String> {
+        let (tx, rx) = mpsc::channel();
+        self.tx
+            .send(Msg::Report(tx))
+            .map_err(|_| anyhow::anyhow!("server worker is gone"))?;
+        rx.recv().context("waiting for metrics")
+    }
+
+    pub fn shutdown(mut self) -> Result<()> {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+        Ok(())
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        let _ = self.tx.send(Msg::Shutdown);
+        if let Some(h) = self.worker.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+struct WeightSet {
+    weights: Vec<Tensor>,
+    biases: Vec<Tensor>,
+}
+
+fn worker_loop(engine: Engine, model: QuantizedModel, cfg: ServerConfig, rx: Receiver<Msg>) {
+    let preset = match engine.manifest().preset(&cfg.preset) {
+        Ok(p) => p.clone(),
+        Err(e) => {
+            eprintln!("serve worker: {e:#}");
+            return;
+        }
+    };
+    let seq = preset.model.seq_len;
+    let vocab = preset.model.vocab;
+    let mut batcher = DynamicBatcher::new(preset.fwd_batch_sizes.clone(), cfg.max_wait_ms);
+    let mut weight_sets: BTreeMap<u32, WeightSet> = BTreeMap::new();
+    let mut waiters: BTreeMap<u64, Sender<Response>> = BTreeMap::new();
+    let mut metrics = Metrics::default();
+
+    let materialize = |bits: u32, sets: &mut BTreeMap<u32, WeightSet>| {
+        if !sets.contains_key(&bits) {
+            match model.materialize(&PrecisionAssignment::uniform(bits)) {
+                Ok((weights, biases)) => {
+                    sets.insert(bits, WeightSet { weights, biases });
+                }
+                Err(e) => eprintln!("serve worker: materialize int{bits}: {e:#}"),
+            }
+        }
+    };
+    for &b in &cfg.warm_bits {
+        materialize(b, &mut weight_sets);
+    }
+
+    let mut running = true;
+    while running || batcher.pending() > 0 {
+        let timeout = Duration::from_micros((cfg.max_wait_ms * 500.0) as u64 + 100);
+        if running {
+            match rx.recv_timeout(timeout) {
+                Ok(Msg::Submit(req, tx)) => {
+                    waiters.insert(req.id, tx);
+                    batcher.push(req);
+                }
+                Ok(Msg::Report(tx)) => {
+                    let _ = tx.send(metrics.report());
+                }
+                Ok(Msg::Shutdown) => running = false,
+                Err(RecvTimeoutError::Timeout) => {}
+                Err(RecvTimeoutError::Disconnected) => running = false,
+            }
+        }
+        let ready = if running {
+            batcher.pop_ready(Instant::now())
+        } else {
+            batcher.drain_all().into_iter().next()
+        };
+        if let Some(batch) = ready {
+            materialize(batch.bits, &mut weight_sets);
+            if let Err(e) = execute_batch(
+                &engine,
+                &cfg.preset,
+                seq,
+                vocab,
+                &weight_sets,
+                batch,
+                &mut waiters,
+                &mut metrics,
+            ) {
+                eprintln!("serve worker: batch failed: {e:#}");
+            }
+        }
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn execute_batch(
+    engine: &Engine,
+    preset: &str,
+    seq: usize,
+    vocab: usize,
+    weight_sets: &BTreeMap<u32, WeightSet>,
+    batch: ReadyBatch,
+    waiters: &mut BTreeMap<u64, Sender<Response>>,
+    metrics: &mut Metrics,
+) -> Result<()> {
+    let ws = weight_sets
+        .get(&batch.bits)
+        .ok_or_else(|| anyhow::anyhow!("no weight set for int{}", batch.bits))?;
+    let bucket = batch.bucket;
+    let mut tokens = vec![0i32; bucket * seq];
+    let mut last_pos = vec![0usize; bucket];
+    for (i, (req, _)) in batch.requests.iter().enumerate() {
+        let n = req.prompt.len().min(seq);
+        tokens[i * seq..i * seq + n].copy_from_slice(&req.prompt[..n]);
+        last_pos[i] = n.saturating_sub(1);
+    }
+    let mut args: Vec<xla::Literal> =
+        Vec::with_capacity(ws.weights.len() + ws.biases.len() + 1);
+    for w in &ws.weights {
+        args.push(lit_tensor(w)?);
+    }
+    for b in &ws.biases {
+        args.push(lit_tensor(b)?);
+    }
+    args.push(lit_i32(&[bucket, seq], &tokens)?);
+    let t0 = Instant::now();
+    let out = engine.run(preset, &format!("fwd_b{bucket}"), &args)?;
+    let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+    metrics.record_batch();
+    let logits = &out[0]; // (bucket, seq, vocab)
+    let n_req = batch.requests.len();
+    for (i, (req, enq)) in batch.requests.into_iter().enumerate() {
+        let row = &logits.data[(i * seq + last_pos[i]) * vocab..(i * seq + last_pos[i] + 1) * vocab];
+        let (next_token, &logit) = row
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap();
+        let queue_ms = enq.elapsed().as_secs_f64() * 1e3 - compute_ms;
+        metrics.record(enq.elapsed().as_secs_f64() * 1e3, batch.bits, n_req);
+        if let Some(tx) = waiters.remove(&req.id) {
+            let _ = tx.send(Response {
+                id: req.id,
+                next_token: next_token as i32,
+                logit,
+                bits: batch.bits,
+                queue_ms: queue_ms.max(0.0),
+                compute_ms: compute_ms / n_req as f64,
+                batch_size: n_req,
+            });
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,93 @@
+//! Micro-benchmark harness (criterion substitute, offline build).
+//!
+//! Warms up, then runs timed batches until a wall-clock budget is spent;
+//! reports mean / p50 / p99 per-iteration times and derived throughput.
+
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn mean_us(&self) -> f64 {
+        self.mean_ns / 1e3
+    }
+
+    /// Items/sec given items processed per iteration.
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "{:<44} {:>10.2} us/iter  p50 {:>10.2}  p99 {:>10.2}  ({} iters)",
+            self.name,
+            self.mean_ns / 1e3,
+            self.p50_ns / 1e3,
+            self.p99_ns / 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Run `f` repeatedly for ~`budget`; returns timing stats.
+pub fn bench(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchResult {
+    // warmup: a few calls or 10% of budget
+    let warm_start = Instant::now();
+    for _ in 0..3 {
+        f();
+        if warm_start.elapsed() > budget / 10 {
+            break;
+        }
+    }
+    let mut samples_ns: Vec<f64> = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples_ns.len() < 5 {
+        let t0 = Instant::now();
+        f();
+        samples_ns.push(t0.elapsed().as_nanos() as f64);
+        if samples_ns.len() >= 1_000_000 {
+            break;
+        }
+    }
+    samples_ns.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples_ns.len();
+    let mean = samples_ns.iter().sum::<f64>() / n as f64;
+    BenchResult {
+        name: name.to_string(),
+        iters: n as u64,
+        mean_ns: mean,
+        p50_ns: samples_ns[n / 2],
+        p99_ns: samples_ns[(n * 99 / 100).min(n - 1)],
+    }
+}
+
+/// Default per-case budget, overridable via `MQ_BENCH_MS`.
+pub fn default_budget() -> Duration {
+    let ms = std::env::var("MQ_BENCH_MS")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(300u64);
+    Duration::from_millis(ms)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", Duration::from_millis(20), || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean_ns > 0.0);
+        assert!(r.p50_ns <= r.p99_ns);
+    }
+}

@@ -1,0 +1,120 @@
+//! Tiny CLI argument parser (clap substitute, offline build).
+//!
+//! Supports `--flag`, `--key value`, and positional arguments.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw argv (skipping the binary name).
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Result<Args> {
+        Args::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{key} expects an integer, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn get_u64(&self, key: &str, default: u64) -> Result<u64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{key} expects an integer, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn get_f32(&self, key: &str, default: f32) -> Result<f32> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => match v.parse() {
+                Ok(n) => Ok(n),
+                Err(_) => bail!("--{key} expects a float, got {v:?}"),
+            },
+        }
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from)).unwrap()
+    }
+
+    #[test]
+    fn mixed_args() {
+        // NB: a bare `--flag` followed by a non-dashed token is parsed as
+        // `--key value` (inherent ambiguity) — put flags last or use `=`.
+        let a = parse("train extra --preset tiny --steps=200 --verbose");
+        assert_eq!(a.positional, vec!["train", "extra"]);
+        assert_eq!(a.get("preset"), Some("tiny"));
+        assert_eq!(a.get_usize("steps", 0).unwrap(), 200);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("x");
+        assert_eq!(a.get_or("missing", "d"), "d");
+        assert_eq!(a.get_usize("n", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_int_errors() {
+        let a = parse("--steps abc");
+        assert!(a.get_usize("steps", 0).is_err());
+    }
+}

@@ -1,0 +1,11 @@
+//! Dependency-free utility substrates: JSON, CLI parsing, bench timing.
+//!
+//! The build is fully offline (only `xla` + `anyhow` are vendored), so the
+//! coordinator ships its own minimal JSON codec, argument parser, and
+//! benchmark harness instead of serde/clap/criterion.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+
+pub use json::Json;

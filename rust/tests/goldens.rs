@@ -1,0 +1,101 @@
+//! Cross-layer consistency: the Rust quant algebra must reproduce the L1
+//! oracle outputs in `artifacts/goldens.json` bit-for-bit.  This is the
+//! contract that lets Rust own serving-time slicing/dequantization.
+
+use matquant::quant;
+use matquant::util::Json;
+
+fn goldens() -> Option<Json> {
+    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+        .join("artifacts")
+        .join("goldens.json");
+    let text = std::fs::read_to_string(path).ok()?;
+    Some(Json::parse(&text).expect("goldens.json parses"))
+}
+
+#[test]
+fn rust_quant_matches_python_oracles() {
+    let Some(g) = goldens() else {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    };
+    for case in g.get("cases").unwrap().as_arr().unwrap() {
+        let w = case.get("w").unwrap().as_f32_vec().unwrap();
+        let d_in = case.get("d_in").unwrap().as_usize().unwrap();
+        let d_out = case.get("d_out").unwrap().as_usize().unwrap();
+        let alpha8 = case.get("alpha8").unwrap().as_f32_vec().unwrap();
+        let zero8 = case.get("zero8").unwrap().as_f32_vec().unwrap();
+        let q8 = case.get("q8").unwrap().as_f32_vec().unwrap();
+
+        // 8-bit master scales + codes
+        let scales = quant::minmax_scales(&w, d_in, d_out, 8);
+        for j in 0..d_out {
+            assert!(
+                (scales.alpha[j] - alpha8[j]).abs() <= 1e-6 * alpha8[j].abs().max(1e-3),
+                "alpha[{j}]: {} vs {}",
+                scales.alpha[j],
+                alpha8[j]
+            );
+            assert!(
+                (scales.zero[j] - zero8[j]).abs() <= 1e-4 * zero8[j].abs().max(1.0),
+                "zero[{j}]: {} vs {}",
+                scales.zero[j],
+                zero8[j]
+            );
+        }
+        let codes = quant::quantize(&w, d_out, &scales);
+        let mismatches = codes.iter().zip(&q8).filter(|(a, b)| a != b).count();
+        // codes are integers; tiny fp differences can flip a boundary code,
+        // but the overwhelming majority must agree exactly
+        assert!(
+            mismatches * 1000 <= codes.len(),
+            "{mismatches}/{} int8 code mismatches",
+            codes.len()
+        );
+
+        for (bits_key, rec) in case.get("bits").unwrap().as_obj().unwrap() {
+            let r: u32 = bits_key.parse().unwrap();
+            let sliced = rec.get("sliced").unwrap().as_f32_vec().unwrap();
+            let sliced_ep = rec.get("sliced_ep").unwrap().as_f32_vec().unwrap();
+            let dequant = rec.get("dequant").unwrap().as_f32_vec().unwrap();
+            let eb = rec.get("effective_bits").unwrap().as_f64().unwrap();
+
+            // slicing operates on the *python* q8 codes (exact integers) so
+            // this comparison is exact by construction
+            let got = quant::slice_codes(&q8, 8, r, false);
+            assert_eq!(got, sliced, "sliced r={r}");
+            let got_ep = quant::slice_codes(&q8, 8, r, true);
+            assert_eq!(got_ep, sliced_ep, "sliced_ep r={r}");
+
+            let s8 = quant::Scales {
+                bits: 8,
+                alpha: alpha8.clone(),
+                zero: zero8.clone(),
+            };
+            let deq = quant::dequantize(&got, d_out, &s8);
+            for (i, (a, b)) in deq.iter().zip(&dequant).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-5 * b.abs().max(1e-2),
+                    "dequant r={r} i={i}: {a} vs {b}"
+                );
+            }
+
+            let got_eb = quant::effective_bits(&q8, 8, r);
+            assert!((got_eb - eb).abs() < 1e-9, "effective_bits r={r}");
+
+            // direct per-bit baseline quantization
+            let da = rec.get("direct_alpha").unwrap().as_f32_vec().unwrap();
+            let dq = rec.get("direct_q").unwrap().as_f32_vec().unwrap();
+            let ds = quant::minmax_scales(&w, d_in, d_out, r);
+            for j in 0..d_out {
+                assert!(
+                    (ds.alpha[j] - da[j]).abs() <= 1e-6 * da[j].abs().max(1e-3),
+                    "direct alpha r={r} j={j}"
+                );
+            }
+            let dcodes = quant::quantize(&w, d_out, &ds);
+            let dm = dcodes.iter().zip(&dq).filter(|(a, b)| a != b).count();
+            assert!(dm * 1000 <= dcodes.len(), "direct codes r={r}: {dm} mismatches");
+        }
+    }
+}

@@ -1,0 +1,31 @@
+//! End-to-end PJRT smoke: load the init artifact, run it, check shapes.
+//! Requires `make artifacts` (skips otherwise).
+
+use matquant::runtime::{lit_scalar_i32, Engine};
+
+fn artifacts() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[test]
+fn init_artifact_runs_and_is_deterministic() {
+    let dir = artifacts();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let engine = Engine::new(&dir).unwrap();
+    let preset = engine.manifest().preset("tiny").unwrap().clone();
+    let out = engine.run("tiny", "init", &[lit_scalar_i32(7)]).unwrap();
+    assert_eq!(out.len(), preset.params.len());
+    for (t, (name, shape)) in out.iter().zip(&preset.params) {
+        assert_eq!(&t.shape, shape, "shape mismatch for {name}");
+        assert!(t.data.iter().all(|x| x.is_finite()), "{name} not finite");
+    }
+    // determinism
+    let out2 = engine.run("tiny", "init", &[lit_scalar_i32(7)]).unwrap();
+    assert_eq!(out[2].data, out2[2].data);
+    // different seed differs
+    let out3 = engine.run("tiny", "init", &[lit_scalar_i32(8)]).unwrap();
+    assert_ne!(out[0].data, out3[0].data);
+}

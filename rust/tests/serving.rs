@@ -1,0 +1,126 @@
+//! Serving-stack integration: mixed-precision requests through the full
+//! router → batcher → PJRT pipeline.  Requires `make artifacts`.
+
+use matquant::coordinator::trainer::init_params;
+use matquant::model::QuantizedModel;
+use matquant::runtime::Engine;
+use matquant::serve::{PrecisionReq, Request, Server, ServerConfig};
+
+fn artifacts() -> std::path::PathBuf {
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn boot() -> Option<(Server, usize, usize)> {
+    let dir = artifacts();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return None;
+    }
+    let engine = Engine::new(&dir).unwrap();
+    let info = engine.manifest().preset("tiny").unwrap().clone();
+    let params = init_params(&engine, "tiny", 9).unwrap();
+    let model = QuantizedModel::build(&info, &params, None).unwrap();
+    drop(engine);
+    let server = Server::start(
+        dir,
+        model,
+        ServerConfig {
+            preset: "tiny".into(),
+            max_wait_ms: 1.0,
+            warm_bits: vec![4],
+        },
+    )
+    .unwrap();
+    Some((server, info.model.seq_len, info.model.vocab))
+}
+
+#[test]
+fn mixed_precision_requests_all_answered() {
+    let Some((server, seq, vocab)) = boot() else {
+        return;
+    };
+    let n = 24;
+    let rxs: Vec<_> = (0..n)
+        .map(|id| {
+            let bits = [2u32, 4, 8][id % 3];
+            server
+                .submit(Request {
+                    id: id as u64,
+                    prompt: (0..seq.min(16)).map(|i| 16 + (i as i32 % 9)).collect(),
+                    precision: PrecisionReq::Bits(bits),
+                })
+                .unwrap()
+        })
+        .collect();
+    let mut seen = std::collections::BTreeSet::new();
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        assert!((0..vocab as i32).contains(&r.next_token));
+        assert!([2, 4, 8].contains(&r.bits));
+        assert!(r.batch_size >= 1);
+        seen.insert(r.id);
+    }
+    assert_eq!(seen.len(), n, "every request answered exactly once");
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("requests=24"), "{report}");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn same_prompt_same_precision_is_deterministic() {
+    let Some((server, seq, _)) = boot() else {
+        return;
+    };
+    let prompt: Vec<i32> = (0..seq.min(16)).map(|i| 20 + (i as i32 % 5)).collect();
+    let a = server
+        .infer(Request {
+            id: 1,
+            prompt: prompt.clone(),
+            precision: PrecisionReq::Bits(4),
+        })
+        .unwrap();
+    let b = server
+        .infer(Request {
+            id: 2,
+            prompt,
+            precision: PrecisionReq::Bits(4),
+        })
+        .unwrap();
+    assert_eq!(a.next_token, b.next_token);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn precisions_can_disagree() {
+    // int2 vs int8 weights genuinely differ — over several prompts the
+    // argmax should diverge at least once (untrained weights, big gap).
+    let Some((server, seq, _)) = boot() else {
+        return;
+    };
+    let mut diverged = false;
+    for s in 0..8 {
+        let prompt: Vec<i32> = (0..seq.min(24))
+            .map(|i| 16 + ((i as i32 + s) % 11))
+            .collect();
+        let a = server
+            .infer(Request {
+                id: 100 + s as u64,
+                prompt: prompt.clone(),
+                precision: PrecisionReq::Cheapest,
+            })
+            .unwrap();
+        let b = server
+            .infer(Request {
+                id: 200 + s as u64,
+                prompt,
+                precision: PrecisionReq::Best,
+            })
+            .unwrap();
+        if a.next_token != b.next_token {
+            diverged = true;
+            break;
+        }
+    }
+    assert!(diverged, "int2 and int8 never disagreed — slicing inert?");
+    server.shutdown().unwrap();
+}

@@ -1,0 +1,66 @@
+//! End-to-end train-loop integration: rust drives the PJRT train-step
+//! artifacts and losses go down.  Requires `make artifacts`.
+
+use matquant::coordinator::{train, Mode, Objective, TrainSpec};
+use matquant::runtime::Engine;
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts`");
+        return None;
+    }
+    Some(Engine::new(dir).unwrap())
+}
+
+#[test]
+fn qat_matquant_losses_decrease() {
+    let Some(engine) = engine() else { return };
+    let spec = TrainSpec::new("tiny", Mode::Qat, Objective::matquant_default(), 60);
+    let out = train(&engine, &spec).unwrap();
+    assert_eq!(out.loss_history.len(), 60);
+    assert_eq!(out.loss_history[0].len(), 3);
+    for l in &out.loss_history {
+        assert!(l.iter().all(|x| x.is_finite()), "{l:?}");
+    }
+    let first = out.loss_history[..10].iter().map(|l| l[2]).sum::<f32>() / 10.0;
+    let last = out.tail_loss(2, 10);
+    assert!(last < first, "int2 loss {first} -> {last}");
+}
+
+#[test]
+fn qat_direct_b4_losses_decrease() {
+    let Some(engine) = engine() else { return };
+    // 60 steps: the artifact bakes a 150-step LR warmup, so early steps
+    // barely move — compare first-10 vs last-10 means to beat batch noise.
+    let spec = TrainSpec::new("tiny", Mode::Qat, Objective::Direct { bits: 4 }, 60);
+    let out = train(&engine, &spec).unwrap();
+    assert_eq!(out.loss_history[0].len(), 1);
+    let first: f32 = out.loss_history[..10].iter().map(|l| l[0]).sum::<f32>() / 10.0;
+    let last = out.tail_loss(0, 10);
+    assert!(last < first, "direct b4 loss {first} -> {last}");
+}
+
+#[test]
+fn omni_matquant_aux_trains() {
+    let Some(engine) = engine() else { return };
+    let mut spec = TrainSpec::new("tiny", Mode::Omni, Objective::matquant_default(), 20);
+    spec.seed = 7;
+    let out = train(&engine, &spec).unwrap();
+    let aux = out.aux.as_ref().expect("omni returns aux");
+    let moved = aux
+        .iter()
+        .filter(|(n, t)| {
+            let init = if n.ends_with("gamma_raw") || n.ends_with("beta_raw") {
+                4.0
+            } else {
+                0.0
+            };
+            t.data.iter().any(|&x| (x - init).abs() > 1e-6)
+        })
+        .count();
+    assert!(moved > 0, "no aux parameter moved");
+    let first = out.loss_history[0][2];
+    let last = out.tail_loss(2, 3);
+    assert!(last <= first, "omni int2 recon {first} -> {last}");
+}
