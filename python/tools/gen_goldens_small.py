@@ -1,0 +1,103 @@
+"""Generate the checked-in Rust golden fixture from the L1 oracle semantics.
+
+Produces ``rust/tests/fixtures/goldens_small.json`` by running
+``python/compile/kernels/ref.py`` (jnp, float32) over a few small
+deterministic weight matrices, including a constant column that exercises
+the EPS guard.  The fixture is small enough to commit, so
+``tests/goldens.rs`` validates the Rust quant algebra unconditionally —
+no ``make artifacts`` required.
+
+Run once (results are committed):
+
+    python3 python/tools/gen_goldens_small.py
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "compile", "kernels"))
+import ref  # noqa: E402
+
+BITS = [2, 3, 4, 6]
+OUT = os.path.join(
+    os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures", "goldens_small.json"
+)
+
+
+def f32_list(a):
+    """Serialize as the f64 repr of each f32 value (round-trips exactly)."""
+    return [float(np.float32(x)) for x in np.asarray(a, dtype=np.float32).reshape(-1)]
+
+
+def make_case(w: np.ndarray):
+    w = np.asarray(w, dtype=np.float32)
+    d_in, d_out = w.shape
+    alpha8, zero8 = ref.minmax_scales(w, 8, axis=0)
+    q8 = ref.quantize(w, 8, alpha8, zero8)
+    q8_np = np.asarray(q8, dtype=np.float32)
+    n = q8_np.size
+
+    bits_rec = {}
+    for r in BITS:
+        sliced = ref.slice_codes(q8, 8, r, extra_precision=False)
+        sliced_ep = ref.slice_codes(q8, 8, r, extra_precision=True)
+        dequant = ref.dequantize(sliced, alpha8, zero8)
+        # effective bits in exact f64 (matches the Rust f64 computation)
+        step = 2.0 ** (8 - r)
+        s = np.floor(q8_np.astype(np.float32) / np.float32(step) + np.float32(0.5))
+        overflow = int(np.sum(s >= 2.0**r))
+        eff = r + overflow / n
+        da, dz = ref.minmax_scales(w, r, axis=0)
+        dq = ref.quantize(w, r, da, dz)
+        bits_rec[str(r)] = {
+            "sliced": f32_list(sliced),
+            "sliced_ep": f32_list(sliced_ep),
+            "dequant": f32_list(dequant),
+            "effective_bits": eff,
+            "direct_alpha": f32_list(da),
+            "direct_q": f32_list(dq),
+        }
+
+    return {
+        "w": f32_list(w),
+        "d_in": d_in,
+        "d_out": d_out,
+        "alpha8": f32_list(alpha8),
+        "zero8": f32_list(zero8),
+        "q8": f32_list(q8),
+        "bits": bits_rec,
+    }
+
+
+def main():
+    rng = np.random.default_rng(20250731)
+
+    # case 1: generic random weights
+    w1 = rng.normal(0.0, 0.6, size=(8, 4)).astype(np.float32)
+
+    # case 2: stress case — a constant column (EPS guard), a huge-range
+    # column, and an all-negative column
+    w2 = rng.normal(0.0, 1.0, size=(16, 4)).astype(np.float32)
+    w2[:, 1] = 0.5
+    w2[:, 2] *= 50.0
+    w2[:, 3] = -np.abs(w2[:, 3]) - 0.25
+
+    # case 3: exact grid values (boundary-code heavy)
+    w3 = (np.arange(32, dtype=np.float32).reshape(16, 2) / 8.0) - 2.0
+
+    cases = [make_case(w) for w in (w1, w2, w3)]
+    payload = {"source": "python/compile/kernels/ref.py", "cases": cases}
+    os.makedirs(os.path.dirname(OUT), exist_ok=True)
+    with open(OUT, "w") as f:
+        json.dump(payload, f, separators=(",", ":"))
+        f.write("\n")
+    print(f"wrote {os.path.normpath(OUT)} ({os.path.getsize(OUT)} bytes, {len(cases)} cases)")
+
+
+if __name__ == "__main__":
+    main()

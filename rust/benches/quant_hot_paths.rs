@@ -5,6 +5,7 @@
 //! Run: `cargo bench --bench quant_hot_paths`
 
 use matquant::data::Rng;
+use matquant::kernels;
 use matquant::model::registry::QuantizedTensor;
 use matquant::model::Tensor;
 use matquant::quant::{self, PackedTensor};
@@ -83,6 +84,75 @@ fn main() {
             std::hint::black_box(qt.materialize(bits, false).unwrap());
         });
         println!("{} | {:.2} Melem/s", r.report(), r.throughput(n as f64) / 1e6);
+    }
+
+    // ---- fused packed-domain dequant vs the two-pass walk ----
+    // Acceptance target (ISSUE 1): fused ≥ 2× two-pass at 2- and 4-bit.
+    let mut tmp = vec![0.0f32; n];
+    for bits in [2u32, 3, 4, 8] {
+        let (packed, _overlay) = qt.pack_sliced(bits, false);
+        let rscales = quant::minmax_scales(&w, d_in, d_out, bits);
+        // correctness guard: identical output before timing
+        packed.unpack_into(&mut tmp);
+        quant::dequantize_into(&tmp, d_out, &rscales, &mut out);
+        let reference = out.clone();
+        kernels::dequant_packed_into(&packed, None, &rscales, bits, d_out, &mut out);
+        assert_eq!(reference, out, "fused/two-pass divergence at {bits}b");
+
+        let two_pass = bench(&format!("two-pass unpack+dequant 1M @ {bits}b"), budget, || {
+            packed.unpack_into(&mut tmp);
+            quant::dequantize_into(&tmp, d_out, &rscales, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!(
+            "{} | {:.2} Melem/s",
+            two_pass.report(),
+            two_pass.throughput(n as f64) / 1e6
+        );
+        let fused = bench(&format!("fused dequant_packed 1M @ {bits}b"), budget, || {
+            kernels::dequant_packed_into(&packed, None, &rscales, bits, d_out, &mut out);
+            std::hint::black_box(&out);
+        });
+        println!(
+            "{} | {:.2} Melem/s | {:.2}x vs two-pass",
+            fused.report(),
+            fused.throughput(n as f64) / 1e6,
+            two_pass.mean_ns / fused.mean_ns
+        );
+    }
+
+    // ---- fused slice+dequant (Mix'n'Match path) vs the seed's three-pass ----
+    let mut sliced_buf = vec![0.0f32; n];
+    for bits in [2u32, 4, 6] {
+        let three_pass = bench(
+            &format!("unpack+slice+dequant 1M int8->int{bits}"),
+            budget,
+            || {
+                qt.codes.unpack_into(&mut tmp);
+                quant::slice_codes_into(&tmp, 8, bits, false, &mut sliced_buf);
+                quant::dequantize_into(&sliced_buf, d_out, &qt.scales, &mut out);
+                std::hint::black_box(&out);
+            },
+        );
+        println!(
+            "{} | {:.2} Melem/s",
+            three_pass.report(),
+            three_pass.throughput(n as f64) / 1e6
+        );
+        let fused = bench(
+            &format!("fused slice_dequant 1M int8->int{bits}"),
+            budget,
+            || {
+                kernels::slice_dequant_into(&qt.codes, bits, false, &qt.scales, d_out, &mut out);
+                std::hint::black_box(&out);
+            },
+        );
+        println!(
+            "{} | {:.2} Melem/s | {:.2}x vs three-pass",
+            fused.report(),
+            fused.throughput(n as f64) / 1e6,
+            three_pass.mean_ns / fused.mean_ns
+        );
     }
 
     // ---- histogram (fig 1c machinery) ----

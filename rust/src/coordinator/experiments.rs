@@ -13,7 +13,7 @@ use super::config::{Mode, Objective, TrainSpec};
 use super::trainer::train;
 use crate::eval::tables::{pct, pplx, TableBuilder};
 use crate::eval::{task_suite, Evaluator};
-use crate::mixnmatch::strategy::{assignments_for, compositions, Strategy, STRATEGIES};
+use crate::mixnmatch::strategy::{assignments_for, compositions, STRATEGIES};
 use crate::mixnmatch::{pareto_frontier, Point};
 use crate::model::{Checkpoint, PrecisionAssignment, QuantizedModel, Tensor};
 use crate::quant;
@@ -610,7 +610,3 @@ impl<'e> ExperimentCtx<'e> {
         Ok(out)
     }
 }
-
-// Strategy import is used in fig_mixnmatch via STRATEGIES.
-#[allow(unused_imports)]
-use Strategy as _StrategyUsed;

@@ -1,0 +1,95 @@
+//! A little-endian bitstream cursor over packed code data.
+//!
+//! Handles the non-power-of-two widths (3/6-bit) where entries straddle
+//! byte boundaries.  The cursor keeps a `u64` accumulator and refills it
+//! with a single 8-byte little-endian load whenever a full word is
+//! available (the word-at-a-time fast path), falling back to byte loads —
+//! and implicit zero padding — near the end of the stream.
+//!
+//! Bit order matches [`crate::quant::PackedTensor`]: entry `i` of width `w`
+//! occupies bits `[i*w, (i+1)*w)` of the stream, least-significant first.
+
+/// Streaming reader of fixed-width little-endian bit fields.
+pub struct BitCursor<'a> {
+    data: &'a [u8],
+    /// Next byte of `data` not yet loaded into `acc`.
+    byte: usize,
+    /// Pending bits, next field in the low bits.
+    acc: u64,
+    /// Number of valid bits in `acc`.
+    nbits: u32,
+}
+
+impl<'a> BitCursor<'a> {
+    pub fn new(data: &'a [u8]) -> Self {
+        BitCursor {
+            data,
+            byte: 0,
+            acc: 0,
+            nbits: 0,
+        }
+    }
+
+    #[inline]
+    fn refill(&mut self) {
+        if self.byte + 8 <= self.data.len() && self.nbits <= 56 {
+            // Word fast path: absorb as many whole bytes of the u64 as fit.
+            let word = u64::from_le_bytes(self.data[self.byte..self.byte + 8].try_into().unwrap());
+            self.acc |= word << self.nbits;
+            let absorbed = (63 - self.nbits) >> 3;
+            self.byte += absorbed as usize;
+            self.nbits += absorbed * 8;
+        } else {
+            // Tail: byte loads, zero padding past the end of the stream.
+            while self.nbits <= 56 {
+                let b = self.data.get(self.byte).copied().unwrap_or(0) as u64;
+                self.acc |= b << self.nbits;
+                self.byte += 1;
+                self.nbits += 8;
+            }
+        }
+    }
+
+    /// Read the next `width`-bit field (`1 <= width <= 8`).
+    #[inline]
+    pub fn next(&mut self, width: u32) -> u32 {
+        debug_assert!(width >= 1 && width <= 8);
+        if self.nbits < width {
+            self.refill();
+        }
+        let v = (self.acc & ((1u64 << width) - 1)) as u32;
+        self.acc >>= width;
+        self.nbits -= width;
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::PackedTensor;
+
+    #[test]
+    fn cursor_matches_packed_get_all_widths() {
+        for bits in [1u32, 2, 3, 4, 6, 8] {
+            for n in [1usize, 7, 8, 63, 64, 255, 1000] {
+                let ids: Vec<f32> = (0..n)
+                    .map(|i| ((i as u64 * 11 + 5) % (1 << bits)) as f32)
+                    .collect();
+                let p = PackedTensor::pack(&ids, bits);
+                let mut cur = BitCursor::new(&p.data);
+                for (i, &want) in ids.iter().enumerate() {
+                    assert_eq!(cur.next(bits) as f32, want, "bits={bits} n={n} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn zero_pads_past_stream_end() {
+        let mut cur = BitCursor::new(&[0xFF]);
+        assert_eq!(cur.next(6), 0x3F);
+        assert_eq!(cur.next(6), 0x03); // two real bits + four padding zeros
+        assert_eq!(cur.next(6), 0);
+    }
+}

@@ -1,0 +1,237 @@
+//! Single-pass fused dequantization kernels.
+//!
+//! The seed served weights through a two-pass walk — `PackedTensor::unpack`
+//! into an intermediate f32 code vector, then an affine `dequantize` pass.
+//! These kernels go straight from the packed bitstream (+ the Eq. 8
+//! overflow overlay) and per-channel scales to f32 weights in one pass:
+//!
+//! * [`dequant_packed_into`] — packed r-bit bucket ids → weights.  Power-of-
+//!   two widths expand bytes through 256-entry LUTs fed by u64 word loads;
+//!   3/6-bit use the generic [`super::cursor::BitCursor`].  Overlay entries
+//!   (the "single extra bit" outlier bucket) are fixed up in a sparse
+//!   post-pass.
+//! * [`slice_dequant_into`] — the Mix'n'Match path: 8-bit master codes →
+//!   sliced-and-dequantized weights at any precision `r` through one
+//!   256-entry value LUT, never materializing intermediate code vectors.
+//!
+//! Both are bit-for-bit identical to the scalar reference path (the LUTs
+//! are built by the scalar oracles themselves); the conformance suite
+//! (`tests/kernel_conformance.rs`) enforces this across every width, odd
+//! lengths, overflow overlays, and degenerate channels.
+
+use super::cursor::BitCursor;
+use super::lut;
+use crate::quant::{ExtraBitOverlay, PackedTensor, Scales};
+use crate::MASTER_BITS;
+
+/// Shared shape checks for both kernels.
+fn check_shapes(n: usize, d_out: usize, scales: &Scales, out: &[f32]) {
+    assert_eq!(out.len(), n, "output buffer length mismatch");
+    assert_eq!(scales.d_out(), d_out, "scales channel count mismatch");
+    if n > 0 {
+        assert!(d_out > 0, "d_out must be positive");
+        assert_eq!(n % d_out, 0, "tensor length not a multiple of d_out");
+    }
+}
+
+/// LUT-expansion inner loop for the power-of-two widths: the stream is read
+/// as u64 words while a full word of entries remains, then byte-by-byte.
+fn dequant_lut<const EPB: usize>(
+    data: &[u8],
+    table: &[[f32; EPB]; 256],
+    step: f32,
+    scales: &Scales,
+    d_out: usize,
+    out: &mut [f32],
+) {
+    let n = out.len();
+    let alpha = &scales.alpha[..];
+    let zero = &scales.zero[..];
+    let mut i = 0usize;
+    let mut j = 0usize;
+    let mut b = 0usize;
+    while i + 8 * EPB <= n && b + 8 <= data.len() {
+        let word = u64::from_le_bytes(data[b..b + 8].try_into().unwrap());
+        for k in 0..8 {
+            let ids = &table[((word >> (8 * k)) & 0xFF) as usize];
+            for &id in ids.iter() {
+                out[i] = (id * step - zero[j]) * alpha[j];
+                i += 1;
+                j += 1;
+                if j == d_out {
+                    j = 0;
+                }
+            }
+        }
+        b += 8;
+    }
+    while i < n {
+        let ids = &table[data[b] as usize];
+        let take = EPB.min(n - i);
+        for &id in &ids[..take] {
+            out[i] = (id * step - zero[j]) * alpha[j];
+            i += 1;
+            j += 1;
+            if j == d_out {
+                j = 0;
+            }
+        }
+        b += 1;
+    }
+}
+
+/// Fused packed-domain dequantization (deployment hot path, paper §5.4).
+///
+/// `packed` holds `r = packed.bits`-bit bucket ids of a tensor whose master
+/// width is `master_bits` (ids are multiples-of-`2^(master_bits - r)` in
+/// master code space, divided down — exactly what
+/// [`crate::model::registry::QuantizedTensor::pack_sliced`] stores).
+/// `overlay` marks Eq. 8 overflow entries, which decode to the bucket id
+/// `2^r`.  `scales` are the shared master-width per-channel scales; weights
+/// land in `out` row-major with `d_out` channels.
+pub fn dequant_packed_into(
+    packed: &PackedTensor,
+    overlay: Option<&ExtraBitOverlay>,
+    scales: &Scales,
+    master_bits: u32,
+    d_out: usize,
+    out: &mut [f32],
+) {
+    assert!(
+        packed.bits <= master_bits && master_bits <= MASTER_BITS,
+        "widths out of range: {} within {}",
+        packed.bits,
+        master_bits
+    );
+    check_shapes(packed.len, d_out, scales, out);
+    if packed.len == 0 {
+        return;
+    }
+    let step = (1u32 << (master_bits - packed.bits)) as f32;
+    match packed.bits {
+        1 => dequant_lut(&packed.data, lut::lut1(), step, scales, d_out, out),
+        2 => dequant_lut(&packed.data, lut::lut2(), step, scales, d_out, out),
+        4 => dequant_lut(&packed.data, lut::lut4(), step, scales, d_out, out),
+        8 => dequant_lut(&packed.data, lut::lut8(), step, scales, d_out, out),
+        bits => {
+            let mut cur = BitCursor::new(&packed.data);
+            let mut j = 0usize;
+            for o in out.iter_mut() {
+                let id = cur.next(bits) as f32;
+                *o = (id * step - scales.zero[j]) * scales.alpha[j];
+                j += 1;
+                if j == d_out {
+                    j = 0;
+                }
+            }
+        }
+    }
+    if let Some(ov) = overlay {
+        // Sparse outlier fix-up: overflow entries decode to bucket id 2^r.
+        let top = (1u32 << packed.bits) as f32 * step;
+        for &idx in &ov.indices {
+            let i = idx as usize;
+            let j = i % d_out;
+            out[i] = (top - scales.zero[j]) * scales.alpha[j];
+        }
+    }
+}
+
+/// Allocating convenience wrapper over [`dequant_packed_into`].
+pub fn dequant_packed(
+    packed: &PackedTensor,
+    overlay: Option<&ExtraBitOverlay>,
+    scales: &Scales,
+    master_bits: u32,
+    d_out: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; packed.len];
+    dequant_packed_into(packed, overlay, scales, master_bits, d_out, &mut out);
+    out
+}
+
+/// Fused slice+dequantize (the Mix'n'Match serving path).
+///
+/// `codes` is the stored 8-bit master; the sliced value `S(q, bits)` and the
+/// affine map collapse into one 256-entry lookup plus one fused
+/// multiply-subtract per weight — no intermediate code vector exists.
+pub fn slice_dequant_into(
+    codes: &PackedTensor,
+    bits: u32,
+    extra_precision: bool,
+    scales: &Scales,
+    d_out: usize,
+    out: &mut [f32],
+) {
+    assert_eq!(codes.bits, MASTER_BITS, "slice source must be the int8 master");
+    assert!(bits >= 1 && bits <= MASTER_BITS, "bits out of range: {bits}");
+    check_shapes(codes.len, d_out, scales, out);
+    if codes.len == 0 {
+        return;
+    }
+    let table = lut::slice_value_lut(bits, extra_precision);
+    for (orow, qrow) in out
+        .chunks_exact_mut(d_out)
+        .zip(codes.data.chunks_exact(d_out))
+    {
+        for (k, (o, &q)) in orow.iter_mut().zip(qrow).enumerate() {
+            *o = (table[q as usize] - scales.zero[k]) * scales.alpha[k];
+        }
+    }
+}
+
+/// Allocating convenience wrapper over [`slice_dequant_into`].
+pub fn slice_dequant(
+    codes: &PackedTensor,
+    bits: u32,
+    extra_precision: bool,
+    scales: &Scales,
+    d_out: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; codes.len];
+    slice_dequant_into(codes, bits, extra_precision, scales, d_out, &mut out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testing;
+
+    #[test]
+    fn fused_matches_reference_smoke() {
+        for bits in [1u32, 2, 3, 4, 6, 8] {
+            let n = 96;
+            let d_out = 8;
+            let ids = testing::synth_ids(bits, n, 7);
+            let packed = PackedTensor::pack(&ids, bits);
+            let scales = testing::synth_scales(d_out, 11, false);
+            let want = testing::reference_dequant_packed(&packed, None, &scales, 8, d_out);
+            let got = dequant_packed(&packed, None, &scales, 8, d_out);
+            testing::assert_bits_eq(&got, &want, &format!("bits={bits}"));
+        }
+    }
+
+    #[test]
+    fn fused_slice_matches_reference_smoke() {
+        let codes = testing::synth_master_codes(128, 3);
+        let packed = PackedTensor::pack(&codes, 8);
+        let scales = testing::synth_scales(16, 5, false);
+        for bits in [2u32, 4, 8] {
+            for ep in [false, true] {
+                let want = testing::reference_slice_dequant(&packed, bits, ep, &scales, 16);
+                let got = slice_dequant(&packed, bits, ep, &scales, 16);
+                testing::assert_bits_eq(&got, &want, &format!("bits={bits} ep={ep}"));
+            }
+        }
+    }
+
+    #[test]
+    fn empty_tensor_is_a_noop() {
+        let packed = PackedTensor::pack(&[], 2);
+        let scales = testing::synth_scales(4, 1, false);
+        assert!(dequant_packed(&packed, None, &scales, 8, 4).is_empty());
+        let master = PackedTensor::pack(&[], 8);
+        assert!(slice_dequant(&master, 2, false, &scales, 4).is_empty());
+    }
+}

@@ -1,0 +1,110 @@
+//! Byte-expansion lookup tables for the fused dequantization kernels.
+//!
+//! For the power-of-two widths (1/2/4/8 bits) a packed byte expands to a
+//! fixed number of bucket ids, so a 256-entry table turns bit extraction
+//! into one indexed load per byte.  Tables are built once on first use
+//! (`OnceLock`) and shared across threads.
+//!
+//! [`slice_value_lut`] is the Mix'n'Match variant: a 256-entry table over
+//! the *8-bit master code itself*, mapping each byte straight to its sliced
+//! value `S(q, r)` (Eq. 6 / Eq. 8), so slice+dequant fuses into a single
+//! lookup + affine per weight.
+
+use std::sync::OnceLock;
+
+use crate::quant::slice_code;
+use crate::MASTER_BITS;
+
+fn build<const EPB: usize>(bits: u32) -> [[f32; EPB]; 256] {
+    let mask = (1u32 << bits) - 1;
+    let mut table = [[0.0f32; EPB]; 256];
+    for (byte, entry) in table.iter_mut().enumerate() {
+        for (k, v) in entry.iter_mut().enumerate() {
+            *v = ((byte as u32 >> (bits as usize * k)) & mask) as f32;
+        }
+    }
+    table
+}
+
+/// byte → 8 × 1-bit bucket ids.
+pub fn lut1() -> &'static [[f32; 8]; 256] {
+    static L: OnceLock<[[f32; 8]; 256]> = OnceLock::new();
+    L.get_or_init(|| build::<8>(1))
+}
+
+/// byte → 4 × 2-bit bucket ids.
+pub fn lut2() -> &'static [[f32; 4]; 256] {
+    static L: OnceLock<[[f32; 4]; 256]> = OnceLock::new();
+    L.get_or_init(|| build::<4>(2))
+}
+
+/// byte → 2 × 4-bit bucket ids.
+pub fn lut4() -> &'static [[f32; 2]; 256] {
+    static L: OnceLock<[[f32; 2]; 256]> = OnceLock::new();
+    L.get_or_init(|| build::<2>(4))
+}
+
+/// byte → the 8-bit bucket id itself (kept as a table so every power-of-two
+/// width shares one kernel shape).
+pub fn lut8() -> &'static [[f32; 1]; 256] {
+    static L: OnceLock<[[f32; 1]; 256]> = OnceLock::new();
+    L.get_or_init(|| build::<1>(8))
+}
+
+/// 256-entry master-code → sliced-value table for `S(q^8, r)`.
+///
+/// `table[q] == slice_code(q, 8, r, extra_precision)` exactly — the table is
+/// built *by* the scalar oracle, so fused results are bit-for-bit identical
+/// to the reference two-pass path by construction.  All 16 `(r, ep)`
+/// variants are cached, so per-tensor materialization never rebuilds one.
+pub fn slice_value_lut(r: u32, extra_precision: bool) -> &'static [f32; 256] {
+    assert!(r >= 1 && r <= MASTER_BITS);
+    // interior-mutable const is intentional: array-repeat seed for statics
+    #[allow(clippy::declare_interior_mutable_const)]
+    const EMPTY: OnceLock<[f32; 256]> = OnceLock::new();
+    static LUTS: [OnceLock<[f32; 256]>; 16] = [EMPTY; 16];
+    LUTS[(r as usize - 1) * 2 + extra_precision as usize].get_or_init(|| {
+        let mut table = [0.0f32; 256];
+        for (q, v) in table.iter_mut().enumerate() {
+            *v = slice_code(q as f32, MASTER_BITS, r, extra_precision);
+        }
+        table
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn expansion_tables_match_bit_extraction() {
+        for byte in 0..256usize {
+            for (k, &v) in lut1()[byte].iter().enumerate() {
+                assert_eq!(v, ((byte >> k) & 1) as f32);
+            }
+            for (k, &v) in lut2()[byte].iter().enumerate() {
+                assert_eq!(v, ((byte >> (2 * k)) & 3) as f32);
+            }
+            for (k, &v) in lut4()[byte].iter().enumerate() {
+                assert_eq!(v, ((byte >> (4 * k)) & 15) as f32);
+            }
+            assert_eq!(lut8()[byte][0], byte as f32);
+        }
+    }
+
+    #[test]
+    fn slice_lut_matches_scalar_oracle() {
+        for r in [1u32, 2, 3, 4, 6, 8] {
+            for ep in [false, true] {
+                let lut = slice_value_lut(r, ep);
+                for q in 0..256usize {
+                    assert_eq!(
+                        lut[q].to_bits(),
+                        slice_code(q as f32, 8, r, ep).to_bits(),
+                        "r={r} ep={ep} q={q}"
+                    );
+                }
+            }
+        }
+    }
+}

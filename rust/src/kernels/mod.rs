@@ -1,0 +1,42 @@
+//! Fused packed-domain dequantization kernels — the serving hot path.
+//!
+//! # Layering
+//!
+//! ```text
+//!   quant::packed   PackedTensor / ExtraBitOverlay   (storage model)
+//!   quant::minmax   Scales, scalar quant/dequant     (semantics oracle)
+//!   quant::slicing  S(q^c, r) scalar ops             (semantics oracle)
+//!        │
+//!   kernels::lut    256-entry byte→ids & code→sliced-value tables
+//!   kernels::cursor u64 bitstream reader for 3/6-bit widths
+//!   kernels::fused  dequant_packed_into / slice_dequant_into
+//!        │
+//!   model::registry QuantizedTensor::materialize / pack_sliced
+//!   serve::server   warm + lazy weight-set builds
+//!   mixnmatch       per-layer sweeps (via registry materialization)
+//! ```
+//!
+//! The scalar functions in [`crate::quant`] remain the reference semantics;
+//! the kernels here are *implementations* of the same math that read the
+//! packed bitstream directly (u64 word loads + byte-expansion LUTs, a
+//! generic bit cursor for 3/6-bit) and fuse slicing with the per-channel
+//! affine map so no intermediate code vector is ever materialized.
+//!
+//! # Conformance and benchmarks
+//!
+//! * `cargo test --test kernel_conformance` — exhaustive fused-vs-reference
+//!   bit-for-bit checks over bits ∈ {1, 2, 3, 4, 6, 8}, odd lengths,
+//!   Eq. 8 overflow overlays, and degenerate (EPS-guarded) channels.
+//! * `cargo bench --bench quant_hot_paths` — fused vs two-pass throughput,
+//!   including the `fused ≥ 2×` serving-path comparison.
+//!
+//! [`testing`] holds the data synthesis + scalar reference paths shared by
+//! both, so new kernels get a conformance harness for free.
+
+pub mod cursor;
+pub mod fused;
+pub mod lut;
+pub mod testing;
+
+pub use cursor::BitCursor;
+pub use fused::{dequant_packed, dequant_packed_into, slice_dequant, slice_dequant_into};

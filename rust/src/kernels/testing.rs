@@ -1,0 +1,133 @@
+//! Conformance-harness substrate: deterministic data synthesis, the scalar
+//! reference paths (the seed's two-pass walk, kept verbatim as the oracle),
+//! and exact-equality assertions.
+//!
+//! Shared by the in-crate kernel unit tests, the exhaustive suite in
+//! `tests/kernel_conformance.rs`, and `benches/quant_hot_paths.rs` (which
+//! benches fused vs reference on the same inputs it validates).
+
+use crate::data::Rng;
+use crate::quant::{self, ExtraBitOverlay, PackedTensor, Scales};
+
+/// Deterministic r-bit bucket ids covering the full `[0, 2^bits)` range.
+pub fn synth_ids(bits: u32, n: usize, seed: u64) -> Vec<f32> {
+    let m = 1u64 << bits;
+    let mut rng = Rng::new(seed ^ 0xBEEF);
+    (0..n)
+        .map(|i| match i % 5 {
+            0 => 0.0,
+            1 => (m - 1) as f32,
+            _ => (rng.next_u64() % m) as f32,
+        })
+        .collect()
+}
+
+/// Deterministic 8-bit master codes biased toward slicing edge cases: the
+/// extremes, the paper's errata example 234 (overflows every `r < 8` under
+/// Eq. 8), and round-half-up boundaries.
+pub fn synth_master_codes(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0xC0DE);
+    (0..n)
+        .map(|i| match i % 7 {
+            0 => 0.0,
+            1 => 255.0,
+            2 => 234.0,
+            3 => (i % 256) as f32,
+            _ => (rng.next_u64() % 256) as f32,
+        })
+        .collect()
+}
+
+/// Deterministic per-channel scales; with `degenerate`, every third channel
+/// is a constant-column channel pinned at the `EPS` guard (huge zero-point,
+/// tiny alpha — the worst-conditioned case `omni_scales` can produce).
+pub fn synth_scales(d_out: usize, seed: u64, degenerate: bool) -> Scales {
+    let mut rng = Rng::new(seed ^ 0x5CA1E5);
+    let mut alpha = Vec::with_capacity(d_out);
+    let mut zero = Vec::with_capacity(d_out);
+    for k in 0..d_out {
+        if degenerate && k % 3 == 0 {
+            alpha.push(quant::EPS);
+            zero.push(-0.5 / quant::EPS);
+        } else {
+            alpha.push(rng.range_f32(1e-3, 2.0));
+            zero.push(rng.range_f32(-8.0, 260.0));
+        }
+    }
+    Scales {
+        bits: 8,
+        alpha,
+        zero,
+    }
+}
+
+/// Bucket ids containing Eq. 8 overflow (`2^bits`), split into a dense
+/// packed tensor + overlay.
+pub fn synth_overlayed(bits: u32, n: usize, seed: u64) -> (PackedTensor, ExtraBitOverlay) {
+    let m = 1u64 << bits;
+    let mut rng = Rng::new(seed ^ 0x0F10);
+    let ids: Vec<f32> = (0..n)
+        .map(|i| {
+            if i % 9 == 4 || rng.f64() < 0.05 {
+                m as f32 // overflow bucket
+            } else {
+                (rng.next_u64() % m) as f32
+            }
+        })
+        .collect();
+    let (overlay, dense) = ExtraBitOverlay::split(&ids, bits);
+    (PackedTensor::pack(&dense, bits), overlay)
+}
+
+/// Scalar reference for [`crate::kernels::dequant_packed_into`]: unpack →
+/// overlay apply → scale ids to master code space → affine dequantize.
+pub fn reference_dequant_packed(
+    packed: &PackedTensor,
+    overlay: Option<&ExtraBitOverlay>,
+    scales: &Scales,
+    master_bits: u32,
+    d_out: usize,
+) -> Vec<f32> {
+    let mut ids = packed.unpack();
+    if let Some(ov) = overlay {
+        ov.apply(&mut ids, packed.bits);
+    }
+    let step = (1u32 << (master_bits - packed.bits)) as f32;
+    for v in ids.iter_mut() {
+        *v *= step;
+    }
+    let mut out = vec![0.0f32; ids.len()];
+    quant::dequantize_into(&ids, d_out.max(1), scales, &mut out);
+    out
+}
+
+/// Scalar reference for [`crate::kernels::slice_dequant_into`]: unpack →
+/// slice → affine dequantize (the seed's serving path, verbatim).
+pub fn reference_slice_dequant(
+    codes: &PackedTensor,
+    bits: u32,
+    extra_precision: bool,
+    scales: &Scales,
+    d_out: usize,
+) -> Vec<f32> {
+    let q = codes.unpack();
+    let mut sliced = vec![0.0f32; q.len()];
+    quant::slice_codes_into(&q, 8, bits, extra_precision, &mut sliced);
+    let mut out = vec![0.0f32; sliced.len()];
+    quant::dequantize_into(&sliced, d_out.max(1), scales, &mut out);
+    out
+}
+
+/// Assert two f32 buffers are identical *bit patterns* (stronger than `==`:
+/// distinguishes `-0.0` from `0.0` and would catch NaN payload drift).
+pub fn assert_bits_eq(got: &[f32], want: &[f32], label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: length mismatch");
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        assert!(
+            g.to_bits() == w.to_bits(),
+            "{label}: mismatch at {i}: got {g} ({:#010x}), want {w} ({:#010x})",
+            g.to_bits(),
+            w.to_bits()
+        );
+    }
+}

@@ -1,6 +1,12 @@
 //! Layer-wise Mix'n'Match (paper §4.3, Fig. 2/3): assign a different
 //! precision to each layer of one MatQuant model, densely spanning the
 //! accuracy-vs-bits trade-off at zero training cost.
+//!
+//! Sweep evaluation materializes every per-layer assignment through the
+//! fused slice+dequant kernel ([`crate::kernels::slice_dequant_into`] via
+//! `QuantizedTensor::materialize`), so a full composition grid never
+//! allocates intermediate code vectors — the sweep cost is one fused pass
+//! per tensor per configuration.
 
 pub mod pareto;
 pub mod strategy;

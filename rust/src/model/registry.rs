@@ -14,6 +14,7 @@ use anyhow::{anyhow, ensure};
 
 use super::manifest::PresetInfo;
 use super::tensor::Tensor;
+use crate::kernels;
 use crate::quant::{self, ExtraBitOverlay, PackedTensor, Scales};
 use crate::{Result, MASTER_BITS};
 
@@ -72,19 +73,84 @@ impl QuantizedTensor {
 
     /// Materialize the effective weight + bias at precision `bits`.
     ///
-    /// Returns `(W_eff, bias)`; `bias` is all-zero for QAT models.
+    /// Returns `(W_eff, bias)`; `bias` is all-zero for QAT models.  The
+    /// dequantization runs through the fused slice+dequant kernel (one pass
+    /// over the packed int8 bitstream, no intermediate code vector); the
+    /// scalar path in [`crate::quant`] remains the conformance oracle.
     pub fn materialize(&self, bits: u32, extra_precision: bool) -> Result<(Tensor, Vec<f32>)> {
         ensure!(
             bits >= 1 && bits <= MASTER_BITS,
             "bits {bits} out of range"
         );
-        let mut q = self.codes.unpack();
-        quant::slicing::slice_codes_into(&q.clone(), MASTER_BITS, bits, extra_precision, &mut q);
-        let mut w = vec![0.0f32; q.len()];
-        quant::dequantize_into(&q, self.d_out, &self.scales, &mut w);
+        let mut w = vec![0.0f32; self.codes.len];
+        kernels::slice_dequant_into(
+            &self.codes,
+            bits,
+            extra_precision,
+            &self.scales,
+            self.d_out,
+            &mut w,
+        );
+        self.fold_smoothing(w)
+    }
+
+    /// Decode a stored deployment payload — an r-bit packed tensor plus
+    /// optional Eq. 8 overlay, as produced by [`QuantizedTensor::pack_sliced`]
+    /// — into the effective weight + bias through the fused packed-domain
+    /// kernel, without touching the int8 master.  This is the paging path:
+    /// a cold start that holds only the r-bit storage form decodes it
+    /// directly.  Bit-for-bit identical to [`QuantizedTensor::materialize`]
+    /// at the same precision.
+    pub fn materialize_from_payload(
+        &self,
+        packed: &PackedTensor,
+        overlay: Option<&ExtraBitOverlay>,
+    ) -> Result<(Tensor, Vec<f32>)> {
+        ensure!(
+            packed.len == self.d_in * self.d_out,
+            "payload length {} does not match tensor {}x{}",
+            packed.len,
+            self.d_in,
+            self.d_out
+        );
+        let mut w = vec![0.0f32; packed.len];
+        kernels::dequant_packed_into(
+            packed,
+            overlay,
+            &self.scales,
+            MASTER_BITS,
+            self.d_out,
+            &mut w,
+        );
+        self.fold_smoothing(w)
+    }
+
+    /// Derive-and-decode convenience over [`QuantizedTensor::pack_sliced`] +
+    /// [`QuantizedTensor::materialize_from_payload`] (tests, benches, and
+    /// round-trip checks; production paging passes a stored payload).
+    pub fn materialize_packed(
+        &self,
+        bits: u32,
+        extra_precision: bool,
+    ) -> Result<(Tensor, Vec<f32>)> {
+        ensure!(
+            bits >= 1 && bits <= MASTER_BITS,
+            "bits {bits} out of range"
+        );
+        let (packed, overlay) = self.pack_sliced(bits, extra_precision);
+        let overlay = if overlay.is_empty() {
+            None
+        } else {
+            Some(&overlay)
+        };
+        self.materialize_from_payload(&packed, overlay)
+    }
+
+    /// OmniQuant smoothing fold shared by the materialization paths:
+    /// `W_eff = diag(1/s)·Wq`, `bias = δ·(W − W_eff)`.
+    fn fold_smoothing(&self, mut w: Vec<f32>) -> Result<(Tensor, Vec<f32>)> {
         let mut bias = vec![0.0f32; self.d_out];
         if let Some((s, delta)) = &self.smooth {
-            // fold: W_eff = diag(1/s)·Wq ; bias = δ·(W − W_eff)
             for (i, row) in w.chunks_exact_mut(self.d_out).enumerate() {
                 let inv = 1.0 / s[i];
                 for x in row.iter_mut() {
@@ -101,6 +167,24 @@ impl QuantizedTensor {
         Ok((Tensor::new(vec![self.d_in, self.d_out], w)?, bias))
     }
 
+    /// The §5.4 deployment payload at `bits`: sliced bucket ids packed at
+    /// `bits`/entry plus (under Eq. 8) the sparse overflow overlay.  This is
+    /// exactly what [`crate::kernels::dequant_packed_into`] consumes.
+    pub fn pack_sliced(&self, bits: u32, extra_precision: bool) -> (PackedTensor, ExtraBitOverlay) {
+        let q = self.codes.unpack();
+        let step = (1u32 << (MASTER_BITS - bits)) as f32;
+        let ids: Vec<f32> = q
+            .iter()
+            .map(|&x| quant::slice_code(x, MASTER_BITS, bits, extra_precision) / step)
+            .collect();
+        if extra_precision {
+            let (overlay, dense) = ExtraBitOverlay::split(&ids, bits);
+            (PackedTensor::pack(&dense, bits), overlay)
+        } else {
+            (PackedTensor::pack(&ids, bits), ExtraBitOverlay::default())
+        }
+    }
+
     /// The full-precision weight (paper's bfloat16 rows), with zero bias.
     pub fn materialize_fp(&self) -> (Tensor, Vec<f32>) {
         (self.fp.clone(), vec![0.0; self.d_out])
@@ -114,18 +198,8 @@ impl QuantizedTensor {
         if bits == MASTER_BITS {
             return self.codes.bytes() + scale_bytes;
         }
-        let q = self.codes.unpack();
-        let step = (1u32 << (MASTER_BITS - bits)) as f32;
-        let ids: Vec<f32> = q
-            .iter()
-            .map(|&x| quant::slice_code(x, MASTER_BITS, bits, extra_precision) / step)
-            .collect();
-        if extra_precision {
-            let (ov, dense) = ExtraBitOverlay::split(&ids, bits);
-            PackedTensor::pack(&dense, bits).bytes() + ov.bytes(n) + scale_bytes
-        } else {
-            PackedTensor::pack(&ids, bits).bytes() + scale_bytes
-        }
+        let (packed, overlay) = self.pack_sliced(bits, extra_precision);
+        packed.bytes() + overlay.bytes(n) + scale_bytes
     }
 
     /// Average effective bits/param at `bits` under Eq. 8 storage.
@@ -367,6 +441,24 @@ mod tests {
         let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
         let eb = qt.effective_bits(2);
         assert!(eb >= 2.0 && eb < 2.3, "{eb}");
+    }
+
+    #[test]
+    fn packed_materialization_matches_fused_slice_path() {
+        // Both fused kernels and the smoothing fold must agree bit-for-bit.
+        let fp = toy_weight(5, 48, 24);
+        let s = vec![1.1f32; 48];
+        let mut delta = vec![0.0f32; 48];
+        delta[7] = 0.25;
+        let qt = QuantizedTensor::from_weight(fp, None, None, Some((s, delta))).unwrap();
+        for bits in [1u32, 2, 3, 4, 6, 8] {
+            for ep in [false, true] {
+                let (a, bias_a) = qt.materialize(bits, ep).unwrap();
+                let (b, bias_b) = qt.materialize_packed(bits, ep).unwrap();
+                assert_eq!(a.data, b.data, "bits={bits} ep={ep}");
+                assert_eq!(bias_a, bias_b, "bits={bits} ep={ep}");
+            }
+        }
     }
 
     #[test]

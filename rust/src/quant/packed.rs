@@ -110,8 +110,12 @@ impl PackedTensor {
         self.data.len()
     }
 
-    /// Stored bits per entry (exact, including padding waste).
+    /// Stored bits per entry (exact, including padding waste).  Empty
+    /// tensors report 0 rather than dividing by zero.
     pub fn bits_per_entry(&self) -> f64 {
+        if self.len == 0 {
+            return 0.0;
+        }
         self.bytes() as f64 * 8.0 / self.len as f64
     }
 }

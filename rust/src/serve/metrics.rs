@@ -9,6 +9,10 @@ pub struct Metrics {
     latencies_ms: Vec<f64>,
     per_bits: BTreeMap<u32, u64>,
     batch_sizes: Vec<usize>,
+    /// Fused weight-set builds: precision → (count, total ms).  Warm builds
+    /// happen at boot; lazy builds show up as a one-off latency cliff, so
+    /// the report breaks them out per precision.
+    materialize_ms: BTreeMap<u32, (u64, f64)>,
     pub requests: u64,
     pub batches: u64,
 }
@@ -20,6 +24,7 @@ impl Default for Metrics {
             latencies_ms: Vec::new(),
             per_bits: BTreeMap::new(),
             batch_sizes: Vec::new(),
+            materialize_ms: BTreeMap::new(),
             requests: 0,
             batches: 0,
         }
@@ -38,6 +43,13 @@ impl Metrics {
 
     pub fn record_batch(&mut self) {
         self.batches += 1;
+    }
+
+    /// One fused weight-set materialization (warm or lazy) completed.
+    pub fn record_materialize(&mut self, bits: u32, ms: f64) {
+        let e = self.materialize_ms.entry(bits).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += ms;
     }
 
     pub fn percentile(&self, p: f64) -> f64 {
@@ -68,15 +80,21 @@ impl Metrics {
             .iter()
             .map(|(b, n)| format!("int{b}:{n}"))
             .collect();
+        let builds: Vec<String> = self
+            .materialize_ms
+            .iter()
+            .map(|(b, (n, ms))| format!("int{b}:{n}x{:.1}ms", ms / (*n).max(1) as f64))
+            .collect();
         format!(
-            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}]",
+            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}]",
             self.requests,
             self.batches,
             self.percentile(50.0),
             self.percentile(99.0),
             self.throughput_rps(),
             self.mean_batch_size(),
-            mix.join(" ")
+            mix.join(" "),
+            builds.join(" ")
         )
     }
 }
@@ -93,6 +111,17 @@ mod tests {
         }
         assert!(m.percentile(50.0) <= m.percentile(99.0));
         assert_eq!(m.requests, 100);
+    }
+
+    #[test]
+    fn report_breaks_out_weight_builds() {
+        let mut m = Metrics::default();
+        m.record_materialize(2, 4.0);
+        m.record_materialize(2, 2.0);
+        m.record_materialize(8, 1.0);
+        let r = m.report();
+        assert!(r.contains("int2:2x3.0ms"), "{r}");
+        assert!(r.contains("int8:1x1.0ms"), "{r}");
     }
 
     #[test]

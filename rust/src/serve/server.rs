@@ -144,10 +144,16 @@ fn worker_loop(engine: Engine, model: QuantizedModel, cfg: ServerConfig, rx: Rec
     let mut waiters: BTreeMap<u64, Sender<Response>> = BTreeMap::new();
     let mut metrics = Metrics::default();
 
-    let materialize = |bits: u32, sets: &mut BTreeMap<u32, WeightSet>| {
+    // Warm/lazy weight-set builds run the fused slice+dequant kernel
+    // (`kernels::slice_dequant_into` via the registry): one pass over each
+    // packed int8 master, no intermediate code vectors.  Build latency is
+    // tracked per precision so lazy-build cliffs are visible in the report.
+    let materialize = |bits: u32, sets: &mut BTreeMap<u32, WeightSet>, metrics: &mut Metrics| {
         if !sets.contains_key(&bits) {
+            let t0 = Instant::now();
             match model.materialize(&PrecisionAssignment::uniform(bits)) {
                 Ok((weights, biases)) => {
+                    metrics.record_materialize(bits, t0.elapsed().as_secs_f64() * 1e3);
                     sets.insert(bits, WeightSet { weights, biases });
                 }
                 Err(e) => eprintln!("serve worker: materialize int{bits}: {e:#}"),
@@ -155,7 +161,7 @@ fn worker_loop(engine: Engine, model: QuantizedModel, cfg: ServerConfig, rx: Rec
         }
     };
     for &b in &cfg.warm_bits {
-        materialize(b, &mut weight_sets);
+        materialize(b, &mut weight_sets, &mut metrics);
     }
 
     let mut running = true;
@@ -181,7 +187,7 @@ fn worker_loop(engine: Engine, model: QuantizedModel, cfg: ServerConfig, rx: Rec
             batcher.drain_all().into_iter().next()
         };
         if let Some(batch) = ready {
-            materialize(batch.bits, &mut weight_sets);
+            materialize(batch.bits, &mut weight_sets, &mut metrics);
             if let Err(e) = execute_batch(
                 &engine,
                 &cfg.preset,

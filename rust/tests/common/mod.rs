@@ -1,0 +1,25 @@
+//! Shared helpers for artifact-gated integration tests.
+//!
+//! Tests that need `make artifacts` output call [`artifact_or_skip`] instead
+//! of hand-rolling `eprintln!` early-returns, so every skip is reported in
+//! one grep-able format: `skipped: <test>: missing artifacts/<file> ...`.
+
+use std::path::PathBuf;
+
+/// The crate's artifacts directory (`rust/artifacts`).
+pub fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+/// Returns the artifacts directory if `artifacts/<gate_file>` exists;
+/// otherwise reports a uniform skip line and returns `None` so the caller
+/// can early-return.
+pub fn artifact_or_skip(test: &str, gate_file: &str) -> Option<PathBuf> {
+    let dir = artifacts_dir();
+    if dir.join(gate_file).exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipped: {test}: missing artifacts/{gate_file} (run `make artifacts`)");
+        None
+    }
+}

@@ -1,25 +1,24 @@
 //! Cross-layer consistency: the Rust quant algebra must reproduce the L1
-//! oracle outputs in `artifacts/goldens.json` bit-for-bit.  This is the
-//! contract that lets Rust own serving-time slicing/dequantization.
+//! oracle outputs bit-for-bit.  This is the contract that lets Rust own
+//! serving-time slicing/dequantization.
+//!
+//! Two golden sources share one checker:
+//! * `tests/fixtures/goldens_small.json` — a small fixture generated once
+//!   from `python/compile/kernels/ref.py` semantics (see
+//!   `python/tools/gen_goldens_small.py`) and checked in, so this test runs
+//!   **unconditionally** on every `cargo test`.
+//! * `artifacts/goldens.json` — the full `make artifacts` sweep, when
+//!   present.
+
+mod common;
 
 use matquant::quant;
 use matquant::util::Json;
 
-fn goldens() -> Option<Json> {
-    let path = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
-        .join("artifacts")
-        .join("goldens.json");
-    let text = std::fs::read_to_string(path).ok()?;
-    Some(Json::parse(&text).expect("goldens.json parses"))
-}
-
-#[test]
-fn rust_quant_matches_python_oracles() {
-    let Some(g) = goldens() else {
-        eprintln!("skipping: run `make artifacts`");
-        return;
-    };
-    for case in g.get("cases").unwrap().as_arr().unwrap() {
+fn check_cases(g: &Json) {
+    let cases = g.get("cases").unwrap().as_arr().unwrap();
+    assert!(!cases.is_empty(), "golden file has no cases");
+    for case in cases {
         let w = case.get("w").unwrap().as_f32_vec().unwrap();
         let d_in = case.get("d_in").unwrap().as_usize().unwrap();
         let d_out = case.get("d_out").unwrap().as_usize().unwrap();
@@ -80,6 +79,13 @@ fn rust_quant_matches_python_oracles() {
                 );
             }
 
+            // the fused serving kernel must land on the same goldens
+            let packed = quant::PackedTensor::pack(&q8, 8);
+            let fused = matquant::kernels::slice_dequant(&packed, r, false, &s8, d_out);
+            for (i, (a, b)) in fused.iter().zip(&deq).enumerate() {
+                assert_eq!(a.to_bits(), b.to_bits(), "fused dequant r={r} i={i}");
+            }
+
             let got_eb = quant::effective_bits(&q8, 8, r);
             assert!((got_eb - eb).abs() < 1e-9, "effective_bits r={r}");
 
@@ -98,4 +104,19 @@ fn rust_quant_matches_python_oracles() {
             assert!(dm * 1000 <= dcodes.len(), "direct codes r={r}: {dm} mismatches");
         }
     }
+}
+
+#[test]
+fn rust_quant_matches_checked_in_fixture() {
+    let g = Json::parse(include_str!("fixtures/goldens_small.json")).expect("fixture parses");
+    check_cases(&g);
+}
+
+#[test]
+fn rust_quant_matches_python_oracles() {
+    let Some(dir) = common::artifact_or_skip("goldens", "goldens.json") else {
+        return;
+    };
+    let text = std::fs::read_to_string(dir.join("goldens.json")).unwrap();
+    check_cases(&Json::parse(&text).expect("goldens.json parses"));
 }

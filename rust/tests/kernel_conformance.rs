@@ -1,0 +1,224 @@
+//! Fused-kernel conformance suite: the single-pass kernels in
+//! `matquant::kernels` must match the scalar reference path (the seed's
+//! two-pass unpack → slice → dequantize walk) **bit for bit** across
+//!
+//! * every supported width (1/2/3/4/6/8 bits — LUT paths and the bit
+//!   cursor),
+//! * odd / word-straddling / empty lengths,
+//! * Eq. 8 overflow overlays (including all-overflow and empty overlays),
+//! * degenerate EPS-guarded channels and extreme zero-points.
+//!
+//! Runs unconditionally — no artifacts required.  The shared synthesis +
+//! reference code lives in `matquant::kernels::testing` so new kernels
+//! inherit the harness.
+
+use matquant::kernels::{self, testing};
+use matquant::model::registry::QuantizedTensor;
+use matquant::model::Tensor;
+use matquant::quant::{self, ExtraBitOverlay, PackedTensor};
+
+const WIDTHS: [u32; 6] = [1, 2, 3, 4, 6, 8];
+
+/// (n, d_out) shape grid: odd lengths, exact word multiples, word+1
+/// straddles, single-channel, and ragged-channel splits.
+fn shape_grid() -> Vec<(usize, usize)> {
+    vec![
+        (0, 1),
+        (0, 4),
+        (1, 1),
+        (3, 1),
+        (5, 1),
+        (7, 7),
+        (8, 2),
+        (31, 1),
+        (33, 3),
+        (64, 8),
+        (65, 5),
+        (96, 12),
+        (257, 1),
+        (1000, 10),
+        (1024, 128),
+    ]
+}
+
+#[test]
+fn dequant_packed_matches_reference_all_widths() {
+    for &bits in &WIDTHS {
+        for (case, &(n, d_out)) in shape_grid().iter().enumerate() {
+            for degenerate in [false, true] {
+                let seed = (case as u64) * 31 + bits as u64;
+                let ids = testing::synth_ids(bits, n, seed);
+                let packed = PackedTensor::pack(&ids, bits);
+                let scales = testing::synth_scales(d_out, seed ^ 0x77, degenerate);
+                let want = testing::reference_dequant_packed(&packed, None, &scales, 8, d_out);
+                let got = kernels::dequant_packed(&packed, None, &scales, 8, d_out);
+                testing::assert_bits_eq(
+                    &got,
+                    &want,
+                    &format!("dequant_packed bits={bits} n={n} d_out={d_out} deg={degenerate}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn dequant_packed_native_width_matches_reference() {
+    // master_bits == packed.bits (step = 1): plain unpack+dequant fusion.
+    for &bits in &WIDTHS {
+        let (n, d_out) = (129, 3);
+        let ids = testing::synth_ids(bits, n, 9);
+        let packed = PackedTensor::pack(&ids, bits);
+        let scales = testing::synth_scales(d_out, 4, false);
+        let want = testing::reference_dequant_packed(&packed, None, &scales, bits, d_out);
+        let got = kernels::dequant_packed(&packed, None, &scales, bits, d_out);
+        testing::assert_bits_eq(&got, &want, &format!("native bits={bits}"));
+    }
+}
+
+#[test]
+fn dequant_packed_overlay_matches_reference() {
+    // Overlays only make sense below the master width (the Eq. 8 bucket is
+    // one past the dense range).
+    for &bits in &[1u32, 2, 3, 4, 6] {
+        for &(n, d_out) in &[(7usize, 1usize), (33, 3), (96, 8), (1000, 10)] {
+            let (packed, overlay) = testing::synth_overlayed(bits, n, n as u64 + bits as u64);
+            let scales = testing::synth_scales(d_out, 21, false);
+            let want =
+                testing::reference_dequant_packed(&packed, Some(&overlay), &scales, 8, d_out);
+            let got = kernels::dequant_packed(&packed, Some(&overlay), &scales, 8, d_out);
+            testing::assert_bits_eq(
+                &got,
+                &want,
+                &format!("overlay bits={bits} n={n} d_out={d_out}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn dequant_packed_all_overflow_overlay() {
+    // Every entry in the overflow bucket — the densest possible overlay.
+    let bits = 2u32;
+    let n = 40;
+    let ids = vec![4.0f32; n]; // 2^2 everywhere
+    let (overlay, dense) = ExtraBitOverlay::split(&ids, bits);
+    assert_eq!(overlay.indices.len(), n);
+    let packed = PackedTensor::pack(&dense, bits);
+    let scales = testing::synth_scales(8, 2, false);
+    let want = testing::reference_dequant_packed(&packed, Some(&overlay), &scales, 8, 8);
+    let got = kernels::dequant_packed(&packed, Some(&overlay), &scales, 8, 8);
+    testing::assert_bits_eq(&got, &want, "all-overflow");
+}
+
+#[test]
+fn slice_dequant_matches_reference_exhaustive() {
+    for &r in &WIDTHS {
+        for ep in [false, true] {
+            for (case, &(n, d_out)) in shape_grid().iter().enumerate() {
+                for degenerate in [false, true] {
+                    let seed = (case as u64) * 17 + r as u64;
+                    let codes = testing::synth_master_codes(n, seed);
+                    let packed = PackedTensor::pack(&codes, 8);
+                    let scales = testing::synth_scales(d_out, seed ^ 0x55, degenerate);
+                    let want =
+                        testing::reference_slice_dequant(&packed, r, ep, &scales, d_out);
+                    let got = kernels::slice_dequant(&packed, r, ep, &scales, d_out);
+                    testing::assert_bits_eq(
+                        &got,
+                        &want,
+                        &format!(
+                            "slice_dequant r={r} ep={ep} n={n} d_out={d_out} deg={degenerate}"
+                        ),
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn slice_dequant_covers_every_master_code() {
+    // All 256 master codes, every slice width, both Eq. 6 and Eq. 8.
+    let codes: Vec<f32> = (0..256).map(|q| q as f32).collect();
+    let packed = PackedTensor::pack(&codes, 8);
+    let scales = testing::synth_scales(16, 99, false);
+    for &r in &WIDTHS {
+        for ep in [false, true] {
+            let want = testing::reference_slice_dequant(&packed, r, ep, &scales, 16);
+            let got = kernels::slice_dequant(&packed, r, ep, &scales, 16);
+            testing::assert_bits_eq(&got, &want, &format!("all-codes r={r} ep={ep}"));
+        }
+    }
+}
+
+#[test]
+fn registry_materialization_agrees_across_kernels() {
+    // End-to-end: fused slice path (materialize) == fused packed-domain
+    // path (materialize_packed) == the scalar reference, through real
+    // minmax scales including a constant (EPS-guarded) column.
+    let d_in = 32;
+    let d_out = 12;
+    let mut rng = matquant::data::Rng::new(42);
+    let mut data: Vec<f32> = (0..d_in * d_out).map(|_| rng.range_f32(-1.5, 1.5)).collect();
+    for row in 0..d_in {
+        data[row * d_out + 5] = 0.25; // constant column → EPS guard
+    }
+    let fp = Tensor::new(vec![d_in, d_out], data).unwrap();
+    let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+    for &bits in &WIDTHS {
+        for ep in [false, true] {
+            let (w_fused, _) = qt.materialize(bits, ep).unwrap();
+            let (w_packed, _) = qt.materialize_packed(bits, ep).unwrap();
+            let want = testing::reference_slice_dequant(&qt.codes, bits, ep, &qt.scales, d_out);
+            testing::assert_bits_eq(
+                &w_fused.data,
+                &want,
+                &format!("materialize bits={bits} ep={ep}"),
+            );
+            testing::assert_bits_eq(
+                &w_packed.data,
+                &want,
+                &format!("materialize_packed bits={bits} ep={ep}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_kernels_reject_bad_shapes() {
+    let packed = PackedTensor::pack(&[1.0, 0.0, 1.0], 2);
+    let scales = testing::synth_scales(2, 1, false);
+    // 3 entries do not divide into 2 channels
+    let err = std::panic::catch_unwind(|| {
+        let mut out = vec![0.0f32; 3];
+        kernels::dequant_packed_into(&packed, None, &scales, 8, 2, &mut out);
+    });
+    assert!(err.is_err(), "shape mismatch must panic");
+    // wrong output length
+    let err = std::panic::catch_unwind(|| {
+        let mut out = vec![0.0f32; 5];
+        kernels::dequant_packed_into(&packed, None, &scales, 8, 1, &mut out);
+    });
+    assert!(err.is_err(), "length mismatch must panic");
+}
+
+#[test]
+fn slice_dequant_agrees_with_scalar_slice_code() {
+    // Spot-check the fused path against the rawest possible oracle: one
+    // scalar slice_code + affine per element, no *_into helpers involved.
+    let n = 64;
+    let d_out = 4;
+    let codes = testing::synth_master_codes(n, 77);
+    let packed = PackedTensor::pack(&codes, 8);
+    let scales = testing::synth_scales(d_out, 13, false);
+    for &r in &WIDTHS {
+        let got = kernels::slice_dequant(&packed, r, false, &scales, d_out);
+        for (i, &g) in got.iter().enumerate() {
+            let j = i % d_out;
+            let s = quant::slice_code(codes[i], 8, r, false);
+            let want = (s - scales.zero[j]) * scales.alpha[j];
+            assert_eq!(g.to_bits(), want.to_bits(), "r={r} i={i}");
+        }
+    }
+}

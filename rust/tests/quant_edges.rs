@@ -1,0 +1,120 @@
+//! Quant-algebra edge cases the seed left uncovered: empty tensors,
+//! constant columns on the EPS guard, and overlay roundtrips at every
+//! supported width.  Runs unconditionally — no artifacts required.
+
+use matquant::quant::{
+    self, dequantize, minmax_scales, omni_scales, quantize, ExtraBitOverlay, PackedTensor, EPS,
+};
+
+#[test]
+fn empty_packed_tensor_is_well_defined() {
+    for bits in [1u32, 2, 3, 4, 6, 8] {
+        let p = PackedTensor::pack(&[], bits);
+        assert_eq!(p.len, 0);
+        assert_eq!(p.bytes(), 0);
+        // was a 0/0 division before the bits_per_entry guard
+        assert_eq!(p.bits_per_entry(), 0.0, "bits={bits}");
+        assert!(p.unpack().is_empty());
+    }
+}
+
+#[test]
+fn empty_slicing_and_effective_bits() {
+    let empty: Vec<f32> = Vec::new();
+    for r in [2u32, 4, 8] {
+        assert!(quant::slice_codes(&empty, 8, r, false).is_empty());
+        assert_eq!(quant::effective_bits(&empty, 8, r), r as f64);
+        assert_eq!(quant::overflow_fraction(&empty, 8, r), 0.0);
+    }
+    let (ov, dense) = ExtraBitOverlay::split(&empty, 2);
+    assert!(ov.is_empty());
+    assert!(dense.is_empty());
+    assert_eq!(ov.bytes(0), 0);
+}
+
+#[test]
+fn constant_columns_hit_eps_guard() {
+    // Every column constant (one positive, one zero, one negative): the
+    // range collapses and alpha must pin at EPS, never zero or negative.
+    let d_in = 6;
+    let d_out = 3;
+    let mut w = Vec::with_capacity(d_in * d_out);
+    for _ in 0..d_in {
+        w.extend_from_slice(&[0.75, 0.0, -1.25]);
+    }
+    for bits in [2u32, 4, 8] {
+        let s = minmax_scales(&w, d_in, d_out, bits);
+        for j in 0..d_out {
+            assert_eq!(s.alpha[j], EPS, "bits={bits} j={j}");
+            assert!(s.zero[j].is_finite());
+        }
+        let q = quantize(&w, d_out, &s);
+        assert!(q.iter().all(|c| c.is_finite() && *c >= 0.0));
+        let wq = dequantize(&q, d_out, &s);
+        assert!(wq.iter().all(|x| x.is_finite()), "bits={bits}");
+    }
+}
+
+#[test]
+fn omni_clipping_to_zero_range_hits_eps_guard() {
+    // gamma = beta = 0 collapses the clipped range to zero width even for a
+    // non-constant column; the guard must still hold.
+    let w: Vec<f32> = (0..16).map(|i| i as f32 / 15.0 - 0.5).collect();
+    let zeros = vec![0.0f32];
+    let s = omni_scales(&w, 16, 1, 4, Some(&zeros), Some(&zeros));
+    assert_eq!(s.alpha[0], EPS);
+    assert_eq!(s.zero[0], 0.0);
+    let q = quantize(&w, 1, &s);
+    assert!(q.iter().all(|c| c.is_finite()));
+}
+
+#[test]
+fn overlay_split_apply_roundtrip_every_width() {
+    for r in [1u32, 2, 3, 4, 6, 7] {
+        let top = (1u32 << r) as f32;
+        // mix of in-range ids and overflow, including consecutive overflow
+        // and overflow at both ends
+        let n = 50;
+        let ids: Vec<f32> = (0..n)
+            .map(|i| {
+                if i == 0 || i == n - 1 || i % 7 == 3 || i % 7 == 4 {
+                    top
+                } else {
+                    ((i as u32 * 5 + 1) % (1 << r)) as f32
+                }
+            })
+            .collect();
+        let (ov, dense) = ExtraBitOverlay::split(&ids, r);
+        assert!(!ov.is_empty());
+        assert!(ov.indices.windows(2).all(|w| w[0] < w[1]), "sorted, unique");
+        assert!(dense.iter().all(|&d| d < top), "dense ids clamped below top");
+        let p = PackedTensor::pack(&dense, r);
+        let mut back = p.unpack();
+        ov.apply(&mut back, r);
+        assert_eq!(back, ids, "r={r}");
+    }
+}
+
+#[test]
+fn overlay_storage_prefers_smaller_encoding() {
+    // sparse list (4 bytes/entry) vs bitmap (n/8): crossover at n/32 entries
+    let n = 320;
+    let few: ExtraBitOverlay = ExtraBitOverlay {
+        indices: (0..5).collect(),
+    };
+    assert_eq!(few.bytes(n), 20); // 5*4 < 320/8
+    let many: ExtraBitOverlay = ExtraBitOverlay {
+        indices: (0..100).collect(),
+    };
+    assert_eq!(many.bytes(n), 40); // bitmap wins
+}
+
+#[test]
+fn pack_rejects_nothing_in_range_and_roundtrips_extremes() {
+    for bits in [1u32, 2, 3, 4, 6, 8] {
+        let top = (1u32 << bits) as f32 - 1.0;
+        let ids = vec![0.0, top, 0.0, top, top];
+        let p = PackedTensor::pack(&ids, bits);
+        assert_eq!(p.unpack(), ids, "bits={bits}");
+    }
+}

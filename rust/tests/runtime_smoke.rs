@@ -1,19 +1,15 @@
 //! End-to-end PJRT smoke: load the init artifact, run it, check shapes.
-//! Requires `make artifacts` (skips otherwise).
+//! Requires `make artifacts` (reports `skipped:` otherwise).
+
+mod common;
 
 use matquant::runtime::{lit_scalar_i32, Engine};
 
-fn artifacts() -> std::path::PathBuf {
-    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
 #[test]
 fn init_artifact_runs_and_is_deterministic() {
-    let dir = artifacts();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts`");
+    let Some(dir) = common::artifact_or_skip("runtime_smoke", "manifest.json") else {
         return;
-    }
+    };
     let engine = Engine::new(&dir).unwrap();
     let preset = engine.manifest().preset("tiny").unwrap().clone();
     let out = engine.run("tiny", "init", &[lit_scalar_i32(7)]).unwrap();

@@ -1,21 +1,16 @@
 //! Serving-stack integration: mixed-precision requests through the full
-//! router → batcher → PJRT pipeline.  Requires `make artifacts`.
+//! router → batcher → PJRT pipeline.  Requires `make artifacts` (reports
+//! `skipped:` otherwise).
+
+mod common;
 
 use matquant::coordinator::trainer::init_params;
 use matquant::model::QuantizedModel;
 use matquant::runtime::Engine;
 use matquant::serve::{PrecisionReq, Request, Server, ServerConfig};
 
-fn artifacts() -> std::path::PathBuf {
-    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-}
-
 fn boot() -> Option<(Server, usize, usize)> {
-    let dir = artifacts();
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts`");
-        return None;
-    }
+    let dir = common::artifact_or_skip("serving", "manifest.json")?;
     let engine = Engine::new(&dir).unwrap();
     let info = engine.manifest().preset("tiny").unwrap().clone();
     let params = init_params(&engine, "tiny", 9).unwrap();

@@ -1,15 +1,14 @@
 //! End-to-end train-loop integration: rust drives the PJRT train-step
-//! artifacts and losses go down.  Requires `make artifacts`.
+//! artifacts and losses go down.  Requires `make artifacts` (reports
+//! `skipped:` otherwise).
+
+mod common;
 
 use matquant::coordinator::{train, Mode, Objective, TrainSpec};
 use matquant::runtime::Engine;
 
 fn engine() -> Option<Engine> {
-    let dir = std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-    if !dir.join("manifest.json").exists() {
-        eprintln!("skipping: run `make artifacts`");
-        return None;
-    }
+    let dir = common::artifact_or_skip("train_loop", "manifest.json")?;
     Some(Engine::new(dir).unwrap())
 }
 

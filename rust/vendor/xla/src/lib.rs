@@ -1,0 +1,311 @@
+//! Pure-Rust stub of the `xla-rs` PJRT bindings used by `matquant`.
+//!
+//! The real `xla` crate links the native `xla_extension` C++ runtime, which
+//! cannot be fetched or built in this offline environment.  This stub keeps
+//! the whole crate compiling and testable by providing the exact API surface
+//! the runtime layer uses:
+//!
+//! * [`Literal`] is fully functional host storage (f32 / i32 arrays with a
+//!   shape, plus tuples), so literal construction and conversion code paths
+//!   are real.
+//! * [`PjRtClient::cpu`] returns an error: there is no PJRT runtime here.
+//!   Everything gated on `make artifacts` (which needs the real runtime)
+//!   reports a clean skip/error instead of failing to link.
+//!
+//! Swapping the real bindings back in is a one-line `Cargo.toml` change; no
+//! source edits are required because the signatures match `xla-rs`.
+
+use std::fmt;
+
+/// Stub error type; carries a plain message.
+#[derive(Debug, Clone)]
+pub struct Error(String);
+
+impl Error {
+    fn unavailable(what: &str) -> Self {
+        Error(format!(
+            "{what} is unavailable: matquant was built against the vendored pure-Rust \
+             `xla` stub (no PJRT runtime); see rust/vendor/xla"
+        ))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+#[derive(Debug, Clone, PartialEq)]
+enum Storage {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+impl Storage {
+    fn len(&self) -> usize {
+        match self {
+            Storage::F32(v) => v.len(),
+            Storage::I32(v) => v.len(),
+            Storage::Tuple(v) => v.len(),
+        }
+    }
+}
+
+/// Host tensor literal: a shape plus typed storage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Literal {
+    dims: Vec<i64>,
+    storage: Storage,
+}
+
+/// Array shape accessor, mirroring `xla-rs`.
+#[derive(Debug, Clone)]
+pub struct ArrayShape {
+    dims: Vec<i64>,
+}
+
+impl ArrayShape {
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+}
+
+/// Element types the stub can store (f32 and i32 are all matquant uses).
+pub trait NativeType: Copy {
+    fn wrap(dims: Vec<i64>, data: Vec<Self>) -> Literal;
+    fn extract(lit: &Literal) -> Result<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn wrap(dims: Vec<i64>, data: Vec<Self>) -> Literal {
+        Literal {
+            dims,
+            storage: Storage::F32(data),
+        }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.storage {
+            Storage::F32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not f32".into())),
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn wrap(dims: Vec<i64>, data: Vec<Self>) -> Literal {
+        Literal {
+            dims,
+            storage: Storage::I32(data),
+        }
+    }
+
+    fn extract(lit: &Literal) -> Result<Vec<Self>> {
+        match &lit.storage {
+            Storage::I32(v) => Ok(v.clone()),
+            _ => Err(Error("literal is not i32".into())),
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-0 literal.
+    pub fn scalar<T: NativeType>(v: T) -> Literal {
+        T::wrap(Vec::new(), vec![v])
+    }
+
+    /// Rank-1 literal.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        T::wrap(vec![v.len() as i64], v.to_vec())
+    }
+
+    /// Build a tuple literal (used by tests of the stub itself).
+    pub fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            dims: vec![parts.len() as i64],
+            storage: Storage::Tuple(parts),
+        }
+    }
+
+    /// Reinterpret with a new shape of the same element count.
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.storage.len() as i64;
+        if matches!(self.storage, Storage::Tuple(_)) {
+            return Err(Error("cannot reshape a tuple literal".into()));
+        }
+        if want != have {
+            return Err(Error(format!(
+                "reshape {dims:?} wants {want} elements, literal has {have}"
+            )));
+        }
+        Ok(Literal {
+            dims: dims.to_vec(),
+            storage: self.storage.clone(),
+        })
+    }
+
+    /// Shape of an array literal; errors for tuples.
+    pub fn array_shape(&self) -> Result<ArrayShape> {
+        match self.storage {
+            Storage::Tuple(_) => Err(Error("tuple literal has no array shape".into())),
+            _ => Ok(ArrayShape {
+                dims: self.dims.clone(),
+            }),
+        }
+    }
+
+    /// Copy the elements out as `Vec<T>`.
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::extract(self)
+    }
+
+    /// Decompose a tuple literal; errors for arrays.
+    pub fn to_tuple(&self) -> Result<Vec<Literal>> {
+        match &self.storage {
+            Storage::Tuple(parts) => Ok(parts.clone()),
+            _ => Err(Error("literal is not a tuple".into())),
+        }
+    }
+}
+
+/// Borrow-or-owned literal arguments for `execute`, like `xla-rs`.
+pub trait BorrowLiteral {
+    fn borrow_literal(&self) -> &Literal;
+}
+
+impl BorrowLiteral for Literal {
+    fn borrow_literal(&self) -> &Literal {
+        self
+    }
+}
+
+impl<'a> BorrowLiteral for &'a Literal {
+    fn borrow_literal(&self) -> &Literal {
+        self
+    }
+}
+
+/// Device handle (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtDevice(());
+
+/// Device buffer: in the stub, a host literal copy.
+#[derive(Debug, Clone)]
+pub struct PjRtBuffer {
+    lit: Literal,
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(self.lit.clone())
+    }
+}
+
+/// Parsed HLO module (opaque; parsing is not supported by the stub).
+#[derive(Debug)]
+pub struct HloModuleProto(());
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::unavailable("HLO text parsing"))
+    }
+}
+
+/// Computation wrapper.
+#[derive(Debug)]
+pub struct XlaComputation(());
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation(())
+    }
+}
+
+/// Compiled executable (never constructed by the stub).
+#[derive(Debug)]
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L: BorrowLiteral>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PJRT execution"))
+    }
+
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable("PJRT execution"))
+    }
+}
+
+/// PJRT client. `cpu()` fails fast in the stub so callers surface one clear
+/// message instead of a late link/execution error.
+#[derive(Debug)]
+pub struct PjRtClient(());
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::unavailable("the PJRT CPU client"))
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable("XLA compilation"))
+    }
+
+    pub fn buffer_from_host_literal(
+        &self,
+        _device: Option<&PjRtDevice>,
+        lit: &Literal,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer { lit: lit.clone() })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let shaped = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(shaped.array_shape().unwrap().dims(), &[2, 2]);
+        assert_eq!(shaped.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(shaped.to_vec::<i32>().is_err());
+    }
+
+    #[test]
+    fn scalar_has_empty_shape() {
+        let lit = Literal::scalar(7i32);
+        assert!(lit.array_shape().unwrap().dims().is_empty());
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7]);
+    }
+
+    #[test]
+    fn bad_reshape_errors() {
+        let lit = Literal::vec1(&[1.0f32, 2.0, 3.0]);
+        assert!(lit.reshape(&[2, 2]).is_err());
+    }
+
+    #[test]
+    fn tuple_literals() {
+        let t = Literal::tuple(vec![Literal::scalar(1.0f32), Literal::scalar(2.0f32)]);
+        assert!(t.array_shape().is_err());
+        assert_eq!(t.to_tuple().unwrap().len(), 2);
+        assert!(Literal::scalar(1.0f32).to_tuple().is_err());
+    }
+
+    #[test]
+    fn client_reports_stub() {
+        let err = PjRtClient::cpu().unwrap_err();
+        assert!(err.to_string().contains("stub"), "{err}");
+    }
+}
