@@ -23,7 +23,7 @@ import numpy as np
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "compile", "kernels"))
 import ref  # noqa: E402
 
-BITS = [2, 3, 4, 6]
+BITS = [2, 3, 4, 6, 8]
 OUT = os.path.join(
     os.path.dirname(__file__), "..", "..", "rust", "tests", "fixtures", "goldens_small.json"
 )
@@ -34,9 +34,11 @@ def f32_list(a):
     return [float(np.float32(x)) for x in np.asarray(a, dtype=np.float32).reshape(-1)]
 
 
-def make_case(w: np.ndarray):
+def make_case(w: np.ndarray, x: np.ndarray):
     w = np.asarray(w, dtype=np.float32)
+    x = np.asarray(x, dtype=np.float32)
     d_in, d_out = w.shape
+    assert x.shape == (d_in,)
     alpha8, zero8 = ref.minmax_scales(w, 8, axis=0)
     q8 = ref.quantize(w, 8, alpha8, zero8)
     q8_np = np.asarray(q8, dtype=np.float32)
@@ -47,6 +49,12 @@ def make_case(w: np.ndarray):
         sliced = ref.slice_codes(q8, 8, r, extra_precision=False)
         sliced_ep = ref.slice_codes(q8, 8, r, extra_precision=True)
         dequant = ref.dequantize(sliced, alpha8, zero8)
+        # matvec goldens for the fused dequant×matmul kernels:
+        # x @ dequant(S(q8, r)) via the L1 reference (both Eq. 6 and Eq. 8)
+        matvec = ref.quantized_matmul(x[None, :], q8, alpha8, zero8, 8, r)
+        matvec_ep = ref.quantized_matmul(
+            x[None, :], q8, alpha8, zero8, 8, r, extra_precision=True
+        )
         # effective bits in exact f64 (matches the Rust f64 computation)
         step = 2.0 ** (8 - r)
         s = np.floor(q8_np.astype(np.float32) / np.float32(step) + np.float32(0.5))
@@ -58,6 +66,8 @@ def make_case(w: np.ndarray):
             "sliced": f32_list(sliced),
             "sliced_ep": f32_list(sliced_ep),
             "dequant": f32_list(dequant),
+            "matvec": f32_list(matvec),
+            "matvec_ep": f32_list(matvec_ep),
             "effective_bits": eff,
             "direct_alpha": f32_list(da),
             "direct_q": f32_list(dq),
@@ -65,6 +75,7 @@ def make_case(w: np.ndarray):
 
     return {
         "w": f32_list(w),
+        "x": f32_list(x),
         "d_in": d_in,
         "d_out": d_out,
         "alpha8": f32_list(alpha8),
@@ -90,7 +101,15 @@ def main():
     # case 3: exact grid values (boundary-code heavy)
     w3 = (np.arange(32, dtype=np.float32).reshape(16, 2) / 8.0) - 2.0
 
-    cases = [make_case(w) for w in (w1, w2, w3)]
+    # matvec probe vectors (drawn after the weights so w1..w3 stay stable
+    # across fixture regenerations); x2 gets exact zeros to exercise the
+    # kernels' zero-activation skip
+    x1 = rng.normal(0.0, 1.0, size=(8,)).astype(np.float32)
+    x2 = rng.normal(0.0, 1.0, size=(16,)).astype(np.float32)
+    x2[::3] = 0.0
+    x3 = rng.normal(0.0, 1.0, size=(16,)).astype(np.float32)
+
+    cases = [make_case(w, x) for w, x in ((w1, x1), (w2, x2), (w3, x3))]
     payload = {"source": "python/compile/kernels/ref.py", "cases": cases}
     os.makedirs(os.path.dirname(OUT), exist_ok=True)
     with open(OUT, "w") as f:

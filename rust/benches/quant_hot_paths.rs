@@ -1,6 +1,8 @@
-//! L3 quantization hot paths: pack/unpack, slicing, dequantization — the
-//! per-request work of elastic serving.  Perf targets in DESIGN.md §Perf
-//! (slicing ≥ 1 GB/s of codes on this single-core testbed).
+//! L3 quantization hot paths: pack/unpack, slicing, dequantization, and the
+//! fused packed-domain matmuls — the per-request work of elastic serving.
+//! Perf targets in DESIGN.md §Perf (slicing ≥ 1 GB/s of codes on this
+//! single-core testbed); ISSUE 2 acceptance: fused matvec/matmul beats
+//! materialize-then-matmul at int2/int4 on these shapes.
 //!
 //! Run: `cargo bench --bench quant_hot_paths`
 
@@ -153,6 +155,125 @@ fn main() {
             fused.throughput(n as f64) / 1e6,
             three_pass.mean_ns / fused.mean_ns
         );
+    }
+
+    // ---- fused dequant×matmul vs materialize-then-matmul ----
+    // Acceptance target (ISSUE 2): fused beats materialize-then-matmul at
+    // int2/int4 — the packed path reads `bits/32` of the weight bytes and
+    // never writes the 4 MB f32 weight buffer.
+    let x: Vec<f32> = (0..d_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let mut y = vec![0.0f32; d_out];
+    let mut w_buf = vec![0.0f32; n];
+    for bits in [2u32, 4, 8] {
+        let (packed, _overlay) = qt.pack_sliced(bits, false);
+        let mat = bench(
+            &format!("materialize+matvec 1M @ int{bits}"),
+            budget,
+            || {
+                kernels::dequant_packed_into(&packed, None, &qt.scales, 8, d_out, &mut w_buf);
+                y.fill(0.0);
+                for (i, row) in w_buf.chunks_exact(d_out).enumerate() {
+                    let xv = x[i];
+                    for (o, &wv) in y.iter_mut().zip(row) {
+                        *o += xv * wv;
+                    }
+                }
+                std::hint::black_box(&y);
+            },
+        );
+        println!(
+            "{} | {:.2} Melem/s",
+            mat.report(),
+            mat.throughput(n as f64) / 1e6
+        );
+        let fused = bench(&format!("fused matvec 1M @ int{bits}"), budget, || {
+            kernels::matvec_packed_into(&packed, None, &qt.scales, 8, d_out, &x, None, &mut y);
+            std::hint::black_box(&y);
+        });
+        println!(
+            "{} | {:.2} Melem/s | {:.2}x vs materialize-then-matmul | {}B vs {}B weight bytes",
+            fused.report(),
+            fused.throughput(n as f64) / 1e6,
+            mat.mean_ns / fused.mean_ns,
+            packed.bytes(),
+            n * 4
+        );
+    }
+
+    // ---- batched fused GEMM (8 columns per packed-stream pass) ----
+    let m = 8usize;
+    let xs: Vec<f32> = (0..m * d_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+    let mut ys = vec![0.0f32; m * d_out];
+    for bits in [2u32, 4] {
+        let (packed, _overlay) = qt.pack_sliced(bits, false);
+        let mat = bench(
+            &format!("materialize+matmul 1M @ int{bits} m={m}"),
+            budget,
+            || {
+                kernels::dequant_packed_into(&packed, None, &qt.scales, 8, d_out, &mut w_buf);
+                ys.fill(0.0);
+                for b in 0..m {
+                    let yrow = &mut ys[b * d_out..(b + 1) * d_out];
+                    for (i, row) in w_buf.chunks_exact(d_out).enumerate() {
+                        let xv = xs[b * d_in + i];
+                        for (o, &wv) in yrow.iter_mut().zip(row) {
+                            *o += xv * wv;
+                        }
+                    }
+                }
+                std::hint::black_box(&ys);
+            },
+        );
+        println!(
+            "{} | {:.2} Melem/s",
+            mat.report(),
+            mat.throughput((m * n) as f64) / 1e6
+        );
+        let fused = bench(
+            &format!("fused matmul 1M @ int{bits} m={m}"),
+            budget,
+            || {
+                kernels::matmul_packed_into(
+                    &packed,
+                    None,
+                    &qt.scales,
+                    8,
+                    d_out,
+                    &xs,
+                    m,
+                    None,
+                    &mut ys,
+                );
+                std::hint::black_box(&ys);
+            },
+        );
+        println!(
+            "{} | {:.2} Melem/s | {:.2}x vs materialize-then-matmul",
+            fused.report(),
+            fused.throughput((m * n) as f64) / 1e6,
+            mat.mean_ns / fused.mean_ns
+        );
+    }
+
+    // ---- integer-domain GEMV (i8 activations, i32 accumulate) ----
+    let xq: Vec<i8> = (0..d_in).map(|i| (((i * 37) % 255) as i64 - 127) as i8).collect();
+    for bits in [2u32, 4, 8] {
+        let (packed, _overlay) = qt.pack_sliced(bits, false);
+        let r = bench(&format!("fused i8 matvec 1M @ int{bits}"), budget, || {
+            kernels::matvec_packed_i8_into(
+                &packed,
+                None,
+                &qt.scales,
+                8,
+                d_out,
+                &xq,
+                0.01,
+                None,
+                &mut y,
+            );
+            std::hint::black_box(&y);
+        });
+        println!("{} | {:.2} Melem/s", r.report(), r.throughput(n as f64) / 1e6);
     }
 
     // ---- histogram (fig 1c machinery) ----

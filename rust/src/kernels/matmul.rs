@@ -1,0 +1,575 @@
+//! Fused packed-domain dequant×matmul — `y = x·W_r (+ bias)` straight from
+//! the bitstream.
+//!
+//! PR 1 fused unpack+affine into one pass, but every matmul still began by
+//! materializing the full f32 weight tensor.  These kernels keep the packed
+//! representation alive all the way into the GEMV/GEMM inner loop: the only
+//! f32 weight state that ever exists is one `d_out`-wide row tile, decoded
+//! on the fly and immediately consumed.  At r bits the weight bytes read
+//! per token drop by `32/r` versus the materialize-then-multiply path.
+//!
+//! Layout matches the registry: `W` is `(d_in, d_out)` row-major with per
+//! *output-channel* (column) scales, and the product is the model's
+//! activation flow `y[j] = Σ_i x[i]·W[i,j]` (what [`crate::model::Tensor::vecmat`]
+//! computes on dense weights).
+//!
+//! # The affine hoist
+//!
+//! With `W[i,j] = (id[i,j]·step − zero[j])·alpha[j]`, the per-channel affine
+//! factors completely out of the reduction:
+//!
+//! ```text
+//!   y[j] = alpha[j]·(step·Σ_i x[i]·id[i,j]  −  zero[j]·Σ_i x[i])
+//! ```
+//!
+//! so the inner loop is a raw multiply-accumulate over bucket ids — no
+//! subtract, no per-element scale — and the affine runs once per output in
+//! the epilogue.  The same factoring enables the integer path
+//! ([`matvec_packed_i8_into`]): with int8 activations the reduction is an
+//! exact i32 multiply-accumulate, scaled to f32 only at the end.
+//!
+//! # Kernel shapes
+//!
+//! * [`matvec_packed_into`] — row-tiled GEMV.  Power-of-two widths
+//!   (1/2/4/8) decode through the 256-entry byte-expansion LUTs
+//!   ([`super::lut`]); 3/6-bit fall back to the [`BitCursor`].
+//! * [`matmul_packed_into`] — blocked multi-column GEMM for batched
+//!   requests: each block of up to [`GEMM_BLOCK`] batch rows re-streams the
+//!   (2–8× smaller) packed weights once, so accumulator tiles stay
+//!   cache-resident while the decode cost is amortized over the block.
+//! * [`matvec_packed_i8_into`] — accumulate-in-i32-then-scale GEMV over
+//!   quantized activations, with periodic i64 spills so the i32 partials
+//!   cannot overflow (see [`I32_FLUSH_ROWS`]).
+//!
+//! Eq. 8 overflow overlays are applied as a sparse correction: overlay
+//! entries decode to the bucket id `2^r`, exactly as in
+//! [`super::fused::dequant_packed_into`].
+//!
+//! Conformance: `cargo test --test kernel_conformance` checks every kernel
+//! against the scalar `quant::` dequant followed by a naive f32 matmul —
+//! bit-for-bit on decode, within an accumulation-magnitude-scaled tolerance
+//! on the reductions (the factored sum is a different, equally valid f32
+//! evaluation order).  See [`super::testing::reference_matmul`].
+
+use super::cursor::BitCursor;
+use super::lut;
+use crate::quant::{ExtraBitOverlay, PackedTensor, Scales};
+use crate::MASTER_BITS;
+
+/// Batch rows per GEMM block: small enough that the `(GEMM_BLOCK, d_out)`
+/// accumulator tile stays cache-hot, large enough to amortize one decode of
+/// the packed stream across the block.
+pub const GEMM_BLOCK: usize = 8;
+
+/// Rows between i64 spills in the i32-accumulation path.  One term is
+/// bounded by `|xq|·id ≤ 128·255 = 32640`, so `32640·4096 ≈ 1.3e8` keeps
+/// the i32 partial more than an order of magnitude clear of overflow even
+/// in release builds (where wrap-around would be silent).
+pub const I32_FLUSH_ROWS: usize = 4096;
+
+/// Streaming state for the LUT row decoder: ids decoded from the current
+/// byte but not yet emitted (a byte can straddle a row boundary whenever
+/// `d_out` is not a multiple of the entries-per-byte).
+#[derive(Default)]
+struct LutState {
+    byte: usize,
+    pending: [f32; 8],
+    pos: usize,
+    len: usize,
+}
+
+/// Decode the next `out.len()` entries of the stream into `out`.
+fn fill_row_lut<const EPB: usize>(
+    data: &[u8],
+    table: &[[f32; EPB]; 256],
+    st: &mut LutState,
+    out: &mut [f32],
+) {
+    let n = out.len();
+    let mut k = 0usize;
+    while k < n && st.pos < st.len {
+        out[k] = st.pending[st.pos];
+        st.pos += 1;
+        k += 1;
+    }
+    while n - k >= EPB {
+        out[k..k + EPB].copy_from_slice(&table[data[st.byte] as usize]);
+        st.byte += 1;
+        k += EPB;
+    }
+    if k < n {
+        let ids = &table[data[st.byte] as usize];
+        st.byte += 1;
+        let take = n - k;
+        out[k..].copy_from_slice(&ids[..take]);
+        st.pending[..EPB - take].copy_from_slice(&ids[take..]);
+        st.pos = 0;
+        st.len = EPB - take;
+    }
+}
+
+/// One-pass row decoder over a packed bitstream: LUT byte expansion for the
+/// power-of-two widths, bit cursor for 3/6-bit.
+enum RowStream<'a> {
+    L1(&'a [u8], LutState),
+    L2(&'a [u8], LutState),
+    L4(&'a [u8], LutState),
+    L8(&'a [u8], LutState),
+    Cursor(BitCursor<'a>, u32),
+}
+
+impl<'a> RowStream<'a> {
+    fn new(data: &'a [u8], bits: u32) -> Self {
+        match bits {
+            1 => RowStream::L1(data, LutState::default()),
+            2 => RowStream::L2(data, LutState::default()),
+            4 => RowStream::L4(data, LutState::default()),
+            8 => RowStream::L8(data, LutState::default()),
+            _ => RowStream::Cursor(BitCursor::new(data), bits),
+        }
+    }
+
+    /// Decode the next `out.len()` bucket ids (one weight row tile).
+    fn fill_row(&mut self, out: &mut [f32]) {
+        match self {
+            RowStream::L1(d, st) => fill_row_lut::<8>(*d, lut::lut1(), st, out),
+            RowStream::L2(d, st) => fill_row_lut::<4>(*d, lut::lut2(), st, out),
+            RowStream::L4(d, st) => fill_row_lut::<2>(*d, lut::lut4(), st, out),
+            RowStream::L8(d, st) => fill_row_lut::<1>(*d, lut::lut8(), st, out),
+            RowStream::Cursor(cur, bits) => {
+                for o in out.iter_mut() {
+                    *o = cur.next(*bits) as f32;
+                }
+            }
+        }
+    }
+}
+
+/// Shared argument validation; returns `d_in`.
+#[allow(clippy::too_many_arguments)]
+fn check_matmul_shapes(
+    packed: &PackedTensor,
+    scales: &Scales,
+    master_bits: u32,
+    d_out: usize,
+    xs_len: usize,
+    m: usize,
+    bias: Option<&[f32]>,
+    out_len: usize,
+) -> usize {
+    assert!(
+        packed.bits <= master_bits && master_bits <= MASTER_BITS,
+        "widths out of range: {} within {}",
+        packed.bits,
+        master_bits
+    );
+    assert_eq!(scales.d_out(), d_out, "scales channel count mismatch");
+    assert_eq!(out_len, m * d_out, "output buffer length mismatch");
+    if let Some(b) = bias {
+        assert_eq!(b.len(), d_out, "bias length mismatch");
+    }
+    if packed.len == 0 && d_out == 0 {
+        assert_eq!(xs_len, 0, "input must be empty for a 0-channel weight");
+        return 0;
+    }
+    assert!(d_out > 0, "d_out must be positive");
+    assert_eq!(packed.len % d_out, 0, "tensor length not a multiple of d_out");
+    let d_in = packed.len / d_out;
+    assert_eq!(xs_len, m * d_in, "input length mismatch");
+    d_in
+}
+
+/// Core fused GEMM over one block of `m <= GEMM_BLOCK` batch rows.
+///
+/// `acc` (the caller's output slice) receives raw id dot products first and
+/// is rewritten in place by the affine epilogue, so no extra accumulator
+/// allocation exists beyond the `d_out`-wide row tile.
+#[allow(clippy::too_many_arguments)]
+fn gemm_block(
+    packed: &PackedTensor,
+    overlay: Option<&ExtraBitOverlay>,
+    scales: &Scales,
+    step: f32,
+    d_in: usize,
+    d_out: usize,
+    xs: &[f32],
+    m: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+    row_ids: &mut [f32],
+) {
+    let top = (1u32 << packed.bits) as f32;
+    let ov: &[u32] = overlay.map_or(&[], |o| &o.indices);
+    let mut ovp = 0usize;
+    let mut stream = RowStream::new(&packed.data, packed.bits);
+    out.fill(0.0);
+    let mut xsum = [0.0f32; GEMM_BLOCK];
+    for row in 0..d_in {
+        stream.fill_row(row_ids);
+        // Sparse Eq. 8 fix-up: overlay indices are sorted, so the entries
+        // belonging to this row are a contiguous run.
+        let hi = (row + 1) * d_out;
+        while ovp < ov.len() && (ov[ovp] as usize) < hi {
+            row_ids[ov[ovp] as usize - row * d_out] = top;
+            ovp += 1;
+        }
+        for b in 0..m {
+            let xv = xs[b * d_in + row];
+            if xv == 0.0 {
+                continue;
+            }
+            xsum[b] += xv;
+            let arow = &mut out[b * d_out..(b + 1) * d_out];
+            for (a, &id) in arow.iter_mut().zip(row_ids.iter()) {
+                *a += xv * id;
+            }
+        }
+    }
+    // Epilogue: the hoisted per-channel affine, once per output element.
+    for b in 0..m {
+        let sx = xsum[b];
+        let orow = &mut out[b * d_out..(b + 1) * d_out];
+        match bias {
+            Some(bs) => {
+                for j in 0..d_out {
+                    orow[j] = scales.alpha[j] * (step * orow[j] - scales.zero[j] * sx) + bs[j];
+                }
+            }
+            None => {
+                for j in 0..d_out {
+                    orow[j] = scales.alpha[j] * (step * orow[j] - scales.zero[j] * sx);
+                }
+            }
+        }
+    }
+}
+
+/// Fused packed-domain GEMV: `out[j] = Σ_i x[i]·W[i,j] (+ bias[j])` where
+/// `W` is decoded on the fly from `packed` (+ optional Eq. 8 `overlay`) and
+/// the shared `master_bits`-width per-channel `scales` — the f32 weight
+/// tensor is never materialized.
+///
+/// `packed` holds `r = packed.bits`-bit bucket ids exactly as produced by
+/// [`crate::model::registry::QuantizedTensor::pack_sliced`]; `x` has length
+/// `d_in = packed.len / d_out` and `out` has length `d_out`.
+#[allow(clippy::too_many_arguments)]
+pub fn matvec_packed_into(
+    packed: &PackedTensor,
+    overlay: Option<&ExtraBitOverlay>,
+    scales: &Scales,
+    master_bits: u32,
+    d_out: usize,
+    x: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    matmul_packed_into(packed, overlay, scales, master_bits, d_out, x, 1, bias, out);
+}
+
+/// Allocating convenience wrapper over [`matvec_packed_into`].
+pub fn matvec_packed(
+    packed: &PackedTensor,
+    overlay: Option<&ExtraBitOverlay>,
+    scales: &Scales,
+    master_bits: u32,
+    d_out: usize,
+    x: &[f32],
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; d_out];
+    matvec_packed_into(packed, overlay, scales, master_bits, d_out, x, bias, &mut out);
+    out
+}
+
+/// Blocked multi-column fused GEMM for batched requests:
+/// `out (m, d_out) = xs (m, d_in) · W_r (+ bias per row)`, both row-major.
+///
+/// Batch rows are processed in blocks of [`GEMM_BLOCK`]; each block streams
+/// the packed weights once, so total weight bytes read are
+/// `ceil(m / GEMM_BLOCK) · payload` — still `32·GEMM_BLOCK / r` times fewer
+/// than reading a materialized f32 tensor per batch row.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_packed_into(
+    packed: &PackedTensor,
+    overlay: Option<&ExtraBitOverlay>,
+    scales: &Scales,
+    master_bits: u32,
+    d_out: usize,
+    xs: &[f32],
+    m: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let d_in = check_matmul_shapes(
+        packed,
+        scales,
+        master_bits,
+        d_out,
+        xs.len(),
+        m,
+        bias,
+        out.len(),
+    );
+    if m == 0 || d_out == 0 {
+        return;
+    }
+    let step = (1u32 << (master_bits - packed.bits)) as f32;
+    let mut row_ids = vec![0.0f32; d_out];
+    let mut b0 = 0usize;
+    while b0 < m {
+        let mb = GEMM_BLOCK.min(m - b0);
+        gemm_block(
+            packed,
+            overlay,
+            scales,
+            step,
+            d_in,
+            d_out,
+            &xs[b0 * d_in..(b0 + mb) * d_in],
+            mb,
+            bias,
+            &mut out[b0 * d_out..(b0 + mb) * d_out],
+            &mut row_ids,
+        );
+        b0 += mb;
+    }
+}
+
+/// Allocating convenience wrapper over [`matmul_packed_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_packed(
+    packed: &PackedTensor,
+    overlay: Option<&ExtraBitOverlay>,
+    scales: &Scales,
+    master_bits: u32,
+    d_out: usize,
+    xs: &[f32],
+    m: usize,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * d_out];
+    matmul_packed_into(packed, overlay, scales, master_bits, d_out, xs, m, bias, &mut out);
+    out
+}
+
+/// Integer-domain fused GEMV: activations are symmetric int8 codes
+/// (`x[i] = xq[i]·x_scale`), so the reduction `Σ xq[i]·id[i,j]` is an exact
+/// i32 multiply-accumulate — the per-channel affine *and* both scales move
+/// entirely into the f32 epilogue:
+///
+/// ```text
+///   y[j] = alpha[j]·(step·x_scale·acc[j] − zero[j]·x_scale·Σ xq[i]) (+ bias)
+/// ```
+///
+/// i32 partials spill into i64 every [`I32_FLUSH_ROWS`] rows, which keeps
+/// the path exact (and overflow-free) at any `d_in` in both debug and
+/// release builds.  Decode runs through the [`BitCursor`] for every width
+/// so the ids stay integral end-to-end.
+#[allow(clippy::too_many_arguments)]
+pub fn matvec_packed_i8_into(
+    packed: &PackedTensor,
+    overlay: Option<&ExtraBitOverlay>,
+    scales: &Scales,
+    master_bits: u32,
+    d_out: usize,
+    xq: &[i8],
+    x_scale: f32,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let d_in = check_matmul_shapes(
+        packed,
+        scales,
+        master_bits,
+        d_out,
+        xq.len(),
+        1,
+        bias,
+        out.len(),
+    );
+    if d_out == 0 {
+        return;
+    }
+    let step = (1u32 << (master_bits - packed.bits)) as f32;
+    let bits = packed.bits;
+    let mut cur = BitCursor::new(&packed.data);
+    let mut acc32 = vec![0i32; d_out];
+    let mut acc = vec![0i64; d_out];
+    let mut xsum: i64 = 0;
+    for (row, &xv) in xq.iter().take(d_in).enumerate() {
+        let xi = xv as i32;
+        xsum += xi as i64;
+        for a in acc32.iter_mut() {
+            *a += xi * cur.next(bits) as i32;
+        }
+        if (row + 1) % I32_FLUSH_ROWS == 0 {
+            for (wide, narrow) in acc.iter_mut().zip(acc32.iter_mut()) {
+                *wide += *narrow as i64;
+                *narrow = 0;
+            }
+        }
+    }
+    for (wide, narrow) in acc.iter_mut().zip(acc32.iter_mut()) {
+        *wide += *narrow as i64;
+        *narrow = 0;
+    }
+    if let Some(ov) = overlay {
+        // The dense stream stores 2^r − 1 at overlay positions; the true
+        // bucket id is 2^r, so correct by the exact integer difference.
+        let top = 1i64 << bits;
+        for &idx in &ov.indices {
+            let i = idx as usize;
+            acc[i % d_out] += (xq[i / d_out] as i64) * (top - packed.get(i) as i64);
+        }
+    }
+    let sx = x_scale * xsum as f32;
+    match bias {
+        Some(bs) => {
+            for j in 0..d_out {
+                out[j] = scales.alpha[j] * (step * x_scale * acc[j] as f32 - scales.zero[j] * sx)
+                    + bs[j];
+            }
+        }
+        None => {
+            for j in 0..d_out {
+                out[j] = scales.alpha[j] * (step * x_scale * acc[j] as f32 - scales.zero[j] * sx);
+            }
+        }
+    }
+}
+
+/// Allocating convenience wrapper over [`matvec_packed_i8_into`].
+#[allow(clippy::too_many_arguments)]
+pub fn matvec_packed_i8(
+    packed: &PackedTensor,
+    overlay: Option<&ExtraBitOverlay>,
+    scales: &Scales,
+    master_bits: u32,
+    d_out: usize,
+    xq: &[i8],
+    x_scale: f32,
+    bias: Option<&[f32]>,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; d_out];
+    matvec_packed_i8_into(
+        packed,
+        overlay,
+        scales,
+        master_bits,
+        d_out,
+        xq,
+        x_scale,
+        bias,
+        &mut out,
+    );
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernels::testing;
+
+    #[test]
+    fn row_stream_matches_unpack_all_widths() {
+        for bits in [1u32, 2, 3, 4, 6, 8] {
+            for d_out in [1usize, 3, 7, 8, 16] {
+                let n = d_out * 9;
+                let ids = testing::synth_ids(bits, n, 5);
+                let packed = PackedTensor::pack(&ids, bits);
+                let mut stream = RowStream::new(&packed.data, bits);
+                let mut row = vec![0.0f32; d_out];
+                for r in 0..9 {
+                    stream.fill_row(&mut row);
+                    assert_eq!(
+                        &row[..],
+                        &ids[r * d_out..(r + 1) * d_out],
+                        "bits={bits} d_out={d_out} row={r}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn matvec_matches_naive_smoke() {
+        for bits in [1u32, 2, 3, 4, 6, 8] {
+            let (d_in, d_out) = (24, 7);
+            let ids = testing::synth_ids(bits, d_in * d_out, 3);
+            let packed = PackedTensor::pack(&ids, bits);
+            let scales = testing::synth_scales(d_out, 9, false);
+            let x = testing::synth_x(d_in, 4);
+            let got = matvec_packed(&packed, None, &scales, 8, d_out, &x, None);
+            let (want, mag) =
+                testing::reference_matmul(&packed, None, &scales, 8, d_out, &x, 1, None);
+            testing::assert_accum_close(&got, &want, &mag, d_in, &format!("smoke bits={bits}"));
+        }
+    }
+
+    #[test]
+    fn empty_weight_yields_bias() {
+        let packed = PackedTensor::pack(&[], 2);
+        let scales = testing::synth_scales(3, 1, false);
+        let bias = [1.0f32, -2.0, 3.0];
+        let got = matvec_packed(&packed, None, &scales, 8, 3, &[], Some(&bias));
+        assert_eq!(got, bias.to_vec());
+        let gemm = matmul_packed(&packed, None, &scales, 8, 3, &[], 4, Some(&bias));
+        assert_eq!(gemm, bias.repeat(4));
+    }
+
+    #[test]
+    fn gemm_blocks_agree_with_per_row_matvec() {
+        let (d_in, d_out, m) = (13, 5, GEMM_BLOCK * 2 + 3);
+        let ids = testing::synth_ids(4, d_in * d_out, 11);
+        let packed = PackedTensor::pack(&ids, 4);
+        let scales = testing::synth_scales(d_out, 2, false);
+        let xs = testing::synth_x(m * d_in, 8);
+        let gemm = matmul_packed(&packed, None, &scales, 8, d_out, &xs, m, None);
+        for b in 0..m {
+            let row = matvec_packed(
+                &packed,
+                None,
+                &scales,
+                8,
+                d_out,
+                &xs[b * d_in..(b + 1) * d_in],
+                None,
+            );
+            assert_eq!(
+                &gemm[b * d_out..(b + 1) * d_out],
+                &row[..],
+                "batch row {b} diverged from its own matvec"
+            );
+        }
+    }
+
+    #[test]
+    fn i32_flush_path_is_exact() {
+        // Enough rows to cross the I32_FLUSH_ROWS boundary with worst-case
+        // magnitude terms; compare against an i64 scalar reference.
+        let d_in = I32_FLUSH_ROWS + 37;
+        let d_out = 2;
+        let ids: Vec<f32> = (0..d_in * d_out)
+            .map(|i| if i % 2 == 0 { 255.0 } else { 3.0 })
+            .collect();
+        let packed = PackedTensor::pack(&ids, 8);
+        let scales = testing::synth_scales(d_out, 6, false);
+        let xq: Vec<i8> = (0..d_in)
+            .map(|i| if i % 3 == 0 { -128 } else { 127 })
+            .collect();
+        let got = matvec_packed_i8(&packed, None, &scales, 8, d_out, &xq, 0.5, None);
+        let mut acc = [0i64; 2];
+        let mut xsum = 0i64;
+        for i in 0..d_in {
+            xsum += xq[i] as i64;
+            for j in 0..d_out {
+                acc[j] += (xq[i] as i64) * (ids[i * d_out + j] as i64);
+            }
+        }
+        for j in 0..d_out {
+            let want =
+                scales.alpha[j] * (0.5 * acc[j] as f32 - scales.zero[j] * (0.5 * xsum as f32));
+            assert_eq!(got[j].to_bits(), want.to_bits(), "j={j}");
+        }
+    }
+}

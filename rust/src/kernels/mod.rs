@@ -1,20 +1,27 @@
-//! Fused packed-domain dequantization kernels — the serving hot path.
+//! Fused packed-domain kernels — the serving hot path, from bitstream to
+//! activations.
 //!
 //! # Layering
 //!
 //! ```text
-//!   quant::packed   PackedTensor / ExtraBitOverlay   (storage model)
-//!   quant::minmax   Scales, scalar quant/dequant     (semantics oracle)
-//!   quant::slicing  S(q^c, r) scalar ops             (semantics oracle)
+//!   quant::packed   PackedTensor / ExtraBitOverlay     (storage model)
+//!   quant::minmax   Scales, scalar quant/dequant       (semantics oracle)
+//!   quant::slicing  S(q^c, r) scalar ops               (semantics oracle)
 //!        │
 //!   kernels::lut    256-entry byte→ids & code→sliced-value tables
 //!   kernels::cursor u64 bitstream reader for 3/6-bit widths
 //!   kernels::fused  dequant_packed_into / slice_dequant_into
+//!   kernels::matmul matvec/matmul_packed_into, i8→i32 GEMV
 //!        │
-//!   model::registry QuantizedTensor::materialize / pack_sliced
-//!   serve::server   warm + lazy weight-set builds
-//!   mixnmatch       per-layer sweeps (via registry materialization)
+//!   model::registry QuantizedTensor::materialize / pack_sliced,
+//!                   PackedWeight payload handles (+ byte accounting)
+//!   runtime::engine run_packed — host packed-linear path beside PJRT
+//!   serve::weights  WeightStore: warm dense sets + lazily *paged* r-bit
+//!                   payloads (no f32 weight set for lazy precisions)
+//!   mixnmatch       per-layer sweeps + matvec-probe layer sensitivity
 //! ```
+//!
+//! # Packed-domain data flow
 //!
 //! The scalar functions in [`crate::quant`] remain the reference semantics;
 //! the kernels here are *implementations* of the same math that read the
@@ -22,21 +29,39 @@
 //! generic bit cursor for 3/6-bit) and fuse slicing with the per-channel
 //! affine map so no intermediate code vector is ever materialized.
 //!
+//! [`matmul`] extends the fusion through the matmul itself: `y = x·W_r`
+//! is computed straight from the r-bit payload with the affine hoisted out
+//! of the reduction, so the full f32 weight tensor never exists either —
+//! the weight bytes read per token shrink by `32/r` (2–8× fewer packed
+//! bytes than the int8 master at low bits, 4–32× vs f32).  The serving
+//! stack pages exactly these payloads for lazily-built precisions
+//! ([`crate::serve::weights`]).
+//!
 //! # Conformance and benchmarks
 //!
 //! * `cargo test --test kernel_conformance` — exhaustive fused-vs-reference
-//!   bit-for-bit checks over bits ∈ {1, 2, 3, 4, 6, 8}, odd lengths,
-//!   Eq. 8 overflow overlays, and degenerate (EPS-guarded) channels.
-//! * `cargo bench --bench quant_hot_paths` — fused vs two-pass throughput,
-//!   including the `fused ≥ 2×` serving-path comparison.
+//!   checks over bits ∈ {1, 2, 3, 4, 6, 8}, odd lengths, Eq. 8 overflow
+//!   overlays, and degenerate (EPS-guarded) channels: bit-for-bit for the
+//!   dequant kernels, accumulation-magnitude-scaled ulp tolerance for the
+//!   matmul kernels, plus seeded property-based sweeps
+//!   ([`testing::run_prop`]) over random (bits, shape, overlay, scale)
+//!   cases.
+//! * `cargo bench --bench quant_hot_paths` — fused vs two-pass dequant and
+//!   fused matmul vs materialize-then-matmul throughput.
 //!
-//! [`testing`] holds the data synthesis + scalar reference paths shared by
-//! both, so new kernels get a conformance harness for free.
+//! [`testing`] holds the data synthesis, scalar reference paths, and the
+//! property-test driver shared by both, so new kernels get a conformance
+//! harness for free.
 
 pub mod cursor;
 pub mod fused;
 pub mod lut;
+pub mod matmul;
 pub mod testing;
 
 pub use cursor::BitCursor;
 pub use fused::{dequant_packed, dequant_packed_into, slice_dequant, slice_dequant_into};
+pub use matmul::{
+    matmul_packed, matmul_packed_into, matvec_packed, matvec_packed_i8, matvec_packed_i8_into,
+    matvec_packed_into,
+};

@@ -1,10 +1,25 @@
 //! Conformance-harness substrate: deterministic data synthesis, the scalar
 //! reference paths (the seed's two-pass walk, kept verbatim as the oracle),
-//! and exact-equality assertions.
+//! exact-equality assertions, and a small offline property-test driver
+//! ([`run_prop`] — a vendored-proptest substitute: seeded random case
+//! generation with the failing case reported for replay).
 //!
 //! Shared by the in-crate kernel unit tests, the exhaustive suite in
 //! `tests/kernel_conformance.rs`, and `benches/quant_hot_paths.rs` (which
 //! benches fused vs reference on the same inputs it validates).
+//!
+//! # Matmul conformance semantics
+//!
+//! Dequantization kernels are checked **bit-for-bit** (the LUTs are built
+//! by the scalar oracle).  The fused matmul kernels evaluate the same sum
+//! in a different — equally valid — f32 order (the affine is hoisted out of
+//! the reduction), so their contract is a *scaled-ulp* bound instead:
+//! [`reference_matmul`] returns, alongside the naive product, a per-output
+//! accumulation magnitude covering both evaluation orders, and
+//! [`assert_accum_close`] admits `(2·d_in + 16)` units of `f32::EPSILON`
+//! of that magnitude — one rounding per accumulated term per order, far
+//! below any real kernel defect (which shows up at the scale of the
+//! weights themselves).
 
 use crate::data::Rng;
 use crate::quant::{self, ExtraBitOverlay, PackedTensor, Scales};
@@ -116,6 +131,192 @@ pub fn reference_slice_dequant(
     let mut out = vec![0.0f32; sliced.len()];
     quant::dequantize_into(&sliced, d_out.max(1), scales, &mut out);
     out
+}
+
+/// Deterministic activation vector mixing exact zeros, sign flips, large
+/// magnitudes, and generic small values.
+pub fn synth_x(n: usize, seed: u64) -> Vec<f32> {
+    let mut rng = Rng::new(seed ^ 0xA11CE);
+    (0..n)
+        .map(|i| match i % 6 {
+            0 => 0.0,
+            1 => -1.0,
+            2 => rng.range_f32(-100.0, 100.0),
+            _ => rng.range_f32(-1.5, 1.5),
+        })
+        .collect()
+}
+
+/// Scalar reference for the fused matmul kernels: scalar-path dequantize
+/// (via [`reference_dequant_packed`]) followed by a naive row-major f32
+/// matmul `y (m, d_out) = xs (m, d_in) · W (+ bias)`.
+///
+/// Returns `(y, mag)` where `mag[b·d_out + j]` bounds the magnitude flowing
+/// through the accumulation in *either* evaluation order — the naive
+/// `Σ|x_i·w_ij|` is covered by the hoisted-affine form's
+/// `|alpha_j|·(2^master_bits + |zero_j|)·Σ|x_i|`, which is what
+/// [`assert_accum_close`] scales its tolerance by.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_matmul(
+    packed: &PackedTensor,
+    overlay: Option<&ExtraBitOverlay>,
+    scales: &Scales,
+    master_bits: u32,
+    d_out: usize,
+    xs: &[f32],
+    m: usize,
+    bias: Option<&[f32]>,
+) -> (Vec<f32>, Vec<f32>) {
+    let w = reference_dequant_packed(packed, overlay, scales, master_bits, d_out);
+    let d_in = if d_out == 0 { 0 } else { w.len() / d_out };
+    let top = (1u64 << master_bits) as f32;
+    let mut y = vec![0.0f32; m * d_out];
+    let mut mag = vec![0.0f32; m * d_out];
+    for b in 0..m {
+        let mut abs_x = 0.0f32;
+        for i in 0..d_in {
+            let xv = xs[b * d_in + i];
+            abs_x += xv.abs();
+            for j in 0..d_out {
+                y[b * d_out + j] += xv * w[i * d_out + j];
+            }
+        }
+        for j in 0..d_out {
+            mag[b * d_out + j] =
+                scales.alpha[j].abs() * (top + scales.zero[j].abs()) * abs_x;
+            if let Some(bs) = bias {
+                y[b * d_out + j] += bs[j];
+                mag[b * d_out + j] += bs[j].abs();
+            }
+        }
+    }
+    (y, mag)
+}
+
+/// Assert fused-matmul outputs agree with the naive reference within the
+/// accumulation-order tolerance: `(2·d_in + 16)` ulps of the per-output
+/// magnitude returned by [`reference_matmul`].
+pub fn assert_accum_close(got: &[f32], want: &[f32], mag: &[f32], d_in: usize, label: &str) {
+    assert_eq!(got.len(), want.len(), "{label}: length mismatch");
+    let ulps = (2 * d_in + 16) as f32;
+    for (i, (g, w)) in got.iter().zip(want).enumerate() {
+        let tol = f32::EPSILON * ulps * mag[i] + f32::MIN_POSITIVE;
+        assert!(
+            (g - w).abs() <= tol,
+            "{label}: mismatch at {i}: got {g}, want {w} (|Δ|={} > tol={tol}, mag={})",
+            (g - w).abs(),
+            mag[i]
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property-test driver
+// ---------------------------------------------------------------------------
+
+/// Configuration for [`run_prop`].
+#[derive(Debug, Clone, Copy)]
+pub struct PropConfig {
+    /// Number of random cases to generate.
+    pub cases: usize,
+    /// Master seed; every case derives deterministically from it.
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig {
+            cases: 200,
+            seed: 0x4D61_7451, // "MatQ"
+        }
+    }
+}
+
+/// Minimal offline property-test runner: generate `cfg.cases` random cases
+/// from a seeded [`Rng`] and run `check` on each.  On failure the panic
+/// names the property, the case index, the master seed, and the full case
+/// value, so any counterexample replays from the seed alone.
+pub fn run_prop<T: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    generate: impl Fn(&mut Rng) -> T,
+    check: impl Fn(&T),
+) {
+    let mut rng = Rng::new(cfg.seed);
+    for i in 0..cfg.cases {
+        let case = generate(&mut rng);
+        let outcome = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| check(&case)));
+        if let Err(payload) = outcome {
+            let msg = payload
+                .downcast_ref::<String>()
+                .map(|s| s.as_str())
+                .or_else(|| payload.downcast_ref::<&'static str>().copied())
+                .unwrap_or("<non-string panic>");
+            panic!(
+                "property {name:?} failed on case {i}/{} (seed {:#x}):\n  case: {case:?}\n  {msg}",
+                cfg.cases, cfg.seed
+            );
+        }
+    }
+}
+
+/// One randomly generated fused-matmul conformance case.
+#[derive(Debug, Clone)]
+pub struct MatmulCase {
+    pub bits: u32,
+    pub d_in: usize,
+    pub d_out: usize,
+    /// Batch rows (1 = GEMV).
+    pub m: usize,
+    /// Generate an Eq. 8 overflow overlay (only meaningful below the
+    /// master width).
+    pub overlay: bool,
+    /// EPS-guarded degenerate channels in the scales.
+    pub degenerate: bool,
+    /// Attach a bias vector.
+    pub bias: bool,
+    pub seed: u64,
+}
+
+/// Sample a [`MatmulCase`]: every width, odd/word-straddling/empty shapes,
+/// overlay and degenerate-scale toggles.
+pub fn gen_matmul_case(rng: &mut Rng) -> MatmulCase {
+    const WIDTHS: [u32; 6] = [1, 2, 3, 4, 6, 8];
+    let bits = WIDTHS[rng.below(WIDTHS.len())];
+    let d_in = match rng.below(8) {
+        0 => 0,
+        1 => 1,
+        _ => 1 + rng.below(65),
+    };
+    let d_out = match rng.below(8) {
+        0 => 1,
+        1 => 7,
+        _ => 1 + rng.below(33),
+    };
+    MatmulCase {
+        bits,
+        d_in,
+        d_out,
+        m: 1 + rng.below(2 * crate::kernels::matmul::GEMM_BLOCK),
+        overlay: bits < 8 && rng.below(2) == 0,
+        degenerate: rng.below(4) == 0,
+        bias: rng.below(2) == 0,
+        seed: rng.next_u64(),
+    }
+}
+
+/// Materialize the payload side of a [`MatmulCase`]: the packed tensor, its
+/// overlay (empty unless `case.overlay`), and the per-channel scales.
+pub fn build_matmul_payload(case: &MatmulCase) -> (PackedTensor, ExtraBitOverlay, Scales) {
+    let n = case.d_in * case.d_out;
+    let (packed, overlay) = if case.overlay {
+        synth_overlayed(case.bits, n, case.seed)
+    } else {
+        let ids = synth_ids(case.bits, n, case.seed);
+        (PackedTensor::pack(&ids, case.bits), ExtraBitOverlay::default())
+    };
+    let scales = synth_scales(case.d_out, case.seed ^ 0x5EED, case.degenerate);
+    (packed, overlay, scales)
 }
 
 /// Assert two f32 buffers are identical *bit patterns* (stronger than `==`:

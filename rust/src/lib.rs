@@ -21,10 +21,14 @@
 //! (bit-for-bit identical to `python/compile/kernels/ref.py`).  The serving
 //! hot path does **not** run it: [`kernels`] provides single-pass fused
 //! dequantization straight from the packed bitstream + overflow overlay +
-//! per-channel scales to f32 weights, wired through
-//! [`model::registry::QuantizedTensor::materialize`], the server's
-//! warm/lazy weight builds, and the Mix'n'Match sweeps.  Conformance:
-//! `cargo test --test kernel_conformance`; throughput:
+//! per-channel scales to f32 weights, and fused dequant×matmul
+//! ([`kernels::matmul`]) that never materializes the weights at all —
+//! wired through [`model::registry::QuantizedTensor::materialize`], the
+//! [`model::PackedWeight`] payload handles, the server's warm (dense) /
+//! lazy (**paged** r-bit payload) weight builds in [`serve::weights`], the
+//! host packed-linear engine path, and the Mix'n'Match sweeps + layer
+//! sensitivity probes.  Conformance: `cargo test --test kernel_conformance`
+//! (bit-for-bit dequant, property-based matmul); throughput:
 //! `cargo bench --bench quant_hot_paths`.
 //!
 //! ## Build

@@ -6,10 +6,16 @@
 //! fused slice+dequant kernel ([`crate::kernels::slice_dequant_into`] via
 //! `QuantizedTensor::materialize`), so a full composition grid never
 //! allocates intermediate code vectors — the sweep cost is one fused pass
-//! per tensor per configuration.
+//! per tensor per configuration.  [`sensitivity`] goes one step further
+//! down the packed-domain path: it ranks layers by quantization damage
+//! with fused r-bit matvec probes (`y_r = x·W_r` straight from the
+//! payload, no weight materialization at all) and greedily spends a bit
+//! budget where the probe says it hurts most.
 
 pub mod pareto;
+pub mod sensitivity;
 pub mod strategy;
 
 pub use pareto::{pareto_frontier, Point};
+pub use sensitivity::{probe_sensitivity, suggest_assignment, SensitivityRow};
 pub use strategy::{assignments_for, compositions, Strategy};

@@ -1,0 +1,210 @@
+//! Layer-sensitivity probing on the packed-domain matmul path.
+//!
+//! Mix'n'Match needs to know *which* layers tolerate low bits.  The classic
+//! way is a full eval sweep per assignment (expensive, needs artifacts).
+//! This module estimates per-layer damage directly: for each quantized
+//! tensor, compare the fused r-bit matvec output against the int8-payload
+//! output on random probe vectors — `y_r = x·W_r` vs `y_8 = x·W_8`, both
+//! computed straight from packed payloads by [`crate::kernels::matmul`],
+//! so the probe never materializes a weight tensor and runs offline (no
+//! PJRT, no artifacts).
+//!
+//! [`suggest_assignment`] turns the probe into a per-layer bit vector with
+//! a greedy budgeted upgrade (start everything at the cheapest width,
+//! repeatedly buy bits for the most-damaged layer), complementing the
+//! fixed Appendix B layouts in [`super::strategy`].
+
+use std::collections::BTreeMap;
+
+use crate::data::Rng;
+use crate::model::registry::layer_of;
+use crate::model::QuantizedModel;
+use crate::Result;
+
+/// Probe result for one quantized tensor.
+#[derive(Debug, Clone)]
+pub struct SensitivityRow {
+    pub name: String,
+    pub layer: usize,
+    /// `(bits, relative L2 output error vs the int8 payload)`, in the
+    /// order of the probed bit options.
+    pub rel_err: Vec<(u32, f64)>,
+}
+
+/// Probe every quantized tensor at each candidate precision with `probes`
+/// random activation vectors; returns one row per tensor in registry order.
+pub fn probe_sensitivity(
+    model: &QuantizedModel,
+    bits_options: &[u32],
+    probes: usize,
+    seed: u64,
+) -> Result<Vec<SensitivityRow>> {
+    let mut rows = Vec::with_capacity(model.quantized_order.len());
+    let mut rng = Rng::new(seed ^ 0x5E5E);
+    for qn in &model.quantized_order {
+        let qt = &model.quantized[qn];
+        let base = qt.packed_weight(8, false)?;
+        let handles: Vec<_> = bits_options
+            .iter()
+            .map(|&b| qt.packed_weight(b, false).map(|h| (b, h)))
+            .collect::<Result<Vec<_>>>()?;
+        let mut err2 = vec![0.0f64; handles.len()];
+        let mut norm2 = 0.0f64;
+        for _ in 0..probes.max(1) {
+            let x: Vec<f32> = (0..qt.d_in).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+            let y8 = base.matvec(&x)?;
+            norm2 += y8.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>();
+            for (k, (_, h)) in handles.iter().enumerate() {
+                let yr = h.matvec(&x)?;
+                err2[k] += yr
+                    .iter()
+                    .zip(&y8)
+                    .map(|(&a, &b)| {
+                        let d = (a - b) as f64;
+                        d * d
+                    })
+                    .sum::<f64>();
+            }
+        }
+        let denom = norm2.max(1e-30);
+        rows.push(SensitivityRow {
+            name: qn.clone(),
+            layer: layer_of(qn),
+            rel_err: handles
+                .iter()
+                .zip(&err2)
+                .map(|((b, _), &e)| (*b, (e / denom).sqrt()))
+                .collect(),
+        });
+    }
+    Ok(rows)
+}
+
+/// Greedy budgeted assignment from probe rows: every layer starts at the
+/// cheapest probed width; while the *average* per-layer bits stay within
+/// `budget_avg_bits`, upgrade the layer with the largest error at its
+/// current width to the next probed width.  Returns per-layer bits
+/// (length `n_layers`), usable as
+/// [`crate::model::PrecisionAssignment::PerLayer`].
+pub fn suggest_assignment(
+    rows: &[SensitivityRow],
+    n_layers: usize,
+    budget_avg_bits: f64,
+) -> Vec<u32> {
+    // Aggregate: layer → bits → worst error over the layer's tensors.
+    let mut per_layer: Vec<BTreeMap<u32, f64>> = vec![BTreeMap::new(); n_layers];
+    for row in rows {
+        if row.layer >= n_layers {
+            continue;
+        }
+        for &(b, e) in &row.rel_err {
+            let slot = per_layer[row.layer].entry(b).or_insert(0.0);
+            if e > *slot {
+                *slot = e;
+            }
+        }
+    }
+    let widths: Vec<u32> = {
+        let mut w: Vec<u32> = rows
+            .iter()
+            .flat_map(|r| r.rel_err.iter().map(|&(b, _)| b))
+            .collect();
+        w.sort_unstable();
+        w.dedup();
+        w
+    };
+    if widths.is_empty() {
+        return vec![8; n_layers];
+    }
+    let mut bits = vec![widths[0]; n_layers];
+    let budget_total = budget_avg_bits * n_layers as f64;
+    loop {
+        let spent: f64 = bits.iter().map(|&b| b as f64).sum();
+        // Pick the layer whose current width hurts most and whose upgrade
+        // still fits the budget.
+        let mut best: Option<(usize, u32, f64)> = None;
+        for l in 0..n_layers {
+            let cur = bits[l];
+            let Some(&next) = widths.iter().find(|&&w| w > cur) else {
+                continue;
+            };
+            if spent - cur as f64 + next as f64 > budget_total + 1e-9 {
+                continue;
+            }
+            let err = per_layer[l].get(&cur).copied().unwrap_or(0.0);
+            if best.map_or(true, |(_, _, e)| err > e) {
+                best = Some((l, next, err));
+            }
+        }
+        match best {
+            Some((l, next, _)) => bits[l] = next,
+            None => break,
+        }
+    }
+    bits
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::registry::QuantizedTensor;
+    use crate::model::Tensor;
+
+    fn toy_model(layers: usize) -> QuantizedModel {
+        let mut rng = Rng::new(7);
+        let mut params = std::collections::BTreeMap::new();
+        let mut quantized = std::collections::BTreeMap::new();
+        let mut order = Vec::new();
+        for l in 0..layers {
+            let name = format!("layer{l}.ffn.w_in");
+            // later layers get wilder weights → more quantization damage
+            let spread = 0.5 + l as f32;
+            let data: Vec<f32> = (0..32 * 16)
+                .map(|_| rng.range_f32(-spread, spread))
+                .collect();
+            let t = Tensor::new(vec![32, 16], data).unwrap();
+            params.insert(name.clone(), t.clone());
+            quantized.insert(
+                name.clone(),
+                QuantizedTensor::from_weight(t, None, None, None).unwrap(),
+            );
+            order.push(name);
+        }
+        QuantizedModel {
+            params,
+            quantized,
+            param_order: order.clone(),
+            quantized_order: order,
+        }
+    }
+
+    #[test]
+    fn error_shrinks_with_bits() {
+        let model = toy_model(2);
+        let rows = probe_sensitivity(&model, &[2, 4, 8], 3, 11).unwrap();
+        assert_eq!(rows.len(), 2);
+        for row in &rows {
+            let e2 = row.rel_err[0].1;
+            let e4 = row.rel_err[1].1;
+            let e8 = row.rel_err[2].1;
+            assert!(e2 > e4 && e4 > e8, "{}: {:?}", row.name, row.rel_err);
+            assert!(e8 < 1e-6, "int8 payload must match itself: {e8}");
+        }
+    }
+
+    #[test]
+    fn greedy_assignment_respects_budget_and_spends_it() {
+        let model = toy_model(4);
+        let rows = probe_sensitivity(&model, &[2, 4, 8], 2, 3).unwrap();
+        for budget in [2.0, 3.5, 8.0] {
+            let assign = suggest_assignment(&rows, 4, budget);
+            let avg = assign.iter().map(|&b| b as f64).sum::<f64>() / 4.0;
+            assert!(avg <= budget + 1e-9, "budget {budget}: {assign:?}");
+            assert!(assign.iter().all(|&b| [2, 4, 8].contains(&b)));
+        }
+        // full budget → everything upgraded
+        assert_eq!(suggest_assignment(&rows, 4, 8.0), vec![8, 8, 8, 8]);
+        // minimal budget → everything cheapest
+        assert_eq!(suggest_assignment(&rows, 4, 2.0), vec![2, 2, 2, 2]);
+    }
+}

@@ -8,5 +8,7 @@ pub mod tensor;
 
 pub use checkpoint::Checkpoint;
 pub use manifest::{ArtifactEntry, Manifest, PresetInfo};
-pub use registry::{PrecisionAssignment, QuantizedModel, QuantizedTensor};
+pub use registry::{
+    packed_payload_bytes, PackedWeight, PrecisionAssignment, QuantizedModel, QuantizedTensor,
+};
 pub use tensor::Tensor;

@@ -167,6 +167,68 @@ impl QuantizedTensor {
         Ok((Tensor::new(vec![self.d_in, self.d_out], w)?, bias))
     }
 
+    /// Build the paged deployment handle at `bits`: the r-bit payload from
+    /// [`QuantizedTensor::pack_sliced`] bundled with the shared scales and
+    /// the OmniQuant smoothing pre-folded into a per-row input scaling plus
+    /// a bias vector — everything the fused matmul kernels need.
+    ///
+    /// QAT models (`smooth == None`) build without touching f32 weight
+    /// space at all.  Smoothed models decode `W_eff` **once, transiently**
+    /// during the build to run the exact same `δ·(W − W_eff)` fold as
+    /// [`QuantizedTensor::materialize`] — the buffer is freed before the
+    /// handle returns, and the resulting bias is bit-for-bit identical to
+    /// the dense build's, so a precision moved between warm and lazy
+    /// serving produces byte-identical batch arguments.
+    pub fn packed_weight(&self, bits: u32, extra_precision: bool) -> Result<PackedWeight> {
+        ensure!(
+            bits >= 1 && bits <= MASTER_BITS,
+            "bits {bits} out of range"
+        );
+        let (packed, overlay) = self.pack_sliced(bits, extra_precision);
+        let ov = if overlay.is_empty() {
+            None
+        } else {
+            Some(&overlay)
+        };
+        let (inv_smooth, bias) = match &self.smooth {
+            None => (None, None),
+            Some((s, delta)) => {
+                let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+                let mut w = vec![0.0f32; self.d_in * self.d_out];
+                kernels::dequant_packed_into(
+                    &packed,
+                    ov,
+                    &self.scales,
+                    MASTER_BITS,
+                    self.d_out,
+                    &mut w,
+                );
+                for (i, row) in w.chunks_exact_mut(self.d_out).enumerate() {
+                    let vinv = inv[i];
+                    for v in row.iter_mut() {
+                        *v *= vinv;
+                    }
+                }
+                let w_eff = Tensor::new(vec![self.d_in, self.d_out], w)?;
+                let dw = self.fp.vecmat(delta)?;
+                let dweff = w_eff.vecmat(delta)?;
+                let bias: Vec<f32> = dw.iter().zip(&dweff).map(|(a, b)| a - b).collect();
+                (Some(inv), Some(bias))
+            }
+        };
+        Ok(PackedWeight {
+            bits,
+            extra_precision,
+            d_in: self.d_in,
+            d_out: self.d_out,
+            packed,
+            overlay,
+            scales: self.scales.clone(),
+            inv_smooth,
+            bias,
+        })
+    }
+
     /// The §5.4 deployment payload at `bits`: sliced bucket ids packed at
     /// `bits`/entry plus (under Eq. 8) the sparse overflow overlay.  This is
     /// exactly what [`crate::kernels::dequant_packed_into`] consumes.
@@ -216,6 +278,129 @@ impl QuantizedTensor {
             .map(|&x| quant::slice_code(x, MASTER_BITS, bits, false) / step)
             .collect();
         quant::code_histogram(&ids, bits)
+    }
+}
+
+/// A paged r-bit deployment weight: the packed payload + Eq. 8 overlay +
+/// shared master scales, with OmniQuant smoothing folded into a per-row
+/// input scaling and a bias vector.
+///
+/// This is the serving worker's lazy page-in unit ([`crate::serve::weights`])
+/// and the operand of the fused packed-domain matmul kernels
+/// ([`crate::kernels::matmul`]): it can compute `y = x·W_r + bias` directly
+/// ([`PackedWeight::matvec_into`] / [`PackedWeight::matmul_into`]) or
+/// decode one f32 tensor on demand for PJRT argument building
+/// ([`PackedWeight::decode`]).  Resident cost is [`PackedWeight::payload_bytes`]
+/// — r-bit codes + sparse overlay + scales — never a full f32 weight set.
+#[derive(Debug, Clone)]
+pub struct PackedWeight {
+    pub bits: u32,
+    pub extra_precision: bool,
+    pub d_in: usize,
+    pub d_out: usize,
+    /// r-bit sliced bucket ids (as produced by [`QuantizedTensor::pack_sliced`]).
+    pub packed: PackedTensor,
+    /// Eq. 8 overflow entries (empty without extra precision).
+    pub overlay: ExtraBitOverlay,
+    /// The shared master-width per-channel scales.
+    pub scales: Scales,
+    /// OmniQuant smoothing fold: `1/s` per input row (`None` for QAT).
+    pub inv_smooth: Option<Vec<f32>>,
+    /// Folded bias `δ·(W − W_eff)`, bit-identical to the
+    /// [`QuantizedTensor::materialize`] fold (`None` for QAT models, whose
+    /// bias is identically zero and is not stored).
+    pub bias: Option<Vec<f32>>,
+}
+
+impl PackedWeight {
+    fn overlay_opt(&self) -> Option<&ExtraBitOverlay> {
+        if self.overlay.is_empty() {
+            None
+        } else {
+            Some(&self.overlay)
+        }
+    }
+
+    /// Resident payload bytes: packed codes + overlay + scales, plus the
+    /// smoothing-fold vectors (`1/s`, bias) when present.  This is what a
+    /// lazy serving build pages in — `bits/8` of the int8 master, `bits/32`
+    /// of the f32 weight set it replaces.  For QAT models this equals
+    /// [`QuantizedTensor::storage_bytes`] exactly.
+    pub fn payload_bytes(&self) -> usize {
+        let n = self.d_in * self.d_out;
+        let fold = self.inv_smooth.as_ref().map_or(0, |v| v.len() * 4)
+            + self.bias.as_ref().map_or(0, |v| v.len() * 4);
+        self.packed.bytes() + self.overlay.bytes(n) + self.d_out * 8 + fold
+    }
+
+    /// Fused GEMV `out = x·W_r + bias` straight from the payload (the
+    /// smoothing fold scales `x` by `1/s` first; no weight tensor exists).
+    pub fn matvec_into(&self, x: &[f32], out: &mut [f32]) -> Result<()> {
+        self.matmul_into(x, 1, out)
+    }
+
+    /// Allocating convenience over [`PackedWeight::matvec_into`].
+    pub fn matvec(&self, x: &[f32]) -> Result<Vec<f32>> {
+        let mut out = vec![0.0f32; self.d_out];
+        self.matvec_into(x, &mut out)?;
+        Ok(out)
+    }
+
+    /// Blocked fused GEMM `out (m, d_out) = xs (m, d_in)·W_r + bias`.
+    pub fn matmul_into(&self, xs: &[f32], m: usize, out: &mut [f32]) -> Result<()> {
+        ensure!(xs.len() == m * self.d_in, "input length mismatch");
+        ensure!(out.len() == m * self.d_out, "output length mismatch");
+        let scaled;
+        let xs = match &self.inv_smooth {
+            None => xs,
+            Some(inv) => {
+                scaled = xs
+                    .chunks_exact(self.d_in.max(1))
+                    .flat_map(|row| row.iter().zip(inv).map(|(&x, &i)| x * i))
+                    .collect::<Vec<f32>>();
+                &scaled[..]
+            }
+        };
+        kernels::matmul_packed_into(
+            &self.packed,
+            self.overlay_opt(),
+            &self.scales,
+            MASTER_BITS,
+            self.d_out,
+            xs,
+            m,
+            self.bias.as_deref(),
+            out,
+        );
+        Ok(())
+    }
+
+    /// Decode the effective f32 weight (for PJRT argument building) through
+    /// the fused packed-domain dequant kernel; returns `(W_eff, bias)`.
+    /// The weight is bit-for-bit identical to
+    /// [`QuantizedTensor::materialize`] at the same precision.
+    pub fn decode(&self) -> Result<(Tensor, Vec<f32>)> {
+        let mut w = vec![0.0f32; self.d_in * self.d_out];
+        kernels::dequant_packed_into(
+            &self.packed,
+            self.overlay_opt(),
+            &self.scales,
+            MASTER_BITS,
+            self.d_out,
+            &mut w,
+        );
+        if let Some(inv) = &self.inv_smooth {
+            for (i, row) in w.chunks_exact_mut(self.d_out).enumerate() {
+                for v in row.iter_mut() {
+                    *v *= inv[i];
+                }
+            }
+        }
+        let bias = self
+            .bias
+            .clone()
+            .unwrap_or_else(|| vec![0.0; self.d_out]);
+        Ok((Tensor::new(vec![self.d_in, self.d_out], w)?, bias))
     }
 }
 
@@ -271,7 +456,13 @@ pub struct QuantizedModel {
     pub quantized_order: Vec<String>,
 }
 
-fn layer_of(name: &str) -> usize {
+/// Total resident payload bytes of a packed weight set (what a lazy
+/// serving build pages in, in place of the int8 masters or f32 weights).
+pub fn packed_payload_bytes(set: &BTreeMap<String, PackedWeight>) -> usize {
+    set.values().map(|p| p.payload_bytes()).sum()
+}
+
+pub(crate) fn layer_of(name: &str) -> usize {
     // names look like "layer3.ffn.w_in"
     name.strip_prefix("layer")
         .and_then(|s| s.split('.').next())
@@ -352,6 +543,24 @@ impl QuantizedModel {
             biases.push(Tensor::new(vec![b.len()], b.clone())?);
         }
         Ok((weights, biases))
+    }
+
+    /// Build paged payload handles for every quantized tensor at a uniform
+    /// precision — the serving worker's lazy page-in unit.  Total resident
+    /// cost is [`packed_payload_bytes`] instead of a full f32 weight set.
+    pub fn packed_weights(
+        &self,
+        bits: u32,
+        extra_precision: bool,
+    ) -> Result<BTreeMap<String, PackedWeight>> {
+        let mut out = BTreeMap::new();
+        for qn in &self.quantized_order {
+            out.insert(
+                qn.clone(),
+                self.quantized[qn].packed_weight(bits, extra_precision)?,
+            );
+        }
+        Ok(out)
     }
 
     /// Bits per quantized parameter under `assign` (x-axis of Fig. 2/3).
@@ -459,6 +668,92 @@ mod tests {
                 assert_eq!(bias_a, bias_b, "bits={bits} ep={ep}");
             }
         }
+    }
+
+    #[test]
+    fn packed_weight_decode_matches_materialize() {
+        // QAT model: decode must be bit-for-bit, bias exactly zero.
+        let fp = toy_weight(6, 40, 12);
+        let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+        for bits in [1u32, 2, 3, 4, 6, 8] {
+            for ep in [false, true] {
+                let pw = qt.packed_weight(bits, ep).unwrap();
+                let (w, bias) = pw.decode().unwrap();
+                let (want, want_bias) = qt.materialize(bits, ep).unwrap();
+                assert_eq!(w.data, want.data, "bits={bits} ep={ep}");
+                assert_eq!(bias, want_bias, "bits={bits} ep={ep}");
+                assert!(bias.iter().all(|&b| b == 0.0));
+            }
+        }
+    }
+
+    #[test]
+    fn packed_weight_smoothed_decode_and_bias() {
+        let fp = toy_weight(7, 24, 6);
+        let s: Vec<f32> = (0..24).map(|i| 0.8 + 0.02 * i as f32).collect();
+        let mut delta = vec![0.0f32; 24];
+        delta[2] = 0.4;
+        delta[11] = -0.3;
+        let qt = QuantizedTensor::from_weight(fp, None, None, Some((s, delta))).unwrap();
+        for bits in [2u32, 4, 8] {
+            let pw = qt.packed_weight(bits, false).unwrap();
+            let (w, bias) = pw.decode().unwrap();
+            let (want, want_bias) = qt.materialize(bits, false).unwrap();
+            // both the weight decode and the smoothing-fold bias run the
+            // exact same computation as the dense path — bit-for-bit, so
+            // warm and lazy serving builds are interchangeable
+            assert_eq!(w.data, want.data, "bits={bits}");
+            assert_eq!(bias, want_bias, "bits={bits}");
+            assert!(bias.iter().any(|&b| b != 0.0), "fold should be nonzero");
+        }
+    }
+
+    #[test]
+    fn packed_weight_matvec_matches_dense_vecmat() {
+        let fp = toy_weight(8, 32, 10);
+        let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+        let mut rng = Rng::new(99);
+        let x: Vec<f32> = (0..32).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        for bits in [2u32, 4, 8] {
+            let pw = qt.packed_weight(bits, true).unwrap();
+            let (w, _) = qt.materialize(bits, true).unwrap();
+            let want = w.vecmat(&x).unwrap();
+            let got = pw.matvec(&x).unwrap();
+            for (j, (a, b)) in got.iter().zip(&want).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-4 * b.abs().max(1e-2),
+                    "bits={bits} y[{j}]: {a} vs {b}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn packed_weight_payload_bytes_beat_master_and_f32() {
+        let fp = toy_weight(9, 64, 64);
+        let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+        let master = qt.codes.bytes();
+        let f32_bytes = 64 * 64 * 4;
+        let pw2 = qt.packed_weight(2, false).unwrap();
+        let pw4 = qt.packed_weight(4, false).unwrap();
+        assert!(pw2.payload_bytes() < pw4.payload_bytes());
+        assert!(pw4.payload_bytes() < master + 64 * 8);
+        assert!(pw2.payload_bytes() * 8 < f32_bytes, "{}", pw2.payload_bytes());
+        assert_eq!(
+            pw2.payload_bytes(),
+            qt.storage_bytes(2, false),
+            "QAT handle accounting must agree with registry storage accounting"
+        );
+        // smoothed handles additionally account the fold vectors
+        let fp2 = toy_weight(10, 64, 64);
+        let s = vec![1.2f32; 64];
+        let qs = QuantizedTensor::from_weight(fp2, None, None, Some((s, vec![0.0; 64]))).unwrap();
+        let pws = qs.packed_weight(2, false).unwrap();
+        assert_eq!(
+            pws.payload_bytes(),
+            qs.storage_bytes(2, false) + (64 + 64) * 4,
+            "smoothed handle must count 1/s and bias vectors"
+        );
     }
 
     #[test]

@@ -47,6 +47,17 @@ impl DynamicBatcher {
         self.queues.values().map(|q| q.len()).sum()
     }
 
+    /// Precisions with at least one queued request — the worker's page-in
+    /// prefetch hint: payloads for these can be built while the batch
+    /// window is still open, keeping lazy builds off the critical path.
+    pub fn queued_precisions(&self) -> Vec<u32> {
+        self.queues
+            .iter()
+            .filter(|(_, q)| !q.is_empty())
+            .map(|(&b, _)| b)
+            .collect()
+    }
+
     /// Smallest exported bucket that fits `n` (or the max bucket).
     pub fn bucket_for(&self, n: usize) -> usize {
         self.buckets
@@ -181,6 +192,21 @@ mod tests {
         assert!(first.requests.iter().all(|(r, _)| r.precision.bits() == first.bits));
         let second = b.pop_ready(Instant::now()).unwrap();
         assert_ne!(first.bits, second.bits);
+    }
+
+    #[test]
+    fn queued_precisions_tracks_pending_work() {
+        let mut b = DynamicBatcher::new(vec![1, 2, 4], 1000.0);
+        assert!(b.queued_precisions().is_empty());
+        b.push(req(0, 2));
+        b.push(req(1, 8));
+        b.push(req(2, 2));
+        assert_eq!(b.queued_precisions(), vec![2, 8]);
+        // popping a full queue clears its entry
+        let mut b2 = DynamicBatcher::new(vec![1, 2, 4], 0.0);
+        b2.push(req(0, 4));
+        let _ = b2.pop_ready(Instant::now()).unwrap();
+        assert!(b2.queued_precisions().is_empty());
     }
 
     #[test]

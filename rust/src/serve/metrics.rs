@@ -1,4 +1,7 @@
-//! Serving telemetry: latency percentiles, throughput, per-precision mix.
+//! Serving telemetry: latency percentiles, throughput, per-precision mix,
+//! weight-build latencies, and the packed-paging counters — per-precision
+//! matmul/compute timings and weight **bytes touched**, the number the
+//! packed data flow exists to shrink (2–8× fewer bytes at low bits).
 
 use std::collections::BTreeMap;
 use std::time::Instant;
@@ -9,10 +12,19 @@ pub struct Metrics {
     latencies_ms: Vec<f64>,
     per_bits: BTreeMap<u32, u64>,
     batch_sizes: Vec<usize>,
-    /// Fused weight-set builds: precision → (count, total ms).  Warm builds
-    /// happen at boot; lazy builds show up as a one-off latency cliff, so
-    /// the report breaks them out per precision.
+    /// Dense (warm) weight-set builds: precision → (count, total ms).
+    /// Warm builds happen at boot; a dense lazy build would show up as a
+    /// one-off latency cliff, so the report breaks them out per precision.
     materialize_ms: BTreeMap<u32, (u64, f64)>,
+    /// Paged (lazy) payload builds: precision → (count, payload bytes,
+    /// total ms).  These replace dense lazy builds: the bytes recorded are
+    /// r-bit payload bytes, not int8 masters or f32 weight sets.
+    page_ins: BTreeMap<u32, (u64, u64, f64)>,
+    /// Per-precision matmul/decode work: precision → (ops, total ms,
+    /// weight bytes touched).  Fed by batch execution (compute time +
+    /// whatever weight bytes the batch had to read: payload bytes on the
+    /// packed path, 4·n on a dense f32 path).
+    matmul_ms: BTreeMap<u32, (u64, f64, u64)>,
     pub requests: u64,
     pub batches: u64,
 }
@@ -25,6 +37,8 @@ impl Default for Metrics {
             per_bits: BTreeMap::new(),
             batch_sizes: Vec::new(),
             materialize_ms: BTreeMap::new(),
+            page_ins: BTreeMap::new(),
+            matmul_ms: BTreeMap::new(),
             requests: 0,
             batches: 0,
         }
@@ -41,15 +55,39 @@ impl Metrics {
         }
     }
 
-    pub fn record_batch(&mut self) {
+    /// One batch executed at `bits`: compute time plus the weight bytes the
+    /// execution touched (per-precision matmul timing + bytes counter).
+    pub fn record_batch(&mut self, bits: u32, compute_ms: f64, weight_bytes: u64) {
         self.batches += 1;
+        let e = self.matmul_ms.entry(bits).or_insert((0, 0.0, 0));
+        e.0 += 1;
+        e.1 += compute_ms;
+        e.2 += weight_bytes;
     }
 
-    /// One fused weight-set materialization (warm or lazy) completed.
+    /// One dense (warm) weight-set materialization completed.
     pub fn record_materialize(&mut self, bits: u32, ms: f64) {
         let e = self.materialize_ms.entry(bits).or_insert((0, 0.0));
         e.0 += 1;
         e.1 += ms;
+    }
+
+    /// One lazy build paged in `payload_bytes` of r-bit weights.
+    pub fn record_page_in(&mut self, bits: u32, payload_bytes: u64, ms: f64) {
+        let e = self.page_ins.entry(bits).or_insert((0, 0, 0.0));
+        e.0 += 1;
+        e.1 += payload_bytes;
+        e.2 += ms;
+    }
+
+    /// Total payload bytes paged in at `bits` (0 if never paged).
+    pub fn page_in_bytes(&self, bits: u32) -> u64 {
+        self.page_ins.get(&bits).map_or(0, |e| e.1)
+    }
+
+    /// Total weight bytes touched by batch executions at `bits`.
+    pub fn weight_bytes_touched(&self, bits: u32) -> u64 {
+        self.matmul_ms.get(&bits).map_or(0, |e| e.2)
     }
 
     pub fn percentile(&self, p: f64) -> f64 {
@@ -85,8 +123,22 @@ impl Metrics {
             .iter()
             .map(|(b, (n, ms))| format!("int{b}:{n}x{:.1}ms", ms / (*n).max(1) as f64))
             .collect();
+        let paged: Vec<String> = self
+            .page_ins
+            .iter()
+            .map(|(b, (n, bytes, ms))| {
+                format!("int{b}:{n}x{bytes}B/{:.1}ms", ms / (*n).max(1) as f64)
+            })
+            .collect();
+        let matmul: Vec<String> = self
+            .matmul_ms
+            .iter()
+            .map(|(b, (n, ms, bytes))| {
+                format!("int{b}:{n}x{:.2}ms/{bytes}B", ms / (*n).max(1) as f64)
+            })
+            .collect();
         format!(
-            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}]",
+            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}]",
             self.requests,
             self.batches,
             self.percentile(50.0),
@@ -94,7 +146,9 @@ impl Metrics {
             self.throughput_rps(),
             self.mean_batch_size(),
             mix.join(" "),
-            builds.join(" ")
+            builds.join(" "),
+            paged.join(" "),
+            matmul.join(" ")
         )
     }
 }
@@ -131,5 +185,22 @@ mod tests {
         m.record(2.0, 8, 4);
         let r = m.report();
         assert!(r.contains("int2:1") && r.contains("int8:1"));
+    }
+
+    #[test]
+    fn page_in_and_matmul_counters() {
+        let mut m = Metrics::default();
+        m.record_page_in(2, 1536, 0.5);
+        m.record_batch(2, 1.25, 1536);
+        m.record_batch(2, 0.75, 1536);
+        m.record_batch(8, 2.0, 4096);
+        assert_eq!(m.page_in_bytes(2), 1536);
+        assert_eq!(m.page_in_bytes(4), 0);
+        assert_eq!(m.weight_bytes_touched(2), 3072);
+        assert_eq!(m.weight_bytes_touched(8), 4096);
+        assert_eq!(m.batches, 3);
+        let r = m.report();
+        assert!(r.contains("paged=[int2:1x1536B/0.5ms]"), "{r}");
+        assert!(r.contains("int2:2x1.00ms/3072B"), "{r}");
     }
 }

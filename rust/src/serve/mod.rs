@@ -3,6 +3,8 @@
 //!
 //! Architecture (vLLM-router-like, scaled to one host):
 //!   client → [Router] → per-precision queues → [DynamicBatcher]
+//!          → [WeightStore]: warm dense f32 sets + lazily *paged* r-bit
+//!            payloads (pack_sliced codes, no f32 weight set)
 //!          → bucketed `fwd_b{B}` PJRT executables (worker thread owns the
 //!            Engine, which is not Send) → responses via channels.
 
@@ -11,9 +13,11 @@ pub mod metrics;
 pub mod planner;
 pub mod request;
 pub mod server;
+pub mod weights;
 
 pub use batcher::DynamicBatcher;
 pub use metrics::Metrics;
 pub use planner::{plan_deployment, DeploymentPlan};
 pub use request::{PrecisionReq, Request, Response};
 pub use server::{Server, ServerConfig};
+pub use weights::{WeightSet, WeightStore};

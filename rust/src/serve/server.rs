@@ -12,8 +12,9 @@ use anyhow::Context;
 use super::batcher::{DynamicBatcher, ReadyBatch};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
-use crate::model::{PrecisionAssignment, QuantizedModel, Tensor};
-use crate::runtime::{lit_i32, lit_tensor, Engine};
+use super::weights::WeightStore;
+use crate::model::QuantizedModel;
+use crate::runtime::{lit_i32, Engine};
 use crate::Result;
 
 #[derive(Debug, Clone)]
@@ -124,11 +125,6 @@ impl Drop for Server {
     }
 }
 
-struct WeightSet {
-    weights: Vec<Tensor>,
-    biases: Vec<Tensor>,
-}
-
 fn worker_loop(engine: Engine, model: QuantizedModel, cfg: ServerConfig, rx: Receiver<Msg>) {
     let preset = match engine.manifest().preset(&cfg.preset) {
         Ok(p) => p.clone(),
@@ -140,28 +136,19 @@ fn worker_loop(engine: Engine, model: QuantizedModel, cfg: ServerConfig, rx: Rec
     let seq = preset.model.seq_len;
     let vocab = preset.model.vocab;
     let mut batcher = DynamicBatcher::new(preset.fwd_batch_sizes.clone(), cfg.max_wait_ms);
-    let mut weight_sets: BTreeMap<u32, WeightSet> = BTreeMap::new();
+    let mut store = WeightStore::new();
     let mut waiters: BTreeMap<u64, Sender<Response>> = BTreeMap::new();
     let mut metrics = Metrics::default();
 
-    // Warm/lazy weight-set builds run the fused slice+dequant kernel
-    // (`kernels::slice_dequant_into` via the registry): one pass over each
-    // packed int8 master, no intermediate code vectors.  Build latency is
-    // tracked per precision so lazy-build cliffs are visible in the report.
-    let materialize = |bits: u32, sets: &mut BTreeMap<u32, WeightSet>, metrics: &mut Metrics| {
-        if !sets.contains_key(&bits) {
-            let t0 = Instant::now();
-            match model.materialize(&PrecisionAssignment::uniform(bits)) {
-                Ok((weights, biases)) => {
-                    metrics.record_materialize(bits, t0.elapsed().as_secs_f64() * 1e3);
-                    sets.insert(bits, WeightSet { weights, biases });
-                }
-                Err(e) => eprintln!("serve worker: materialize int{bits}: {e:#}"),
-            }
-        }
-    };
+    // Warm precisions decode a dense f32 set at boot (build latency is
+    // free there).  Every other precision is built lazily by *paging in*
+    // the r-bit `pack_sliced` payloads — `32/r`× fewer resident weight
+    // bytes than a dense set, no f32 weight buffers allocated — and is
+    // decoded tensor-by-tensor only while batch arguments are built.
     for &b in &cfg.warm_bits {
-        materialize(b, &mut weight_sets, &mut metrics);
+        if let Err(e) = store.build_warm(&model, b, &mut metrics) {
+            eprintln!("serve worker: materialize int{b}: {e:#}");
+        }
     }
 
     let mut running = true;
@@ -181,19 +168,33 @@ fn worker_loop(engine: Engine, model: QuantizedModel, cfg: ServerConfig, rx: Rec
                 Err(RecvTimeoutError::Disconnected) => running = false,
             }
         }
+        // Prefetch: page in payloads for precisions that already have
+        // queued work, so the (cheap) build is off the batch critical path.
+        for b in batcher.queued_precisions() {
+            if !store.contains(b) {
+                if let Err(e) = store.build_paged(&model, b, &mut metrics) {
+                    eprintln!("serve worker: page-in int{b}: {e:#}");
+                }
+            }
+        }
         let ready = if running {
             batcher.pop_ready(Instant::now())
         } else {
             batcher.drain_all().into_iter().next()
         };
         if let Some(batch) = ready {
-            materialize(batch.bits, &mut weight_sets, &mut metrics);
+            if !store.contains(batch.bits) {
+                if let Err(e) = store.build_paged(&model, batch.bits, &mut metrics) {
+                    eprintln!("serve worker: page-in int{}: {e:#}", batch.bits);
+                }
+            }
             if let Err(e) = execute_batch(
                 &engine,
                 &cfg.preset,
                 seq,
                 vocab,
-                &weight_sets,
+                &store,
+                &model,
                 batch,
                 &mut waiters,
                 &mut metrics,
@@ -210,14 +211,12 @@ fn execute_batch(
     preset: &str,
     seq: usize,
     vocab: usize,
-    weight_sets: &BTreeMap<u32, WeightSet>,
+    store: &WeightStore,
+    model: &QuantizedModel,
     batch: ReadyBatch,
     waiters: &mut BTreeMap<u64, Sender<Response>>,
     metrics: &mut Metrics,
 ) -> Result<()> {
-    let ws = weight_sets
-        .get(&batch.bits)
-        .ok_or_else(|| anyhow::anyhow!("no weight set for int{}", batch.bits))?;
     let bucket = batch.bucket;
     let mut tokens = vec![0i32; bucket * seq];
     let mut last_pos = vec![0usize; bucket];
@@ -226,19 +225,19 @@ fn execute_batch(
         tokens[i * seq..i * seq + n].copy_from_slice(&req.prompt[..n]);
         last_pos[i] = n.saturating_sub(1);
     }
-    let mut args: Vec<xla::Literal> =
-        Vec::with_capacity(ws.weights.len() + ws.biases.len() + 1);
-    for w in &ws.weights {
-        args.push(lit_tensor(w)?);
-    }
-    for b in &ws.biases {
-        args.push(lit_tensor(b)?);
-    }
+    // Weight args: dense sets convert resident tensors; paged sets decode
+    // one tensor at a time from the r-bit payload (fused kernel) — the
+    // weight bytes the batch touches are recorded per precision.
+    let mut args = store.batch_args(model, batch.bits)?;
     args.push(lit_i32(&[bucket, seq], &tokens)?);
     let t0 = Instant::now();
     let out = engine.run(preset, &format!("fwd_b{bucket}"), &args)?;
     let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
-    metrics.record_batch();
+    metrics.record_batch(
+        batch.bits,
+        compute_ms,
+        store.batch_weight_bytes(batch.bits) as u64,
+    );
     let logits = &out[0]; // (bucket, seq, vocab)
     let n_req = batch.requests.len();
     for (i, (req, enq)) in batch.requests.into_iter().enumerate() {

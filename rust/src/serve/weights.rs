@@ -1,0 +1,196 @@
+//! Per-precision weight storage for the serving worker: warm precisions
+//! keep a decoded f32 set resident (latency-optimal); lazily-built
+//! precisions **page in the r-bit payloads** (`pack_sliced` codes + overlay
+//! + scales) instead of decoding the int8 master into a full f32 weight
+//! set (memory-optimal — `32/r`× fewer resident weight bytes).
+//!
+//! A paged set is decoded one tensor at a time only while literal arguments
+//! for a PJRT batch execution are being built (the transient peak is a
+//! single tensor, immediately converted and dropped); the fused matmul
+//! kernels can also consume the handles directly
+//! ([`crate::model::PackedWeight::matmul_into`] /
+//! [`crate::runtime::Engine::run_packed`]) with no decode at all.
+//!
+//! Response identity across the dense/paged switch is structural: the
+//! decoded payload is bit-for-bit identical to
+//! [`crate::model::QuantizedTensor::materialize`] (enforced by
+//! `tests/kernel_conformance.rs` and `tests/serving.rs`), so the literals —
+//! and therefore the responses — cannot differ.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::anyhow;
+
+use super::metrics::Metrics;
+use crate::model::{
+    packed_payload_bytes, PackedWeight, PrecisionAssignment, QuantizedModel, Tensor,
+};
+use crate::runtime::lit_tensor;
+use crate::Result;
+
+/// One per-precision weight set.
+pub enum WeightSet {
+    /// Warm build: the full decoded f32 weight + bias tensors.
+    Dense {
+        weights: Vec<Tensor>,
+        biases: Vec<Tensor>,
+    },
+    /// Lazy build: r-bit payload handles per quantized tensor; f32 exists
+    /// only transiently during literal conversion.
+    Paged {
+        packed: BTreeMap<String, PackedWeight>,
+        payload_bytes: usize,
+    },
+}
+
+impl WeightSet {
+    /// Resident weight bytes of this set (f32 bytes for dense, payload
+    /// bytes for paged) — the per-batch "weight bytes touched" figure.
+    pub fn resident_bytes(&self) -> usize {
+        match self {
+            WeightSet::Dense { weights, biases } => weights
+                .iter()
+                .map(|t| t.len() * 4)
+                .chain(biases.iter().map(|t| t.len() * 4))
+                .sum(),
+            WeightSet::Paged { payload_bytes, .. } => *payload_bytes,
+        }
+    }
+}
+
+/// The worker's precision → weight-set map.
+#[derive(Default)]
+pub struct WeightStore {
+    sets: BTreeMap<u32, WeightSet>,
+}
+
+impl WeightStore {
+    pub fn new() -> Self {
+        WeightStore::default()
+    }
+
+    pub fn contains(&self, bits: u32) -> bool {
+        self.sets.contains_key(&bits)
+    }
+
+    /// Whether the set at `bits` is paged (`None` if absent).
+    pub fn is_paged(&self, bits: u32) -> Option<bool> {
+        self.sets
+            .get(&bits)
+            .map(|s| matches!(s, WeightSet::Paged { .. }))
+    }
+
+    /// Resident payload bytes of a paged set (`None` if absent or dense).
+    pub fn payload_bytes(&self, bits: u32) -> Option<usize> {
+        match self.sets.get(&bits) {
+            Some(WeightSet::Paged { payload_bytes, .. }) => Some(*payload_bytes),
+            _ => None,
+        }
+    }
+
+    /// Warm build: decode the full f32 weight set now (boot-time
+    /// precisions, where build latency is free and serve latency is not).
+    pub fn build_warm(
+        &mut self,
+        model: &QuantizedModel,
+        bits: u32,
+        metrics: &mut Metrics,
+    ) -> Result<()> {
+        if self.contains(bits) {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let (weights, biases) = model.materialize(&PrecisionAssignment::uniform(bits))?;
+        metrics.record_materialize(bits, t0.elapsed().as_secs_f64() * 1e3);
+        self.sets.insert(bits, WeightSet::Dense { weights, biases });
+        Ok(())
+    }
+
+    /// Lazy build: page in the r-bit payloads — no f32 weight set is
+    /// allocated or kept; the resident cost is `payload_bytes` (recorded
+    /// in `metrics` as the page-in byte counter).  Smoothed models decode
+    /// one tensor transiently during the build so the folded bias is
+    /// bit-identical to a warm build's.
+    pub fn build_paged(
+        &mut self,
+        model: &QuantizedModel,
+        bits: u32,
+        metrics: &mut Metrics,
+    ) -> Result<()> {
+        if self.contains(bits) {
+            return Ok(());
+        }
+        let t0 = Instant::now();
+        let packed = model.packed_weights(bits, false)?;
+        let payload_bytes = packed_payload_bytes(&packed);
+        metrics.record_page_in(
+            bits,
+            payload_bytes as u64,
+            t0.elapsed().as_secs_f64() * 1e3,
+        );
+        self.sets.insert(
+            bits,
+            WeightSet::Paged {
+                packed,
+                payload_bytes,
+            },
+        );
+        Ok(())
+    }
+
+    /// Weight bytes a batch execution at `bits` touches (for the metrics
+    /// bytes counter); 0 if the set is absent.
+    pub fn batch_weight_bytes(&self, bits: u32) -> usize {
+        self.sets.get(&bits).map_or(0, |s| s.resident_bytes())
+    }
+
+    /// Build the weight + bias literal arguments for one batch execution,
+    /// in artifact order (weights in `param_order`, then biases in
+    /// `quantized_order`).  Dense sets convert their resident tensors;
+    /// paged sets decode **one tensor at a time** through the fused
+    /// packed-domain kernel — the peak transient f32 footprint is a single
+    /// weight tensor, never a weight set.
+    pub fn batch_args(&self, model: &QuantizedModel, bits: u32) -> Result<Vec<xla::Literal>> {
+        match self.sets.get(&bits) {
+            None => Err(anyhow!("no weight set for int{bits}")),
+            Some(WeightSet::Dense { weights, biases }) => {
+                let mut args = Vec::with_capacity(weights.len() + biases.len());
+                for w in weights {
+                    args.push(lit_tensor(w)?);
+                }
+                for b in biases {
+                    args.push(lit_tensor(b)?);
+                }
+                Ok(args)
+            }
+            Some(WeightSet::Paged { packed, .. }) => {
+                let mut args =
+                    Vec::with_capacity(model.param_order.len() + model.quantized_order.len());
+                for name in &model.param_order {
+                    if let Some(pw) = packed.get(name) {
+                        let (w, _) = pw.decode()?;
+                        args.push(lit_tensor(&w)?);
+                    } else {
+                        let t = model
+                            .params
+                            .get(name)
+                            .ok_or_else(|| anyhow!("missing param {name}"))?;
+                        args.push(lit_tensor(t)?);
+                    }
+                }
+                for name in &model.quantized_order {
+                    let pw = packed
+                        .get(name)
+                        .ok_or_else(|| anyhow!("missing packed weight {name}"))?;
+                    let bias = pw
+                        .bias
+                        .clone()
+                        .unwrap_or_else(|| vec![0.0; pw.d_out]);
+                    args.push(lit_tensor(&Tensor::new(vec![bias.len()], bias)?)?);
+                }
+                Ok(args)
+            }
+        }
+    }
+}

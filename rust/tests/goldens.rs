@@ -86,6 +86,65 @@ fn check_cases(g: &Json) {
                 assert_eq!(a.to_bits(), b.to_bits(), "fused dequant r={r} i={i}");
             }
 
+            // fused dequant×matmul against the L1 quantized_matmul golden
+            // (key present only in the extended fixture)
+            if let (Some(xj), Some(mv), Some(mv_ep)) =
+                (case.opt("x"), rec.opt("matvec"), rec.opt("matvec_ep"))
+            {
+                let x = xj.as_f32_vec().unwrap();
+                let want = mv.as_f32_vec().unwrap();
+                let want_ep = mv_ep.as_f32_vec().unwrap();
+                let step = (1u32 << (8 - r)) as f32;
+
+                // Eq. 6 payload: sliced bucket ids packed at r bits
+                let ids: Vec<f32> = q8
+                    .iter()
+                    .map(|&q| quant::slice_code(q, 8, r, false) / step)
+                    .collect();
+                let packed_r = quant::PackedTensor::pack(&ids, r);
+                let got =
+                    matquant::kernels::matvec_packed(&packed_r, None, &s8, 8, d_out, &x, None);
+
+                // Eq. 8 payload: dense + overflow overlay
+                let ids_ep: Vec<f32> = q8
+                    .iter()
+                    .map(|&q| quant::slice_code(q, 8, r, true) / step)
+                    .collect();
+                let (overlay, dense) = quant::ExtraBitOverlay::split(&ids_ep, r);
+                let packed_ep = quant::PackedTensor::pack(&dense, r);
+                let ov = if overlay.is_empty() {
+                    None
+                } else {
+                    Some(&overlay)
+                };
+                let got_ep =
+                    matquant::kernels::matvec_packed(&packed_ep, ov, &s8, 8, d_out, &x, None);
+
+                // tolerance scaled by the accumulation magnitude (jnp's dot
+                // and the fused hoisted-affine sum order their f32 ops
+                // differently); `deq` holds the sliced-dequantized weights
+                let check = |got: &[f32], want: &[f32], w: &[f32], label: &str| {
+                    for j in 0..d_out {
+                        let mut mag = 0.0f32;
+                        for (i, &xv) in x.iter().enumerate() {
+                            mag += (xv * w[i * d_out + j]).abs();
+                        }
+                        mag += zero8[j].abs() * alpha8[j].abs()
+                            * x.iter().map(|v| v.abs()).sum::<f32>();
+                        let tol = 1e-5 * mag + 1e-6;
+                        assert!(
+                            (got[j] - want[j]).abs() <= tol,
+                            "{label} r={r} j={j}: {} vs {} (tol {tol})",
+                            got[j],
+                            want[j]
+                        );
+                    }
+                };
+                check(&got, &want, &deq, "matvec");
+                let deq_ep = quant::dequantize(&quant::slice_codes(&q8, 8, r, true), d_out, &s8);
+                check(&got_ep, &want_ep, &deq_ep, "matvec_ep");
+            }
+
             let got_eb = quant::effective_bits(&q8, 8, r);
             assert!((got_eb - eb).abs() < 1e-9, "effective_bits r={r}");
 

@@ -8,6 +8,15 @@
 //! * Eq. 8 overflow overlays (including all-overflow and empty overlays),
 //! * degenerate EPS-guarded channels and extreme zero-points.
 //!
+//! The fused dequant×matmul kernels (`kernels::matmul`) are additionally
+//! checked — deterministically over the same width/shape grid and with
+//! seeded property-based sweeps (`testing::run_prop`) over random (bits,
+//! shape, overlay, degenerate-scale) cases — against the scalar `quant::`
+//! dequant followed by a naive f32 matmul: inputs decode bit-for-bit, the
+//! accumulations agree within the ulp-scaled tolerance of
+//! `testing::assert_accum_close` (the fused path hoists the affine out of
+//! the reduction, a different but equally valid f32 evaluation order).
+//!
 //! Runs unconditionally — no artifacts required.  The shared synthesis +
 //! reference code lives in `matquant::kernels::testing` so new kernels
 //! inherit the harness.
@@ -183,6 +192,319 @@ fn registry_materialization_agrees_across_kernels() {
             );
         }
     }
+}
+
+// ---------------------------------------------------------------------------
+// Fused dequant×matmul: deterministic grid
+// ---------------------------------------------------------------------------
+
+#[test]
+fn matvec_matches_naive_reference_all_widths() {
+    for &bits in &WIDTHS {
+        for (case, &(n, d_out)) in shape_grid().iter().enumerate() {
+            if d_out == 0 || n % d_out != 0 {
+                continue;
+            }
+            let d_in = n / d_out;
+            for degenerate in [false, true] {
+                let seed = (case as u64) * 13 + bits as u64;
+                let ids = testing::synth_ids(bits, n, seed);
+                let packed = PackedTensor::pack(&ids, bits);
+                let scales = testing::synth_scales(d_out, seed ^ 0x33, degenerate);
+                let x = testing::synth_x(d_in, seed ^ 0x44);
+                let got = kernels::matvec_packed(&packed, None, &scales, 8, d_out, &x, None);
+                let (want, mag) =
+                    testing::reference_matmul(&packed, None, &scales, 8, d_out, &x, 1, None);
+                testing::assert_accum_close(
+                    &got,
+                    &want,
+                    &mag,
+                    d_in,
+                    &format!("matvec bits={bits} n={n} d_out={d_out} deg={degenerate}"),
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn matvec_overlay_matches_naive_reference() {
+    for &bits in &[1u32, 2, 3, 4, 6] {
+        for &(n, d_out) in &[(7usize, 7usize), (33, 3), (96, 8), (1000, 10)] {
+            let d_in = n / d_out;
+            let (packed, overlay) = testing::synth_overlayed(bits, n, n as u64 + bits as u64);
+            let scales = testing::synth_scales(d_out, 17, false);
+            let x = testing::synth_x(d_in, 5);
+            let got =
+                kernels::matvec_packed(&packed, Some(&overlay), &scales, 8, d_out, &x, None);
+            let (want, mag) = testing::reference_matmul(
+                &packed,
+                Some(&overlay),
+                &scales,
+                8,
+                d_out,
+                &x,
+                1,
+                None,
+            );
+            testing::assert_accum_close(
+                &got,
+                &want,
+                &mag,
+                d_in,
+                &format!("matvec-overlay bits={bits} n={n} d_out={d_out}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn matvec_empty_tensor_returns_bias() {
+    let packed = PackedTensor::pack(&[], 4);
+    let scales = testing::synth_scales(5, 3, false);
+    let bias = [0.5f32, -1.0, 0.0, 2.0, -0.25];
+    let got = kernels::matvec_packed(&packed, None, &scales, 8, 5, &[], Some(&bias));
+    assert_eq!(got, bias.to_vec());
+    let no_bias = kernels::matvec_packed(&packed, None, &scales, 8, 5, &[], None);
+    assert!(no_bias.iter().all(|&v| v == 0.0));
+}
+
+#[test]
+fn matmul_batched_matches_naive_reference() {
+    // Batch sizes around the GEMM block boundary, odd dims, bias on.
+    for &(d_in, d_out, m) in &[
+        (17usize, 5usize, 1usize),
+        (16, 8, 7),
+        (33, 3, 8),
+        (20, 11, 9),
+        (64, 4, 19),
+    ] {
+        let bits = 4;
+        let ids = testing::synth_ids(bits, d_in * d_out, (d_in * m) as u64);
+        let packed = PackedTensor::pack(&ids, bits);
+        let scales = testing::synth_scales(d_out, 31, false);
+        let xs = testing::synth_x(m * d_in, 71);
+        let bias: Vec<f32> = (0..d_out).map(|j| j as f32 * 0.25 - 1.0).collect();
+        let got =
+            kernels::matmul_packed(&packed, None, &scales, 8, d_out, &xs, m, Some(&bias));
+        let (want, mag) = testing::reference_matmul(
+            &packed,
+            None,
+            &scales,
+            8,
+            d_out,
+            &xs,
+            m,
+            Some(&bias),
+        );
+        testing::assert_accum_close(
+            &got,
+            &want,
+            &mag,
+            d_in,
+            &format!("gemm d_in={d_in} d_out={d_out} m={m}"),
+        );
+    }
+}
+
+#[test]
+fn matvec_i8_matches_naive_reference() {
+    for &bits in &WIDTHS {
+        let (d_in, d_out) = (37, 6);
+        let ids = testing::synth_ids(bits, d_in * d_out, bits as u64 ^ 0x99);
+        let packed = PackedTensor::pack(&ids, bits);
+        let scales = testing::synth_scales(d_out, 23, false);
+        let xq: Vec<i8> = (0..d_in)
+            .map(|i| (((i * 37 + 11) % 255) as i64 - 127) as i8)
+            .collect();
+        let x_scale = 0.031f32;
+        let got =
+            kernels::matvec_packed_i8(&packed, None, &scales, 8, d_out, &xq, x_scale, None);
+        let x_f: Vec<f32> = xq.iter().map(|&v| v as f32 * x_scale).collect();
+        let (want, mag) =
+            testing::reference_matmul(&packed, None, &scales, 8, d_out, &x_f, 1, None);
+        testing::assert_accum_close(&got, &want, &mag, d_in, &format!("i8 bits={bits}"));
+    }
+}
+
+#[test]
+fn packed_weight_matvec_matches_registry_materialization() {
+    // End-to-end through the registry handle: the fused matvec against the
+    // naive product over the *materialized* weights (which are themselves
+    // bit-for-bit conformant — see tests above).
+    let d_in = 48;
+    let d_out = 9;
+    let mut rng = matquant::data::Rng::new(4242);
+    let data: Vec<f32> = (0..d_in * d_out).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+    let fp = Tensor::new(vec![d_in, d_out], data).unwrap();
+    let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+    let x = testing::synth_x(d_in, 1234);
+    for &bits in &WIDTHS {
+        for ep in [false, true] {
+            let pw = qt.packed_weight(bits, ep).unwrap();
+            let got = pw.matvec(&x).unwrap();
+            let (want, mag) = testing::reference_matmul(
+                &pw.packed,
+                if pw.overlay.is_empty() {
+                    None
+                } else {
+                    Some(&pw.overlay)
+                },
+                &pw.scales,
+                8,
+                d_out,
+                &x,
+                1,
+                None,
+            );
+            testing::assert_accum_close(
+                &got,
+                &want,
+                &mag,
+                d_in,
+                &format!("packed-weight bits={bits} ep={ep}"),
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Fused dequant×matmul: property-based sweeps
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_matvec_matches_naive_reference() {
+    testing::run_prop(
+        "fused matvec == naive dequant·matmul",
+        testing::PropConfig {
+            cases: 250,
+            ..Default::default()
+        },
+        testing::gen_matmul_case,
+        |case| {
+            let (packed, overlay, scales) = testing::build_matmul_payload(case);
+            let ov = if overlay.is_empty() {
+                None
+            } else {
+                Some(&overlay)
+            };
+            let x = testing::synth_x(case.d_in, case.seed ^ 0x1);
+            let bias: Option<Vec<f32>> = case
+                .bias
+                .then(|| (0..case.d_out).map(|j| (j as f32) * 0.5 - 1.0).collect());
+            let got = kernels::matvec_packed(
+                &packed,
+                ov,
+                &scales,
+                8,
+                case.d_out,
+                &x,
+                bias.as_deref(),
+            );
+            let (want, mag) = testing::reference_matmul(
+                &packed,
+                ov,
+                &scales,
+                8,
+                case.d_out,
+                &x,
+                1,
+                bias.as_deref(),
+            );
+            testing::assert_accum_close(&got, &want, &mag, case.d_in, "matvec");
+        },
+    );
+}
+
+#[test]
+fn prop_matmul_batched_matches_naive_reference() {
+    testing::run_prop(
+        "fused batched matmul == naive dequant·matmul",
+        testing::PropConfig {
+            cases: 120,
+            seed: 0xBA7C4,
+        },
+        testing::gen_matmul_case,
+        |case| {
+            let (packed, overlay, scales) = testing::build_matmul_payload(case);
+            let ov = if overlay.is_empty() {
+                None
+            } else {
+                Some(&overlay)
+            };
+            let xs = testing::synth_x(case.m * case.d_in, case.seed ^ 0x2);
+            let got =
+                kernels::matmul_packed(&packed, ov, &scales, 8, case.d_out, &xs, case.m, None);
+            let (want, mag) = testing::reference_matmul(
+                &packed, ov, &scales, 8, case.d_out, &xs, case.m, None,
+            );
+            testing::assert_accum_close(&got, &want, &mag, case.d_in, "gemm");
+        },
+    );
+}
+
+#[test]
+fn prop_matvec_i8_matches_naive_reference() {
+    testing::run_prop(
+        "fused i8/i32 matvec == naive dequant·matmul",
+        testing::PropConfig {
+            cases: 120,
+            seed: 0x18A7,
+        },
+        testing::gen_matmul_case,
+        |case| {
+            let (packed, overlay, scales) = testing::build_matmul_payload(case);
+            let ov = if overlay.is_empty() {
+                None
+            } else {
+                Some(&overlay)
+            };
+            let mut rng = matquant::data::Rng::new(case.seed ^ 0x3);
+            let xq: Vec<i8> = (0..case.d_in)
+                .map(|_| (rng.below(255) as i64 - 127) as i8)
+                .collect();
+            let x_scale = 0.017f32;
+            let got = kernels::matvec_packed_i8(
+                &packed,
+                ov,
+                &scales,
+                8,
+                case.d_out,
+                &xq,
+                x_scale,
+                None,
+            );
+            let x_f: Vec<f32> = xq.iter().map(|&v| v as f32 * x_scale).collect();
+            let (want, mag) =
+                testing::reference_matmul(&packed, ov, &scales, 8, case.d_out, &x_f, 1, None);
+            testing::assert_accum_close(&got, &want, &mag, case.d_in, "i8 matvec");
+        },
+    );
+}
+
+#[test]
+fn prop_dequant_matches_reference() {
+    // The dequant kernels ride the same generator: decode stays bit-exact
+    // on every randomly drawn case.
+    testing::run_prop(
+        "fused dequant == scalar reference (bit-for-bit)",
+        testing::PropConfig {
+            cases: 150,
+            seed: 0xDEC0,
+        },
+        testing::gen_matmul_case,
+        |case| {
+            let (packed, overlay, scales) = testing::build_matmul_payload(case);
+            let ov = if overlay.is_empty() {
+                None
+            } else {
+                Some(&overlay)
+            };
+            let want = testing::reference_dequant_packed(&packed, ov, &scales, 8, case.d_out);
+            let got = kernels::dequant_packed(&packed, ov, &scales, 8, case.d_out);
+            testing::assert_bits_eq(&got, &want, "dequant");
+        },
+    );
 }
 
 #[test]

@@ -1,13 +1,212 @@
-//! Serving-stack integration: mixed-precision requests through the full
-//! router → batcher → PJRT pipeline.  Requires `make artifacts` (reports
-//! `skipped:` otherwise).
+//! Serving-stack tests.
+//!
+//! The weight-paging half runs unconditionally: it exercises the worker's
+//! `WeightStore` directly — lazy builds must page r-bit payload bytes (not
+//! the int8 master, not an f32 weight set) and the literal arguments a
+//! paged set produces must be identical to the dense set's, which is what
+//! makes responses identical before/after the paging switch (a response is
+//! a pure function of the literals fed to the `fwd_b{B}` executable).
+//!
+//! The end-to-end half (mixed-precision requests through the full router →
+//! batcher → PJRT pipeline) requires `make artifacts` and reports
+//! `skipped:` otherwise.
 
 mod common;
 
+use std::collections::BTreeMap;
+
 use matquant::coordinator::trainer::init_params;
-use matquant::model::QuantizedModel;
-use matquant::runtime::Engine;
-use matquant::serve::{PrecisionReq, Request, Server, ServerConfig};
+use matquant::data::Rng;
+use matquant::model::registry::QuantizedTensor;
+use matquant::model::{QuantizedModel, Tensor};
+use matquant::runtime::{tensor_from_literal, Engine};
+use matquant::serve::{Metrics, PrecisionReq, Request, Server, ServerConfig, WeightStore};
+
+/// A small artifact-free registry model (mirrors the planner's toy model).
+fn toy_model(layers: usize, d_in: usize, d_out: usize) -> QuantizedModel {
+    let mut rng = Rng::new(21);
+    let mut params = BTreeMap::new();
+    let mut quantized = BTreeMap::new();
+    let mut order = Vec::new();
+    for l in 0..layers {
+        let name = format!("layer{l}.ffn.w_in");
+        let data: Vec<f32> = (0..d_in * d_out).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let t = Tensor::new(vec![d_in, d_out], data).unwrap();
+        params.insert(name.clone(), t.clone());
+        quantized.insert(
+            name.clone(),
+            QuantizedTensor::from_weight(t, None, None, None).unwrap(),
+        );
+        order.push(name);
+    }
+    // one non-quantized param, as real presets have
+    let emb = Tensor::new(vec![4, d_in], vec![0.5; 4 * d_in]).unwrap();
+    params.insert("embed.table".into(), emb);
+    let mut param_order = vec!["embed.table".to_string()];
+    param_order.extend(order.iter().cloned());
+    QuantizedModel {
+        params,
+        quantized,
+        param_order,
+        quantized_order: order,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed paging path (unconditional)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lazy_builds_page_payload_bytes_not_the_master() {
+    let model = toy_model(3, 64, 32);
+    let mut store = WeightStore::new();
+    let mut metrics = Metrics::default();
+    store.build_paged(&model, 2, &mut metrics).unwrap();
+
+    assert_eq!(store.is_paged(2), Some(true));
+    let paged = store.payload_bytes(2).unwrap();
+    let master_bytes: usize = model
+        .quantized
+        .values()
+        .map(|qt| qt.codes.bytes() + qt.d_out * 8)
+        .sum();
+    let f32_bytes: usize = model
+        .quantized
+        .values()
+        .map(|qt| qt.d_in * qt.d_out * 4)
+        .sum();
+    // int2 payload ≈ ¼ of the int8 master, 1/16 of the f32 set
+    assert!(
+        paged * 3 < master_bytes,
+        "paged {paged}B vs master {master_bytes}B"
+    );
+    assert!(paged * 8 < f32_bytes, "paged {paged}B vs f32 {f32_bytes}B");
+    // the metrics byte counter records exactly the payload bytes
+    assert_eq!(metrics.page_in_bytes(2), paged as u64);
+    assert_eq!(metrics.page_in_bytes(8), 0);
+
+    // warm builds stay dense and do not page
+    store.build_warm(&model, 8, &mut metrics).unwrap();
+    assert_eq!(store.is_paged(8), Some(false));
+    assert_eq!(store.payload_bytes(8), None);
+    assert_eq!(metrics.page_in_bytes(8), 0);
+
+    // per-batch bytes-touched: the paged set touches payload bytes, the
+    // dense set touches full f32 bytes
+    assert_eq!(store.batch_weight_bytes(2), paged);
+    assert!(store.batch_weight_bytes(8) >= f32_bytes);
+
+    let report = metrics.report();
+    assert!(report.contains("paged=[int2:1x"), "{report}");
+}
+
+/// Assert two stores produce byte-identical batch args at every precision.
+fn assert_args_identical(model: &QuantizedModel, dense: &WeightStore, paged: &WeightStore) {
+    for bits in [2u32, 4, 8] {
+        let a = dense.batch_args(model, bits).unwrap();
+        let b = paged.batch_args(model, bits).unwrap();
+        assert_eq!(a.len(), b.len(), "int{bits}: arg arity");
+        for (k, (la, lb)) in a.iter().zip(&b).enumerate() {
+            let ta = tensor_from_literal(la).unwrap();
+            let tb = tensor_from_literal(lb).unwrap();
+            assert_eq!(ta.shape, tb.shape, "int{bits} arg {k}: shape");
+            assert_eq!(ta.data.len(), tb.data.len(), "int{bits} arg {k}: len");
+            for (i, (x, y)) in ta.data.iter().zip(&tb.data).enumerate() {
+                assert_eq!(
+                    x.to_bits(),
+                    y.to_bits(),
+                    "int{bits} arg {k} elem {i}: {x} vs {y}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn paged_args_identical_to_dense_args() {
+    // Response identity across the dense→paged switch: the literals fed to
+    // the executable are bit-for-bit identical, so the responses are too.
+    let model = toy_model(2, 48, 24);
+    let mut metrics = Metrics::default();
+    let mut dense = WeightStore::new();
+    let mut paged = WeightStore::new();
+    for bits in [2u32, 4, 8] {
+        dense.build_warm(&model, bits, &mut metrics).unwrap();
+        paged.build_paged(&model, bits, &mut metrics).unwrap();
+    }
+    assert_args_identical(&model, &dense, &paged);
+}
+
+#[test]
+fn paged_args_identical_for_smoothed_models() {
+    // OmniQuant smoothing folds a nonzero bias; the paged build must
+    // reproduce the dense fold bit-for-bit too.
+    let mut model = toy_model(2, 32, 16);
+    let smoothed: Vec<(String, QuantizedTensor)> = model
+        .quantized
+        .iter()
+        .map(|(name, qt)| {
+            let s: Vec<f32> = (0..qt.d_in).map(|i| 0.9 + 0.01 * i as f32).collect();
+            let mut delta = vec![0.0f32; qt.d_in];
+            delta[3] = 0.5;
+            delta[10] = -0.25;
+            let fp = qt.fp.clone();
+            (
+                name.clone(),
+                QuantizedTensor::from_weight(fp, None, None, Some((s, delta))).unwrap(),
+            )
+        })
+        .collect();
+    model.quantized = smoothed.into_iter().collect();
+    let mut metrics = Metrics::default();
+    let mut dense = WeightStore::new();
+    let mut paged = WeightStore::new();
+    for bits in [2u32, 4, 8] {
+        dense.build_warm(&model, bits, &mut metrics).unwrap();
+        paged.build_paged(&model, bits, &mut metrics).unwrap();
+    }
+    // the smoothing fold must actually be exercised (nonzero bias)
+    let handles = model.packed_weights(4, false).unwrap();
+    assert!(
+        handles
+            .values()
+            .any(|p| p.bias.as_ref().is_some_and(|b| b.iter().any(|&v| v != 0.0))),
+        "smoothing fold produced no bias — test is vacuous"
+    );
+    assert_args_identical(&model, &dense, &paged);
+}
+
+#[test]
+fn paged_args_match_registry_materialization() {
+    // The paged decode must reproduce the registry's materialize outputs —
+    // weights in param order, then biases in quantized order.
+    let model = toy_model(2, 32, 16);
+    let mut metrics = Metrics::default();
+    let mut store = WeightStore::new();
+    store.build_paged(&model, 4, &mut metrics).unwrap();
+    let args = store.batch_args(&model, 4).unwrap();
+    let (weights, biases) = model
+        .materialize(&matquant::model::PrecisionAssignment::uniform(4))
+        .unwrap();
+    assert_eq!(args.len(), weights.len() + biases.len());
+    for (k, want) in weights.iter().chain(biases.iter()).enumerate() {
+        let got = tensor_from_literal(&args[k]).unwrap();
+        assert_eq!(got.data, want.data, "arg {k}");
+    }
+}
+
+#[test]
+fn missing_weight_set_is_an_error() {
+    let model = toy_model(1, 16, 8);
+    let store = WeightStore::new();
+    assert!(store.batch_args(&model, 4).is_err());
+    assert_eq!(store.is_paged(4), None);
+    assert_eq!(store.batch_weight_bytes(4), 0);
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end pipeline (artifact-gated)
+// ---------------------------------------------------------------------------
 
 fn boot() -> Option<(Server, usize, usize)> {
     let dir = common::artifact_or_skip("serving", "manifest.json")?;
