@@ -1,0 +1,37 @@
+# MatQuant build entry points.
+#
+# `make artifacts` is the L2 AOT export the artifact-gated Rust tests and
+# benches reference (they skip with `skipped: ...: missing artifacts/...`
+# until it has run).  It lowers every JAX step to HLO text + writes
+# manifest.json and goldens.json into rust/artifacts/, after which the
+# `matquant` binary is self-contained — Python never runs on the request
+# path.  Requires the jax/pallas toolchain baked into the build image; the
+# pure-Rust tier-1 gate (`make test`) needs no artifacts at all.
+
+PYTHON ?= python3
+# Tests resolve artifacts at rust/artifacts (CARGO_MANIFEST_DIR) or $MQ_ARTIFACTS.
+ARTIFACTS_DIR ?= $(abspath rust/artifacts)
+PRESETS ?= tiny,small,tiny_attn
+
+.PHONY: artifacts build test conformance bench clean-artifacts
+
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir $(ARTIFACTS_DIR) --presets $(PRESETS)
+
+build:
+	cd rust && cargo build --release
+
+# Tier-1 gate (no artifacts, no network).
+test:
+	cd rust && cargo build --release && cargo test -q
+
+# The debug+release conformance matrix CI runs (kernels + host forward).
+conformance:
+	cd rust && cargo test -q --test kernel_conformance --test forward --test goldens --test quant_edges --test serving
+	cd rust && cargo test --release -q --test kernel_conformance --test forward --test goldens --test quant_edges --test serving
+
+bench:
+	cd rust && cargo bench --bench quant_hot_paths
+
+clean-artifacts:
+	rm -rf $(ARTIFACTS_DIR)

@@ -65,6 +65,7 @@ fn main() -> anyhow::Result<()> {
             preset: preset.clone(),
             max_wait_ms: args.get_f32("wait-ms", 2.0)? as f64,
             warm_bits: vec![8, 4, 2],
+            ..ServerConfig::default()
         },
     )?;
 
@@ -79,11 +80,11 @@ fn main() -> anyhow::Result<()> {
             5..=7 => PrecisionReq::Bits(4),
             _ => PrecisionReq::Best,
         };
-        rxs.push(server.submit(Request {
+        rxs.push(server.submit(Request::new(
             id,
-            prompt: corpus.sequence(&mut rng, seq.min(32)),
+            corpus.sequence(&mut rng, seq.min(32)),
             precision,
-        })?);
+        ))?);
     }
     let mut by_bits = std::collections::BTreeMap::<u32, (usize, f64)>::new();
     for rx in rxs {

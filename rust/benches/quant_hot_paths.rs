@@ -2,15 +2,18 @@
 //! fused packed-domain matmuls — the per-request work of elastic serving.
 //! Perf targets in DESIGN.md §Perf (slicing ≥ 1 GB/s of codes on this
 //! single-core testbed); ISSUE 2 acceptance: fused matvec/matmul beats
-//! materialize-then-matmul at int2/int4 on these shapes.
+//! materialize-then-matmul at int2/int4 on these shapes; ISSUE 3 adds the
+//! host-forward tokens/sec rows (dense vs packed vs packed+i8 activations).
 //!
 //! Run: `cargo bench --bench quant_hot_paths`
 
 use matquant::data::Rng;
 use matquant::kernels;
 use matquant::model::registry::QuantizedTensor;
-use matquant::model::Tensor;
-use matquant::quant::{self, PackedTensor};
+use matquant::model::testing::toy_transformer;
+use matquant::model::{manifest::ModelDims, PrecisionAssignment, Tensor};
+use matquant::quant::{self, ActQuantConfig, PackedTensor};
+use matquant::runtime::{ForwardWeights, HostForward};
 use matquant::util::bench::{bench, default_budget};
 
 fn main() {
@@ -281,4 +284,94 @@ fn main() {
         std::hint::black_box(quant::code_histogram(&codes, 8));
     });
     println!("{} | {:.2} Melem/s", r.report(), r.throughput(n as f64) / 1e6);
+
+    // ---- host forward pass: tokens/sec, dense vs packed vs packed+i8 ----
+    // The serving-side figure of merit for the no-PJRT path: a whole
+    // request batch through embedding → layers → logits.  Dense is the f32
+    // reference; packed streams the fused r-bit matmuls (32/r× fewer
+    // weight bytes); packed+i8 adds integer-domain activations.
+    // tiny-preset-shaped (configs.py `tiny`: d=96, 4 layers, FFN quantized)
+    let (preset, fwd_model) = toy_transformer(
+        ModelDims {
+            vocab: 256,
+            d_model: 96,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 384,
+            seq_len: 32,
+            quantize_attn: false,
+        },
+        41,
+    );
+    let b = 4usize;
+    let t = preset.model.seq_len;
+    let tokens: Vec<i32> = (0..b * t)
+        .map(|i| ((i * 11 + 5) % preset.model.vocab) as i32)
+        .collect();
+    let toks_per_iter = (b * t) as f64;
+    for bits in [2u32, 4, 8] {
+        let (weights, biases) = fwd_model
+            .materialize(&PrecisionAssignment::uniform(bits))
+            .unwrap();
+        let dense = HostForward::new(
+            &preset.model,
+            &fwd_model,
+            ForwardWeights::Dense {
+                weights: &weights,
+                biases: &biases,
+            },
+        )
+        .unwrap();
+        let r_dense = bench(&format!("host fwd dense b{b} @ int{bits}"), budget, || {
+            std::hint::black_box(dense.forward(&tokens, b, t).unwrap());
+        });
+        println!(
+            "{} | {:.0} tok/s",
+            r_dense.report(),
+            r_dense.throughput(toks_per_iter)
+        );
+
+        let handles = fwd_model.packed_weights(bits, false).unwrap();
+        let packed = HostForward::new(
+            &preset.model,
+            &fwd_model,
+            ForwardWeights::Packed {
+                packed: &handles,
+                int8: None,
+            },
+        )
+        .unwrap();
+        let r_packed = bench(&format!("host fwd packed b{b} @ int{bits}"), budget, || {
+            std::hint::black_box(packed.forward(&tokens, b, t).unwrap());
+        });
+        println!(
+            "{} | {:.0} tok/s | {:.2}x vs dense",
+            r_packed.report(),
+            r_packed.throughput(toks_per_iter),
+            r_dense.mean_ns / r_packed.mean_ns
+        );
+
+        let packed_i8 = HostForward::new(
+            &preset.model,
+            &fwd_model,
+            ForwardWeights::Packed {
+                packed: &handles,
+                int8: Some(ActQuantConfig::absmax()),
+            },
+        )
+        .unwrap();
+        let r_i8 = bench(
+            &format!("host fwd packed+i8 b{b} @ int{bits}"),
+            budget,
+            || {
+                std::hint::black_box(packed_i8.forward(&tokens, b, t).unwrap());
+            },
+        );
+        println!(
+            "{} | {:.0} tok/s | {:.2}x vs dense",
+            r_i8.report(),
+            r_i8.throughput(toks_per_iter),
+            r_dense.mean_ns / r_i8.mean_ns
+        );
+    }
 }

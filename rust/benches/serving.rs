@@ -22,11 +22,11 @@ fn main() {
     let r = bench("batcher push+pop 256 reqs", budget, || {
         let mut b = DynamicBatcher::new(vec![1, 2, 4, 8, 16], 0.0);
         for (i, p) in prompts.iter().enumerate() {
-            b.push(Request {
-                id: i as u64,
-                prompt: p.clone(),
-                precision: PrecisionReq::Bits([2, 4, 8][i % 3]),
-            });
+            b.push(Request::new(
+                i as u64,
+                p.clone(),
+                PrecisionReq::Bits([2, 4, 8][i % 3]),
+            ));
         }
         let now = Instant::now();
         while let Some(batch) = b.pop_ready(now) {
@@ -58,6 +58,7 @@ fn main() {
             preset: preset.into(),
             max_wait_ms: 1.0,
             warm_bits: vec![8, 4, 2],
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -67,11 +68,11 @@ fn main() {
     // warm the executables with one request per precision
     for (i, bits) in [2u32, 4, 8].iter().enumerate() {
         let _ = server
-            .infer(Request {
-                id: 1_000_000 + i as u64,
-                prompt: corpus.sequence(&mut rng, seq.min(32)),
-                precision: PrecisionReq::Bits(*bits),
-            })
+            .infer(Request::new(
+                1_000_000 + i as u64,
+                corpus.sequence(&mut rng, seq.min(32)),
+                PrecisionReq::Bits(*bits),
+            ))
             .unwrap();
     }
 
@@ -80,11 +81,11 @@ fn main() {
         let rxs: Vec<_> = (0..n)
             .map(|id| {
                 server
-                    .submit(Request {
-                        id: id as u64,
-                        prompt: corpus.sequence(&mut rng, seq.min(32)),
-                        precision: PrecisionReq::Bits([2, 4, 8][id % 3]),
-                    })
+                    .submit(Request::new(
+                        id as u64,
+                        corpus.sequence(&mut rng, seq.min(32)),
+                        PrecisionReq::Bits([2, 4, 8][id % 3]),
+                    ))
                     .unwrap()
             })
             .collect();

@@ -32,7 +32,9 @@
 //!
 //! * [`matvec_packed_into`] — row-tiled GEMV.  Power-of-two widths
 //!   (1/2/4/8) decode through the 256-entry byte-expansion LUTs
-//!   ([`super::lut`]); 3/6-bit fall back to the [`BitCursor`].
+//!   ([`super::lut`]); 3/6-bit fall back to the [`BitCursor`].  The
+//!   accumulate over each decoded row runs [`LANES`]-wide (8-lane
+//!   unrolled, the autovectorizer-friendly shape) in the f32 and i8 paths.
 //! * [`matmul_packed_into`] — blocked multi-column GEMM for batched
 //!   requests: each block of up to [`GEMM_BLOCK`] batch rows re-streams the
 //!   (2–8× smaller) packed weights once, so accumulator tiles stay
@@ -66,6 +68,55 @@ pub const GEMM_BLOCK: usize = 8;
 /// the i32 partial more than an order of magnitude clear of overflow even
 /// in release builds (where wrap-around would be silent).
 pub const I32_FLUSH_ROWS: usize = 4096;
+
+/// SIMD-width row tile for the GEMV/GEMM inner loops: 8 f32 lanes (two
+/// 128-bit or one 256-bit vector register).  The accumulate over a decoded
+/// weight row is unrolled in `LANES`-wide chunks with no cross-lane
+/// dependency, which is the shape LLVM reliably vectorizes; per-lane the
+/// sequence of adds into each output slot is unchanged, so results stay
+/// bit-identical to the rolled loop.
+pub const LANES: usize = 8;
+
+/// `acc[j] += xv · ids[j]` over one row tile, unrolled [`LANES`] wide.
+#[inline(always)]
+fn axpy_row_f32(acc: &mut [f32], ids: &[f32], xv: f32) {
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut w = ids.chunks_exact(LANES);
+    for (a8, w8) in (&mut a).zip(&mut w) {
+        a8[0] += xv * w8[0];
+        a8[1] += xv * w8[1];
+        a8[2] += xv * w8[2];
+        a8[3] += xv * w8[3];
+        a8[4] += xv * w8[4];
+        a8[5] += xv * w8[5];
+        a8[6] += xv * w8[6];
+        a8[7] += xv * w8[7];
+    }
+    for (o, &id) in a.into_remainder().iter_mut().zip(w.remainder()) {
+        *o += xv * id;
+    }
+}
+
+/// `acc[j] += xi · ids[j]` over one i32 row tile, unrolled [`LANES`] wide
+/// (exact integer accumulation — order is irrelevant to the result).
+#[inline(always)]
+fn mac_row_i32(acc: &mut [i32], ids: &[i32], xi: i32) {
+    let mut a = acc.chunks_exact_mut(LANES);
+    let mut w = ids.chunks_exact(LANES);
+    for (a8, w8) in (&mut a).zip(&mut w) {
+        a8[0] += xi * w8[0];
+        a8[1] += xi * w8[1];
+        a8[2] += xi * w8[2];
+        a8[3] += xi * w8[3];
+        a8[4] += xi * w8[4];
+        a8[5] += xi * w8[5];
+        a8[6] += xi * w8[6];
+        a8[7] += xi * w8[7];
+    }
+    for (o, &id) in a.into_remainder().iter_mut().zip(w.remainder()) {
+        *o += xi * id;
+    }
+}
 
 /// Streaming state for the LUT row decoder: ids decoded from the current
 /// byte but not yet emitted (a byte can straddle a row boundary whenever
@@ -219,10 +270,7 @@ fn gemm_block(
                 continue;
             }
             xsum[b] += xv;
-            let arow = &mut out[b * d_out..(b + 1) * d_out];
-            for (a, &id) in arow.iter_mut().zip(row_ids.iter()) {
-                *a += xv * id;
-            }
+            axpy_row_f32(&mut out[b * d_out..(b + 1) * d_out], row_ids, xv);
         }
     }
     // Epilogue: the hoisted per-channel affine, once per output element.
@@ -393,14 +441,20 @@ pub fn matvec_packed_i8_into(
     let step = (1u32 << (master_bits - packed.bits)) as f32;
     let bits = packed.bits;
     let mut cur = BitCursor::new(&packed.data);
+    let mut row_ids = vec![0i32; d_out];
     let mut acc32 = vec![0i32; d_out];
     let mut acc = vec![0i64; d_out];
     let mut xsum: i64 = 0;
     for (row, &xv) in xq.iter().take(d_in).enumerate() {
+        // Row-tile decode first (the cursor must advance even for zero
+        // activations), then the LANES-unrolled integer accumulate.
+        for id in row_ids.iter_mut() {
+            *id = cur.next(bits) as i32;
+        }
         let xi = xv as i32;
         xsum += xi as i64;
-        for a in acc32.iter_mut() {
-            *a += xi * cur.next(bits) as i32;
+        if xi != 0 {
+            mac_row_i32(&mut acc32, &row_ids, xi);
         }
         if (row + 1) % I32_FLUSH_ROWS == 0 {
             for (wide, narrow) in acc.iter_mut().zip(acc32.iter_mut()) {
@@ -435,6 +489,118 @@ pub fn matvec_packed_i8_into(
                 out[j] = scales.alpha[j] * (step * x_scale * acc[j] as f32 - scales.zero[j] * sx);
             }
         }
+    }
+}
+
+/// Blocked integer-domain GEMM over per-row-quantized activations:
+/// `out (m, d_out) = dequant(xq·W_r)` where row `b` of `xq` carries its own
+/// activation scale `x_scales[b]` (per-token quantization — rows stay
+/// independent).  Like [`matmul_packed_into`], each block of up to
+/// [`GEMM_BLOCK`] batch rows streams the packed payload **once**, so the
+/// weight bytes read are `ceil(m / GEMM_BLOCK) · payload` instead of
+/// `m · payload` for per-row [`matvec_packed_i8_into`] calls.  A
+/// single-row block is bit-identical to `matvec_packed_i8_into` (integer
+/// accumulation is exact; the f32 epilogue is the same expression).
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_packed_i8_into(
+    packed: &PackedTensor,
+    overlay: Option<&ExtraBitOverlay>,
+    scales: &Scales,
+    master_bits: u32,
+    d_out: usize,
+    xq: &[i8],
+    m: usize,
+    x_scales: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    let d_in = check_matmul_shapes(
+        packed,
+        scales,
+        master_bits,
+        d_out,
+        xq.len(),
+        m,
+        bias,
+        out.len(),
+    );
+    assert_eq!(x_scales.len(), m, "one activation scale per batch row");
+    if m == 0 || d_out == 0 {
+        return;
+    }
+    let bits = packed.bits;
+    let step = (1u32 << (master_bits - bits)) as f32;
+    let mut row_ids = vec![0i32; d_out];
+    // Accumulator tiles are allocated once and zero-filled per block — no
+    // allocator traffic inside the hot loop.
+    let tile = GEMM_BLOCK.min(m) * d_out;
+    let mut acc32_buf = vec![0i32; tile];
+    let mut acc_buf = vec![0i64; tile];
+    let mut b0 = 0usize;
+    while b0 < m {
+        let mb = GEMM_BLOCK.min(m - b0);
+        let mut cur = BitCursor::new(&packed.data);
+        let acc32 = &mut acc32_buf[..mb * d_out];
+        let acc = &mut acc_buf[..mb * d_out];
+        acc32.fill(0);
+        acc.fill(0);
+        let mut xsum = [0i64; GEMM_BLOCK];
+        for row in 0..d_in {
+            for id in row_ids.iter_mut() {
+                *id = cur.next(bits) as i32;
+            }
+            for b in 0..mb {
+                let xi = xq[(b0 + b) * d_in + row] as i32;
+                xsum[b] += xi as i64;
+                if xi != 0 {
+                    mac_row_i32(&mut acc32[b * d_out..(b + 1) * d_out], &row_ids, xi);
+                }
+            }
+            if (row + 1) % I32_FLUSH_ROWS == 0 {
+                for (wide, narrow) in acc.iter_mut().zip(acc32.iter_mut()) {
+                    *wide += *narrow as i64;
+                    *narrow = 0;
+                }
+            }
+        }
+        for (wide, narrow) in acc.iter_mut().zip(acc32.iter_mut()) {
+            *wide += *narrow as i64;
+            *narrow = 0;
+        }
+        if let Some(ov) = overlay {
+            // Same exact-integer overlay correction as the GEMV path.
+            let top = 1i64 << bits;
+            for &idx in &ov.indices {
+                let i = idx as usize;
+                let (r, c) = (i / d_out, i % d_out);
+                let diff = top - packed.get(i) as i64;
+                for b in 0..mb {
+                    acc[b * d_out + c] += (xq[(b0 + b) * d_in + r] as i64) * diff;
+                }
+            }
+        }
+        for b in 0..mb {
+            let x_scale = x_scales[b0 + b];
+            let sx = x_scale * xsum[b] as f32;
+            let arow = &acc[b * d_out..(b + 1) * d_out];
+            let orow = &mut out[(b0 + b) * d_out..(b0 + b + 1) * d_out];
+            match bias {
+                Some(bs) => {
+                    for j in 0..d_out {
+                        orow[j] = scales.alpha[j]
+                            * (step * x_scale * arow[j] as f32 - scales.zero[j] * sx)
+                            + bs[j];
+                    }
+                }
+                None => {
+                    for j in 0..d_out {
+                        orow[j] = scales.alpha[j]
+                            * (step * x_scale * arow[j] as f32 - scales.zero[j] * sx);
+                    }
+                }
+            }
+        }
+        b0 += mb;
     }
 }
 
@@ -540,6 +706,87 @@ mod tests {
                 &row[..],
                 "batch row {b} diverged from its own matvec"
             );
+        }
+    }
+
+    #[test]
+    fn i8_gemm_blocks_agree_with_per_row_matvec() {
+        // The blocked kernel must be bit-identical to per-row matvec calls
+        // (exact integer accumulation, same epilogue expression), across a
+        // block boundary and with an overlay + per-row scales.
+        let (d_in, d_out, m) = (11, 9, GEMM_BLOCK + 3);
+        for bits in [2u32, 3, 8] {
+            let (packed, overlay) = testing::synth_overlayed(bits.min(7), d_in * d_out, 31);
+            let packed = if bits == 8 {
+                PackedTensor::pack(&testing::synth_ids(8, d_in * d_out, 31), 8)
+            } else {
+                packed
+            };
+            let ov = if bits == 8 { None } else { Some(&overlay) };
+            let scales = testing::synth_scales(d_out, 13, false);
+            let xq: Vec<i8> = (0..m * d_in).map(|i| ((i * 29) % 251) as i64 as i8).collect();
+            let x_scales: Vec<f32> = (0..m).map(|b| 0.01 + 0.003 * b as f32).collect();
+            let bias: Vec<f32> = (0..d_out).map(|j| j as f32 * 0.1 - 0.3).collect();
+            let mut gemm = vec![0.0f32; m * d_out];
+            matmul_packed_i8_into(
+                &packed,
+                ov,
+                &scales,
+                8,
+                d_out,
+                &xq,
+                m,
+                &x_scales,
+                Some(&bias),
+                &mut gemm,
+            );
+            for b in 0..m {
+                let row = matvec_packed_i8(
+                    &packed,
+                    ov,
+                    &scales,
+                    8,
+                    d_out,
+                    &xq[b * d_in..(b + 1) * d_in],
+                    x_scales[b],
+                    Some(&bias),
+                );
+                for j in 0..d_out {
+                    assert_eq!(
+                        gemm[b * d_out + j].to_bits(),
+                        row[j].to_bits(),
+                        "bits={bits} b={b} j={j}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i8_row_tiling_matches_scalar_reference_with_remainder() {
+        // d_out straddles the 8-lane tile (2 full tiles + 3 remainder) so
+        // both the unrolled body and the tail are exercised.
+        let (d_in, d_out) = (29, LANES * 2 + 3);
+        for bits in [1u32, 2, 3, 4, 6, 8] {
+            let ids = testing::synth_ids(bits, d_in * d_out, 17);
+            let packed = PackedTensor::pack(&ids, bits);
+            let scales = testing::synth_scales(d_out, 23, false);
+            let xq: Vec<i8> = (0..d_in).map(|i| ((i * 41) % 255) as i64 as i8).collect();
+            let got = matvec_packed_i8(&packed, None, &scales, 8, d_out, &xq, 0.25, None);
+            let step = (1u32 << (8 - bits)) as f32;
+            let mut xsum = 0i64;
+            let mut acc = vec![0i64; d_out];
+            for i in 0..d_in {
+                xsum += xq[i] as i64;
+                for j in 0..d_out {
+                    acc[j] += (xq[i] as i64) * (ids[i * d_out + j] as i64);
+                }
+            }
+            for j in 0..d_out {
+                let want = scales.alpha[j]
+                    * (step * 0.25 * acc[j] as f32 - scales.zero[j] * (0.25 * xsum as f32));
+                assert_eq!(got[j].to_bits(), want.to_bits(), "bits={bits} j={j}");
+            }
         }
     }
 

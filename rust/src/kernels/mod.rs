@@ -62,6 +62,6 @@ pub mod testing;
 pub use cursor::BitCursor;
 pub use fused::{dequant_packed, dequant_packed_into, slice_dequant, slice_dequant_into};
 pub use matmul::{
-    matmul_packed, matmul_packed_into, matvec_packed, matvec_packed_i8, matvec_packed_i8_into,
-    matvec_packed_into,
+    matmul_packed, matmul_packed_i8_into, matmul_packed_into, matvec_packed, matvec_packed_i8,
+    matvec_packed_i8_into, matvec_packed_into,
 };

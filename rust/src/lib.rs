@@ -31,6 +31,25 @@
 //! (bit-for-bit dequant, property-based matmul); throughput:
 //! `cargo bench --bench quant_hot_paths`.
 //!
+//! ## Host serving path (no PJRT)
+//!
+//! [`runtime::forward`] executes the **whole model** on the host — the
+//! serving worker ([`serve::Server::start_host`]) answers end-to-end
+//! requests with no artifacts and no PJRT:
+//!
+//! ```text
+//!   WeightStore ─► PackedWeight handles ─► runtime::HostForward ─► logits
+//!   (paged r-bit payloads; f32 weight tensors never exist)
+//! ```
+//!
+//! Quantized matmuls stream the fused packed-domain kernels at any
+//! r ∈ {1..8}; requests flagged `int8_acts` also quantize the layer inputs
+//! per token row ([`quant::activations`], absmax or histogram clip) and reduce
+//! through the i8→i32 integer GEMV, so weights *and* activations stay in
+//! the quantized domain.  Conformance against the dense f32 reference
+//! forward: `cargo test --test forward`; throughput (tokens/sec, dense vs
+//! packed vs packed+i8): `cargo bench --bench quant_hot_paths`.
+//!
 //! ## Build
 //!
 //! The build is fully offline: `anyhow` and `xla` resolve to vendored path

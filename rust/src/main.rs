@@ -224,6 +224,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
             preset: preset.clone(),
             max_wait_ms: args.get_f32("wait-ms", 2.0)? as f64,
             warm_bits: vec![8, 4, 2],
+            ..ServerConfig::default()
         },
     )?;
     let n = args.get_usize("requests", 64)?;
@@ -233,11 +234,7 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     for id in 0..n as u64 {
         let bits = [2u32, 4, 8][corpus_rng.below(3)];
         let prompt = corpus.sequence(&mut corpus_rng, seq.min(32));
-        rxs.push(server.submit(Request {
-            id,
-            prompt,
-            precision: PrecisionReq::Bits(bits),
-        })?);
+        rxs.push(server.submit(Request::new(id, prompt, PrecisionReq::Bits(bits)))?);
     }
     let mut ok = 0;
     for rx in rxs {

@@ -5,9 +5,10 @@ pub mod checkpoint;
 pub mod manifest;
 pub mod registry;
 pub mod tensor;
+pub mod testing;
 
 pub use checkpoint::Checkpoint;
-pub use manifest::{ArtifactEntry, Manifest, PresetInfo};
+pub use manifest::{ArtifactEntry, Manifest, ModelDims, PresetInfo};
 pub use registry::{
     packed_payload_bytes, PackedWeight, PrecisionAssignment, QuantizedModel, QuantizedTensor,
 };

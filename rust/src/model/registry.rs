@@ -346,21 +346,29 @@ impl PackedWeight {
         Ok(out)
     }
 
+    /// The OmniQuant `1/s` input-row scaling shared by the f32 and i8
+    /// fused matmul entry points (borrowed pass-through for QAT models) —
+    /// one implementation so the two paths' smoothing numerics cannot
+    /// drift.
+    fn fold_input<'a>(&self, xs: &'a [f32], scratch: &'a mut Vec<f32>) -> &'a [f32] {
+        match &self.inv_smooth {
+            None => xs,
+            Some(inv) => {
+                *scratch = xs
+                    .chunks_exact(self.d_in.max(1))
+                    .flat_map(|row| row.iter().zip(inv).map(|(&x, &i)| x * i))
+                    .collect();
+                &scratch[..]
+            }
+        }
+    }
+
     /// Blocked fused GEMM `out (m, d_out) = xs (m, d_in)·W_r + bias`.
     pub fn matmul_into(&self, xs: &[f32], m: usize, out: &mut [f32]) -> Result<()> {
         ensure!(xs.len() == m * self.d_in, "input length mismatch");
         ensure!(out.len() == m * self.d_out, "output length mismatch");
-        let scaled;
-        let xs = match &self.inv_smooth {
-            None => xs,
-            Some(inv) => {
-                scaled = xs
-                    .chunks_exact(self.d_in.max(1))
-                    .flat_map(|row| row.iter().zip(inv).map(|(&x, &i)| x * i))
-                    .collect::<Vec<f32>>();
-                &scaled[..]
-            }
-        };
+        let mut scratch = Vec::new();
+        let xs = self.fold_input(xs, &mut scratch);
         kernels::matmul_packed_into(
             &self.packed,
             self.overlay_opt(),
@@ -369,6 +377,56 @@ impl PackedWeight {
             self.d_out,
             xs,
             m,
+            self.bias.as_deref(),
+            out,
+        );
+        Ok(())
+    }
+
+    /// Integer-activation fused GEMM: quantize `xs` to symmetric int8 codes
+    /// ([`crate::quant::activations`], after the `1/s` smoothing fold) and
+    /// run the accumulate-in-i32-then-scale GEMV
+    /// ([`crate::kernels::matvec_packed_i8_into`]) — both the weights *and*
+    /// the reduction stay in the integer domain; f32 appears only in the
+    /// per-channel epilogue.
+    ///
+    /// Quantization is **per token row** (one scale per batch row, not one
+    /// over the whole `(m, d_in)` tensor): a row's codes depend only on its
+    /// own activations, so a served request's logits cannot shift with its
+    /// batchmates or with all-zero bucket-padding rows — response identity
+    /// under batching, the property the f32 serving path already has.
+    pub fn matmul_i8_into(
+        &self,
+        xs: &[f32],
+        m: usize,
+        cfg: &crate::quant::ActQuantConfig,
+        out: &mut [f32],
+    ) -> Result<()> {
+        ensure!(xs.len() == m * self.d_in, "input length mismatch");
+        ensure!(out.len() == m * self.d_out, "output length mismatch");
+        let mut scratch = Vec::new();
+        let xs = self.fold_input(xs, &mut scratch);
+        // Quantize row-by-row (independent scales), then one blocked GEMM
+        // call so the packed payload streams once per GEMM_BLOCK rows
+        // instead of once per row.
+        let mut xq = vec![0i8; xs.len()];
+        let mut row_scales = vec![0.0f32; m];
+        for b in 0..m {
+            row_scales[b] = crate::quant::quantize_acts_into(
+                &xs[b * self.d_in..(b + 1) * self.d_in],
+                cfg,
+                &mut xq[b * self.d_in..(b + 1) * self.d_in],
+            );
+        }
+        kernels::matmul_packed_i8_into(
+            &self.packed,
+            self.overlay_opt(),
+            &self.scales,
+            MASTER_BITS,
+            self.d_out,
+            &xq,
+            m,
+            &row_scales,
             self.bias.as_deref(),
             out,
         );
@@ -726,6 +784,51 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn packed_weight_i8_matmul_tracks_dense_within_quant_error() {
+        let fp = toy_weight(11, 48, 16);
+        let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+        let mut rng = Rng::new(77);
+        let xs: Vec<f32> = (0..2 * 48).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        for bits in [4u32, 8] {
+            let pw = qt.packed_weight(bits, false).unwrap();
+            let (w, _) = qt.materialize(bits, false).unwrap();
+            let mut got = vec![0.0f32; 2 * 16];
+            pw.matmul_i8_into(&xs, 2, &crate::quant::ActQuantConfig::absmax(), &mut got)
+                .unwrap();
+            for b in 0..2 {
+                let want = w.vecmat(&xs[b * 48..(b + 1) * 48]).unwrap();
+                let num: f32 = got[b * 16..(b + 1) * 16]
+                    .iter()
+                    .zip(&want)
+                    .map(|(a, c)| (a - c) * (a - c))
+                    .sum();
+                let den = want.iter().map(|c| c * c).sum::<f32>().max(1e-12);
+                let rel = (num / den).sqrt();
+                assert!(rel < 0.05, "bits={bits} row={b}: rel err {rel}");
+            }
+        }
+    }
+
+    #[test]
+    fn i8_matmul_rows_independent_of_batchmates() {
+        // Per-token quantization scales: an outlier in one batch row must
+        // not change another row's result (response identity under
+        // batching for the int8 serving path).
+        let fp = toy_weight(12, 32, 8);
+        let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+        let pw = qt.packed_weight(4, false).unwrap();
+        let mut rng = Rng::new(5);
+        let mut xs: Vec<f32> = (0..2 * 32).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        xs[40] = 50.0; // outlier in row 1
+        let cfg = crate::quant::ActQuantConfig::absmax();
+        let mut batch = vec![0.0f32; 2 * 8];
+        pw.matmul_i8_into(&xs, 2, &cfg, &mut batch).unwrap();
+        let mut solo = vec![0.0f32; 8];
+        pw.matmul_i8_into(&xs[..32], 1, &cfg, &mut solo).unwrap();
+        assert_eq!(&batch[..8], &solo[..], "row 0 saw row 1's outlier");
     }
 
     #[test]

@@ -1,0 +1,107 @@
+//! Artifact-free model fixtures shared by the conformance tests and the
+//! benches (the `kernels::testing` pattern, one level up): a complete
+//! transformer registry model mirroring configs.py's manifest layout —
+//! `embed`/`pos`, per-layer `ln1`/`attn.w{q,k,v,o}`/`ln2`/`ffn.w_{in,out}`,
+//! `ln_f`/`head` — with the FFN weights quantized (plus attention when
+//! `dims.quantize_attn`).  Keeping one copy here means the manifest shape
+//! the host forward pass expects is defined exactly once.
+
+use std::collections::BTreeMap;
+
+use super::manifest::{ModelDims, PresetInfo};
+use super::registry::QuantizedModel;
+use super::tensor::Tensor;
+use crate::data::Rng;
+
+/// Build a [`PresetInfo`] for `dims` in canonical manifest order.
+pub fn toy_transformer_preset(dims: ModelDims) -> PresetInfo {
+    let (v, d, f, t) = (dims.vocab, dims.d_model, dims.d_ff, dims.seq_len);
+    let mut params: Vec<(String, Vec<usize>)> = vec![
+        ("embed".into(), vec![v, d]),
+        ("pos".into(), vec![t, d]),
+    ];
+    let mut quantized = Vec::new();
+    for l in 0..dims.n_layers {
+        let p = format!("layer{l}.");
+        params.push((format!("{p}ln1"), vec![d]));
+        params.push((format!("{p}attn.wq"), vec![d, d]));
+        params.push((format!("{p}attn.wk"), vec![d, d]));
+        params.push((format!("{p}attn.wv"), vec![d, d]));
+        params.push((format!("{p}attn.wo"), vec![d, d]));
+        params.push((format!("{p}ln2"), vec![d]));
+        params.push((format!("{p}ffn.w_in"), vec![d, f]));
+        params.push((format!("{p}ffn.w_out"), vec![f, d]));
+        if dims.quantize_attn {
+            for w in ["wq", "wk", "wv", "wo"] {
+                quantized.push(format!("{p}attn.{w}"));
+            }
+        }
+        quantized.push(format!("{p}ffn.w_in"));
+        quantized.push(format!("{p}ffn.w_out"));
+    }
+    params.push(("ln_f".into(), vec![d]));
+    params.push(("head".into(), vec![d, v]));
+    PresetInfo {
+        model: dims,
+        params,
+        aux: vec![],
+        quantized,
+        train_batch: 1,
+        matquant_bits: vec![8, 4, 2],
+        all_bits: vec![8, 6, 4, 3, 2],
+        fwd_batch_sizes: vec![1, 2, 4],
+    }
+}
+
+/// Deterministic parameters for `preset`: norm scales at 1, 2-D weights
+/// uniform at `fan_in^-1/2` scale, everything else small.
+pub fn toy_transformer_params(preset: &PresetInfo, seed: u64) -> BTreeMap<String, Tensor> {
+    let mut rng = Rng::new(seed);
+    let mut out = BTreeMap::new();
+    for (name, shape) in &preset.params {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = if name.ends_with("ln1") || name.ends_with("ln2") || name == "ln_f" {
+            vec![1.0; n]
+        } else if shape.len() == 2 {
+            let scale = (shape[0] as f32).powf(-0.5);
+            (0..n).map(|_| rng.range_f32(-scale, scale)).collect()
+        } else {
+            (0..n).map(|_| rng.range_f32(-0.02, 0.02)).collect()
+        };
+        out.insert(name.clone(), Tensor::new(shape.clone(), data).unwrap());
+    }
+    out
+}
+
+/// One-call convenience: preset + built registry model.
+pub fn toy_transformer(dims: ModelDims, seed: u64) -> (PresetInfo, QuantizedModel) {
+    let preset = toy_transformer_preset(dims);
+    let params = toy_transformer_params(&preset, seed);
+    let model = QuantizedModel::build(&preset, &params, None).unwrap();
+    (preset, model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fixture_matches_manifest_layout() {
+        let dims = ModelDims {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 16,
+            seq_len: 4,
+            quantize_attn: false,
+        };
+        let (preset, model) = toy_transformer(dims, 1);
+        // 2 + 8·layers + 2 params, FFN pair quantized per layer
+        assert_eq!(preset.params.len(), 2 + 8 * 2 + 2);
+        assert_eq!(preset.quantized.len(), 4);
+        assert_eq!(model.param_order.len(), preset.params.len());
+        assert_eq!(model.quantized_order, preset.quantized);
+        assert!(model.params.contains_key("layer1.attn.wo"));
+    }
+}

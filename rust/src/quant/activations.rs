@@ -1,0 +1,215 @@
+//! Per-tensor int8 activation quantization — the *producer* for the
+//! integer-domain GEMV path ([`crate::kernels::matvec_packed_i8_into`]).
+//!
+//! The i8 kernel has existed since the fused-matmul PR but nothing fed it:
+//! layer activations were always f32.  This module closes the loop so a
+//! forward pass can keep matrix products in the quantized domain end-to-end
+//! (NestQuant / integer-inference style): symmetric per-tensor codes
+//! `x ≈ q·scale` with `q ∈ [−127, 127]`, where the clip range is either the
+//! tensor's absmax or a histogram-derived percentile (the bucketing of
+//! [`crate::quant::histogram::code_histogram`], accumulated allocation-free)
+//! that sheds outlier tails — activation distributions are heavy-tailed,
+//! and one outlier otherwise wastes most of the 8-bit range.
+//!
+//! Non-finite inputs never panic: NaN activations quantize to 0 and a
+//! NaN/zero clip range degenerates to the all-zero code vector, so a
+//! poisoned batch still completes (the serve loop must survive it).
+
+/// Largest symmetric code magnitude (`q ∈ [−ACT_QMAX, ACT_QMAX]`; −128 is
+/// left unused so the range is sign-symmetric).
+pub const ACT_QMAX: i32 = 127;
+
+/// Histogram resolution used by the percentile clip (256 |x| buckets).
+pub const ACT_HIST_BITS: u32 = 8;
+
+/// How the clip range of the symmetric quantizer is chosen.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ActQuantConfig {
+    /// `None` → clip at absmax (exact range, outlier-sensitive).
+    /// `Some(f)` → clip at the smallest |x|-histogram bucket edge covering
+    /// fraction `f` of the entries (outliers beyond it saturate).
+    pub clip_fraction: Option<f32>,
+}
+
+impl Default for ActQuantConfig {
+    fn default() -> Self {
+        ActQuantConfig::absmax()
+    }
+}
+
+impl ActQuantConfig {
+    /// Absmax clip — every value representable, resolution pays for tails.
+    pub fn absmax() -> Self {
+        ActQuantConfig {
+            clip_fraction: None,
+        }
+    }
+
+    /// Histogram clip keeping `fraction` of the |x| mass in range
+    /// (e.g. `0.999`); values beyond the clip saturate at ±[`ACT_QMAX`].
+    pub fn clipped(fraction: f32) -> Self {
+        ActQuantConfig {
+            clip_fraction: Some(fraction),
+        }
+    }
+}
+
+/// A quantized activation tensor: `x[i] ≈ q[i] as f32 * scale`.
+#[derive(Debug, Clone)]
+pub struct QuantizedActs {
+    pub q: Vec<i8>,
+    pub scale: f32,
+}
+
+/// Absmax over finite entries (NaN/±inf contribute nothing — a poisoned
+/// tensor must not poison the clip range).
+fn finite_absmax(x: &[f32]) -> f32 {
+    let mut m = 0.0f32;
+    for &v in x {
+        let a = v.abs();
+        if a.is_finite() && a > m {
+            m = a;
+        }
+    }
+    m
+}
+
+/// Choose the clip threshold for `x` under `cfg`.
+///
+/// The histogram clip buckets `|x|` into `2^ACT_HIST_BITS` bins over
+/// `[0, absmax]` — the same truncate-and-clamp bucketing as
+/// [`crate::quant::code_histogram`], but accumulated directly into a stack
+/// array (this
+/// runs once per token row on the serving hot path, so no `O(n)` id buffer
+/// is materialized) — and returns the upper edge of the first bin whose
+/// cumulative count reaches `clip_fraction` of the entries.  Degenerate
+/// inputs (empty, all-zero, all-NaN) return 0.
+pub fn act_clip(x: &[f32], cfg: &ActQuantConfig) -> f32 {
+    let absmax = finite_absmax(x);
+    if absmax <= 0.0 {
+        return 0.0;
+    }
+    let frac = match cfg.clip_fraction {
+        None => return absmax,
+        Some(f) => f.clamp(0.0, 1.0) as f64,
+    };
+    const BUCKETS: usize = 1 << ACT_HIST_BITS;
+    let to_bucket = (BUCKETS - 1) as f32 / absmax;
+    let mut hist = [0u64; BUCKETS];
+    for &v in x {
+        let a = v.abs();
+        // non-finite: counted in the bottom bin, never widens the clip
+        let b = if a.is_finite() {
+            ((a * to_bucket) as usize).min(BUCKETS - 1)
+        } else {
+            0
+        };
+        hist[b] += 1;
+    }
+    let total: u64 = hist.iter().sum();
+    let keep = frac * total as f64;
+    let mut cum = 0u64;
+    for (i, &c) in hist.iter().enumerate() {
+        cum += c;
+        if cum as f64 >= keep {
+            // True upper edge of bin i under `to_bucket` (id = ⌊|x|·to_bucket⌋),
+            // so every value counted into the kept mass stays inside the clip;
+            // the top bin's edge caps at absmax.
+            return ((i + 1) as f32 / to_bucket).min(absmax);
+        }
+    }
+    absmax
+}
+
+/// Quantize `x` into the caller's i8 buffer; returns the dequantization
+/// `scale` (`x[i] ≈ out[i] as f32 * scale`).
+///
+/// Symmetric round-to-nearest with saturation at ±[`ACT_QMAX`]; NaN inputs
+/// quantize to 0 (the `NaN as i8` cast saturates to 0 by Rust semantics,
+/// which is exactly the graceful behavior the serve loop needs).  A
+/// degenerate clip (all-zero / all-NaN tensor) yields the all-zero code
+/// vector with scale 1.
+pub fn quantize_acts_into(x: &[f32], cfg: &ActQuantConfig, out: &mut [i8]) -> f32 {
+    assert_eq!(x.len(), out.len(), "activation buffer length mismatch");
+    let clip = act_clip(x, cfg);
+    if clip <= 0.0 || !clip.is_finite() {
+        out.fill(0);
+        return 1.0;
+    }
+    let scale = clip / ACT_QMAX as f32;
+    let inv = 1.0 / scale;
+    let lim = ACT_QMAX as f32;
+    for (o, &v) in out.iter_mut().zip(x) {
+        *o = (v * inv).round().clamp(-lim, lim) as i8;
+    }
+    scale
+}
+
+/// Allocating convenience over [`quantize_acts_into`].
+pub fn quantize_acts(x: &[f32], cfg: &ActQuantConfig) -> QuantizedActs {
+    let mut q = vec![0i8; x.len()];
+    let scale = quantize_acts_into(x, cfg, &mut q);
+    QuantizedActs { q, scale }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absmax_roundtrip_error_bounded() {
+        let x: Vec<f32> = (0..257).map(|i| (i as f32 - 128.0) / 37.0).collect();
+        let qa = quantize_acts(&x, &ActQuantConfig::absmax());
+        for (i, &v) in x.iter().enumerate() {
+            let back = qa.q[i] as f32 * qa.scale;
+            assert!(
+                (v - back).abs() <= qa.scale * 0.5 + 1e-6,
+                "x[{i}]={v} back={back} scale={}",
+                qa.scale
+            );
+        }
+    }
+
+    #[test]
+    fn clip_shrinks_scale_with_outlier() {
+        let mut x = vec![0.1f32; 1000];
+        x[500] = 100.0; // one outlier
+        let full = quantize_acts(&x, &ActQuantConfig::absmax());
+        let clipped = quantize_acts(&x, &ActQuantConfig::clipped(0.999));
+        assert!(clipped.scale < full.scale / 10.0, "{} vs {}", clipped.scale, full.scale);
+        // the outlier saturates, everything else gets real resolution
+        assert_eq!(clipped.q[500], ACT_QMAX as i8);
+        assert!(clipped.q[0] != 0, "inliers must not collapse to zero");
+    }
+
+    #[test]
+    fn clip_fraction_one_is_absmax() {
+        let x: Vec<f32> = (0..64).map(|i| (i as f32) * 0.25 - 8.0).collect();
+        let a = act_clip(&x, &ActQuantConfig::absmax());
+        let b = act_clip(&x, &ActQuantConfig::clipped(1.0));
+        // fraction 1.0 lands in the top bucket; its upper edge is absmax
+        assert!((a - b).abs() <= a * (1.0 / 256.0) + 1e-6, "{a} vs {b}");
+    }
+
+    #[test]
+    fn nan_and_inf_quantize_to_zero_without_panicking() {
+        let x = vec![f32::NAN, 1.0, -1.0, f32::INFINITY, f32::NEG_INFINITY];
+        let qa = quantize_acts(&x, &ActQuantConfig::absmax());
+        assert_eq!(qa.q[0], 0);
+        assert_eq!(qa.q[1], ACT_QMAX as i8);
+        assert_eq!(qa.q[2], -(ACT_QMAX as i8));
+        // infinities saturate through the clamp, never widen the clip
+        assert_eq!(qa.q[3], ACT_QMAX as i8);
+        assert_eq!(qa.q[4], -(ACT_QMAX as i8));
+        assert!((qa.scale - 1.0 / ACT_QMAX as f32).abs() < 1e-9);
+    }
+
+    #[test]
+    fn degenerate_tensors_yield_zero_codes() {
+        for x in [vec![], vec![0.0f32; 8], vec![f32::NAN; 8]] {
+            let qa = quantize_acts(&x, &ActQuantConfig::clipped(0.99));
+            assert!(qa.q.iter().all(|&q| q == 0));
+            assert_eq!(qa.scale, 1.0);
+        }
+    }
+}

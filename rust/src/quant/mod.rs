@@ -9,13 +9,17 @@
 //! * MSB slicing `S(q^c, r)` with clamp (Eq. 6) and the Extra-Precision
 //!   variant without clamp (Eq. 8, `2^r + 1` buckets),
 //! * bit-packed storage for 2/3/4/6/8-bit codes plus the sparse
-//!   extra-bit overlay that realizes the paper's 2.05-avg-bits models.
+//!   extra-bit overlay that realizes the paper's 2.05-avg-bits models,
+//! * per-tensor symmetric int8 *activation* quantization (absmax or
+//!   histogram-percentile clip) — the producer for the integer-domain GEMV.
 
+pub mod activations;
 pub mod histogram;
 pub mod minmax;
 pub mod packed;
 pub mod slicing;
 
+pub use activations::{quantize_acts, quantize_acts_into, ActQuantConfig, QuantizedActs};
 pub use histogram::{code_histogram, mean_code, render_histogram, upper_half_mass};
 pub use minmax::{
     col_min_max, dequantize, dequantize_into, minmax_scales, omni_scales, quantize, Scales,

@@ -54,6 +54,14 @@ impl EngineStats {
     }
 }
 
+/// The executable cache should have been populated by `executable()` before
+/// any lookup; if the entry is still missing (a compile raced a cache
+/// clear, or a future refactor breaks the populate-then-fetch contract),
+/// name the `preset/name` key instead of panicking the worker thread.
+fn missing_executable(key: &str) -> anyhow::Error {
+    anyhow::anyhow!("no compiled executable for {key:?} — was it compiled for this preset?")
+}
+
 impl Engine {
     /// Create a CPU engine over an artifacts directory.
     pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Self> {
@@ -117,7 +125,9 @@ impl Engine {
         self.executable(preset, name)?;
         let key = format!("{preset}/{name}");
         let cache = self.cache.borrow();
-        let exe = cache.get(&key).unwrap();
+        let exe = cache
+            .get(&key)
+            .ok_or_else(|| missing_executable(&key))?;
         let t0 = Instant::now();
         let result = exe
             .execute::<xla::Literal>(args)
@@ -142,7 +152,9 @@ impl Engine {
         self.executable(preset, name)?;
         let key = format!("{preset}/{name}");
         let cache = self.cache.borrow();
-        let exe = cache.get(&key).unwrap();
+        let exe = cache
+            .get(&key)
+            .ok_or_else(|| missing_executable(&key))?;
         let t0 = Instant::now();
         let result = exe
             .execute::<&xla::Literal>(args)
@@ -199,7 +211,9 @@ impl Engine {
         self.executable(preset, name)?;
         let key = format!("{preset}/{name}");
         let cache = self.cache.borrow();
-        let exe = cache.get(&key).unwrap();
+        let exe = cache
+            .get(&key)
+            .ok_or_else(|| missing_executable(&key))?;
         let t0 = Instant::now();
         let mut result = exe
             .execute_b(args)

@@ -1,0 +1,432 @@
+//! Host-side forward pass — serve whole requests **without PJRT**.
+//!
+//! Until now the fused packed-domain kernels could only execute a single
+//! linear ([`crate::runtime::Engine::run_packed`]); a full request still
+//! had to flow through the `fwd_b{B}` HLO artifacts, which means PJRT and
+//! a dense f32 weight set per argument build.  This module executes the
+//! complete manifest-ordered model on the host:
+//!
+//! ```text
+//!   tokens ─ embed + pos ─┐
+//!                         ▼            per layer ×N
+//!   x ──► rmsnorm(ln1) ─► attn (wq/wk/wv · causal softmax · wo) ─► +x
+//!     ──► rmsnorm(ln2) ─► ffn.w_in ─► gelu ─► ffn.w_out ─► +x
+//!   x ──► rmsnorm(ln_f) ─► head ─► logits (b, t, vocab)
+//! ```
+//!
+//! Quantized matmuls run straight from [`PackedWeight`] handles through the
+//! fused kernels ([`crate::kernels::matmul`]) — **no f32 weight tensor is
+//! ever constructed** on the packed path, so the weight bytes a request
+//! touches are the `32/r`× smaller paged payloads.  The same forward over a
+//! dense materialized set ([`ForwardWeights::Dense`]) is the f32 reference
+//! the conformance suite (`tests/forward.rs`) checks the packed path
+//! against, bit-width by bit-width.
+//!
+//! With [`ForwardWeights::Packed`]`{ int8: Some(_) }` the quantized-layer
+//! inputs are additionally quantized to symmetric int8 — one scale per
+//! token row ([`crate::quant::activations`] via
+//! [`PackedWeight::matmul_i8_into`]), so co-batched requests cannot
+//! perturb each other — and the reduction runs in the integer domain
+//! end-to-end ([`crate::kernels::matvec_packed_i8_into`]); selectable per
+//! request via [`crate::serve::Request::int8_acts`].
+//!
+//! Numerics mirror `python/compile/model.py` (pre-RMSNorm ε=1e-6, tanh
+//! GELU, learned positions, causal mask); OmniQuant smoothing arrives
+//! pre-folded in the weight handles, so the forward itself is smoothing-
+//! agnostic.  NaN activations propagate to the logits instead of
+//! panicking; greedy decode over such a row uses [`argmax_logit`], which is
+//! total-order and cannot kill the worker.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, ensure};
+
+use crate::model::manifest::ModelDims;
+use crate::model::{PackedWeight, QuantizedModel, Tensor};
+use crate::quant::ActQuantConfig;
+use crate::Result;
+
+/// How quantized matmuls execute inside the host forward pass.
+pub enum ForwardWeights<'a> {
+    /// A dense materialized set (the serving worker's warm builds): weights
+    /// in `param_order`, folded biases in `quantized_order` — the f32
+    /// reference path.
+    Dense {
+        weights: &'a [Tensor],
+        biases: &'a [Tensor],
+    },
+    /// Paged r-bit payload handles: fused packed-domain matmuls, optionally
+    /// with int8 activations for the integer-domain GEMV.
+    Packed {
+        packed: &'a BTreeMap<String, PackedWeight>,
+        int8: Option<ActQuantConfig>,
+    },
+}
+
+/// One host forward-pass executor over a weight view.
+pub struct HostForward<'a> {
+    dims: &'a ModelDims,
+    model: &'a QuantizedModel,
+    weights: ForwardWeights<'a>,
+    param_idx: BTreeMap<&'a str, usize>,
+    bias_idx: BTreeMap<&'a str, usize>,
+}
+
+impl<'a> HostForward<'a> {
+    pub fn new(
+        dims: &'a ModelDims,
+        model: &'a QuantizedModel,
+        weights: ForwardWeights<'a>,
+    ) -> Result<Self> {
+        ensure!(
+            dims.d_model >= 1 && dims.vocab >= 1 && dims.n_heads >= 1,
+            "degenerate model dims"
+        );
+        ensure!(
+            dims.d_model % dims.n_heads == 0,
+            "d_model {} not divisible by n_heads {}",
+            dims.d_model,
+            dims.n_heads
+        );
+        if let ForwardWeights::Dense { weights: w, biases } = &weights {
+            ensure!(
+                w.len() == model.param_order.len(),
+                "dense set has {} weights, manifest wants {}",
+                w.len(),
+                model.param_order.len()
+            );
+            ensure!(
+                biases.len() == model.quantized_order.len(),
+                "dense set has {} biases, manifest wants {}",
+                biases.len(),
+                model.quantized_order.len()
+            );
+        }
+        let param_idx = model
+            .param_order
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.as_str(), i))
+            .collect();
+        let bias_idx = model
+            .quantized_order
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.as_str(), i))
+            .collect();
+        Ok(HostForward {
+            dims,
+            model,
+            weights,
+            param_idx,
+            bias_idx,
+        })
+    }
+
+    /// A non-matmul parameter (embedding table, norm scales, …).
+    fn param(&self, name: &str) -> Result<&Tensor> {
+        match &self.weights {
+            ForwardWeights::Dense { weights, .. } => {
+                let &i = self
+                    .param_idx
+                    .get(name)
+                    .ok_or_else(|| anyhow!("param {name} not in manifest order"))?;
+                Ok(&weights[i])
+            }
+            ForwardWeights::Packed { .. } => self
+                .model
+                .params
+                .get(name)
+                .ok_or_else(|| anyhow!("missing param {name}")),
+        }
+    }
+
+    /// `out (m, d_out) = xs (m, d_in) · W[name] (+ folded bias)` — fused
+    /// packed kernel for quantized weights, naive dense matmul otherwise.
+    fn linear(&self, name: &str, xs: &[f32], m: usize, out: &mut [f32]) -> Result<()> {
+        match &self.weights {
+            ForwardWeights::Dense { weights, biases } => {
+                let &i = self
+                    .param_idx
+                    .get(name)
+                    .ok_or_else(|| anyhow!("param {name} not in manifest order"))?;
+                let bias = self
+                    .bias_idx
+                    .get(name)
+                    .map(|&qi| biases[qi].data.as_slice());
+                dense_matmul(xs, m, &weights[i], bias, out)
+            }
+            ForwardWeights::Packed { packed, int8 } => {
+                if let Some(pw) = packed.get(name) {
+                    match int8 {
+                        Some(cfg) => pw.matmul_i8_into(xs, m, cfg, out),
+                        None => pw.matmul_into(xs, m, out),
+                    }
+                } else {
+                    ensure!(
+                        !self.bias_idx.contains_key(name),
+                        "quantized weight {name} missing from the packed set"
+                    );
+                    let w = self
+                        .model
+                        .params
+                        .get(name)
+                        .ok_or_else(|| anyhow!("missing param {name}"))?;
+                    dense_matmul(xs, m, w, None, out)
+                }
+            }
+        }
+    }
+
+    /// Run the full model over `tokens` (`b` rows × `t` positions,
+    /// row-major); returns logits of shape `(b, t, vocab)`.
+    pub fn forward(&self, tokens: &[i32], b: usize, t: usize) -> Result<Tensor> {
+        let d = self.dims.d_model;
+        let v = self.dims.vocab;
+        let f = self.dims.d_ff;
+        let h = self.dims.n_heads;
+        let dh = d / h;
+        ensure!(tokens.len() == b * t, "token buffer length mismatch");
+        ensure!(
+            t >= 1 && t <= self.dims.seq_len,
+            "sequence length {t} outside [1, {}]",
+            self.dims.seq_len
+        );
+
+        let embed = self.param("embed")?;
+        ensure!(
+            embed.shape == [v, d],
+            "embed shape {:?}, want ({v}, {d})",
+            embed.shape
+        );
+        let pos = self.param("pos")?;
+        ensure!(
+            pos.shape.len() == 2 && pos.shape[0] >= t && pos.shape[1] == d,
+            "pos shape {:?} cannot cover t={t}, d={d}",
+            pos.shape
+        );
+
+        // Embedding lookup + learned positions.
+        let n = b * t;
+        let mut x = vec![0.0f32; n * d];
+        for bi in 0..b {
+            for ti in 0..t {
+                let tok = tokens[bi * t + ti];
+                ensure!(
+                    tok >= 0 && (tok as usize) < v,
+                    "token {tok} outside vocab [0, {v})"
+                );
+                let row = &mut x[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                let erow = &embed.data[tok as usize * d..(tok as usize + 1) * d];
+                let prow = &pos.data[ti * d..(ti + 1) * d];
+                for j in 0..d {
+                    row[j] = erow[j] + prow[j];
+                }
+            }
+        }
+
+        let mut norm = vec![0.0f32; n * d];
+        let mut qb = vec![0.0f32; n * d];
+        let mut kb = vec![0.0f32; n * d];
+        let mut vb = vec![0.0f32; n * d];
+        let mut attn = vec![0.0f32; n * d];
+        let mut proj = vec![0.0f32; n * d];
+        let mut mid = vec![0.0f32; n * f];
+        let mut scores = vec![0.0f32; t];
+        let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+
+        for l in 0..self.dims.n_layers {
+            let p = format!("layer{l}.");
+            // --- attention block: x += wo(softmax(qkᵀ/√dh)·v) ---
+            rmsnorm_rows(&x, &self.param(&format!("{p}ln1"))?.data, d, &mut norm)?;
+            self.linear(&format!("{p}attn.wq"), &norm, n, &mut qb)?;
+            self.linear(&format!("{p}attn.wk"), &norm, n, &mut kb)?;
+            self.linear(&format!("{p}attn.wv"), &norm, n, &mut vb)?;
+            attn.fill(0.0);
+            for bi in 0..b {
+                for head in 0..h {
+                    let hoff = head * dh;
+                    for i in 0..t {
+                        let qo = (bi * t + i) * d + hoff;
+                        let qrow = &qb[qo..qo + dh];
+                        for j in 0..=i {
+                            let ko = (bi * t + j) * d + hoff;
+                            let krow = &kb[ko..ko + dh];
+                            let mut s = 0.0f32;
+                            for c in 0..dh {
+                                s += qrow[c] * krow[c];
+                            }
+                            scores[j] = s * inv_sqrt_dh;
+                        }
+                        // Causal softmax over scores[0..=i], max-subtracted.
+                        // NaN scores propagate as NaN outputs — never panic.
+                        let mut mx = f32::NEG_INFINITY;
+                        for &s in &scores[..=i] {
+                            if s > mx {
+                                mx = s;
+                            }
+                        }
+                        let mut sum = 0.0f32;
+                        for s in scores[..=i].iter_mut() {
+                            *s = (*s - mx).exp();
+                            sum += *s;
+                        }
+                        let inv_sum = if sum > 0.0 { 1.0 / sum } else { 0.0 };
+                        let orow = &mut attn[qo..qo + dh];
+                        for j in 0..=i {
+                            let pj = scores[j] * inv_sum;
+                            if pj == 0.0 {
+                                continue;
+                            }
+                            let vo = (bi * t + j) * d + hoff;
+                            let vrow = &vb[vo..vo + dh];
+                            for c in 0..dh {
+                                orow[c] += pj * vrow[c];
+                            }
+                        }
+                    }
+                }
+            }
+            self.linear(&format!("{p}attn.wo"), &attn, n, &mut proj)?;
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += pi;
+            }
+            // --- FFN block: x += w_out(gelu(w_in(rmsnorm(x)))) ---
+            rmsnorm_rows(&x, &self.param(&format!("{p}ln2"))?.data, d, &mut norm)?;
+            self.linear(&format!("{p}ffn.w_in"), &norm, n, &mut mid)?;
+            gelu_inplace(&mut mid);
+            self.linear(&format!("{p}ffn.w_out"), &mid, n, &mut proj)?;
+            for (xi, pi) in x.iter_mut().zip(&proj) {
+                *xi += pi;
+            }
+        }
+
+        rmsnorm_rows(&x, &self.param("ln_f")?.data, d, &mut norm)?;
+        let mut logits = vec![0.0f32; n * v];
+        self.linear("head", &norm, n, &mut logits)?;
+        Tensor::new(vec![b, t, v], logits)
+    }
+}
+
+/// Naive row-major dense matmul `out (m, d_out) = xs (m, d_in)·w (+ bias)`
+/// — the f32 reference the packed kernels are checked against; bias is
+/// added in the epilogue, matching the fused kernels' evaluation order.
+fn dense_matmul(
+    xs: &[f32],
+    m: usize,
+    w: &Tensor,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) -> Result<()> {
+    let (d_in, d_out) = w.dims2()?;
+    ensure!(xs.len() == m * d_in, "dense matmul input length mismatch");
+    ensure!(out.len() == m * d_out, "dense matmul output length mismatch");
+    if let Some(bs) = bias {
+        ensure!(bs.len() == d_out, "dense matmul bias length mismatch");
+    }
+    for b in 0..m {
+        let orow = &mut out[b * d_out..(b + 1) * d_out];
+        orow.fill(0.0);
+        for i in 0..d_in {
+            let xv = xs[b * d_in + i];
+            if xv == 0.0 {
+                continue;
+            }
+            let wrow = &w.data[i * d_out..(i + 1) * d_out];
+            for (o, &wv) in orow.iter_mut().zip(wrow) {
+                *o += xv * wv;
+            }
+        }
+        if let Some(bs) = bias {
+            for (o, &bv) in orow.iter_mut().zip(bs) {
+                *o += bv;
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Pre-RMSNorm (ε = 1e-6, matching the L2 model) applied row-wise.
+fn rmsnorm_rows(x: &[f32], scale: &[f32], d: usize, out: &mut [f32]) -> Result<()> {
+    ensure!(scale.len() == d, "norm scale length mismatch");
+    ensure!(x.len() == out.len(), "norm buffer length mismatch");
+    for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
+        let ms = row.iter().map(|&v| v * v).sum::<f32>() / d as f32;
+        let inv = 1.0 / (ms + 1e-6).sqrt();
+        for ((o, &xv), &s) in orow.iter_mut().zip(row).zip(scale) {
+            *o = xv * inv * s;
+        }
+    }
+    Ok(())
+}
+
+/// Tanh-approximation GELU (`jax.nn.gelu`'s default, which the L2
+/// artifacts bake in): `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`.
+fn gelu_inplace(x: &mut [f32]) {
+    const SQRT_2_OVER_PI: f32 = 0.797_884_56;
+    for v in x.iter_mut() {
+        let u = *v;
+        let t = (SQRT_2_OVER_PI * (u + 0.044_715 * u * u * u)).tanh();
+        *v = 0.5 * u * (1.0 + t);
+    }
+}
+
+/// NaN-safe greedy decode over one logit row: total-order argmax (a NaN
+/// logit is selected deterministically instead of aborting the worker, as
+/// `partial_cmp(..).unwrap()` used to); an empty row yields `(0, −∞)`.
+pub fn argmax_logit(row: &[f32]) -> (i32, f32) {
+    row.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.total_cmp(b.1))
+        .map(|(i, &l)| (i as i32, l))
+        .unwrap_or((0, f32::NEG_INFINITY))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn argmax_survives_nan_and_empty_rows() {
+        assert_eq!(argmax_logit(&[]), (0, f32::NEG_INFINITY));
+        assert_eq!(argmax_logit(&[0.5, 2.0, -1.0]), (1, 2.0));
+        // all-NaN: deterministic index, no panic
+        let (i, l) = argmax_logit(&[f32::NAN, f32::NAN]);
+        assert!(l.is_nan());
+        assert!(i == 0 || i == 1);
+        // mixed: total_cmp orders NaN above +inf — still no panic, and the
+        // response carries the poison visibly instead of killing the worker
+        let (_, l) = argmax_logit(&[1.0, f32::NAN, 3.0]);
+        assert!(l.is_nan());
+    }
+
+    #[test]
+    fn rmsnorm_unit_rows() {
+        // constant row of c: mean square = c², so out ≈ sign preserved, |1|
+        let x = vec![2.0f32; 8];
+        let scale = vec![1.0f32; 4];
+        let mut out = vec![0.0f32; 8];
+        rmsnorm_rows(&x, &scale, 4, &mut out).unwrap();
+        for &o in &out {
+            assert!((o - 1.0).abs() < 1e-3, "{o}");
+        }
+    }
+
+    #[test]
+    fn gelu_matches_known_points() {
+        let mut x = vec![0.0f32, 1.0, -1.0, 3.0];
+        gelu_inplace(&mut x);
+        assert_eq!(x[0], 0.0);
+        assert!((x[1] - 0.841_192).abs() < 1e-4, "{}", x[1]);
+        assert!((x[2] + 0.158_808).abs() < 1e-4, "{}", x[2]);
+        assert!((x[3] - 2.996_36).abs() < 1e-3, "{}", x[3]);
+    }
+
+    #[test]
+    fn dense_matmul_epilogue_bias() {
+        let w = Tensor::new(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        let mut out = vec![0.0f32; 3];
+        dense_matmul(&[1.0, 10.0], 1, &w, Some(&[0.5, 0.5, 0.5]), &mut out).unwrap();
+        assert_eq!(out, vec![41.5, 52.5, 63.5]);
+    }
+}

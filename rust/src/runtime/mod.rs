@@ -1,8 +1,16 @@
-//! PJRT runtime — loads `artifacts/*.hlo.txt`, compiles once, executes from
-//! the coordinator hot path.  Python never runs here.
+//! Runtime execution paths.  Two ways to run the model:
+//!
+//! * [`engine`] — the PJRT path: loads `artifacts/*.hlo.txt`, compiles
+//!   once, executes from the coordinator hot path.  Python never runs here.
+//! * [`forward`] — the **host** path: the full forward pass executed on the
+//!   CPU straight from [`crate::model::PackedWeight`] payload handles via
+//!   the fused packed-domain kernels — no artifacts, no PJRT, no f32
+//!   weight tensors; optional end-to-end int8 activations.
 
 pub mod engine;
+pub mod forward;
 pub mod literal;
 
 pub use engine::Engine;
+pub use forward::{argmax_logit, ForwardWeights, HostForward};
 pub use literal::{lit_i32, lit_scalar_i32, lit_tensor, tensor_from_literal};

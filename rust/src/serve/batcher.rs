@@ -1,7 +1,10 @@
-//! Dynamic micro-batching: group pending requests by precision, flush on
-//! size or age, pad to the nearest exported batch bucket.
+//! Dynamic micro-batching: group pending requests by precision **and**
+//! activation mode, flush on size or age, pad to the nearest exported batch
+//! bucket.  f32- and int8-activation requests at the same bit-width never
+//! share a batch (their numerics differ), so the queue key is
+//! `(bits, int8_acts)`.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
 
 use super::request::Request;
@@ -10,6 +13,8 @@ use super::request::Request;
 #[derive(Debug)]
 pub struct ReadyBatch {
     pub bits: u32,
+    /// Whether every request in this batch asked for int8 activations.
+    pub int8: bool,
     pub requests: Vec<(Request, Instant)>,
     /// Bucketed batch size (≥ requests.len()).
     pub bucket: usize,
@@ -18,7 +23,7 @@ pub struct ReadyBatch {
 /// Precision-aware micro-batcher.
 #[derive(Debug)]
 pub struct DynamicBatcher {
-    queues: BTreeMap<u32, Vec<(Request, Instant)>>,
+    queues: BTreeMap<(u32, bool), Vec<(Request, Instant)>>,
     pub max_batch: usize,
     pub max_wait_ms: f64,
     buckets: Vec<usize>,
@@ -36,9 +41,9 @@ impl DynamicBatcher {
     }
 
     pub fn push(&mut self, req: Request) {
-        let bits = req.precision.bits();
+        let key = (req.precision.bits(), req.int8_acts);
         self.queues
-            .entry(bits)
+            .entry(key)
             .or_default()
             .push((req, Instant::now()));
     }
@@ -50,11 +55,24 @@ impl DynamicBatcher {
     /// Precisions with at least one queued request — the worker's page-in
     /// prefetch hint: payloads for these can be built while the batch
     /// window is still open, keeping lazy builds off the critical path.
+    /// (Deduplicated across activation modes — paging is per-precision.)
     pub fn queued_precisions(&self) -> Vec<u32> {
         self.queues
             .iter()
             .filter(|(_, q)| !q.is_empty())
-            .map(|(&b, _)| b)
+            .map(|(&(b, _), _)| b)
+            .collect::<BTreeSet<u32>>()
+            .into_iter()
+            .collect()
+    }
+
+    /// Precisions with queued int8-activation work (these need a *packed*
+    /// build even if a dense warm set already covers the bit-width).
+    pub fn queued_int8_precisions(&self) -> Vec<u32> {
+        self.queues
+            .iter()
+            .filter(|(&(_, int8), q)| int8 && !q.is_empty())
+            .map(|(&(b, _), _)| b)
             .collect()
     }
 
@@ -71,8 +89,8 @@ impl DynamicBatcher {
     /// Pop a batch if any queue is full or its oldest entry exceeded the
     /// wait window.  Full queues win; ties break toward the oldest.
     pub fn pop_ready(&mut self, now: Instant) -> Option<ReadyBatch> {
-        let mut candidate: Option<(u32, bool, f64)> = None; // (bits, full, age)
-        for (&bits, q) in &self.queues {
+        let mut candidate: Option<((u32, bool), bool, f64)> = None; // (key, full, age)
+        for (&key, q) in &self.queues {
             if q.is_empty() {
                 continue;
             }
@@ -87,16 +105,19 @@ impl DynamicBatcher {
                 Some((_, cfull, cage)) => (full && !cfull) || (full == cfull && age > cage),
             };
             if better {
-                candidate = Some((bits, full, age));
+                candidate = Some((key, full, age));
             }
         }
-        let (bits, _, _) = candidate?;
-        let q = self.queues.get_mut(&bits).unwrap();
+        let (key, _, _) = candidate?;
+        // A vanished queue (unknown precision) yields no batch instead of
+        // panicking the worker thread.
+        let q = self.queues.get_mut(&key)?;
         let take = q.len().min(self.max_batch);
         let requests: Vec<_> = q.drain(..take).collect();
         let bucket = self.bucket_for(requests.len());
         Some(ReadyBatch {
-            bits,
+            bits: key.0,
+            int8: key.1,
             requests,
             bucket,
         })
@@ -105,7 +126,7 @@ impl DynamicBatcher {
     /// Flush everything regardless of age (shutdown path).
     pub fn drain_all(&mut self) -> Vec<ReadyBatch> {
         let mut out = Vec::new();
-        let bits_list: Vec<u32> = self.queues.keys().copied().collect();
+        let keys: Vec<(u32, bool)> = self.queues.keys().copied().collect();
         let buckets = self.buckets.clone();
         let max_batch = self.max_batch;
         let bucket_for = |n: usize| {
@@ -116,14 +137,17 @@ impl DynamicBatcher {
                 .min()
                 .unwrap_or(max_batch)
         };
-        for bits in bits_list {
-            let q = self.queues.get_mut(&bits).unwrap();
+        for key in keys {
+            let Some(q) = self.queues.get_mut(&key) else {
+                continue;
+            };
             while !q.is_empty() {
                 let take = q.len().min(max_batch);
                 let requests: Vec<_> = q.drain(..take).collect();
                 let bucket = bucket_for(requests.len());
                 out.push(ReadyBatch {
-                    bits,
+                    bits: key.0,
+                    int8: key.1,
                     requests,
                     bucket,
                 });
@@ -143,6 +167,14 @@ mod tests {
             id,
             prompt: vec![1, 2, 3],
             precision: PrecisionReq::Bits(bits),
+            int8_acts: false,
+        }
+    }
+
+    fn req_i8(id: u64, bits: u32) -> Request {
+        Request {
+            int8_acts: true,
+            ..req(id, bits)
         }
     }
 
@@ -163,6 +195,7 @@ mod tests {
         }
         let ready = b.pop_ready(Instant::now()).expect("full queue ready");
         assert_eq!(ready.bits, 4);
+        assert!(!ready.int8);
         assert_eq!(ready.requests.len(), 4);
         assert_eq!(b.pending(), 0);
     }
@@ -192,6 +225,33 @@ mod tests {
         assert!(first.requests.iter().all(|(r, _)| r.precision.bits() == first.bits));
         let second = b.pop_ready(Instant::now()).unwrap();
         assert_ne!(first.bits, second.bits);
+    }
+
+    #[test]
+    fn activation_modes_never_mix() {
+        // Same bit-width, different activation mode → two separate batches.
+        let mut b = DynamicBatcher::new(vec![1, 2, 4], 0.0);
+        b.push(req(0, 4));
+        b.push(req_i8(1, 4));
+        b.push(req(2, 4));
+        let first = b.pop_ready(Instant::now()).unwrap();
+        let second = b.pop_ready(Instant::now()).unwrap();
+        assert_eq!(first.bits, 4);
+        assert_eq!(second.bits, 4);
+        assert_ne!(first.int8, second.int8);
+        for batch in [&first, &second] {
+            assert!(batch
+                .requests
+                .iter()
+                .all(|(r, _)| r.int8_acts == batch.int8));
+        }
+        assert_eq!(b.pending(), 0);
+        // prefetch hints: one precision, and it is flagged for int8 paging
+        let mut b2 = DynamicBatcher::new(vec![1, 2, 4], 1000.0);
+        b2.push(req(0, 4));
+        b2.push(req_i8(1, 4));
+        assert_eq!(b2.queued_precisions(), vec![4]);
+        assert_eq!(b2.queued_int8_precisions(), vec![4]);
     }
 
     #[test]

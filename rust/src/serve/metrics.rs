@@ -94,8 +94,10 @@ impl Metrics {
         if self.latencies_ms.is_empty() {
             return 0.0;
         }
+        // total_cmp: a NaN latency (clock skew, poisoned batch) sorts to the
+        // end instead of panicking the worker mid-report.
         let mut v = self.latencies_ms.clone();
-        v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        v.sort_by(|a, b| a.total_cmp(b));
         let idx = ((v.len() as f64 - 1.0) * p / 100.0).round() as usize;
         v[idx]
     }
@@ -156,6 +158,17 @@ impl Metrics {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn percentile_survives_nan_latency() {
+        let mut m = Metrics::default();
+        m.record(1.0, 4, 1);
+        m.record(f64::NAN, 4, 1);
+        m.record(3.0, 4, 1);
+        // NaN sorts last under total order — p50 is finite, nothing panics
+        assert_eq!(m.percentile(50.0), 3.0);
+        assert!(m.percentile(100.0).is_nan());
+    }
 
     #[test]
     fn percentiles_ordered() {

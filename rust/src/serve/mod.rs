@@ -2,11 +2,25 @@
 //! request chooses its accuracy/latency/memory point.
 //!
 //! Architecture (vLLM-router-like, scaled to one host):
-//!   client → [Router] → per-precision queues → [DynamicBatcher]
+//!
+//! ```text
+//!   client → [Router] → per-(precision, act-mode) queues → [DynamicBatcher]
 //!          → [WeightStore]: warm dense f32 sets + lazily *paged* r-bit
 //!            payloads (pack_sliced codes, no f32 weight set)
-//!          → bucketed `fwd_b{B}` PJRT executables (worker thread owns the
-//!            Engine, which is not Send) → responses via channels.
+//!          → backend (worker thread owns it) → responses via channels
+//!
+//!   PJRT backend (Server::start):
+//!     WeightStore ─ batch_args (paged: decode 1 tensor at a time) ─►
+//!     bucketed `fwd_b{B}` executables ─► logits
+//!
+//!   Host backend (Server::start_host — no artifacts, no PJRT):
+//!     WeightStore ─► PackedWeight handles ─► runtime::HostForward
+//!       (embedding → per-layer fused packed matmuls + attention/residual
+//!        glue → logits), any r ∈ {1..8}; f32 weight tensors never exist.
+//!     Request { int8_acts } additionally quantizes the quantized-layer
+//!     inputs (quant::activations, absmax / histogram clip) and reduces
+//!     in the integer domain (kernels i8→i32 GEMV).
+//! ```
 
 pub mod batcher;
 pub mod metrics;

@@ -27,6 +27,26 @@ pub struct Request {
     pub id: u64,
     pub prompt: Vec<i32>,
     pub precision: PrecisionReq,
+    /// Host-serving path only: quantize the quantized-layer inputs to
+    /// symmetric int8 (one scale per token row) and run the integer-domain
+    /// GEMV end-to-end (weights *and* activations quantized).  Requests
+    /// with and without the flag never share a batch, and a request's
+    /// logits never depend on its batchmates.  The PJRT backend rejects
+    /// flagged requests at submit (response channel closes) rather than
+    /// silently serving them as f32.
+    pub int8_acts: bool,
+}
+
+impl Request {
+    /// Plain f32-activation request (the common case).
+    pub fn new(id: u64, prompt: Vec<i32>, precision: PrecisionReq) -> Self {
+        Request {
+            id,
+            prompt,
+            precision,
+            int8_acts: false,
+        }
+    }
 }
 
 /// Next-token result + serving telemetry.
@@ -37,9 +57,11 @@ pub struct Response {
     /// Greedy-decode logit of the chosen token.
     pub logit: f32,
     pub bits: u32,
+    /// Whether the integer-activation path served this request.
+    pub int8_acts: bool,
     /// Queue + batch wait, ms.
     pub queue_ms: f64,
-    /// PJRT execution share attributed to this request, ms.
+    /// Execution share attributed to this request, ms (PJRT or host).
     pub compute_ms: f64,
     /// Size of the batch this request rode in.
     pub batch_size: usize,

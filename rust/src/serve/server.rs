@@ -1,6 +1,18 @@
-//! The serving worker: a dedicated thread owns the (non-Send) PJRT engine
-//! and materialized weight sets; clients submit requests through an mpsc
+//! The serving worker: a dedicated thread owns the backend — either the
+//! (non-Send) PJRT engine or the **host packed forward pass** — plus the
+//! per-precision weight sets; clients submit requests through an mpsc
 //! channel and receive responses on per-request channels.
+//!
+//! Two backends, one worker loop:
+//!
+//! * [`Server::start`] — PJRT: batches run the `fwd_b{B}` HLO artifacts;
+//!   weight sets convert to literals per batch (warm dense or paged).
+//! * [`Server::start_host`] — host: batches run
+//!   [`crate::runtime::HostForward`] straight from the [`WeightStore`] —
+//!   paged precisions execute fused packed-domain matmuls with **no f32
+//!   weight tensor and no artifacts at all**, at any r ∈ {1..8}; requests
+//!   flagged [`Request::int8_acts`] additionally run quantized activations
+//!   through the integer-domain GEMV.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
@@ -13,8 +25,9 @@ use super::batcher::{DynamicBatcher, ReadyBatch};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 use super::weights::WeightStore;
-use crate::model::QuantizedModel;
-use crate::runtime::{lit_i32, Engine};
+use crate::model::{PresetInfo, QuantizedModel};
+use crate::quant::ActQuantConfig;
+use crate::runtime::{argmax_logit, lit_i32, Engine, HostForward};
 use crate::Result;
 
 #[derive(Debug, Clone)]
@@ -22,8 +35,16 @@ pub struct ServerConfig {
     pub preset: String,
     /// Micro-batch window in ms.
     pub max_wait_ms: f64,
-    /// Precisions to pre-materialize (others are built lazily).
+    /// Precisions to pre-materialize as dense f32 sets (others are built
+    /// lazily as paged r-bit payloads).  On the **host** backend a warm
+    /// precision serves through the dense f32 reference matmul — exact
+    /// f32 numerics at full f32 residency; pass `warm_bits: vec![]` to
+    /// serve every precision through the fused packed kernels instead
+    /// (`32/r`× fewer resident weight bytes).
     pub warm_bits: Vec<u32>,
+    /// Clip policy for the int8-activation host path (absmax by default;
+    /// histogram clip sheds outlier tails).
+    pub act_quant: ActQuantConfig,
 }
 
 impl Default for ServerConfig {
@@ -32,8 +53,17 @@ impl Default for ServerConfig {
             preset: "tiny".into(),
             max_wait_ms: 2.0,
             warm_bits: vec![8, 4, 2],
+            act_quant: ActQuantConfig::absmax(),
         }
     }
+}
+
+/// What executes a ready batch.
+enum Backend {
+    /// Compiled `fwd_b{B}` artifacts through the PJRT engine.
+    Pjrt(Engine),
+    /// The host packed forward pass — no artifacts, no PJRT.
+    Host,
 }
 
 enum Msg {
@@ -50,8 +80,8 @@ pub struct Server {
 }
 
 impl Server {
-    /// Boot the worker.  The PJRT engine is *not* `Send` (Rc + raw
-    /// pointers), so the worker thread constructs its own from
+    /// Boot a PJRT-backed worker.  The PJRT engine is *not* `Send` (Rc +
+    /// raw pointers), so the worker thread constructs its own from
     /// `artifacts_dir`; the quantized model registry is plain data and
     /// moves in.
     pub fn start(
@@ -64,20 +94,50 @@ impl Server {
         let worker = std::thread::Builder::new()
             .name("mq-serve-worker".into())
             .spawn(move || {
+                // The boot ack is sent only after BOTH the engine and the
+                // preset lookup succeed, so a bad preset name surfaces as
+                // an error from `start()` instead of a dead worker behind
+                // an opaque closed-channel error.
                 let engine = match Engine::new(&artifacts_dir) {
-                    Ok(e) => {
-                        let _ = boot_tx.send(Ok(()));
-                        e
-                    }
+                    Ok(e) => e,
                     Err(e) => {
                         let _ = boot_tx.send(Err(e));
                         return;
                     }
                 };
-                worker_loop(engine, model, cfg, rx)
+                let preset = match engine.manifest().preset(&cfg.preset) {
+                    Ok(p) => p.clone(),
+                    Err(e) => {
+                        let _ = boot_tx.send(Err(e));
+                        return;
+                    }
+                };
+                let _ = boot_tx.send(Ok(()));
+                worker_loop(Backend::Pjrt(engine), preset, model, cfg, rx)
             })
             .context("spawning serve worker")?;
         boot_rx.recv().context("worker boot")??;
+        Ok(Server {
+            tx,
+            worker: Some(worker),
+        })
+    }
+
+    /// Boot a **host-backed** worker: whole requests are answered by the
+    /// host packed forward pass from the paged `WeightStore` — no
+    /// artifacts directory, no PJRT, no f32 weight set for lazily-built
+    /// precisions.  `preset` supplies the model dimensions and batch
+    /// buckets that the manifest would otherwise provide.
+    pub fn start_host(
+        preset: PresetInfo,
+        model: QuantizedModel,
+        cfg: ServerConfig,
+    ) -> Result<Server> {
+        let (tx, rx) = mpsc::channel::<Msg>();
+        let worker = std::thread::Builder::new()
+            .name("mq-serve-worker".into())
+            .spawn(move || worker_loop(Backend::Host, preset, model, cfg, rx))
+            .context("spawning host serve worker")?;
         Ok(Server {
             tx,
             worker: Some(worker),
@@ -125,14 +185,13 @@ impl Drop for Server {
     }
 }
 
-fn worker_loop(engine: Engine, model: QuantizedModel, cfg: ServerConfig, rx: Receiver<Msg>) {
-    let preset = match engine.manifest().preset(&cfg.preset) {
-        Ok(p) => p.clone(),
-        Err(e) => {
-            eprintln!("serve worker: {e:#}");
-            return;
-        }
-    };
+fn worker_loop(
+    backend: Backend,
+    preset: PresetInfo,
+    model: QuantizedModel,
+    cfg: ServerConfig,
+    rx: Receiver<Msg>,
+) {
     let seq = preset.model.seq_len;
     let vocab = preset.model.vocab;
     let mut batcher = DynamicBatcher::new(preset.fwd_batch_sizes.clone(), cfg.max_wait_ms);
@@ -143,8 +202,10 @@ fn worker_loop(engine: Engine, model: QuantizedModel, cfg: ServerConfig, rx: Rec
     // Warm precisions decode a dense f32 set at boot (build latency is
     // free there).  Every other precision is built lazily by *paging in*
     // the r-bit `pack_sliced` payloads — `32/r`× fewer resident weight
-    // bytes than a dense set, no f32 weight buffers allocated — and is
-    // decoded tensor-by-tensor only while batch arguments are built.
+    // bytes than a dense set, no f32 weight buffers allocated.  The PJRT
+    // backend decodes paged sets tensor-by-tensor at batch-arg build; the
+    // host backend streams them through the fused matmul kernels with no
+    // decode at all.
     for &b in &cfg.warm_bits {
         if let Err(e) = store.build_warm(&model, b, &mut metrics) {
             eprintln!("serve worker: materialize int{b}: {e:#}");
@@ -152,13 +213,48 @@ fn worker_loop(engine: Engine, model: QuantizedModel, cfg: ServerConfig, rx: Rec
     }
 
     let mut running = true;
-    while running || batcher.pending() > 0 {
+    // Shutdown flush: `drain_all` empties every queue at once, so the
+    // batches it returns must all be executed — parking them here (instead
+    // of taking the first and dropping the rest, which silently lost the
+    // other precisions' requests) keeps every waiter answered.
+    let mut drained: std::collections::VecDeque<ReadyBatch> = std::collections::VecDeque::new();
+    while running || batcher.pending() > 0 || !drained.is_empty() {
         let timeout = Duration::from_micros((cfg.max_wait_ms * 500.0) as u64 + 100);
         if running {
             match rx.recv_timeout(timeout) {
                 Ok(Msg::Submit(req, tx)) => {
-                    waiters.insert(req.id, tx);
-                    batcher.push(req);
+                    // Validate up front: rejecting a bad request here (the
+                    // dropped sender surfaces as a recv error on the
+                    // client) keeps it out of a batch, so it cannot fail
+                    // innocent batchmates downstream.  int8 activations
+                    // are a host-path feature — the PJRT backend rejects
+                    // the flag instead of silently serving f32 from a
+                    // needlessly fragmented (bits, int8) queue.
+                    // Only the first `seq` tokens reach the forward pass
+                    // (`fill_tokens` truncates), so tokens in the clipped
+                    // tail must not fail a request they cannot affect.
+                    let bad_token = req
+                        .prompt
+                        .iter()
+                        .take(seq)
+                        .find(|&&t| t < 0 || t as usize >= vocab)
+                        .copied();
+                    if let Some(bad) = bad_token {
+                        eprintln!(
+                            "serve worker: request {}: token {bad} outside vocab [0, {vocab}) — rejected",
+                            req.id
+                        );
+                        drop(tx);
+                    } else if req.int8_acts && !matches!(backend, Backend::Host) {
+                        eprintln!(
+                            "serve worker: request {}: int8 activations need the host backend — rejected",
+                            req.id
+                        );
+                        drop(tx);
+                    } else {
+                        waiters.insert(req.id, tx);
+                        batcher.push(req);
+                    }
                 }
                 Ok(Msg::Report(tx)) => {
                     let _ = tx.send(metrics.report());
@@ -177,10 +273,21 @@ fn worker_loop(engine: Engine, model: QuantizedModel, cfg: ServerConfig, rx: Rec
                 }
             }
         }
+        // int8 requests need packed handles even at warm (dense) precisions.
+        if matches!(backend, Backend::Host) {
+            for b in batcher.queued_int8_precisions() {
+                if let Err(e) = store.ensure_packed(&model, b, &mut metrics) {
+                    eprintln!("serve worker: packed build int{b}: {e:#}");
+                }
+            }
+        }
         let ready = if running {
             batcher.pop_ready(Instant::now())
         } else {
-            batcher.drain_all().into_iter().next()
+            if drained.is_empty() {
+                drained.extend(batcher.drain_all());
+            }
+            drained.pop_front()
         };
         if let Some(batch) = ready {
             if !store.contains(batch.bits) {
@@ -188,25 +295,106 @@ fn worker_loop(engine: Engine, model: QuantizedModel, cfg: ServerConfig, rx: Rec
                     eprintln!("serve worker: page-in int{}: {e:#}", batch.bits);
                 }
             }
-            if let Err(e) = execute_batch(
-                &engine,
-                &cfg.preset,
-                seq,
-                vocab,
-                &store,
-                &model,
-                batch,
-                &mut waiters,
-                &mut metrics,
-            ) {
+            // (int8 packed handles were provisioned by the prefetch loop
+            // above while this batch's requests were still queued.)
+            let member_ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
+            let result = match &backend {
+                Backend::Pjrt(engine) => execute_batch_pjrt(
+                    engine,
+                    &cfg.preset,
+                    seq,
+                    vocab,
+                    &store,
+                    &model,
+                    batch,
+                    &mut waiters,
+                    &mut metrics,
+                ),
+                Backend::Host => execute_batch_host(
+                    &preset,
+                    &cfg,
+                    &store,
+                    &model,
+                    batch,
+                    &mut waiters,
+                    &mut metrics,
+                ),
+            };
+            if let Err(e) = result {
                 eprintln!("serve worker: batch failed: {e:#}");
+                // Close the batch members' response channels: clients get a
+                // recv error instead of hanging forever on a batch a single
+                // malformed request (e.g. an out-of-vocab token) poisoned.
+                for id in member_ids {
+                    waiters.remove(&id);
+                }
             }
         }
     }
 }
 
+/// Pad-and-pack a batch's prompts into a `(rows, t)` token buffer; returns
+/// the buffer and each request's last prompt position (an empty prompt
+/// reads position 0 of the all-pad row — it round-trips instead of
+/// erroring).  PJRT passes the fixed executable shape `(bucket, seq_len)`;
+/// the host path passes the tight `(n_requests, longest prompt)`.
+fn fill_tokens(batch: &ReadyBatch, rows: usize, t: usize) -> (Vec<i32>, Vec<usize>) {
+    let mut tokens = vec![0i32; rows * t];
+    let mut last_pos = vec![0usize; rows];
+    for (i, (req, _)) in batch.requests.iter().enumerate() {
+        let n = req.prompt.len().min(t);
+        tokens[i * t..i * t + n].copy_from_slice(&req.prompt[..n]);
+        last_pos[i] = n.saturating_sub(1);
+    }
+    (tokens, last_pos)
+}
+
+/// Greedy-decode each request's next token from the batch logits and send
+/// the responses.  `enq.elapsed()` is read **once** per request so the
+/// reported `queue_ms` and the latency metric cannot drift apart; the
+/// argmax is total-order ([`argmax_logit`]) so a NaN logit yields a
+/// response instead of killing the worker thread.
 #[allow(clippy::too_many_arguments)]
-fn execute_batch(
+fn respond_greedy(
+    logits: &[f32],
+    t: usize, // positions per logits row (seq_len for PJRT, tight t for host)
+    vocab: usize,
+    batch_bits: u32,
+    batch_int8: bool,
+    requests: Vec<(Request, Instant)>,
+    last_pos: &[usize],
+    compute_ms: f64,
+    waiters: &mut BTreeMap<u64, Sender<Response>>,
+    metrics: &mut Metrics,
+) {
+    let n_req = requests.len();
+    for (i, (req, enq)) in requests.into_iter().enumerate() {
+        let row_start = (i * t + last_pos[i]) * vocab;
+        let row = &logits[row_start..row_start + vocab];
+        let (next_token, logit) = argmax_logit(row);
+        let total_ms = enq.elapsed().as_secs_f64() * 1e3;
+        let queue_ms = total_ms - compute_ms;
+        metrics.record(total_ms, batch_bits, n_req);
+        if let Some(tx) = waiters.remove(&req.id) {
+            let _ = tx.send(Response {
+                id: req.id,
+                next_token,
+                logit,
+                bits: batch_bits,
+                int8_acts: batch_int8,
+                queue_ms: queue_ms.max(0.0),
+                compute_ms: compute_ms / n_req as f64,
+                batch_size: n_req,
+            });
+        }
+    }
+}
+
+/// PJRT path: weight args as literals (dense sets convert resident
+/// tensors; paged sets decode one tensor at a time from the r-bit payload)
+/// into the `fwd_b{B}` executable.
+#[allow(clippy::too_many_arguments)]
+fn execute_batch_pjrt(
     engine: &Engine,
     preset: &str,
     seq: usize,
@@ -218,16 +406,7 @@ fn execute_batch(
     metrics: &mut Metrics,
 ) -> Result<()> {
     let bucket = batch.bucket;
-    let mut tokens = vec![0i32; bucket * seq];
-    let mut last_pos = vec![0usize; bucket];
-    for (i, (req, _)) in batch.requests.iter().enumerate() {
-        let n = req.prompt.len().min(seq);
-        tokens[i * seq..i * seq + n].copy_from_slice(&req.prompt[..n]);
-        last_pos[i] = n.saturating_sub(1);
-    }
-    // Weight args: dense sets convert resident tensors; paged sets decode
-    // one tensor at a time from the r-bit payload (fused kernel) — the
-    // weight bytes the batch touches are recorded per precision.
+    let (tokens, last_pos) = fill_tokens(&batch, bucket, seq);
     let mut args = store.batch_args(model, batch.bits)?;
     args.push(lit_i32(&[bucket, seq], &tokens)?);
     let t0 = Instant::now();
@@ -239,27 +418,75 @@ fn execute_batch(
         store.batch_weight_bytes(batch.bits) as u64,
     );
     let logits = &out[0]; // (bucket, seq, vocab)
+    respond_greedy(
+        &logits.data,
+        seq,
+        vocab,
+        batch.bits,
+        false,
+        batch.requests,
+        &last_pos,
+        compute_ms,
+        waiters,
+        metrics,
+    );
+    Ok(())
+}
+
+/// Host path: the full forward pass from the weight store — fused
+/// packed-domain matmuls for paged precisions (payload bytes are the only
+/// resident weight state), dense f32 for warm ones, integer-domain GEMV
+/// when the batch asked for int8 activations.
+fn execute_batch_host(
+    preset: &PresetInfo,
+    cfg: &ServerConfig,
+    store: &WeightStore,
+    model: &QuantizedModel,
+    batch: ReadyBatch,
+    waiters: &mut BTreeMap<u64, Sender<Response>>,
+    metrics: &mut Metrics,
+) -> Result<()> {
+    let seq = preset.model.seq_len;
+    let vocab = preset.model.vocab;
+    // Unlike PJRT the host forward has no fixed executable shape, so skip
+    // the batch bucket's padding rows and run only to the longest prompt —
+    // causal attention makes the last-position logits identical to the
+    // full-`seq_len` forward, at a fraction of the (t²) attention work.
     let n_req = batch.requests.len();
-    for (i, (req, enq)) in batch.requests.into_iter().enumerate() {
-        let row = &logits.data[(i * seq + last_pos[i]) * vocab..(i * seq + last_pos[i] + 1) * vocab];
-        let (next_token, &logit) = row
-            .iter()
-            .enumerate()
-            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
-            .unwrap();
-        let queue_ms = enq.elapsed().as_secs_f64() * 1e3 - compute_ms;
-        metrics.record(enq.elapsed().as_secs_f64() * 1e3, batch.bits, n_req);
-        if let Some(tx) = waiters.remove(&req.id) {
-            let _ = tx.send(Response {
-                id: req.id,
-                next_token: next_token as i32,
-                logit,
-                bits: batch.bits,
-                queue_ms: queue_ms.max(0.0),
-                compute_ms: compute_ms / n_req as f64,
-                batch_size: n_req,
-            });
-        }
-    }
+    let t = batch
+        .requests
+        .iter()
+        .map(|(r, _)| r.prompt.len().min(seq))
+        .max()
+        .unwrap_or(1)
+        .max(1);
+    let (tokens, last_pos) = fill_tokens(&batch, n_req, t);
+    let int8 = if batch.int8 {
+        Some(cfg.act_quant)
+    } else {
+        None
+    };
+    let view = store.forward_weights(batch.bits, int8)?;
+    let fw = HostForward::new(&preset.model, model, view)?;
+    let t0 = Instant::now();
+    let logits = fw.forward(&tokens, n_req, t)?;
+    let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
+    metrics.record_batch(
+        batch.bits,
+        compute_ms,
+        store.host_batch_weight_bytes(batch.bits, batch.int8) as u64,
+    );
+    respond_greedy(
+        &logits.data,
+        t,
+        vocab,
+        batch.bits,
+        batch.int8,
+        batch.requests,
+        &last_pos,
+        compute_ms,
+        waiters,
+        metrics,
+    );
     Ok(())
 }

@@ -6,10 +6,12 @@
 //!
 //! A paged set is decoded one tensor at a time only while literal arguments
 //! for a PJRT batch execution are being built (the transient peak is a
-//! single tensor, immediately converted and dropped); the fused matmul
-//! kernels can also consume the handles directly
-//! ([`crate::model::PackedWeight::matmul_into`] /
-//! [`crate::runtime::Engine::run_packed`]) with no decode at all.
+//! single tensor, immediately converted and dropped); the **host serving
+//! path** ([`crate::runtime::HostForward`], via
+//! [`WeightStore::forward_weights`]) consumes the handles directly through
+//! the fused matmul kernels ([`crate::model::PackedWeight::matmul_into`] /
+//! [`crate::model::PackedWeight::matmul_i8_into`]) with no decode at all —
+//! an entire request is answered while only payload bytes are resident.
 //!
 //! Response identity across the dense/paged switch is structural: the
 //! decoded payload is bit-for-bit identical to
@@ -26,7 +28,7 @@ use super::metrics::Metrics;
 use crate::model::{
     packed_payload_bytes, PackedWeight, PrecisionAssignment, QuantizedModel, Tensor,
 };
-use crate::runtime::lit_tensor;
+use crate::runtime::{lit_tensor, ForwardWeights};
 use crate::Result;
 
 /// One per-precision weight set.
@@ -59,10 +61,34 @@ impl WeightSet {
     }
 }
 
+/// Shared packed-payload build: derive the r-bit handles and record the
+/// page-in (bytes + latency) in `metrics`.  Both the lazy `Paged` sets and
+/// the int8 sibling builds go through here so their builds cannot drift.
+fn build_packed_set(
+    model: &QuantizedModel,
+    bits: u32,
+    metrics: &mut Metrics,
+) -> Result<(BTreeMap<String, PackedWeight>, usize)> {
+    let t0 = Instant::now();
+    let packed = model.packed_weights(bits, false)?;
+    let payload_bytes = packed_payload_bytes(&packed);
+    metrics.record_page_in(
+        bits,
+        payload_bytes as u64,
+        t0.elapsed().as_secs_f64() * 1e3,
+    );
+    Ok((packed, payload_bytes))
+}
+
 /// The worker's precision → weight-set map.
 #[derive(Default)]
 pub struct WeightStore {
     sets: BTreeMap<u32, WeightSet>,
+    /// Packed-handle builds living *beside* a dense warm set at the same
+    /// precision: the int8-activation host path needs payload handles, and
+    /// a warm precision only has f32 tensors.  Keyed by bits; built on
+    /// demand by [`WeightStore::ensure_packed`].
+    packed_siblings: BTreeMap<u32, BTreeMap<String, PackedWeight>>,
 }
 
 impl WeightStore {
@@ -121,14 +147,7 @@ impl WeightStore {
         if self.contains(bits) {
             return Ok(());
         }
-        let t0 = Instant::now();
-        let packed = model.packed_weights(bits, false)?;
-        let payload_bytes = packed_payload_bytes(&packed);
-        metrics.record_page_in(
-            bits,
-            payload_bytes as u64,
-            t0.elapsed().as_secs_f64() * 1e3,
-        );
+        let (packed, payload_bytes) = build_packed_set(model, bits, metrics)?;
         self.sets.insert(
             bits,
             WeightSet::Paged {
@@ -143,6 +162,80 @@ impl WeightStore {
     /// bytes counter); 0 if the set is absent.
     pub fn batch_weight_bytes(&self, bits: u32) -> usize {
         self.sets.get(&bits).map_or(0, |s| s.resident_bytes())
+    }
+
+    /// Guarantee packed payload handles exist at `bits` for the
+    /// int8-activation host path.  A paged set already is one; a dense warm
+    /// set gets a sibling packed build (cached, page-in recorded in
+    /// `metrics`) so warm precisions keep serving f32 requests from the
+    /// dense tensors while int8 requests stream the payloads.
+    pub fn ensure_packed(
+        &mut self,
+        model: &QuantizedModel,
+        bits: u32,
+        metrics: &mut Metrics,
+    ) -> Result<()> {
+        if matches!(self.sets.get(&bits), Some(WeightSet::Paged { .. }))
+            || self.packed_siblings.contains_key(&bits)
+        {
+            return Ok(());
+        }
+        let (packed, _) = build_packed_set(model, bits, metrics)?;
+        self.packed_siblings.insert(bits, packed);
+        Ok(())
+    }
+
+    /// Borrowed weight view for the host forward pass
+    /// ([`crate::runtime::HostForward`]).
+    ///
+    /// * `int8 == None` — dense sets serve the f32 reference path, paged
+    ///   sets serve fused packed matmuls.
+    /// * `int8 == Some(cfg)` — requires packed handles: the paged set's
+    ///   own, or the sibling build from [`WeightStore::ensure_packed`].
+    pub fn forward_weights(
+        &self,
+        bits: u32,
+        int8: Option<crate::quant::ActQuantConfig>,
+    ) -> Result<ForwardWeights<'_>> {
+        if let Some(cfg) = int8 {
+            let packed = match self.sets.get(&bits) {
+                Some(WeightSet::Paged { packed, .. }) => packed,
+                _ => self.packed_siblings.get(&bits).ok_or_else(|| {
+                    anyhow!("int8 activations at int{bits} need a packed build — call ensure_packed first")
+                })?,
+            };
+            return Ok(ForwardWeights::Packed {
+                packed,
+                int8: Some(cfg),
+            });
+        }
+        match self.sets.get(&bits) {
+            None => Err(anyhow!("no weight set for int{bits}")),
+            Some(WeightSet::Dense { weights, biases }) => Ok(ForwardWeights::Dense {
+                weights: weights.as_slice(),
+                biases: biases.as_slice(),
+            }),
+            Some(WeightSet::Paged { packed, .. }) => Ok(ForwardWeights::Packed {
+                packed,
+                int8: None,
+            }),
+        }
+    }
+
+    /// Weight bytes a *host* forward at `bits` touches: payload bytes for
+    /// packed execution (including int8-on-warm sibling builds), resident
+    /// f32 bytes for the dense reference path.
+    pub fn host_batch_weight_bytes(&self, bits: u32, int8: bool) -> usize {
+        if int8 {
+            if let Some(WeightSet::Paged { payload_bytes, .. }) = self.sets.get(&bits) {
+                return *payload_bytes;
+            }
+            return self
+                .packed_siblings
+                .get(&bits)
+                .map_or(0, packed_payload_bytes);
+        }
+        self.batch_weight_bytes(bits)
     }
 
     /// Build the weight + bias literal arguments for one batch execution,

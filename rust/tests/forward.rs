@@ -1,0 +1,360 @@
+//! Host-forward conformance — the end-to-end counterpart of
+//! `kernel_conformance`: the packed host forward pass must match the dense
+//! f32 reference forward (same quantized weights, decoded bit-for-bit;
+//! only the matmul evaluation order differs) at every served bit-width,
+//! and the serving worker must answer whole requests through it without
+//! PJRT or artifacts.
+//!
+//! Everything here runs unconditionally — no `make artifacts` gate: the
+//! whole point of the host path is that it needs none.
+
+use matquant::model::manifest::ModelDims;
+use matquant::model::testing::{toy_transformer, toy_transformer_params, toy_transformer_preset};
+use matquant::model::{PrecisionAssignment, PresetInfo, QuantizedModel, Tensor};
+use matquant::quant::ActQuantConfig;
+use matquant::runtime::{ForwardWeights, HostForward};
+use matquant::serve::{PrecisionReq, Request, Server, ServerConfig};
+
+/// A small but complete transformer (pre-RMSNorm, FFN-quantized, learned
+/// positions) from the shared fixture in `model::testing`.
+fn toy_dims() -> ModelDims {
+    ModelDims {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len: 12,
+        quantize_attn: false,
+    }
+}
+
+fn toy_model(seed: u64) -> (PresetInfo, QuantizedModel) {
+    toy_transformer(toy_dims(), seed)
+}
+
+fn toy_tokens(preset: &PresetInfo, b: usize, salt: usize) -> Vec<i32> {
+    let t = preset.model.seq_len;
+    (0..b * t)
+        .map(|i| ((i * 7 + salt) % preset.model.vocab) as i32)
+        .collect()
+}
+
+fn host_cfg(warm: Vec<u32>) -> ServerConfig {
+    ServerConfig {
+        preset: "toy".into(),
+        max_wait_ms: 0.5,
+        warm_bits: warm,
+        ..ServerConfig::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Forward-pass conformance (packed vs dense f32 reference)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn packed_forward_matches_dense_reference_per_bitwidth() {
+    let (preset, model) = toy_model(11);
+    let b = 2;
+    let t = preset.model.seq_len;
+    let tokens = toy_tokens(&preset, b, 3);
+    for bits in [1u32, 2, 3, 4, 6, 8] {
+        for ep in [false, true] {
+            let (weights, biases) = model
+                .materialize(&PrecisionAssignment::Uniform {
+                    bits,
+                    extra_precision: ep,
+                })
+                .unwrap();
+            let dense = HostForward::new(
+                &preset.model,
+                &model,
+                ForwardWeights::Dense {
+                    weights: &weights,
+                    biases: &biases,
+                },
+            )
+            .unwrap();
+            let want = dense.forward(&tokens, b, t).unwrap();
+            assert_eq!(want.shape, vec![b, t, preset.model.vocab]);
+
+            let handles = model.packed_weights(bits, ep).unwrap();
+            let packed = HostForward::new(
+                &preset.model,
+                &model,
+                ForwardWeights::Packed {
+                    packed: &handles,
+                    int8: None,
+                },
+            )
+            .unwrap();
+            let got = packed.forward(&tokens, b, t).unwrap();
+            assert_eq!(got.shape, want.shape);
+            // Same decoded weights (bit-for-bit per the registry tests);
+            // only the fused kernels' accumulation order differs, so the
+            // tolerance is accumulation-scaled (d_in ulps per matmul,
+            // compounded across 2·n_layers + 1 quantized/dense products)
+            // like `kernels::testing::assert_accum_close` — far below the
+            // O(0.1) logit shifts a real bit-width defect produces.
+            for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+                let tol = 2e-3f32 * (1.0 + w.abs());
+                assert!(
+                    (g - w).abs() <= tol,
+                    "bits={bits} ep={ep} logit {i}: {g} vs {w}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn bitwidths_actually_change_the_forward() {
+    // int2 and int8 packed forwards must disagree (untrained weights, big
+    // quantization gap) — otherwise the precision plumbing is inert.
+    let (preset, model) = toy_model(13);
+    let t = preset.model.seq_len;
+    let tokens = toy_tokens(&preset, 1, 5);
+    let h2 = model.packed_weights(2, false).unwrap();
+    let h8 = model.packed_weights(8, false).unwrap();
+    let f2 = HostForward::new(
+        &preset.model,
+        &model,
+        ForwardWeights::Packed {
+            packed: &h2,
+            int8: None,
+        },
+    )
+    .unwrap();
+    let f8 = HostForward::new(
+        &preset.model,
+        &model,
+        ForwardWeights::Packed {
+            packed: &h8,
+            int8: None,
+        },
+    )
+    .unwrap();
+    let a = f2.forward(&tokens, 1, t).unwrap();
+    let b = f8.forward(&tokens, 1, t).unwrap();
+    let max_diff = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff > 1e-3, "int2 and int8 logits identical ({max_diff})");
+}
+
+#[test]
+fn int8_activation_forward_tracks_f32_within_quant_error() {
+    let (preset, model) = toy_model(17);
+    let b = 2;
+    let t = preset.model.seq_len;
+    let tokens = toy_tokens(&preset, b, 1);
+    for bits in [4u32, 8] {
+        let handles = model.packed_weights(bits, false).unwrap();
+        let f32_fw = HostForward::new(
+            &preset.model,
+            &model,
+            ForwardWeights::Packed {
+                packed: &handles,
+                int8: None,
+            },
+        )
+        .unwrap();
+        let i8_fw = HostForward::new(
+            &preset.model,
+            &model,
+            ForwardWeights::Packed {
+                packed: &handles,
+                int8: Some(ActQuantConfig::absmax()),
+            },
+        )
+        .unwrap();
+        let want = f32_fw.forward(&tokens, b, t).unwrap();
+        let got = i8_fw.forward(&tokens, b, t).unwrap();
+        assert!(got.data.iter().all(|v| v.is_finite()));
+        let num: f32 = got
+            .data
+            .iter()
+            .zip(&want.data)
+            .map(|(g, w)| (g - w) * (g - w))
+            .sum();
+        let den: f32 = want.data.iter().map(|w| w * w).sum::<f32>().max(1e-12);
+        let rel = (num / den).sqrt();
+        // int8 activations add real (bounded) quantization noise: the path
+        // must be exercised (nonzero) but stay close to the f32 forward
+        assert!(rel > 0.0, "bits={bits}: i8 path identical to f32 — inert?");
+        assert!(rel < 0.15, "bits={bits}: i8 rel err {rel}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end host serving (no artifacts, no PJRT)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn host_server_serves_every_bitwidth_without_artifacts() {
+    let (preset, model) = toy_model(19);
+    let seq = preset.model.seq_len;
+    let vocab = preset.model.vocab;
+    let server = Server::start_host(preset.clone(), model, host_cfg(vec![8])).unwrap();
+    let widths = [1u32, 2, 3, 4, 6, 8];
+    let rxs: Vec<_> = widths
+        .iter()
+        .enumerate()
+        .map(|(i, &bits)| {
+            server
+                .submit(Request::new(
+                    i as u64,
+                    (0..seq.min(8)).map(|j| (j as i32 * 3 + i as i32) % vocab as i32).collect(),
+                    PrecisionReq::Bits(bits),
+                ))
+                .unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let r = rx.recv().unwrap();
+        assert_eq!(r.id, i as u64);
+        assert_eq!(r.bits, widths[i]);
+        assert!(!r.int8_acts);
+        assert!((0..vocab as i32).contains(&r.next_token));
+        assert!(r.batch_size >= 1);
+    }
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("requests=6"), "{report}");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn host_server_response_matches_direct_forward() {
+    let (preset, model) = toy_model(23);
+    let seq = preset.model.seq_len;
+    let prompt: Vec<i32> = (0..6).map(|i| 10 + i as i32).collect();
+    // expected: run the packed forward directly over the padded prompt row
+    let handles = model.packed_weights(4, false).unwrap();
+    let fw = HostForward::new(
+        &preset.model,
+        &model,
+        ForwardWeights::Packed {
+            packed: &handles,
+            int8: None,
+        },
+    )
+    .unwrap();
+    let mut padded = vec![0i32; seq];
+    padded[..prompt.len()].copy_from_slice(&prompt);
+    let logits = fw.forward(&padded, 1, seq).unwrap();
+    let v = preset.model.vocab;
+    let row = &logits.data[(prompt.len() - 1) * v..prompt.len() * v];
+    let expected = matquant::runtime::argmax_logit(row);
+
+    let server = Server::start_host(preset.clone(), model, host_cfg(vec![])).unwrap();
+    let r = server
+        .infer(Request::new(1, prompt, PrecisionReq::Bits(4)))
+        .unwrap();
+    assert_eq!(r.next_token, expected.0);
+    assert_eq!(r.bits, 4);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn int8_requests_run_end_to_end_behind_the_flag() {
+    let (preset, model) = toy_model(29);
+    let vocab = preset.model.vocab;
+    // bits 8 is warm (dense) → exercises the packed sibling build; bits 2
+    // is lazy (paged) → exercises the paged handles directly.
+    let server = Server::start_host(preset.clone(), model, host_cfg(vec![8])).unwrap();
+    for (id, bits) in [(1u64, 8u32), (2, 2)] {
+        let req = Request {
+            int8_acts: true,
+            ..Request::new(id, vec![5, 6, 7, 8], PrecisionReq::Bits(bits))
+        };
+        let r = server.infer(req).unwrap();
+        assert_eq!(r.id, id);
+        assert_eq!(r.bits, bits);
+        assert!(r.int8_acts, "response must carry the activation mode");
+        assert!((0..vocab as i32).contains(&r.next_token));
+    }
+    // f32 requests still work at the same precisions afterwards
+    let r = server
+        .infer(Request::new(3, vec![5, 6, 7, 8], PrecisionReq::Bits(8)))
+        .unwrap();
+    assert!(!r.int8_acts);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn empty_prompt_round_trips() {
+    let (preset, model) = toy_model(31);
+    let vocab = preset.model.vocab;
+    let server = Server::start_host(preset, model, host_cfg(vec![4])).unwrap();
+    let r = server
+        .infer(Request::new(42, vec![], PrecisionReq::Bits(4)))
+        .unwrap();
+    assert_eq!(r.id, 42);
+    assert!((0..vocab as i32).contains(&r.next_token));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn out_of_vocab_request_rejected_without_poisoning_batchmates() {
+    // A malformed prompt is rejected at submit (its channel closes → recv
+    // error) and never reaches a batch, so a co-submitted valid request at
+    // the same precision still gets its answer.
+    let (preset, model) = toy_model(43);
+    let vocab = preset.model.vocab as i32;
+    let server = Server::start_host(preset, model, host_cfg(vec![4])).unwrap();
+    let bad = server
+        .submit(Request::new(1, vec![vocab + 5], PrecisionReq::Bits(4)))
+        .unwrap();
+    let neg = server
+        .submit(Request::new(2, vec![-3], PrecisionReq::Bits(4)))
+        .unwrap();
+    let good = server
+        .submit(Request::new(3, vec![1, 2], PrecisionReq::Bits(4)))
+        .unwrap();
+    assert!(bad.recv().is_err(), "out-of-vocab request must error, not hang");
+    assert!(neg.recv().is_err(), "negative-token request must error, not hang");
+    let r = good.recv().expect("valid batchmate must still be answered");
+    assert_eq!(r.id, 3);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn nan_logits_complete_instead_of_killing_the_worker() {
+    // Poison the head projection: every logit becomes NaN.  The old
+    // `partial_cmp(..).unwrap()` argmax aborted the worker thread on this;
+    // now every request must still be answered and the worker must stay
+    // alive for subsequent traffic.
+    let preset = toy_transformer_preset(toy_dims());
+    let mut params = toy_transformer_params(&preset, 37);
+    let head_shape = params["head"].shape.clone();
+    let n: usize = head_shape.iter().product();
+    params.insert(
+        "head".into(),
+        Tensor::new(head_shape, vec![f32::NAN; n]).unwrap(),
+    );
+    let model = QuantizedModel::build(&preset, &params, None).unwrap();
+    let server = Server::start_host(preset, model, host_cfg(vec![4])).unwrap();
+    let rxs: Vec<_> = (0..3)
+        .map(|id| {
+            server
+                .submit(Request::new(id, vec![1, 2, 3], PrecisionReq::Bits([2, 4, 8][id as usize % 3])))
+                .unwrap()
+        })
+        .collect();
+    for rx in rxs {
+        let r = rx.recv().expect("NaN batch must still answer");
+        assert!(r.logit.is_nan(), "poison should be visible in the response");
+    }
+    // worker survived: metrics and further requests still flow
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("requests=3"), "{report}");
+    let r = server
+        .infer(Request::new(99, vec![4, 5], PrecisionReq::Bits(4)))
+        .unwrap();
+    assert_eq!(r.id, 99);
+    server.shutdown().unwrap();
+}

@@ -222,6 +222,7 @@ fn boot() -> Option<(Server, usize, usize)> {
             preset: "tiny".into(),
             max_wait_ms: 1.0,
             warm_bits: vec![4],
+            ..ServerConfig::default()
         },
     )
     .unwrap();
@@ -238,11 +239,11 @@ fn mixed_precision_requests_all_answered() {
         .map(|id| {
             let bits = [2u32, 4, 8][id % 3];
             server
-                .submit(Request {
-                    id: id as u64,
-                    prompt: (0..seq.min(16)).map(|i| 16 + (i as i32 % 9)).collect(),
-                    precision: PrecisionReq::Bits(bits),
-                })
+                .submit(Request::new(
+                    id as u64,
+                    (0..seq.min(16)).map(|i| 16 + (i as i32 % 9)).collect(),
+                    PrecisionReq::Bits(bits),
+                ))
                 .unwrap()
         })
         .collect();
@@ -267,18 +268,10 @@ fn same_prompt_same_precision_is_deterministic() {
     };
     let prompt: Vec<i32> = (0..seq.min(16)).map(|i| 20 + (i as i32 % 5)).collect();
     let a = server
-        .infer(Request {
-            id: 1,
-            prompt: prompt.clone(),
-            precision: PrecisionReq::Bits(4),
-        })
+        .infer(Request::new(1, prompt.clone(), PrecisionReq::Bits(4)))
         .unwrap();
     let b = server
-        .infer(Request {
-            id: 2,
-            prompt,
-            precision: PrecisionReq::Bits(4),
-        })
+        .infer(Request::new(2, prompt, PrecisionReq::Bits(4)))
         .unwrap();
     assert_eq!(a.next_token, b.next_token);
     server.shutdown().unwrap();
@@ -297,18 +290,14 @@ fn precisions_can_disagree() {
             .map(|i| 16 + ((i as i32 + s) % 11))
             .collect();
         let a = server
-            .infer(Request {
-                id: 100 + s as u64,
-                prompt: prompt.clone(),
-                precision: PrecisionReq::Cheapest,
-            })
+            .infer(Request::new(
+                100 + s as u64,
+                prompt.clone(),
+                PrecisionReq::Cheapest,
+            ))
             .unwrap();
         let b = server
-            .infer(Request {
-                id: 200 + s as u64,
-                prompt,
-                precision: PrecisionReq::Best,
-            })
+            .infer(Request::new(200 + s as u64, prompt, PrecisionReq::Best))
             .unwrap();
         if a.next_token != b.next_token {
             diverged = true;
