@@ -25,10 +25,11 @@ build:
 test:
 	cd rust && cargo build --release && cargo test -q
 
-# The debug+release conformance matrix CI runs (kernels + host forward).
+# The debug+release conformance matrix CI runs (kernels + host forward +
+# KV-cached decode).
 conformance:
-	cd rust && cargo test -q --test kernel_conformance --test forward --test goldens --test quant_edges --test serving
-	cd rust && cargo test --release -q --test kernel_conformance --test forward --test goldens --test quant_edges --test serving
+	cd rust && cargo test -q --test kernel_conformance --test forward --test decode --test goldens --test quant_edges --test serving
+	cd rust && cargo test --release -q --test kernel_conformance --test forward --test decode --test goldens --test quant_edges --test serving
 
 bench:
 	cd rust && cargo bench --bench quant_hot_paths

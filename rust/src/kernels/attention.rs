@@ -1,0 +1,162 @@
+//! Single-query causal attention — the decode-path kernel and the one
+//! attention implementation in the crate.
+//!
+//! The full host forward pass ([`crate::runtime::forward`] /
+//! [`crate::runtime::plan`]) computes causal attention as *t* independent
+//! single-query problems (query *i* attends over keys `0..=i`), and the
+//! incremental decode engine ([`crate::runtime::decode`]) computes exactly
+//! one such problem per generated token — query = the current position,
+//! keys/values = the KV cache.  Both call [`attend_single_query`], so the
+//! KV-cached step is **bit-identical** to the corresponding query of a full
+//! re-forward by construction: same dot-product order, same max-subtracted
+//! softmax, same `p·v` accumulation order, same NaN propagation (a NaN
+//! score yields NaN outputs instead of a panic).
+//!
+//! Layout matches the forward pass buffers: keys/values are row-major
+//! position rows of `stride` floats (the full `d_model` row), the head
+//! lives at `hoff..hoff + dh` inside each row.  That makes the same kernel
+//! consume both the forward's `(t, d)` K/V scratch and the decode engine's
+//! `(len, d)` cache pages without reshaping.
+
+/// One causal-attention query over `n` cached key/value rows:
+///
+/// ```text
+///   scores[j] = (q · keys[j]) / sqrt(dh)      j in 0..n
+///   p = softmax(scores)                        (max-subtracted)
+///   out[c]   += Σ_j p[j] · vals[j][c]
+/// ```
+///
+/// `q` is one head slice (`dh` floats); `keys`/`vals` hold `n` rows of
+/// `stride` floats with the head at offset `hoff`; `scores` is caller
+/// scratch of length `n`; `out` (`dh` floats) is **accumulated into** — the
+/// caller zeroes it (the forward pass accumulates all heads of a position
+/// into one `d_model` row).
+///
+/// Degenerate softmax mass (`sum <= 0`, e.g. all scores `-inf`) contributes
+/// nothing; NaN scores propagate NaN into `out` — never a panic, matching
+/// the serve loop's poison-survival contract.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_single_query(
+    q: &[f32],
+    keys: &[f32],
+    vals: &[f32],
+    n: usize,
+    stride: usize,
+    hoff: usize,
+    inv_sqrt_dh: f32,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    let dh = q.len();
+    debug_assert!(scores.len() >= n, "scores scratch too short");
+    debug_assert!(out.len() == dh, "output/head width mismatch");
+    for j in 0..n {
+        let ko = j * stride + hoff;
+        let krow = &keys[ko..ko + dh];
+        let mut s = 0.0f32;
+        for c in 0..dh {
+            s += q[c] * krow[c];
+        }
+        scores[j] = s * inv_sqrt_dh;
+    }
+    // Max-subtracted softmax over scores[0..n]. NaN scores propagate as
+    // NaN outputs — never panic.
+    let mut mx = f32::NEG_INFINITY;
+    for &s in &scores[..n] {
+        if s > mx {
+            mx = s;
+        }
+    }
+    let mut sum = 0.0f32;
+    for s in scores[..n].iter_mut() {
+        *s = (*s - mx).exp();
+        sum += *s;
+    }
+    let inv_sum = if sum > 0.0 { 1.0 / sum } else { 0.0 };
+    for j in 0..n {
+        let pj = scores[j] * inv_sum;
+        if pj == 0.0 {
+            continue;
+        }
+        let vo = j * stride + hoff;
+        let vrow = &vals[vo..vo + dh];
+        for c in 0..dh {
+            out[c] += pj * vrow[c];
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_scores_average_values() {
+        // q ⟂ every key → all scores 0 → softmax uniform → out = mean(v).
+        let q = [0.0f32, 1.0];
+        let keys = [1.0f32, 0.0, 1.0, 0.0, 1.0, 0.0];
+        let vals = [1.0f32, 10.0, 2.0, 20.0, 3.0, 30.0];
+        let mut scores = [0.0f32; 3];
+        let mut out = [0.0f32; 2];
+        attend_single_query(&q, &keys, &vals, 3, 2, 0, 1.0, &mut scores, &mut out);
+        assert!((out[0] - 2.0).abs() < 1e-6, "{out:?}");
+        assert!((out[1] - 20.0).abs() < 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn single_key_copies_value() {
+        let q = [0.3f32, -0.7];
+        let keys = [0.9f32, 0.1];
+        let vals = [5.0f32, -6.0];
+        let mut scores = [0.0f32; 1];
+        let mut out = [0.0f32; 2];
+        attend_single_query(&q, &keys, &vals, 1, 2, 0, 0.5, &mut scores, &mut out);
+        assert_eq!(out, [5.0, -6.0]);
+    }
+
+    #[test]
+    fn head_offset_and_stride_select_the_right_lanes() {
+        // Two heads of width 1 in stride-2 rows; attend head 1 only.
+        let q = [1.0f32];
+        let keys = [9.0f32, 0.0, 9.0, 0.0]; // head-1 lanes are both 0 → uniform
+        let vals = [0.0f32, 4.0, 0.0, 8.0];
+        let mut scores = [0.0f32; 2];
+        let mut out = [0.0f32; 1];
+        attend_single_query(&q, &keys, &vals, 2, 2, 1, 1.0, &mut scores, &mut out);
+        assert!((out[0] - 6.0).abs() < 1e-6, "{out:?}");
+    }
+
+    #[test]
+    fn accumulates_into_out() {
+        let q = [1.0f32];
+        let keys = [1.0f32];
+        let vals = [2.0f32];
+        let mut scores = [0.0f32; 1];
+        let mut out = [10.0f32];
+        attend_single_query(&q, &keys, &vals, 1, 1, 0, 1.0, &mut scores, &mut out);
+        assert_eq!(out[0], 12.0);
+    }
+
+    #[test]
+    fn nan_scores_propagate_without_panicking() {
+        let q = [f32::NAN];
+        let keys = [1.0f32, 2.0];
+        let vals = [1.0f32, 1.0];
+        let mut scores = [0.0f32; 2];
+        let mut out = [0.0f32];
+        attend_single_query(&q, &keys, &vals, 2, 1, 0, 1.0, &mut scores, &mut out);
+        assert!(out[0].is_nan());
+    }
+
+    #[test]
+    fn degenerate_mass_contributes_nothing() {
+        let q = [1.0f32];
+        let keys = [f32::NEG_INFINITY];
+        let vals = [7.0f32];
+        let mut scores = [0.0f32; 1];
+        let mut out = [0.0f32];
+        attend_single_query(&q, &keys, &vals, 1, 1, 0, 1.0, &mut scores, &mut out);
+        // score -inf → exp 0 → sum 0 → inv_sum 0 → out untouched
+        assert_eq!(out[0], 0.0);
+    }
+}

@@ -12,6 +12,8 @@
 //!   kernels::cursor u64 bitstream reader for 3/6-bit widths
 //!   kernels::fused  dequant_packed_into / slice_dequant_into
 //!   kernels::matmul matvec/matmul_packed_into, i8→i32 GEMV
+//!   kernels::attention  single-query causal attention (shared by the
+//!                   full forward and the KV-cached decode step)
 //!        │
 //!   model::registry QuantizedTensor::materialize / pack_sliced,
 //!                   PackedWeight payload handles (+ byte accounting)
@@ -53,12 +55,14 @@
 //! property-test driver shared by both, so new kernels get a conformance
 //! harness for free.
 
+pub mod attention;
 pub mod cursor;
 pub mod fused;
 pub mod lut;
 pub mod matmul;
 pub mod testing;
 
+pub use attention::attend_single_query;
 pub use cursor::BitCursor;
 pub use fused::{dequant_packed, dequant_packed_into, slice_dequant, slice_dequant_into};
 pub use matmul::{

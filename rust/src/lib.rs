@@ -33,22 +33,35 @@
 //!
 //! ## Host serving path (no PJRT)
 //!
-//! [`runtime::forward`] executes the **whole model** on the host — the
+//! [`runtime::forward`] executes the **whole model** on the host; the
 //! serving worker ([`serve::Server::start_host`]) answers end-to-end
-//! requests with no artifacts and no PJRT:
+//! requests — including multi-token generations — with no artifacts and no
+//! PJRT, through the incremental decode engine:
 //!
 //! ```text
-//!   WeightStore ─► PackedWeight handles ─► runtime::HostForward ─► logits
+//!   WeightStore ─► ForwardPlan (cached per precision: pre-resolved
+//!                  PackedWeight/dense handles + reusable scratch,
+//!                  optional Mix'n'Match per-layer bits)
+//!              ─► DecodeSession: prefill once (batched fused kernels,
+//!                  K/V rows recorded into the KvCache)
+//!              ─► KV-cached decode steps (O(n) matvecs + one
+//!                  single-query attention per head, per token)
+//!              ─► streamed tokens
 //!   (paged r-bit payloads; f32 weight tensors never exist)
 //! ```
 //!
 //! Quantized matmuls stream the fused packed-domain kernels at any
 //! r ∈ {1..8}; requests flagged `int8_acts` also quantize the layer inputs
-//! per token row ([`quant::activations`], absmax or histogram clip) and reduce
-//! through the i8→i32 integer GEMV, so weights *and* activations stay in
-//! the quantized domain.  Conformance against the dense f32 reference
-//! forward: `cargo test --test forward`; throughput (tokens/sec, dense vs
-//! packed vs packed+i8): `cargo bench --bench quant_hot_paths`.
+//! per token row ([`quant::activations`] — or against persisted per-layer
+//! calibrated clips, [`quant::calibration`]) and reduce through the
+//! i8→i32 integer GEMV, so weights *and* activations stay in the quantized
+//! domain.  `Request { max_new_tokens, sampling }` picks the generation
+//! length and greedy / seeded-temperature sampling; responses stream one
+//! event per token.  Conformance against the dense f32 reference forward:
+//! `cargo test --test forward`; KV-cached decode vs full re-forward
+//! bit-identity: `cargo test --test decode`; throughput (prefill and
+//! per-step decode tokens/sec, dense vs packed vs packed+i8):
+//! `cargo bench --bench quant_hot_paths`.
 //!
 //! ## Build
 //!

@@ -433,6 +433,29 @@ impl PackedWeight {
         Ok(())
     }
 
+    /// Worst-case activation clip for this weight's inputs under `cfg`:
+    /// the smoothing fold (`1/s`) is applied first — exactly the values
+    /// [`PackedWeight::matmul_i8_into`] quantizes — then the per-row clip
+    /// ([`crate::quant::act_clip`]) is maximized over the `m` rows.  This
+    /// is the calibration probe behind
+    /// [`crate::quant::calibration::ActCalibration`].
+    pub fn act_clip(&self, xs: &[f32], m: usize, cfg: &crate::quant::ActQuantConfig) -> f32 {
+        if self.d_in == 0 || m == 0 {
+            return 0.0;
+        }
+        debug_assert_eq!(xs.len(), m * self.d_in, "input length mismatch");
+        let mut scratch = Vec::new();
+        let xs = self.fold_input(xs, &mut scratch);
+        let mut mx = 0.0f32;
+        for row in xs.chunks_exact(self.d_in) {
+            let c = crate::quant::act_clip(row, cfg);
+            if c > mx {
+                mx = c;
+            }
+        }
+        mx
+    }
+
     /// Decode the effective f32 weight (for PJRT argument building) through
     /// the fused packed-domain dequant kernel; returns `(W_eff, bias)`.
     /// The weight is bit-for-bit identical to
@@ -497,7 +520,7 @@ impl PrecisionAssignment {
             PrecisionAssignment::PerLayer {
                 bits,
                 extra_precision,
-            } => Some((bits[layer.min(bits.len() - 1)], *extra_precision)),
+            } => Some((per_layer_bits(bits, layer), *extra_precision)),
         }
     }
 }
@@ -526,6 +549,14 @@ pub(crate) fn layer_of(name: &str) -> usize {
         .and_then(|s| s.split('.').next())
         .and_then(|s| s.parse().ok())
         .unwrap_or(0)
+}
+
+/// The one per-layer bit clamp every Mix'n'Match consumer shares
+/// ([`PrecisionAssignment::PerLayer`], [`QuantizedModel::packed_weights_per_layer`],
+/// [`crate::runtime::compose_per_layer`]): layer *l* takes `bits[l]`,
+/// layers past the end take the last entry.
+pub(crate) fn per_layer_bits(bits: &[u32], layer: usize) -> u32 {
+    bits[layer.min(bits.len() - 1)]
 }
 
 impl QuantizedModel {
@@ -616,6 +647,32 @@ impl QuantizedModel {
             out.insert(
                 qn.clone(),
                 self.quantized[qn].packed_weight(bits, extra_precision)?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Build paged payload handles under a **per-layer** bit-width map
+    /// (Mix'n'Match, e.g. straight from
+    /// [`crate::mixnmatch::sensitivity::suggest_assignment`]): tensors of
+    /// layer *l* get `bits[l]` (clamped to the last entry, matching
+    /// [`PrecisionAssignment::PerLayer`]).  The resulting map drops into
+    /// [`crate::runtime::ForwardWeights::Packed`] or a
+    /// [`crate::runtime::ForwardPlan`] unchanged — the host forward is
+    /// layout-agnostic, so mixed assignments serve exactly like uniform
+    /// ones.
+    pub fn packed_weights_per_layer(
+        &self,
+        bits: &[u32],
+        extra_precision: bool,
+    ) -> Result<BTreeMap<String, PackedWeight>> {
+        ensure!(!bits.is_empty(), "per-layer assignment must be non-empty");
+        let mut out = BTreeMap::new();
+        for qn in &self.quantized_order {
+            let b = per_layer_bits(bits, layer_of(qn));
+            out.insert(
+                qn.clone(),
+                self.quantized[qn].packed_weight(b, extra_precision)?,
             );
         }
         Ok(out)

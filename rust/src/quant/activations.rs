@@ -29,6 +29,12 @@ pub struct ActQuantConfig {
     /// `Some(f)` → clip at the smallest |x|-histogram bucket edge covering
     /// fraction `f` of the entries (outliers beyond it saturate).
     pub clip_fraction: Option<f32>,
+    /// Pre-calibrated clip threshold: when set, the quantizer uses this
+    /// range directly and never scans the tensor — the serving fast path
+    /// for persisted per-layer calibration
+    /// ([`crate::quant::calibration::ActCalibration`]).  Takes precedence
+    /// over `clip_fraction`.
+    pub fixed_clip: Option<f32>,
 }
 
 impl Default for ActQuantConfig {
@@ -42,6 +48,7 @@ impl ActQuantConfig {
     pub fn absmax() -> Self {
         ActQuantConfig {
             clip_fraction: None,
+            fixed_clip: None,
         }
     }
 
@@ -50,6 +57,20 @@ impl ActQuantConfig {
     pub fn clipped(fraction: f32) -> Self {
         ActQuantConfig {
             clip_fraction: Some(fraction),
+            fixed_clip: None,
+        }
+    }
+
+    /// Pre-calibrated clip: quantize against the fixed threshold `clip`
+    /// (values beyond it saturate at ±[`ACT_QMAX`]) with **no per-tensor
+    /// range scan** — what a loaded [`crate::quant::calibration`] file
+    /// turns the per-request histogram pass into.  A non-finite or
+    /// non-positive `clip` degenerates to the all-zero code vector, like
+    /// an all-NaN tensor would.
+    pub fn fixed(clip: f32) -> Self {
+        ActQuantConfig {
+            clip_fraction: None,
+            fixed_clip: Some(clip),
         }
     }
 }
@@ -85,6 +106,11 @@ fn finite_absmax(x: &[f32]) -> f32 {
 /// cumulative count reaches `clip_fraction` of the entries.  Degenerate
 /// inputs (empty, all-zero, all-NaN) return 0.
 pub fn act_clip(x: &[f32], cfg: &ActQuantConfig) -> f32 {
+    if let Some(c) = cfg.fixed_clip {
+        // Calibrated threshold: no scan at all; a degenerate value yields
+        // the same graceful zero-codes path as an all-NaN tensor.
+        return if c.is_finite() && c > 0.0 { c } else { 0.0 };
+    }
     let absmax = finite_absmax(x);
     if absmax <= 0.0 {
         return 0.0;
@@ -202,6 +228,22 @@ mod tests {
         assert_eq!(qa.q[3], ACT_QMAX as i8);
         assert_eq!(qa.q[4], -(ACT_QMAX as i8));
         assert!((qa.scale - 1.0 / ACT_QMAX as f32).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fixed_clip_skips_the_scan_and_saturates() {
+        let x = vec![0.5f32, -0.25, 3.0];
+        let qa = quantize_acts(&x, &ActQuantConfig::fixed(1.0));
+        // scale = 1/127; 3.0 saturates at the calibrated range
+        assert!((qa.scale - 1.0 / ACT_QMAX as f32).abs() < 1e-9);
+        assert_eq!(qa.q[2], ACT_QMAX as i8);
+        assert_eq!(qa.q[0], 64); // round(0.5·127)
+        // degenerate calibrated clips degrade to zero codes, never panic
+        for bad in [0.0f32, -1.0, f32::NAN, f32::INFINITY] {
+            let qa = quantize_acts(&x, &ActQuantConfig::fixed(bad));
+            assert!(qa.q.iter().all(|&q| q == 0), "clip {bad}");
+            assert_eq!(qa.scale, 1.0);
+        }
     }
 
     #[test]

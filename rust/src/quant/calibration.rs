@@ -1,0 +1,154 @@
+//! Persisted per-layer int8 activation calibration.
+//!
+//! The histogram-percentile clip ([`super::activations`]) originally ran
+//! **per token row per quantized layer per request** — a 256-bucket |x|
+//! histogram pass on the serving hot path, every time.  Calibration runs
+//! that pass once, offline, over representative prompts
+//! ([`crate::runtime::ForwardPlan::calibrate`]), keeps the worst-case
+//! (max-over-rows) clip per quantized tensor, and persists the thresholds
+//! as JSON **beside the checkpoint** ([`ActCalibration::beside`]).  The
+//! serving worker loads the file into
+//! [`crate::serve::WeightStore::set_calibration`]; forward plans then bake
+//! each layer's threshold into an [`super::ActQuantConfig::fixed`] quantizer
+//! — zero range scans at request time, stable codes across batches.
+//!
+//! File format (self-describing, hand-editable):
+//!
+//! ```json
+//! {"clip_fraction": 0.999, "clips": {"layer0.ffn.w_in": 1.25, ...}}
+//! ```
+//!
+//! `clip_fraction` records how the thresholds were derived (`null` =
+//! absmax) so a report can say what policy produced them; the serving path
+//! only consumes `clips`.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{ensure, Context};
+
+use crate::util::Json;
+use crate::Result;
+
+/// Per-quantized-tensor activation clip thresholds (post smoothing fold —
+/// exactly the values the fused i8 matmul quantizes against).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ActCalibration {
+    /// The histogram fraction the thresholds were calibrated with
+    /// (`None` = absmax).
+    pub clip_fraction: Option<f32>,
+    /// `quantized tensor name → clip threshold` (strictly positive).
+    pub clips: BTreeMap<String, f32>,
+}
+
+impl ActCalibration {
+    /// The clip for one quantized tensor, if calibrated.
+    pub fn clip_for(&self, name: &str) -> Option<f32> {
+        self.clips.get(name).copied()
+    }
+
+    /// Conventional sidecar path next to a checkpoint:
+    /// `model.mqck` → `model.act_clips.json`.
+    pub fn beside(checkpoint: impl AsRef<Path>) -> PathBuf {
+        checkpoint.as_ref().with_extension("act_clips.json")
+    }
+
+    pub fn to_json(&self) -> String {
+        let clips = Json::Obj(
+            self.clips
+                .iter()
+                .map(|(k, &v)| (k.clone(), Json::Num(v as f64)))
+                .collect(),
+        );
+        let frac = match self.clip_fraction {
+            Some(f) => Json::Num(f as f64),
+            None => Json::Null,
+        };
+        Json::obj(vec![("clip_fraction", frac), ("clips", clips)]).to_string()
+    }
+
+    pub fn from_json(text: &str) -> Result<Self> {
+        let j = Json::parse(text).context("parsing activation calibration")?;
+        let clip_fraction = match j.get("clip_fraction")? {
+            Json::Null => None,
+            v => Some(v.as_f64()? as f32),
+        };
+        let mut clips = BTreeMap::new();
+        for (name, v) in j.get("clips")?.as_obj()? {
+            let c = v.as_f64()? as f32;
+            ensure!(
+                c.is_finite() && c > 0.0,
+                "calibration clip for {name:?} must be finite and positive, got {c}"
+            );
+            clips.insert(name.clone(), c);
+        }
+        Ok(ActCalibration {
+            clip_fraction,
+            clips,
+        })
+    }
+
+    pub fn save(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(dir) = path.parent() {
+            std::fs::create_dir_all(dir).ok();
+        }
+        std::fs::write(path, self.to_json()).with_context(|| format!("writing {path:?}"))
+    }
+
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref();
+        let text =
+            std::fs::read_to_string(path).with_context(|| format!("reading {path:?}"))?;
+        Self::from_json(&text).with_context(|| format!("loading calibration {path:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cal = ActCalibration {
+            clip_fraction: Some(0.999),
+            clips: BTreeMap::new(),
+        };
+        cal.clips.insert("layer0.ffn.w_in".into(), 1.25);
+        cal.clips.insert("layer1.ffn.w_out".into(), 0.5);
+        let back = ActCalibration::from_json(&cal.to_json()).unwrap();
+        assert_eq!(back, cal);
+        assert_eq!(back.clip_for("layer0.ffn.w_in"), Some(1.25));
+        assert_eq!(back.clip_for("missing"), None);
+    }
+
+    #[test]
+    fn absmax_policy_serializes_as_null() {
+        let cal = ActCalibration::default();
+        let text = cal.to_json();
+        assert!(text.contains("\"clip_fraction\":null"), "{text}");
+        assert_eq!(ActCalibration::from_json(&text).unwrap(), cal);
+    }
+
+    #[test]
+    fn rejects_degenerate_clips() {
+        for bad in ["0", "-1.5"] {
+            let text = format!(r#"{{"clip_fraction": null, "clips": {{"w": {bad}}}}}"#);
+            assert!(ActCalibration::from_json(&text).is_err(), "{bad}");
+        }
+    }
+
+    #[test]
+    fn file_roundtrip_and_sidecar_path() {
+        let dir = std::env::temp_dir().join("mq_act_cal_test");
+        let ckpt = dir.join("model.mqck");
+        let side = ActCalibration::beside(&ckpt);
+        assert_eq!(side, dir.join("model.act_clips.json"));
+        let mut cal = ActCalibration::default();
+        cal.clips.insert("layer0.ffn.w_in".into(), 2.0);
+        cal.save(&side).unwrap();
+        let back = ActCalibration::load(&side).unwrap();
+        assert_eq!(back, cal);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -11,15 +11,20 @@
 //! * bit-packed storage for 2/3/4/6/8-bit codes plus the sparse
 //!   extra-bit overlay that realizes the paper's 2.05-avg-bits models,
 //! * per-tensor symmetric int8 *activation* quantization (absmax or
-//!   histogram-percentile clip) — the producer for the integer-domain GEMV.
+//!   histogram-percentile clip) — the producer for the integer-domain GEMV,
+//! * persisted per-layer activation-clip calibration ([`calibration`]):
+//!   thresholds computed once offline, stored as JSON beside the
+//!   checkpoint, and baked into serving plans as fixed-clip quantizers.
 
 pub mod activations;
+pub mod calibration;
 pub mod histogram;
 pub mod minmax;
 pub mod packed;
 pub mod slicing;
 
-pub use activations::{quantize_acts, quantize_acts_into, ActQuantConfig, QuantizedActs};
+pub use activations::{act_clip, quantize_acts, quantize_acts_into, ActQuantConfig, QuantizedActs};
+pub use calibration::ActCalibration;
 pub use histogram::{code_histogram, mean_code, render_histogram, upper_half_mass};
 pub use minmax::{
     col_min_max, dequantize, dequantize_into, minmax_scales, omni_scales, quantize, Scales,

@@ -1,0 +1,449 @@
+//! The incremental decode engine: KV cache + autoregressive sessions.
+//!
+//! Until this module the host path could emit exactly **one** token per
+//! request, recomputing the full O(t²) attention over the whole prompt to
+//! do it.  A [`DecodeSession`] runs the prompt once
+//! ([`crate::runtime::ForwardPlan::prefill`], batched fused packed
+//! kernels, K/V rows recorded per layer), then generates token-by-token
+//! with [`crate::runtime::ForwardPlan::decode_step`]: each step is O(d²)
+//! fused matvecs straight from the r-bit payload plus one O(n) single-query
+//! attention per head over the [`KvCache`] — never a re-forward, never a
+//! materialized f32 weight.
+//!
+//! **Equivalence contract:** on any plan, N cached decode steps produce
+//! logits bit-identical to N full re-forwards over the growing token
+//! stream, because every op in the plan processes positions independently
+//! and the attention kernel is literally shared
+//! ([`crate::kernels::attend_single_query`]).  `cargo test --test decode`
+//! enforces this across r ∈ {1, 2, 3, 4, 6, 8} ± extra-precision overlays.
+//!
+//! Sampling is deterministic: greedy is the NaN-safe total-order argmax;
+//! temperature sampling draws from the seeded [`crate::data::Rng`]
+//! (identical streams across platforms), so a `(seed, prompt, weights)`
+//! triple always generates the same text.
+
+use anyhow::ensure;
+use std::sync::Arc;
+
+use super::forward::argmax_logit;
+use super::plan::ForwardPlan;
+use crate::data::Rng;
+use crate::Result;
+
+/// Per-layer, per-sequence K/V page buffers.
+///
+/// Rows are full `d_model` positions (head-major inside the row), stored in
+/// logical position order so [`crate::kernels::attend_single_query`] can
+/// stream them with `stride = d_model` — the exact memory pattern of the
+/// batched forward's K/V scratch.  Capacity is allocated up front
+/// ([`KvCache::bytes`] is the honest resident figure); pushing past
+/// capacity evicts the **oldest** position (an O(len·d) shift that keeps
+/// logical order, counted in [`KvCache::evicted`]).  [`DecodeSession`]
+/// never evicts — it stops at capacity, because learned positions make a
+/// slid window semantically different — but window-style callers get the
+/// accounting for free.
+#[derive(Debug, Clone)]
+pub struct KvCache {
+    d: usize,
+    capacity: usize,
+    layers: Vec<LayerKv>,
+    evicted: u64,
+}
+
+#[derive(Debug, Clone)]
+struct LayerKv {
+    k: Vec<f32>,
+    v: Vec<f32>,
+    len: usize,
+}
+
+impl KvCache {
+    /// Allocate `n_layers` K/V page pairs of `capacity` positions × `d`
+    /// floats each.
+    pub fn new(n_layers: usize, d: usize, capacity: usize) -> Self {
+        KvCache {
+            d,
+            capacity,
+            layers: (0..n_layers)
+                .map(|_| LayerKv {
+                    k: vec![0.0; capacity * d],
+                    v: vec![0.0; capacity * d],
+                    len: 0,
+                })
+                .collect(),
+            evicted: 0,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Row width (`d_model`).
+    pub fn width(&self) -> usize {
+        self.d
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    /// Positions materialized across **all** layers (mid-step, layers that
+    /// already received this position's row are one ahead).
+    pub fn len(&self) -> usize {
+        self.layers.iter().map(|l| l.len).min().unwrap_or(0)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Positions held by one layer (after its push this step).
+    pub fn layer_len(&self, layer: usize) -> usize {
+        self.layers[layer].len
+    }
+
+    /// Evicted-position count (layer-0 displacements).
+    pub fn evicted(&self) -> u64 {
+        self.evicted
+    }
+
+    /// Allocated K/V bytes — what serving reports as KV residency.
+    pub fn bytes(&self) -> usize {
+        self.layers.len() * 2 * self.capacity * self.d * 4
+    }
+
+    /// Append one position's K and V rows (`d` floats each) to `layer`,
+    /// evicting the layer's oldest position when full.
+    pub fn push(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
+        let d = self.d;
+        assert_eq!(k_row.len(), d, "K row width mismatch");
+        assert_eq!(v_row.len(), d, "V row width mismatch");
+        assert!(self.capacity > 0, "zero-capacity KV cache");
+        let lk = &mut self.layers[layer];
+        if lk.len == self.capacity {
+            lk.k.copy_within(d.., 0);
+            lk.v.copy_within(d.., 0);
+            lk.len -= 1;
+            if layer == 0 {
+                self.evicted += 1;
+            }
+        }
+        let off = lk.len * d;
+        lk.k[off..off + d].copy_from_slice(k_row);
+        lk.v[off..off + d].copy_from_slice(v_row);
+        lk.len += 1;
+    }
+
+    /// The filled key rows of `layer` (logical position order,
+    /// `layer_len × d`).
+    pub fn keys(&self, layer: usize) -> &[f32] {
+        let lk = &self.layers[layer];
+        &lk.k[..lk.len * self.d]
+    }
+
+    /// The filled value rows of `layer`.
+    pub fn vals(&self, layer: usize) -> &[f32] {
+        let lk = &self.layers[layer];
+        &lk.v[..lk.len * self.d]
+    }
+
+    /// Drop every cached position and reset the eviction counter (the
+    /// cache can be re-prefilled as a fresh sequence).
+    pub fn clear(&mut self) {
+        for l in &mut self.layers {
+            l.len = 0;
+        }
+        self.evicted = 0;
+    }
+}
+
+/// How a session turns a logits row into the next token.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Sampling {
+    /// NaN-safe total-order argmax ([`argmax_logit`]).
+    Greedy,
+    /// Softmax sampling at `temp` from the seeded deterministic
+    /// [`crate::data::Rng`] — same `(seed, prompt, weights)`, same text,
+    /// on every platform.
+    Temperature { temp: f32, seed: u64 },
+}
+
+impl Sampling {
+    /// Reject malformed parameters (NaN / non-positive temperature) —
+    /// called by [`DecodeSession::new`] and by the server at submit so a
+    /// bad request never reaches a decode batch.
+    pub fn validate(&self) -> Result<()> {
+        if let Sampling::Temperature { temp, .. } = self {
+            ensure!(
+                temp.is_finite() && *temp > 0.0,
+                "sampling temperature must be finite and > 0, got {temp}"
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Sample one token from a logits row under `sampling`.
+///
+/// Temperature sampling uses the max-subtracted softmax; any degenerate
+/// mass (all `-inf`, NaN logits, empty row) falls back to the NaN-safe
+/// argmax so a poisoned row still answers deterministically — the serve
+/// loop's survival contract.
+pub fn sample_logits(logits: &[f32], sampling: &Sampling, rng: &mut Rng) -> (i32, f32) {
+    match sampling {
+        Sampling::Greedy => argmax_logit(logits),
+        Sampling::Temperature { temp, .. } => {
+            let mut mx = f32::NEG_INFINITY;
+            for &l in logits {
+                if l > mx {
+                    mx = l;
+                }
+            }
+            if !mx.is_finite() {
+                return argmax_logit(logits);
+            }
+            let mut weights: Vec<f64> = Vec::with_capacity(logits.len());
+            let mut sum = 0.0f64;
+            for &l in logits {
+                let w = (((l - mx) / temp) as f64).exp();
+                let w = if w.is_finite() { w } else { 0.0 };
+                weights.push(w);
+                sum += w;
+            }
+            if sum <= 0.0 || !sum.is_finite() {
+                return argmax_logit(logits);
+            }
+            let mut u = rng.f64() * sum;
+            for (i, &w) in weights.iter().enumerate() {
+                u -= w;
+                if u <= 0.0 {
+                    return (i as i32, logits[i]);
+                }
+            }
+            argmax_logit(logits)
+        }
+    }
+}
+
+/// One autoregressive generation: prefill once, then step token-by-token
+/// against the KV cache.
+///
+/// ```text
+///   ForwardPlan::prefill(prompt)  ─►  logits₀  ─ sample ─► tok₀
+///   ForwardPlan::decode_step(tok₀, p)   (KvCache += 1 row/layer)
+///                                 ─►  logits₁  ─ sample ─► tok₁ …
+/// ```
+///
+/// The session stops at the plan's position capacity (`seq_len`) instead
+/// of evicting: learned positions do not slide.  Prompts longer than the
+/// capacity are truncated to its first `seq_len` tokens, and an empty
+/// prompt is padded with token 0 — both mirroring the batch serving path.
+pub struct DecodeSession {
+    plan: Arc<ForwardPlan>,
+    cache: KvCache,
+    /// Next-token distribution (updated by prefill and every advance).
+    logits: Vec<f32>,
+    /// Positions consumed so far (prompt + fed-back tokens).
+    pos: usize,
+    prompt_len: usize,
+    sampling: Sampling,
+    rng: Rng,
+    generated: Vec<i32>,
+}
+
+impl DecodeSession {
+    /// Validate the sampling params, truncate/pad the prompt, and run the
+    /// prefill (the one O(t²) pass this sequence will ever do).  The KV
+    /// cache is sized to the full position window; callers that know their
+    /// generation budget should prefer [`DecodeSession::with_budget`].
+    pub fn new(plan: Arc<ForwardPlan>, prompt: &[i32], sampling: Sampling) -> Result<Self> {
+        Self::with_budget(plan, prompt, sampling, usize::MAX)
+    }
+
+    /// Like [`DecodeSession::new`], but the KV cache is sized to what the
+    /// generation can actually touch — `prompt + max_new_tokens − 1`
+    /// positions, clamped to the model window — so a 4-token prompt asking
+    /// for 2 tokens does not allocate (or report, via
+    /// [`DecodeSession::kv_bytes`]) a full-context K/V page per layer.
+    /// The serving worker passes each request's `max_new_tokens` here;
+    /// KV residency then scales with requested work, not request count.
+    pub fn with_budget(
+        plan: Arc<ForwardPlan>,
+        prompt: &[i32],
+        sampling: Sampling,
+        max_new_tokens: usize,
+    ) -> Result<Self> {
+        sampling.validate()?;
+        let seq = plan.dims.seq_len;
+        let mut toks: Vec<i32> = prompt.iter().copied().take(seq).collect();
+        if toks.is_empty() {
+            // An empty prompt reads position 0 of an all-pad row — it
+            // round-trips instead of erroring, like the batch path.
+            toks.push(0);
+        }
+        let capacity = toks
+            .len()
+            .saturating_add(max_new_tokens.saturating_sub(1))
+            .min(seq);
+        let mut cache = KvCache::new(plan.dims.n_layers, plan.dims.d_model, capacity);
+        let logits = plan.prefill(&toks, &mut cache)?;
+        let rng = match sampling {
+            Sampling::Temperature { seed, .. } => Rng::new(seed),
+            Sampling::Greedy => Rng::new(0),
+        };
+        Ok(DecodeSession {
+            plan,
+            cache,
+            logits,
+            pos: toks.len(),
+            prompt_len: toks.len(),
+            sampling,
+            rng,
+            generated: Vec::new(),
+        })
+    }
+
+    /// The current next-token distribution (one `vocab`-wide row).
+    pub fn logits(&self) -> &[f32] {
+        &self.logits
+    }
+
+    /// Prompt positions consumed by the prefill (post truncate/pad).
+    pub fn prompt_len(&self) -> usize {
+        self.prompt_len
+    }
+
+    /// Total positions consumed (prompt + advanced tokens).
+    pub fn positions(&self) -> usize {
+        self.pos
+    }
+
+    /// Tokens sampled so far.
+    pub fn generated(&self) -> &[i32] {
+        &self.generated
+    }
+
+    /// Resident KV bytes of this sequence.
+    pub fn kv_bytes(&self) -> usize {
+        self.cache.bytes()
+    }
+
+    /// Whether another token can be fed through (position-window and
+    /// KV-budget capacity left).
+    pub fn can_advance(&self) -> bool {
+        self.pos < self.plan.dims.seq_len && self.cache.len() < self.cache.capacity()
+    }
+
+    /// Sample the next token from the current logits (recorded in
+    /// [`DecodeSession::generated`]).  Does not advance the model — feed
+    /// the token back through [`DecodeSession::advance`] to get the
+    /// following distribution, so the final token of a generation never
+    /// pays for a forward step it doesn't need.
+    pub fn sample(&mut self) -> (i32, f32) {
+        let (tok, logit) = sample_logits(&self.logits, &self.sampling, &mut self.rng);
+        self.generated.push(tok);
+        (tok, logit)
+    }
+
+    /// Feed `token` through one KV-cached decode step; the new logits
+    /// become [`DecodeSession::logits`].  Errors when the position
+    /// capacity is exhausted ([`DecodeSession::can_advance`]).
+    pub fn advance(&mut self, token: i32) -> Result<()> {
+        ensure!(
+            self.can_advance(),
+            "decode capacity exhausted at {} positions",
+            self.pos
+        );
+        self.logits = self.plan.decode_step(token, self.pos, &mut self.cache)?;
+        self.pos += 1;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kv_cache_accounting_and_eviction() {
+        let mut c = KvCache::new(2, 3, 2);
+        assert_eq!(c.bytes(), 2 * 2 * 2 * 3 * 4);
+        assert!(c.is_empty());
+        let rows: Vec<Vec<f32>> = (0..3)
+            .map(|i| (0..3).map(|j| (i * 3 + j) as f32).collect())
+            .collect();
+        for (i, r) in rows.iter().enumerate().take(2) {
+            c.push(0, r, r);
+            c.push(1, r, r);
+            assert_eq!(c.len(), i + 1);
+        }
+        assert_eq!(c.evicted(), 0);
+        assert_eq!(c.keys(0), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        // third push evicts the oldest, preserving logical order
+        c.push(0, &rows[2], &rows[2]);
+        c.push(1, &rows[2], &rows[2]);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.evicted(), 1);
+        assert_eq!(c.keys(0), &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(c.vals(1), c.keys(1));
+        c.clear();
+        assert!(c.is_empty());
+        assert_eq!(c.keys(0), &[] as &[f32]);
+    }
+
+    #[test]
+    fn greedy_sampling_is_argmax() {
+        let mut rng = Rng::new(1);
+        let (t, l) = sample_logits(&[0.1, 3.0, -1.0], &Sampling::Greedy, &mut rng);
+        assert_eq!((t, l), (1, 3.0));
+    }
+
+    #[test]
+    fn temperature_sampling_is_seed_deterministic() {
+        let logits = vec![0.0f32, 1.0, 2.0, 0.5];
+        let s = Sampling::Temperature {
+            temp: 0.8,
+            seed: 42,
+        };
+        let draw = |seed: u64| -> Vec<i32> {
+            let mut rng = Rng::new(seed);
+            (0..32).map(|_| sample_logits(&logits, &s, &mut rng).0).collect()
+        };
+        assert_eq!(draw(42), draw(42));
+        // low temperature concentrates on the argmax
+        let mut rng = Rng::new(7);
+        let cold = Sampling::Temperature {
+            temp: 1e-3,
+            seed: 7,
+        };
+        for _ in 0..16 {
+            assert_eq!(sample_logits(&logits, &cold, &mut rng).0, 2);
+        }
+    }
+
+    #[test]
+    fn degenerate_logits_fall_back_to_argmax() {
+        let mut rng = Rng::new(3);
+        let s = Sampling::Temperature { temp: 1.0, seed: 3 };
+        let (t, l) = sample_logits(&[f32::NAN, f32::NAN], &s, &mut rng);
+        assert!(l.is_nan());
+        assert!(t == 0 || t == 1);
+        let all_ninf = [f32::NEG_INFINITY, f32::NEG_INFINITY];
+        let (t, _) = sample_logits(&all_ninf, &s, &mut rng);
+        assert!(t == 0 || t == 1);
+        assert_eq!(sample_logits(&[], &s, &mut rng), (0, f32::NEG_INFINITY));
+    }
+
+    #[test]
+    fn sampling_validation_rejects_bad_temperatures() {
+        assert!(Sampling::Greedy.validate().is_ok());
+        assert!(Sampling::Temperature { temp: 0.7, seed: 1 }.validate().is_ok());
+        for bad in [0.0f32, -1.0, f32::NAN, f32::INFINITY] {
+            assert!(
+                Sampling::Temperature { temp: bad, seed: 1 }.validate().is_err(),
+                "temp {bad} must be rejected"
+            );
+        }
+    }
+}

@@ -243,47 +243,27 @@ impl<'a> HostForward<'a> {
             self.linear(&format!("{p}attn.wk"), &norm, n, &mut kb)?;
             self.linear(&format!("{p}attn.wv"), &norm, n, &mut vb)?;
             attn.fill(0.0);
+            // Causal attention as t single-query problems per (batch, head)
+            // — the same kernel the KV-cached decode step runs, so a cached
+            // step is bit-identical to the matching query of a re-forward.
             for bi in 0..b {
+                let keys = &kb[bi * t * d..(bi + 1) * t * d];
+                let vals = &vb[bi * t * d..(bi + 1) * t * d];
                 for head in 0..h {
                     let hoff = head * dh;
                     for i in 0..t {
                         let qo = (bi * t + i) * d + hoff;
-                        let qrow = &qb[qo..qo + dh];
-                        for j in 0..=i {
-                            let ko = (bi * t + j) * d + hoff;
-                            let krow = &kb[ko..ko + dh];
-                            let mut s = 0.0f32;
-                            for c in 0..dh {
-                                s += qrow[c] * krow[c];
-                            }
-                            scores[j] = s * inv_sqrt_dh;
-                        }
-                        // Causal softmax over scores[0..=i], max-subtracted.
-                        // NaN scores propagate as NaN outputs — never panic.
-                        let mut mx = f32::NEG_INFINITY;
-                        for &s in &scores[..=i] {
-                            if s > mx {
-                                mx = s;
-                            }
-                        }
-                        let mut sum = 0.0f32;
-                        for s in scores[..=i].iter_mut() {
-                            *s = (*s - mx).exp();
-                            sum += *s;
-                        }
-                        let inv_sum = if sum > 0.0 { 1.0 / sum } else { 0.0 };
-                        let orow = &mut attn[qo..qo + dh];
-                        for j in 0..=i {
-                            let pj = scores[j] * inv_sum;
-                            if pj == 0.0 {
-                                continue;
-                            }
-                            let vo = (bi * t + j) * d + hoff;
-                            let vrow = &vb[vo..vo + dh];
-                            for c in 0..dh {
-                                orow[c] += pj * vrow[c];
-                            }
-                        }
+                        crate::kernels::attend_single_query(
+                            &qb[qo..qo + dh],
+                            keys,
+                            vals,
+                            i + 1,
+                            d,
+                            hoff,
+                            inv_sqrt_dh,
+                            &mut scores[..=i],
+                            &mut attn[qo..qo + dh],
+                        );
                     }
                 }
             }
@@ -311,7 +291,9 @@ impl<'a> HostForward<'a> {
 /// Naive row-major dense matmul `out (m, d_out) = xs (m, d_in)·w (+ bias)`
 /// — the f32 reference the packed kernels are checked against; bias is
 /// added in the epilogue, matching the fused kernels' evaluation order.
-fn dense_matmul(
+/// Shared with [`crate::runtime::plan`] so the plan's dense path and this
+/// reference forward cannot drift numerically.
+pub(crate) fn dense_matmul(
     xs: &[f32],
     m: usize,
     w: &Tensor,
@@ -347,7 +329,7 @@ fn dense_matmul(
 }
 
 /// Pre-RMSNorm (ε = 1e-6, matching the L2 model) applied row-wise.
-fn rmsnorm_rows(x: &[f32], scale: &[f32], d: usize, out: &mut [f32]) -> Result<()> {
+pub(crate) fn rmsnorm_rows(x: &[f32], scale: &[f32], d: usize, out: &mut [f32]) -> Result<()> {
     ensure!(scale.len() == d, "norm scale length mismatch");
     ensure!(x.len() == out.len(), "norm buffer length mismatch");
     for (row, orow) in x.chunks_exact(d).zip(out.chunks_exact_mut(d)) {
@@ -362,7 +344,7 @@ fn rmsnorm_rows(x: &[f32], scale: &[f32], d: usize, out: &mut [f32]) -> Result<(
 
 /// Tanh-approximation GELU (`jax.nn.gelu`'s default, which the L2
 /// artifacts bake in): `0.5·x·(1 + tanh(√(2/π)·(x + 0.044715·x³)))`.
-fn gelu_inplace(x: &mut [f32]) {
+pub(crate) fn gelu_inplace(x: &mut [f32]) {
     const SQRT_2_OVER_PI: f32 = 0.797_884_56;
     for v in x.iter_mut() {
         let u = *v;

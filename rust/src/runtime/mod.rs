@@ -1,16 +1,34 @@
-//! Runtime execution paths.  Two ways to run the model:
+//! Runtime execution paths.  Three ways to run the model:
 //!
 //! * [`engine`] — the PJRT path: loads `artifacts/*.hlo.txt`, compiles
 //!   once, executes from the coordinator hot path.  Python never runs here.
-//! * [`forward`] — the **host** path: the full forward pass executed on the
-//!   CPU straight from [`crate::model::PackedWeight`] payload handles via
-//!   the fused packed-domain kernels — no artifacts, no PJRT, no f32
-//!   weight tensors; optional end-to-end int8 activations.
+//! * [`forward`] — the **host reference** path: the full forward pass
+//!   executed on the CPU straight from [`crate::model::PackedWeight`]
+//!   payload handles via the fused packed-domain kernels — no artifacts,
+//!   no PJRT, no f32 weight tensors; optional end-to-end int8 activations.
+//!   Re-resolves names per batch; kept as the conformance oracle.
+//! * [`plan`] + [`decode`] — the **serving** path: a [`ForwardPlan`] built
+//!   once per `(model, precision)` (pre-resolved handles, reusable
+//!   scratch, optional Mix'n'Match per-layer bits and calibrated int8
+//!   clips) prefills a [`DecodeSession`]'s [`KvCache`] and then generates
+//!   token-by-token — O(n) fused matvecs per step instead of an O(n²)
+//!   re-forward, bit-identical to the reference forward position by
+//!   position (`cargo test --test decode`).
+//!
+//! ```text
+//!   WeightStore ─► ForwardPlan (cached per precision)
+//!                    ├─ forward()      batched prefill / conformance
+//!                    └─ DecodeSession  (KvCache) ─► streamed tokens
+//! ```
 
+pub mod decode;
 pub mod engine;
 pub mod forward;
 pub mod literal;
+pub mod plan;
 
+pub use decode::{sample_logits, DecodeSession, KvCache, Sampling};
 pub use engine::Engine;
 pub use forward::{argmax_logit, ForwardWeights, HostForward};
 pub use literal::{lit_i32, lit_scalar_i32, lit_tensor, tensor_from_literal};
+pub use plan::{arc_packed, compose_per_layer, plan_params, ForwardPlan};

@@ -1,0 +1,927 @@
+//! Cached forward plans — resolve the model **once**, execute many times.
+//!
+//! [`crate::runtime::HostForward`] is the conformance-grade reference
+//! executor: it re-resolves layer name → weight maps and re-allocates every
+//! intermediate buffer per batch.  A [`ForwardPlan`] is the serving-grade
+//! counterpart, built once per `(model, precision)`:
+//!
+//! * **Pre-resolved handles** — every `layer{l}.attn.wq`-style lookup and
+//!   `format!` happens at build time; execution walks a flat
+//!   `Vec<PlanLayer>` of [`Arc`] weight handles (paged
+//!   [`crate::model::PackedWeight`]s or dense f32 tensors).  Plans are
+//!   cheap to clone and cache ([`crate::serve::WeightStore`] keeps one per
+//!   precision), and plans at different precisions share the non-quantized
+//!   parameter `Arc`s.
+//! * **Reusable scratch** — activations, K/V buffers, and logits scratch
+//!   live inside the plan (grow-only, behind a `RefCell`), so steady-state
+//!   forwards and decode steps allocate nothing but their output row.
+//! * **Per-layer precision** — the packed builders accept a Mix'n'Match
+//!   bit-width map ([`ForwardPlan::packed_per_layer`]), so assignments from
+//!   [`crate::mixnmatch::sensitivity`] are *servable*, not just rankable.
+//! * **KV capture + single-position decode** — [`ForwardPlan::prefill`]
+//!   runs the batched fused kernels once over a prompt while recording
+//!   every layer's K/V rows into a [`KvCache`]; [`ForwardPlan::decode_step`]
+//!   then advances one token with O(n) fused matvecs and one
+//!   [`crate::kernels::attend_single_query`] per head — the f32 weight
+//!   tensor never exists on the packed path, per step or per prefill.
+//!
+//! Numerics are shared with the reference forward, not re-implemented:
+//! [`crate::runtime::forward`]'s `dense_matmul`/`rmsnorm_rows`/
+//! `gelu_inplace` and the kernels' fused matmuls + single-query attention
+//! are the only math here, and every op processes batch rows independently
+//! — which is what makes a KV-cached decode step **bit-identical** to the
+//! matching position of a full re-forward (`cargo test --test decode`).
+//!
+//! Int8 activation plans additionally carry per-layer calibrated clip
+//! thresholds ([`crate::quant::calibration::ActCalibration`]): when
+//! present, the quantizer runs with a fixed range instead of re-scanning
+//! every token row.
+
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{anyhow, ensure};
+
+use super::decode::KvCache;
+use super::forward::{dense_matmul, gelu_inplace, rmsnorm_rows};
+use crate::kernels;
+use crate::model::manifest::ModelDims;
+use crate::model::registry::{layer_of, per_layer_bits};
+use crate::model::{PackedWeight, PrecisionAssignment, QuantizedModel, Tensor};
+use crate::quant::{ActCalibration, ActQuantConfig};
+use crate::Result;
+
+/// The non-quantized parameters of `model` as shared handles — what the
+/// packed plan builders resolve `embed`/`pos`/norm lookups (and dense
+/// fallback matmuls) against.  Build it once and reuse it across every
+/// precision's plan: the `Arc`s make each additional plan free.
+pub fn plan_params(model: &QuantizedModel) -> BTreeMap<String, Arc<Tensor>> {
+    model
+        .params
+        .iter()
+        .filter(|(n, _)| !model.quantized.contains_key(n.as_str()))
+        .map(|(n, t)| (n.clone(), Arc::new(t.clone())))
+        .collect()
+}
+
+/// Wrap a freshly built packed-weight map in shared handles.
+pub fn arc_packed(map: BTreeMap<String, PackedWeight>) -> BTreeMap<String, Arc<PackedWeight>> {
+    map.into_iter().map(|(k, v)| (k, Arc::new(v))).collect()
+}
+
+/// One resolved matmul: a paged payload handle or a dense f32 tensor.
+enum PlanOp {
+    Dense {
+        w: Arc<Tensor>,
+        /// Folded bias (dense builds of smoothed models); `None` elsewhere.
+        bias: Option<Arc<Tensor>>,
+    },
+    Packed(Arc<PackedWeight>),
+}
+
+/// A resolved linear layer: the op plus its manifest name (error context +
+/// calibration key) and, for int8 plans, the calibrated clip threshold.
+struct PlanLinear {
+    name: String,
+    i8_clip: Option<f32>,
+    op: PlanOp,
+}
+
+impl PlanLinear {
+    fn apply(
+        &self,
+        xs: &[f32],
+        m: usize,
+        int8: Option<&ActQuantConfig>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        match (&self.op, int8) {
+            (PlanOp::Dense { w, bias }, _) => {
+                dense_matmul(xs, m, w, bias.as_ref().map(|b| b.data.as_slice()), out)
+            }
+            (PlanOp::Packed(pw), None) => pw.matmul_into(xs, m, out),
+            (PlanOp::Packed(pw), Some(cfg)) => {
+                // A calibrated per-layer threshold replaces the per-row
+                // range scan; otherwise fall back to the request's policy.
+                let eff = match self.i8_clip {
+                    Some(c) => ActQuantConfig::fixed(c),
+                    None => *cfg,
+                };
+                pw.matmul_i8_into(xs, m, &eff, out)
+            }
+        }
+    }
+}
+
+/// One transformer layer, fully resolved.
+struct PlanLayer {
+    ln1: Arc<Tensor>,
+    wq: PlanLinear,
+    wk: PlanLinear,
+    wv: PlanLinear,
+    wo: PlanLinear,
+    ln2: Arc<Tensor>,
+    w_in: PlanLinear,
+    w_out: PlanLinear,
+}
+
+/// Grow-only scratch shared by batched forwards and decode steps.
+#[derive(Default)]
+struct PlanScratch {
+    x: Vec<f32>,
+    norm: Vec<f32>,
+    qb: Vec<f32>,
+    kb: Vec<f32>,
+    vb: Vec<f32>,
+    attn: Vec<f32>,
+    proj: Vec<f32>,
+    mid: Vec<f32>,
+    scores: Vec<f32>,
+    last: Vec<f32>,
+    logits: Vec<f32>,
+}
+
+fn grow(buf: &mut Vec<f32>, n: usize) {
+    if buf.len() < n {
+        buf.resize(n, 0.0);
+    }
+}
+
+fn check_dims(dims: &ModelDims) -> Result<()> {
+    ensure!(
+        dims.d_model >= 1 && dims.vocab >= 1 && dims.n_heads >= 1,
+        "degenerate model dims"
+    );
+    ensure!(
+        dims.d_model % dims.n_heads == 0,
+        "d_model {} not divisible by n_heads {}",
+        dims.d_model,
+        dims.n_heads
+    );
+    Ok(())
+}
+
+/// Resolve the canonical manifest layout (`embed`/`pos`, per-layer
+/// `ln1`/`attn.w*`/`ln2`/`ffn.w_*`, `ln_f`/`head`) through the given
+/// accessors — shared by the dense and packed builders so the name schema
+/// exists exactly once.
+#[allow(clippy::type_complexity)]
+fn resolve_layout<P, L>(
+    dims: &ModelDims,
+    param: P,
+    linear: L,
+) -> Result<(Arc<Tensor>, Arc<Tensor>, Vec<PlanLayer>, Arc<Tensor>, PlanLinear)>
+where
+    P: Fn(&str) -> Result<Arc<Tensor>>,
+    L: Fn(&str) -> Result<PlanLinear>,
+{
+    let embed = param("embed")?;
+    let pos = param("pos")?;
+    let mut layers = Vec::with_capacity(dims.n_layers);
+    for l in 0..dims.n_layers {
+        let p = format!("layer{l}.");
+        layers.push(PlanLayer {
+            ln1: param(&format!("{p}ln1"))?,
+            wq: linear(&format!("{p}attn.wq"))?,
+            wk: linear(&format!("{p}attn.wk"))?,
+            wv: linear(&format!("{p}attn.wv"))?,
+            wo: linear(&format!("{p}attn.wo"))?,
+            ln2: param(&format!("{p}ln2"))?,
+            w_in: linear(&format!("{p}ffn.w_in"))?,
+            w_out: linear(&format!("{p}ffn.w_out"))?,
+        });
+    }
+    let ln_f = param("ln_f")?;
+    let head = linear("head")?;
+    Ok((embed, pos, layers, ln_f, head))
+}
+
+/// A fully resolved, reusable forward executor (see the module docs).
+pub struct ForwardPlan {
+    pub dims: ModelDims,
+    /// The Mix'n'Match per-layer bit map this plan was built from
+    /// (`None` for uniform and dense plans).
+    pub per_layer: Option<Vec<u32>>,
+    int8: Option<ActQuantConfig>,
+    embed: Arc<Tensor>,
+    pos: Arc<Tensor>,
+    layers: Vec<PlanLayer>,
+    ln_f: Arc<Tensor>,
+    head: PlanLinear,
+    scratch: RefCell<PlanScratch>,
+}
+
+impl ForwardPlan {
+    /// Build a plan over a dense materialized set (weights in
+    /// `param_order`, folded biases in `quantized_order`) — the f32
+    /// reference path, taken by value so no tensor is copied.
+    pub fn from_dense(
+        dims: &ModelDims,
+        model: &QuantizedModel,
+        weights: Vec<Tensor>,
+        biases: Vec<Tensor>,
+    ) -> Result<ForwardPlan> {
+        check_dims(dims)?;
+        ensure!(
+            weights.len() == model.param_order.len(),
+            "dense set has {} weights, manifest wants {}",
+            weights.len(),
+            model.param_order.len()
+        );
+        ensure!(
+            biases.len() == model.quantized_order.len(),
+            "dense set has {} biases, manifest wants {}",
+            biases.len(),
+            model.quantized_order.len()
+        );
+        let weights: Vec<Arc<Tensor>> = weights.into_iter().map(Arc::new).collect();
+        let biases: Vec<Arc<Tensor>> = biases.into_iter().map(Arc::new).collect();
+        let param_idx: BTreeMap<&str, usize> = model
+            .param_order
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.as_str(), i))
+            .collect();
+        let bias_idx: BTreeMap<&str, usize> = model
+            .quantized_order
+            .iter()
+            .enumerate()
+            .map(|(i, n)| (n.as_str(), i))
+            .collect();
+        let param = |name: &str| -> Result<Arc<Tensor>> {
+            let &i = param_idx
+                .get(name)
+                .ok_or_else(|| anyhow!("param {name} not in manifest order"))?;
+            Ok(weights[i].clone())
+        };
+        let linear = |name: &str| -> Result<PlanLinear> {
+            let &i = param_idx
+                .get(name)
+                .ok_or_else(|| anyhow!("param {name} not in manifest order"))?;
+            Ok(PlanLinear {
+                name: name.to_string(),
+                i8_clip: None,
+                op: PlanOp::Dense {
+                    w: weights[i].clone(),
+                    bias: bias_idx.get(name).map(|&qi| biases[qi].clone()),
+                },
+            })
+        };
+        let (embed, pos, layers, ln_f, head) = resolve_layout(dims, &param, &linear)?;
+        Self::assemble(dims, None, None, embed, pos, layers, ln_f, head)
+    }
+
+    /// Build a plan over paged payload handles: fused packed-domain
+    /// matmuls, optionally with int8 activations (calibrated per-layer
+    /// clips when `calibration` covers a layer).  Non-quantized matmuls
+    /// fall back to dense tensors from `params` (see [`plan_params`]).
+    pub fn from_packed(
+        dims: &ModelDims,
+        model: &QuantizedModel,
+        params: &BTreeMap<String, Arc<Tensor>>,
+        packed: &BTreeMap<String, Arc<PackedWeight>>,
+        int8: Option<ActQuantConfig>,
+        calibration: Option<&ActCalibration>,
+    ) -> Result<ForwardPlan> {
+        check_dims(dims)?;
+        let param = |name: &str| -> Result<Arc<Tensor>> {
+            params
+                .get(name)
+                .cloned()
+                .ok_or_else(|| anyhow!("missing param {name}"))
+        };
+        let linear = |name: &str| -> Result<PlanLinear> {
+            if let Some(pw) = packed.get(name) {
+                Ok(PlanLinear {
+                    name: name.to_string(),
+                    i8_clip: calibration.and_then(|c| c.clip_for(name)),
+                    op: PlanOp::Packed(pw.clone()),
+                })
+            } else {
+                ensure!(
+                    !model.quantized.contains_key(name),
+                    "quantized weight {name} missing from the packed set"
+                );
+                Ok(PlanLinear {
+                    name: name.to_string(),
+                    i8_clip: None,
+                    op: PlanOp::Dense {
+                        w: param(name)?,
+                        bias: None,
+                    },
+                })
+            }
+        };
+        let (embed, pos, layers, ln_f, head) = resolve_layout(dims, &param, &linear)?;
+        Self::assemble(dims, None, int8, embed, pos, layers, ln_f, head)
+    }
+
+    /// One-call dense plan at a uniform precision (materializes
+    /// internally) — the f32 reference executor for tests and benches.
+    pub fn dense_uniform(
+        dims: &ModelDims,
+        model: &QuantizedModel,
+        bits: u32,
+        extra_precision: bool,
+    ) -> Result<Arc<ForwardPlan>> {
+        let (weights, biases) = model.materialize(&PrecisionAssignment::Uniform {
+            bits,
+            extra_precision,
+        })?;
+        Ok(Arc::new(Self::from_dense(dims, model, weights, biases)?))
+    }
+
+    /// One-call packed plan at a uniform precision (derives the payload
+    /// handles and param `Arc`s internally; the serving worker goes through
+    /// [`crate::serve::WeightStore`] instead so handles are shared).
+    pub fn packed_uniform(
+        dims: &ModelDims,
+        model: &QuantizedModel,
+        bits: u32,
+        extra_precision: bool,
+        int8: Option<ActQuantConfig>,
+        calibration: Option<&ActCalibration>,
+    ) -> Result<Arc<ForwardPlan>> {
+        let packed = arc_packed(model.packed_weights(bits, extra_precision)?);
+        let params = plan_params(model);
+        Ok(Arc::new(Self::from_packed(
+            dims,
+            model,
+            &params,
+            &packed,
+            int8,
+            calibration,
+        )?))
+    }
+
+    /// One-call packed plan under a Mix'n'Match per-layer bit map (e.g.
+    /// straight from [`crate::mixnmatch::sensitivity::suggest_assignment`]).
+    pub fn packed_per_layer(
+        dims: &ModelDims,
+        model: &QuantizedModel,
+        bits: &[u32],
+        extra_precision: bool,
+        int8: Option<ActQuantConfig>,
+        calibration: Option<&ActCalibration>,
+    ) -> Result<Arc<ForwardPlan>> {
+        let packed = arc_packed(model.packed_weights_per_layer(bits, extra_precision)?);
+        let params = plan_params(model);
+        let mut plan = Self::from_packed(dims, model, &params, &packed, int8, calibration)?;
+        plan.per_layer = Some(bits.to_vec());
+        Ok(Arc::new(plan))
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn assemble(
+        dims: &ModelDims,
+        per_layer: Option<Vec<u32>>,
+        int8: Option<ActQuantConfig>,
+        embed: Arc<Tensor>,
+        pos: Arc<Tensor>,
+        layers: Vec<PlanLayer>,
+        ln_f: Arc<Tensor>,
+        head: PlanLinear,
+    ) -> Result<ForwardPlan> {
+        let (v, d) = (dims.vocab, dims.d_model);
+        ensure!(
+            embed.shape == [v, d],
+            "embed shape {:?}, want ({v}, {d})",
+            embed.shape
+        );
+        ensure!(
+            pos.shape.len() == 2 && pos.shape[1] == d,
+            "pos shape {:?} incompatible with d={d}",
+            pos.shape
+        );
+        Ok(ForwardPlan {
+            dims: dims.clone(),
+            per_layer,
+            int8,
+            embed,
+            pos,
+            layers,
+            ln_f,
+            head,
+            scratch: RefCell::new(PlanScratch::default()),
+        })
+    }
+
+    /// The int8 activation policy this plan was built with.
+    pub fn int8(&self) -> Option<ActQuantConfig> {
+        self.int8
+    }
+
+    /// Resident weight bytes this plan executes against: payload bytes for
+    /// packed ops, f32 bytes for dense ops and the non-quantized
+    /// parameters — the per-batch "weight bytes touched" figure.
+    pub fn weight_bytes(&self) -> usize {
+        fn op_bytes(lin: &PlanLinear) -> usize {
+            match &lin.op {
+                PlanOp::Dense { w, bias } => {
+                    w.data.len() * 4 + bias.as_ref().map_or(0, |b| b.data.len() * 4)
+                }
+                PlanOp::Packed(pw) => pw.payload_bytes(),
+            }
+        }
+        let mut total = (self.embed.data.len() + self.pos.data.len() + self.ln_f.data.len()) * 4
+            + op_bytes(&self.head);
+        for l in &self.layers {
+            total += (l.ln1.data.len() + l.ln2.data.len()) * 4;
+            for lin in [&l.wq, &l.wk, &l.wv, &l.wo, &l.w_in, &l.w_out] {
+                total += op_bytes(lin);
+            }
+        }
+        total
+    }
+
+    /// Run the full model over `tokens` (`b` rows × `t` positions,
+    /// row-major); returns logits of shape `(b, t, vocab)`.  Numerically
+    /// identical to [`crate::runtime::HostForward`] over the same weights.
+    pub fn forward(&self, tokens: &[i32], b: usize, t: usize) -> Result<Tensor> {
+        let buf = self.forward_impl(tokens, b, t, None, None, false)?;
+        Tensor::new(vec![b, t, self.dims.vocab], buf)
+    }
+
+    /// Prefill one sequence: run the batched forward once over the prompt
+    /// through the fused kernels, record every layer's K/V rows into
+    /// `cache` (which must be empty and sized for the sequence), and
+    /// return only the **last position's** logits row (`vocab` floats) —
+    /// the distribution the first generated token is sampled from.  The
+    /// head projection runs on that single row, not all `t`.
+    pub fn prefill(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Vec<f32>> {
+        let t = tokens.len();
+        self.forward_impl(tokens, 1, t, Some(cache), None, true)
+    }
+
+    /// Advance one position: embed `token` at `pos`, append each layer's
+    /// K/V row to `cache`, attend the single query over the cached rows,
+    /// and return the next-token logits row.  O(pos) dot products and
+    /// O(1) fused matvecs — never a re-forward, never an f32 weight
+    /// tensor on the packed path.  Bit-identical to position `pos` of a
+    /// full forward over the same token stream.
+    pub fn decode_step(
+        &self,
+        token: i32,
+        pos: usize,
+        cache: &mut KvCache,
+    ) -> Result<Vec<f32>> {
+        let d = self.dims.d_model;
+        let v = self.dims.vocab;
+        let f = self.dims.d_ff;
+        let h = self.dims.n_heads;
+        let dh = d / h;
+        ensure!(
+            token >= 0 && (token as usize) < v,
+            "token {token} outside vocab [0, {v})"
+        );
+        ensure!(
+            pos < self.dims.seq_len && self.pos.shape[0] > pos,
+            "position {pos} outside the learned position table"
+        );
+        ensure!(
+            cache.n_layers() == self.dims.n_layers && cache.width() == d,
+            "KV cache shape mismatch: {} layers × width {}, plan wants {} × {d}",
+            cache.n_layers(),
+            cache.width(),
+            self.dims.n_layers
+        );
+        ensure!(
+            cache.len() == pos,
+            "KV cache holds {} positions, decode expected {pos}",
+            cache.len()
+        );
+        ensure!(
+            cache.len() < cache.capacity(),
+            "KV cache full ({} positions)",
+            cache.capacity()
+        );
+        let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+        let int8 = self.int8;
+        let mut scratch = self.scratch.borrow_mut();
+        let s = &mut *scratch;
+        grow(&mut s.x, d);
+        grow(&mut s.norm, d);
+        grow(&mut s.qb, d);
+        grow(&mut s.kb, d);
+        grow(&mut s.vb, d);
+        grow(&mut s.attn, d);
+        grow(&mut s.proj, d);
+        grow(&mut s.mid, f);
+        grow(&mut s.scores, pos + 1);
+        grow(&mut s.logits, v);
+        let PlanScratch {
+            x,
+            norm,
+            qb,
+            kb,
+            vb,
+            attn,
+            proj,
+            mid,
+            scores,
+            logits,
+            ..
+        } = s;
+        let x = &mut x[..d];
+        let norm = &mut norm[..d];
+        let qb = &mut qb[..d];
+        let kb = &mut kb[..d];
+        let vb = &mut vb[..d];
+        let attn = &mut attn[..d];
+        let proj = &mut proj[..d];
+        let mid = &mut mid[..f];
+        let logits = &mut logits[..v];
+
+        let erow = &self.embed.data[token as usize * d..(token as usize + 1) * d];
+        let prow = &self.pos.data[pos * d..(pos + 1) * d];
+        for j in 0..d {
+            x[j] = erow[j] + prow[j];
+        }
+        for (l, layer) in self.layers.iter().enumerate() {
+            rmsnorm_rows(x, &layer.ln1.data, d, norm)?;
+            layer.wq.apply(norm, 1, int8.as_ref(), qb)?;
+            layer.wk.apply(norm, 1, int8.as_ref(), kb)?;
+            layer.wv.apply(norm, 1, int8.as_ref(), vb)?;
+            cache.push(l, kb, vb);
+            let nk = cache.layer_len(l);
+            attn.fill(0.0);
+            for head in 0..h {
+                let hoff = head * dh;
+                kernels::attend_single_query(
+                    &qb[hoff..hoff + dh],
+                    cache.keys(l),
+                    cache.vals(l),
+                    nk,
+                    d,
+                    hoff,
+                    inv_sqrt_dh,
+                    &mut scores[..nk],
+                    &mut attn[hoff..hoff + dh],
+                );
+            }
+            layer.wo.apply(attn, 1, int8.as_ref(), proj)?;
+            for (xi, pi) in x.iter_mut().zip(proj.iter()) {
+                *xi += *pi;
+            }
+            rmsnorm_rows(x, &layer.ln2.data, d, norm)?;
+            layer.w_in.apply(norm, 1, int8.as_ref(), mid)?;
+            gelu_inplace(mid);
+            layer.w_out.apply(mid, 1, int8.as_ref(), proj)?;
+            for (xi, pi) in x.iter_mut().zip(proj.iter()) {
+                *xi += *pi;
+            }
+        }
+        rmsnorm_rows(x, &self.ln_f.data, d, norm)?;
+        self.head.apply(norm, 1, int8.as_ref(), logits)?;
+        Ok(logits.to_vec())
+    }
+
+    /// Calibrate per-layer activation clips under `cfg`: run the forward
+    /// over calibration `tokens` on an **f32** plan, capturing for every
+    /// packed op the worst-case (max over token rows) post-smoothing clip
+    /// threshold.  Persist the result with
+    /// [`crate::quant::ActCalibration::save`] and it never needs to run
+    /// again for this checkpoint.
+    pub fn calibrate(
+        &self,
+        tokens: &[i32],
+        b: usize,
+        t: usize,
+        cfg: &ActQuantConfig,
+    ) -> Result<ActCalibration> {
+        ensure!(
+            self.int8.is_none(),
+            "calibrate on an f32 plan — the captured activations must be unquantized"
+        );
+        let mut clips = BTreeMap::new();
+        self.forward_impl(tokens, b, t, None, Some((cfg, &mut clips)), false)?;
+        clips.retain(|_, c| *c > 0.0);
+        Ok(ActCalibration {
+            clip_fraction: cfg.clip_fraction,
+            clips,
+        })
+    }
+
+    fn apply_linear(
+        &self,
+        lin: &PlanLinear,
+        xs: &[f32],
+        m: usize,
+        calib: &mut Option<(&ActQuantConfig, &mut BTreeMap<String, f32>)>,
+        out: &mut [f32],
+    ) -> Result<()> {
+        if let Some((cfg, map)) = calib.as_mut() {
+            if let PlanOp::Packed(pw) = &lin.op {
+                let c = pw.act_clip(xs, m, *cfg);
+                let e = map.entry(lin.name.clone()).or_insert(0.0);
+                if c > *e {
+                    *e = c;
+                }
+            }
+        }
+        lin.apply(xs, m, self.int8.as_ref(), out)
+    }
+
+    /// Shared body of [`ForwardPlan::forward`] / [`ForwardPlan::prefill`] /
+    /// [`ForwardPlan::calibrate`]: the manifest-ordered model over `(b, t)`
+    /// token rows, with optional single-sequence KV capture and optional
+    /// activation-clip capture.  With `last_only` the final norm + head run
+    /// on each row's last position only and the returned buffer is
+    /// `(b, vocab)`; otherwise `(b, t, vocab)`.
+    fn forward_impl(
+        &self,
+        tokens: &[i32],
+        b: usize,
+        t: usize,
+        mut kv: Option<&mut KvCache>,
+        mut calib: Option<(&ActQuantConfig, &mut BTreeMap<String, f32>)>,
+        last_only: bool,
+    ) -> Result<Vec<f32>> {
+        let d = self.dims.d_model;
+        let v = self.dims.vocab;
+        let f = self.dims.d_ff;
+        let h = self.dims.n_heads;
+        let dh = d / h;
+        ensure!(b >= 1, "empty batch");
+        ensure!(tokens.len() == b * t, "token buffer length mismatch");
+        ensure!(
+            t >= 1 && t <= self.dims.seq_len,
+            "sequence length {t} outside [1, {}]",
+            self.dims.seq_len
+        );
+        ensure!(
+            self.pos.shape[0] >= t,
+            "pos table {:?} cannot cover t={t}",
+            self.pos.shape
+        );
+        if let Some(c) = kv.as_deref() {
+            ensure!(b == 1, "KV capture is single-sequence (b = 1)");
+            ensure!(c.is_empty(), "prefill requires an empty KV cache");
+            ensure!(
+                c.n_layers() == self.dims.n_layers && c.width() == d,
+                "KV cache shape mismatch: {} layers × width {}, plan wants {} × {d}",
+                c.n_layers(),
+                c.width(),
+                self.dims.n_layers
+            );
+            ensure!(
+                c.capacity() >= t,
+                "KV cache capacity {} < prompt length {t}",
+                c.capacity()
+            );
+        }
+
+        let n = b * t;
+        let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+        let mut scratch = self.scratch.borrow_mut();
+        let s = &mut *scratch;
+        grow(&mut s.x, n * d);
+        grow(&mut s.norm, n * d);
+        grow(&mut s.qb, n * d);
+        grow(&mut s.kb, n * d);
+        grow(&mut s.vb, n * d);
+        grow(&mut s.attn, n * d);
+        grow(&mut s.proj, n * d);
+        grow(&mut s.mid, n * f);
+        grow(&mut s.scores, t);
+        grow(&mut s.last, b * d);
+        grow(&mut s.logits, n * v);
+        let PlanScratch {
+            x,
+            norm,
+            qb,
+            kb,
+            vb,
+            attn,
+            proj,
+            mid,
+            scores,
+            last,
+            logits,
+        } = s;
+        let x = &mut x[..n * d];
+        let norm = &mut norm[..n * d];
+        let qb = &mut qb[..n * d];
+        let kb = &mut kb[..n * d];
+        let vb = &mut vb[..n * d];
+        let attn = &mut attn[..n * d];
+        let proj = &mut proj[..n * d];
+        let mid = &mut mid[..n * f];
+        let scores = &mut scores[..t];
+        let last = &mut last[..b * d];
+
+        // Embedding lookup + learned positions.
+        let embed = &self.embed.data;
+        let pos_tab = &self.pos.data;
+        for bi in 0..b {
+            for ti in 0..t {
+                let tok = tokens[bi * t + ti];
+                ensure!(
+                    tok >= 0 && (tok as usize) < v,
+                    "token {tok} outside vocab [0, {v})"
+                );
+                let row = &mut x[(bi * t + ti) * d..(bi * t + ti + 1) * d];
+                let erow = &embed[tok as usize * d..(tok as usize + 1) * d];
+                let prow = &pos_tab[ti * d..(ti + 1) * d];
+                for j in 0..d {
+                    row[j] = erow[j] + prow[j];
+                }
+            }
+        }
+
+        for (l, layer) in self.layers.iter().enumerate() {
+            // --- attention block: x += wo(softmax(qkᵀ/√dh)·v) ---
+            rmsnorm_rows(x, &layer.ln1.data, d, norm)?;
+            self.apply_linear(&layer.wq, norm, n, &mut calib, qb)?;
+            self.apply_linear(&layer.wk, norm, n, &mut calib, kb)?;
+            self.apply_linear(&layer.wv, norm, n, &mut calib, vb)?;
+            if let Some(c) = kv.as_deref_mut() {
+                for ti in 0..t {
+                    c.push(l, &kb[ti * d..(ti + 1) * d], &vb[ti * d..(ti + 1) * d]);
+                }
+            }
+            attn.fill(0.0);
+            for bi in 0..b {
+                let keys = &kb[bi * t * d..(bi + 1) * t * d];
+                let vals = &vb[bi * t * d..(bi + 1) * t * d];
+                for head in 0..h {
+                    let hoff = head * dh;
+                    for i in 0..t {
+                        let qo = (bi * t + i) * d + hoff;
+                        kernels::attend_single_query(
+                            &qb[qo..qo + dh],
+                            keys,
+                            vals,
+                            i + 1,
+                            d,
+                            hoff,
+                            inv_sqrt_dh,
+                            &mut scores[..=i],
+                            &mut attn[qo..qo + dh],
+                        );
+                    }
+                }
+            }
+            self.apply_linear(&layer.wo, attn, n, &mut calib, proj)?;
+            for (xi, pi) in x.iter_mut().zip(proj.iter()) {
+                *xi += *pi;
+            }
+            // --- FFN block: x += w_out(gelu(w_in(rmsnorm(x)))) ---
+            rmsnorm_rows(x, &layer.ln2.data, d, norm)?;
+            self.apply_linear(&layer.w_in, norm, n, &mut calib, mid)?;
+            gelu_inplace(mid);
+            self.apply_linear(&layer.w_out, mid, n, &mut calib, proj)?;
+            for (xi, pi) in x.iter_mut().zip(proj.iter()) {
+                *xi += *pi;
+            }
+        }
+
+        if last_only {
+            for bi in 0..b {
+                let row = (bi * t + t - 1) * d;
+                rmsnorm_rows(
+                    &x[row..row + d],
+                    &self.ln_f.data,
+                    d,
+                    &mut last[bi * d..(bi + 1) * d],
+                )?;
+            }
+            self.apply_linear(&self.head, last, b, &mut calib, &mut logits[..b * v])?;
+            Ok(logits[..b * v].to_vec())
+        } else {
+            rmsnorm_rows(x, &self.ln_f.data, d, norm)?;
+            self.apply_linear(&self.head, norm, n, &mut calib, &mut logits[..n * v])?;
+            Ok(logits[..n * v].to_vec())
+        }
+    }
+}
+
+/// Resolve the packed map for a per-layer assignment against already-built
+/// uniform handle sets (`bits → name → handle`): each tensor reuses the
+/// shared `Arc` from its precision's set.  Missing precisions error — the
+/// caller pages them in first.
+pub fn compose_per_layer(
+    model: &QuantizedModel,
+    handle_sets: &BTreeMap<u32, BTreeMap<String, Arc<PackedWeight>>>,
+    bits: &[u32],
+) -> Result<BTreeMap<String, Arc<PackedWeight>>> {
+    ensure!(!bits.is_empty(), "per-layer assignment must be non-empty");
+    let mut out = BTreeMap::new();
+    for qn in &model.quantized_order {
+        let b = per_layer_bits(bits, layer_of(qn));
+        let set = handle_sets
+            .get(&b)
+            .ok_or_else(|| anyhow!("no packed handles paged in at int{b}"))?;
+        let pw = set
+            .get(qn)
+            .ok_or_else(|| anyhow!("packed set at int{b} missing {qn}"))?;
+        out.insert(qn.clone(), pw.clone());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::ModelDims;
+    use crate::model::testing::toy_transformer;
+    use crate::runtime::forward::{ForwardWeights, HostForward};
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 32,
+            d_model: 16,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 8,
+            quantize_attn: false,
+        }
+    }
+
+    #[test]
+    fn dense_plan_bit_identical_to_host_forward() {
+        let (preset, model) = toy_transformer(dims(), 3);
+        let t = preset.model.seq_len;
+        let tokens: Vec<i32> = (0..2 * t).map(|i| (i * 5 % 32) as i32).collect();
+        let (weights, biases) = model
+            .materialize(&PrecisionAssignment::uniform(4))
+            .unwrap();
+        let reference = HostForward::new(
+            &preset.model,
+            &model,
+            ForwardWeights::Dense {
+                weights: &weights,
+                biases: &biases,
+            },
+        )
+        .unwrap();
+        let want = reference.forward(&tokens, 2, t).unwrap();
+        let plan = ForwardPlan::dense_uniform(&preset.model, &model, 4, false).unwrap();
+        // run twice: scratch reuse must not change results
+        for round in 0..2 {
+            let got = plan.forward(&tokens, 2, t).unwrap();
+            assert_eq!(got.shape, want.shape);
+            for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "round {round} logit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_plan_bit_identical_to_host_forward_packed() {
+        let (preset, model) = toy_transformer(dims(), 5);
+        let t = preset.model.seq_len;
+        let tokens: Vec<i32> = (0..t).map(|i| (i * 3 % 32) as i32).collect();
+        for bits in [2u32, 8] {
+            let handles = model.packed_weights(bits, false).unwrap();
+            let reference = HostForward::new(
+                &preset.model,
+                &model,
+                ForwardWeights::Packed {
+                    packed: &handles,
+                    int8: None,
+                },
+            )
+            .unwrap();
+            let want = reference.forward(&tokens, 1, t).unwrap();
+            let plan =
+                ForwardPlan::packed_uniform(&preset.model, &model, bits, false, None, None)
+                    .unwrap();
+            let got = plan.forward(&tokens, 1, t).unwrap();
+            for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+                assert_eq!(g.to_bits(), w.to_bits(), "bits={bits} logit {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn calibrate_covers_every_quantized_tensor() {
+        let (preset, model) = toy_transformer(dims(), 7);
+        let t = preset.model.seq_len;
+        let tokens: Vec<i32> = (0..2 * t).map(|i| (i * 7 % 32) as i32).collect();
+        let plan = ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None)
+            .unwrap();
+        let cal = plan
+            .calibrate(&tokens, 2, t, &ActQuantConfig::clipped(0.999))
+            .unwrap();
+        assert_eq!(cal.clip_fraction, Some(0.999));
+        for qn in &model.quantized_order {
+            let c = cal.clip_for(qn).unwrap_or(0.0);
+            assert!(c > 0.0, "{qn} got clip {c}");
+        }
+    }
+
+    #[test]
+    fn weight_bytes_shrink_with_bits() {
+        let (preset, model) = toy_transformer(dims(), 9);
+        let p2 = ForwardPlan::packed_uniform(&preset.model, &model, 2, false, None, None)
+            .unwrap();
+        let p8 = ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None)
+            .unwrap();
+        let dense = ForwardPlan::dense_uniform(&preset.model, &model, 8, false).unwrap();
+        assert!(p2.weight_bytes() < p8.weight_bytes());
+        assert!(p8.weight_bytes() < dense.weight_bytes());
+    }
+}

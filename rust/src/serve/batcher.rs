@@ -3,6 +3,12 @@
 //! bucket.  f32- and int8-activation requests at the same bit-width never
 //! share a batch (their numerics differ), so the queue key is
 //! `(bits, int8_acts)`.
+//!
+//! The batcher admits **prefills**; multi-token requests then live on as
+//! decode sessions the worker steps ahead of popping the next ready batch
+//! (decode priority — see [`crate::serve::server`]), so a long generation
+//! never starves behind the batch window and new prefills interleave with
+//! in-flight token streams.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
@@ -163,12 +169,7 @@ mod tests {
     use crate::serve::request::PrecisionReq;
 
     fn req(id: u64, bits: u32) -> Request {
-        Request {
-            id,
-            prompt: vec![1, 2, 3],
-            precision: PrecisionReq::Bits(bits),
-            int8_acts: false,
-        }
+        Request::new(id, vec![1, 2, 3], PrecisionReq::Bits(bits))
     }
 
     fn req_i8(id: u64, bits: u32) -> Request {

@@ -25,6 +25,16 @@ pub struct Metrics {
     /// whatever weight bytes the batch had to read: payload bytes on the
     /// packed path, 4·n on a dense f32 path).
     matmul_ms: BTreeMap<u32, (u64, f64, u64)>,
+    /// Prefill passes on the decode path: precision → (count, total ms,
+    /// prompt tokens).  The O(t²) cost a sequence pays exactly once.
+    prefill_ms: BTreeMap<u32, (u64, f64, u64)>,
+    /// KV-cached decode steps: precision → (steps, total ms).  The O(n)
+    /// per-token cost the decode engine exists to reach — the report pairs
+    /// it with prefill so the prefill-vs-step gap is visible per precision.
+    decode_step_ms: BTreeMap<u32, (u64, f64)>,
+    /// Resident KV-cache bytes across live decode sessions (gauge, set by
+    /// the worker after every step round).
+    kv_bytes: u64,
     pub requests: u64,
     pub batches: u64,
 }
@@ -39,6 +49,9 @@ impl Default for Metrics {
             materialize_ms: BTreeMap::new(),
             page_ins: BTreeMap::new(),
             matmul_ms: BTreeMap::new(),
+            prefill_ms: BTreeMap::new(),
+            decode_step_ms: BTreeMap::new(),
+            kv_bytes: 0,
             requests: 0,
             batches: 0,
         }
@@ -78,6 +91,41 @@ impl Metrics {
         e.0 += 1;
         e.1 += payload_bytes;
         e.2 += ms;
+    }
+
+    /// One decode-path prefill completed: `tokens` prompt positions ran
+    /// through the batched forward in `ms`.
+    pub fn record_prefill(&mut self, bits: u32, ms: f64, tokens: u64) {
+        let e = self.prefill_ms.entry(bits).or_insert((0, 0.0, 0));
+        e.0 += 1;
+        e.1 += ms;
+        e.2 += tokens;
+    }
+
+    /// One KV-cached decode step completed.
+    pub fn record_decode_step(&mut self, bits: u32, ms: f64) {
+        let e = self.decode_step_ms.entry(bits).or_insert((0, 0.0));
+        e.0 += 1;
+        e.1 += ms;
+    }
+
+    /// Update the resident KV-cache gauge (bytes across live sessions).
+    pub fn set_kv_bytes(&mut self, bytes: u64) {
+        self.kv_bytes = bytes;
+    }
+
+    pub fn kv_bytes(&self) -> u64 {
+        self.kv_bytes
+    }
+
+    /// Decode steps executed at `bits` (0 if none).
+    pub fn decode_steps(&self, bits: u32) -> u64 {
+        self.decode_step_ms.get(&bits).map_or(0, |e| e.0)
+    }
+
+    /// Prefill passes executed at `bits` (0 if none).
+    pub fn prefills(&self, bits: u32) -> u64 {
+        self.prefill_ms.get(&bits).map_or(0, |e| e.0)
     }
 
     /// Total payload bytes paged in at `bits` (0 if never paged).
@@ -139,8 +187,20 @@ impl Metrics {
                 format!("int{b}:{n}x{:.2}ms/{bytes}B", ms / (*n).max(1) as f64)
             })
             .collect();
+        let prefill: Vec<String> = self
+            .prefill_ms
+            .iter()
+            .map(|(b, (n, ms, toks))| {
+                format!("int{b}:{n}x{:.2}ms/{toks}tok", ms / (*n).max(1) as f64)
+            })
+            .collect();
+        let decode: Vec<String> = self
+            .decode_step_ms
+            .iter()
+            .map(|(b, (n, ms))| format!("int{b}:{n}x{:.3}ms", ms / (*n).max(1) as f64))
+            .collect();
         format!(
-            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}]",
+            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}] prefill=[{}] decode=[{}] kv_bytes={}",
             self.requests,
             self.batches,
             self.percentile(50.0),
@@ -150,7 +210,10 @@ impl Metrics {
             mix.join(" "),
             builds.join(" "),
             paged.join(" "),
-            matmul.join(" ")
+            matmul.join(" "),
+            prefill.join(" "),
+            decode.join(" "),
+            self.kv_bytes
         )
     }
 }
@@ -198,6 +261,26 @@ mod tests {
         m.record(2.0, 8, 4);
         let r = m.report();
         assert!(r.contains("int2:1") && r.contains("int8:1"));
+    }
+
+    #[test]
+    fn prefill_decode_and_kv_counters() {
+        let mut m = Metrics::default();
+        m.record_prefill(4, 2.0, 16);
+        m.record_prefill(4, 4.0, 16);
+        m.record_decode_step(4, 0.25);
+        m.record_decode_step(4, 0.75);
+        m.record_decode_step(2, 0.1);
+        m.set_kv_bytes(4096);
+        assert_eq!(m.prefills(4), 2);
+        assert_eq!(m.prefills(8), 0);
+        assert_eq!(m.decode_steps(4), 2);
+        assert_eq!(m.decode_steps(2), 1);
+        assert_eq!(m.kv_bytes(), 4096);
+        let r = m.report();
+        assert!(r.contains("prefill=[int4:2x3.00ms/32tok]"), "{r}");
+        assert!(r.contains("int4:2x0.500ms"), "{r}");
+        assert!(r.contains("kv_bytes=4096"), "{r}");
     }
 
     #[test]

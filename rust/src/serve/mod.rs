@@ -1,25 +1,34 @@
 //! Elastic-precision serving (paper §5.4): one stored int8 model, every
-//! request chooses its accuracy/latency/memory point.
+//! request chooses its accuracy/latency/memory point — and how many tokens
+//! to generate.
 //!
 //! Architecture (vLLM-router-like, scaled to one host):
 //!
 //! ```text
 //!   client → [Router] → per-(precision, act-mode) queues → [DynamicBatcher]
-//!          → [WeightStore]: warm dense f32 sets + lazily *paged* r-bit
-//!            payloads (pack_sliced codes, no f32 weight set)
-//!          → backend (worker thread owns it) → responses via channels
+//!          → [WeightStore]: cached ForwardPlans per precision spec
+//!            (dense f32 for warm bits, paged r-bit payloads otherwise,
+//!            optional Mix'n'Match per-layer maps; payload handles shared
+//!            across plans) + persisted int8 activation-clip calibration
+//!          → backend (worker thread owns it) → streamed responses
 //!
 //!   PJRT backend (Server::start):
 //!     WeightStore ─ batch_args (paged: decode 1 tensor at a time) ─►
-//!     bucketed `fwd_b{B}` executables ─► logits
+//!     bucketed `fwd_b{B}` executables ─► logits (single token)
 //!
 //!   Host backend (Server::start_host — no artifacts, no PJRT):
-//!     WeightStore ─► PackedWeight handles ─► runtime::HostForward
-//!       (embedding → per-layer fused packed matmuls + attention/residual
-//!        glue → logits), any r ∈ {1..8}; f32 weight tensors never exist.
+//!     WeightStore ─► ForwardPlan (resolved once per precision) ─►
+//!     DecodeSession: prefill once (batched fused packed kernels, K/V
+//!     recorded into the KvCache) ─► KV-cached decode steps, one O(n)
+//!     single-query attention + fused matvecs per token ─► streamed
+//!     Response events (one per token, last marked done), any r ∈ {1..8};
+//!     f32 weight tensors never exist on paged precisions.
 //!     Request { int8_acts } additionally quantizes the quantized-layer
-//!     inputs (quant::activations, absmax / histogram clip) and reduces
-//!     in the integer domain (kernels i8→i32 GEMV).
+//!     inputs (quant::activations; fixed per-layer thresholds when a
+//!     calibration file is loaded) and reduces in the integer domain
+//!     (kernels i8→i32 GEMV).  Request { max_new_tokens, sampling } picks
+//!     the generation length and the greedy / seeded-temperature sampler;
+//!     all generation parameters are validated at submit.
 //! ```
 
 pub mod batcher;
@@ -34,4 +43,8 @@ pub use metrics::Metrics;
 pub use planner::{plan_deployment, DeploymentPlan};
 pub use request::{PrecisionReq, Request, Response};
 pub use server::{Server, ServerConfig};
-pub use weights::{WeightSet, WeightStore};
+pub use weights::{PlanKey, WeightSet, WeightStore};
+
+// Generation-parameter types live with the decode engine; re-exported here
+// because requests carry them.
+pub use crate::runtime::Sampling;

@@ -1,5 +1,7 @@
 //! Request / response types for the elastic-precision server.
 
+use crate::runtime::Sampling;
+
 /// What precision the client demands.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PrecisionReq {
@@ -21,7 +23,8 @@ impl PrecisionReq {
     }
 }
 
-/// One inference request: a token prompt + precision demand.
+/// One inference request: a token prompt + precision demand + generation
+/// parameters.
 #[derive(Debug, Clone)]
 pub struct Request {
     pub id: u64,
@@ -35,35 +38,80 @@ pub struct Request {
     /// flagged requests at submit (response channel closes) rather than
     /// silently serving them as f32.
     pub int8_acts: bool,
+    /// How many tokens to generate (≥ 1).  The worker validates at submit:
+    /// 0 and values past the model's position capacity (`seq_len`) are
+    /// rejected so a malformed request can never stall a decode batch.
+    /// Values > 1 need the host backend (PJRT has no KV cache) and stream
+    /// one [`Response`] per token; generation also ends early — with
+    /// `done` set — if the KV cache's position capacity fills first.
+    pub max_new_tokens: usize,
+    /// Greedy (default) or seeded-temperature sampling; validated at
+    /// submit ([`Sampling::validate`]).
+    pub sampling: Sampling,
 }
 
 impl Request {
-    /// Plain f32-activation request (the common case).
+    /// Plain single-token greedy f32-activation request (the common case).
     pub fn new(id: u64, prompt: Vec<i32>, precision: PrecisionReq) -> Self {
         Request {
             id,
             prompt,
             precision,
             int8_acts: false,
+            max_new_tokens: 1,
+            sampling: Sampling::Greedy,
+        }
+    }
+
+    /// Multi-token generation request.
+    pub fn generate(
+        id: u64,
+        prompt: Vec<i32>,
+        precision: PrecisionReq,
+        max_new_tokens: usize,
+        sampling: Sampling,
+    ) -> Self {
+        Request {
+            max_new_tokens,
+            sampling,
+            ..Request::new(id, prompt, precision)
         }
     }
 }
 
-/// Next-token result + serving telemetry.
+/// One streamed token event + serving telemetry.
+///
+/// A request produces `max_new_tokens` of these on its response channel
+/// (fewer if the KV cache's position capacity fills first); the last one
+/// carries `done = true` and the complete `tokens` vector.
+/// [`crate::serve::Server::infer`] drains to the final event for callers
+/// who only want the finished result.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,
+    /// The token this event produced.
     pub next_token: i32,
-    /// Greedy-decode logit of the chosen token.
+    /// Logit of that token under the serving precision.
     pub logit: f32,
+    /// The complete generated stream — populated on the final (`done`)
+    /// event only; intermediate events carry their token in `next_token`
+    /// (so an n-token stream costs O(n) copies, not O(n²)).
+    pub tokens: Vec<i32>,
+    /// Last event of the stream.
+    pub done: bool,
     pub bits: u32,
     /// Whether the integer-activation path served this request.
     pub int8_acts: bool,
     /// Queue + batch wait, ms.
     pub queue_ms: f64,
-    /// Execution share attributed to this request, ms (PJRT or host).
+    /// Execution share attributed to this event, ms (PJRT or host).
     pub compute_ms: f64,
-    /// Size of the batch this request rode in.
+    /// This request's prefill compute, ms (host decode path; PJRT reports
+    /// its batch share).
+    pub prefill_ms: f64,
+    /// Cumulative decode-step compute for this request so far, ms.
+    pub decode_ms: f64,
+    /// Size of the batch this request rode in (prefill batch).
     pub batch_size: usize,
 }
 
@@ -76,5 +124,21 @@ mod tests {
         assert_eq!(PrecisionReq::Best.bits(), 8);
         assert_eq!(PrecisionReq::Cheapest.bits(), 2);
         assert_eq!(PrecisionReq::Bits(3).bits(), 3);
+    }
+
+    #[test]
+    fn default_request_is_single_token_greedy() {
+        let r = Request::new(1, vec![1, 2], PrecisionReq::Best);
+        assert_eq!(r.max_new_tokens, 1);
+        assert_eq!(r.sampling, Sampling::Greedy);
+        let g = Request::generate(
+            2,
+            vec![3],
+            PrecisionReq::Cheapest,
+            8,
+            Sampling::Temperature { temp: 0.9, seed: 7 },
+        );
+        assert_eq!(g.max_new_tokens, 8);
+        assert!(matches!(g.sampling, Sampling::Temperature { .. }));
     }
 }

@@ -1,21 +1,32 @@
 //! The serving worker: a dedicated thread owns the backend — either the
-//! (non-Send) PJRT engine or the **host packed forward pass** — plus the
-//! per-precision weight sets; clients submit requests through an mpsc
+//! (non-Send) PJRT engine or the **host decode engine** — plus the
+//! per-precision weight state; clients submit requests through an mpsc
 //! channel and receive responses on per-request channels.
 //!
 //! Two backends, one worker loop:
 //!
 //! * [`Server::start`] — PJRT: batches run the `fwd_b{B}` HLO artifacts;
 //!   weight sets convert to literals per batch (warm dense or paged).
-//! * [`Server::start_host`] — host: batches run
-//!   [`crate::runtime::HostForward`] straight from the [`WeightStore`] —
-//!   paged precisions execute fused packed-domain matmuls with **no f32
-//!   weight tensor and no artifacts at all**, at any r ∈ {1..8}; requests
-//!   flagged [`Request::int8_acts`] additionally run quantized activations
-//!   through the integer-domain GEMV.
+//!   Single-token only (no KV cache in the artifacts).
+//! * [`Server::start_host`] — host: the worker serves from **cached
+//!   forward plans** ([`crate::serve::WeightStore`] →
+//!   [`crate::runtime::ForwardPlan`]): each request prefills a
+//!   [`DecodeSession`] once through the fused packed kernels, then
+//!   generates up to `max_new_tokens` tokens with KV-cached O(n) decode
+//!   steps — no artifacts, no PJRT, and on paged precisions no f32 weight
+//!   tensor, at any r ∈ {1..8}.  Responses **stream**: one [`Response`]
+//!   event per token on the request's channel, the last with `done`.
+//!
+//! Scheduling: every worker iteration first advances each live decode
+//! session by one token (decode priority — inter-token latency stays flat
+//! while prefills queue behind), then admits new work from the batcher.
+//! With live sessions the queue poll is non-blocking, so decode throughput
+//! never waits on the batch window.
 
 use std::collections::BTreeMap;
+use std::path::PathBuf;
 use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
@@ -25,9 +36,10 @@ use super::batcher::{DynamicBatcher, ReadyBatch};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
 use super::weights::WeightStore;
+use crate::data::Rng;
 use crate::model::{PresetInfo, QuantizedModel};
-use crate::quant::ActQuantConfig;
-use crate::runtime::{argmax_logit, lit_i32, Engine, HostForward};
+use crate::quant::{ActCalibration, ActQuantConfig};
+use crate::runtime::{argmax_logit, lit_i32, sample_logits, DecodeSession, Engine, Sampling};
 use crate::Result;
 
 #[derive(Debug, Clone)]
@@ -35,16 +47,23 @@ pub struct ServerConfig {
     pub preset: String,
     /// Micro-batch window in ms.
     pub max_wait_ms: f64,
-    /// Precisions to pre-materialize as dense f32 sets (others are built
-    /// lazily as paged r-bit payloads).  On the **host** backend a warm
-    /// precision serves through the dense f32 reference matmul — exact
-    /// f32 numerics at full f32 residency; pass `warm_bits: vec![]` to
-    /// serve every precision through the fused packed kernels instead
-    /// (`32/r`× fewer resident weight bytes).
+    /// Precisions to pre-build as dense f32 state (others are built lazily
+    /// as paged r-bit payloads).  On the **host** backend a warm precision
+    /// serves through a dense-f32 forward plan — exact f32 numerics at
+    /// full f32 residency; pass `warm_bits: vec![]` to serve every
+    /// precision through fused packed plans instead (`32/r`× fewer
+    /// resident weight bytes).
     pub warm_bits: Vec<u32>,
     /// Clip policy for the int8-activation host path (absmax by default;
-    /// histogram clip sheds outlier tails).
+    /// histogram clip sheds outlier tails).  Superseded per layer by a
+    /// loaded `calibration` file.
     pub act_quant: ActQuantConfig,
+    /// Optional persisted activation-clip calibration
+    /// ([`crate::quant::calibration`], the JSON sidecar beside the
+    /// checkpoint).  Loaded once at boot into the [`WeightStore`]; int8
+    /// plans then quantize against fixed per-layer thresholds instead of
+    /// re-scanning every token row of every request.
+    pub calibration: Option<PathBuf>,
 }
 
 impl Default for ServerConfig {
@@ -54,6 +73,7 @@ impl Default for ServerConfig {
             max_wait_ms: 2.0,
             warm_bits: vec![8, 4, 2],
             act_quant: ActQuantConfig::absmax(),
+            calibration: None,
         }
     }
 }
@@ -62,7 +82,7 @@ impl Default for ServerConfig {
 enum Backend {
     /// Compiled `fwd_b{B}` artifacts through the PJRT engine.
     Pjrt(Engine),
-    /// The host packed forward pass — no artifacts, no PJRT.
+    /// The host decode engine — no artifacts, no PJRT.
     Host,
 }
 
@@ -70,6 +90,22 @@ enum Msg {
     Submit(Request, Sender<Response>),
     Report(Sender<String>),
     Shutdown,
+}
+
+/// One live multi-token generation between worker iterations.
+struct ActiveDecode {
+    id: u64,
+    session: DecodeSession,
+    /// Tokens still to emit.
+    remaining: usize,
+    /// Last sampled token — the next step's input.
+    last: i32,
+    bits: u32,
+    int8: bool,
+    enq: Instant,
+    prefill_ms: f64,
+    decode_ms: f64,
+    batch_size: usize,
 }
 
 /// Client handle; the worker thread dies when this is dropped (after a
@@ -123,11 +159,12 @@ impl Server {
         })
     }
 
-    /// Boot a **host-backed** worker: whole requests are answered by the
-    /// host packed forward pass from the paged `WeightStore` — no
-    /// artifacts directory, no PJRT, no f32 weight set for lazily-built
-    /// precisions.  `preset` supplies the model dimensions and batch
-    /// buckets that the manifest would otherwise provide.
+    /// Boot a **host-backed** worker: whole requests — including
+    /// multi-token generations — are answered by the incremental decode
+    /// engine from cached forward plans, with no artifacts directory, no
+    /// PJRT, and no f32 weight set for lazily-built precisions.  `preset`
+    /// supplies the model dimensions and batch buckets that the manifest
+    /// would otherwise provide.
     pub fn start_host(
         preset: PresetInfo,
         model: QuantizedModel,
@@ -144,7 +181,9 @@ impl Server {
         })
     }
 
-    /// Submit a request; returns the channel the response arrives on.
+    /// Submit a request; returns the channel its response events arrive
+    /// on — one [`Response`] per generated token, the last with `done`
+    /// set (single-token requests get exactly one, `done` event).
     pub fn submit(&self, req: Request) -> Result<Receiver<Response>> {
         let (tx, rx) = mpsc::channel();
         self.tx
@@ -153,10 +192,16 @@ impl Server {
         Ok(rx)
     }
 
-    /// Blocking convenience: submit and wait.
+    /// Blocking convenience: submit and wait for the **final** event (the
+    /// complete token stream rides in [`Response::tokens`]).
     pub fn infer(&self, req: Request) -> Result<Response> {
         let rx = self.submit(req)?;
-        rx.recv().context("waiting for response")
+        loop {
+            let r = rx.recv().context("waiting for response")?;
+            if r.done {
+                return Ok(r);
+            }
+        }
     }
 
     pub fn metrics_report(&self) -> Result<String> {
@@ -198,17 +243,35 @@ fn worker_loop(
     let mut store = WeightStore::new();
     let mut waiters: BTreeMap<u64, Sender<Response>> = BTreeMap::new();
     let mut metrics = Metrics::default();
+    let mut active: Vec<ActiveDecode> = Vec::new();
 
-    // Warm precisions decode a dense f32 set at boot (build latency is
-    // free there).  Every other precision is built lazily by *paging in*
-    // the r-bit `pack_sliced` payloads — `32/r`× fewer resident weight
-    // bytes than a dense set, no f32 weight buffers allocated.  The PJRT
-    // backend decodes paged sets tensor-by-tensor at batch-arg build; the
-    // host backend streams them through the fused matmul kernels with no
-    // decode at all.
-    for &b in &cfg.warm_bits {
-        if let Err(e) = store.build_warm(&model, b, &mut metrics) {
-            eprintln!("serve worker: materialize int{b}: {e:#}");
+    // Warm state at boot (build latency is free there).  Host: dense f32
+    // forward plans; PJRT: dense f32 weight sets.  Every other precision
+    // is built lazily by paging in r-bit payloads — `32/r`× fewer resident
+    // weight bytes than a dense set, shared across every plan that uses
+    // the precision.  The host backend also loads the persisted
+    // activation-clip calibration before any plan exists, so int8 plans
+    // bake the fixed thresholds in from the first request.
+    match &backend {
+        Backend::Host => {
+            if let Some(path) = &cfg.calibration {
+                match ActCalibration::load(path) {
+                    Ok(c) => store.set_calibration(Some(Arc::new(c))),
+                    Err(e) => eprintln!("serve worker: calibration {path:?}: {e:#}"),
+                }
+            }
+            for &b in &cfg.warm_bits {
+                if let Err(e) = store.plan_warm(&model, &preset.model, b, &mut metrics) {
+                    eprintln!("serve worker: warm plan int{b}: {e:#}");
+                }
+            }
+        }
+        Backend::Pjrt(_) => {
+            for &b in &cfg.warm_bits {
+                if let Err(e) = store.build_warm(&model, b, &mut metrics) {
+                    eprintln!("serve worker: materialize int{b}: {e:#}");
+                }
+            }
         }
     }
 
@@ -216,23 +279,31 @@ fn worker_loop(
     // Shutdown flush: `drain_all` empties every queue at once, so the
     // batches it returns must all be executed — parking them here (instead
     // of taking the first and dropping the rest, which silently lost the
-    // other precisions' requests) keeps every waiter answered.
+    // other precisions' requests) keeps every waiter answered.  Live decode
+    // sessions likewise keep the loop alive until their streams finish.
     let mut drained: std::collections::VecDeque<ReadyBatch> = std::collections::VecDeque::new();
-    while running || batcher.pending() > 0 || !drained.is_empty() {
-        let timeout = Duration::from_micros((cfg.max_wait_ms * 500.0) as u64 + 100);
+    while running || batcher.pending() > 0 || !drained.is_empty() || !active.is_empty() {
+        // Decode priority: advance every live session one token before
+        // admitting new work.
+        step_active(&mut active, &mut waiters, &mut metrics);
+        // With live sessions the poll must not block — their next tokens
+        // are due; otherwise wait out the batch window.
+        let timeout = if active.is_empty() {
+            Duration::from_micros((cfg.max_wait_ms * 500.0) as u64 + 100)
+        } else {
+            Duration::ZERO
+        };
         if running {
             match rx.recv_timeout(timeout) {
                 Ok(Msg::Submit(req, tx)) => {
                     // Validate up front: rejecting a bad request here (the
                     // dropped sender surfaces as a recv error on the
                     // client) keeps it out of a batch, so it cannot fail
-                    // innocent batchmates downstream.  int8 activations
-                    // are a host-path feature — the PJRT backend rejects
-                    // the flag instead of silently serving f32 from a
-                    // needlessly fragmented (bits, int8) queue.
+                    // innocent batchmates or stall a decode stream.
                     // Only the first `seq` tokens reach the forward pass
-                    // (`fill_tokens` truncates), so tokens in the clipped
-                    // tail must not fail a request they cannot affect.
+                    // (prompts truncate), so tokens in the clipped tail
+                    // must not fail a request they cannot affect.
+                    let host = matches!(backend, Backend::Host);
                     let bad_token = req
                         .prompt
                         .iter()
@@ -245,9 +316,35 @@ fn worker_loop(
                             req.id
                         );
                         drop(tx);
-                    } else if req.int8_acts && !matches!(backend, Backend::Host) {
+                    } else if req.max_new_tokens == 0 || req.max_new_tokens > seq {
+                        // 0 would produce an empty stream; anything past
+                        // the position capacity can never be served and
+                        // would pin a decode slot for nothing.
+                        eprintln!(
+                            "serve worker: request {}: max_new_tokens {} outside [1, {seq}] — rejected",
+                            req.id, req.max_new_tokens
+                        );
+                        drop(tx);
+                    } else if let Err(e) = req.sampling.validate() {
+                        eprintln!("serve worker: request {}: {e:#} — rejected", req.id);
+                        drop(tx);
+                    } else if req.int8_acts && !host {
                         eprintln!(
                             "serve worker: request {}: int8 activations need the host backend — rejected",
+                            req.id
+                        );
+                        drop(tx);
+                    } else if !host && !matches!(req.sampling, Sampling::Greedy) {
+                        // PJRT's respond path is argmax-only; rejecting is
+                        // honest, silently serving greedy is not.
+                        eprintln!(
+                            "serve worker: request {}: temperature sampling needs the host backend — rejected",
+                            req.id
+                        );
+                        drop(tx);
+                    } else if req.max_new_tokens > 1 && !host {
+                        eprintln!(
+                            "serve worker: request {}: multi-token generation needs the host backend (PJRT has no KV cache) — rejected",
                             req.id
                         );
                         drop(tx);
@@ -264,20 +361,36 @@ fn worker_loop(
                 Err(RecvTimeoutError::Disconnected) => running = false,
             }
         }
-        // Prefetch: page in payloads for precisions that already have
-        // queued work, so the (cheap) build is off the batch critical path.
-        for b in batcher.queued_precisions() {
-            if !store.contains(b) {
-                if let Err(e) = store.build_paged(&model, b, &mut metrics) {
-                    eprintln!("serve worker: page-in int{b}: {e:#}");
+        // Prefetch: build plans / page in payloads for precisions that
+        // already have queued work, so the build is off the batch critical
+        // path.
+        match &backend {
+            Backend::Host => {
+                for b in batcher.queued_precisions() {
+                    let r = if cfg.warm_bits.contains(&b) {
+                        store.plan_warm(&model, &preset.model, b, &mut metrics)
+                    } else {
+                        store.plan_packed(&model, &preset.model, b, None, &mut metrics)
+                    };
+                    if let Err(e) = r {
+                        eprintln!("serve worker: plan int{b}: {e:#}");
+                    }
+                }
+                for b in batcher.queued_int8_precisions() {
+                    if let Err(e) =
+                        store.plan_packed(&model, &preset.model, b, Some(cfg.act_quant), &mut metrics)
+                    {
+                        eprintln!("serve worker: int8 plan int{b}: {e:#}");
+                    }
                 }
             }
-        }
-        // int8 requests need packed handles even at warm (dense) precisions.
-        if matches!(backend, Backend::Host) {
-            for b in batcher.queued_int8_precisions() {
-                if let Err(e) = store.ensure_packed(&model, b, &mut metrics) {
-                    eprintln!("serve worker: packed build int{b}: {e:#}");
+            Backend::Pjrt(_) => {
+                for b in batcher.queued_precisions() {
+                    if !store.contains(b) {
+                        if let Err(e) = store.build_paged(&model, b, &mut metrics) {
+                            eprintln!("serve worker: page-in int{b}: {e:#}");
+                        }
+                    }
                 }
             }
         }
@@ -290,34 +403,35 @@ fn worker_loop(
             drained.pop_front()
         };
         if let Some(batch) = ready {
-            if !store.contains(batch.bits) {
-                if let Err(e) = store.build_paged(&model, batch.bits, &mut metrics) {
-                    eprintln!("serve worker: page-in int{}: {e:#}", batch.bits);
-                }
-            }
-            // (int8 packed handles were provisioned by the prefetch loop
-            // above while this batch's requests were still queued.)
             let member_ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
             let result = match &backend {
-                Backend::Pjrt(engine) => execute_batch_pjrt(
-                    engine,
-                    &cfg.preset,
-                    seq,
-                    vocab,
-                    &store,
-                    &model,
-                    batch,
-                    &mut waiters,
-                    &mut metrics,
-                ),
+                Backend::Pjrt(engine) => {
+                    if !store.contains(batch.bits) {
+                        if let Err(e) = store.build_paged(&model, batch.bits, &mut metrics) {
+                            eprintln!("serve worker: page-in int{}: {e:#}", batch.bits);
+                        }
+                    }
+                    execute_batch_pjrt(
+                        engine,
+                        &cfg.preset,
+                        seq,
+                        vocab,
+                        &store,
+                        &model,
+                        batch,
+                        &mut waiters,
+                        &mut metrics,
+                    )
+                }
                 Backend::Host => execute_batch_host(
                     &preset,
                     &cfg,
-                    &store,
+                    &mut store,
                     &model,
                     batch,
                     &mut waiters,
                     &mut metrics,
+                    &mut active,
                 ),
             };
             if let Err(e) = result {
@@ -333,20 +447,77 @@ fn worker_loop(
     }
 }
 
-/// Pad-and-pack a batch's prompts into a `(rows, t)` token buffer; returns
-/// the buffer and each request's last prompt position (an empty prompt
-/// reads position 0 of the all-pad row — it round-trips instead of
-/// erroring).  PJRT passes the fixed executable shape `(bucket, seq_len)`;
-/// the host path passes the tight `(n_requests, longest prompt)`.
-fn fill_tokens(batch: &ReadyBatch, rows: usize, t: usize) -> (Vec<i32>, Vec<usize>) {
-    let mut tokens = vec![0i32; rows * t];
-    let mut last_pos = vec![0usize; rows];
-    for (i, (req, _)) in batch.requests.iter().enumerate() {
-        let n = req.prompt.len().min(t);
-        tokens[i * t..i * t + n].copy_from_slice(&req.prompt[..n]);
-        last_pos[i] = n.saturating_sub(1);
+/// Advance every live decode session one token: feed back its last sampled
+/// token through the KV-cached step, sample the next, stream the event.
+/// Finished (or abandoned — client hung up) sessions are retired, and the
+/// KV-residency gauge is refreshed from what stays live.
+fn step_active(
+    active: &mut Vec<ActiveDecode>,
+    waiters: &mut BTreeMap<u64, Sender<Response>>,
+    metrics: &mut Metrics,
+) {
+    let mut i = 0;
+    while i < active.len() {
+        // Client hung up mid-stream → free the session (and its KV page).
+        if !waiters.contains_key(&active[i].id) {
+            active.remove(i);
+            continue;
+        }
+        let a = &mut active[i];
+        let t0 = Instant::now();
+        if let Err(e) = a.session.advance(a.last) {
+            eprintln!("serve worker: request {}: decode step failed: {e:#}", a.id);
+            waiters.remove(&a.id);
+            active.remove(i);
+            continue;
+        }
+        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
+        a.decode_ms += step_ms;
+        metrics.record_decode_step(a.bits, step_ms);
+        let (tok, logit) = a.session.sample();
+        a.last = tok;
+        a.remaining -= 1;
+        // Capacity can end a stream before max_new_tokens: the event is
+        // marked done so the client never waits on tokens that cannot come.
+        let done = a.remaining == 0 || !a.session.can_advance();
+        // The full stream rides only on the final event — intermediate
+        // events carry their token in `next_token`, so an n-token stream
+        // costs O(n) copies, not O(n²).
+        let resp = Response {
+            id: a.id,
+            next_token: tok,
+            logit,
+            tokens: if done {
+                a.session.generated().to_vec()
+            } else {
+                Vec::new()
+            },
+            done,
+            bits: a.bits,
+            int8_acts: a.int8,
+            queue_ms: 0.0,
+            compute_ms: step_ms,
+            prefill_ms: a.prefill_ms,
+            decode_ms: a.decode_ms,
+            batch_size: a.batch_size,
+        };
+        if done {
+            metrics.record(a.enq.elapsed().as_secs_f64() * 1e3, a.bits, a.batch_size);
+            if let Some(tx) = waiters.remove(&a.id) {
+                let _ = tx.send(resp);
+            }
+            active.remove(i);
+            continue;
+        }
+        let alive = waiters.get(&a.id).is_some_and(|tx| tx.send(resp).is_ok());
+        if !alive {
+            waiters.remove(&a.id);
+            active.remove(i);
+            continue;
+        }
+        i += 1;
     }
-    (tokens, last_pos)
+    metrics.set_kv_bytes(active.iter().map(|a| a.session.kv_bytes() as u64).sum());
 }
 
 /// Greedy-decode each request's next token from the batch logits and send
@@ -357,7 +528,7 @@ fn fill_tokens(batch: &ReadyBatch, rows: usize, t: usize) -> (Vec<i32>, Vec<usiz
 #[allow(clippy::too_many_arguments)]
 fn respond_greedy(
     logits: &[f32],
-    t: usize, // positions per logits row (seq_len for PJRT, tight t for host)
+    t: usize, // positions per logits row (seq_len for PJRT)
     vocab: usize,
     batch_bits: u32,
     batch_int8: bool,
@@ -380,14 +551,35 @@ fn respond_greedy(
                 id: req.id,
                 next_token,
                 logit,
+                tokens: vec![next_token],
+                done: true,
                 bits: batch_bits,
                 int8_acts: batch_int8,
                 queue_ms: queue_ms.max(0.0),
                 compute_ms: compute_ms / n_req as f64,
+                prefill_ms: compute_ms / n_req as f64,
+                decode_ms: 0.0,
                 batch_size: n_req,
             });
         }
     }
+}
+
+/// Pad-and-pack a batch's prompts into a `(rows, t)` token buffer; returns
+/// the buffer and each request's last prompt position (an empty prompt
+/// reads position 0 of the all-pad row — it round-trips instead of
+/// erroring).  PJRT passes the fixed executable shape `(bucket, seq_len)`;
+/// the host single-token fast path passes the tight
+/// `(n_requests, longest prompt)`.
+fn fill_tokens(batch: &ReadyBatch, rows: usize, t: usize) -> (Vec<i32>, Vec<usize>) {
+    let mut tokens = vec![0i32; rows * t];
+    let mut last_pos = vec![0usize; rows];
+    for (i, (req, _)) in batch.requests.iter().enumerate() {
+        let n = req.prompt.len().min(t);
+        tokens[i * t..i * t + n].copy_from_slice(&req.prompt[..n]);
+        last_pos[i] = n.saturating_sub(1);
+    }
+    (tokens, last_pos)
 }
 
 /// PJRT path: weight args as literals (dense sets convert resident
@@ -433,60 +625,162 @@ fn execute_batch_pjrt(
     Ok(())
 }
 
-/// Host path: the full forward pass from the weight store — fused
-/// packed-domain matmuls for paged precisions (payload bytes are the only
-/// resident weight state), dense f32 for warm ones, integer-domain GEMV
-/// when the batch asked for int8 activations.
+/// Host path, two shapes under one cached forward plan:
+///
+/// * **All-single-token batch** — one batched fused forward over the whole
+///   batch (tight `n_requests × longest-prompt`, no bucket padding): the
+///   packed payload streams once per GEMM block across every batchmate,
+///   exactly like the pre-decode host path.  Sampling is still
+///   per-request.
+/// * **Generation batch** — one [`DecodeSession`] per request (its own
+///   tight prompt length, KV capture needs b = 1): the first token streams
+///   immediately; sessions live on in `active` for the worker to step.
+///   A request whose prefill fails is answered with a closed channel
+///   without failing its batchmates.
+///
+/// `queue_ms` is measured to the batch's execution start for every member,
+/// so a batchmate's prefill compute never shows up as phantom queueing.
+#[allow(clippy::too_many_arguments)]
 fn execute_batch_host(
     preset: &PresetInfo,
     cfg: &ServerConfig,
-    store: &WeightStore,
+    store: &mut WeightStore,
     model: &QuantizedModel,
     batch: ReadyBatch,
     waiters: &mut BTreeMap<u64, Sender<Response>>,
     metrics: &mut Metrics,
+    active: &mut Vec<ActiveDecode>,
 ) -> Result<()> {
-    let seq = preset.model.seq_len;
-    let vocab = preset.model.vocab;
-    // Unlike PJRT the host forward has no fixed executable shape, so skip
-    // the batch bucket's padding rows and run only to the longest prompt —
-    // causal attention makes the last-position logits identical to the
-    // full-`seq_len` forward, at a fraction of the (t²) attention work.
-    let n_req = batch.requests.len();
-    let t = batch
-        .requests
-        .iter()
-        .map(|(r, _)| r.prompt.len().min(seq))
-        .max()
-        .unwrap_or(1)
-        .max(1);
-    let (tokens, last_pos) = fill_tokens(&batch, n_req, t);
+    let bits = batch.bits;
     let int8 = if batch.int8 {
         Some(cfg.act_quant)
     } else {
         None
     };
-    let view = store.forward_weights(batch.bits, int8)?;
-    let fw = HostForward::new(&preset.model, model, view)?;
-    let t0 = Instant::now();
-    let logits = fw.forward(&tokens, n_req, t)?;
-    let compute_ms = t0.elapsed().as_secs_f64() * 1e3;
-    metrics.record_batch(
-        batch.bits,
-        compute_ms,
-        store.host_batch_weight_bytes(batch.bits, batch.int8) as u64,
-    );
-    respond_greedy(
-        &logits.data,
-        t,
-        vocab,
-        batch.bits,
-        batch.int8,
-        batch.requests,
-        &last_pos,
-        compute_ms,
-        waiters,
-        metrics,
-    );
+    // Warm f32 traffic rides the dense plan; everything else (including
+    // int8 at a warm precision) needs packed handles.
+    let plan = if batch.int8 || !cfg.warm_bits.contains(&bits) {
+        store.plan_packed(model, &preset.model, bits, int8, metrics)?
+    } else {
+        store.plan_warm(model, &preset.model, bits, metrics)?
+    };
+    let n_req = batch.requests.len();
+    let batch_int8 = batch.int8;
+    let batch_start = Instant::now();
+
+    if batch.requests.iter().all(|(r, _)| r.max_new_tokens <= 1) {
+        // Batched fast path: amortize one fused multi-row forward across
+        // the whole batch.  Causal attention makes each request's
+        // last-position logits identical to its own tight forward.
+        let seq = preset.model.seq_len;
+        let vocab = preset.model.vocab;
+        let t = batch
+            .requests
+            .iter()
+            .map(|(r, _)| r.prompt.len().min(seq))
+            .max()
+            .unwrap_or(1)
+            .max(1);
+        let (tokens, last_pos) = fill_tokens(&batch, n_req, t);
+        let logits = plan.forward(&tokens, n_req, t)?;
+        let compute_ms = batch_start.elapsed().as_secs_f64() * 1e3;
+        metrics.record_batch(bits, compute_ms, plan.weight_bytes() as u64);
+        metrics.record_prefill(bits, compute_ms, (n_req * t) as u64);
+        for (i, (req, enq)) in batch.requests.into_iter().enumerate() {
+            let row_start = (i * t + last_pos[i]) * vocab;
+            let row = &logits.data[row_start..row_start + vocab];
+            let mut rng = match req.sampling {
+                Sampling::Temperature { seed, .. } => Rng::new(seed),
+                Sampling::Greedy => Rng::new(0),
+            };
+            let (next_token, logit) = sample_logits(row, &req.sampling, &mut rng);
+            let queue_ms = batch_start.saturating_duration_since(enq).as_secs_f64() * 1e3;
+            metrics.record(enq.elapsed().as_secs_f64() * 1e3, bits, n_req);
+            if let Some(tx) = waiters.remove(&req.id) {
+                let _ = tx.send(Response {
+                    id: req.id,
+                    next_token,
+                    logit,
+                    tokens: vec![next_token],
+                    done: true,
+                    bits,
+                    int8_acts: batch_int8,
+                    queue_ms,
+                    compute_ms: compute_ms / n_req as f64,
+                    prefill_ms: compute_ms / n_req as f64,
+                    decode_ms: 0.0,
+                    batch_size: n_req,
+                });
+            }
+        }
+        return Ok(());
+    }
+
+    let mut batch_ms = 0.0f64;
+    for (req, enq) in batch.requests {
+        let queue_ms = batch_start.saturating_duration_since(enq).as_secs_f64() * 1e3;
+        let t0 = Instant::now();
+        let mut session = match DecodeSession::with_budget(
+            plan.clone(),
+            &req.prompt,
+            req.sampling,
+            req.max_new_tokens,
+        ) {
+            Ok(s) => s,
+            Err(e) => {
+                eprintln!("serve worker: request {}: prefill failed: {e:#}", req.id);
+                waiters.remove(&req.id);
+                continue;
+            }
+        };
+        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
+        batch_ms += prefill_ms;
+        metrics.record_prefill(bits, prefill_ms, session.prompt_len() as u64);
+        let (tok, logit) = session.sample();
+        let done = req.max_new_tokens <= 1 || !session.can_advance();
+        let resp = Response {
+            id: req.id,
+            next_token: tok,
+            logit,
+            tokens: if done {
+                session.generated().to_vec()
+            } else {
+                Vec::new()
+            },
+            done,
+            bits,
+            int8_acts: batch_int8,
+            queue_ms,
+            compute_ms: prefill_ms,
+            prefill_ms,
+            decode_ms: 0.0,
+            batch_size: n_req,
+        };
+        if done {
+            metrics.record(enq.elapsed().as_secs_f64() * 1e3, bits, n_req);
+            if let Some(tx) = waiters.remove(&req.id) {
+                let _ = tx.send(resp);
+            }
+        } else {
+            let alive = waiters.get(&req.id).is_some_and(|tx| tx.send(resp).is_ok());
+            if !alive {
+                waiters.remove(&req.id);
+                continue;
+            }
+            active.push(ActiveDecode {
+                id: req.id,
+                session,
+                remaining: req.max_new_tokens - 1,
+                last: tok,
+                bits,
+                int8: batch_int8,
+                enq,
+                prefill_ms,
+                decode_ms: 0.0,
+                batch_size: n_req,
+            });
+        }
+    }
+    metrics.record_batch(bits, batch_ms, plan.weight_bytes() as u64);
     Ok(())
 }

@@ -7,9 +7,8 @@
 //! A paged set is decoded one tensor at a time only while literal arguments
 //! for a PJRT batch execution are being built (the transient peak is a
 //! single tensor, immediately converted and dropped); the **host serving
-//! path** ([`crate::runtime::HostForward`], via
-//! [`WeightStore::forward_weights`]) consumes the handles directly through
-//! the fused matmul kernels ([`crate::model::PackedWeight::matmul_into`] /
+//! path** consumes packed handles directly through the fused matmul
+//! kernels ([`crate::model::PackedWeight::matmul_into`] /
 //! [`crate::model::PackedWeight::matmul_i8_into`]) with no decode at all —
 //! an entire request is answered while only payload bytes are resident.
 //!
@@ -18,17 +17,31 @@
 //! [`crate::model::QuantizedTensor::materialize`] (enforced by
 //! `tests/kernel_conformance.rs` and `tests/serving.rs`), so the literals —
 //! and therefore the responses — cannot differ.
+//!
+//! The **host decode path** serves from cached [`ForwardPlan`]s instead of
+//! raw weight sets: [`WeightStore::plan_warm`] /
+//! [`WeightStore::plan_packed`] / [`WeightStore::plan_per_layer`] resolve
+//! the model once per precision spec ([`PlanKey`]) and hand out shared
+//! `Arc`s.  All packed plans draw their payload handles from one per-bits
+//! handle store, so switching precision mid-traffic, toggling int8
+//! activations, or composing a Mix'n'Match assignment reuses paged
+//! payloads rather than rebuilding them; persisted activation-clip
+//! calibration ([`WeightStore::set_calibration`]) is baked into int8 plans
+//! as fixed-clip quantizers at build time.
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::anyhow;
 
 use super::metrics::Metrics;
+use crate::model::manifest::ModelDims;
 use crate::model::{
     packed_payload_bytes, PackedWeight, PrecisionAssignment, QuantizedModel, Tensor,
 };
-use crate::runtime::{lit_tensor, ForwardWeights};
+use crate::quant::{ActCalibration, ActQuantConfig};
+use crate::runtime::{arc_packed, compose_per_layer, lit_tensor, plan_params, ForwardPlan};
 use crate::Result;
 
 /// One per-precision weight set.
@@ -61,9 +74,8 @@ impl WeightSet {
     }
 }
 
-/// Shared packed-payload build: derive the r-bit handles and record the
-/// page-in (bytes + latency) in `metrics`.  Both the lazy `Paged` sets and
-/// the int8 sibling builds go through here so their builds cannot drift.
+/// Shared packed-payload build for the PJRT lazy `Paged` sets: derive the
+/// r-bit handles and record the page-in (bytes + latency) in `metrics`.
 fn build_packed_set(
     model: &QuantizedModel,
     bits: u32,
@@ -80,15 +92,38 @@ fn build_packed_set(
     Ok((packed, payload_bytes))
 }
 
-/// The worker's precision → weight-set map.
+/// Cache key for one [`ForwardPlan`] — the precision spec the plan was
+/// resolved for.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PlanKey {
+    /// Dense f32 plan at a warm precision (f32-exact reference numerics).
+    Warm(u32),
+    /// Packed plan at a uniform precision, f32 or int8 activations.
+    Packed { bits: u32, int8: bool },
+    /// Packed plan under a per-layer Mix'n'Match assignment.
+    PerLayer { bits: Vec<u32>, int8: bool },
+}
+
+/// The worker's precision → weight-set map, plus the **forward-plan cache**
+/// the host decode path serves from: one resolved [`ForwardPlan`] per
+/// precision spec, sharing packed payload handles (and the non-quantized
+/// parameter `Arc`s) across plans — switching `r` mid-traffic, toggling
+/// int8, or serving a Mix'n'Match assignment reuses the paged payloads
+/// instead of rebuilding them.
 #[derive(Default)]
 pub struct WeightStore {
     sets: BTreeMap<u32, WeightSet>,
-    /// Packed-handle builds living *beside* a dense warm set at the same
-    /// precision: the int8-activation host path needs payload handles, and
-    /// a warm precision only has f32 tensors.  Keyed by bits; built on
-    /// demand by [`WeightStore::ensure_packed`].
-    packed_siblings: BTreeMap<u32, BTreeMap<String, PackedWeight>>,
+    /// Shared packed handle sets per uniform precision — the payload store
+    /// behind every packed plan (uniform and per-layer compose from here).
+    handles: BTreeMap<u32, BTreeMap<String, Arc<PackedWeight>>>,
+    /// Shared non-quantized parameter handles (embed/pos/norms/head),
+    /// built once, `Arc`-cloned into every packed plan.
+    params: Option<BTreeMap<String, Arc<Tensor>>>,
+    /// Cached forward plans per precision spec.
+    plans: BTreeMap<PlanKey, Arc<ForwardPlan>>,
+    /// Persisted per-layer activation clips; baked into int8 plans at
+    /// build time ([`WeightStore::set_calibration`]).
+    calibration: Option<Arc<ActCalibration>>,
 }
 
 impl WeightStore {
@@ -164,78 +199,150 @@ impl WeightStore {
         self.sets.get(&bits).map_or(0, |s| s.resident_bytes())
     }
 
-    /// Guarantee packed payload handles exist at `bits` for the
-    /// int8-activation host path.  A paged set already is one; a dense warm
-    /// set gets a sibling packed build (cached, page-in recorded in
-    /// `metrics`) so warm precisions keep serving f32 requests from the
-    /// dense tensors while int8 requests stream the payloads.
-    pub fn ensure_packed(
+    /// Install (or clear) the persisted activation-clip calibration
+    /// ([`crate::quant::calibration`]).  Clips are baked into int8 plans at
+    /// build time, so the cached plans are dropped — call this at boot,
+    /// before traffic.
+    pub fn set_calibration(&mut self, cal: Option<Arc<ActCalibration>>) {
+        self.calibration = cal;
+        self.plans.clear();
+    }
+
+    pub fn calibration(&self) -> Option<&ActCalibration> {
+        self.calibration.as_deref()
+    }
+
+    /// Cached plans currently resident.
+    pub fn plan_count(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn has_plan(&self, key: &PlanKey) -> bool {
+        self.plans.contains_key(key)
+    }
+
+    fn ensure_params(&mut self, model: &QuantizedModel) {
+        if self.params.is_none() {
+            self.params = Some(plan_params(model));
+        }
+    }
+
+    /// Page in the shared packed handle set at `bits` (recorded as a
+    /// page-in: payload bytes + build latency).
+    fn ensure_handles(
         &mut self,
         model: &QuantizedModel,
         bits: u32,
         metrics: &mut Metrics,
     ) -> Result<()> {
-        if matches!(self.sets.get(&bits), Some(WeightSet::Paged { .. }))
-            || self.packed_siblings.contains_key(&bits)
-        {
+        if self.handles.contains_key(&bits) {
             return Ok(());
         }
-        let (packed, _) = build_packed_set(model, bits, metrics)?;
-        self.packed_siblings.insert(bits, packed);
+        let t0 = Instant::now();
+        let packed = arc_packed(model.packed_weights(bits, false)?);
+        let payload: usize = packed.values().map(|p| p.payload_bytes()).sum();
+        metrics.record_page_in(bits, payload as u64, t0.elapsed().as_secs_f64() * 1e3);
+        self.handles.insert(bits, packed);
         Ok(())
     }
 
-    /// Borrowed weight view for the host forward pass
-    /// ([`crate::runtime::HostForward`]).
-    ///
-    /// * `int8 == None` — dense sets serve the f32 reference path, paged
-    ///   sets serve fused packed matmuls.
-    /// * `int8 == Some(cfg)` — requires packed handles: the paged set's
-    ///   own, or the sibling build from [`WeightStore::ensure_packed`].
-    pub fn forward_weights(
-        &self,
+    /// The dense f32 plan at a warm precision: materialize once at boot
+    /// (recorded like any warm build), serve f32-exact reference numerics
+    /// from then on.
+    pub fn plan_warm(
+        &mut self,
+        model: &QuantizedModel,
+        dims: &ModelDims,
         bits: u32,
-        int8: Option<crate::quant::ActQuantConfig>,
-    ) -> Result<ForwardWeights<'_>> {
-        if let Some(cfg) = int8 {
-            let packed = match self.sets.get(&bits) {
-                Some(WeightSet::Paged { packed, .. }) => packed,
-                _ => self.packed_siblings.get(&bits).ok_or_else(|| {
-                    anyhow!("int8 activations at int{bits} need a packed build — call ensure_packed first")
-                })?,
-            };
-            return Ok(ForwardWeights::Packed {
-                packed,
-                int8: Some(cfg),
-            });
+        metrics: &mut Metrics,
+    ) -> Result<Arc<ForwardPlan>> {
+        let key = PlanKey::Warm(bits);
+        if let Some(p) = self.plans.get(&key) {
+            return Ok(p.clone());
         }
-        match self.sets.get(&bits) {
-            None => Err(anyhow!("no weight set for int{bits}")),
-            Some(WeightSet::Dense { weights, biases }) => Ok(ForwardWeights::Dense {
-                weights: weights.as_slice(),
-                biases: biases.as_slice(),
-            }),
-            Some(WeightSet::Paged { packed, .. }) => Ok(ForwardWeights::Packed {
-                packed,
-                int8: None,
-            }),
-        }
+        let t0 = Instant::now();
+        let (weights, biases) = model.materialize(&PrecisionAssignment::uniform(bits))?;
+        let plan = Arc::new(ForwardPlan::from_dense(dims, model, weights, biases)?);
+        metrics.record_materialize(bits, t0.elapsed().as_secs_f64() * 1e3);
+        self.plans.insert(key, plan.clone());
+        Ok(plan)
     }
 
-    /// Weight bytes a *host* forward at `bits` touches: payload bytes for
-    /// packed execution (including int8-on-warm sibling builds), resident
-    /// f32 bytes for the dense reference path.
-    pub fn host_batch_weight_bytes(&self, bits: u32, int8: bool) -> usize {
-        if int8 {
-            if let Some(WeightSet::Paged { payload_bytes, .. }) = self.sets.get(&bits) {
-                return *payload_bytes;
-            }
-            return self
-                .packed_siblings
-                .get(&bits)
-                .map_or(0, packed_payload_bytes);
+    /// The packed plan at a uniform precision (f32 or int8 activations).
+    /// Payload handles are shared with every other plan at `bits`, so the
+    /// int8 sibling of an f32 plan (or vice versa) costs only the resolve.
+    pub fn plan_packed(
+        &mut self,
+        model: &QuantizedModel,
+        dims: &ModelDims,
+        bits: u32,
+        int8: Option<ActQuantConfig>,
+        metrics: &mut Metrics,
+    ) -> Result<Arc<ForwardPlan>> {
+        let key = PlanKey::Packed {
+            bits,
+            int8: int8.is_some(),
+        };
+        if let Some(p) = self.plans.get(&key) {
+            return Ok(p.clone());
         }
-        self.batch_weight_bytes(bits)
+        self.ensure_handles(model, bits, metrics)?;
+        self.ensure_params(model);
+        let packed = &self.handles[&bits];
+        let params = self.params.as_ref().expect("params ensured above");
+        let plan = Arc::new(ForwardPlan::from_packed(
+            dims,
+            model,
+            params,
+            packed,
+            int8,
+            self.calibration.as_deref(),
+        )?);
+        self.plans.insert(key, plan.clone());
+        Ok(plan)
+    }
+
+    /// The packed plan under a per-layer Mix'n'Match assignment (e.g. from
+    /// [`crate::mixnmatch::sensitivity::suggest_assignment`]): each layer's
+    /// handles are `Arc`-shared with the uniform set at that layer's
+    /// precision, so a mixed plan pages in only the precisions it actually
+    /// uses.
+    pub fn plan_per_layer(
+        &mut self,
+        model: &QuantizedModel,
+        dims: &ModelDims,
+        assign: &[u32],
+        int8: Option<ActQuantConfig>,
+        metrics: &mut Metrics,
+    ) -> Result<Arc<ForwardPlan>> {
+        let key = PlanKey::PerLayer {
+            bits: assign.to_vec(),
+            int8: int8.is_some(),
+        };
+        if let Some(p) = self.plans.get(&key) {
+            return Ok(p.clone());
+        }
+        let mut distinct = assign.to_vec();
+        distinct.sort_unstable();
+        distinct.dedup();
+        for &b in &distinct {
+            self.ensure_handles(model, b, metrics)?;
+        }
+        self.ensure_params(model);
+        let packed = compose_per_layer(model, &self.handles, assign)?;
+        let params = self.params.as_ref().expect("params ensured above");
+        let mut plan = ForwardPlan::from_packed(
+            dims,
+            model,
+            params,
+            &packed,
+            int8,
+            self.calibration.as_deref(),
+        )?;
+        plan.per_layer = Some(assign.to_vec());
+        let plan = Arc::new(plan);
+        self.plans.insert(key, plan.clone());
+        Ok(plan)
     }
 
     /// Build the weight + bias literal arguments for one batch execution,

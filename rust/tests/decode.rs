@@ -1,0 +1,641 @@
+//! Incremental-decode conformance — the KV-cache counterpart of
+//! `tests/forward.rs`.
+//!
+//! The load-bearing property: **N KV-cached decode steps produce logits
+//! bit-identical to N full re-forwards** over the growing token stream —
+//! on the dense f32 path (exact by construction: every op is
+//! row-independent and the attention kernel is shared) and on the packed
+//! path, across every supported r ∈ {1, 2, 3, 4, 6, 8} with and without
+//! Eq. 8 extra-precision overlays.  If this holds, the decode engine is
+//! free speed: same answers, O(n) per token instead of O(n²).
+//!
+//! Also here: Mix'n'Match per-layer plans vs the per-layer dense
+//! reference, plan caching/payload sharing in the `WeightStore`,
+//! calibration persistence, and the host server's multi-token streaming
+//! (validation, greedy/temperature determinism, capacity truncation).
+//!
+//! Everything runs unconditionally — no artifacts, no PJRT.
+
+use std::sync::Arc;
+
+use matquant::data::Rng;
+use matquant::model::manifest::ModelDims;
+use matquant::model::testing::toy_transformer;
+use matquant::model::{PrecisionAssignment, PresetInfo, QuantizedModel};
+use matquant::quant::{ActCalibration, ActQuantConfig};
+use matquant::runtime::{
+    DecodeSession, ForwardPlan, ForwardWeights, HostForward, Sampling,
+};
+use matquant::serve::{Metrics, PlanKey, PrecisionReq, Request, Server, ServerConfig, WeightStore};
+
+fn toy_dims() -> ModelDims {
+    ModelDims {
+        vocab: 48,
+        d_model: 24,
+        n_layers: 2,
+        n_heads: 3,
+        d_ff: 48,
+        seq_len: 10,
+        quantize_attn: false,
+    }
+}
+
+fn toy_model(seed: u64) -> (PresetInfo, QuantizedModel) {
+    toy_transformer(toy_dims(), seed)
+}
+
+fn host_cfg(warm: Vec<u32>) -> ServerConfig {
+    ServerConfig {
+        preset: "toy".into(),
+        max_wait_ms: 0.5,
+        warm_bits: warm,
+        ..ServerConfig::default()
+    }
+}
+
+/// Drive `session` to the position capacity, asserting after the prefill
+/// and after every step that its logits are bit-identical to the last
+/// position of `reference_last_row(stream)`.
+fn assert_decode_matches_reforward<F>(
+    session: &mut DecodeSession,
+    prompt: &[i32],
+    reference_last_row: F,
+    label: &str,
+) where
+    F: Fn(&[i32]) -> Vec<f32>,
+{
+    let mut stream: Vec<i32> = prompt.to_vec();
+    let mut step = 0usize;
+    loop {
+        let want = reference_last_row(&stream);
+        let got = session.logits();
+        assert_eq!(got.len(), want.len(), "{label} step {step}: logit arity");
+        for (j, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert_eq!(
+                g.to_bits(),
+                w.to_bits(),
+                "{label} step {step} logit {j}: {g} vs {w}"
+            );
+        }
+        let (tok, _) = session.sample();
+        stream.push(tok);
+        if !session.can_advance() {
+            break;
+        }
+        session.advance(tok).unwrap();
+        step += 1;
+    }
+    assert!(step > 0, "{label}: no decode step was actually exercised");
+}
+
+// ---------------------------------------------------------------------------
+// KV-cache equivalence (the acceptance property)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn cached_decode_bit_identical_to_full_reforward_dense() {
+    // f32 path: N cached steps == N full re-forwards, bit for bit, for
+    // every supported r and with extra-precision overlays.
+    let (preset, model) = toy_model(11);
+    let v = preset.model.vocab;
+    let prompt: Vec<i32> = vec![3, 17, 2, 40];
+    for bits in [1u32, 2, 3, 4, 6, 8] {
+        for ep in [false, true] {
+            let assign = PrecisionAssignment::Uniform {
+                bits,
+                extra_precision: ep,
+            };
+            let (weights, biases) = model.materialize(&assign).unwrap();
+            let reference = HostForward::new(
+                &preset.model,
+                &model,
+                ForwardWeights::Dense {
+                    weights: &weights,
+                    biases: &biases,
+                },
+            )
+            .unwrap();
+            let plan = Arc::new(
+                ForwardPlan::from_dense(
+                    &preset.model,
+                    &model,
+                    weights.clone(),
+                    biases.clone(),
+                )
+                .unwrap(),
+            );
+            let mut session =
+                DecodeSession::new(plan, &prompt, Sampling::Greedy).unwrap();
+            assert_decode_matches_reforward(
+                &mut session,
+                &prompt,
+                |stream| {
+                    let t = stream.len();
+                    let full = reference.forward(stream, 1, t).unwrap();
+                    full.data[(t - 1) * v..t * v].to_vec()
+                },
+                &format!("dense bits={bits} ep={ep}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn cached_decode_bit_identical_on_the_packed_path() {
+    // Packed path: the fused GEMM processes rows independently (proven in
+    // kernel tests), so cached steps match a full packed re-forward
+    // exactly too — at every r, with and without overlays.
+    let (preset, model) = toy_model(13);
+    let v = preset.model.vocab;
+    let prompt: Vec<i32> = vec![5, 9, 33];
+    for bits in [1u32, 2, 3, 4, 6, 8] {
+        for ep in [false, true] {
+            let plan =
+                ForwardPlan::packed_uniform(&preset.model, &model, bits, ep, None, None)
+                    .unwrap();
+            let full_plan = plan.clone();
+            let mut session =
+                DecodeSession::new(plan, &prompt, Sampling::Greedy).unwrap();
+            assert_decode_matches_reforward(
+                &mut session,
+                &prompt,
+                |stream| {
+                    let t = stream.len();
+                    let full = full_plan.forward(stream, 1, t).unwrap();
+                    full.data[(t - 1) * v..t * v].to_vec()
+                },
+                &format!("packed bits={bits} ep={ep}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn cached_decode_bit_identical_with_int8_activations() {
+    // Per-token-row activation quantization keeps rows independent, so
+    // even the integer-domain path decodes bit-identically to its own
+    // full re-forward.
+    let (preset, model) = toy_model(17);
+    let v = preset.model.vocab;
+    let prompt: Vec<i32> = vec![7, 21, 14, 2];
+    for bits in [4u32, 8] {
+        let plan = ForwardPlan::packed_uniform(
+            &preset.model,
+            &model,
+            bits,
+            false,
+            Some(ActQuantConfig::absmax()),
+            None,
+        )
+        .unwrap();
+        let full_plan = plan.clone();
+        let mut session = DecodeSession::new(plan, &prompt, Sampling::Greedy).unwrap();
+        assert_decode_matches_reforward(
+            &mut session,
+            &prompt,
+            |stream| {
+                let t = stream.len();
+                let full = full_plan.forward(stream, 1, t).unwrap();
+                full.data[(t - 1) * v..t * v].to_vec()
+            },
+            &format!("i8 bits={bits}"),
+        );
+    }
+}
+
+#[test]
+fn cached_decode_equivalence_property_sweep() {
+    // Seeded property harness: random model seeds, prompt lengths,
+    // contents, and precisions — the equivalence must hold everywhere, not
+    // just on the hand-picked cases above.
+    let mut rng = Rng::new(0xDEC0DE);
+    let widths = [1u32, 2, 3, 4, 6, 8];
+    for case in 0..6 {
+        let (preset, model) = toy_model(100 + case);
+        let v = preset.model.vocab;
+        let bits = *rng.choose(&widths);
+        let ep = rng.below(2) == 1;
+        let plen = 1 + rng.below(preset.model.seq_len - 2);
+        let prompt: Vec<i32> = (0..plen).map(|_| rng.below(v) as i32).collect();
+        let plan =
+            ForwardPlan::packed_uniform(&preset.model, &model, bits, ep, None, None).unwrap();
+        let full_plan = plan.clone();
+        let mut session = DecodeSession::new(plan, &prompt, Sampling::Greedy).unwrap();
+        assert_decode_matches_reforward(
+            &mut session,
+            &prompt,
+            |stream| {
+                let t = stream.len();
+                let full = full_plan.forward(stream, 1, t).unwrap();
+                full.data[(t - 1) * v..t * v].to_vec()
+            },
+            &format!("case {case} bits={bits} ep={ep} plen={plen}"),
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Session edges
+// ---------------------------------------------------------------------------
+
+#[test]
+fn session_truncates_pads_and_stops_at_capacity() {
+    let (preset, model) = toy_model(19);
+    let seq = preset.model.seq_len;
+    let plan = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    // over-long prompt truncates to the position capacity and cannot step
+    let long: Vec<i32> = (0..seq + 5).map(|i| (i % 7) as i32).collect();
+    let mut s = DecodeSession::new(plan.clone(), &long, Sampling::Greedy).unwrap();
+    assert_eq!(s.prompt_len(), seq);
+    assert!(!s.can_advance());
+    let (tok, _) = s.sample();
+    assert!(s.advance(tok).is_err(), "capacity-full session must refuse to step");
+    // empty prompt pads to one position, like the batch path
+    let mut e = DecodeSession::new(plan.clone(), &[], Sampling::Greedy).unwrap();
+    assert_eq!(e.prompt_len(), 1);
+    assert!(e.can_advance());
+    let (tok, _) = e.sample();
+    e.advance(tok).unwrap();
+    assert_eq!(e.positions(), 2);
+    assert!(e.kv_bytes() > 0);
+    // bad sampling params never build a session
+    assert!(DecodeSession::new(
+        plan,
+        &[1, 2],
+        Sampling::Temperature {
+            temp: f32::NAN,
+            seed: 1
+        }
+    )
+    .is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Mix'n'Match per-layer plans (satellite: servable, not just rankable)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn per_layer_plan_matches_per_layer_dense_reference() {
+    let (preset, model) = toy_model(41);
+    let t = preset.model.seq_len;
+    let tokens: Vec<i32> = (0..t).map(|i| ((i * 11 + 3) % preset.model.vocab) as i32).collect();
+    let assign = vec![8u32, 2];
+    // dense reference at the same per-layer assignment
+    let (weights, biases) = model
+        .materialize(&PrecisionAssignment::PerLayer {
+            bits: assign.clone(),
+            extra_precision: false,
+        })
+        .unwrap();
+    let reference = HostForward::new(
+        &preset.model,
+        &model,
+        ForwardWeights::Dense {
+            weights: &weights,
+            biases: &biases,
+        },
+    )
+    .unwrap();
+    let want = reference.forward(&tokens, 1, t).unwrap();
+    // HostForward accepts the per-layer packed map directly
+    let handles = model.packed_weights_per_layer(&assign, false).unwrap();
+    let hf = HostForward::new(
+        &preset.model,
+        &model,
+        ForwardWeights::Packed {
+            packed: &handles,
+            int8: None,
+        },
+    )
+    .unwrap();
+    let got_hf = hf.forward(&tokens, 1, t).unwrap();
+    // the plan carries the same assignment
+    let plan =
+        ForwardPlan::packed_per_layer(&preset.model, &model, &assign, false, None, None).unwrap();
+    assert_eq!(plan.per_layer.as_deref(), Some(&assign[..]));
+    let got = plan.forward(&tokens, 1, t).unwrap();
+    // plan ≡ HostForward on the packed path (same kernels, bit for bit)
+    for (i, (g, h)) in got.data.iter().zip(&got_hf.data).enumerate() {
+        assert_eq!(g.to_bits(), h.to_bits(), "plan vs HostForward logit {i}");
+    }
+    // and both match the dense per-layer reference within the usual
+    // accumulation-order tolerance (cf. tests/forward.rs)
+    for (i, (g, w)) in got.data.iter().zip(&want.data).enumerate() {
+        let tol = 2e-3f32 * (1.0 + w.abs());
+        assert!((g - w).abs() <= tol, "logit {i}: {g} vs {w}");
+    }
+    // the assignment must be live: all-int8 disagrees with [8, 2]
+    let uni = ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+    let u = uni.forward(&tokens, 1, t).unwrap();
+    let max_diff = u
+        .data
+        .iter()
+        .zip(&got.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    assert!(max_diff > 1e-3, "per-layer assignment was inert ({max_diff})");
+}
+
+// ---------------------------------------------------------------------------
+// WeightStore plan caching + payload sharing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn weight_store_caches_plans_and_reuses_paged_payloads() {
+    let (preset, model) = toy_model(43);
+    let mut store = WeightStore::new();
+    let mut metrics = Metrics::default();
+    let p1 = store
+        .plan_packed(&model, &preset.model, 4, None, &mut metrics)
+        .unwrap();
+    let p2 = store
+        .plan_packed(&model, &preset.model, 4, None, &mut metrics)
+        .unwrap();
+    assert!(Arc::ptr_eq(&p1, &p2), "same spec must hit the cache");
+    assert_eq!(store.plan_count(), 1);
+    let paged_after_first = metrics.page_in_bytes(4);
+    assert!(paged_after_first > 0, "packed plan must record its page-in");
+    // int8 sibling at the same bits: a new plan, but zero new payload
+    let p3 = store
+        .plan_packed(
+            &model,
+            &preset.model,
+            4,
+            Some(ActQuantConfig::absmax()),
+            &mut metrics,
+        )
+        .unwrap();
+    assert!(!Arc::ptr_eq(&p1, &p3));
+    assert_eq!(
+        metrics.page_in_bytes(4),
+        paged_after_first,
+        "int8 sibling must reuse the paged payloads"
+    );
+    assert!(store.has_plan(&PlanKey::Packed { bits: 4, int8: true }));
+    // a Mix'n'Match plan composes from the same handle sets
+    let pl = store
+        .plan_per_layer(&model, &preset.model, &[8, 4], None, &mut metrics)
+        .unwrap();
+    assert_eq!(pl.per_layer.as_deref(), Some(&[8u32, 4][..]));
+    assert_eq!(
+        metrics.page_in_bytes(4),
+        paged_after_first,
+        "per-layer plan must reuse the int4 handles"
+    );
+    assert!(metrics.page_in_bytes(8) > 0, "int8 handles paged on demand");
+    // warm dense plan is f32-resident and heavier
+    let w = store
+        .plan_warm(&model, &preset.model, 8, &mut metrics)
+        .unwrap();
+    assert!(w.weight_bytes() > p1.weight_bytes());
+}
+
+// ---------------------------------------------------------------------------
+// Calibration: compute → persist → load → serve
+// ---------------------------------------------------------------------------
+
+#[test]
+fn calibration_persists_and_serves_fixed_clips() {
+    let (preset, model) = toy_model(31);
+    let t = preset.model.seq_len;
+    let v = preset.model.vocab;
+    let tokens: Vec<i32> = (0..2 * t).map(|i| ((i * 7 + 1) % v) as i32).collect();
+    let f32_plan =
+        ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+    let cal = f32_plan
+        .calibrate(&tokens, 2, t, &ActQuantConfig::clipped(0.999))
+        .unwrap();
+    for qn in &model.quantized_order {
+        assert!(cal.clip_for(qn).unwrap_or(0.0) > 0.0, "{qn} uncalibrated");
+    }
+    // persist beside a (hypothetical) checkpoint and load back
+    let dir = std::env::temp_dir().join("mq_decode_cal_test");
+    let path = ActCalibration::beside(dir.join("model.mqck"));
+    cal.save(&path).unwrap();
+    let loaded = ActCalibration::load(&path).unwrap();
+    assert_eq!(loaded, cal);
+    // fixed-clip int8 forward stays within the usual i8 error of f32
+    let i8_plan = ForwardPlan::packed_uniform(
+        &preset.model,
+        &model,
+        8,
+        false,
+        Some(ActQuantConfig::absmax()),
+        Some(&loaded),
+    )
+    .unwrap();
+    let want = f32_plan.forward(&tokens[..t], 1, t).unwrap();
+    let got = i8_plan.forward(&tokens[..t], 1, t).unwrap();
+    let num: f32 = got
+        .data
+        .iter()
+        .zip(&want.data)
+        .map(|(g, w)| (g - w) * (g - w))
+        .sum();
+    let den: f32 = want.data.iter().map(|w| w * w).sum::<f32>().max(1e-12);
+    let rel = (num / den).sqrt();
+    assert!(rel > 0.0, "calibrated i8 path identical to f32 — inert?");
+    assert!(rel < 0.15, "calibrated i8 rel err {rel}");
+    // served end-to-end: the worker loads the sidecar at boot
+    let cfg = ServerConfig {
+        calibration: Some(path.clone()),
+        ..host_cfg(vec![])
+    };
+    let server = Server::start_host(preset.clone(), model, cfg).unwrap();
+    let req = Request {
+        int8_acts: true,
+        ..Request::generate(1, vec![1, 2, 3], PrecisionReq::Bits(8), 3, Sampling::Greedy)
+    };
+    let r = server.infer(req).unwrap();
+    assert!(r.done);
+    assert!(r.int8_acts);
+    assert_eq!(r.tokens.len(), 3);
+    assert!(r.tokens.iter().all(|&t| (0..v as i32).contains(&t)));
+    server.shutdown().unwrap();
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+// ---------------------------------------------------------------------------
+// Host server: multi-token streaming end-to-end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn host_server_streams_greedy_generation() {
+    let (preset, model) = toy_model(23);
+    // expected stream: a direct session on the same (packed int4) plan
+    let plan = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    let prompt = vec![1i32, 2, 3];
+    let n = 4usize;
+    let mut s = DecodeSession::new(plan, &prompt, Sampling::Greedy).unwrap();
+    let mut expect = Vec::new();
+    for k in 0..n {
+        let (tok, _) = s.sample();
+        expect.push(tok);
+        if k + 1 < n {
+            s.advance(tok).unwrap();
+        }
+    }
+
+    let server = Server::start_host(preset.clone(), model, host_cfg(vec![])).unwrap();
+    let rx = server
+        .submit(Request::generate(
+            7,
+            prompt,
+            PrecisionReq::Bits(4),
+            n,
+            Sampling::Greedy,
+        ))
+        .unwrap();
+    let mut events = Vec::new();
+    loop {
+        let r = rx.recv().expect("stream must not close early");
+        let done = r.done;
+        events.push(r);
+        if done {
+            break;
+        }
+    }
+    assert_eq!(events.len(), n, "one event per generated token");
+    for (k, e) in events.iter().enumerate() {
+        assert_eq!(e.id, 7);
+        assert_eq!(e.bits, 4);
+        assert_eq!(e.next_token, expect[k], "event {k}");
+        assert_eq!(e.done, k + 1 == n);
+        if !e.done {
+            // intermediate events carry only next_token — the complete
+            // stream rides on the final event
+            assert!(e.tokens.is_empty(), "event {k} should not carry the stream");
+        }
+    }
+    let last = events.last().unwrap();
+    assert_eq!(last.tokens, expect, "final event carries the whole stream");
+    assert!(last.prefill_ms >= 0.0 && last.decode_ms >= 0.0);
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("prefill=[int4:1x"), "{report}");
+    assert!(report.contains("decode=[int4:3x"), "{report}");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn generation_truncates_at_capacity_with_done() {
+    // prompt fills most of the window; the stream ends early, marked done,
+    // instead of hanging on tokens that can never come.
+    let (preset, model) = toy_model(29);
+    let seq = preset.model.seq_len;
+    let prompt: Vec<i32> = (0..seq - 2).map(|i| (i % 5) as i32).collect();
+    let server = Server::start_host(preset.clone(), model, host_cfg(vec![])).unwrap();
+    let r = server
+        .infer(Request::generate(
+            1,
+            prompt,
+            PrecisionReq::Bits(4),
+            seq, // wants far more than capacity allows
+            Sampling::Greedy,
+        ))
+        .unwrap();
+    assert!(r.done);
+    // prompt consumed seq-2 positions → 2 advances fit → 3 tokens total
+    assert_eq!(r.tokens.len(), 3, "{:?}", r.tokens);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn temperature_sampling_is_deterministic_per_seed_through_the_server() {
+    let (preset, model) = toy_model(37);
+    let v = preset.model.vocab;
+    let server = Server::start_host(preset.clone(), model, host_cfg(vec![])).unwrap();
+    let sampling = Sampling::Temperature {
+        temp: 0.9,
+        seed: 1234,
+    };
+    let run = |id: u64| {
+        server
+            .infer(Request::generate(
+                id,
+                vec![4, 8, 15],
+                PrecisionReq::Bits(4),
+                5,
+                sampling,
+            ))
+            .unwrap()
+    };
+    let a = run(1);
+    let b = run(2);
+    assert_eq!(a.tokens.len(), 5);
+    assert_eq!(a.tokens, b.tokens, "same seed must reproduce the stream");
+    assert!(a.tokens.iter().all(|&t| (0..v as i32).contains(&t)));
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn malformed_generation_params_rejected_without_stalling_batchmates() {
+    let (preset, model) = toy_model(47);
+    let seq = preset.model.seq_len;
+    let server = Server::start_host(preset.clone(), model, host_cfg(vec![])).unwrap();
+    // max_new_tokens = 0: nothing to produce
+    let zero = server
+        .submit(Request::generate(1, vec![1], PrecisionReq::Bits(4), 0, Sampling::Greedy))
+        .unwrap();
+    // absurd max_new_tokens: past the position capacity
+    let absurd = server
+        .submit(Request::generate(
+            2,
+            vec![1],
+            PrecisionReq::Bits(4),
+            seq + 1,
+            Sampling::Greedy,
+        ))
+        .unwrap();
+    // malformed temperatures
+    let nan_temp = server
+        .submit(Request::generate(
+            3,
+            vec![1],
+            PrecisionReq::Bits(4),
+            2,
+            Sampling::Temperature {
+                temp: f32::NAN,
+                seed: 1,
+            },
+        ))
+        .unwrap();
+    let zero_temp = server
+        .submit(Request::generate(
+            4,
+            vec![1],
+            PrecisionReq::Bits(4),
+            2,
+            Sampling::Temperature { temp: 0.0, seed: 1 },
+        ))
+        .unwrap();
+    // a valid batchmate at the same precision still gets served
+    let good = server
+        .submit(Request::generate(5, vec![1, 2], PrecisionReq::Bits(4), 2, Sampling::Greedy))
+        .unwrap();
+    assert!(zero.recv().is_err(), "max_new_tokens=0 must reject");
+    assert!(absurd.recv().is_err(), "absurd max_new_tokens must reject");
+    assert!(nan_temp.recv().is_err(), "NaN temperature must reject");
+    assert!(zero_temp.recv().is_err(), "zero temperature must reject");
+    let r = good.recv().expect("valid batchmate must still be answered");
+    assert_eq!(r.id, 5);
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn kv_gauge_returns_to_zero_after_streams_finish() {
+    let (preset, model) = toy_model(53);
+    let server = Server::start_host(preset.clone(), model, host_cfg(vec![])).unwrap();
+    let r = server
+        .infer(Request::generate(
+            1,
+            vec![2, 4, 6],
+            PrecisionReq::Bits(2),
+            4,
+            Sampling::Greedy,
+        ))
+        .unwrap();
+    assert_eq!(r.tokens.len(), 4);
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("kv_bytes=0"), "{report}");
+    server.shutdown().unwrap();
+}
