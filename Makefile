@@ -26,10 +26,10 @@ test:
 	cd rust && cargo build --release && cargo test -q
 
 # The debug+release conformance matrix CI runs (kernels + host forward +
-# KV-cached decode).
+# KV-cached decode + continuous-batching scheduler).
 conformance:
-	cd rust && cargo test -q --test kernel_conformance --test forward --test decode --test goldens --test quant_edges --test serving
-	cd rust && cargo test --release -q --test kernel_conformance --test forward --test decode --test goldens --test quant_edges --test serving
+	cd rust && cargo test -q --test kernel_conformance --test forward --test decode --test scheduler --test goldens --test quant_edges --test serving
+	cd rust && cargo test --release -q --test kernel_conformance --test forward --test decode --test scheduler --test goldens --test quant_edges --test serving
 
 bench:
 	cd rust && cargo bench --bench quant_hot_paths

@@ -3,7 +3,9 @@
 //! Perf targets in DESIGN.md §Perf (slicing ≥ 1 GB/s of codes on this
 //! single-core testbed); ISSUE 2 acceptance: fused matvec/matmul beats
 //! materialize-then-matmul at int2/int4 on these shapes; ISSUE 3 adds the
-//! host-forward tokens/sec rows (dense vs packed vs packed+i8 activations).
+//! host-forward tokens/sec rows (dense vs packed vs packed+i8 activations);
+//! ISSUE 5 adds the continuous-batching rows (scheduler step rounds vs
+//! per-session stepping at 1/4/16 concurrent sessions).
 //!
 //! Run: `cargo bench --bench quant_hot_paths`
 
@@ -17,7 +19,8 @@ use matquant::model::testing::toy_transformer;
 use matquant::model::{manifest::ModelDims, PrecisionAssignment, Tensor};
 use matquant::quant::{self, ActQuantConfig, PackedTensor};
 use matquant::runtime::{
-    argmax_logit, DecodeSession, ForwardPlan, ForwardWeights, HostForward, Sampling,
+    advance_sessions, argmax_logit, DecodeSession, ForwardPlan, ForwardWeights, HostForward,
+    Sampling,
 };
 use matquant::util::bench::{bench, default_budget};
 
@@ -453,6 +456,104 @@ fn main() {
             println!(
                 "decode {tag} p{p_len}+n{n_new} @ int{bits}: prefill {prefill_tps:.0} tok/s | cached steps {decode_tps:.0} tok/s | re-forward {reforward_tps:.0} tok/s | {:.2}x vs re-forward",
                 decode_tps / reforward_tps
+            );
+        }
+    }
+
+    // ---- continuous-batching scheduler: step rounds vs per-session
+    // stepping (ISSUE 5 acceptance).  Aggregate tokens/sec at 1/4/16
+    // concurrent sessions: "solo" is the pre-scheduler worker (each
+    // session advanced alone — N fused matvec sweeps per token), "rounds"
+    // is the scheduler's batched GEMM step round (ONE blocked fused GEMM
+    // per layer across all members — the payload streams once per round,
+    // so weight bytes per generated token shrink with occupancy; the
+    // printed bytes are per-round vs summed per-session).
+    let vocab = preset.model.vocab;
+    let sp_len = 8usize;
+    let sn_new = 16usize;
+    let reps = 4usize;
+    let sched_plans: Vec<(&str, Arc<ForwardPlan>)> = vec![
+        (
+            "dense    ",
+            ForwardPlan::dense_uniform(&preset.model, &fwd_model, 4, false).unwrap(),
+        ),
+        (
+            "packed   ",
+            ForwardPlan::packed_uniform(&preset.model, &fwd_model, 4, false, None, None).unwrap(),
+        ),
+        (
+            "packed+i8",
+            ForwardPlan::packed_uniform(
+                &preset.model,
+                &fwd_model,
+                4,
+                false,
+                Some(ActQuantConfig::absmax()),
+                None,
+            )
+            .unwrap(),
+        ),
+    ];
+    for (tag, plan) in &sched_plans {
+        for conc in [1usize, 4, 16] {
+            let prompts: Vec<Vec<i32>> = (0..conc)
+                .map(|c| {
+                    (0..sp_len)
+                        .map(|i| ((i * 13 + 2 + 7 * c) % vocab) as i32)
+                        .collect()
+                })
+                .collect();
+            let specs: Vec<(&[i32], Sampling, usize)> = prompts
+                .iter()
+                .map(|p| (p.as_slice(), Sampling::Greedy, sn_new + 1))
+                .collect();
+            // per-session stepping (solo prefills, solo steps)
+            let mut solo_s = 0.0f64;
+            for _ in 0..reps {
+                let mut sessions: Vec<DecodeSession> = prompts
+                    .iter()
+                    .map(|p| {
+                        DecodeSession::with_budget(
+                            plan.clone(),
+                            p,
+                            Sampling::Greedy,
+                            sn_new + 1,
+                        )
+                        .unwrap()
+                    })
+                    .collect();
+                let t0 = Instant::now();
+                for _ in 0..sn_new {
+                    for s in sessions.iter_mut() {
+                        let (tok, _) = s.sample();
+                        s.advance(tok).unwrap();
+                    }
+                }
+                solo_s += t0.elapsed().as_secs_f64();
+                std::hint::black_box(&sessions);
+            }
+            // scheduler-style rounds (batched prefill, batched steps)
+            let mut round_s = 0.0f64;
+            for _ in 0..reps {
+                let mut sessions = DecodeSession::prefill_many(plan, &specs).unwrap();
+                let t0 = Instant::now();
+                for _ in 0..sn_new {
+                    let tokens: Vec<i32> =
+                        sessions.iter_mut().map(|s| s.sample().0).collect();
+                    let mut refs: Vec<&mut DecodeSession> = sessions.iter_mut().collect();
+                    advance_sessions(&mut refs, &tokens).unwrap();
+                }
+                round_s += t0.elapsed().as_secs_f64();
+                std::hint::black_box(&sessions);
+            }
+            let total = (reps * conc * sn_new) as f64;
+            println!(
+                "sched {tag} c{conc:<2} p{sp_len}+n{sn_new} @ int4: solo {:.0} tok/s | rounds {:.0} tok/s | {:.2}x | weight bytes/step-round {}B vs {}B solo",
+                total / solo_s,
+                total / round_s,
+                solo_s / round_s,
+                plan.weight_bytes(),
+                conc * plan.weight_bytes()
             );
         }
     }

@@ -1,10 +1,17 @@
 //! Evaluation: perplexity + the six-probe downstream task suite + the
 //! paper-style table renderer.
+//!
+//! Two perplexity drivers over the same held-out stream: the PJRT
+//! [`Evaluator`] (eval artifact, needs `make artifacts`) and the
+//! artifact-free [`HostEvaluator`] (a [`crate::runtime::ForwardPlan`] per
+//! precision spec, fused packed kernels — quality tables for every
+//! r ∈ {1..8} ± Mix'n'Match run anywhere the server runs, see
+//! [`host_quality_table`]).
 
 pub mod perplexity;
 pub mod tables;
 pub mod tasks;
 
-pub use perplexity::Evaluator;
-pub use tables::TableBuilder;
+pub use perplexity::{host_quality_table, Evaluator, HostEvaluator};
+pub use tables::{quality_table, TableBuilder};
 pub use tasks::{task_suite, TaskReport};

@@ -1,19 +1,30 @@
-//! Log-perplexity over a held-out corpus stream via the `eval` artifact,
-//! and the option-scoring primitive the task probes build on.
+//! Log-perplexity over a held-out corpus stream — via the `eval` artifact
+//! ([`Evaluator`], PJRT) or entirely on the host ([`HostEvaluator`], no
+//! artifacts, no PJRT) — plus the option-scoring primitive the task
+//! probes build on.
 //!
 //! The artifact takes pre-materialized weights (+ per-quantized-tensor
 //! biases), so ONE compiled executable evaluates every precision and
-//! Mix'n'Match assignment — that is the Matryoshka serving property.
+//! Mix'n'Match assignment — that is the Matryoshka serving property.  The
+//! host path makes the same property **artifact-free**: a
+//! [`crate::runtime::ForwardPlan`] per precision spec evaluates straight
+//! from the paged r-bit payloads through the fused packed kernels, so
+//! quality tables for every r ∈ {1..8} (± per-layer Mix'n'Match maps) run
+//! anywhere the serving path runs ([`host_quality_table`]).
 //!
 //! Perf: a [`WeightsSession`] converts the weight set to XLA literals
 //! once; the task suite then reuses them across its ~150 eval executions
 //! per configuration (see EXPERIMENTS.md §Perf).
 
+use std::sync::Arc;
+
 use anyhow::ensure;
 
-use crate::data::{Batcher, Corpus};
-use crate::model::{PresetInfo, Tensor};
-use crate::runtime::{lit_i32, lit_tensor, Engine};
+use super::tables::{pplx, quality_table, TableBuilder};
+use crate::data::{Batcher, Corpus, VOCAB};
+use crate::model::manifest::ModelDims;
+use crate::model::{PresetInfo, QuantizedModel, Tensor};
+use crate::runtime::{lit_i32, lit_tensor, Engine, ForwardPlan};
 use crate::Result;
 
 /// Evaluation driver bound to one engine + preset.
@@ -134,5 +145,248 @@ impl<'e> Evaluator<'e> {
         }
         let (_, _, seq_ll) = self.run_eval(session, &tokens, &mask)?;
         Ok(seq_ll[..rows.len()].to_vec())
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Host path: perplexity with no artifacts and no PJRT
+// ---------------------------------------------------------------------------
+
+/// Artifact-free perplexity driver: the same held-out stream the PJRT
+/// [`Evaluator`] consumes, scored from a host [`ForwardPlan`]'s logits —
+/// on packed plans the weights stay r-bit payloads end to end, so quality
+/// numbers come from **exactly the representation the server ships**.
+pub struct HostEvaluator {
+    plan: Arc<ForwardPlan>,
+    batch: usize,
+}
+
+impl HostEvaluator {
+    pub fn new(plan: Arc<ForwardPlan>, batch: usize) -> Result<Self> {
+        ensure!(batch >= 1, "empty eval batch");
+        ensure!(
+            plan.dims.vocab >= VOCAB,
+            "host eval needs the byte vocabulary: plan vocab {} < {VOCAB}",
+            plan.dims.vocab
+        );
+        Ok(HostEvaluator { plan, batch })
+    }
+
+    /// Mean log-perplexity (nats/token) over `n_batches` held-out blocks —
+    /// the host-path counterpart of [`Evaluator::log_perplexity`], same
+    /// corpus/eval seeding contract.  Cross-entropy accumulates in f64
+    /// with the max-subtracted stable softmax; a non-finite logits row
+    /// (poisoned weights) surfaces as an infinite perplexity, never a
+    /// panic.
+    pub fn log_perplexity(
+        &self,
+        corpus_seed: u64,
+        eval_seed: u64,
+        n_batches: usize,
+    ) -> Result<f64> {
+        let b = self.batch;
+        let t = self.plan.dims.seq_len;
+        let v = self.plan.dims.vocab;
+        let t1 = t + 1;
+        let mut batcher = Batcher::new(Corpus::new(corpus_seed), eval_seed, b, t1);
+        let mut inputs = vec![0i32; b * t];
+        let mut ce = 0.0f64;
+        let mut count = 0u64;
+        for _ in 0..n_batches {
+            let block = batcher.next_block();
+            for bi in 0..b {
+                inputs[bi * t..(bi + 1) * t].copy_from_slice(&block[bi * t1..bi * t1 + t]);
+            }
+            let logits = self.plan.forward(&inputs, b, t)?;
+            for bi in 0..b {
+                for ti in 0..t {
+                    let label = block[bi * t1 + ti + 1] as usize;
+                    let row = &logits.data[(bi * t + ti) * v..(bi * t + ti + 1) * v];
+                    ce += cross_entropy_nats(row, label);
+                    count += 1;
+                }
+            }
+        }
+        Ok(ce / count.max(1) as f64)
+    }
+}
+
+/// `−log softmax(row)[label]`, max-subtracted, accumulated in f64.
+fn cross_entropy_nats(row: &[f32], label: usize) -> f64 {
+    let mut mx = f32::NEG_INFINITY;
+    for &l in row {
+        if l > mx {
+            mx = l;
+        }
+    }
+    if !mx.is_finite() {
+        // All-NaN / all-(−inf) rows: no finite distribution exists.
+        return f64::INFINITY;
+    }
+    let mut sum = 0.0f64;
+    for &l in row {
+        sum += ((l - mx) as f64).exp();
+    }
+    sum.ln() + mx as f64 - row[label] as f64
+}
+
+/// Paper-style quality rows (`Data type | Method | log pplx.`) for every
+/// requested serving precision — and optionally a Mix'n'Match per-layer
+/// assignment — computed **entirely on the host path**: one packed
+/// [`ForwardPlan`] per row, fused r-bit kernels, no artifacts, no PJRT.
+/// This is Table 1–8's sweep made runnable anywhere the server runs.
+#[allow(clippy::too_many_arguments)]
+pub fn host_quality_table(
+    dims: &ModelDims,
+    model: &QuantizedModel,
+    bits_list: &[u32],
+    mixnmatch: Option<&[u32]>,
+    batch: usize,
+    corpus_seed: u64,
+    eval_seed: u64,
+    n_batches: usize,
+) -> Result<TableBuilder> {
+    let mut table = quality_table("Host-path quality (artifact-free)");
+    for &bits in bits_list {
+        let plan = ForwardPlan::packed_uniform(dims, model, bits, false, None, None)?;
+        let ll = HostEvaluator::new(plan, batch)?.log_perplexity(
+            corpus_seed,
+            eval_seed,
+            n_batches,
+        )?;
+        table.row(&[
+            format!("int{bits}"),
+            "MatQuant (host)".to_string(),
+            pplx(ll),
+        ]);
+    }
+    if let Some(assign) = mixnmatch {
+        let plan = ForwardPlan::packed_per_layer(dims, model, assign, false, None, None)?;
+        let ll = HostEvaluator::new(plan, batch)?.log_perplexity(
+            corpus_seed,
+            eval_seed,
+            n_batches,
+        )?;
+        let label = assign
+            .iter()
+            .map(|b| b.to_string())
+            .collect::<Vec<_>>()
+            .join("/");
+        table.row(&[
+            format!("mix[{label}]"),
+            "Mix'n'Match (host)".to_string(),
+            pplx(ll),
+        ]);
+    }
+    Ok(table)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::ModelDims;
+    use crate::model::testing::toy_transformer;
+
+    fn eval_dims() -> ModelDims {
+        // The host evaluator needs the full byte vocabulary; everything
+        // else stays toy-sized.
+        ModelDims {
+            vocab: VOCAB,
+            d_model: 16,
+            n_layers: 1,
+            n_heads: 2,
+            d_ff: 32,
+            seq_len: 8,
+            quantize_attn: false,
+        }
+    }
+
+    #[test]
+    fn host_perplexity_matches_dense_reference_at_full_bits() {
+        let (preset, model) = toy_transformer(eval_dims(), 3);
+        // The packed path decodes the same int8 weights bit-for-bit; only
+        // the fused kernels' accumulation order differs from the dense
+        // matmul, so the perplexities agree to accumulation tolerance —
+        // far below the O(0.1) gaps a real bit-width defect produces.
+        let packed =
+            ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+        let dense = ForwardPlan::dense_uniform(&preset.model, &model, 8, false).unwrap();
+        let a = HostEvaluator::new(packed, 2)
+            .unwrap()
+            .log_perplexity(11, 12, 1)
+            .unwrap();
+        let b = HostEvaluator::new(dense, 2)
+            .unwrap()
+            .log_perplexity(11, 12, 1)
+            .unwrap();
+        assert!(a.is_finite() && a > 0.0, "pplx {a}");
+        assert!((a - b).abs() < 0.05, "packed {a} vs dense {b} int8 pplx");
+        // determinism: same plan spec + same seeds → the same number, bit
+        // for bit
+        let packed2 =
+            ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+        let again = HostEvaluator::new(packed2, 2)
+            .unwrap()
+            .log_perplexity(11, 12, 1)
+            .unwrap();
+        assert_eq!(a, again);
+    }
+
+    #[test]
+    fn host_quality_table_sweeps_precisions_and_mixnmatch() {
+        let (preset, model) = toy_transformer(eval_dims(), 5);
+        let table = host_quality_table(
+            &preset.model,
+            &model,
+            &[2, 8],
+            Some(&[8u32, 2][..]),
+            2,
+            11,
+            12,
+            1,
+        )
+        .unwrap();
+        let s = table.render();
+        assert!(s.contains("int2"), "{s}");
+        assert!(s.contains("int8"), "{s}");
+        assert!(s.contains("mix[8/2]"), "{s}");
+        assert!(s.contains("MatQuant (host)"), "{s}");
+        // every pplx cell parses as a finite number via the JSON lines
+        let jl = table.to_json_lines();
+        for line in jl.lines() {
+            let v = crate::util::Json::parse(line).unwrap();
+            let p = v.get("log pplx.").unwrap().as_f64().unwrap();
+            assert!(p.is_finite() && p > 0.0, "{line}");
+        }
+    }
+
+    #[test]
+    fn cross_entropy_is_stable_and_nan_safe() {
+        // uniform row: ce == ln(n)
+        let row = [0.0f32; 4];
+        let ce = cross_entropy_nats(&row, 1);
+        assert!((ce - (4.0f64).ln()).abs() < 1e-9);
+        // huge logits do not overflow the stable form
+        let row = [1000.0f32, 999.0, -1000.0];
+        assert!(cross_entropy_nats(&row, 0) < 0.32);
+        // poisoned rows surface as +inf, never a panic
+        assert!(cross_entropy_nats(&[f32::NAN, f32::NAN], 0).is_infinite());
+        assert!(cross_entropy_nats(&[f32::NEG_INFINITY; 2], 1).is_infinite());
+    }
+
+    #[test]
+    fn rejects_degenerate_eval_configs() {
+        let (preset, model) = toy_transformer(eval_dims(), 7);
+        let plan =
+            ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+        assert!(HostEvaluator::new(plan, 0).is_err());
+        // a vocab smaller than the byte corpus cannot score it
+        let small = ModelDims {
+            vocab: 32,
+            ..eval_dims()
+        };
+        let (p2, m2) = toy_transformer(small, 7);
+        let plan2 = ForwardPlan::packed_uniform(&p2.model, &m2, 4, false, None, None).unwrap();
+        assert!(HostEvaluator::new(plan2, 2).is_err());
     }
 }

@@ -80,6 +80,15 @@ impl TableBuilder {
     }
 }
 
+/// The canonical quality-table layout (Tables 1–8's
+/// `Data type | Method | log pplx.` columns) — shared by the artifact
+/// suite and the host path
+/// ([`crate::eval::perplexity::host_quality_table`]) so both render
+/// directly comparable rows.
+pub fn quality_table(title: impl Into<String>) -> TableBuilder {
+    TableBuilder::new(title, &["Data type", "Method", "log pplx."])
+}
+
 /// Format helpers matching the paper's number style.
 pub fn pct(x: f64) -> String {
     format!("{:.2}", x * 100.0)

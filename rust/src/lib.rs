@@ -39,14 +39,15 @@
 //! PJRT, through the incremental decode engine:
 //!
 //! ```text
-//!   WeightStore ─► ForwardPlan (cached per precision: pre-resolved
+//!   WeightStore ─► ForwardPlan (cached per precision spec: pre-resolved
 //!                  PackedWeight/dense handles + reusable scratch,
-//!                  optional Mix'n'Match per-layer bits)
-//!              ─► DecodeSession: prefill once (batched fused kernels,
-//!                  K/V rows recorded into the KvCache)
-//!              ─► KV-cached decode steps (O(n) matvecs + one
-//!                  single-query attention per head, per token)
-//!              ─► streamed tokens
+//!                  optional Mix'n'Match per-layer bits; non-quantized
+//!                  params Arc-shared with the registry)
+//!              ─► Scheduler (continuous batching): live sessions grouped
+//!                  by plan spec, stepped in ROUNDS — one blocked fused
+//!                  GEMM per layer across all members; ragged batched
+//!                  prefills, mid-stream admission, KV-pressure deferral
+//!              ─► DecodeSession (KvCache) ─► streamed tokens
 //!   (paged r-bit payloads; f32 weight tensors never exist)
 //! ```
 //!
@@ -59,8 +60,10 @@
 //! length and greedy / seeded-temperature sampling; responses stream one
 //! event per token.  Conformance against the dense f32 reference forward:
 //! `cargo test --test forward`; KV-cached decode vs full re-forward
-//! bit-identity: `cargo test --test decode`; throughput (prefill and
-//! per-step decode tokens/sec, dense vs packed vs packed+i8):
+//! bit-identity: `cargo test --test decode`; batched rounds / ragged
+//! prefill vs solo sessions: `cargo test --test scheduler`; throughput
+//! (prefill, per-step decode, and scheduler rounds vs per-session
+//! stepping at 1/4/16 concurrent streams):
 //! `cargo bench --bench quant_hot_paths`.
 //!
 //! ## Build

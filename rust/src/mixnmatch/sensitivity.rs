@@ -170,12 +170,7 @@ mod tests {
             );
             order.push(name);
         }
-        QuantizedModel {
-            params,
-            quantized,
-            param_order: order.clone(),
-            quantized_order: order,
-        }
+        QuantizedModel::from_parts(params, quantized, order.clone(), order)
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //!   W_eff = diag(1/s) · dequant(S(Q(W⊙s), r)),   bias = δ·(W − W_eff)
 
 use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use anyhow::{anyhow, ensure};
 
@@ -528,8 +529,11 @@ impl PrecisionAssignment {
 /// The registry: non-quantized params in fp32 + int8 masters for the rest.
 #[derive(Debug, Clone)]
 pub struct QuantizedModel {
-    /// All parameters in manifest order (fp copies).
-    pub params: BTreeMap<String, Tensor>,
+    /// All parameters in manifest order, behind shared handles: every
+    /// consumer of a non-quantized tensor (forward plans, the host
+    /// reference forward, literal builds) clones the `Arc`, never the
+    /// data — N sibling plans hold N pointers to ONE embed/pos table.
+    pub params: BTreeMap<String, Arc<Tensor>>,
     /// Quantized-weight masters, keyed by name.
     pub quantized: BTreeMap<String, QuantizedTensor>,
     /// Manifest-order names.
@@ -599,11 +603,34 @@ impl QuantizedModel {
             );
         }
         Ok(QuantizedModel {
-            params: params.clone(),
+            params: params
+                .iter()
+                .map(|(n, t)| (n.clone(), Arc::new(t.clone())))
+                .collect(),
             quantized,
             param_order: preset.params.iter().map(|(n, _)| n.clone()).collect(),
             quantized_order: preset.quantized.clone(),
         })
+    }
+
+    /// Assemble a registry from already-built parts (tests, planners, and
+    /// ad-hoc models that bypass a preset) — wraps each parameter tensor in
+    /// its shared handle.
+    pub fn from_parts(
+        params: BTreeMap<String, Tensor>,
+        quantized: BTreeMap<String, QuantizedTensor>,
+        param_order: Vec<String>,
+        quantized_order: Vec<String>,
+    ) -> Self {
+        QuantizedModel {
+            params: params
+                .into_iter()
+                .map(|(n, t)| (n, Arc::new(t)))
+                .collect(),
+            quantized,
+            param_order,
+            quantized_order,
+        }
     }
 
     /// Materialize full parameter + bias lists (manifest order) for the
@@ -624,7 +651,9 @@ impl QuantizedModel {
             if let Some((w, _)) = derived.get(name.as_str()) {
                 weights.push(w.clone());
             } else {
-                weights.push(self.params[name].clone());
+                // Materialized sets are by-value (artifact arguments):
+                // this is the one deliberate deep copy of a shared param.
+                weights.push(self.params[name].as_ref().clone());
             }
         }
         for qn in &self.quantized_order {

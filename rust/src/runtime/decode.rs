@@ -274,39 +274,83 @@ impl DecodeSession {
         sampling: Sampling,
         max_new_tokens: usize,
     ) -> Result<Self> {
-        sampling.validate()?;
+        let mut v = Self::prefill_many(&plan, &[(prompt, sampling, max_new_tokens)])?;
+        Ok(v.pop().expect("one spec yields one session"))
+    }
+
+    /// Construct several sessions on the same plan with **one batched
+    /// prefill**: all prompts run as a single ragged fused pass
+    /// ([`ForwardPlan::prefill_batch`] — the payload streams once per GEMM
+    /// block across the whole batch), each session capturing K/V into its
+    /// own cache.  Specs are `(prompt, sampling, max_new_tokens)`;
+    /// truncation/padding and KV sizing match
+    /// [`DecodeSession::with_budget`] exactly, and each resulting session
+    /// is bit-identical to one built solo.  All specs are validated before
+    /// any compute runs, so a malformed spec fails the call without
+    /// half-built state.
+    pub fn prefill_many(
+        plan: &Arc<ForwardPlan>,
+        specs: &[(&[i32], Sampling, usize)],
+    ) -> Result<Vec<DecodeSession>> {
+        ensure!(!specs.is_empty(), "empty prefill batch");
         let seq = plan.dims.seq_len;
-        let mut toks: Vec<i32> = prompt.iter().copied().take(seq).collect();
-        if toks.is_empty() {
-            // An empty prompt reads position 0 of an all-pad row — it
-            // round-trips instead of erroring, like the batch path.
-            toks.push(0);
+        let mut toks_list: Vec<Vec<i32>> = Vec::with_capacity(specs.len());
+        let mut caches: Vec<KvCache> = Vec::with_capacity(specs.len());
+        for (prompt, sampling, max_new_tokens) in specs {
+            sampling.validate()?;
+            let mut toks: Vec<i32> = prompt.iter().copied().take(seq).collect();
+            if toks.is_empty() {
+                // An empty prompt reads position 0 of an all-pad row — it
+                // round-trips instead of erroring, like the batch path.
+                toks.push(0);
+            }
+            let capacity = toks
+                .len()
+                .saturating_add(max_new_tokens.saturating_sub(1))
+                .min(seq);
+            caches.push(KvCache::new(plan.dims.n_layers, plan.dims.d_model, capacity));
+            toks_list.push(toks);
         }
-        let capacity = toks
-            .len()
-            .saturating_add(max_new_tokens.saturating_sub(1))
-            .min(seq);
-        let mut cache = KvCache::new(plan.dims.n_layers, plan.dims.d_model, capacity);
-        let logits = plan.prefill(&toks, &mut cache)?;
-        let rng = match sampling {
-            Sampling::Temperature { seed, .. } => Rng::new(seed),
-            Sampling::Greedy => Rng::new(0),
+        let prompts: Vec<&[i32]> = toks_list.iter().map(|v| v.as_slice()).collect();
+        let logits = {
+            let mut cache_refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+            plan.prefill_batch(&prompts, &mut cache_refs)?
         };
-        Ok(DecodeSession {
-            plan,
-            cache,
-            logits,
-            pos: toks.len(),
-            prompt_len: toks.len(),
-            sampling,
-            rng,
-            generated: Vec::new(),
-        })
+        let v = plan.dims.vocab;
+        let mut out = Vec::with_capacity(specs.len());
+        for (i, ((_, sampling, _), (toks, cache))) in specs
+            .iter()
+            .zip(toks_list.into_iter().zip(caches.into_iter()))
+            .enumerate()
+        {
+            let rng = match sampling {
+                Sampling::Temperature { seed, .. } => Rng::new(*seed),
+                Sampling::Greedy => Rng::new(0),
+            };
+            out.push(DecodeSession {
+                plan: plan.clone(),
+                cache,
+                logits: logits[i * v..(i + 1) * v].to_vec(),
+                pos: toks.len(),
+                prompt_len: toks.len(),
+                sampling: *sampling,
+                rng,
+                generated: Vec::new(),
+            });
+        }
+        Ok(out)
     }
 
     /// The current next-token distribution (one `vocab`-wide row).
     pub fn logits(&self) -> &[f32] {
         &self.logits
+    }
+
+    /// The forward plan this session decodes against — what a step-round
+    /// scheduler groups sessions by ([`advance_sessions`] requires every
+    /// round member to share one plan).
+    pub fn plan(&self) -> &Arc<ForwardPlan> {
+        &self.plan
     }
 
     /// Prompt positions consumed by the prefill (post truncate/pad).
@@ -359,6 +403,53 @@ impl DecodeSession {
         self.pos += 1;
         Ok(())
     }
+}
+
+/// Advance several sessions **on the same plan** by one KV-cached step as
+/// one batched round ([`ForwardPlan::decode_step_batch`]): every linear is
+/// ONE blocked fused GEMM across all members' current tokens, each
+/// member's single query attends its own cache, and each session's logits
+/// update to its own next-token row — bit-identical to calling
+/// [`DecodeSession::advance`] on each session alone.
+///
+/// `tokens[i]` is fed to `sessions[i]`.  Members may sit at different
+/// positions (staggered admissions).  Errors — mixed plans, an exhausted
+/// member, arity mismatch — are detected **before** any session mutates,
+/// so a failed round leaves every member exactly where it was (callers can
+/// fall back to solo stepping and retire only the members that actually
+/// fail).
+pub fn advance_sessions(sessions: &mut [&mut DecodeSession], tokens: &[i32]) -> Result<()> {
+    ensure!(!sessions.is_empty(), "empty step round");
+    ensure!(
+        sessions.len() == tokens.len(),
+        "step round arity mismatch: {} sessions, {} tokens",
+        sessions.len(),
+        tokens.len()
+    );
+    let plan = sessions[0].plan.clone();
+    for (i, s) in sessions.iter().enumerate() {
+        ensure!(
+            Arc::ptr_eq(&s.plan, &plan),
+            "step round mixes forward plans (member {i})"
+        );
+        ensure!(
+            s.can_advance(),
+            "decode capacity exhausted at {} positions (member {i})",
+            s.pos
+        );
+    }
+    let positions: Vec<usize> = sessions.iter().map(|s| s.pos).collect();
+    let rows = {
+        let mut caches: Vec<&mut KvCache> = sessions.iter_mut().map(|s| &mut s.cache).collect();
+        plan.decode_step_batch(tokens, &positions, &mut caches)?
+    };
+    let v = plan.dims.vocab;
+    for (i, s) in sessions.iter_mut().enumerate() {
+        s.logits.clear();
+        s.logits.extend_from_slice(&rows[i * v..(i + 1) * v]);
+        s.pos += 1;
+    }
+    Ok(())
 }
 
 #[cfg(test)]

@@ -137,6 +137,7 @@ impl<'a> HostForward<'a> {
                 .model
                 .params
                 .get(name)
+                .map(|t| t.as_ref())
                 .ok_or_else(|| anyhow!("missing param {name}")),
         }
     }
@@ -172,7 +173,7 @@ impl<'a> HostForward<'a> {
                         .params
                         .get(name)
                         .ok_or_else(|| anyhow!("missing param {name}"))?;
-                    dense_matmul(xs, m, w, None, out)
+                    dense_matmul(xs, m, w.as_ref(), None, out)
                 }
             }
         }

@@ -13,12 +13,19 @@
 //!   clips) prefills a [`DecodeSession`]'s [`KvCache`] and then generates
 //!   token-by-token — O(n) fused matvecs per step instead of an O(n²)
 //!   re-forward, bit-identical to the reference forward position by
-//!   position (`cargo test --test decode`).
+//!   position (`cargo test --test decode`).  Multi-tenant serving batches
+//!   both ends: [`ForwardPlan::prefill_batch`] prefills a ragged batch of
+//!   prompts in one fused pass, and [`advance_sessions`] /
+//!   [`ForwardPlan::decode_step_batch`] advance many sessions per **step
+//!   round** with one blocked GEMM per layer — bit-identical to solo
+//!   stepping (`cargo test --test scheduler`).
 //!
 //! ```text
-//!   WeightStore ─► ForwardPlan (cached per precision)
-//!                    ├─ forward()      batched prefill / conformance
-//!                    └─ DecodeSession  (KvCache) ─► streamed tokens
+//!   WeightStore ─► ForwardPlan (cached per precision spec)
+//!                    ├─ forward()          batched conformance / eval
+//!                    ├─ prefill_batch()    ragged multi-sequence KV capture
+//!                    └─ decode_step_batch  ◄─ serve::Scheduler step rounds
+//!                         └─ DecodeSession (KvCache) ─► streamed tokens
 //! ```
 
 pub mod decode;
@@ -27,7 +34,7 @@ pub mod forward;
 pub mod literal;
 pub mod plan;
 
-pub use decode::{sample_logits, DecodeSession, KvCache, Sampling};
+pub use decode::{advance_sessions, sample_logits, DecodeSession, KvCache, Sampling};
 pub use engine::Engine;
 pub use forward::{argmax_logit, ForwardWeights, HostForward};
 pub use literal::{lit_i32, lit_scalar_i32, lit_tensor, tensor_from_literal};

@@ -24,6 +24,16 @@
 //!   then advances one token with O(n) fused matvecs and one
 //!   [`crate::kernels::attend_single_query`] per head — the f32 weight
 //!   tensor never exists on the packed path, per step or per prefill.
+//! * **Batched multi-sequence serving** — [`ForwardPlan::prefill_batch`]
+//!   prefills a ragged batch of prompts in one fused pass (per-sequence
+//!   KV capture, pad positions inert), and [`ForwardPlan::decode_step_batch`]
+//!   advances m sequences one position each as a **step round**: one
+//!   blocked fused GEMM per linear across all members (the payload
+//!   streams once per GEMM block per round, not once per sequence), then
+//!   per-sequence single-query attention against each member's own cache.
+//!   Row independence makes both **bit-identical** to their solo
+//!   counterparts — the contract `serve::scheduler` (continuous batching)
+//!   is built on.
 //!
 //! Numerics are shared with the reference forward, not re-implemented:
 //! [`crate::runtime::forward`]'s `dense_matmul`/`rmsnorm_rows`/
@@ -54,14 +64,16 @@ use crate::Result;
 
 /// The non-quantized parameters of `model` as shared handles — what the
 /// packed plan builders resolve `embed`/`pos`/norm lookups (and dense
-/// fallback matmuls) against.  Build it once and reuse it across every
-/// precision's plan: the `Arc`s make each additional plan free.
+/// fallback matmuls) against.  The registry already stores its parameters
+/// behind `Arc`s, so this is a pure pointer copy: every plan (and every
+/// sibling plan at another precision) references the registry's one
+/// embed/pos table, adding **zero** parameter bytes.
 pub fn plan_params(model: &QuantizedModel) -> BTreeMap<String, Arc<Tensor>> {
     model
         .params
         .iter()
         .filter(|(n, _)| !model.quantized.contains_key(n.as_str()))
-        .map(|(n, t)| (n.clone(), Arc::new(t.clone())))
+        .map(|(n, t)| (n.clone(), t.clone()))
         .collect()
 }
 
@@ -439,7 +451,7 @@ impl ForwardPlan {
     /// row-major); returns logits of shape `(b, t, vocab)`.  Numerically
     /// identical to [`crate::runtime::HostForward`] over the same weights.
     pub fn forward(&self, tokens: &[i32], b: usize, t: usize) -> Result<Tensor> {
-        let buf = self.forward_impl(tokens, b, t, None, None, false)?;
+        let buf = self.forward_impl(tokens, b, t, None, None, None, false)?;
         Tensor::new(vec![b, t, self.dims.vocab], buf)
     }
 
@@ -450,8 +462,52 @@ impl ForwardPlan {
     /// the distribution the first generated token is sampled from.  The
     /// head projection runs on that single row, not all `t`.
     pub fn prefill(&self, tokens: &[i32], cache: &mut KvCache) -> Result<Vec<f32>> {
-        let t = tokens.len();
-        self.forward_impl(tokens, 1, t, Some(cache), None, true)
+        self.prefill_batch(&[tokens], &mut [cache])
+    }
+
+    /// Prefill a **ragged batch** of sequences in one fused pass: every
+    /// linear runs as a single blocked GEMM over all `b` sequences' rows
+    /// (the packed payload streams once per GEMM block across the whole
+    /// batch, not once per sequence), attention is causal per sequence,
+    /// and each sequence's K/V rows are captured into its own cache.
+    /// Returns the per-sequence last-position logits rows (`b × vocab`,
+    /// row-major).
+    ///
+    /// Shorter prompts are padded with token 0 to the longest prompt.
+    /// Because every op processes rows independently and attention is
+    /// causal, a sequence's captured K/V rows and last-position logits are
+    /// **bit-identical** to its own solo [`ForwardPlan::prefill`] —
+    /// batchmates and pad positions cannot perturb it (`cargo test --test
+    /// scheduler`).
+    pub fn prefill_batch(
+        &self,
+        prompts: &[&[i32]],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<f32>> {
+        let b = prompts.len();
+        ensure!(b >= 1, "empty prefill batch");
+        ensure!(
+            caches.len() == b,
+            "prefill batch wants {b} caches, got {}",
+            caches.len()
+        );
+        for (bi, p) in prompts.iter().enumerate() {
+            ensure!(
+                !p.is_empty(),
+                "empty prompt in prefill batch (row {bi}; callers pad)"
+            );
+        }
+        let t = prompts.iter().map(|p| p.len()).max().unwrap_or(1);
+        let lens: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+        if b == 1 {
+            // Solo prefill: the prompt is already the token buffer.
+            return self.forward_impl(prompts[0], 1, t, Some(&lens), Some(caches), None, true);
+        }
+        let mut tokens = vec![0i32; b * t];
+        for (bi, p) in prompts.iter().enumerate() {
+            tokens[bi * t..bi * t + p.len()].copy_from_slice(p);
+        }
+        self.forward_impl(&tokens, b, t, Some(&lens), Some(caches), None, true)
     }
 
     /// Advance one position: embed `token` at `pos`, append each layer's
@@ -466,50 +522,86 @@ impl ForwardPlan {
         pos: usize,
         cache: &mut KvCache,
     ) -> Result<Vec<f32>> {
+        self.decode_step_batch(&[token], &[pos], &mut [cache])
+    }
+
+    /// Advance `m` independent sequences one position each in a single
+    /// **step round**: every linear runs as ONE blocked fused GEMM over
+    /// all member rows (the r-bit payload streams once per GEMM block per
+    /// round, not once per sequence), then each sequence's single query
+    /// attends its own cache.  Returns the `m × vocab` next-token logits
+    /// rows (row-major, member order).
+    ///
+    /// Every op processes rows independently, so each member's logits row
+    /// is **bit-identical** to the same step taken solo through
+    /// [`ForwardPlan::decode_step`] — round composition can never change
+    /// an answer, only its cost (`cargo test --test scheduler`).  Members
+    /// may sit at different positions; each cache must hold exactly its
+    /// member's `positions[i]` rows with capacity for one more.
+    pub fn decode_step_batch(
+        &self,
+        tokens: &[i32],
+        positions: &[usize],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<f32>> {
+        let m = tokens.len();
         let d = self.dims.d_model;
         let v = self.dims.vocab;
         let f = self.dims.d_ff;
         let h = self.dims.n_heads;
         let dh = d / h;
+        ensure!(m >= 1, "empty step round");
         ensure!(
-            token >= 0 && (token as usize) < v,
-            "token {token} outside vocab [0, {v})"
+            positions.len() == m && caches.len() == m,
+            "step round arity mismatch: {m} tokens, {} positions, {} caches",
+            positions.len(),
+            caches.len()
         );
-        ensure!(
-            pos < self.dims.seq_len && self.pos.shape[0] > pos,
-            "position {pos} outside the learned position table"
-        );
-        ensure!(
-            cache.n_layers() == self.dims.n_layers && cache.width() == d,
-            "KV cache shape mismatch: {} layers × width {}, plan wants {} × {d}",
-            cache.n_layers(),
-            cache.width(),
-            self.dims.n_layers
-        );
-        ensure!(
-            cache.len() == pos,
-            "KV cache holds {} positions, decode expected {pos}",
-            cache.len()
-        );
-        ensure!(
-            cache.len() < cache.capacity(),
-            "KV cache full ({} positions)",
-            cache.capacity()
-        );
+        for i in 0..m {
+            let token = tokens[i];
+            let pos = positions[i];
+            let cache = &caches[i];
+            ensure!(
+                token >= 0 && (token as usize) < v,
+                "token {token} outside vocab [0, {v}) (member {i})"
+            );
+            ensure!(
+                pos < self.dims.seq_len && self.pos.shape[0] > pos,
+                "position {pos} outside the learned position table (member {i})"
+            );
+            ensure!(
+                cache.n_layers() == self.dims.n_layers && cache.width() == d,
+                "KV cache shape mismatch: {} layers × width {}, plan wants {} × {d} (member {i})",
+                cache.n_layers(),
+                cache.width(),
+                self.dims.n_layers
+            );
+            ensure!(
+                cache.len() == pos,
+                "KV cache holds {} positions, decode expected {pos} (member {i})",
+                cache.len()
+            );
+            ensure!(
+                cache.len() < cache.capacity(),
+                "KV cache full ({} positions, member {i})",
+                cache.capacity()
+            );
+        }
+        let max_nk = positions.iter().map(|&p| p + 1).max().unwrap_or(1);
         let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
         let int8 = self.int8;
         let mut scratch = self.scratch.borrow_mut();
         let s = &mut *scratch;
-        grow(&mut s.x, d);
-        grow(&mut s.norm, d);
-        grow(&mut s.qb, d);
-        grow(&mut s.kb, d);
-        grow(&mut s.vb, d);
-        grow(&mut s.attn, d);
-        grow(&mut s.proj, d);
-        grow(&mut s.mid, f);
-        grow(&mut s.scores, pos + 1);
-        grow(&mut s.logits, v);
+        grow(&mut s.x, m * d);
+        grow(&mut s.norm, m * d);
+        grow(&mut s.qb, m * d);
+        grow(&mut s.kb, m * d);
+        grow(&mut s.vb, m * d);
+        grow(&mut s.attn, m * d);
+        grow(&mut s.proj, m * d);
+        grow(&mut s.mid, m * f);
+        grow(&mut s.scores, max_nk);
+        grow(&mut s.logits, m * v);
         let PlanScratch {
             x,
             norm,
@@ -523,57 +615,65 @@ impl ForwardPlan {
             logits,
             ..
         } = s;
-        let x = &mut x[..d];
-        let norm = &mut norm[..d];
-        let qb = &mut qb[..d];
-        let kb = &mut kb[..d];
-        let vb = &mut vb[..d];
-        let attn = &mut attn[..d];
-        let proj = &mut proj[..d];
-        let mid = &mut mid[..f];
-        let logits = &mut logits[..v];
+        let x = &mut x[..m * d];
+        let norm = &mut norm[..m * d];
+        let qb = &mut qb[..m * d];
+        let kb = &mut kb[..m * d];
+        let vb = &mut vb[..m * d];
+        let attn = &mut attn[..m * d];
+        let proj = &mut proj[..m * d];
+        let mid = &mut mid[..m * f];
+        let logits = &mut logits[..m * v];
 
-        let erow = &self.embed.data[token as usize * d..(token as usize + 1) * d];
-        let prow = &self.pos.data[pos * d..(pos + 1) * d];
-        for j in 0..d {
-            x[j] = erow[j] + prow[j];
+        for i in 0..m {
+            let tok = tokens[i] as usize;
+            let erow = &self.embed.data[tok * d..(tok + 1) * d];
+            let prow = &self.pos.data[positions[i] * d..(positions[i] + 1) * d];
+            let row = &mut x[i * d..(i + 1) * d];
+            for j in 0..d {
+                row[j] = erow[j] + prow[j];
+            }
         }
         for (l, layer) in self.layers.iter().enumerate() {
             rmsnorm_rows(x, &layer.ln1.data, d, norm)?;
-            layer.wq.apply(norm, 1, int8.as_ref(), qb)?;
-            layer.wk.apply(norm, 1, int8.as_ref(), kb)?;
-            layer.wv.apply(norm, 1, int8.as_ref(), vb)?;
-            cache.push(l, kb, vb);
-            let nk = cache.layer_len(l);
-            attn.fill(0.0);
-            for head in 0..h {
-                let hoff = head * dh;
-                kernels::attend_single_query(
-                    &qb[hoff..hoff + dh],
-                    cache.keys(l),
-                    cache.vals(l),
-                    nk,
-                    d,
-                    hoff,
-                    inv_sqrt_dh,
-                    &mut scores[..nk],
-                    &mut attn[hoff..hoff + dh],
-                );
+            layer.wq.apply(norm, m, int8.as_ref(), qb)?;
+            layer.wk.apply(norm, m, int8.as_ref(), kb)?;
+            layer.wv.apply(norm, m, int8.as_ref(), vb)?;
+            for (i, c) in caches.iter_mut().enumerate() {
+                c.push(l, &kb[i * d..(i + 1) * d], &vb[i * d..(i + 1) * d]);
             }
-            layer.wo.apply(attn, 1, int8.as_ref(), proj)?;
+            attn.fill(0.0);
+            for (i, c) in caches.iter().enumerate() {
+                let nk = c.layer_len(l);
+                for head in 0..h {
+                    let hoff = i * d + head * dh;
+                    kernels::attend_single_query(
+                        &qb[hoff..hoff + dh],
+                        c.keys(l),
+                        c.vals(l),
+                        nk,
+                        d,
+                        head * dh,
+                        inv_sqrt_dh,
+                        &mut scores[..nk],
+                        &mut attn[hoff..hoff + dh],
+                    );
+                }
+            }
+            layer.wo.apply(attn, m, int8.as_ref(), proj)?;
             for (xi, pi) in x.iter_mut().zip(proj.iter()) {
                 *xi += *pi;
             }
             rmsnorm_rows(x, &layer.ln2.data, d, norm)?;
-            layer.w_in.apply(norm, 1, int8.as_ref(), mid)?;
+            layer.w_in.apply(norm, m, int8.as_ref(), mid)?;
             gelu_inplace(mid);
-            layer.w_out.apply(mid, 1, int8.as_ref(), proj)?;
+            layer.w_out.apply(mid, m, int8.as_ref(), proj)?;
             for (xi, pi) in x.iter_mut().zip(proj.iter()) {
                 *xi += *pi;
             }
         }
         rmsnorm_rows(x, &self.ln_f.data, d, norm)?;
-        self.head.apply(norm, 1, int8.as_ref(), logits)?;
+        self.head.apply(norm, m, int8.as_ref(), logits)?;
         Ok(logits.to_vec())
     }
 
@@ -595,7 +695,7 @@ impl ForwardPlan {
             "calibrate on an f32 plan — the captured activations must be unquantized"
         );
         let mut clips = BTreeMap::new();
-        self.forward_impl(tokens, b, t, None, Some((cfg, &mut clips)), false)?;
+        self.forward_impl(tokens, b, t, None, None, Some((cfg, &mut clips)), false)?;
         clips.retain(|_, c| *c > 0.0);
         Ok(ActCalibration {
             clip_fraction: cfg.clip_fraction,
@@ -623,18 +723,21 @@ impl ForwardPlan {
         lin.apply(xs, m, self.int8.as_ref(), out)
     }
 
-    /// Shared body of [`ForwardPlan::forward`] / [`ForwardPlan::prefill`] /
-    /// [`ForwardPlan::calibrate`]: the manifest-ordered model over `(b, t)`
-    /// token rows, with optional single-sequence KV capture and optional
-    /// activation-clip capture.  With `last_only` the final norm + head run
-    /// on each row's last position only and the returned buffer is
-    /// `(b, vocab)`; otherwise `(b, t, vocab)`.
+    /// Shared body of [`ForwardPlan::forward`] / [`ForwardPlan::prefill_batch`]
+    /// / [`ForwardPlan::calibrate`]: the manifest-ordered model over `(b, t)`
+    /// token rows, with optional per-sequence KV capture over a ragged
+    /// batch (`lens[bi]` real positions per row, the rest padding) and
+    /// optional activation-clip capture.  With `last_only` the final norm +
+    /// head run on each row's **last real position** only and the returned
+    /// buffer is `(b, vocab)`; otherwise `(b, t, vocab)`.
+    #[allow(clippy::too_many_arguments)]
     fn forward_impl(
         &self,
         tokens: &[i32],
         b: usize,
         t: usize,
-        mut kv: Option<&mut KvCache>,
+        lens: Option<&[usize]>,
+        mut kv: Option<&mut [&mut KvCache]>,
         mut calib: Option<(&ActQuantConfig, &mut BTreeMap<String, f32>)>,
         last_only: bool,
     ) -> Result<Vec<f32>> {
@@ -655,21 +758,41 @@ impl ForwardPlan {
             "pos table {:?} cannot cover t={t}",
             self.pos.shape
         );
-        if let Some(c) = kv.as_deref() {
-            ensure!(b == 1, "KV capture is single-sequence (b = 1)");
-            ensure!(c.is_empty(), "prefill requires an empty KV cache");
+        if let Some(ls) = lens {
+            ensure!(ls.len() == b, "row-length vector arity mismatch");
+            for (bi, &len) in ls.iter().enumerate() {
+                ensure!(
+                    len >= 1 && len <= t,
+                    "row {bi} length {len} outside [1, {t}]"
+                );
+            }
+        }
+        let len_of = |bi: usize| lens.map_or(t, |ls| ls[bi]);
+        if let Some(caches) = kv.as_deref() {
             ensure!(
-                c.n_layers() == self.dims.n_layers && c.width() == d,
-                "KV cache shape mismatch: {} layers × width {}, plan wants {} × {d}",
-                c.n_layers(),
-                c.width(),
-                self.dims.n_layers
+                caches.len() == b,
+                "KV capture wants {b} caches, got {}",
+                caches.len()
             );
-            ensure!(
-                c.capacity() >= t,
-                "KV cache capacity {} < prompt length {t}",
-                c.capacity()
-            );
+            for (bi, c) in caches.iter().enumerate() {
+                ensure!(
+                    c.is_empty(),
+                    "prefill requires an empty KV cache (row {bi})"
+                );
+                ensure!(
+                    c.n_layers() == self.dims.n_layers && c.width() == d,
+                    "KV cache shape mismatch: {} layers × width {}, plan wants {} × {d} (row {bi})",
+                    c.n_layers(),
+                    c.width(),
+                    self.dims.n_layers
+                );
+                ensure!(
+                    c.capacity() >= len_of(bi),
+                    "KV cache capacity {} < prompt length {} (row {bi})",
+                    c.capacity(),
+                    len_of(bi)
+                );
+            }
         }
 
         let n = b * t;
@@ -736,18 +859,24 @@ impl ForwardPlan {
             self.apply_linear(&layer.wq, norm, n, &mut calib, qb)?;
             self.apply_linear(&layer.wk, norm, n, &mut calib, kb)?;
             self.apply_linear(&layer.wv, norm, n, &mut calib, vb)?;
-            if let Some(c) = kv.as_deref_mut() {
-                for ti in 0..t {
-                    c.push(l, &kb[ti * d..(ti + 1) * d], &vb[ti * d..(ti + 1) * d]);
+            if let Some(caches) = kv.as_deref_mut() {
+                for (bi, c) in caches.iter_mut().enumerate() {
+                    for ti in 0..len_of(bi) {
+                        let off = (bi * t + ti) * d;
+                        c.push(l, &kb[off..off + d], &vb[off..off + d]);
+                    }
                 }
             }
             attn.fill(0.0);
             for bi in 0..b {
                 let keys = &kb[bi * t * d..(bi + 1) * t * d];
                 let vals = &vb[bi * t * d..(bi + 1) * t * d];
+                // Pad positions past a row's real length are never read
+                // (not captured, not the head row), so attention skips them.
+                let bl = len_of(bi);
                 for head in 0..h {
                     let hoff = head * dh;
-                    for i in 0..t {
+                    for i in 0..bl {
                         let qo = (bi * t + i) * d + hoff;
                         kernels::attend_single_query(
                             &qb[qo..qo + dh],
@@ -779,7 +908,7 @@ impl ForwardPlan {
 
         if last_only {
             for bi in 0..b {
-                let row = (bi * t + t - 1) * d;
+                let row = (bi * t + len_of(bi) - 1) * d;
                 rmsnorm_rows(
                     &x[row..row + d],
                     &self.ln_f.data,

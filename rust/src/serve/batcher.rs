@@ -1,14 +1,14 @@
-//! Dynamic micro-batching: group pending requests by precision **and**
-//! activation mode, flush on size or age, pad to the nearest exported batch
-//! bucket.  f32- and int8-activation requests at the same bit-width never
-//! share a batch (their numerics differ), so the queue key is
-//! `(bits, int8_acts)`.
+//! Dynamic micro-batching for the **PJRT backend**: group pending requests
+//! by precision **and** activation mode, flush on size or age, pad to the
+//! nearest exported batch bucket.  f32- and int8-activation requests at
+//! the same bit-width never share a batch (their numerics differ), so the
+//! queue key is `(bits, int8_acts)`.
 //!
-//! The batcher admits **prefills**; multi-token requests then live on as
-//! decode sessions the worker steps ahead of popping the next ready batch
-//! (decode priority — see [`crate::serve::server`]), so a long generation
-//! never starves behind the batch window and new prefills interleave with
-//! in-flight token streams.
+//! The host backend does not use this batcher: its queueing, prefill
+//! batching, and decode interleave all live in the continuous-batching
+//! [`crate::serve::Scheduler`], which groups by the full plan spec
+//! ([`crate::serve::PlanKey`], including per-layer maps) and steps live
+//! streams in batched GEMM rounds.
 
 use std::collections::{BTreeMap, BTreeSet};
 use std::time::Instant;
@@ -69,16 +69,6 @@ impl DynamicBatcher {
             .map(|(&(b, _), _)| b)
             .collect::<BTreeSet<u32>>()
             .into_iter()
-            .collect()
-    }
-
-    /// Precisions with queued int8-activation work (these need a *packed*
-    /// build even if a dense warm set already covers the bit-width).
-    pub fn queued_int8_precisions(&self) -> Vec<u32> {
-        self.queues
-            .iter()
-            .filter(|(&(_, int8), q)| int8 && !q.is_empty())
-            .map(|(&(b, _), _)| b)
             .collect()
     }
 
@@ -247,12 +237,12 @@ mod tests {
                 .all(|(r, _)| r.int8_acts == batch.int8));
         }
         assert_eq!(b.pending(), 0);
-        // prefetch hints: one precision, and it is flagged for int8 paging
+        // prefetch hints dedupe across activation modes (paging is
+        // per-precision)
         let mut b2 = DynamicBatcher::new(vec![1, 2, 4], 1000.0);
         b2.push(req(0, 4));
         b2.push(req_i8(1, 4));
         assert_eq!(b2.queued_precisions(), vec![4]);
-        assert_eq!(b2.queued_int8_precisions(), vec![4]);
     }
 
     #[test]

@@ -31,7 +31,17 @@ pub struct Metrics {
     /// KV-cached decode steps: precision → (steps, total ms).  The O(n)
     /// per-token cost the decode engine exists to reach — the report pairs
     /// it with prefill so the prefill-vs-step gap is visible per precision.
+    /// Under the scheduler each entry is a per-member share of its round,
+    /// so this line is directly comparable with solo per-session stepping
+    /// (the batched-vs-solo step latency the rounds exist to shrink).
     decode_step_ms: BTreeMap<u32, (u64, f64)>,
+    /// Scheduler **step rounds**: precision → (rounds, member-steps, total
+    /// ms, weight bytes streamed).  One round = one blocked fused GEMM
+    /// sweep per layer across every live session of the precision group —
+    /// the weight bytes here grow once per ROUND, not once per session,
+    /// which is the continuous-batching win the counters exist to prove
+    /// (`member-steps / rounds` is the mean round occupancy).
+    round_ms: BTreeMap<u32, (u64, u64, f64, u64)>,
     /// Resident KV-cache bytes across live decode sessions (gauge, set by
     /// the worker after every step round).
     kv_bytes: u64,
@@ -51,6 +61,7 @@ impl Default for Metrics {
             matmul_ms: BTreeMap::new(),
             prefill_ms: BTreeMap::new(),
             decode_step_ms: BTreeMap::new(),
+            round_ms: BTreeMap::new(),
             kv_bytes: 0,
             requests: 0,
             batches: 0,
@@ -107,6 +118,47 @@ impl Metrics {
         let e = self.decode_step_ms.entry(bits).or_insert((0, 0.0));
         e.0 += 1;
         e.1 += ms;
+    }
+
+    /// One scheduler step round completed at `bits`: `members` sessions
+    /// advanced one token through a single blocked-GEMM sweep that
+    /// streamed `weight_bytes` of payload (once for the whole round).
+    pub fn record_round(&mut self, bits: u32, members: usize, ms: f64, weight_bytes: u64) {
+        let e = self.round_ms.entry(bits).or_insert((0, 0, 0.0, 0));
+        e.0 += 1;
+        e.1 += members as u64;
+        e.2 += ms;
+        e.3 += weight_bytes;
+    }
+
+    /// Step rounds executed at `bits` (0 if none).
+    pub fn rounds(&self, bits: u32) -> u64 {
+        self.round_ms.get(&bits).map_or(0, |e| e.0)
+    }
+
+    /// Member-steps executed inside step rounds at `bits`.
+    pub fn round_member_steps(&self, bits: u32) -> u64 {
+        self.round_ms.get(&bits).map_or(0, |e| e.1)
+    }
+
+    /// Weight bytes streamed by step rounds at `bits` — grows once per
+    /// round, NOT once per member (the continuous-batching contract).
+    pub fn round_weight_bytes(&self, bits: u32) -> u64 {
+        self.round_ms.get(&bits).map_or(0, |e| e.3)
+    }
+
+    /// Mean sessions per step round at `bits` (0 if no rounds ran).
+    pub fn mean_round_occupancy(&self, bits: u32) -> f64 {
+        match self.round_ms.get(&bits) {
+            Some((r, m, _, _)) if *r > 0 => *m as f64 / *r as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Step rounds per second across all precisions since boot.
+    pub fn rounds_per_sec(&self) -> f64 {
+        let total: u64 = self.round_ms.values().map(|e| e.0).sum();
+        total as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
     }
 
     /// Update the resident KV-cache gauge (bytes across live sessions).
@@ -199,8 +251,19 @@ impl Metrics {
             .iter()
             .map(|(b, (n, ms))| format!("int{b}:{n}x{:.3}ms", ms / (*n).max(1) as f64))
             .collect();
+        let rounds: Vec<String> = self
+            .round_ms
+            .iter()
+            .map(|(b, (r, m, ms, bytes))| {
+                format!(
+                    "int{b}:{r}x{:.1}occ/{:.3}ms/{bytes}B",
+                    *m as f64 / (*r).max(1) as f64,
+                    ms / (*r).max(1) as f64
+                )
+            })
+            .collect();
         format!(
-            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}] prefill=[{}] decode=[{}] kv_bytes={}",
+            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}] prefill=[{}] decode=[{}] rounds=[{}] rounds_per_s={:.1} kv_bytes={}",
             self.requests,
             self.batches,
             self.percentile(50.0),
@@ -213,6 +276,8 @@ impl Metrics {
             matmul.join(" "),
             prefill.join(" "),
             decode.join(" "),
+            rounds.join(" "),
+            self.rounds_per_sec(),
             self.kv_bytes
         )
     }
@@ -281,6 +346,28 @@ mod tests {
         assert!(r.contains("prefill=[int4:2x3.00ms/32tok]"), "{r}");
         assert!(r.contains("int4:2x0.500ms"), "{r}");
         assert!(r.contains("kv_bytes=4096"), "{r}");
+    }
+
+    #[test]
+    fn round_counters_track_occupancy_and_bytes_per_round() {
+        let mut m = Metrics::default();
+        // 2 rounds at int4: 3 + 1 members, 100B of payload each round
+        m.record_round(4, 3, 0.6, 100);
+        m.record_round(4, 1, 0.2, 100);
+        m.record_round(2, 2, 0.5, 40);
+        assert_eq!(m.rounds(4), 2);
+        assert_eq!(m.rounds(8), 0);
+        assert_eq!(m.round_member_steps(4), 4);
+        assert_eq!(m.mean_round_occupancy(4), 2.0);
+        assert_eq!(m.mean_round_occupancy(8), 0.0);
+        // bytes grow once per ROUND, not once per member
+        assert_eq!(m.round_weight_bytes(4), 200);
+        assert_eq!(m.round_weight_bytes(2), 40);
+        assert!(m.rounds_per_sec() > 0.0);
+        let r = m.report();
+        assert!(r.contains("rounds=[int2:1x2.0occ"), "{r}");
+        assert!(r.contains("int4:2x2.0occ/0.400ms/200B"), "{r}");
+        assert!(r.contains("rounds_per_s="), "{r}");
     }
 
     #[test]

@@ -5,36 +5,44 @@
 //! Architecture (vLLM-router-like, scaled to one host):
 //!
 //! ```text
-//!   client → [Router] → per-(precision, act-mode) queues → [DynamicBatcher]
+//!   client → [Router] → validation at submit
 //!          → [WeightStore]: cached ForwardPlans per precision spec
 //!            (dense f32 for warm bits, paged r-bit payloads otherwise,
-//!            optional Mix'n'Match per-layer maps; payload handles shared
-//!            across plans) + persisted int8 activation-clip calibration
+//!            optional Mix'n'Match per-layer maps; payload handles AND
+//!            non-quantized param Arcs shared across plans) + persisted
+//!            int8 activation-clip calibration
 //!          → backend (worker thread owns it) → streamed responses
 //!
 //!   PJRT backend (Server::start):
+//!     per-(precision, act-mode) queues → [DynamicBatcher] →
 //!     WeightStore ─ batch_args (paged: decode 1 tensor at a time) ─►
 //!     bucketed `fwd_b{B}` executables ─► logits (single token)
 //!
 //!   Host backend (Server::start_host — no artifacts, no PJRT):
-//!     WeightStore ─► ForwardPlan (resolved once per precision) ─►
-//!     DecodeSession: prefill once (batched fused packed kernels, K/V
-//!     recorded into the KvCache) ─► KV-cached decode steps, one O(n)
-//!     single-query attention + fused matvecs per token ─► streamed
-//!     Response events (one per token, last marked done), any r ∈ {1..8};
-//!     f32 weight tensors never exist on paged precisions.
+//!     WeightStore ─► ForwardPlan (resolved once per PlanKey) ─►
+//!     [Scheduler] continuous batching: live DecodeSessions grouped by
+//!     PlanKey step in ROUNDS — one blocked fused GEMM per layer across
+//!     every member's current token (payload streamed once per GEMM block
+//!     per round), each member's single query attending its own KvCache;
+//!     admitted requests prefill as one ragged fused batch and join their
+//!     group's next round (mid-stream admission, round-robin fairness cap,
+//!     KV-pressure-aware deferral) ─► streamed Response events (one per
+//!     token, last marked done), any r ∈ {1..8}; f32 weight tensors never
+//!     exist on paged precisions.
 //!     Request { int8_acts } additionally quantizes the quantized-layer
 //!     inputs (quant::activations; fixed per-layer thresholds when a
 //!     calibration file is loaded) and reduces in the integer domain
 //!     (kernels i8→i32 GEMV).  Request { max_new_tokens, sampling } picks
 //!     the generation length and the greedy / seeded-temperature sampler;
-//!     all generation parameters are validated at submit.
+//!     Request { per_layer } serves a Mix'n'Match assignment; all
+//!     generation parameters are validated at submit.
 //! ```
 
 pub mod batcher;
 pub mod metrics;
 pub mod planner;
 pub mod request;
+pub mod scheduler;
 pub mod server;
 pub mod weights;
 
@@ -42,6 +50,7 @@ pub use batcher::DynamicBatcher;
 pub use metrics::Metrics;
 pub use planner::{plan_deployment, DeploymentPlan};
 pub use request::{PrecisionReq, Request, Response};
+pub use scheduler::{projected_kv_bytes, RoundOutcome, Scheduler, SchedulerConfig};
 pub use server::{Server, ServerConfig};
 pub use weights::{PlanKey, WeightSet, WeightStore};
 

@@ -118,12 +118,7 @@ mod tests {
             param_order.push(name.clone());
             quantized_order.push(name);
         }
-        QuantizedModel {
-            params,
-            quantized,
-            param_order,
-            quantized_order,
-        }
+        QuantizedModel::from_parts(params, quantized, param_order, quantized_order)
     }
 
     #[test]

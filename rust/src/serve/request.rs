@@ -48,6 +48,17 @@ pub struct Request {
     /// Greedy (default) or seeded-temperature sampling; validated at
     /// submit ([`Sampling::validate`]).
     pub sampling: Sampling,
+    /// Host backend only: serve this request under a Mix'n'Match
+    /// **per-layer** bit map (layer *l* gets `per_layer[l]`, layers past
+    /// the end the last entry — the registry's clamp) instead of the
+    /// uniform `precision`.  Requests sharing a map decode together in one
+    /// scheduler group; the map's handles are `Arc`-shared with the
+    /// uniform precisions already paged in.  [`Response::bits`] and the
+    /// per-precision metrics attribute this traffic to the map's
+    /// **maximum** bit-width (the `precision` field does not describe
+    /// what ran).  Validated at submit (empty maps and bit-widths outside
+    /// [1, 8] are rejected); PJRT rejects the field outright.
+    pub per_layer: Option<Vec<u32>>,
 }
 
 impl Request {
@@ -60,6 +71,7 @@ impl Request {
             int8_acts: false,
             max_new_tokens: 1,
             sampling: Sampling::Greedy,
+            per_layer: None,
         }
     }
 

@@ -1,0 +1,581 @@
+//! The continuous-batching decode scheduler — the engine that turns the
+//! incremental decoder into a **multi-tenant** server.
+//!
+//! Before this module the host worker stepped each live [`DecodeSession`]
+//! alone: N concurrent streams cost N fused matvec sweeps per token, so
+//! the paged-payload wins of the packed data flow evaporated exactly under
+//! load.  The scheduler groups live sessions by [`PlanKey`] — the full
+//! precision spec: uniform bits ± int8 activations ± a Mix'n'Match
+//! per-layer map — and advances each group in **step rounds**:
+//!
+//! ```text
+//!   Scheduler
+//!     ├─ group int4           ─ round ─► ONE blocked fused GEMM per
+//!     │    live: [s1, s2, s3]           linear across all members' current
+//!     │    pending: [r9]                tokens (payload streamed once per
+//!     ├─ group int2+i8                  GEMM block per ROUND), then each
+//!     │    live: [s4]                   member's single query attends its
+//!     └─ group mix[8/4/2]               OWN KvCache
+//!          pending: [r7, r8]
+//! ```
+//!
+//! * **Step rounds** ([`ForwardPlan::decode_step_batch`] via
+//!   [`crate::runtime::advance_sessions`]): every op processes member rows
+//!   independently, so each member's token stream is **bit-identical** to
+//!   the stream a solo session produces — round composition can change
+//!   cost, never answers (`cargo test --test scheduler`).
+//! * **Batched prefill** ([`DecodeSession::prefill_many`] →
+//!   [`ForwardPlan::prefill_batch`]): admitted requests of a group prefill
+//!   as one ragged fused pass instead of b=1 each, capturing K/V per
+//!   sequence.  The first sampled token streams immediately, then the new
+//!   sessions join their group's next round — **mid-stream admission**.
+//! * **Fairness + KV pressure**: at most
+//!   [`SchedulerConfig::max_prefills_per_round`] prefills are admitted per
+//!   round, distributed round-robin across groups (one per group per turn,
+//!   rotating the starting group every round) so a hot precision cannot
+//!   starve the others.  When [`SchedulerConfig::kv_capacity_bytes`] is
+//!   set, a prefill whose projected KV page would push resident KV bytes
+//!   past the budget is **deferred** (kept queued, FIFO within its group)
+//!   rather than admitted — live streams are never evicted to make room.
+//! * **Failure containment**: a round that errors falls back to solo
+//!   steps, retiring only the members that actually fail; a batched
+//!   prefill that errors falls back to solo prefills the same way.  A
+//!   member whose KV/position capacity fills mid-round ends its own stream
+//!   (`done`, truncated) while the round's other members keep stepping.
+//!
+//! The scheduler is deliberately free of channels and threads: the serving
+//! worker ([`crate::serve::Server::start_host`]) owns it and calls
+//! [`Scheduler::run_round`] in its loop, passing a sink that forwards each
+//! [`Response`] event to the right client.  That keeps the interleave
+//! policy testable without a server — `tests/scheduler.rs` drives rounds
+//! directly and compares every stream against solo sessions bit for bit.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::Arc;
+use std::time::Instant;
+
+use super::metrics::Metrics;
+use super::request::{Request, Response};
+use super::weights::PlanKey;
+use crate::model::manifest::ModelDims;
+use crate::runtime::{advance_sessions, DecodeSession, ForwardPlan};
+
+/// Projected resident KV bytes for one request's session — mirrors
+/// [`DecodeSession::with_budget`]'s cache sizing exactly (prompt +
+/// max_new − 1 positions, clamped to the model window, full-position
+/// rows across every layer's K and V pages).  Admission holds the
+/// [`SchedulerConfig::kv_capacity_bytes`] budget against this figure, and
+/// the server rejects at submit any request whose projection exceeds the
+/// budget **on its own** — such a request could never be admitted and
+/// would otherwise sit deferred forever.
+pub fn projected_kv_bytes(dims: &ModelDims, prompt_len: usize, max_new_tokens: usize) -> u64 {
+    let seq = dims.seq_len;
+    let prompt = prompt_len.clamp(1, seq);
+    let capacity = prompt
+        .saturating_add(max_new_tokens.saturating_sub(1))
+        .min(seq);
+    (dims.n_layers * 2 * capacity * dims.d_model * 4) as u64
+}
+
+/// Scheduling policy knobs (see the module docs).
+#[derive(Debug, Clone)]
+pub struct SchedulerConfig {
+    /// Fairness cap: prefills admitted per round across all groups,
+    /// distributed round-robin (minimum 1).
+    pub max_prefills_per_round: usize,
+    /// KV admission budget in bytes across all live sessions; `None`
+    /// means unbounded.  Prefills that would exceed it are deferred, never
+    /// admitted over budget, and live streams are never evicted.
+    pub kv_capacity_bytes: Option<u64>,
+}
+
+impl Default for SchedulerConfig {
+    fn default() -> Self {
+        SchedulerConfig {
+            max_prefills_per_round: 4,
+            kv_capacity_bytes: None,
+        }
+    }
+}
+
+/// A request admitted to a group's prefill queue.
+struct Pending {
+    req: Request,
+    enq: Instant,
+}
+
+/// One live stream between rounds.
+struct Live {
+    id: u64,
+    session: DecodeSession,
+    /// Tokens still to emit.
+    remaining: usize,
+    /// Last sampled token — the next round's input.
+    last: i32,
+    enq: Instant,
+    prefill_ms: f64,
+    decode_ms: f64,
+    /// Width of the prefill round this request rode in.
+    batch_size: usize,
+}
+
+/// One precision group: a shared plan, its live round members, and its
+/// FIFO prefill queue.
+struct Group {
+    plan: Arc<ForwardPlan>,
+    bits: u32,
+    int8: bool,
+    live: Vec<Live>,
+    pending: VecDeque<Pending>,
+}
+
+/// What one [`Scheduler::run_round`] did.
+#[derive(Debug, Default)]
+pub struct RoundOutcome {
+    /// Live sessions stepped this round (across all groups).
+    pub stepped: usize,
+    /// Requests prefilled (admitted) this round.
+    pub prefilled: usize,
+    /// Requests that failed mid-round — the caller closes their response
+    /// channels (their sink was never sent a `done` event).
+    pub failed: Vec<u64>,
+}
+
+/// What to do with a live member after its per-step bookkeeping.
+enum Fate {
+    Alive,
+    Retire,
+}
+
+/// The continuous-batching engine (see the module docs).
+pub struct Scheduler {
+    cfg: SchedulerConfig,
+    groups: BTreeMap<PlanKey, Group>,
+    /// Monotone round counter — rotates the admission starting group.
+    round: u64,
+}
+
+impl Scheduler {
+    pub fn new(cfg: SchedulerConfig) -> Self {
+        Scheduler {
+            cfg,
+            groups: BTreeMap::new(),
+            round: 0,
+        }
+    }
+
+    /// Queue a validated request for admission into its precision group.
+    /// `key` and `plan` come from the worker's
+    /// [`crate::serve::WeightStore`] (one resolved plan per key); the
+    /// request joins the group's FIFO prefill queue and will be admitted
+    /// by a future round under the fairness/KV policy.
+    pub fn submit(
+        &mut self,
+        key: PlanKey,
+        plan: Arc<ForwardPlan>,
+        bits: u32,
+        int8: bool,
+        req: Request,
+        enq: Instant,
+    ) {
+        let g = self.groups.entry(key).or_insert_with(|| Group {
+            plan: plan.clone(),
+            bits,
+            int8,
+            live: Vec::new(),
+            pending: VecDeque::new(),
+        });
+        if !Arc::ptr_eq(&g.plan, &plan) && g.live.is_empty() && g.pending.is_empty() {
+            // The store rebuilt the plan (e.g. calibration reload) while
+            // the group sat idle — adopt the new plan; with members in
+            // flight keep the old one so rounds never mix plans.
+            g.plan = plan;
+        }
+        g.pending.push_back(Pending { req, enq });
+    }
+
+    /// Whether any stream is live or any request awaits a prefill slot.
+    pub fn has_work(&self) -> bool {
+        self.groups
+            .values()
+            .any(|g| !g.live.is_empty() || !g.pending.is_empty())
+    }
+
+    /// Live streams across all groups.
+    pub fn live_sessions(&self) -> usize {
+        self.groups.values().map(|g| g.live.len()).sum()
+    }
+
+    /// Requests still queued for a prefill slot.
+    pub fn pending_prefills(&self) -> usize {
+        self.groups.values().map(|g| g.pending.len()).sum()
+    }
+
+    /// Resident KV bytes across all live sessions — the figure admission
+    /// holds under [`SchedulerConfig::kv_capacity_bytes`].
+    pub fn resident_kv_bytes(&self) -> u64 {
+        self.groups
+            .values()
+            .flat_map(|g| g.live.iter())
+            .map(|l| l.session.kv_bytes() as u64)
+            .sum()
+    }
+
+    /// Drop streams and queued requests whose client vanished (`alive`
+    /// returns false) — their KV pages free immediately instead of being
+    /// stepped to completion for nobody.
+    pub fn prune(&mut self, alive: &dyn Fn(u64) -> bool) {
+        for g in self.groups.values_mut() {
+            g.live.retain(|l| alive(l.id));
+            g.pending.retain(|p| alive(p.req.id));
+        }
+        self.groups
+            .retain(|_, g| !g.live.is_empty() || !g.pending.is_empty());
+    }
+
+    /// Run one scheduling round: step every group's live sessions as one
+    /// batched GEMM round each, then admit pending prefills under the
+    /// fairness cap and KV budget (batched per group).  `sink` receives
+    /// every [`Response`] event (intermediate and final) and returns
+    /// whether the client still listens; events after a `false` retire the
+    /// stream.  Failed requests are reported in the outcome instead of
+    /// receiving events.
+    pub fn run_round(
+        &mut self,
+        metrics: &mut Metrics,
+        sink: &mut dyn FnMut(u64, Response) -> bool,
+    ) -> RoundOutcome {
+        let mut out = RoundOutcome::default();
+        self.step_groups(metrics, sink, &mut out);
+        self.admit(metrics, sink, &mut out);
+        metrics.set_kv_bytes(self.resident_kv_bytes());
+        self.groups
+            .retain(|_, g| !g.live.is_empty() || !g.pending.is_empty());
+        self.round = self.round.wrapping_add(1);
+        out
+    }
+
+    /// Decode phase: one batched step round per group with live members.
+    fn step_groups(
+        &mut self,
+        metrics: &mut Metrics,
+        sink: &mut dyn FnMut(u64, Response) -> bool,
+        out: &mut RoundOutcome,
+    ) {
+        for g in self.groups.values_mut() {
+            if g.live.is_empty() {
+                continue;
+            }
+            let m = g.live.len();
+            let tokens: Vec<i32> = g.live.iter().map(|l| l.last).collect();
+            let t0 = Instant::now();
+            let stepped = {
+                let mut refs: Vec<&mut DecodeSession> =
+                    g.live.iter_mut().map(|l| &mut l.session).collect();
+                advance_sessions(&mut refs, &tokens)
+            };
+            match stepped {
+                Ok(()) => {
+                    let round_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    metrics.record_round(g.bits, m, round_ms, g.plan.weight_bytes() as u64);
+                    out.stepped += m;
+                    let share = round_ms / m as f64;
+                    let mut i = 0;
+                    while i < g.live.len() {
+                        metrics.record_decode_step(g.bits, share);
+                        let fate = Self::emit_sampled(
+                            g.bits,
+                            g.int8,
+                            &mut g.live[i],
+                            share,
+                            metrics,
+                            sink,
+                        );
+                        match fate {
+                            Fate::Alive => i += 1,
+                            Fate::Retire => {
+                                g.live.remove(i);
+                            }
+                        }
+                    }
+                }
+                Err(e) => {
+                    // Containment: a member that cannot step (validated
+                    // away in normal operation) must not stall the round's
+                    // other members — retry solo, retiring only the
+                    // members that actually fail.
+                    eprintln!(
+                        "serve scheduler: int{} step round failed ({e:#}); retrying members solo",
+                        g.bits
+                    );
+                    let mut i = 0;
+                    while i < g.live.len() {
+                        let l = &mut g.live[i];
+                        let t1 = Instant::now();
+                        match l.session.advance(l.last) {
+                            Ok(()) => {
+                                let ms = t1.elapsed().as_secs_f64() * 1e3;
+                                metrics.record_round(g.bits, 1, ms, g.plan.weight_bytes() as u64);
+                                metrics.record_decode_step(g.bits, ms);
+                                out.stepped += 1;
+                                match Self::emit_sampled(g.bits, g.int8, l, ms, metrics, sink) {
+                                    Fate::Alive => i += 1,
+                                    Fate::Retire => {
+                                        g.live.remove(i);
+                                    }
+                                }
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "serve scheduler: request {}: decode step failed: {e:#}",
+                                    l.id
+                                );
+                                out.failed.push(l.id);
+                                g.live.remove(i);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Shared post-step bookkeeping for one member whose logits just
+    /// advanced: sample the next token, stream the event, retire the
+    /// stream when finished (`remaining` exhausted or capacity truncation)
+    /// or when the client hung up.
+    fn emit_sampled(
+        bits: u32,
+        int8: bool,
+        l: &mut Live,
+        step_ms: f64,
+        metrics: &mut Metrics,
+        sink: &mut dyn FnMut(u64, Response) -> bool,
+    ) -> Fate {
+        l.decode_ms += step_ms;
+        let (tok, logit) = l.session.sample();
+        l.last = tok;
+        l.remaining = l.remaining.saturating_sub(1);
+        // Capacity can end a stream before max_new_tokens (KV truncation):
+        // the event is marked done so the client never waits on tokens
+        // that cannot come — and only THIS member ends; the round's other
+        // members keep stepping.
+        let done = l.remaining == 0 || !l.session.can_advance();
+        let resp = Response {
+            id: l.id,
+            next_token: tok,
+            logit,
+            tokens: if done {
+                l.session.generated().to_vec()
+            } else {
+                Vec::new()
+            },
+            done,
+            bits,
+            int8_acts: int8,
+            queue_ms: 0.0,
+            compute_ms: step_ms,
+            prefill_ms: l.prefill_ms,
+            decode_ms: l.decode_ms,
+            batch_size: l.batch_size,
+        };
+        if done {
+            metrics.record(l.enq.elapsed().as_secs_f64() * 1e3, bits, l.batch_size);
+            let _ = sink(l.id, resp);
+            return Fate::Retire;
+        }
+        if sink(l.id, resp) {
+            Fate::Alive
+        } else {
+            Fate::Retire
+        }
+    }
+
+    /// Admission phase: pick up to `max_prefills_per_round` pending
+    /// requests round-robin across groups (FIFO within a group, deferring
+    /// a group whose queue head would blow the KV budget), then prefill
+    /// each group's admitted set as one ragged batched pass.
+    fn admit(
+        &mut self,
+        metrics: &mut Metrics,
+        sink: &mut dyn FnMut(u64, Response) -> bool,
+        out: &mut RoundOutcome,
+    ) {
+        let keys: Vec<PlanKey> = self
+            .groups
+            .iter()
+            .filter(|(_, g)| !g.pending.is_empty())
+            .map(|(k, _)| k.clone())
+            .collect();
+        if keys.is_empty() {
+            return;
+        }
+        let budget = self.cfg.max_prefills_per_round.max(1);
+        let mut resident = self.resident_kv_bytes();
+        let mut admit: BTreeMap<PlanKey, usize> = BTreeMap::new();
+        let start = (self.round as usize) % keys.len();
+        let mut stalled = vec![false; keys.len()];
+        let mut taken = 0usize;
+        let mut cursor = 0usize;
+        while taken < budget && stalled.iter().any(|&s| !s) {
+            let ki = (start + cursor) % keys.len();
+            cursor += 1;
+            if stalled[ki] {
+                continue;
+            }
+            let g = &self.groups[&keys[ki]];
+            let n_admitted = admit.get(&keys[ki]).copied().unwrap_or(0);
+            match g.pending.get(n_admitted) {
+                None => stalled[ki] = true,
+                Some(p) => {
+                    let projected = projected_kv_bytes(
+                        &g.plan.dims,
+                        p.req.prompt.len(),
+                        p.req.max_new_tokens,
+                    );
+                    let fits = match self.cfg.kv_capacity_bytes {
+                        None => true,
+                        Some(cap) => resident.saturating_add(projected) <= cap,
+                    };
+                    if fits {
+                        *admit.entry(keys[ki].clone()).or_insert(0) += 1;
+                        resident += projected;
+                        taken += 1;
+                    } else {
+                        // KV pressure: defer this group's queue head (and
+                        // everything behind it — FIFO) to a later round;
+                        // never evict a live stream to make room.
+                        stalled[ki] = true;
+                    }
+                }
+            }
+        }
+        for (key, n) in admit {
+            let g = self.groups.get_mut(&key).expect("admitted group exists");
+            let plan = g.plan.clone();
+            let bits = g.bits;
+            let int8 = g.int8;
+            let batch: Vec<Pending> = g.pending.drain(..n).collect();
+            let m = batch.len();
+            let t0 = Instant::now();
+            let prefilled = {
+                let specs: Vec<(&[i32], crate::runtime::Sampling, usize)> = batch
+                    .iter()
+                    .map(|p| {
+                        (
+                            p.req.prompt.as_slice(),
+                            p.req.sampling,
+                            p.req.max_new_tokens,
+                        )
+                    })
+                    .collect();
+                DecodeSession::prefill_many(&plan, &specs)
+            };
+            match prefilled {
+                Ok(sessions) => {
+                    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+                    // One ragged fused pass for the whole admitted set:
+                    // the payload was streamed once per GEMM block, so the
+                    // bytes-touched counter grows once per BATCH.
+                    metrics.record_batch(bits, total_ms, plan.weight_bytes() as u64);
+                    let share = total_ms / m as f64;
+                    for (p, session) in batch.into_iter().zip(sessions) {
+                        metrics.record_prefill(bits, share, session.prompt_len() as u64);
+                        Self::start_stream(
+                            g, bits, int8, p, session, share, m, t0, metrics, sink, out,
+                        );
+                    }
+                }
+                Err(e) => {
+                    eprintln!(
+                        "serve scheduler: int{bits} batched prefill failed ({e:#}); retrying solo"
+                    );
+                    for p in batch {
+                        let t1 = Instant::now();
+                        match DecodeSession::with_budget(
+                            plan.clone(),
+                            &p.req.prompt,
+                            p.req.sampling,
+                            p.req.max_new_tokens,
+                        ) {
+                            Ok(session) => {
+                                let ms = t1.elapsed().as_secs_f64() * 1e3;
+                                metrics.record_batch(bits, ms, plan.weight_bytes() as u64);
+                                metrics.record_prefill(bits, ms, session.prompt_len() as u64);
+                                Self::start_stream(
+                                    g, bits, int8, p, session, ms, 1, t1, metrics, sink, out,
+                                );
+                            }
+                            Err(e) => {
+                                eprintln!(
+                                    "serve scheduler: request {}: prefill failed: {e:#}",
+                                    p.req.id
+                                );
+                                out.failed.push(p.req.id);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Post-prefill bookkeeping for one admitted request: sample the first
+    /// token, stream the event, and either finish the request (single
+    /// token / immediate truncation) or enlist it as a live round member.
+    #[allow(clippy::too_many_arguments)]
+    fn start_stream(
+        g: &mut Group,
+        bits: u32,
+        int8: bool,
+        p: Pending,
+        session: DecodeSession,
+        prefill_ms: f64,
+        batch_size: usize,
+        batch_start: Instant,
+        metrics: &mut Metrics,
+        sink: &mut dyn FnMut(u64, Response) -> bool,
+        out: &mut RoundOutcome,
+    ) {
+        out.prefilled += 1;
+        let queue_ms = batch_start.saturating_duration_since(p.enq).as_secs_f64() * 1e3;
+        let mut live = Live {
+            id: p.req.id,
+            session,
+            remaining: p.req.max_new_tokens.max(1),
+            last: 0,
+            enq: p.enq,
+            prefill_ms,
+            decode_ms: 0.0,
+            batch_size,
+        };
+        let (tok, logit) = live.session.sample();
+        live.last = tok;
+        live.remaining -= 1;
+        let done = live.remaining == 0 || !live.session.can_advance();
+        let resp = Response {
+            id: live.id,
+            next_token: tok,
+            logit,
+            tokens: if done {
+                live.session.generated().to_vec()
+            } else {
+                Vec::new()
+            },
+            done,
+            bits,
+            int8_acts: int8,
+            queue_ms,
+            compute_ms: prefill_ms,
+            prefill_ms,
+            decode_ms: 0.0,
+            batch_size,
+        };
+        if done {
+            metrics.record(p.enq.elapsed().as_secs_f64() * 1e3, bits, batch_size);
+            let _ = sink(live.id, resp);
+        } else if sink(live.id, resp) {
+            g.live.push(live);
+        }
+    }
+}

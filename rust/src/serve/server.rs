@@ -3,29 +3,32 @@
 //! per-precision weight state; clients submit requests through an mpsc
 //! channel and receive responses on per-request channels.
 //!
-//! Two backends, one worker loop:
+//! Two backends, two worker loops:
 //!
 //! * [`Server::start`] — PJRT: batches run the `fwd_b{B}` HLO artifacts;
 //!   weight sets convert to literals per batch (warm dense or paged).
-//!   Single-token only (no KV cache in the artifacts).
-//! * [`Server::start_host`] — host: the worker serves from **cached
-//!   forward plans** ([`crate::serve::WeightStore`] →
-//!   [`crate::runtime::ForwardPlan`]): each request prefills a
-//!   [`DecodeSession`] once through the fused packed kernels, then
-//!   generates up to `max_new_tokens` tokens with KV-cached O(n) decode
-//!   steps — no artifacts, no PJRT, and on paged precisions no f32 weight
-//!   tensor, at any r ∈ {1..8}.  Responses **stream**: one [`Response`]
-//!   event per token on the request's channel, the last with `done`.
+//!   Single-token greedy only (no KV cache in the artifacts), batched by
+//!   the [`DynamicBatcher`].
+//! * [`Server::start_host`] — host: the worker owns a
+//!   [`crate::serve::Scheduler`] and serves from **cached forward plans**
+//!   ([`crate::serve::WeightStore`] → [`crate::runtime::ForwardPlan`]).
+//!   The loop validates and resolves each request at submit, hands it to
+//!   its precision group, then just runs **scheduling rounds**: every live
+//!   group advances all of its streams with one blocked fused GEMM per
+//!   layer (the payload streams once per GEMM block per round, not once
+//!   per session), admitted requests prefill as one ragged fused batch and
+//!   join their group's next round — continuous batching with mid-stream
+//!   admission, a round-robin fairness cap, and KV-pressure-aware
+//!   deferral ([`ServerConfig::kv_capacity_bytes`]).  Responses
+//!   **stream**: one [`Response`] event per token on the request's
+//!   channel, the last with `done`.
 //!
-//! Scheduling: every worker iteration first advances each live decode
-//! session by one token (decode priority — inter-token latency stays flat
-//! while prefills queue behind), then admits new work from the batcher.
-//! With live sessions the queue poll is non-blocking, so decode throughput
-//! never waits on the batch window.
+//! The prefill/decode interleave policy lives in the scheduler, not here:
+//! this loop only moves messages, resolves plans, and forwards events.
 
-use std::collections::BTreeMap;
+use std::collections::{BTreeMap, VecDeque};
 use std::path::PathBuf;
-use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender};
+use std::sync::mpsc::{self, Receiver, RecvTimeoutError, Sender, TryRecvError};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
@@ -35,17 +38,19 @@ use anyhow::Context;
 use super::batcher::{DynamicBatcher, ReadyBatch};
 use super::metrics::Metrics;
 use super::request::{Request, Response};
-use super::weights::WeightStore;
-use crate::data::Rng;
+use super::scheduler::{projected_kv_bytes, Scheduler, SchedulerConfig};
+use super::weights::{PlanKey, WeightStore};
 use crate::model::{PresetInfo, QuantizedModel};
 use crate::quant::{ActCalibration, ActQuantConfig};
-use crate::runtime::{argmax_logit, lit_i32, sample_logits, DecodeSession, Engine, Sampling};
+use crate::runtime::{argmax_logit, lit_i32, Engine, Sampling};
 use crate::Result;
 
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
     pub preset: String,
-    /// Micro-batch window in ms.
+    /// Micro-batch window in ms (PJRT batching; on the host backend this
+    /// is only the idle-poll granularity — round composition is the
+    /// scheduler's job).
     pub max_wait_ms: f64,
     /// Precisions to pre-build as dense f32 state (others are built lazily
     /// as paged r-bit payloads).  On the **host** backend a warm precision
@@ -64,6 +69,15 @@ pub struct ServerConfig {
     /// plans then quantize against fixed per-layer thresholds instead of
     /// re-scanning every token row of every request.
     pub calibration: Option<PathBuf>,
+    /// Host backend: prefills admitted per scheduling round, distributed
+    /// round-robin across precision groups
+    /// ([`SchedulerConfig::max_prefills_per_round`]).
+    pub max_prefills_per_round: usize,
+    /// Host backend: KV admission budget in bytes across all live streams
+    /// ([`SchedulerConfig::kv_capacity_bytes`]).  Prefills that would
+    /// exceed it are deferred to a later round; live streams are never
+    /// evicted.  `None` = unbounded.
+    pub kv_capacity_bytes: Option<u64>,
 }
 
 impl Default for ServerConfig {
@@ -74,38 +88,16 @@ impl Default for ServerConfig {
             warm_bits: vec![8, 4, 2],
             act_quant: ActQuantConfig::absmax(),
             calibration: None,
+            max_prefills_per_round: 4,
+            kv_capacity_bytes: None,
         }
     }
-}
-
-/// What executes a ready batch.
-enum Backend {
-    /// Compiled `fwd_b{B}` artifacts through the PJRT engine.
-    Pjrt(Engine),
-    /// The host decode engine — no artifacts, no PJRT.
-    Host,
 }
 
 enum Msg {
     Submit(Request, Sender<Response>),
     Report(Sender<String>),
     Shutdown,
-}
-
-/// One live multi-token generation between worker iterations.
-struct ActiveDecode {
-    id: u64,
-    session: DecodeSession,
-    /// Tokens still to emit.
-    remaining: usize,
-    /// Last sampled token — the next step's input.
-    last: i32,
-    bits: u32,
-    int8: bool,
-    enq: Instant,
-    prefill_ms: f64,
-    decode_ms: f64,
-    batch_size: usize,
 }
 
 /// Client handle; the worker thread dies when this is dropped (after a
@@ -149,7 +141,7 @@ impl Server {
                     }
                 };
                 let _ = boot_tx.send(Ok(()));
-                worker_loop(Backend::Pjrt(engine), preset, model, cfg, rx)
+                pjrt_worker_loop(engine, preset, model, cfg, rx)
             })
             .context("spawning serve worker")?;
         boot_rx.recv().context("worker boot")??;
@@ -160,11 +152,11 @@ impl Server {
     }
 
     /// Boot a **host-backed** worker: whole requests — including
-    /// multi-token generations — are answered by the incremental decode
-    /// engine from cached forward plans, with no artifacts directory, no
-    /// PJRT, and no f32 weight set for lazily-built precisions.  `preset`
-    /// supplies the model dimensions and batch buckets that the manifest
-    /// would otherwise provide.
+    /// multi-token generations — are answered by the continuous-batching
+    /// scheduler over the incremental decode engine, with no artifacts
+    /// directory, no PJRT, and no f32 weight set for lazily-built
+    /// precisions.  `preset` supplies the model dimensions that the
+    /// manifest would otherwise provide.
     pub fn start_host(
         preset: PresetInfo,
         model: QuantizedModel,
@@ -173,7 +165,7 @@ impl Server {
         let (tx, rx) = mpsc::channel::<Msg>();
         let worker = std::thread::Builder::new()
             .name("mq-serve-worker".into())
-            .spawn(move || worker_loop(Backend::Host, preset, model, cfg, rx))
+            .spawn(move || host_worker_loop(preset, model, cfg, rx))
             .context("spawning host serve worker")?;
         Ok(Server {
             tx,
@@ -230,8 +222,259 @@ impl Drop for Server {
     }
 }
 
-fn worker_loop(
-    backend: Backend,
+// ---------------------------------------------------------------------------
+// Host backend: scheduler-driven continuous batching
+// ---------------------------------------------------------------------------
+
+/// The host worker loop: drain submissions (validating + resolving each
+/// request's plan), then run one scheduling round — every iteration.  With
+/// live or pending work the submit poll is non-blocking, so decode rounds
+/// never wait on the channel; idle, the loop parks on the batch window.
+/// Shutdown keeps running rounds until every stream and queued prefill has
+/// drained — every accepted request is answered.
+fn host_worker_loop(
+    preset: PresetInfo,
+    model: QuantizedModel,
+    cfg: ServerConfig,
+    rx: Receiver<Msg>,
+) {
+    let seq = preset.model.seq_len;
+    let vocab = preset.model.vocab;
+    let mut store = WeightStore::new();
+    let mut waiters: BTreeMap<u64, Sender<Response>> = BTreeMap::new();
+    let mut metrics = Metrics::default();
+    let mut sched = Scheduler::new(SchedulerConfig {
+        max_prefills_per_round: cfg.max_prefills_per_round,
+        kv_capacity_bytes: cfg.kv_capacity_bytes,
+    });
+
+    // Warm state at boot (build latency is free there): dense f32 forward
+    // plans for the warm precisions, and the persisted activation-clip
+    // calibration — loaded before any plan exists, so int8 plans bake the
+    // fixed thresholds in from the first request.
+    if let Some(path) = &cfg.calibration {
+        match ActCalibration::load(path) {
+            Ok(c) => store.set_calibration(Some(Arc::new(c))),
+            Err(e) => eprintln!("serve worker: calibration {path:?}: {e:#}"),
+        }
+    }
+    for &b in &cfg.warm_bits {
+        if let Err(e) = store.plan_warm(&model, &preset.model, b, &mut metrics) {
+            eprintln!("serve worker: warm plan int{b}: {e:#}");
+        }
+    }
+
+    let mut running = true;
+    while running || sched.has_work() {
+        // Drain every queued message; block (bounded by the batch window)
+        // only when there is nothing to step or prefill.
+        let mut may_block = running && !sched.has_work();
+        loop {
+            let msg = if may_block {
+                may_block = false;
+                match rx.recv_timeout(Duration::from_micros(
+                    (cfg.max_wait_ms * 1000.0) as u64 + 100,
+                )) {
+                    Ok(m) => Some(m),
+                    Err(RecvTimeoutError::Timeout) => None,
+                    Err(RecvTimeoutError::Disconnected) => {
+                        running = false;
+                        None
+                    }
+                }
+            } else {
+                match rx.try_recv() {
+                    Ok(m) => Some(m),
+                    Err(TryRecvError::Empty) => None,
+                    Err(TryRecvError::Disconnected) => {
+                        running = false;
+                        None
+                    }
+                }
+            };
+            let Some(msg) = msg else { break };
+            match msg {
+                Msg::Submit(req, tx) => host_submit(
+                    req,
+                    tx,
+                    seq,
+                    vocab,
+                    &cfg,
+                    &model,
+                    &preset,
+                    &mut store,
+                    &mut sched,
+                    &mut waiters,
+                    &mut metrics,
+                ),
+                Msg::Report(tx) => {
+                    let _ = tx.send(metrics.report());
+                }
+                Msg::Shutdown => running = false,
+            }
+        }
+        // Clients that hung up free their streams (and KV pages) now.
+        sched.prune(&|id| waiters.contains_key(&id));
+        let outcome = sched.run_round(&mut metrics, &mut |id, resp| {
+            if resp.done {
+                if let Some(tx) = waiters.remove(&id) {
+                    let _ = tx.send(resp);
+                }
+                false
+            } else {
+                let alive = waiters.get(&id).is_some_and(|tx| tx.send(resp).is_ok());
+                if !alive {
+                    // A failed mid-stream send means the client hung up:
+                    // drop the dead sender now, or `waiters` grows without
+                    // bound (and prune() keeps treating the id as live).
+                    waiters.remove(&id);
+                }
+                alive
+            }
+        });
+        // Mid-round failures close their channels: clients get a recv
+        // error instead of hanging on a stream that cannot continue.
+        for id in outcome.failed {
+            waiters.remove(&id);
+        }
+    }
+}
+
+/// Validate one host request and enqueue it with its resolved plan.
+/// Rejecting here (the dropped sender surfaces as a recv error on the
+/// client) keeps a malformed request out of every round, so it cannot
+/// fail innocent round members or stall a stream.
+#[allow(clippy::too_many_arguments)]
+fn host_submit(
+    req: Request,
+    tx: Sender<Response>,
+    seq: usize,
+    vocab: usize,
+    cfg: &ServerConfig,
+    model: &QuantizedModel,
+    preset: &PresetInfo,
+    store: &mut WeightStore,
+    sched: &mut Scheduler,
+    waiters: &mut BTreeMap<u64, Sender<Response>>,
+    metrics: &mut Metrics,
+) {
+    // Only the first `seq` tokens reach the forward pass (prompts
+    // truncate), so tokens in the clipped tail must not fail a request
+    // they cannot affect.
+    let bad_token = req
+        .prompt
+        .iter()
+        .take(seq)
+        .find(|&&t| t < 0 || t as usize >= vocab)
+        .copied();
+    if let Some(bad) = bad_token {
+        eprintln!(
+            "serve worker: request {}: token {bad} outside vocab [0, {vocab}) — rejected",
+            req.id
+        );
+        return;
+    }
+    if req.max_new_tokens == 0 || req.max_new_tokens > seq {
+        // 0 would produce an empty stream; anything past the position
+        // capacity can never be served and would pin a round slot for
+        // nothing.
+        eprintln!(
+            "serve worker: request {}: max_new_tokens {} outside [1, {seq}] — rejected",
+            req.id, req.max_new_tokens
+        );
+        return;
+    }
+    if let Err(e) = req.sampling.validate() {
+        eprintln!("serve worker: request {}: {e:#} — rejected", req.id);
+        return;
+    }
+    if let Some(map) = &req.per_layer {
+        if map.is_empty() || map.iter().any(|b| !(1..=8).contains(b)) {
+            eprintln!(
+                "serve worker: request {}: per-layer map {map:?} invalid (bits must be in [1, 8]) — rejected",
+                req.id
+            );
+            return;
+        }
+    }
+    if let Some(cap) = cfg.kv_capacity_bytes {
+        // A request whose KV page alone exceeds the budget could never be
+        // admitted — deferring it would park it (and its client) forever.
+        let projected = projected_kv_bytes(&preset.model, req.prompt.len(), req.max_new_tokens);
+        if projected > cap {
+            eprintln!(
+                "serve worker: request {}: projected KV {projected}B exceeds the {cap}B budget — rejected",
+                req.id
+            );
+            return;
+        }
+    }
+    // Per-layer traffic is grouped and reported under the map's maximum
+    // bit-width (deterministic and group-consistent — the uniform
+    // `precision` field does not describe what actually ran).
+    let bits = match &req.per_layer {
+        Some(map) => *map.iter().max().expect("validated non-empty"),
+        None => req.precision.bits(),
+    };
+    let int8 = if req.int8_acts {
+        Some(cfg.act_quant)
+    } else {
+        None
+    };
+    // Warm f32 traffic rides the dense plan; everything else (including
+    // int8 at a warm precision, and every per-layer map) needs packed
+    // handles.  Plans cache per PlanKey, so this resolve is a lookup for
+    // all but a precision's first request.
+    let resolved = if let Some(map) = &req.per_layer {
+        store
+            .plan_per_layer(model, &preset.model, map, int8, metrics)
+            .map(|p| {
+                (
+                    PlanKey::PerLayer {
+                        bits: map.clone(),
+                        int8: req.int8_acts,
+                    },
+                    p,
+                )
+            })
+    } else if req.int8_acts || !cfg.warm_bits.contains(&bits) {
+        store
+            .plan_packed(model, &preset.model, bits, int8, metrics)
+            .map(|p| {
+                (
+                    PlanKey::Packed {
+                        bits,
+                        int8: req.int8_acts,
+                    },
+                    p,
+                )
+            })
+    } else {
+        store
+            .plan_warm(model, &preset.model, bits, metrics)
+            .map(|p| (PlanKey::Warm(bits), p))
+    };
+    match resolved {
+        Ok((key, plan)) => {
+            let id = req.id;
+            waiters.insert(id, tx);
+            sched.submit(key, plan, bits, req.int8_acts, req, Instant::now());
+        }
+        Err(e) => {
+            eprintln!(
+                "serve worker: request {}: plan build failed: {e:#} — rejected",
+                req.id
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// PJRT backend: dynamic batching over the `fwd_b{B}` artifacts
+// ---------------------------------------------------------------------------
+
+fn pjrt_worker_loop(
+    engine: Engine,
     preset: PresetInfo,
     model: QuantizedModel,
     cfg: ServerConfig,
@@ -243,35 +486,12 @@ fn worker_loop(
     let mut store = WeightStore::new();
     let mut waiters: BTreeMap<u64, Sender<Response>> = BTreeMap::new();
     let mut metrics = Metrics::default();
-    let mut active: Vec<ActiveDecode> = Vec::new();
 
-    // Warm state at boot (build latency is free there).  Host: dense f32
-    // forward plans; PJRT: dense f32 weight sets.  Every other precision
-    // is built lazily by paging in r-bit payloads — `32/r`× fewer resident
-    // weight bytes than a dense set, shared across every plan that uses
-    // the precision.  The host backend also loads the persisted
-    // activation-clip calibration before any plan exists, so int8 plans
-    // bake the fixed thresholds in from the first request.
-    match &backend {
-        Backend::Host => {
-            if let Some(path) = &cfg.calibration {
-                match ActCalibration::load(path) {
-                    Ok(c) => store.set_calibration(Some(Arc::new(c))),
-                    Err(e) => eprintln!("serve worker: calibration {path:?}: {e:#}"),
-                }
-            }
-            for &b in &cfg.warm_bits {
-                if let Err(e) = store.plan_warm(&model, &preset.model, b, &mut metrics) {
-                    eprintln!("serve worker: warm plan int{b}: {e:#}");
-                }
-            }
-        }
-        Backend::Pjrt(_) => {
-            for &b in &cfg.warm_bits {
-                if let Err(e) = store.build_warm(&model, b, &mut metrics) {
-                    eprintln!("serve worker: materialize int{b}: {e:#}");
-                }
-            }
+    // Warm dense f32 weight sets at boot; every other precision pages in
+    // r-bit payloads lazily.
+    for &b in &cfg.warm_bits {
+        if let Err(e) = store.build_warm(&model, b, &mut metrics) {
+            eprintln!("serve worker: materialize int{b}: {e:#}");
         }
     }
 
@@ -279,31 +499,17 @@ fn worker_loop(
     // Shutdown flush: `drain_all` empties every queue at once, so the
     // batches it returns must all be executed — parking them here (instead
     // of taking the first and dropping the rest, which silently lost the
-    // other precisions' requests) keeps every waiter answered.  Live decode
-    // sessions likewise keep the loop alive until their streams finish.
-    let mut drained: std::collections::VecDeque<ReadyBatch> = std::collections::VecDeque::new();
-    while running || batcher.pending() > 0 || !drained.is_empty() || !active.is_empty() {
-        // Decode priority: advance every live session one token before
-        // admitting new work.
-        step_active(&mut active, &mut waiters, &mut metrics);
-        // With live sessions the poll must not block — their next tokens
-        // are due; otherwise wait out the batch window.
-        let timeout = if active.is_empty() {
-            Duration::from_micros((cfg.max_wait_ms * 500.0) as u64 + 100)
-        } else {
-            Duration::ZERO
-        };
+    // other precisions' requests) keeps every waiter answered.
+    let mut drained: VecDeque<ReadyBatch> = VecDeque::new();
+    while running || batcher.pending() > 0 || !drained.is_empty() {
         if running {
+            let timeout = Duration::from_micros((cfg.max_wait_ms * 500.0) as u64 + 100);
             match rx.recv_timeout(timeout) {
                 Ok(Msg::Submit(req, tx)) => {
-                    // Validate up front: rejecting a bad request here (the
-                    // dropped sender surfaces as a recv error on the
-                    // client) keeps it out of a batch, so it cannot fail
-                    // innocent batchmates or stall a decode stream.
-                    // Only the first `seq` tokens reach the forward pass
-                    // (prompts truncate), so tokens in the clipped tail
-                    // must not fail a request they cannot affect.
-                    let host = matches!(backend, Backend::Host);
+                    // PJRT serves exactly one greedy f32 token per request
+                    // from fixed executables — everything else needs the
+                    // host backend, and rejecting is honest where silently
+                    // downgrading is not.
                     let bad_token = req
                         .prompt
                         .iter()
@@ -317,9 +523,6 @@ fn worker_loop(
                         );
                         drop(tx);
                     } else if req.max_new_tokens == 0 || req.max_new_tokens > seq {
-                        // 0 would produce an empty stream; anything past
-                        // the position capacity can never be served and
-                        // would pin a decode slot for nothing.
                         eprintln!(
                             "serve worker: request {}: max_new_tokens {} outside [1, {seq}] — rejected",
                             req.id, req.max_new_tokens
@@ -328,23 +531,27 @@ fn worker_loop(
                     } else if let Err(e) = req.sampling.validate() {
                         eprintln!("serve worker: request {}: {e:#} — rejected", req.id);
                         drop(tx);
-                    } else if req.int8_acts && !host {
+                    } else if req.int8_acts {
                         eprintln!(
                             "serve worker: request {}: int8 activations need the host backend — rejected",
                             req.id
                         );
                         drop(tx);
-                    } else if !host && !matches!(req.sampling, Sampling::Greedy) {
-                        // PJRT's respond path is argmax-only; rejecting is
-                        // honest, silently serving greedy is not.
+                    } else if !matches!(req.sampling, Sampling::Greedy) {
                         eprintln!(
                             "serve worker: request {}: temperature sampling needs the host backend — rejected",
                             req.id
                         );
                         drop(tx);
-                    } else if req.max_new_tokens > 1 && !host {
+                    } else if req.max_new_tokens > 1 {
                         eprintln!(
                             "serve worker: request {}: multi-token generation needs the host backend (PJRT has no KV cache) — rejected",
+                            req.id
+                        );
+                        drop(tx);
+                    } else if req.per_layer.is_some() {
+                        eprintln!(
+                            "serve worker: request {}: per-layer serving needs the host backend — rejected",
                             req.id
                         );
                         drop(tx);
@@ -361,36 +568,12 @@ fn worker_loop(
                 Err(RecvTimeoutError::Disconnected) => running = false,
             }
         }
-        // Prefetch: build plans / page in payloads for precisions that
-        // already have queued work, so the build is off the batch critical
-        // path.
-        match &backend {
-            Backend::Host => {
-                for b in batcher.queued_precisions() {
-                    let r = if cfg.warm_bits.contains(&b) {
-                        store.plan_warm(&model, &preset.model, b, &mut metrics)
-                    } else {
-                        store.plan_packed(&model, &preset.model, b, None, &mut metrics)
-                    };
-                    if let Err(e) = r {
-                        eprintln!("serve worker: plan int{b}: {e:#}");
-                    }
-                }
-                for b in batcher.queued_int8_precisions() {
-                    if let Err(e) =
-                        store.plan_packed(&model, &preset.model, b, Some(cfg.act_quant), &mut metrics)
-                    {
-                        eprintln!("serve worker: int8 plan int{b}: {e:#}");
-                    }
-                }
-            }
-            Backend::Pjrt(_) => {
-                for b in batcher.queued_precisions() {
-                    if !store.contains(b) {
-                        if let Err(e) = store.build_paged(&model, b, &mut metrics) {
-                            eprintln!("serve worker: page-in int{b}: {e:#}");
-                        }
-                    }
+        // Prefetch: page in payloads for precisions that already have
+        // queued work, so the build is off the batch critical path.
+        for b in batcher.queued_precisions() {
+            if !store.contains(b) {
+                if let Err(e) = store.build_paged(&model, b, &mut metrics) {
+                    eprintln!("serve worker: page-in int{b}: {e:#}");
                 }
             }
         }
@@ -404,120 +587,33 @@ fn worker_loop(
         };
         if let Some(batch) = ready {
             let member_ids: Vec<u64> = batch.requests.iter().map(|(r, _)| r.id).collect();
-            let result = match &backend {
-                Backend::Pjrt(engine) => {
-                    if !store.contains(batch.bits) {
-                        if let Err(e) = store.build_paged(&model, batch.bits, &mut metrics) {
-                            eprintln!("serve worker: page-in int{}: {e:#}", batch.bits);
-                        }
-                    }
-                    execute_batch_pjrt(
-                        engine,
-                        &cfg.preset,
-                        seq,
-                        vocab,
-                        &store,
-                        &model,
-                        batch,
-                        &mut waiters,
-                        &mut metrics,
-                    )
+            if !store.contains(batch.bits) {
+                if let Err(e) = store.build_paged(&model, batch.bits, &mut metrics) {
+                    eprintln!("serve worker: page-in int{}: {e:#}", batch.bits);
                 }
-                Backend::Host => execute_batch_host(
-                    &preset,
-                    &cfg,
-                    &mut store,
-                    &model,
-                    batch,
-                    &mut waiters,
-                    &mut metrics,
-                    &mut active,
-                ),
-            };
+            }
+            let result = execute_batch_pjrt(
+                &engine,
+                &cfg.preset,
+                seq,
+                vocab,
+                &store,
+                &model,
+                batch,
+                &mut waiters,
+                &mut metrics,
+            );
             if let Err(e) = result {
                 eprintln!("serve worker: batch failed: {e:#}");
                 // Close the batch members' response channels: clients get a
                 // recv error instead of hanging forever on a batch a single
-                // malformed request (e.g. an out-of-vocab token) poisoned.
+                // malformed request poisoned.
                 for id in member_ids {
                     waiters.remove(&id);
                 }
             }
         }
     }
-}
-
-/// Advance every live decode session one token: feed back its last sampled
-/// token through the KV-cached step, sample the next, stream the event.
-/// Finished (or abandoned — client hung up) sessions are retired, and the
-/// KV-residency gauge is refreshed from what stays live.
-fn step_active(
-    active: &mut Vec<ActiveDecode>,
-    waiters: &mut BTreeMap<u64, Sender<Response>>,
-    metrics: &mut Metrics,
-) {
-    let mut i = 0;
-    while i < active.len() {
-        // Client hung up mid-stream → free the session (and its KV page).
-        if !waiters.contains_key(&active[i].id) {
-            active.remove(i);
-            continue;
-        }
-        let a = &mut active[i];
-        let t0 = Instant::now();
-        if let Err(e) = a.session.advance(a.last) {
-            eprintln!("serve worker: request {}: decode step failed: {e:#}", a.id);
-            waiters.remove(&a.id);
-            active.remove(i);
-            continue;
-        }
-        let step_ms = t0.elapsed().as_secs_f64() * 1e3;
-        a.decode_ms += step_ms;
-        metrics.record_decode_step(a.bits, step_ms);
-        let (tok, logit) = a.session.sample();
-        a.last = tok;
-        a.remaining -= 1;
-        // Capacity can end a stream before max_new_tokens: the event is
-        // marked done so the client never waits on tokens that cannot come.
-        let done = a.remaining == 0 || !a.session.can_advance();
-        // The full stream rides only on the final event — intermediate
-        // events carry their token in `next_token`, so an n-token stream
-        // costs O(n) copies, not O(n²).
-        let resp = Response {
-            id: a.id,
-            next_token: tok,
-            logit,
-            tokens: if done {
-                a.session.generated().to_vec()
-            } else {
-                Vec::new()
-            },
-            done,
-            bits: a.bits,
-            int8_acts: a.int8,
-            queue_ms: 0.0,
-            compute_ms: step_ms,
-            prefill_ms: a.prefill_ms,
-            decode_ms: a.decode_ms,
-            batch_size: a.batch_size,
-        };
-        if done {
-            metrics.record(a.enq.elapsed().as_secs_f64() * 1e3, a.bits, a.batch_size);
-            if let Some(tx) = waiters.remove(&a.id) {
-                let _ = tx.send(resp);
-            }
-            active.remove(i);
-            continue;
-        }
-        let alive = waiters.get(&a.id).is_some_and(|tx| tx.send(resp).is_ok());
-        if !alive {
-            waiters.remove(&a.id);
-            active.remove(i);
-            continue;
-        }
-        i += 1;
-    }
-    metrics.set_kv_bytes(active.iter().map(|a| a.session.kv_bytes() as u64).sum());
 }
 
 /// Greedy-decode each request's next token from the batch logits and send
@@ -568,9 +664,7 @@ fn respond_greedy(
 /// Pad-and-pack a batch's prompts into a `(rows, t)` token buffer; returns
 /// the buffer and each request's last prompt position (an empty prompt
 /// reads position 0 of the all-pad row — it round-trips instead of
-/// erroring).  PJRT passes the fixed executable shape `(bucket, seq_len)`;
-/// the host single-token fast path passes the tight
-/// `(n_requests, longest prompt)`.
+/// erroring).  PJRT passes the fixed executable shape `(bucket, seq_len)`.
 fn fill_tokens(batch: &ReadyBatch, rows: usize, t: usize) -> (Vec<i32>, Vec<usize>) {
     let mut tokens = vec![0i32; rows * t];
     let mut last_pos = vec![0usize; rows];
@@ -622,165 +716,5 @@ fn execute_batch_pjrt(
         waiters,
         metrics,
     );
-    Ok(())
-}
-
-/// Host path, two shapes under one cached forward plan:
-///
-/// * **All-single-token batch** — one batched fused forward over the whole
-///   batch (tight `n_requests × longest-prompt`, no bucket padding): the
-///   packed payload streams once per GEMM block across every batchmate,
-///   exactly like the pre-decode host path.  Sampling is still
-///   per-request.
-/// * **Generation batch** — one [`DecodeSession`] per request (its own
-///   tight prompt length, KV capture needs b = 1): the first token streams
-///   immediately; sessions live on in `active` for the worker to step.
-///   A request whose prefill fails is answered with a closed channel
-///   without failing its batchmates.
-///
-/// `queue_ms` is measured to the batch's execution start for every member,
-/// so a batchmate's prefill compute never shows up as phantom queueing.
-#[allow(clippy::too_many_arguments)]
-fn execute_batch_host(
-    preset: &PresetInfo,
-    cfg: &ServerConfig,
-    store: &mut WeightStore,
-    model: &QuantizedModel,
-    batch: ReadyBatch,
-    waiters: &mut BTreeMap<u64, Sender<Response>>,
-    metrics: &mut Metrics,
-    active: &mut Vec<ActiveDecode>,
-) -> Result<()> {
-    let bits = batch.bits;
-    let int8 = if batch.int8 {
-        Some(cfg.act_quant)
-    } else {
-        None
-    };
-    // Warm f32 traffic rides the dense plan; everything else (including
-    // int8 at a warm precision) needs packed handles.
-    let plan = if batch.int8 || !cfg.warm_bits.contains(&bits) {
-        store.plan_packed(model, &preset.model, bits, int8, metrics)?
-    } else {
-        store.plan_warm(model, &preset.model, bits, metrics)?
-    };
-    let n_req = batch.requests.len();
-    let batch_int8 = batch.int8;
-    let batch_start = Instant::now();
-
-    if batch.requests.iter().all(|(r, _)| r.max_new_tokens <= 1) {
-        // Batched fast path: amortize one fused multi-row forward across
-        // the whole batch.  Causal attention makes each request's
-        // last-position logits identical to its own tight forward.
-        let seq = preset.model.seq_len;
-        let vocab = preset.model.vocab;
-        let t = batch
-            .requests
-            .iter()
-            .map(|(r, _)| r.prompt.len().min(seq))
-            .max()
-            .unwrap_or(1)
-            .max(1);
-        let (tokens, last_pos) = fill_tokens(&batch, n_req, t);
-        let logits = plan.forward(&tokens, n_req, t)?;
-        let compute_ms = batch_start.elapsed().as_secs_f64() * 1e3;
-        metrics.record_batch(bits, compute_ms, plan.weight_bytes() as u64);
-        metrics.record_prefill(bits, compute_ms, (n_req * t) as u64);
-        for (i, (req, enq)) in batch.requests.into_iter().enumerate() {
-            let row_start = (i * t + last_pos[i]) * vocab;
-            let row = &logits.data[row_start..row_start + vocab];
-            let mut rng = match req.sampling {
-                Sampling::Temperature { seed, .. } => Rng::new(seed),
-                Sampling::Greedy => Rng::new(0),
-            };
-            let (next_token, logit) = sample_logits(row, &req.sampling, &mut rng);
-            let queue_ms = batch_start.saturating_duration_since(enq).as_secs_f64() * 1e3;
-            metrics.record(enq.elapsed().as_secs_f64() * 1e3, bits, n_req);
-            if let Some(tx) = waiters.remove(&req.id) {
-                let _ = tx.send(Response {
-                    id: req.id,
-                    next_token,
-                    logit,
-                    tokens: vec![next_token],
-                    done: true,
-                    bits,
-                    int8_acts: batch_int8,
-                    queue_ms,
-                    compute_ms: compute_ms / n_req as f64,
-                    prefill_ms: compute_ms / n_req as f64,
-                    decode_ms: 0.0,
-                    batch_size: n_req,
-                });
-            }
-        }
-        return Ok(());
-    }
-
-    let mut batch_ms = 0.0f64;
-    for (req, enq) in batch.requests {
-        let queue_ms = batch_start.saturating_duration_since(enq).as_secs_f64() * 1e3;
-        let t0 = Instant::now();
-        let mut session = match DecodeSession::with_budget(
-            plan.clone(),
-            &req.prompt,
-            req.sampling,
-            req.max_new_tokens,
-        ) {
-            Ok(s) => s,
-            Err(e) => {
-                eprintln!("serve worker: request {}: prefill failed: {e:#}", req.id);
-                waiters.remove(&req.id);
-                continue;
-            }
-        };
-        let prefill_ms = t0.elapsed().as_secs_f64() * 1e3;
-        batch_ms += prefill_ms;
-        metrics.record_prefill(bits, prefill_ms, session.prompt_len() as u64);
-        let (tok, logit) = session.sample();
-        let done = req.max_new_tokens <= 1 || !session.can_advance();
-        let resp = Response {
-            id: req.id,
-            next_token: tok,
-            logit,
-            tokens: if done {
-                session.generated().to_vec()
-            } else {
-                Vec::new()
-            },
-            done,
-            bits,
-            int8_acts: batch_int8,
-            queue_ms,
-            compute_ms: prefill_ms,
-            prefill_ms,
-            decode_ms: 0.0,
-            batch_size: n_req,
-        };
-        if done {
-            metrics.record(enq.elapsed().as_secs_f64() * 1e3, bits, n_req);
-            if let Some(tx) = waiters.remove(&req.id) {
-                let _ = tx.send(resp);
-            }
-        } else {
-            let alive = waiters.get(&req.id).is_some_and(|tx| tx.send(resp).is_ok());
-            if !alive {
-                waiters.remove(&req.id);
-                continue;
-            }
-            active.push(ActiveDecode {
-                id: req.id,
-                session,
-                remaining: req.max_new_tokens - 1,
-                last: tok,
-                bits,
-                int8: batch_int8,
-                enq,
-                prefill_ms,
-                decode_ms: 0.0,
-                batch_size: n_req,
-            });
-        }
-    }
-    metrics.record_batch(bits, batch_ms, plan.weight_bytes() as u64);
     Ok(())
 }

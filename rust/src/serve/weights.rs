@@ -376,7 +376,7 @@ impl WeightStore {
                             .params
                             .get(name)
                             .ok_or_else(|| anyhow!("missing param {name}"))?;
-                        args.push(lit_tensor(t)?);
+                        args.push(lit_tensor(t.as_ref())?);
                     }
                 }
                 for name in &model.quantized_order {

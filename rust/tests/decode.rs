@@ -388,6 +388,17 @@ fn weight_store_caches_plans_and_reuses_paged_payloads() {
         .plan_warm(&model, &preset.model, 8, &mut metrics)
         .unwrap();
     assert!(w.weight_bytes() > p1.weight_bytes());
+    // Arc-backed registry params: the handles a plan resolves against ARE
+    // the registry's tensors — sibling plans add zero parameter bytes, not
+    // a deep copy of embed/pos per plan.
+    let params = matquant::runtime::plan_params(&model);
+    assert!(!params.is_empty());
+    for (name, t) in &params {
+        assert!(
+            Arc::ptr_eq(t, &model.params[name]),
+            "{name}: plan param deep-copied instead of sharing the registry Arc"
+        );
+    }
 }
 
 // ---------------------------------------------------------------------------

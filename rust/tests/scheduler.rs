@@ -1,0 +1,702 @@
+//! Continuous-batching scheduler conformance — the step-round counterpart
+//! of `tests/decode.rs`.
+//!
+//! The load-bearing property: **round composition can never change an
+//! answer**.  A session stepped inside a batched GEMM round — whatever its
+//! roundmates, whenever it was admitted, however the rounds interleave —
+//! produces logits and token streams **bit-identical** to the same session
+//! stepped alone, across every r ∈ {1, 2, 3, 4, 6, 8}, with and without
+//! int8 activations, and under Mix'n'Match per-layer maps.  Batched ragged
+//! prefill obeys the same contract against solo prefill.
+//!
+//! Also here: the acceptance scenario (a 3-session batched round with one
+//! mid-stream admission and one KV-capacity truncation, byte-identical to
+//! three solo sessions, at int2/int4/int8), KV-pressure admission deferral
+//! (defer, never evict), the truncation-mid-round containment bugfix, a
+//! seeded property sweep with staggered admissions/completions, and the
+//! round metrics contract (payload bytes counted once per ROUND, not once
+//! per session).
+//!
+//! Everything runs unconditionally — no artifacts, no PJRT.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use matquant::data::Rng;
+use matquant::model::manifest::ModelDims;
+use matquant::model::testing::toy_transformer;
+use matquant::model::{PresetInfo, QuantizedModel};
+use matquant::quant::ActQuantConfig;
+use matquant::runtime::{advance_sessions, DecodeSession, ForwardPlan, Sampling};
+use matquant::serve::{
+    Metrics, PlanKey, PrecisionReq, Request, Response, Scheduler, SchedulerConfig, Server,
+    ServerConfig,
+};
+
+fn toy_dims() -> ModelDims {
+    ModelDims {
+        vocab: 48,
+        d_model: 24,
+        n_layers: 2,
+        n_heads: 3,
+        d_ff: 48,
+        seq_len: 10,
+        quantize_attn: false,
+    }
+}
+
+fn toy_model(seed: u64) -> (PresetInfo, QuantizedModel) {
+    toy_transformer(toy_dims(), seed)
+}
+
+/// One spec: (prompt, sampling, max_new_tokens).
+type Spec = (Vec<i32>, Sampling, usize);
+
+/// Run one session solo to completion, recording the logits bit-pattern at
+/// every sampling point and the final token stream — the reference every
+/// batched execution must reproduce exactly.
+fn solo_trace(plan: &Arc<ForwardPlan>, spec: &Spec) -> (Vec<Vec<u32>>, Vec<i32>) {
+    let (prompt, sampling, max_new) = spec;
+    let mut s = DecodeSession::with_budget(plan.clone(), prompt, *sampling, *max_new).unwrap();
+    let mut traces = Vec::new();
+    let mut remaining = *max_new;
+    loop {
+        traces.push(s.logits().iter().map(|x| x.to_bits()).collect::<Vec<u32>>());
+        let (tok, _) = s.sample();
+        remaining -= 1;
+        if remaining == 0 || !s.can_advance() {
+            break;
+        }
+        s.advance(tok).unwrap();
+    }
+    (traces, s.generated().to_vec())
+}
+
+/// Drive a set of specs through batched prefill + batched step rounds,
+/// asserting every member's logits are bit-identical to its solo trace at
+/// every step.  Members retire as they finish (staggered completions), so
+/// later rounds run narrower — exactly what the scheduler does.
+fn assert_batched_matches_solo(plan: &Arc<ForwardPlan>, specs: &[Spec], label: &str) {
+    let n = specs.len();
+    let solos: Vec<(Vec<Vec<u32>>, Vec<i32>)> =
+        specs.iter().map(|sp| solo_trace(plan, sp)).collect();
+    let spec_refs: Vec<(&[i32], Sampling, usize)> = specs
+        .iter()
+        .map(|(p, s, m)| (p.as_slice(), *s, *m))
+        .collect();
+    let mut sessions = DecodeSession::prefill_many(plan, &spec_refs).unwrap();
+    let mut remaining: Vec<usize> = specs.iter().map(|(_, _, m)| *m).collect();
+    let mut step_idx = vec![0usize; n];
+    let mut streams: Vec<Vec<i32>> = vec![Vec::new(); n];
+    let mut active: Vec<usize> = (0..n).collect();
+    while !active.is_empty() {
+        let mut tokens = Vec::with_capacity(active.len());
+        for &i in &active {
+            let got: Vec<u32> = sessions[i].logits().iter().map(|x| x.to_bits()).collect();
+            assert_eq!(
+                got, solos[i].0[step_idx[i]],
+                "{label}: member {i} step {} logits diverged from solo",
+                step_idx[i]
+            );
+            let (tok, _) = sessions[i].sample();
+            streams[i].push(tok);
+            tokens.push(tok);
+            remaining[i] -= 1;
+            step_idx[i] += 1;
+        }
+        let mut next_active = Vec::new();
+        let mut next_tokens = Vec::new();
+        for (k, &i) in active.iter().enumerate() {
+            if remaining[i] > 0 && sessions[i].can_advance() {
+                next_active.push(i);
+                next_tokens.push(tokens[k]);
+            }
+        }
+        if next_active.is_empty() {
+            break;
+        }
+        let mut refs: Vec<&mut DecodeSession> = sessions
+            .iter_mut()
+            .enumerate()
+            .filter(|(i, _)| next_active.contains(i))
+            .map(|(_, s)| s)
+            .collect();
+        advance_sessions(&mut refs, &next_tokens).unwrap();
+        active = next_active;
+    }
+    for i in 0..n {
+        assert_eq!(
+            streams[i], solos[i].1,
+            "{label}: member {i} token stream diverged from solo"
+        );
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Bit-identity of batched rounds and ragged prefill (the core contract)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn batched_rounds_bit_identical_to_solo_across_precisions() {
+    let (preset, model) = toy_model(61);
+    // Different lengths (ragged prefill), different budgets (staggered
+    // completions), mixed samplers.
+    let specs: Vec<Spec> = vec![
+        (vec![1, 2, 3], Sampling::Greedy, 5),
+        (
+            vec![4, 5, 6, 7, 8, 9],
+            Sampling::Temperature { temp: 0.8, seed: 7 },
+            3,
+        ),
+        (vec![10], Sampling::Greedy, 6),
+    ];
+    for bits in [1u32, 2, 3, 4, 6, 8] {
+        for int8 in [false, true] {
+            let cfg = int8.then(ActQuantConfig::absmax);
+            let plan =
+                ForwardPlan::packed_uniform(&preset.model, &model, bits, false, cfg, None)
+                    .unwrap();
+            assert_batched_matches_solo(&plan, &specs, &format!("int{bits} i8={int8}"));
+        }
+    }
+}
+
+#[test]
+fn batched_rounds_bit_identical_under_per_layer_maps() {
+    let (preset, model) = toy_model(67);
+    let specs: Vec<Spec> = vec![
+        (vec![2, 4, 6, 8], Sampling::Greedy, 4),
+        (vec![1, 3], Sampling::Greedy, 5),
+        (vec![5, 7, 9, 11, 13], Sampling::Temperature { temp: 1.1, seed: 3 }, 2),
+    ];
+    for (assign, int8) in [(vec![8u32, 2], false), (vec![2u32, 6], true)] {
+        let cfg = int8.then(ActQuantConfig::absmax);
+        let plan =
+            ForwardPlan::packed_per_layer(&preset.model, &model, &assign, false, cfg, None)
+                .unwrap();
+        assert_batched_matches_solo(&plan, &specs, &format!("mix{assign:?} i8={int8}"));
+    }
+}
+
+#[test]
+fn empty_and_overlong_prompts_round_trip_through_batched_prefill() {
+    let (preset, model) = toy_model(71);
+    let seq = preset.model.seq_len;
+    let long: Vec<i32> = (0..2 * seq as i32).map(|i| i % 40).collect();
+    let specs: Vec<Spec> = vec![
+        (vec![], Sampling::Greedy, 3),       // pads to [0], like the server
+        (long, Sampling::Greedy, 2),         // truncates to seq tokens
+        (vec![17, 23], Sampling::Greedy, 4),
+    ];
+    let plan = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    assert_batched_matches_solo(&plan, &specs, "edge prompts");
+}
+
+// ---------------------------------------------------------------------------
+// Scheduler harness
+// ---------------------------------------------------------------------------
+
+struct Ev {
+    round: usize,
+    resp: Response,
+}
+
+type Inject = (usize, PlanKey, Arc<ForwardPlan>, u32, bool, Request);
+
+/// Run the scheduler to drain, injecting each request at its scheduled
+/// round (mid-stream admission).  Returns every event per request id.
+fn drive(
+    sched: &mut Scheduler,
+    metrics: &mut Metrics,
+    mut inject: Vec<Inject>,
+    max_rounds: usize,
+) -> BTreeMap<u64, Vec<Ev>> {
+    let mut events: BTreeMap<u64, Vec<Ev>> = BTreeMap::new();
+    let mut round = 0usize;
+    loop {
+        while let Some(pos) = inject.iter().position(|(r, ..)| *r <= round) {
+            let (_, key, plan, bits, int8, req) = inject.remove(pos);
+            sched.submit(key, plan, bits, int8, req, Instant::now());
+        }
+        if inject.is_empty() && !sched.has_work() {
+            break;
+        }
+        let events_ref = &mut events;
+        sched.run_round(metrics, &mut |id, resp| {
+            events_ref.entry(id).or_default().push(Ev { round, resp });
+            true
+        });
+        round += 1;
+        assert!(
+            round < max_rounds,
+            "scheduler failed to drain within {max_rounds} rounds"
+        );
+    }
+    events
+}
+
+/// Events → (per-event token sequence, final stream); checks the event
+/// envelope (exactly one done, final carries the stream, intermediates
+/// carry only next_token).
+fn stream_of(events: &[Ev], id: u64) -> (Vec<i32>, Vec<i32>) {
+    assert!(!events.is_empty(), "request {id} got no events");
+    let toks: Vec<i32> = events.iter().map(|e| e.resp.next_token).collect();
+    for e in &events[..events.len() - 1] {
+        assert!(!e.resp.done, "request {id}: early done event");
+        assert!(
+            e.resp.tokens.is_empty(),
+            "request {id}: intermediate event carries the stream"
+        );
+    }
+    let last = events.last().unwrap();
+    assert!(last.resp.done, "request {id}: stream never finished");
+    (toks, last.resp.tokens.clone())
+}
+
+// ---------------------------------------------------------------------------
+// Acceptance: 3-session round, mid-stream admission, KV truncation
+// ---------------------------------------------------------------------------
+
+#[test]
+fn three_session_rounds_with_admission_and_truncation_match_solo() {
+    let (preset, model) = toy_model(73);
+    let seq = preset.model.seq_len;
+    for bits in [2u32, 4, 8] {
+        let plan =
+            ForwardPlan::packed_uniform(&preset.model, &model, bits, false, None, None).unwrap();
+        let key = PlanKey::Packed { bits, int8: false };
+        // A: plain stream.  B: prompt fills most of the window, so the KV
+        // position capacity truncates it mid-stream.  C: admitted two
+        // rounds in (mid-stream admission into a running group).
+        let spec_a: Spec = (vec![1, 2, 3], Sampling::Greedy, 4);
+        let spec_b: Spec = (
+            (0..seq as i32 - 2).map(|i| i % 5).collect(),
+            Sampling::Greedy,
+            seq, // wants far more than capacity allows → truncation
+        );
+        let spec_c: Spec = (vec![4, 5], Sampling::Greedy, 4);
+        let mk = |id: u64, sp: &Spec| {
+            Request::generate(id, sp.0.clone(), PrecisionReq::Bits(bits), sp.2, sp.1)
+        };
+        let mut sched = Scheduler::new(SchedulerConfig::default());
+        let mut metrics = Metrics::default();
+        let inject: Vec<Inject> = vec![
+            (0, key.clone(), plan.clone(), bits, false, mk(1, &spec_a)),
+            (0, key.clone(), plan.clone(), bits, false, mk(2, &spec_b)),
+            (2, key.clone(), plan.clone(), bits, false, mk(3, &spec_c)),
+        ];
+        let events = drive(&mut sched, &mut metrics, inject, 64);
+        assert_eq!(events.len(), 3, "int{bits}: every request must answer");
+
+        for (id, sp) in [(1u64, &spec_a), (2, &spec_b), (3, &spec_c)] {
+            let (toks, fin) = stream_of(&events[&id], id);
+            let (_, want) = solo_trace(&plan, sp);
+            assert_eq!(toks, want, "int{bits} req {id}: stream != solo session");
+            assert_eq!(fin, want, "int{bits} req {id}: final stream != solo");
+        }
+        // B truncated by capacity: prompt consumed seq-2 positions → 2
+        // advances fit → 3 tokens, despite asking for `seq`.
+        assert_eq!(events[&2].len(), 3, "int{bits}: truncation event count");
+        // C joined mid-stream: its first event is 2+ rounds in, while A
+        // was already streaming from round 0.
+        assert_eq!(events[&1][0].round, 0);
+        assert!(
+            events[&3][0].round >= 2,
+            "int{bits}: C admitted at round {}",
+            events[&3][0].round
+        );
+        // C's later steps rode shared rounds with A: occupancy above 1.
+        assert!(
+            metrics.mean_round_occupancy(bits) > 1.0,
+            "int{bits}: rounds never batched (occupancy {})",
+            metrics.mean_round_occupancy(bits)
+        );
+        // The round counters prove the payload streamed once per ROUND,
+        // not once per member-step.
+        let rounds = metrics.rounds(bits);
+        assert!(rounds > 0);
+        assert!(metrics.round_member_steps(bits) > rounds);
+        assert_eq!(
+            metrics.round_weight_bytes(bits),
+            rounds * plan.weight_bytes() as u64,
+            "int{bits}: weight bytes must grow per round, not per session"
+        );
+    }
+}
+
+#[test]
+fn truncated_member_retires_without_stalling_roundmates() {
+    let (preset, model) = toy_model(79);
+    let seq = preset.model.seq_len;
+    let plan = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    let key = PlanKey::Packed { bits: 4, int8: false };
+    // B hits the position window after 2 advances; A runs the full budget.
+    let spec_a: Spec = (vec![1, 2], Sampling::Greedy, 8);
+    let spec_b: Spec = ((0..seq as i32 - 2).map(|i| i % 7).collect(), Sampling::Greedy, seq);
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    let mut metrics = Metrics::default();
+    let inject: Vec<Inject> = vec![
+        (
+            0,
+            key.clone(),
+            plan.clone(),
+            4,
+            false,
+            Request::generate(1, spec_a.0.clone(), PrecisionReq::Bits(4), spec_a.2, spec_a.1),
+        ),
+        (
+            0,
+            key.clone(),
+            plan.clone(),
+            4,
+            false,
+            Request::generate(2, spec_b.0.clone(), PrecisionReq::Bits(4), spec_b.2, spec_b.1),
+        ),
+    ];
+    let events = drive(&mut sched, &mut metrics, inject, 64);
+    let (a_toks, _) = stream_of(&events[&1], 1);
+    let (b_toks, _) = stream_of(&events[&2], 2);
+    assert_eq!(b_toks.len(), 3, "B must truncate at capacity");
+    assert_eq!(a_toks.len(), 8, "A must keep stepping after B's truncation");
+    let (_, a_want) = solo_trace(&plan, &spec_a);
+    let (_, b_want) = solo_trace(&plan, &spec_b);
+    assert_eq!(a_toks, a_want);
+    assert_eq!(b_toks, b_want);
+    // A's final rounds ran solo (occupancy sinks back toward 1), but every
+    // stream stayed intact — no cross-session fallout from the truncation.
+    assert_eq!(sched.live_sessions(), 0);
+    assert_eq!(sched.pending_prefills(), 0);
+}
+
+// ---------------------------------------------------------------------------
+// KV-pressure admission: defer, never evict
+// ---------------------------------------------------------------------------
+
+#[test]
+fn kv_pressure_defers_prefills_and_serves_them_later() {
+    let (preset, model) = toy_model(83);
+    let d = preset.model.d_model;
+    let n_layers = preset.model.n_layers;
+    let plan = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    let key = PlanKey::Packed { bits: 4, int8: false };
+    // Each session: prompt 3 + (5-1) new = capacity 7 positions.
+    let spec: Spec = (vec![1, 2, 3], Sampling::Greedy, 5);
+    let per_session = (n_layers * 2 * 7 * d * 4) as u64;
+    let budget = per_session + per_session / 2; // one fits, two do not
+    let mut sched = Scheduler::new(SchedulerConfig {
+        max_prefills_per_round: 4,
+        kv_capacity_bytes: Some(budget),
+    });
+    let mut metrics = Metrics::default();
+    let mk = |id: u64| {
+        Request::generate(id, spec.0.clone(), PrecisionReq::Bits(4), spec.2, spec.1)
+    };
+    for id in [1u64, 2] {
+        sched.submit(key.clone(), plan.clone(), 4, false, mk(id), Instant::now());
+    }
+    let mut events: BTreeMap<u64, Vec<Ev>> = BTreeMap::new();
+    let mut deferred_seen = false;
+    let mut round = 0usize;
+    while sched.has_work() {
+        let events_ref = &mut events;
+        sched.run_round(&mut metrics, &mut |id, resp| {
+            events_ref.entry(id).or_default().push(Ev { round, resp });
+            true
+        });
+        assert!(
+            sched.resident_kv_bytes() <= budget,
+            "round {round}: resident {} exceeds budget {budget}",
+            sched.resident_kv_bytes()
+        );
+        if sched.pending_prefills() > 0 {
+            deferred_seen = true;
+        }
+        round += 1;
+        assert!(round < 64, "KV-deferred scheduler failed to drain");
+    }
+    assert!(deferred_seen, "the second prefill was never deferred");
+    let (_, want) = solo_trace(&plan, &spec);
+    for id in [1u64, 2] {
+        let (toks, fin) = stream_of(&events[&id], id);
+        assert_eq!(toks, want, "req {id}: deferred stream diverged");
+        assert_eq!(fin, want);
+    }
+    // The deferred request was admitted only after the first finished.
+    assert!(events[&2][0].round > events[&1][0].round);
+}
+
+// ---------------------------------------------------------------------------
+// Property sweep: staggered admissions/completions across precision groups
+// ---------------------------------------------------------------------------
+
+#[test]
+fn property_sweep_staggered_admissions_match_solo_streams() {
+    let (preset, model) = toy_model(89);
+    let seq = preset.model.seq_len;
+    // Plan pool: uniform precisions ± int8, plus a per-layer map — every
+    // scheduler group shape.
+    let pool: Vec<(PlanKey, Arc<ForwardPlan>, u32, bool)> = vec![
+        (
+            PlanKey::Packed { bits: 2, int8: false },
+            ForwardPlan::packed_uniform(&preset.model, &model, 2, false, None, None).unwrap(),
+            2,
+            false,
+        ),
+        (
+            PlanKey::Packed { bits: 4, int8: false },
+            ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap(),
+            4,
+            false,
+        ),
+        (
+            PlanKey::Packed { bits: 4, int8: true },
+            ForwardPlan::packed_uniform(
+                &preset.model,
+                &model,
+                4,
+                false,
+                Some(ActQuantConfig::absmax()),
+                None,
+            )
+            .unwrap(),
+            4,
+            true,
+        ),
+        (
+            PlanKey::Packed { bits: 8, int8: false },
+            ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap(),
+            8,
+            false,
+        ),
+        (
+            PlanKey::PerLayer { bits: vec![8, 2], int8: false },
+            ForwardPlan::packed_per_layer(&preset.model, &model, &[8, 2], false, None, None)
+                .unwrap(),
+            8,
+            false,
+        ),
+    ];
+    for seed in 0..3u64 {
+        let mut rng = Rng::new(1000 + seed);
+        let n_req = 6 + rng.below(3); // 6..=8 requests
+        let mut inject: Vec<Inject> = Vec::new();
+        let mut expected: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+        for id in 0..n_req as u64 {
+            let (key, plan, bits, int8) = pool[rng.below(pool.len())].clone();
+            let plen = rng.below(seq - 2); // 0..=seq-3 (empty prompts too)
+            let prompt: Vec<i32> = (0..plen).map(|_| rng.below(40) as i32).collect();
+            let max_new = 1 + rng.below(6); // 1..=6
+            let sampling = if rng.below(2) == 0 {
+                Sampling::Greedy
+            } else {
+                Sampling::Temperature {
+                    temp: 0.5 + rng.f64() as f32,
+                    seed: rng.next_u64(),
+                }
+            };
+            let admit_round = rng.below(5);
+            let spec: Spec = (prompt.clone(), sampling, max_new);
+            let (_, want) = solo_trace(&plan, &spec);
+            expected.insert(id, want);
+            let req = Request {
+                int8_acts: int8,
+                ..Request::generate(id, prompt, PrecisionReq::Bits(bits), max_new, sampling)
+            };
+            inject.push((admit_round, key, plan, bits, int8, req));
+        }
+        let mut sched = Scheduler::new(SchedulerConfig {
+            max_prefills_per_round: 2, // force multi-round admission queues
+            kv_capacity_bytes: None,
+        });
+        let mut metrics = Metrics::default();
+        let events = drive(&mut sched, &mut metrics, inject, 256);
+        assert_eq!(events.len(), n_req, "seed {seed}: every request answers");
+        for (id, want) in &expected {
+            let (toks, fin) = stream_of(&events[id], *id);
+            assert_eq!(&toks, want, "seed {seed} req {id}: stream != solo");
+            assert_eq!(&fin, want, "seed {seed} req {id}: final != solo");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: the host server runs on scheduler rounds
+// ---------------------------------------------------------------------------
+
+#[test]
+fn host_server_batches_concurrent_streams_bit_identically() {
+    let (preset, model) = toy_model(97);
+    // Reference streams from solo sessions on identical plans.
+    let mut plans: BTreeMap<u32, Arc<ForwardPlan>> = BTreeMap::new();
+    for bits in [2u32, 4, 8] {
+        plans.insert(
+            bits,
+            ForwardPlan::packed_uniform(&preset.model, &model, bits, false, None, None).unwrap(),
+        );
+    }
+    let specs: Vec<(u64, u32, Spec)> = vec![
+        (1, 2, (vec![1, 2, 3], Sampling::Greedy, 4)),
+        (2, 2, (vec![9, 8], Sampling::Temperature { temp: 0.9, seed: 11 }, 5)),
+        (3, 4, (vec![7], Sampling::Greedy, 6)),
+        (4, 4, (vec![3, 1, 4, 1, 5], Sampling::Greedy, 3)),
+        (5, 8, (vec![2, 7, 1, 8], Sampling::Greedy, 4)),
+        (6, 8, (vec![], Sampling::Greedy, 2)),
+    ];
+    let server = Server::start_host(
+        preset.clone(),
+        model,
+        ServerConfig {
+            preset: "toy".into(),
+            max_wait_ms: 0.5,
+            warm_bits: vec![],
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    // Submit everything up front: streams at three precisions run
+    // concurrently, each precision group batching its own rounds.
+    let rxs: Vec<_> = specs
+        .iter()
+        .map(|(id, bits, sp)| {
+            let rx = server
+                .submit(Request::generate(
+                    *id,
+                    sp.0.clone(),
+                    PrecisionReq::Bits(*bits),
+                    sp.2,
+                    sp.1,
+                ))
+                .unwrap();
+            (*id, *bits, rx)
+        })
+        .collect();
+    for ((id, bits, rx), (_, _, sp)) in rxs.into_iter().zip(&specs) {
+        let mut toks = Vec::new();
+        let fin = loop {
+            let r = rx.recv().unwrap_or_else(|e| panic!("req {id}: {e}"));
+            assert_eq!(r.id, id);
+            assert_eq!(r.bits, bits);
+            toks.push(r.next_token);
+            if r.done {
+                break r.tokens;
+            }
+        };
+        let (_, want) = solo_trace(&plans[&bits], sp);
+        assert_eq!(toks, want, "req {id}: served stream != solo session");
+        assert_eq!(fin, want, "req {id}: final stream != solo session");
+    }
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("rounds=["), "{report}");
+    assert!(report.contains("requests=6"), "{report}");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn host_server_serves_per_layer_requests() {
+    let (preset, model) = toy_model(101);
+    let assign = vec![8u32, 2];
+    let plan =
+        ForwardPlan::packed_per_layer(&preset.model, &model, &assign, false, None, None).unwrap();
+    let spec: Spec = (vec![5, 6, 7], Sampling::Greedy, 4);
+    let (_, want) = solo_trace(&plan, &spec);
+    let server = Server::start_host(
+        preset.clone(),
+        model,
+        ServerConfig {
+            preset: "toy".into(),
+            max_wait_ms: 0.5,
+            warm_bits: vec![],
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let r = server
+        .infer(Request {
+            per_layer: Some(assign.clone()),
+            ..Request::generate(1, spec.0.clone(), PrecisionReq::Bits(8), spec.2, spec.1)
+        })
+        .unwrap();
+    assert_eq!(r.tokens, want, "per-layer served stream != solo session");
+    // malformed maps are rejected at submit (channel closes, no stall)
+    let bad = server
+        .submit(Request {
+            per_layer: Some(vec![]),
+            ..Request::generate(2, vec![1], PrecisionReq::Bits(8), 2, Sampling::Greedy)
+        })
+        .unwrap();
+    assert!(bad.recv().is_err(), "empty per-layer map must reject");
+    let bad_bits = server
+        .submit(Request {
+            per_layer: Some(vec![9, 2]),
+            ..Request::generate(3, vec![1], PrecisionReq::Bits(8), 2, Sampling::Greedy)
+        })
+        .unwrap();
+    assert!(bad_bits.recv().is_err(), "out-of-range per-layer bits must reject");
+    server.shutdown().unwrap();
+}
+
+#[test]
+fn host_server_kv_budget_defers_but_answers_everyone() {
+    let (preset, model) = toy_model(103);
+    let d = preset.model.d_model;
+    let n_layers = preset.model.n_layers;
+    // capacity 7 positions per session (prompt 3 + 5 - 1); the budget
+    // fits exactly ONE such session at a time
+    let per_session = (n_layers * 2 * 7 * d * 4) as u64;
+    let server = Server::start_host(
+        preset.clone(),
+        model,
+        ServerConfig {
+            preset: "toy".into(),
+            max_wait_ms: 0.5,
+            warm_bits: vec![],
+            kv_capacity_bytes: Some(per_session),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    // A request whose KV page ALONE exceeds the budget can never be
+    // admitted: it must be rejected at submit (channel closes), not
+    // deferred forever — deferral would pin its client and block
+    // shutdown.
+    let oversized = server
+        .submit(Request::generate(
+            99,
+            vec![1, 2, 3],
+            PrecisionReq::Bits(4),
+            preset.model.seq_len, // capacity clamps to the full window
+            Sampling::Greedy,
+        ))
+        .unwrap();
+    assert!(
+        oversized.recv().is_err(),
+        "never-admittable request must reject, not defer forever"
+    );
+    let rxs: Vec<_> = (1..=3u64)
+        .map(|id| {
+            server
+                .submit(Request::generate(
+                    id,
+                    vec![1, 2, 3],
+                    PrecisionReq::Bits(4),
+                    5,
+                    Sampling::Greedy,
+                ))
+                .unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let mut n = 0;
+        loop {
+            let r = rx.recv().unwrap_or_else(|e| panic!("req {}: {e}", i + 1));
+            n += 1;
+            if r.done {
+                assert_eq!(r.tokens.len(), 5);
+                break;
+            }
+        }
+        assert_eq!(n, 5, "req {}: one event per token", i + 1);
+    }
+    server.shutdown().unwrap();
+}

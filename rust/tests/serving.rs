@@ -44,12 +44,7 @@ fn toy_model(layers: usize, d_in: usize, d_out: usize) -> QuantizedModel {
     params.insert("embed.table".into(), emb);
     let mut param_order = vec!["embed.table".to_string()];
     param_order.extend(order.iter().cloned());
-    QuantizedModel {
-        params,
-        quantized,
-        param_order,
-        quantized_order: order,
-    }
+    QuantizedModel::from_parts(params, quantized, param_order, order)
 }
 
 // ---------------------------------------------------------------------------
