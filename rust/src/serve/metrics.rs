@@ -185,6 +185,12 @@ impl Metrics {
         self.page_ins.get(&bits).map_or(0, |e| e.1)
     }
 
+    /// Page-in events recorded at `bits` (0 if never paged).  A precision
+    /// serving both the PJRT and host paths must still count exactly one.
+    pub fn page_in_count(&self, bits: u32) -> u64 {
+        self.page_ins.get(&bits).map_or(0, |e| e.0)
+    }
+
     /// Total weight bytes touched by batch executions at `bits`.
     pub fn weight_bytes_touched(&self, bits: u32) -> u64 {
         self.matmul_ms.get(&bits).map_or(0, |e| e.2)

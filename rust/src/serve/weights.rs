@@ -37,9 +37,7 @@ use anyhow::anyhow;
 
 use super::metrics::Metrics;
 use crate::model::manifest::ModelDims;
-use crate::model::{
-    packed_payload_bytes, PackedWeight, PrecisionAssignment, QuantizedModel, Tensor,
-};
+use crate::model::{PackedWeight, PrecisionAssignment, QuantizedModel, Tensor};
 use crate::quant::{ActCalibration, ActQuantConfig};
 use crate::runtime::{arc_packed, compose_per_layer, lit_tensor, plan_params, ForwardPlan};
 use crate::Result;
@@ -51,10 +49,13 @@ pub enum WeightSet {
         weights: Vec<Tensor>,
         biases: Vec<Tensor>,
     },
-    /// Lazy build: r-bit payload handles per quantized tensor; f32 exists
-    /// only transiently during literal conversion.
+    /// Lazy build: r-bit payload handles per quantized tensor, `Arc`-shared
+    /// with the store's per-bits handle map (the same handles every packed
+    /// [`ForwardPlan`] resolves against — ONE payload build per precision,
+    /// whichever path asks first); f32 exists only transiently during
+    /// literal conversion.
     Paged {
-        packed: BTreeMap<String, PackedWeight>,
+        packed: BTreeMap<String, Arc<PackedWeight>>,
         payload_bytes: usize,
     },
 }
@@ -72,24 +73,6 @@ impl WeightSet {
             WeightSet::Paged { payload_bytes, .. } => *payload_bytes,
         }
     }
-}
-
-/// Shared packed-payload build for the PJRT lazy `Paged` sets: derive the
-/// r-bit handles and record the page-in (bytes + latency) in `metrics`.
-fn build_packed_set(
-    model: &QuantizedModel,
-    bits: u32,
-    metrics: &mut Metrics,
-) -> Result<(BTreeMap<String, PackedWeight>, usize)> {
-    let t0 = Instant::now();
-    let packed = model.packed_weights(bits, false)?;
-    let payload_bytes = packed_payload_bytes(&packed);
-    metrics.record_page_in(
-        bits,
-        payload_bytes as u64,
-        t0.elapsed().as_secs_f64() * 1e3,
-    );
-    Ok((packed, payload_bytes))
 }
 
 /// Cache key for one [`ForwardPlan`] — the precision spec the plan was
@@ -173,6 +156,12 @@ impl WeightStore {
     /// in `metrics` as the page-in byte counter).  Smoothed models decode
     /// one tensor transiently during the build so the folded bias is
     /// bit-identical to a warm build's.
+    ///
+    /// The payload comes from the shared per-bits handle store
+    /// ([`WeightStore::ensure_handles`]): if the host decode path already
+    /// resolved a packed plan at `bits`, this is a pure `Arc` clone —
+    /// zero new payload bytes, zero extra page-in events (and vice versa:
+    /// a later `plan_packed` at `bits` reuses this build).
     pub fn build_paged(
         &mut self,
         model: &QuantizedModel,
@@ -182,7 +171,9 @@ impl WeightStore {
         if self.contains(bits) {
             return Ok(());
         }
-        let (packed, payload_bytes) = build_packed_set(model, bits, metrics)?;
+        self.ensure_handles(model, bits, metrics)?;
+        let packed = self.handles[&bits].clone();
+        let payload_bytes = packed.values().map(|p| p.payload_bytes()).sum();
         self.sets.insert(
             bits,
             WeightSet::Paged {
@@ -228,8 +219,13 @@ impl WeightStore {
     }
 
     /// Page in the shared packed handle set at `bits` (recorded as a
-    /// page-in: payload bytes + build latency).
-    fn ensure_handles(
+    /// page-in: payload bytes + build latency).  This is the ONE payload
+    /// build per precision: both the PJRT `Paged` sets ([`build_paged`])
+    /// and every packed [`ForwardPlan`] draw `Arc`s from this store, so a
+    /// precision serving both paths pages in exactly once.
+    ///
+    /// [`build_paged`]: WeightStore::build_paged
+    pub fn ensure_handles(
         &mut self,
         model: &QuantizedModel,
         bits: u32,

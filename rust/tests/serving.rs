@@ -95,6 +95,36 @@ fn lazy_builds_page_payload_bytes_not_the_master() {
     assert!(report.contains("paged=[int2:1x"), "{report}");
 }
 
+#[test]
+fn shared_handles_page_in_once() {
+    // Regression: `build_paged` (PJRT sets) and `ensure_handles` (host
+    // plans) used to build the same payload independently — a precision
+    // serving both paths held the bytes twice and counted two page-ins.
+    let model = toy_model(2, 32, 16);
+    let mut store = WeightStore::new();
+    let mut metrics = Metrics::default();
+
+    // PJRT set first, host handles second: one build, one page-in event.
+    store.build_paged(&model, 2, &mut metrics).unwrap();
+    assert_eq!(metrics.page_in_count(2), 1);
+    let bytes2 = metrics.page_in_bytes(2);
+    assert!(bytes2 > 0);
+    store.ensure_handles(&model, 2, &mut metrics).unwrap();
+    store.build_paged(&model, 2, &mut metrics).unwrap();
+    assert_eq!(metrics.page_in_count(2), 1, "payload paged in twice");
+    assert_eq!(metrics.page_in_bytes(2), bytes2, "payload bytes recounted");
+
+    // Reverse order at another precision: host handles first, then the
+    // PJRT set — still exactly one build.
+    store.ensure_handles(&model, 4, &mut metrics).unwrap();
+    assert_eq!(metrics.page_in_count(4), 1);
+    let bytes4 = metrics.page_in_bytes(4);
+    store.build_paged(&model, 4, &mut metrics).unwrap();
+    assert_eq!(metrics.page_in_count(4), 1, "build_paged rebuilt handles");
+    assert_eq!(metrics.page_in_bytes(4), bytes4, "payload bytes recounted");
+    assert_eq!(store.is_paged(4), Some(true));
+}
+
 /// Assert two stores produce byte-identical batch args at every precision.
 fn assert_args_identical(model: &QuantizedModel, dense: &WeightStore, paged: &WeightStore) {
     for bits in [2u32, 4, 8] {
