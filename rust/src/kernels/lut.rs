@@ -72,6 +72,26 @@ pub fn slice_value_lut(r: u32, extra_precision: bool) -> &'static [f32; 256] {
     })
 }
 
+/// Integer mirror of [`slice_value_lut`] for the integer-domain bit-slice
+/// view kernels: `table[q] == slice_code(q, 8, r, ep) as i32`.  Sliced
+/// values are integers in `0..=256` (bucket id times the power-of-two
+/// step), so the i32 form is exact and the view GEMM's reduction stays in
+/// the integer domain end-to-end.
+pub fn slice_value_lut_i32(r: u32, extra_precision: bool) -> &'static [i32; 256] {
+    assert!(r >= 1 && r <= MASTER_BITS);
+    // interior-mutable const is intentional: array-repeat seed for statics
+    #[allow(clippy::declare_interior_mutable_const)]
+    const EMPTY: OnceLock<[i32; 256]> = OnceLock::new();
+    static LUTS: [OnceLock<[i32; 256]>; 16] = [EMPTY; 16];
+    LUTS[(r as usize - 1) * 2 + extra_precision as usize].get_or_init(|| {
+        let mut table = [0i32; 256];
+        for (q, v) in table.iter_mut().enumerate() {
+            *v = slice_code(q as f32, MASTER_BITS, r, extra_precision) as i32;
+        }
+        table
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -103,6 +123,20 @@ mod tests {
                         slice_code(q as f32, 8, r, ep).to_bits(),
                         "r={r} ep={ep} q={q}"
                     );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn i32_slice_lut_mirrors_f32_table_exactly() {
+        for r in [1u32, 2, 3, 4, 6, 8] {
+            for ep in [false, true] {
+                let f = slice_value_lut(r, ep);
+                let i = slice_value_lut_i32(r, ep);
+                for q in 0..256usize {
+                    assert_eq!(i[q] as f32, f[q], "r={r} ep={ep} q={q}");
+                    assert!((0..=256).contains(&i[q]), "r={r} ep={ep} q={q}: {}", i[q]);
                 }
             }
         }

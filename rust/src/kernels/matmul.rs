@@ -160,13 +160,20 @@ fn fill_row_lut<const EPB: usize>(
 }
 
 /// One-pass row decoder over a packed bitstream: LUT byte expansion for the
-/// power-of-two widths, bit cursor for 3/6-bit.
+/// power-of-two widths, bit cursor for 3/6-bit, and the MSB-prefix
+/// **sliced view** over an int8 master (one byte per entry, mapped through
+/// the 256-entry sliced-value table — no intermediate r-bit payload).
 enum RowStream<'a> {
     L1(&'a [u8], LutState),
     L2(&'a [u8], LutState),
     L4(&'a [u8], LutState),
     L8(&'a [u8], LutState),
     Cursor(BitCursor<'a>, u32),
+    /// (master bytes, sliced-value table, next entry index).  The stream
+    /// emits `S(q, r)` values — bucket id times the power-of-two step — so
+    /// the consumer runs with `step = 1.0` and no overlay fix-up (the
+    /// Eq. 8 overflow bucket is already in the table).
+    Sliced(&'a [u8], &'static [f32; 256], usize),
 }
 
 impl<'a> RowStream<'a> {
@@ -180,6 +187,11 @@ impl<'a> RowStream<'a> {
         }
     }
 
+    /// A bit-slice view stream over int8 master `data` at `bits`.
+    fn sliced(data: &'a [u8], bits: u32, extra_precision: bool) -> Self {
+        RowStream::Sliced(data, lut::slice_value_lut(bits, extra_precision), 0)
+    }
+
     /// Decode the next `out.len()` bucket ids (one weight row tile).
     fn fill_row(&mut self, out: &mut [f32]) {
         match self {
@@ -191,6 +203,13 @@ impl<'a> RowStream<'a> {
                 for o in out.iter_mut() {
                     *o = cur.next(*bits) as f32;
                 }
+            }
+            RowStream::Sliced(d, table, pos) => {
+                let n = out.len();
+                for (o, &q) in out.iter_mut().zip(&d[*pos..*pos + n]) {
+                    *o = table[q as usize];
+                }
+                *pos += n;
             }
         }
     }
@@ -234,11 +253,16 @@ fn check_matmul_shapes(
 ///
 /// `acc` (the caller's output slice) receives raw id dot products first and
 /// is rewritten in place by the affine epilogue, so no extra accumulator
-/// allocation exists beyond the `d_out`-wide row tile.
+/// allocation exists beyond the `d_out`-wide row tile.  The caller owns the
+/// decode stream (rebuilt per block): compact payloads pass their overlay
+/// indices + overflow value `top` and the payload's `step`; sliced-view
+/// streams pass an empty overlay and `step = 1.0` (the table already emits
+/// stepped values — same epilogue, bit-identical results).
 #[allow(clippy::too_many_arguments)]
 fn gemm_block(
-    packed: &PackedTensor,
-    overlay: Option<&ExtraBitOverlay>,
+    stream: &mut RowStream,
+    ov: &[u32],
+    top: f32,
     scales: &Scales,
     step: f32,
     d_in: usize,
@@ -249,10 +273,7 @@ fn gemm_block(
     out: &mut [f32],
     row_ids: &mut [f32],
 ) {
-    let top = (1u32 << packed.bits) as f32;
-    let ov: &[u32] = overlay.map_or(&[], |o| &o.indices);
     let mut ovp = 0usize;
-    let mut stream = RowStream::new(&packed.data, packed.bits);
     out.fill(0.0);
     let mut xsum = [0.0f32; GEMM_BLOCK];
     for row in 0..d_in {
@@ -362,15 +383,82 @@ pub fn matmul_packed_into(
         return;
     }
     let step = (1u32 << (master_bits - packed.bits)) as f32;
+    let top = (1u32 << packed.bits) as f32;
+    let ov: &[u32] = overlay.map_or(&[], |o| &o.indices);
     let mut row_ids = vec![0.0f32; d_out];
     let mut b0 = 0usize;
     while b0 < m {
         let mb = GEMM_BLOCK.min(m - b0);
+        let mut stream = RowStream::new(&packed.data, packed.bits);
         gemm_block(
-            packed,
-            overlay,
+            &mut stream,
+            ov,
+            top,
             scales,
             step,
+            d_in,
+            d_out,
+            &xs[b0 * d_in..(b0 + mb) * d_in],
+            mb,
+            bias,
+            &mut out[b0 * d_out..(b0 + mb) * d_out],
+            &mut row_ids,
+        );
+        b0 += mb;
+    }
+}
+
+/// Blocked fused GEMM over an MSB-prefix **bit-slice view**:
+/// `out (m, d_out) = xs (m, d_in) · W_r (+ bias)` where `W_r` is the
+/// `bits`-wide slice of the int8 master `codes` — no r-bit payload exists;
+/// each master byte maps through the 256-entry sliced-value LUT
+/// ([`super::lut::slice_value_lut`]) on the fly.
+///
+/// Bit-for-bit identical to [`matmul_packed_into`] over the compact
+/// payload from `QuantizedTensor::pack_sliced` at the same `(bits, ep)`:
+/// the table emits `S = id·step` with `step` a power of two, so every
+/// partial sum is the compact path's partial sum exactly scaled by `step`,
+/// and the `step = 1.0` epilogue lands on the same f32 values the compact
+/// epilogue computes via `step·acc`.  The Eq. 8 overflow bucket is inside
+/// the table, so extra-precision views need no overlay fix-up.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sliced_into(
+    codes: &PackedTensor,
+    bits: u32,
+    extra_precision: bool,
+    scales: &Scales,
+    d_out: usize,
+    xs: &[f32],
+    m: usize,
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    assert_eq!(codes.bits, MASTER_BITS, "sliced GEMM reads the int8 master");
+    assert!(bits >= 1 && bits <= MASTER_BITS, "bits out of range: {bits}");
+    let d_in = check_matmul_shapes(
+        codes,
+        scales,
+        MASTER_BITS,
+        d_out,
+        xs.len(),
+        m,
+        bias,
+        out.len(),
+    );
+    if m == 0 || d_out == 0 {
+        return;
+    }
+    let mut row_ids = vec![0.0f32; d_out];
+    let mut b0 = 0usize;
+    while b0 < m {
+        let mb = GEMM_BLOCK.min(m - b0);
+        let mut stream = RowStream::sliced(&codes.data, bits, extra_precision);
+        gemm_block(
+            &mut stream,
+            &[],
+            0.0,
+            scales,
+            1.0,
             d_in,
             d_out,
             &xs[b0 * d_in..(b0 + mb) * d_in],
@@ -604,6 +692,109 @@ pub fn matmul_packed_i8_into(
     }
 }
 
+/// Blocked integer-domain GEMM over an MSB-prefix **bit-slice view** with
+/// per-row-quantized activations — the i8 twin of [`matmul_sliced_into`].
+/// Each master byte maps through the i32 sliced-value LUT
+/// ([`super::lut::slice_value_lut_i32`]); the reduction is an exact
+/// i32/i64 multiply-accumulate over `S = id·step` values (`S ≤ 256`, so
+/// one term is bounded by `128·256` and the [`I32_FLUSH_ROWS`] spill keeps
+/// the same overflow margin as the compact path), and the epilogue omits
+/// `step` — the accumulator already carries it.  Bit-for-bit identical to
+/// [`matmul_packed_i8_into`] over the compact payload at the same
+/// `(bits, ep)`: the integer accumulators relate by the exact power-of-two
+/// factor `step`, which commutes with the i64→f32 rounding and with the
+/// f32 epilogue products.
+#[allow(clippy::too_many_arguments)]
+pub fn matmul_sliced_i8_into(
+    codes: &PackedTensor,
+    bits: u32,
+    extra_precision: bool,
+    scales: &Scales,
+    d_out: usize,
+    xq: &[i8],
+    m: usize,
+    x_scales: &[f32],
+    bias: Option<&[f32]>,
+    out: &mut [f32],
+) {
+    assert_eq!(codes.bits, MASTER_BITS, "sliced GEMM reads the int8 master");
+    assert!(bits >= 1 && bits <= MASTER_BITS, "bits out of range: {bits}");
+    let d_in = check_matmul_shapes(
+        codes,
+        scales,
+        MASTER_BITS,
+        d_out,
+        xq.len(),
+        m,
+        bias,
+        out.len(),
+    );
+    assert_eq!(x_scales.len(), m, "one activation scale per batch row");
+    if m == 0 || d_out == 0 {
+        return;
+    }
+    let table = lut::slice_value_lut_i32(bits, extra_precision);
+    let mut row_ids = vec![0i32; d_out];
+    let tile = GEMM_BLOCK.min(m) * d_out;
+    let mut acc32_buf = vec![0i32; tile];
+    let mut acc_buf = vec![0i64; tile];
+    let mut b0 = 0usize;
+    while b0 < m {
+        let mb = GEMM_BLOCK.min(m - b0);
+        let acc32 = &mut acc32_buf[..mb * d_out];
+        let acc = &mut acc_buf[..mb * d_out];
+        acc32.fill(0);
+        acc.fill(0);
+        let mut xsum = [0i64; GEMM_BLOCK];
+        let mut pos = 0usize;
+        for row in 0..d_in {
+            for (id, &q) in row_ids.iter_mut().zip(&codes.data[pos..pos + d_out]) {
+                *id = table[q as usize];
+            }
+            pos += d_out;
+            for b in 0..mb {
+                let xi = xq[(b0 + b) * d_in + row] as i32;
+                xsum[b] += xi as i64;
+                if xi != 0 {
+                    mac_row_i32(&mut acc32[b * d_out..(b + 1) * d_out], &row_ids, xi);
+                }
+            }
+            if (row + 1) % I32_FLUSH_ROWS == 0 {
+                for (wide, narrow) in acc.iter_mut().zip(acc32.iter_mut()) {
+                    *wide += *narrow as i64;
+                    *narrow = 0;
+                }
+            }
+        }
+        for (wide, narrow) in acc.iter_mut().zip(acc32.iter_mut()) {
+            *wide += *narrow as i64;
+            *narrow = 0;
+        }
+        for b in 0..mb {
+            let x_scale = x_scales[b0 + b];
+            let sx = x_scale * xsum[b] as f32;
+            let arow = &acc[b * d_out..(b + 1) * d_out];
+            let orow = &mut out[(b0 + b) * d_out..(b0 + b + 1) * d_out];
+            match bias {
+                Some(bs) => {
+                    for j in 0..d_out {
+                        orow[j] = scales.alpha[j]
+                            * (x_scale * arow[j] as f32 - scales.zero[j] * sx)
+                            + bs[j];
+                    }
+                }
+                None => {
+                    for j in 0..d_out {
+                        orow[j] =
+                            scales.alpha[j] * (x_scale * arow[j] as f32 - scales.zero[j] * sx);
+                    }
+                }
+            }
+        }
+        b0 += mb;
+    }
+}
+
 /// Allocating convenience wrapper over [`matvec_packed_i8_into`].
 #[allow(clippy::too_many_arguments)]
 pub fn matvec_packed_i8(
@@ -786,6 +977,101 @@ mod tests {
                 let want = scales.alpha[j]
                     * (step * 0.25 * acc[j] as f32 - scales.zero[j] * (0.25 * xsum as f32));
                 assert_eq!(got[j].to_bits(), want.to_bits(), "bits={bits} j={j}");
+            }
+        }
+    }
+
+    /// Compact payload (pack_sliced semantics) for the view-vs-compact
+    /// bit-identity tests, straight from the scalar slicing oracle.
+    fn compact_payload(
+        q: &[f32],
+        bits: u32,
+        ep: bool,
+    ) -> (PackedTensor, ExtraBitOverlay) {
+        let step = (1u32 << (8 - bits)) as f32;
+        let ids: Vec<f32> = q
+            .iter()
+            .map(|&x| crate::quant::slice_code(x, 8, bits, ep) / step)
+            .collect();
+        if ep {
+            let (ov, dense) = ExtraBitOverlay::split(&ids, bits);
+            (PackedTensor::pack(&dense, bits), ov)
+        } else {
+            (PackedTensor::pack(&ids, bits), ExtraBitOverlay::default())
+        }
+    }
+
+    #[test]
+    fn sliced_view_gemm_bit_identical_to_compact_payload() {
+        let (d_in, d_out, m) = (23, 9, GEMM_BLOCK + 3);
+        let q = testing::synth_ids(8, d_in * d_out, 77);
+        let master = PackedTensor::pack(&q, 8);
+        let scales = testing::synth_scales(d_out, 3, false);
+        let xs = testing::synth_x(m * d_in, 21);
+        let bias: Vec<f32> = (0..d_out).map(|j| 0.2 * j as f32 - 0.5).collect();
+        for bits in [1u32, 2, 3, 4, 6, 8] {
+            for ep in [false, true] {
+                let (packed, ov) = compact_payload(&q, bits, ep);
+                let ovo = if ov.is_empty() { None } else { Some(&ov) };
+                let mut want = vec![0.0f32; m * d_out];
+                matmul_packed_into(
+                    &packed, ovo, &scales, 8, d_out, &xs, m, Some(&bias), &mut want,
+                );
+                let mut got = vec![0.0f32; m * d_out];
+                matmul_sliced_into(
+                    &master, bits, ep, &scales, d_out, &xs, m, Some(&bias), &mut got,
+                );
+                for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "bits={bits} ep={ep} i={i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sliced_view_i8_gemm_bit_identical_to_compact_payload() {
+        let (d_in, d_out, m) = (19, 11, GEMM_BLOCK + 2);
+        let q = testing::synth_ids(8, d_in * d_out, 123);
+        let master = PackedTensor::pack(&q, 8);
+        let scales = testing::synth_scales(d_out, 7, false);
+        let xq: Vec<i8> = (0..m * d_in)
+            .map(|i| (((i * 37 + 5) % 255) as i64 - 127) as i8)
+            .collect();
+        let x_scales: Vec<f32> = (0..m).map(|b| 0.01 + 0.002 * b as f32).collect();
+        let bias: Vec<f32> = (0..d_out).map(|j| j as f32 * 0.1 - 0.4).collect();
+        for bits in [1u32, 2, 3, 4, 6, 8] {
+            for ep in [false, true] {
+                let (packed, ov) = compact_payload(&q, bits, ep);
+                let ovo = if ov.is_empty() { None } else { Some(&ov) };
+                let mut want = vec![0.0f32; m * d_out];
+                matmul_packed_i8_into(
+                    &packed,
+                    ovo,
+                    &scales,
+                    8,
+                    d_out,
+                    &xq,
+                    m,
+                    &x_scales,
+                    Some(&bias),
+                    &mut want,
+                );
+                let mut got = vec![0.0f32; m * d_out];
+                matmul_sliced_i8_into(
+                    &master,
+                    bits,
+                    ep,
+                    &scales,
+                    d_out,
+                    &xq,
+                    m,
+                    &x_scales,
+                    Some(&bias),
+                    &mut got,
+                );
+                for (i, (a, b)) in got.iter().zip(&want).enumerate() {
+                    assert_eq!(a.to_bits(), b.to_bits(), "bits={bits} ep={ep} i={i}");
+                }
             }
         }
     }

@@ -66,6 +66,7 @@ pub use attention::attend_single_query;
 pub use cursor::BitCursor;
 pub use fused::{dequant_packed, dequant_packed_into, slice_dequant, slice_dequant_into};
 pub use matmul::{
-    matmul_packed, matmul_packed_i8_into, matmul_packed_into, matvec_packed, matvec_packed_i8,
-    matvec_packed_i8_into, matvec_packed_into,
+    matmul_packed, matmul_packed_i8_into, matmul_packed_into, matmul_sliced_i8_into,
+    matmul_sliced_into, matvec_packed, matvec_packed_i8, matvec_packed_i8_into,
+    matvec_packed_into,
 };

@@ -10,6 +10,7 @@ pub mod testing;
 pub use checkpoint::Checkpoint;
 pub use manifest::{ArtifactEntry, Manifest, ModelDims, PresetInfo};
 pub use registry::{
-    packed_payload_bytes, PackedWeight, PrecisionAssignment, QuantizedModel, QuantizedTensor,
+    packed_payload_bytes, PackedPayload, PackedWeight, PrecisionAssignment, QuantizedModel,
+    QuantizedTensor,
 };
 pub use tensor::Tensor;

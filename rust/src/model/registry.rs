@@ -16,7 +16,7 @@ use anyhow::{anyhow, ensure};
 use super::manifest::PresetInfo;
 use super::tensor::Tensor;
 use crate::kernels;
-use crate::quant::{self, ExtraBitOverlay, PackedTensor, Scales};
+use crate::quant::{self, BitSliceView, ExtraBitOverlay, PackedTensor, Scales};
 use crate::{Result, MASTER_BITS};
 
 /// One int8-master quantized weight.
@@ -24,8 +24,10 @@ use crate::{Result, MASTER_BITS};
 pub struct QuantizedTensor {
     pub d_in: usize,
     pub d_out: usize,
-    /// Packed int8 codes of `W⊙s` (or plain `W` for QAT).
-    pub codes: PackedTensor,
+    /// Packed int8 codes of `W⊙s` (or plain `W` for QAT), behind a shared
+    /// handle: every [`BitSliceView`] of this tensor — one per serving
+    /// precision — clones the `Arc`, never the bytes.
+    pub codes: Arc<PackedTensor>,
     /// Shared 8-bit scales (per output channel).
     pub scales: Scales,
     /// OmniQuant smoothing: per-input-row scale `s` and shift `δ` (None
@@ -61,7 +63,7 @@ impl QuantizedTensor {
         };
         let scales = quant::minmax::omni_scales(&w_eff, d_in, d_out, MASTER_BITS, gamma, beta);
         let codes_f = quant::quantize(&w_eff, d_out, &scales);
-        let codes = PackedTensor::pack(&codes_f, 8);
+        let codes = Arc::new(PackedTensor::pack(&codes_f, 8));
         Ok(QuantizedTensor {
             d_in,
             d_out,
@@ -194,7 +196,6 @@ impl QuantizedTensor {
         let (inv_smooth, bias) = match &self.smooth {
             None => (None, None),
             Some((s, delta)) => {
-                let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
                 let mut w = vec![0.0f32; self.d_in * self.d_out];
                 kernels::dequant_packed_into(
                     &packed,
@@ -204,16 +205,7 @@ impl QuantizedTensor {
                     self.d_out,
                     &mut w,
                 );
-                for (i, row) in w.chunks_exact_mut(self.d_out).enumerate() {
-                    let vinv = inv[i];
-                    for v in row.iter_mut() {
-                        *v *= vinv;
-                    }
-                }
-                let w_eff = Tensor::new(vec![self.d_in, self.d_out], w)?;
-                let dw = self.fp.vecmat(delta)?;
-                let dweff = w_eff.vecmat(delta)?;
-                let bias: Vec<f32> = dw.iter().zip(&dweff).map(|(a, b)| a - b).collect();
+                let (inv, bias) = self.fold_handle(w, s, delta)?;
                 (Some(inv), Some(bias))
             }
         };
@@ -222,12 +214,84 @@ impl QuantizedTensor {
             extra_precision,
             d_in: self.d_in,
             d_out: self.d_out,
-            packed,
-            overlay,
+            payload: PackedPayload::Sliced { packed, overlay },
             scales: self.scales.clone(),
             inv_smooth,
             bias,
         })
+    }
+
+    /// Build the **nested** deployment handle at `bits`: an MSB-prefix
+    /// bit-slice *view* of the shared int8 master instead of a standalone
+    /// compact payload.  The view owns no weight bytes — it clones the
+    /// master's `Arc` — so every precision `r ≤ 8` of one tensor shares ONE
+    /// payload, and deriving a second precision pages in zero new bytes
+    /// ([`crate::serve::weights`]).
+    ///
+    /// The handle is a drop-in replacement for
+    /// [`QuantizedTensor::packed_weight`]: matmul/decode results are
+    /// bit-for-bit identical (the view kernels read `S(q^8, r)` through the
+    /// slice-value LUT, which is built by the same scalar oracle that
+    /// `pack_sliced` uses), and the smoothing fold runs the same
+    /// computation, so warm, compact-paged, and view-paged serving builds
+    /// are interchangeable.
+    pub fn packed_view(&self, bits: u32, extra_precision: bool) -> Result<PackedWeight> {
+        ensure!(
+            bits >= 1 && bits <= MASTER_BITS,
+            "bits {bits} out of range"
+        );
+        let view = BitSliceView::new(self.codes.clone(), bits, extra_precision);
+        let (inv_smooth, bias) = match &self.smooth {
+            None => (None, None),
+            Some((s, delta)) => {
+                let mut w = vec![0.0f32; self.d_in * self.d_out];
+                kernels::slice_dequant_into(
+                    &self.codes,
+                    bits,
+                    extra_precision,
+                    &self.scales,
+                    self.d_out,
+                    &mut w,
+                );
+                let (inv, bias) = self.fold_handle(w, s, delta)?;
+                (Some(inv), Some(bias))
+            }
+        };
+        Ok(PackedWeight {
+            bits,
+            extra_precision,
+            d_in: self.d_in,
+            d_out: self.d_out,
+            payload: PackedPayload::View(view),
+            scales: self.scales.clone(),
+            inv_smooth,
+            bias,
+        })
+    }
+
+    /// Shared smoothing fold for the handle builders: scale the dequantized
+    /// `W_eff` rows by `1/s` and compute the `δ·(W − W_eff)` bias.  One
+    /// implementation, one op order — so compact and view handles (and the
+    /// dense [`QuantizedTensor::materialize`] fold they must match) cannot
+    /// drift apart numerically.
+    fn fold_handle(
+        &self,
+        mut w: Vec<f32>,
+        s: &[f32],
+        delta: &[f32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let inv: Vec<f32> = s.iter().map(|&v| 1.0 / v).collect();
+        for (i, row) in w.chunks_exact_mut(self.d_out).enumerate() {
+            let vinv = inv[i];
+            for v in row.iter_mut() {
+                *v *= vinv;
+            }
+        }
+        let w_eff = Tensor::new(vec![self.d_in, self.d_out], w)?;
+        let dw = self.fp.vecmat(delta)?;
+        let dweff = w_eff.vecmat(delta)?;
+        let bias: Vec<f32> = dw.iter().zip(&dweff).map(|(a, b)| a - b).collect();
+        Ok((inv, bias))
     }
 
     /// The §5.4 deployment payload at `bits`: sliced bucket ids packed at
@@ -282,9 +346,37 @@ impl QuantizedTensor {
     }
 }
 
-/// A paged r-bit deployment weight: the packed payload + Eq. 8 overlay +
-/// shared master scales, with OmniQuant smoothing folded into a per-row
-/// input scaling and a bias vector.
+/// The stored form of a [`PackedWeight`]'s weight bytes.
+#[derive(Debug, Clone)]
+pub enum PackedPayload {
+    /// A standalone compact r-bit payload — r-bit sliced bucket ids plus
+    /// the Eq. 8 overflow overlay, as produced by
+    /// [`QuantizedTensor::pack_sliced`].  This is the §5.4 export/transport
+    /// form: smallest possible bytes for ONE precision.
+    Sliced {
+        packed: PackedTensor,
+        overlay: ExtraBitOverlay,
+    },
+    /// An MSB-prefix bit-slice *view* of the shared int8 master
+    /// ([`crate::quant::BitSliceView`]): owns no weight bytes of its own —
+    /// every precision `r ≤ 8` of a tensor reads the same `Arc`'d master
+    /// through the slice-value LUT.  This is the nested resident form: one
+    /// payload per tensor, all precisions.
+    View(BitSliceView),
+}
+
+fn overlay_opt(overlay: &ExtraBitOverlay) -> Option<&ExtraBitOverlay> {
+    if overlay.is_empty() {
+        None
+    } else {
+        Some(overlay)
+    }
+}
+
+/// A paged r-bit deployment weight: the weight payload (compact r-bit form
+/// or master-backed view, see [`PackedPayload`]) + shared master scales,
+/// with OmniQuant smoothing folded into a per-row input scaling and a bias
+/// vector.
 ///
 /// This is the serving worker's lazy page-in unit ([`crate::serve::weights`])
 /// and the operand of the fused packed-domain matmul kernels
@@ -292,17 +384,16 @@ impl QuantizedTensor {
 /// ([`PackedWeight::matvec_into`] / [`PackedWeight::matmul_into`]) or
 /// decode one f32 tensor on demand for PJRT argument building
 /// ([`PackedWeight::decode`]).  Resident cost is [`PackedWeight::payload_bytes`]
-/// — r-bit codes + sparse overlay + scales — never a full f32 weight set.
+/// — never a full f32 weight set.  Both payload forms produce bit-for-bit
+/// identical results from every entry point.
 #[derive(Debug, Clone)]
 pub struct PackedWeight {
     pub bits: u32,
     pub extra_precision: bool,
     pub d_in: usize,
     pub d_out: usize,
-    /// r-bit sliced bucket ids (as produced by [`QuantizedTensor::pack_sliced`]).
-    pub packed: PackedTensor,
-    /// Eq. 8 overflow entries (empty without extra precision).
-    pub overlay: ExtraBitOverlay,
+    /// The weight bytes: compact r-bit payload or shared-master view.
+    pub payload: PackedPayload,
     /// The shared master-width per-channel scales.
     pub scales: Scales,
     /// OmniQuant smoothing fold: `1/s` per input row (`None` for QAT).
@@ -314,24 +405,42 @@ pub struct PackedWeight {
 }
 
 impl PackedWeight {
-    fn overlay_opt(&self) -> Option<&ExtraBitOverlay> {
-        if self.overlay.is_empty() {
-            None
-        } else {
-            Some(&self.overlay)
-        }
+    fn fold_bytes(&self) -> usize {
+        self.inv_smooth.as_ref().map_or(0, |v| v.len() * 4)
+            + self.bias.as_ref().map_or(0, |v| v.len() * 4)
     }
 
-    /// Resident payload bytes: packed codes + overlay + scales, plus the
-    /// smoothing-fold vectors (`1/s`, bias) when present.  This is what a
-    /// lazy serving build pages in — `bits/8` of the int8 master, `bits/32`
-    /// of the f32 weight set it replaces.  For QAT models this equals
-    /// [`QuantizedTensor::storage_bytes`] exactly.
+    /// Resident payload bytes, plus scales and the smoothing-fold vectors
+    /// (`1/s`, bias) when present.  For a compact handle this is the r-bit
+    /// codes + overlay — `bits/8` of the int8 master, `bits/32` of the f32
+    /// weight set it replaces; for QAT models it equals
+    /// [`QuantizedTensor::storage_bytes`] exactly.  For a view handle it is
+    /// the *master* bytes, honestly: that is what actually streams through
+    /// the kernels — but the master is `Arc`-shared across every precision,
+    /// so the marginal cost of each additional precision is zero
+    /// ([`PackedWeight::compact_payload_bytes`] is the per-precision bytes
+    /// a compact build would have paged instead).
     pub fn payload_bytes(&self) -> usize {
         let n = self.d_in * self.d_out;
-        let fold = self.inv_smooth.as_ref().map_or(0, |v| v.len() * 4)
-            + self.bias.as_ref().map_or(0, |v| v.len() * 4);
-        self.packed.bytes() + self.overlay.bytes(n) + self.d_out * 8 + fold
+        let body = match &self.payload {
+            PackedPayload::Sliced { packed, overlay } => packed.bytes() + overlay.bytes(n),
+            PackedPayload::View(v) => v.master.bytes(),
+        };
+        body + self.d_out * 8 + self.fold_bytes()
+    }
+
+    /// The bytes a standalone compact payload at this handle's precision
+    /// would occupy — what [`QuantizedTensor::pack_sliced`] would emit,
+    /// plus scales and fold vectors.  For a compact handle this IS
+    /// [`PackedWeight::payload_bytes`]; for a view handle it is the paging
+    /// traffic *avoided* by reading the shared master instead of building
+    /// a per-precision copy (the serving store's savings counter,
+    /// [`crate::serve::metrics::Metrics::page_in_saved_bytes`]).
+    pub fn compact_payload_bytes(&self) -> usize {
+        match &self.payload {
+            PackedPayload::Sliced { .. } => self.payload_bytes(),
+            PackedPayload::View(v) => v.compact_bytes() + self.d_out * 8 + self.fold_bytes(),
+        }
     }
 
     /// Fused GEMV `out = x·W_r + bias` straight from the payload (the
@@ -370,17 +479,30 @@ impl PackedWeight {
         ensure!(out.len() == m * self.d_out, "output length mismatch");
         let mut scratch = Vec::new();
         let xs = self.fold_input(xs, &mut scratch);
-        kernels::matmul_packed_into(
-            &self.packed,
-            self.overlay_opt(),
-            &self.scales,
-            MASTER_BITS,
-            self.d_out,
-            xs,
-            m,
-            self.bias.as_deref(),
-            out,
-        );
+        match &self.payload {
+            PackedPayload::Sliced { packed, overlay } => kernels::matmul_packed_into(
+                packed,
+                overlay_opt(overlay),
+                &self.scales,
+                MASTER_BITS,
+                self.d_out,
+                xs,
+                m,
+                self.bias.as_deref(),
+                out,
+            ),
+            PackedPayload::View(v) => kernels::matmul_sliced_into(
+                &v.master,
+                v.bits,
+                v.extra_precision,
+                &self.scales,
+                self.d_out,
+                xs,
+                m,
+                self.bias.as_deref(),
+                out,
+            ),
+        }
         Ok(())
     }
 
@@ -419,18 +541,32 @@ impl PackedWeight {
                 &mut xq[b * self.d_in..(b + 1) * self.d_in],
             );
         }
-        kernels::matmul_packed_i8_into(
-            &self.packed,
-            self.overlay_opt(),
-            &self.scales,
-            MASTER_BITS,
-            self.d_out,
-            &xq,
-            m,
-            &row_scales,
-            self.bias.as_deref(),
-            out,
-        );
+        match &self.payload {
+            PackedPayload::Sliced { packed, overlay } => kernels::matmul_packed_i8_into(
+                packed,
+                overlay_opt(overlay),
+                &self.scales,
+                MASTER_BITS,
+                self.d_out,
+                &xq,
+                m,
+                &row_scales,
+                self.bias.as_deref(),
+                out,
+            ),
+            PackedPayload::View(v) => kernels::matmul_sliced_i8_into(
+                &v.master,
+                v.bits,
+                v.extra_precision,
+                &self.scales,
+                self.d_out,
+                &xq,
+                m,
+                &row_scales,
+                self.bias.as_deref(),
+                out,
+            ),
+        }
         Ok(())
     }
 
@@ -463,14 +599,24 @@ impl PackedWeight {
     /// [`QuantizedTensor::materialize`] at the same precision.
     pub fn decode(&self) -> Result<(Tensor, Vec<f32>)> {
         let mut w = vec![0.0f32; self.d_in * self.d_out];
-        kernels::dequant_packed_into(
-            &self.packed,
-            self.overlay_opt(),
-            &self.scales,
-            MASTER_BITS,
-            self.d_out,
-            &mut w,
-        );
+        match &self.payload {
+            PackedPayload::Sliced { packed, overlay } => kernels::dequant_packed_into(
+                packed,
+                overlay_opt(overlay),
+                &self.scales,
+                MASTER_BITS,
+                self.d_out,
+                &mut w,
+            ),
+            PackedPayload::View(v) => kernels::slice_dequant_into(
+                &v.master,
+                v.bits,
+                v.extra_precision,
+                &self.scales,
+                self.d_out,
+                &mut w,
+            ),
+        }
         if let Some(inv) = &self.inv_smooth {
             for (i, row) in w.chunks_exact_mut(self.d_out).enumerate() {
                 for v in row.iter_mut() {
@@ -676,6 +822,29 @@ impl QuantizedModel {
             out.insert(
                 qn.clone(),
                 self.quantized[qn].packed_weight(bits, extra_precision)?,
+            );
+        }
+        Ok(out)
+    }
+
+    /// Build **nested** payload handles for every quantized tensor at a
+    /// uniform precision: each handle is an MSB-prefix bit-slice view of
+    /// that tensor's `Arc`-shared int8 master
+    /// ([`QuantizedTensor::packed_view`]), so N precisions of one model
+    /// hold ONE set of weight bytes.  Drop-in for
+    /// [`QuantizedModel::packed_weights`] — results are bit-for-bit
+    /// identical; this is what the serving store pages
+    /// ([`crate::serve::weights::WeightStore::ensure_handles`]).
+    pub fn packed_views(
+        &self,
+        bits: u32,
+        extra_precision: bool,
+    ) -> Result<BTreeMap<String, PackedWeight>> {
+        let mut out = BTreeMap::new();
+        for qn in &self.quantized_order {
+            out.insert(
+                qn.clone(),
+                self.quantized[qn].packed_view(bits, extra_precision)?,
             );
         }
         Ok(out)
@@ -915,6 +1084,105 @@ mod tests {
         let mut solo = vec![0.0f32; 8];
         pw.matmul_i8_into(&xs[..32], 1, &cfg, &mut solo).unwrap();
         assert_eq!(&batch[..8], &solo[..], "row 0 saw row 1's outlier");
+    }
+
+    #[test]
+    fn packed_view_matches_compact_handle_bitwise() {
+        // The nested (view) handle must be a drop-in for the compact one:
+        // decode, f32 matmul, and i8 matmul all bit-for-bit, QAT and
+        // smoothed, across every width ± extra precision.
+        let cases: Vec<QuantizedTensor> = vec![
+            QuantizedTensor::from_weight(toy_weight(21, 40, 12), None, None, None).unwrap(),
+            {
+                let s: Vec<f32> = (0..40).map(|i| 0.8 + 0.015 * i as f32).collect();
+                let mut delta = vec![0.0f32; 40];
+                delta[3] = 0.5;
+                delta[17] = -0.25;
+                QuantizedTensor::from_weight(toy_weight(22, 40, 12), None, None, Some((s, delta)))
+                    .unwrap()
+            },
+        ];
+        let mut rng = Rng::new(31);
+        let xs: Vec<f32> = (0..3 * 40).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        let cfg = crate::quant::ActQuantConfig::absmax();
+        for qt in &cases {
+            for bits in [1u32, 2, 3, 4, 6, 8] {
+                for ep in [false, true] {
+                    let compact = qt.packed_weight(bits, ep).unwrap();
+                    let view = qt.packed_view(bits, ep).unwrap();
+                    assert!(
+                        matches!(&view.payload, PackedPayload::View(v)
+                            if Arc::ptr_eq(&v.master, &qt.codes)),
+                        "view must share the master Arc"
+                    );
+                    assert_eq!(view.inv_smooth, compact.inv_smooth);
+                    assert_eq!(view.bias, compact.bias, "bits={bits} ep={ep}");
+                    let (wa, ba) = compact.decode().unwrap();
+                    let (wb, bb) = view.decode().unwrap();
+                    assert_eq!(wa.data, wb.data, "decode bits={bits} ep={ep}");
+                    assert_eq!(ba, bb);
+                    let mut ya = vec![0.0f32; 3 * 12];
+                    let mut yb = vec![0.0f32; 3 * 12];
+                    compact.matmul_into(&xs, 3, &mut ya).unwrap();
+                    view.matmul_into(&xs, 3, &mut yb).unwrap();
+                    for (a, b) in ya.iter().zip(&yb) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "f32 bits={bits} ep={ep}");
+                    }
+                    compact.matmul_i8_into(&xs, 3, &cfg, &mut ya).unwrap();
+                    view.matmul_i8_into(&xs, 3, &cfg, &mut yb).unwrap();
+                    for (a, b) in ya.iter().zip(&yb) {
+                        assert_eq!(a.to_bits(), b.to_bits(), "i8 bits={bits} ep={ep}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_view_byte_accounting() {
+        let fp = toy_weight(23, 64, 64);
+        let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+        for bits in [2u32, 4, 8] {
+            let view = qt.packed_view(bits, false).unwrap();
+            let compact = qt.packed_weight(bits, false).unwrap();
+            // a view's resident bytes are the master's, independent of r
+            assert_eq!(view.payload_bytes(), qt.codes.bytes() + 64 * 8);
+            // its compact equivalent matches the real compact handle
+            assert_eq!(
+                view.compact_payload_bytes(),
+                compact.payload_bytes(),
+                "bits={bits}"
+            );
+        }
+    }
+
+    #[test]
+    fn packed_views_share_one_master_across_precisions() {
+        let fp = toy_weight(24, 16, 8);
+        let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+        let params = BTreeMap::new();
+        let mut quantized = BTreeMap::new();
+        quantized.insert("layer0.w".to_string(), qt);
+        let model = QuantizedModel::from_parts(
+            params,
+            quantized,
+            vec![],
+            vec!["layer0.w".to_string()],
+        );
+        let v2 = model.packed_views(2, false).unwrap();
+        let v8 = model.packed_views(8, false).unwrap();
+        let m2 = match &v2["layer0.w"].payload {
+            PackedPayload::View(v) => v.master.clone(),
+            _ => panic!("expected a view handle"),
+        };
+        let m8 = match &v8["layer0.w"].payload {
+            PackedPayload::View(v) => v.master.clone(),
+            _ => panic!("expected a view handle"),
+        };
+        assert!(
+            Arc::ptr_eq(&m2, &m8),
+            "every precision must read the same master payload"
+        );
     }
 
     #[test]

@@ -29,7 +29,7 @@ pub use histogram::{code_histogram, mean_code, render_histogram, upper_half_mass
 pub use minmax::{
     col_min_max, dequantize, dequantize_into, minmax_scales, omni_scales, quantize, Scales,
 };
-pub use packed::{ExtraBitOverlay, PackedTensor};
+pub use packed::{BitSliceView, ExtraBitOverlay, PackedTensor};
 pub use slicing::{
     effective_bits, overflow_fraction, slice_code, slice_codes, slice_codes_into,
 };

@@ -10,6 +10,22 @@
 //! with 2.05 effective bits is a `PackedTensor { bits: 2 }` plus an overlay
 //! holding ~0.05·n entries, and `bytes()` reports the true footprint used
 //! by the serving planner.
+//!
+//! [`BitSliceView`] is the serving-side realization of the paper's nesting:
+//! int4/int2 live in the MSBs of the int8 codes, so a precision below the
+//! master does not need its own payload — a view is the shared
+//! (`Arc`-held) master plus `(r, extra_precision)` slice semantics, decoded
+//! through the 256-entry sliced-value LUTs at consume time.  One nested
+//! payload per tensor serves every r ≤ 8; [`BitSliceView::materialize`]
+//! derives the standalone compact form (bit-identical to
+//! `QuantizedTensor::pack_sliced`) when a consumer genuinely needs r-bit
+//! storage, and [`BitSliceView::compact_bytes`] reports what that form
+//! would cost — the bytes the shared view *saves*.
+
+use std::sync::Arc;
+
+use super::slicing::slice_code;
+use crate::MASTER_BITS;
 
 /// Dense bit-packed unsigned integer tensor.
 #[derive(Debug, Clone, PartialEq, Eq)]
@@ -170,6 +186,100 @@ impl ExtraBitOverlay {
     }
 }
 
+/// An MSB-prefix bit-slice **view** of a shared int8 master bitstream: the
+/// nested payload stored once, consumed at any `bits ≤ 8`.
+///
+/// The view owns no code storage — `master` is the `Arc`-shared
+/// [`PackedTensor`] of int8 codes (one per model tensor, shared across
+/// every precision's handles) — and slicing is deferred to consume time:
+/// the fused kernels map each master byte through the 256-entry
+/// sliced-value LUT (`kernels::lut::slice_value_lut`), whose entries equal
+/// `slice_code(q, 8, r, ep)` exactly.  Because the table *is* the Eq. 6 /
+/// Eq. 8 oracle, results are bit-for-bit identical to first deriving the
+/// compact r-bit payload and decoding that — including the Eq. 8 overflow
+/// bucket, which the LUT subsumes (no sparse overlay needed at all).
+#[derive(Debug, Clone)]
+pub struct BitSliceView {
+    /// The shared int8 master codes (`bits == 8`).
+    pub master: Arc<PackedTensor>,
+    /// View precision r (1..=8); at 8 the view is the identity.
+    pub bits: u32,
+    /// Eq. 8 semantics: no clamp, overflow bucket `2^r` included.
+    pub extra_precision: bool,
+}
+
+impl BitSliceView {
+    pub fn new(master: Arc<PackedTensor>, bits: u32, extra_precision: bool) -> Self {
+        assert_eq!(
+            master.bits, MASTER_BITS,
+            "bit-slice views slice the int8 master, got a {}-bit source",
+            master.bits
+        );
+        assert!(bits >= 1 && bits <= MASTER_BITS, "bits out of range: {bits}");
+        BitSliceView {
+            master,
+            bits,
+            extra_precision,
+        }
+    }
+
+    /// Entries in the viewed tensor.
+    pub fn len(&self) -> usize {
+        self.master.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.master.len == 0
+    }
+
+    /// Derive the standalone compact payload this view represents: r-bit
+    /// sliced bucket ids plus (under Eq. 8) the sparse overflow overlay —
+    /// bit-identical to `QuantizedTensor::pack_sliced` on the same master.
+    /// One pass over the master; the view itself stays untouched.
+    pub fn materialize(&self) -> (PackedTensor, ExtraBitOverlay) {
+        let step = (1u32 << (MASTER_BITS - self.bits)) as f32;
+        let ids: Vec<f32> = self
+            .master
+            .unpack()
+            .iter()
+            .map(|&q| slice_code(q, MASTER_BITS, self.bits, self.extra_precision) / step)
+            .collect();
+        if self.extra_precision {
+            let (overlay, dense) = ExtraBitOverlay::split(&ids, self.bits);
+            (PackedTensor::pack(&dense, self.bits), overlay)
+        } else {
+            (PackedTensor::pack(&ids, self.bits), ExtraBitOverlay::default())
+        }
+    }
+
+    /// Bytes a standalone compact r-bit payload of this tensor would
+    /// occupy (codes + Eq. 8 overlay) — what per-precision paging would
+    /// page in, i.e. the bytes the shared nested payload saves.  Counting
+    /// pass only; nothing is packed.
+    pub fn compact_bytes(&self) -> usize {
+        let code_bytes = (self.master.len * self.bits as usize).div_ceil(8);
+        if !self.extra_precision || self.bits == MASTER_BITS {
+            return code_bytes;
+        }
+        // Overflow census through the same scalar oracle the LUT is built
+        // from: a master code q overflows iff its sliced bucket id is 2^r.
+        let step = (1u32 << (MASTER_BITS - self.bits)) as f32;
+        let top = (1u32 << self.bits) as f32;
+        let mut overflows = [false; 256];
+        for (q, o) in overflows.iter_mut().enumerate() {
+            *o = slice_code(q as f32, MASTER_BITS, self.bits, true) / step >= top;
+        }
+        // master is 8-bit: one byte per entry, so data IS the code stream
+        let k = self
+            .master
+            .data
+            .iter()
+            .filter(|&&b| overflows[b as usize])
+            .count();
+        code_bytes + (k * 4).min(self.master.len.div_ceil(8))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,6 +337,54 @@ mod tests {
         assert_eq!(ov.bytes(1000), 125); // bitmap wins: 1000/8
         let (ov2, _) = ExtraBitOverlay::split(&[0.0; 1000].to_vec(), 2);
         assert_eq!(ov2.bytes(1000), 0);
+    }
+
+    #[test]
+    fn view_materialize_matches_direct_slicing() {
+        let q: Vec<f32> = (0..256).map(|i| i as f32).collect();
+        let master = Arc::new(PackedTensor::pack(&q, 8));
+        for bits in [1u32, 2, 3, 4, 6, 8] {
+            for ep in [false, true] {
+                let view = BitSliceView::new(master.clone(), bits, ep);
+                let (packed, overlay) = view.materialize();
+                let step = (1u32 << (8 - bits)) as f32;
+                let ids: Vec<f32> = q
+                    .iter()
+                    .map(|&x| slice_code(x, 8, bits, ep) / step)
+                    .collect();
+                let (want_ov, want_dense) = if ep {
+                    ExtraBitOverlay::split(&ids, bits)
+                } else {
+                    (ExtraBitOverlay::default(), ids)
+                };
+                assert_eq!(packed, PackedTensor::pack(&want_dense, bits), "bits={bits} ep={ep}");
+                assert_eq!(overlay, want_ov, "bits={bits} ep={ep}");
+            }
+        }
+    }
+
+    #[test]
+    fn view_compact_bytes_match_materialized_payload() {
+        let q: Vec<f32> = (0..1000).map(|i| ((i * 13 + 7) % 256) as f32).collect();
+        let master = Arc::new(PackedTensor::pack(&q, 8));
+        for bits in [1u32, 2, 3, 4, 6, 8] {
+            for ep in [false, true] {
+                let view = BitSliceView::new(master.clone(), bits, ep);
+                let (packed, overlay) = view.materialize();
+                assert_eq!(
+                    view.compact_bytes(),
+                    packed.bytes() + overlay.bytes(view.len()),
+                    "bits={bits} ep={ep}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "int8 master")]
+    fn view_rejects_non_master_source() {
+        let p = Arc::new(PackedTensor::pack(&[0.0, 1.0, 2.0, 3.0], 2));
+        let _ = BitSliceView::new(p, 2, false);
     }
 
     #[test]

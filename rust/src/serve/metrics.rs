@@ -20,6 +20,11 @@ pub struct Metrics {
     /// total ms).  These replace dense lazy builds: the bytes recorded are
     /// r-bit payload bytes, not int8 masters or f32 weight sets.
     page_ins: BTreeMap<u32, (u64, u64, f64)>,
+    /// Page-in bytes **avoided** by the nested handle store: precision →
+    /// compact per-r payload bytes a non-nested build would have paged for
+    /// a precision that instead arrived as a zero-copy view of the already
+    /// resident int8 masters ([`crate::serve::weights::WeightStore`]).
+    page_in_saved: BTreeMap<u32, u64>,
     /// Per-precision matmul/decode work: precision → (ops, total ms,
     /// weight bytes touched).  Fed by batch execution (compute time +
     /// whatever weight bytes the batch had to read: payload bytes on the
@@ -58,6 +63,7 @@ impl Default for Metrics {
             batch_sizes: Vec::new(),
             materialize_ms: BTreeMap::new(),
             page_ins: BTreeMap::new(),
+            page_in_saved: BTreeMap::new(),
             matmul_ms: BTreeMap::new(),
             prefill_ms: BTreeMap::new(),
             decode_step_ms: BTreeMap::new(),
@@ -102,6 +108,13 @@ impl Metrics {
         e.0 += 1;
         e.1 += payload_bytes;
         e.2 += ms;
+    }
+
+    /// A precision arrived as a nested view of already-resident masters:
+    /// `bytes` is the compact per-r payload a non-nested build would have
+    /// paged in instead.
+    pub fn record_page_in_saved(&mut self, bits: u32, bytes: u64) {
+        *self.page_in_saved.entry(bits).or_default() += bytes;
     }
 
     /// One decode-path prefill completed: `tokens` prompt positions ran
@@ -189,6 +202,12 @@ impl Metrics {
     /// serving both the PJRT and host paths must still count exactly one.
     pub fn page_in_count(&self, bits: u32) -> u64 {
         self.page_ins.get(&bits).map_or(0, |e| e.0)
+    }
+
+    /// Page-in bytes avoided at `bits` by the nested handle store (0 if the
+    /// precision was the first paged in, or was never paged).
+    pub fn page_in_saved_bytes(&self, bits: u32) -> u64 {
+        self.page_in_saved.get(&bits).copied().unwrap_or(0)
     }
 
     /// Total weight bytes touched by batch executions at `bits`.

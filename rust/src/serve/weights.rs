@@ -218,11 +218,21 @@ impl WeightStore {
         }
     }
 
-    /// Page in the shared packed handle set at `bits` (recorded as a
-    /// page-in: payload bytes + build latency).  This is the ONE payload
-    /// build per precision: both the PJRT `Paged` sets ([`build_paged`])
-    /// and every packed [`ForwardPlan`] draw `Arc`s from this store, so a
-    /// precision serving both paths pages in exactly once.
+    /// Page in the shared handle set at `bits`.  Handles are **nested**:
+    /// each is an MSB-prefix bit-slice view of the tensor's `Arc`-shared
+    /// int8 master ([`crate::model::QuantizedModel::packed_views`]), so the
+    /// store holds ONE payload per tensor no matter how many precisions are
+    /// resident.  The first precision paged in records the master bytes
+    /// (what the views actually stream); **every later precision records
+    /// zero new page-in bytes** — it is an `Arc` clone of bytes already
+    /// resident — and the compact per-r payload a non-nested build would
+    /// have paged instead is credited to the savings counter
+    /// ([`Metrics::page_in_saved_bytes`]).
+    ///
+    /// This remains the ONE payload build per precision: the PJRT `Paged`
+    /// sets ([`build_paged`]) and every packed [`ForwardPlan`] draw `Arc`s
+    /// from this store, and `shift_uniform` plan swaps are pure pointer
+    /// moves between plans that already share it.
     ///
     /// [`build_paged`]: WeightStore::build_paged
     pub fn ensure_handles(
@@ -234,10 +244,18 @@ impl WeightStore {
         if self.handles.contains_key(&bits) {
             return Ok(());
         }
+        let first = self.handles.is_empty();
         let t0 = Instant::now();
-        let packed = arc_packed(model.packed_weights(bits, false)?);
-        let payload: usize = packed.values().map(|p| p.payload_bytes()).sum();
-        metrics.record_page_in(bits, payload as u64, t0.elapsed().as_secs_f64() * 1e3);
+        let packed = arc_packed(model.packed_views(bits, false)?);
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        if first {
+            let payload: usize = packed.values().map(|p| p.payload_bytes()).sum();
+            metrics.record_page_in(bits, payload as u64, ms);
+        } else {
+            let saved: usize = packed.values().map(|p| p.compact_payload_bytes()).sum();
+            metrics.record_page_in(bits, 0, ms);
+            metrics.record_page_in_saved(bits, saved as u64);
+        }
         self.handles.insert(bits, packed);
         Ok(())
     }

@@ -23,7 +23,7 @@
 
 use matquant::kernels::{self, testing};
 use matquant::model::registry::QuantizedTensor;
-use matquant::model::Tensor;
+use matquant::model::{PackedPayload, Tensor};
 use matquant::quant::{self, ExtraBitOverlay, PackedTensor};
 
 const WIDTHS: [u32; 6] = [1, 2, 3, 4, 6, 8];
@@ -343,12 +343,15 @@ fn packed_weight_matvec_matches_registry_materialization() {
         for ep in [false, true] {
             let pw = qt.packed_weight(bits, ep).unwrap();
             let got = pw.matvec(&x).unwrap();
+            let PackedPayload::Sliced { packed, overlay } = &pw.payload else {
+                panic!("packed_weight must build a compact payload");
+            };
             let (want, mag) = testing::reference_matmul(
-                &pw.packed,
-                if pw.overlay.is_empty() {
+                packed,
+                if overlay.is_empty() {
                     None
                 } else {
-                    Some(&pw.overlay)
+                    Some(overlay)
                 },
                 &pw.scales,
                 8,
@@ -363,6 +366,65 @@ fn packed_weight_matvec_matches_registry_materialization() {
                 &mag,
                 d_in,
                 &format!("packed-weight bits={bits} ep={ep}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn bit_slice_view_matvec_matches_compact_handle_bitwise() {
+    // The nested handle must be indistinguishable from the compact one at
+    // the kernel level: same registry tensor, same input, every width ±
+    // extra precision — outputs bit-for-bit equal (not just close).
+    let d_in = 48;
+    let d_out = 9;
+    let mut rng = matquant::data::Rng::new(2424);
+    let data: Vec<f32> = (0..d_in * d_out).map(|_| rng.range_f32(-2.0, 2.0)).collect();
+    let fp = Tensor::new(vec![d_in, d_out], data).unwrap();
+    let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+    let x = testing::synth_x(d_in, 4321);
+    for &bits in &WIDTHS {
+        for ep in [false, true] {
+            let compact = qt.packed_weight(bits, ep).unwrap();
+            let view = qt.packed_view(bits, ep).unwrap();
+            let want = compact.matvec(&x).unwrap();
+            let got = view.matvec(&x).unwrap();
+            testing::assert_bits_eq(&got, &want, &format!("view matvec bits={bits} ep={ep}"));
+            let (wa, _) = compact.decode().unwrap();
+            let (wb, _) = view.decode().unwrap();
+            testing::assert_bits_eq(
+                &wb.data,
+                &wa.data,
+                &format!("view decode bits={bits} ep={ep}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn bit_slice_view_materialize_matches_pack_sliced() {
+    // BitSliceView::materialize must reproduce the compact payload the
+    // registry's pack_sliced emits — codes and overlay — exactly.
+    let d_in = 31;
+    let d_out = 7;
+    let mut rng = matquant::data::Rng::new(777);
+    let data: Vec<f32> = (0..d_in * d_out).map(|_| rng.range_f32(-1.5, 1.5)).collect();
+    let fp = Tensor::new(vec![d_in, d_out], data).unwrap();
+    let qt = QuantizedTensor::from_weight(fp, None, None, None).unwrap();
+    for &bits in &WIDTHS {
+        for ep in [false, true] {
+            let (want_packed, want_ov) = qt.pack_sliced(bits, ep);
+            let view = quant::BitSliceView::new(qt.codes.clone(), bits, ep);
+            let (got_packed, got_ov) = view.materialize();
+            assert_eq!(got_packed, want_packed, "codes bits={bits} ep={ep}");
+            assert_eq!(
+                got_ov.indices, want_ov.indices,
+                "overlay bits={bits} ep={ep}"
+            );
+            assert_eq!(
+                view.compact_bytes(),
+                want_packed.bytes() + want_ov.bytes(d_in * d_out),
+                "compact_bytes bits={bits} ep={ep}"
             );
         }
     }

@@ -1,11 +1,13 @@
 //! Serving-stack tests.
 //!
 //! The weight-paging half runs unconditionally: it exercises the worker's
-//! `WeightStore` directly — lazy builds must page r-bit payload bytes (not
-//! the int8 master, not an f32 weight set) and the literal arguments a
-//! paged set produces must be identical to the dense set's, which is what
-//! makes responses identical before/after the paging switch (a response is
-//! a pure function of the literals fed to the `fwd_b{B}` executable).
+//! `WeightStore` directly — lazy builds page the **nested** store (one
+//! `Arc`-shared int8 master per tensor; every precision an MSB-prefix
+//! bit-slice view, so any precision below an already-resident one pages in
+//! zero new bytes) and the literal arguments a paged set produces must be
+//! identical to the dense set's, which is what makes responses identical
+//! before/after the paging switch (a response is a pure function of the
+//! literals fed to the `fwd_b{B}` executable).
 //!
 //! The end-to-end half (mixed-precision requests through the full router →
 //! batcher → PJRT pipeline) requires `make artifacts` and reports
@@ -52,7 +54,7 @@ fn toy_model(layers: usize, d_in: usize, d_out: usize) -> QuantizedModel {
 // ---------------------------------------------------------------------------
 
 #[test]
-fn lazy_builds_page_payload_bytes_not_the_master() {
+fn lazy_builds_page_the_shared_master_not_f32() {
     let model = toy_model(3, 64, 32);
     let mut store = WeightStore::new();
     let mut metrics = Metrics::default();
@@ -70,13 +72,14 @@ fn lazy_builds_page_payload_bytes_not_the_master() {
         .values()
         .map(|qt| qt.d_in * qt.d_out * 4)
         .sum();
-    // int2 payload ≈ ¼ of the int8 master, 1/16 of the f32 set
-    assert!(
-        paged * 3 < master_bytes,
-        "paged {paged}B vs master {master_bytes}B"
+    // the nested store pages the int8 masters (+ scales) exactly once —
+    // these are what every precision's view streams — never an f32 set
+    assert_eq!(
+        paged, master_bytes,
+        "a view set's resident bytes are the shared masters"
     );
-    assert!(paged * 8 < f32_bytes, "paged {paged}B vs f32 {f32_bytes}B");
-    // the metrics byte counter records exactly the payload bytes
+    assert!(paged * 3 < f32_bytes, "paged {paged}B vs f32 {f32_bytes}B");
+    // the metrics byte counter records exactly the resident bytes
     assert_eq!(metrics.page_in_bytes(2), paged as u64);
     assert_eq!(metrics.page_in_bytes(8), 0);
 
@@ -86,13 +89,54 @@ fn lazy_builds_page_payload_bytes_not_the_master() {
     assert_eq!(store.payload_bytes(8), None);
     assert_eq!(metrics.page_in_bytes(8), 0);
 
-    // per-batch bytes-touched: the paged set touches payload bytes, the
-    // dense set touches full f32 bytes
+    // per-batch bytes-touched: the paged set touches the master payload,
+    // the dense set touches full f32 bytes
     assert_eq!(store.batch_weight_bytes(2), paged);
     assert!(store.batch_weight_bytes(8) >= f32_bytes);
 
     let report = metrics.report();
     assert!(report.contains("paged=[int2:1x"), "{report}");
+}
+
+#[test]
+fn nested_store_pages_zero_new_bytes_below_r_max() {
+    // The PR-6 acceptance property: once any precision is resident, paging
+    // in any other r ≤ 8 records ZERO new payload bytes — the store hands
+    // out MSB-prefix views of the same Arc'd masters.
+    let model = toy_model(3, 64, 32);
+    let mut store = WeightStore::new();
+    let mut metrics = Metrics::default();
+    store.build_paged(&model, 8, &mut metrics).unwrap();
+    let master_paged = metrics.page_in_bytes(8);
+    assert!(master_paged > 0);
+    for bits in [4u32, 2] {
+        store.build_paged(&model, bits, &mut metrics).unwrap();
+        assert_eq!(metrics.page_in_count(bits), 1);
+        assert_eq!(
+            metrics.page_in_bytes(bits),
+            0,
+            "int{bits} paged new bytes despite resident masters"
+        );
+        assert!(
+            metrics.page_in_saved_bytes(bits) > 0,
+            "int{bits} must credit the avoided compact payload"
+        );
+        // every precision's resident bytes ARE the shared master set
+        assert_eq!(store.payload_bytes(bits), store.payload_bytes(8));
+    }
+    // total page-in traffic across all three precisions == one master set
+    let total: u64 = [2u32, 4, 8].iter().map(|&b| metrics.page_in_bytes(b)).sum();
+    assert_eq!(total, master_paged);
+    // the avoided bytes match the compact payloads a per-r build would cut
+    for bits in [4u32, 2] {
+        let compact: usize = model
+            .packed_weights(bits, false)
+            .unwrap()
+            .values()
+            .map(|p| p.payload_bytes())
+            .sum();
+        assert_eq!(metrics.page_in_saved_bytes(bits), compact as u64);
+    }
 }
 
 #[test]
