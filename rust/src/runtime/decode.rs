@@ -390,6 +390,29 @@ impl DecodeSession {
         (tok, logit)
     }
 
+    /// Swap this session onto a different forward plan **mid-stream** — the
+    /// elastic precision shift.  The KV cache is untouched: cached K/V rows
+    /// are f32 activations of already-processed positions, so they stay
+    /// valid under any plan with the same model geometry; only the weights
+    /// that future steps read change.  The swap is a pointer move — no
+    /// recompute, no re-prefill, no KV copy.  Errors (leaving the session
+    /// unchanged) when the plans disagree on any dimension the cache or the
+    /// logits row depends on.
+    pub fn switch_plan(&mut self, plan: Arc<ForwardPlan>) -> Result<()> {
+        let (old, new) = (&self.plan.dims, &plan.dims);
+        ensure!(
+            old.vocab == new.vocab
+                && old.d_model == new.d_model
+                && old.n_layers == new.n_layers
+                && old.n_heads == new.n_heads
+                && old.d_ff == new.d_ff
+                && old.seq_len == new.seq_len,
+            "plan switch changes model geometry"
+        );
+        self.plan = plan;
+        Ok(())
+    }
+
     /// Feed `token` through one KV-cached decode step; the new logits
     /// become [`DecodeSession::logits`].  Errors when the position
     /// capacity is exhausted ([`DecodeSession::can_advance`]).

@@ -50,6 +50,18 @@ pub struct Metrics {
     /// Resident KV-cache bytes across live decode sessions (gauge, set by
     /// the worker after every step round).
     kv_bytes: u64,
+    /// Elastic precision shifts applied (downshifts, upshifts).
+    shifts: (u64, u64),
+    /// Sessions + queued requests moved by shifts.
+    shift_moved: u64,
+    /// Weight bytes a shift did NOT have to page because the destination
+    /// precision is an MSB-prefix view of resident masters (the compact
+    /// per-r payload a non-nested store would stream before serving the
+    /// shifted group).
+    shift_saved_bytes: u64,
+    /// Destination-group live occupancy observed right after each shift:
+    /// (shifts observed, summed occupancy) → mean post-shift occupancy.
+    shift_occupancy: (u64, u64),
     pub requests: u64,
     pub batches: u64,
 }
@@ -69,6 +81,10 @@ impl Default for Metrics {
             decode_step_ms: BTreeMap::new(),
             round_ms: BTreeMap::new(),
             kv_bytes: 0,
+            shifts: (0, 0),
+            shift_moved: 0,
+            shift_saved_bytes: 0,
+            shift_occupancy: (0, 0),
             requests: 0,
             batches: 0,
         }
@@ -172,6 +188,50 @@ impl Metrics {
     pub fn rounds_per_sec(&self) -> f64 {
         let total: u64 = self.round_ms.values().map(|e| e.0).sum();
         total as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    /// One elastic precision shift applied: `moved` sessions + queued
+    /// requests changed groups, `saved_bytes` of per-r payload did NOT page
+    /// thanks to the nested views, and the destination group holds
+    /// `post_occupancy` live members after the move.
+    pub fn record_shift(&mut self, down: bool, moved: u64, saved_bytes: u64, post_occupancy: u64) {
+        if down {
+            self.shifts.0 += 1;
+        } else {
+            self.shifts.1 += 1;
+        }
+        self.shift_moved += moved;
+        self.shift_saved_bytes += saved_bytes;
+        self.shift_occupancy.0 += 1;
+        self.shift_occupancy.1 += post_occupancy;
+    }
+
+    /// Elastic downshifts applied.
+    pub fn shifts_down(&self) -> u64 {
+        self.shifts.0
+    }
+
+    /// Elastic upshifts applied.
+    pub fn shifts_up(&self) -> u64 {
+        self.shifts.1
+    }
+
+    /// Sessions + queued requests moved across all shifts.
+    pub fn shift_moved(&self) -> u64 {
+        self.shift_moved
+    }
+
+    /// Weight bytes shifts avoided paging (nested views vs per-r payloads).
+    pub fn shift_saved_bytes(&self) -> u64 {
+        self.shift_saved_bytes
+    }
+
+    /// Mean destination-group live occupancy right after a shift.
+    pub fn mean_post_shift_occupancy(&self) -> f64 {
+        match self.shift_occupancy {
+            (0, _) => 0.0,
+            (n, sum) => sum as f64 / n as f64,
+        }
     }
 
     /// Update the resident KV-cache gauge (bytes across live sessions).
@@ -288,7 +348,7 @@ impl Metrics {
             })
             .collect();
         format!(
-            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}] prefill=[{}] decode=[{}] rounds=[{}] rounds_per_s={:.1} kv_bytes={}",
+            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}] prefill=[{}] decode=[{}] rounds=[{}] rounds_per_s={:.1} kv_bytes={} shifts=[down:{} up:{} moved:{} saved:{}B occ:{:.1}]",
             self.requests,
             self.batches,
             self.percentile(50.0),
@@ -303,7 +363,12 @@ impl Metrics {
             decode.join(" "),
             rounds.join(" "),
             self.rounds_per_sec(),
-            self.kv_bytes
+            self.kv_bytes,
+            self.shifts.0,
+            self.shifts.1,
+            self.shift_moved,
+            self.shift_saved_bytes,
+            self.mean_post_shift_occupancy()
         )
     }
 }
@@ -393,6 +458,25 @@ mod tests {
         assert!(r.contains("rounds=[int2:1x2.0occ"), "{r}");
         assert!(r.contains("int4:2x2.0occ/0.400ms/200B"), "{r}");
         assert!(r.contains("rounds_per_s="), "{r}");
+    }
+
+    #[test]
+    fn shift_counters_and_report_segment() {
+        let mut m = Metrics::default();
+        assert_eq!(m.mean_post_shift_occupancy(), 0.0);
+        m.record_shift(true, 3, 1536, 4);
+        m.record_shift(true, 1, 0, 2);
+        m.record_shift(false, 4, 0, 3);
+        assert_eq!(m.shifts_down(), 2);
+        assert_eq!(m.shifts_up(), 1);
+        assert_eq!(m.shift_moved(), 8);
+        assert_eq!(m.shift_saved_bytes(), 1536);
+        assert_eq!(m.mean_post_shift_occupancy(), 3.0);
+        let r = m.report();
+        assert!(
+            r.contains("shifts=[down:2 up:1 moved:8 saved:1536B occ:3.0]"),
+            "{r}"
+        );
     }
 
     #[test]

@@ -36,6 +36,15 @@
 //!     the generation length and the greedy / seeded-temperature sampler;
 //!     Request { per_layer } serves a Mix'n'Match assignment; all
 //!     generation parameters are validated at submit.
+//!
+//!   Elastic precision (ServerConfig { elastic }): an [`ElasticPlanner`]
+//!     watches KV residency and queue depth after every round; on a high
+//!     watermark the busiest uniform packed group shifts one ladder rung
+//!     down (live sessions keep their KV rows — the plan swap is an Arc
+//!     pointer swap), and once both low watermarks hold, displaced
+//!     sessions shift back up to their native precision.  Because every
+//!     precision is an MSB-prefix view of the one nested payload, the
+//!     shift pages in zero new weight bytes when the master is resident.
 //! ```
 
 pub mod batcher;
@@ -48,9 +57,13 @@ pub mod weights;
 
 pub use batcher::DynamicBatcher;
 pub use metrics::Metrics;
-pub use planner::{plan_deployment, DeploymentPlan};
+pub use planner::{
+    plan_deployment, DeploymentPlan, ElasticConfig, ElasticPlanner, ShiftDirection,
+};
 pub use request::{PrecisionReq, Request, Response};
-pub use scheduler::{projected_kv_bytes, RoundOutcome, Scheduler, SchedulerConfig};
+pub use scheduler::{
+    projected_kv_bytes, RoundOutcome, Scheduler, SchedulerConfig, ShiftReport, UniformGroupLoad,
+};
 pub use server::{Server, ServerConfig};
 pub use weights::{PlanKey, WeightSet, WeightStore};
 

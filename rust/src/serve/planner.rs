@@ -5,9 +5,22 @@
 //! Pyramid Mix'n'Match assignments.  The paper's motivating case — "the
 //! budget fits int3 but the hardware only supports int2/int4" — falls out
 //! naturally: a Pyramid mix of {2, 4, 8} wins the int3-sized budget.
+//!
+//! This module also hosts the **elastic precision planner**
+//! ([`ElasticPlanner`]): the runtime twin of the deployment decision.
+//! Where [`plan_deployment`] picks a precision once per install, the
+//! elastic planner watches load watermarks (resident KV bytes, prefill
+//! queue depth) every scheduling round and asks for **mid-stream** shifts:
+//! under pressure, live sessions of the highest uniform precision drop one
+//! rung down the MatQuant ladder (the nested payload makes the lower-bit
+//! plan free to page — it is an MSB-prefix view of the already-resident
+//! int8 masters); once pressure clears, displaced sessions return to their
+//! native precision.  Decisions are pure functions of the observed load,
+//! so policy is unit-testable without a scheduler.
 
 use crate::mixnmatch::strategy::{assignments_for, compositions, Strategy};
 use crate::model::{PrecisionAssignment, QuantizedModel};
+use crate::MATQUANT_BITS;
 
 /// A candidate deployment with measured-or-estimated quality.
 #[derive(Debug, Clone)]
@@ -92,6 +105,107 @@ pub fn plan_deployment(
     best
 }
 
+// ---------------------------------------------------------------------------
+// Elastic precision under load
+// ---------------------------------------------------------------------------
+
+/// Which way the elastic planner wants to move precision.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ShiftDirection {
+    /// Load above the high watermarks: push the highest uniform group one
+    /// rung down the ladder.
+    Down,
+    /// Load below the low watermarks: restore displaced sessions to their
+    /// native precision.
+    Up,
+}
+
+/// Watermark policy for mid-stream precision shifting.
+///
+/// A `Down` shift fires when **either** high watermark is breached; an `Up`
+/// shift only when **both** low watermarks hold (hysteresis — the gap
+/// between the high and low marks is what prevents flapping, together with
+/// [`ElasticConfig::cooldown_rounds`]).
+#[derive(Debug, Clone)]
+pub struct ElasticConfig {
+    /// Resident KV bytes at/above which a downshift fires.
+    pub kv_high_bytes: u64,
+    /// Resident KV bytes at/below which upshifts become eligible.
+    pub kv_low_bytes: u64,
+    /// Pending prefill-queue depth at/above which a downshift fires.
+    pub queue_high: usize,
+    /// Queue depth at/below which upshifts become eligible.
+    pub queue_low: usize,
+    /// The precision ladder, highest first (default [`MATQUANT_BITS`] =
+    /// `[8, 4, 2]` — the slice widths the nested payload serves for free).
+    pub ladder: Vec<u32>,
+    /// Rounds that must pass after a shift before the next one.
+    pub cooldown_rounds: u64,
+}
+
+impl Default for ElasticConfig {
+    fn default() -> Self {
+        ElasticConfig {
+            kv_high_bytes: u64::MAX,
+            kv_low_bytes: u64::MAX,
+            queue_high: usize::MAX,
+            queue_low: usize::MAX,
+            ladder: MATQUANT_BITS.to_vec(),
+            cooldown_rounds: 8,
+        }
+    }
+}
+
+impl ElasticConfig {
+    /// The next rung below `bits` on the ladder (`None` at the bottom or
+    /// for off-ladder precisions below every rung).
+    pub fn next_down(&self, bits: u32) -> Option<u32> {
+        self.ladder.iter().copied().filter(|&b| b < bits).max()
+    }
+}
+
+/// Watermark-driven shift policy: pure decisions from observed load, with
+/// cooldown bookkeeping.  The scheduler applies the mechanics
+/// ([`crate::serve::Scheduler::shift_uniform`] /
+/// [`crate::serve::Scheduler::shift_up_natives`]); this type only decides.
+#[derive(Debug, Clone)]
+pub struct ElasticPlanner {
+    pub cfg: ElasticConfig,
+    last_shift_round: Option<u64>,
+}
+
+impl ElasticPlanner {
+    pub fn new(cfg: ElasticConfig) -> Self {
+        ElasticPlanner {
+            cfg,
+            last_shift_round: None,
+        }
+    }
+
+    /// Decide at round `round` under the observed load.  `None` while the
+    /// cooldown holds or while load sits between the watermarks (the
+    /// hysteresis band).
+    pub fn decide(&self, round: u64, kv_bytes: u64, queue_depth: usize) -> Option<ShiftDirection> {
+        if let Some(last) = self.last_shift_round {
+            if round.saturating_sub(last) < self.cfg.cooldown_rounds {
+                return None;
+            }
+        }
+        if kv_bytes >= self.cfg.kv_high_bytes || queue_depth >= self.cfg.queue_high {
+            return Some(ShiftDirection::Down);
+        }
+        if kv_bytes <= self.cfg.kv_low_bytes && queue_depth <= self.cfg.queue_low {
+            return Some(ShiftDirection::Up);
+        }
+        None
+    }
+
+    /// Record that a shift was applied at `round` (starts the cooldown).
+    pub fn note_shift(&mut self, round: u64) {
+        self.last_shift_round = Some(round);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -161,5 +275,51 @@ mod tests {
         let plan = plan_deployment(&m, 3, big, &[4], |_, bpp| bpp).unwrap();
         // only int4 available → uniform int4 wins
         assert!(plan.label.contains("int4"), "{}", plan.label);
+    }
+
+    fn elastic_cfg() -> ElasticConfig {
+        ElasticConfig {
+            kv_high_bytes: 1000,
+            kv_low_bytes: 200,
+            queue_high: 8,
+            queue_low: 1,
+            ladder: vec![8, 4, 2],
+            cooldown_rounds: 4,
+        }
+    }
+
+    #[test]
+    fn elastic_watermarks_drive_direction() {
+        let p = ElasticPlanner::new(elastic_cfg());
+        // either high watermark fires a downshift
+        assert_eq!(p.decide(0, 1000, 0), Some(ShiftDirection::Down));
+        assert_eq!(p.decide(0, 0, 8), Some(ShiftDirection::Down));
+        // both low marks must hold for an upshift
+        assert_eq!(p.decide(0, 200, 1), Some(ShiftDirection::Up));
+        assert_eq!(p.decide(0, 200, 2), None, "queue above low mark");
+        assert_eq!(p.decide(0, 500, 0), None, "hysteresis band is quiet");
+    }
+
+    #[test]
+    fn elastic_cooldown_suppresses_consecutive_shifts() {
+        let mut p = ElasticPlanner::new(elastic_cfg());
+        assert!(p.decide(10, 5000, 0).is_some());
+        p.note_shift(10);
+        for r in 10..14 {
+            assert_eq!(p.decide(r, 5000, 0), None, "round {r} inside cooldown");
+        }
+        assert_eq!(p.decide(14, 5000, 0), Some(ShiftDirection::Down));
+    }
+
+    #[test]
+    fn elastic_ladder_steps_one_rung() {
+        let cfg = elastic_cfg();
+        assert_eq!(cfg.next_down(8), Some(4));
+        assert_eq!(cfg.next_down(4), Some(2));
+        assert_eq!(cfg.next_down(2), None, "bottom rung");
+        assert_eq!(cfg.next_down(6), Some(4), "off-ladder width snaps down");
+        assert_eq!(cfg.next_down(1), None);
+        // default ladder is the MatQuant slice set
+        assert_eq!(ElasticConfig::default().ladder, vec![8, 4, 2]);
     }
 }

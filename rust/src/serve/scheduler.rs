@@ -102,6 +102,9 @@ impl Default for SchedulerConfig {
 struct Pending {
     req: Request,
     enq: Instant,
+    /// The uniform bit-width the request originally resolved to — where an
+    /// elastic upshift returns it ([`Scheduler::shift_up_natives`]).
+    native_bits: u32,
 }
 
 /// One live stream between rounds.
@@ -117,6 +120,10 @@ struct Live {
     decode_ms: f64,
     /// Width of the prefill round this request rode in.
     batch_size: usize,
+    /// The precision the request asked for; a group holding members whose
+    /// `native_bits` exceeds its own width is serving **displaced**
+    /// (downshifted) streams.
+    native_bits: u32,
 }
 
 /// One precision group: a shared plan, its live round members, and its
@@ -145,6 +152,35 @@ pub struct RoundOutcome {
 enum Fate {
     Alive,
     Retire,
+}
+
+/// What one elastic precision shift moved (see
+/// [`Scheduler::shift_uniform`] / [`Scheduler::shift_up_natives`]).
+#[derive(Debug, Default)]
+pub struct ShiftReport {
+    /// Live sessions whose plan pointer was swapped mid-stream.
+    pub moved_live: usize,
+    /// Queued (not yet prefilled) requests re-homed to the new group.
+    pub moved_pending: usize,
+    /// Streams that could not survive the shift — the caller closes their
+    /// response channels, mirroring [`RoundOutcome::failed`].
+    pub failed: Vec<u64>,
+}
+
+impl ShiftReport {
+    pub fn moved(&self) -> usize {
+        self.moved_live + self.moved_pending
+    }
+}
+
+/// Load snapshot of one uniform packed group — what the elastic policy
+/// ranks to pick a downshift candidate.
+#[derive(Debug, Clone, Copy)]
+pub struct UniformGroupLoad {
+    pub bits: u32,
+    pub int8: bool,
+    pub live: usize,
+    pub pending: usize,
 }
 
 /// The continuous-batching engine (see the module docs).
@@ -191,7 +227,222 @@ impl Scheduler {
             // flight keep the old one so rounds never mix plans.
             g.plan = plan;
         }
-        g.pending.push_back(Pending { req, enq });
+        g.pending.push_back(Pending {
+            req,
+            enq,
+            native_bits: bits,
+        });
+    }
+
+    /// Monotone round counter (the elastic planner's clock).
+    pub fn round(&self) -> u64 {
+        self.round
+    }
+
+    /// Load snapshot of every uniform [`PlanKey::Packed`] group — Warm and
+    /// per-layer groups are excluded because they never shift (a dense f32
+    /// plan has no ladder and a Mix'n'Match map is already a per-layer
+    /// precision decision).
+    pub fn uniform_groups(&self) -> Vec<UniformGroupLoad> {
+        self.groups
+            .iter()
+            .filter_map(|(k, g)| match k {
+                PlanKey::Packed { bits, int8 } => Some(UniformGroupLoad {
+                    bits: *bits,
+                    int8: *int8,
+                    live: g.live.len(),
+                    pending: g.pending.len(),
+                }),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// **Elastic downshift**: move every live session AND queued request of
+    /// the uniform group `(from_bits, int8)` to the `(to_bits, int8)` group
+    /// served by `to_plan` — mid-stream, between rounds.
+    ///
+    /// Each live member's KV rows stay valid (cached K/V are f32
+    /// activations of already-processed positions); the regroup is a plan
+    /// pointer swap ([`DecodeSession::switch_plan`]) plus a map move, so a
+    /// shift costs no recompute and — under the nested payload — no weight
+    /// paging.  If the destination group already has members in flight,
+    /// their plan wins (rounds never mix plan pointers); `to_plan` is
+    /// adopted only by an empty or fresh group.  A member that cannot
+    /// switch (geometry mismatch — not expected on one model) lands in
+    /// [`ShiftReport::failed`].
+    pub fn shift_uniform(
+        &mut self,
+        from_bits: u32,
+        int8: bool,
+        to_bits: u32,
+        to_plan: Arc<ForwardPlan>,
+    ) -> ShiftReport {
+        let mut report = ShiftReport::default();
+        let from_key = PlanKey::Packed {
+            bits: from_bits,
+            int8,
+        };
+        let Some(src) = self.groups.remove(&from_key) else {
+            return report;
+        };
+        let dst_key = PlanKey::Packed {
+            bits: to_bits,
+            int8,
+        };
+        let dst = self.groups.entry(dst_key).or_insert_with(|| Group {
+            plan: to_plan.clone(),
+            bits: to_bits,
+            int8,
+            live: Vec::new(),
+            pending: VecDeque::new(),
+        });
+        if dst.live.is_empty() && dst.pending.is_empty() {
+            dst.plan = to_plan;
+        }
+        let plan = dst.plan.clone();
+        for mut l in src.live {
+            match l.session.switch_plan(plan.clone()) {
+                Ok(()) => {
+                    report.moved_live += 1;
+                    dst.live.push(l);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "serve scheduler: request {}: int{from_bits}→int{to_bits} shift failed: {e:#}",
+                        l.id
+                    );
+                    report.failed.push(l.id);
+                }
+            }
+        }
+        report.moved_pending = src.pending.len();
+        dst.pending.extend(src.pending);
+        report
+    }
+
+    /// **Elastic upshift**: return every displaced stream and queued
+    /// request (member `native_bits` above its group's width) straight to
+    /// its native uniform group — not rung-by-rung, so a session pushed
+    /// int8→int4→int2 under sustained pressure recovers in one shift.
+    ///
+    /// `resolve` supplies the destination plan per `(bits, int8)` (the
+    /// worker's [`crate::serve::WeightStore`] lookup — a cache hit for any
+    /// precision that served before).  If a destination plan cannot be
+    /// built, its members stay displaced (still serving, still correct)
+    /// rather than failing.
+    pub fn shift_up_natives(
+        &mut self,
+        resolve: &mut dyn FnMut(u32, bool) -> Option<Arc<ForwardPlan>>,
+    ) -> ShiftReport {
+        let mut report = ShiftReport::default();
+        // Phase 1: pull displaced members out of their downshifted groups
+        // (remembering the source so a failed resolve can re-park them).
+        let mut live_moves: Vec<(PlanKey, u32, bool, Live)> = Vec::new();
+        let mut pending_moves: Vec<(PlanKey, u32, bool, Pending)> = Vec::new();
+        for (key, g) in self.groups.iter_mut() {
+            let int8 = match key {
+                PlanKey::Packed { int8, .. } => *int8,
+                _ => continue,
+            };
+            let bits = g.bits;
+            let mut i = 0;
+            while i < g.live.len() {
+                if g.live[i].native_bits > bits {
+                    let l = g.live.remove(i);
+                    live_moves.push((key.clone(), l.native_bits, int8, l));
+                } else {
+                    i += 1;
+                }
+            }
+            let drained: Vec<Pending> = g.pending.drain(..).collect();
+            for p in drained {
+                if p.native_bits > bits {
+                    pending_moves.push((key.clone(), p.native_bits, int8, p));
+                } else {
+                    g.pending.push_back(p);
+                }
+            }
+        }
+        // Phase 2: restore into native groups, one resolve per destination.
+        let mut plans: BTreeMap<(u32, bool), Option<Arc<ForwardPlan>>> = BTreeMap::new();
+        let mut plan_for = |bits: u32, int8: bool| -> Option<Arc<ForwardPlan>> {
+            plans
+                .entry((bits, int8))
+                .or_insert_with(|| resolve(bits, int8))
+                .clone()
+        };
+        for (src_key, bits, int8, mut l) in live_moves {
+            let Some(plan) = plan_for(bits, int8) else {
+                self.repark_live(src_key, l);
+                continue;
+            };
+            let plan = self.dest_plan(bits, int8, plan);
+            match l.session.switch_plan(plan) {
+                Ok(()) => {
+                    report.moved_live += 1;
+                    self.dest_group(bits, int8).live.push(l);
+                }
+                Err(e) => {
+                    eprintln!(
+                        "serve scheduler: request {}: upshift to int{bits} failed: {e:#}",
+                        l.id
+                    );
+                    report.failed.push(l.id);
+                }
+            }
+        }
+        for (src_key, bits, int8, p) in pending_moves {
+            let Some(plan) = plan_for(bits, int8) else {
+                if let Some(g) = self.groups.get_mut(&src_key) {
+                    g.pending.push_back(p);
+                }
+                continue;
+            };
+            let _ = self.dest_plan(bits, int8, plan); // ensure the group exists
+            report.moved_pending += 1;
+            self.dest_group(bits, int8).pending.push_back(p);
+        }
+        self.groups
+            .retain(|_, g| !g.live.is_empty() || !g.pending.is_empty());
+        report
+    }
+
+    /// The destination group for a shift, created on demand.  Only called
+    /// after a plan for `(bits, int8)` resolved, so the placeholder plan is
+    /// always replaced before use via [`Scheduler::dest_plan`].
+    fn dest_group(&mut self, bits: u32, int8: bool) -> &mut Group {
+        self.groups
+            .get_mut(&PlanKey::Packed { bits, int8 })
+            .expect("dest_plan created the group")
+    }
+
+    /// Resolve which plan pointer incoming shifted members must adopt:
+    /// the destination group's own plan when it has members in flight
+    /// (rounds never mix pointers), the freshly resolved one otherwise.
+    fn dest_plan(&mut self, bits: u32, int8: bool, resolved: Arc<ForwardPlan>) -> Arc<ForwardPlan> {
+        let g = self
+            .groups
+            .entry(PlanKey::Packed { bits, int8 })
+            .or_insert_with(|| Group {
+                plan: resolved.clone(),
+                bits,
+                int8,
+                live: Vec::new(),
+                pending: VecDeque::new(),
+            });
+        if g.live.is_empty() && g.pending.is_empty() {
+            g.plan = resolved;
+        }
+        g.plan.clone()
+    }
+
+    /// Put a live member back where it came from after a failed upshift
+    /// resolve (its group entry still exists — members were only drained).
+    fn repark_live(&mut self, src_key: PlanKey, l: Live) {
+        if let Some(g) = self.groups.get_mut(&src_key) {
+            g.live.push(l);
+        }
     }
 
     /// Whether any stream is live or any request awaits a prefill slot.
@@ -548,6 +799,7 @@ impl Scheduler {
             prefill_ms,
             decode_ms: 0.0,
             batch_size,
+            native_bits: p.native_bits,
         };
         let (tok, logit) = live.session.sample();
         live.last = tok;

@@ -37,6 +37,7 @@ use anyhow::Context;
 
 use super::batcher::{DynamicBatcher, ReadyBatch};
 use super::metrics::Metrics;
+use super::planner::{ElasticConfig, ElasticPlanner, ShiftDirection};
 use super::request::{Request, Response};
 use super::scheduler::{projected_kv_bytes, Scheduler, SchedulerConfig};
 use super::weights::{PlanKey, WeightStore};
@@ -78,6 +79,17 @@ pub struct ServerConfig {
     /// exceed it are deferred to a later round; live streams are never
     /// evicted.  `None` = unbounded.
     pub kv_capacity_bytes: Option<u64>,
+    /// Host backend: **elastic precision under load**.  When set, the
+    /// worker consults an [`ElasticPlanner`] after every scheduling round:
+    /// above the high watermarks the highest uniform *packed* group's live
+    /// streams and queued requests shift one rung down the ladder
+    /// mid-stream (a plan-pointer swap — KV stays, and under the nested
+    /// payload the lower-bit plan pages zero new weight bytes); below the
+    /// low watermarks displaced streams return to their native precision.
+    /// Warm (dense f32) and per-layer groups never shift — a warm group
+    /// serves f32-exact reference numerics by contract, so elastic serving
+    /// wants `warm_bits: vec![]`.  `None` disables shifting.
+    pub elastic: Option<ElasticConfig>,
 }
 
 impl Default for ServerConfig {
@@ -90,6 +102,7 @@ impl Default for ServerConfig {
             calibration: None,
             max_prefills_per_round: 4,
             kv_capacity_bytes: None,
+            elastic: None,
         }
     }
 }
@@ -247,6 +260,7 @@ fn host_worker_loop(
         max_prefills_per_round: cfg.max_prefills_per_round,
         kv_capacity_bytes: cfg.kv_capacity_bytes,
     });
+    let mut elastic = cfg.elastic.clone().map(ElasticPlanner::new);
 
     // Warm state at boot (build latency is free there): dense f32 forward
     // plans for the warm precisions, and the persisted activation-clip
@@ -337,6 +351,114 @@ fn host_worker_loop(
         for id in outcome.failed {
             waiters.remove(&id);
         }
+        if let Some(planner) = elastic.as_mut() {
+            apply_elastic(
+                planner,
+                &mut sched,
+                &mut store,
+                &model,
+                &preset,
+                &cfg,
+                &mut waiters,
+                &mut metrics,
+            );
+        }
+    }
+}
+
+/// Consult the elastic planner against the load the round just left behind
+/// and apply at most one shift.  Shift failures (a stream that cannot
+/// switch plans) close the affected response channels exactly like
+/// mid-round failures; a decision with nothing to move starts no cooldown,
+/// so the planner keeps watching.
+#[allow(clippy::too_many_arguments)]
+fn apply_elastic(
+    planner: &mut ElasticPlanner,
+    sched: &mut Scheduler,
+    store: &mut WeightStore,
+    model: &QuantizedModel,
+    preset: &PresetInfo,
+    cfg: &ServerConfig,
+    waiters: &mut BTreeMap<u64, Sender<Response>>,
+    metrics: &mut Metrics,
+) {
+    let round = sched.round();
+    let Some(dir) = planner.decide(round, sched.resident_kv_bytes(), sched.pending_prefills())
+    else {
+        return;
+    };
+    let failed = match dir {
+        ShiftDirection::Down => {
+            // The highest uniform packed group that has members and a
+            // rung left below it.
+            let Some(cand) = sched
+                .uniform_groups()
+                .into_iter()
+                .filter(|g| g.live > 0 || g.pending > 0)
+                .filter(|g| planner.cfg.next_down(g.bits).is_some())
+                .max_by_key(|g| g.bits)
+            else {
+                return;
+            };
+            let to_bits = planner.cfg.next_down(cand.bits).expect("filtered above");
+            let int8 = if cand.int8 { Some(cfg.act_quant) } else { None };
+            // Page-in savings attributable to this shift: bytes the nested
+            // store avoids streaming to make the destination resident.
+            let saved0 = metrics.page_in_saved_bytes(to_bits);
+            let plan = match store.plan_packed(model, &preset.model, to_bits, int8, metrics) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("serve worker: elastic downshift plan int{to_bits}: {e:#}");
+                    return;
+                }
+            };
+            let saved = metrics.page_in_saved_bytes(to_bits).saturating_sub(saved0);
+            let report = sched.shift_uniform(cand.bits, cand.int8, to_bits, plan);
+            if report.moved() > 0 {
+                let occ = sched
+                    .uniform_groups()
+                    .iter()
+                    .find(|g| g.bits == to_bits && g.int8 == cand.int8)
+                    .map_or(0, |g| g.live as u64);
+                metrics.record_shift(true, report.moved() as u64, saved, occ);
+                planner.note_shift(round);
+                eprintln!(
+                    "serve worker: elastic downshift int{}→int{to_bits}: {} live + {} queued moved",
+                    cand.bits, report.moved_live, report.moved_pending
+                );
+            }
+            report.failed
+        }
+        ShiftDirection::Up => {
+            let mut saved = 0u64;
+            let report = {
+                let saved = &mut saved;
+                sched.shift_up_natives(&mut |bits, int8| {
+                    let act = if int8 { Some(cfg.act_quant) } else { None };
+                    let s0 = metrics.page_in_saved_bytes(bits);
+                    let plan = store.plan_packed(model, &preset.model, bits, act, metrics).ok();
+                    *saved += metrics.page_in_saved_bytes(bits).saturating_sub(s0);
+                    plan
+                })
+            };
+            if report.moved() > 0 {
+                metrics.record_shift(
+                    false,
+                    report.moved() as u64,
+                    saved,
+                    sched.live_sessions() as u64,
+                );
+                planner.note_shift(round);
+                eprintln!(
+                    "serve worker: elastic upshift: {} live + {} queued restored to native precision",
+                    report.moved_live, report.moved_pending
+                );
+            }
+            report.failed
+        }
+    };
+    for id in failed {
+        waiters.remove(&id);
     }
 }
 

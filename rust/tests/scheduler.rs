@@ -521,6 +521,231 @@ fn property_sweep_staggered_admissions_match_solo_streams() {
 }
 
 // ---------------------------------------------------------------------------
+// Elastic precision shifts: mid-stream downshift/upshift, bit-identical to
+// a solo session whose plan pointer is swapped at the same step
+// ---------------------------------------------------------------------------
+
+/// Solo reference for an elastically shifted stream: same prompt, same KV
+/// prefix, with the plan pointer swapped right before computing the token
+/// at each scheduled index — exactly what `Scheduler::shift_uniform` /
+/// `shift_up_natives` between rounds must reproduce bit for bit.  Each
+/// `(i, plan)` entry means: token `i` (0-based) and everything after it is
+/// computed under `plan` (until the next entry).
+fn solo_shifted_trace(
+    plan: &Arc<ForwardPlan>,
+    spec: &Spec,
+    switches: &[(usize, Arc<ForwardPlan>)],
+) -> Vec<i32> {
+    let (prompt, sampling, max_new) = spec;
+    let mut s = DecodeSession::with_budget(plan.clone(), prompt, *sampling, *max_new).unwrap();
+    let mut remaining = *max_new;
+    let mut step = 0usize;
+    loop {
+        let (tok, _) = s.sample();
+        remaining -= 1;
+        step += 1;
+        if remaining == 0 || !s.can_advance() {
+            break;
+        }
+        if let Some((_, p)) = switches.iter().find(|(i, _)| *i == step) {
+            s.switch_plan(p.clone()).unwrap();
+        }
+        s.advance(tok).unwrap();
+    }
+    s.generated().to_vec()
+}
+
+#[test]
+fn elastic_downshift_and_upshift_match_switched_solo_streams() {
+    let (preset, model) = toy_model(107);
+    let plan8 = ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+    let plan4 = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    let specs: Vec<Spec> = vec![
+        (vec![1, 2, 3], Sampling::Greedy, 8),
+        (vec![4, 5], Sampling::Temperature { temp: 0.8, seed: 9 }, 8),
+    ];
+    let key = PlanKey::Packed { bits: 8, int8: false };
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    let mut metrics = Metrics::default();
+    for (i, sp) in specs.iter().enumerate() {
+        let req =
+            Request::generate(i as u64 + 1, sp.0.clone(), PrecisionReq::Bits(8), sp.2, sp.1);
+        sched.submit(key.clone(), plan8.clone(), 8, false, req, Instant::now());
+    }
+    // Round 0 admits both streams (emitting token 0); each later round
+    // emits one more token.  Shifting between rounds therefore changes the
+    // plan that computes the NEXT token index: down after round 2 → tokens
+    // 3.. run at int4; back up after round 5 → tokens 6.. at int8 again.
+    let mut events: BTreeMap<u64, Vec<(u32, i32)>> = BTreeMap::new();
+    let mut finals: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+    let mut round = 0usize;
+    while sched.has_work() {
+        let (ev, fi) = (&mut events, &mut finals);
+        sched.run_round(&mut metrics, &mut |id, resp| {
+            ev.entry(id).or_default().push((resp.bits, resp.next_token));
+            if resp.done {
+                fi.insert(id, resp.tokens.clone());
+            }
+            true
+        });
+        if round == 2 {
+            let rep = sched.shift_uniform(8, false, 4, plan4.clone());
+            assert_eq!(rep.moved_live, 2, "both live streams must shift down");
+            assert_eq!(rep.moved_pending, 0);
+            assert!(rep.failed.is_empty());
+            // The int8 group dissolved; one displaced int4 group remains.
+            let loads = sched.uniform_groups();
+            assert_eq!(loads.len(), 1);
+            assert_eq!((loads[0].bits, loads[0].live), (4, 2));
+        }
+        if round == 5 {
+            let rep = sched.shift_up_natives(&mut |bits, int8| {
+                assert_eq!((bits, int8), (8, false), "only native int8 resolves");
+                Some(plan8.clone())
+            });
+            assert_eq!(rep.moved_live, 2, "both streams must return to int8");
+            assert!(rep.failed.is_empty());
+        }
+        round += 1;
+        assert!(round < 64, "elastic scheduler failed to drain");
+    }
+    for (i, sp) in specs.iter().enumerate() {
+        let id = i as u64 + 1;
+        let want = solo_shifted_trace(
+            &plan8,
+            sp,
+            &[(3, plan4.clone()), (6, plan8.clone())],
+        );
+        let toks: Vec<i32> = events[&id].iter().map(|&(_, t)| t).collect();
+        assert_eq!(toks, want, "req {id}: shifted stream != switched solo");
+        assert_eq!(finals[&id], want, "req {id}: final stream != switched solo");
+        // Response.bits reports what actually served each token.
+        let bits: Vec<u32> = events[&id].iter().map(|&(b, _)| b).collect();
+        assert_eq!(bits, vec![8, 8, 8, 4, 4, 4, 8, 8], "req {id}: served bits");
+    }
+}
+
+#[test]
+fn elastic_shift_moves_pending_and_upshift_restores_natives() {
+    let (preset, model) = toy_model(109);
+    let plan8 = ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+    let plan4 = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    let specs: Vec<Spec> = vec![
+        (vec![7, 8, 9], Sampling::Greedy, 6),
+        (vec![2, 4], Sampling::Greedy, 5),
+    ];
+    let key = PlanKey::Packed { bits: 8, int8: false };
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    let mut metrics = Metrics::default();
+    for (i, sp) in specs.iter().enumerate() {
+        let req =
+            Request::generate(i as u64 + 1, sp.0.clone(), PrecisionReq::Bits(8), sp.2, sp.1);
+        sched.submit(key.clone(), plan8.clone(), 8, false, req, Instant::now());
+    }
+    // Shifting a group that does not exist is a no-op…
+    let rep = sched.shift_uniform(2, false, 1, plan4.clone());
+    assert_eq!(rep.moved(), 0);
+    // …while shifting before any round moves the QUEUED requests: they
+    // prefill under int4, remembering native_bits = 8.
+    let rep = sched.shift_uniform(8, false, 4, plan4.clone());
+    assert_eq!((rep.moved_live, rep.moved_pending), (0, 2));
+    let loads = sched.uniform_groups();
+    assert_eq!(loads.len(), 1);
+    assert_eq!((loads[0].bits, loads[0].pending), (4, 2));
+    let mut events: BTreeMap<u64, Vec<(u32, i32)>> = BTreeMap::new();
+    let mut round = 0usize;
+    while sched.has_work() {
+        let ev = &mut events;
+        sched.run_round(&mut metrics, &mut |id, resp| {
+            ev.entry(id).or_default().push((resp.bits, resp.next_token));
+            true
+        });
+        if round == 0 {
+            // Both admitted at int4 (token 0).  Upshift returns them to
+            // their native int8 group; the int4 KV prefix stays valid.
+            let rep = sched.shift_up_natives(&mut |_, _| Some(plan8.clone()));
+            assert_eq!(rep.moved_live, 2);
+            assert!(rep.failed.is_empty());
+            let loads = sched.uniform_groups();
+            assert_eq!(loads.len(), 1);
+            assert_eq!((loads[0].bits, loads[0].live), (8, 2));
+        }
+        round += 1;
+        assert!(round < 64, "elastic scheduler failed to drain");
+    }
+    for (i, sp) in specs.iter().enumerate() {
+        let id = i as u64 + 1;
+        // Solo reference: prefill + token 0 under int4, tokens 1.. at int8.
+        let want = solo_shifted_trace(&plan4, sp, &[(1, plan8.clone())]);
+        let toks: Vec<i32> = events[&id].iter().map(|&(_, t)| t).collect();
+        assert_eq!(toks, want, "req {id}: upshifted stream != switched solo");
+        let bits: Vec<u32> = events[&id].iter().map(|&(b, _)| b).collect();
+        assert_eq!(bits[0], 4, "req {id}: admission served at int4");
+        assert!(bits[1..].iter().all(|&b| b == 8), "req {id}: rest at int8");
+    }
+}
+
+#[test]
+fn host_server_elastic_watermarks_downshift_under_pressure() {
+    let (preset, model) = toy_model(113);
+    let server = Server::start_host(
+        preset.clone(),
+        model,
+        ServerConfig {
+            preset: "toy".into(),
+            max_wait_ms: 0.5,
+            warm_bits: vec![],
+            // A 1-byte KV high watermark trips on any live stream, so the
+            // worker must downshift int8 → int4 (→ int2) mid-stream; the
+            // streams still complete and answer every token.
+            elastic: Some(matquant::serve::ElasticConfig {
+                kv_high_bytes: 1,
+                cooldown_rounds: 1,
+                ..matquant::serve::ElasticConfig::default()
+            }),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let rxs: Vec<_> = (1..=2u64)
+        .map(|id| {
+            server
+                .submit(Request::generate(
+                    id,
+                    vec![1, 2, 3],
+                    PrecisionReq::Bits(8),
+                    6,
+                    Sampling::Greedy,
+                ))
+                .unwrap()
+        })
+        .collect();
+    for (i, rx) in rxs.into_iter().enumerate() {
+        let mut n = 0;
+        let mut min_bits = u32::MAX;
+        loop {
+            let r = rx.recv().unwrap_or_else(|e| panic!("req {}: {e}", i + 1));
+            n += 1;
+            min_bits = min_bits.min(r.bits);
+            if r.done {
+                assert_eq!(r.tokens.len(), 6);
+                break;
+            }
+        }
+        assert_eq!(n, 6, "req {}: one event per token", i + 1);
+        assert!(
+            min_bits < 8,
+            "req {}: stream never downshifted (min bits {min_bits})",
+            i + 1
+        );
+    }
+    let report = server.metrics_report().unwrap();
+    assert!(report.contains("shifts=[down:"), "{report}");
+    assert!(!report.contains("shifts=[down:0 "), "no shift recorded: {report}");
+    server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
 // End-to-end: the host server runs on scheduler rounds
 // ---------------------------------------------------------------------------
 
