@@ -9,6 +9,10 @@ use std::time::Instant;
 #[derive(Debug)]
 pub struct Metrics {
     start: Instant,
+    /// When the first scheduler round ran — the denominator epoch for
+    /// [`Metrics::rounds_per_sec`].  Measuring from boot instead diluted
+    /// the rate with however long the server sat idle before traffic.
+    first_round: Option<Instant>,
     latencies_ms: Vec<f64>,
     per_bits: BTreeMap<u32, u64>,
     batch_sizes: Vec<usize>,
@@ -70,6 +74,7 @@ impl Default for Metrics {
     fn default() -> Self {
         Metrics {
             start: Instant::now(),
+            first_round: None,
             latencies_ms: Vec::new(),
             per_bits: BTreeMap::new(),
             batch_sizes: Vec::new(),
@@ -153,6 +158,7 @@ impl Metrics {
     /// advanced one token through a single blocked-GEMM sweep that
     /// streamed `weight_bytes` of payload (once for the whole round).
     pub fn record_round(&mut self, bits: u32, members: usize, ms: f64, weight_bytes: u64) {
+        self.first_round.get_or_insert_with(Instant::now);
         let e = self.round_ms.entry(bits).or_insert((0, 0, 0.0, 0));
         e.0 += 1;
         e.1 += members as u64;
@@ -184,10 +190,15 @@ impl Metrics {
         }
     }
 
-    /// Step rounds per second across all precisions since boot.
+    /// Step rounds per second across all precisions, measured from the
+    /// FIRST round — not from boot, which would dilute the rate with idle
+    /// time before any traffic arrived.  0 until a round runs.
     pub fn rounds_per_sec(&self) -> f64 {
+        let Some(first) = self.first_round else {
+            return 0.0;
+        };
         let total: u64 = self.round_ms.values().map(|e| e.0).sum();
-        total as f64 / self.start.elapsed().as_secs_f64().max(1e-9)
+        total as f64 / first.elapsed().as_secs_f64().max(1e-9)
     }
 
     /// One elastic precision shift applied: `moved` sessions + queued
@@ -310,25 +321,40 @@ impl Metrics {
             .iter()
             .map(|(b, (n, ms))| format!("int{b}:{n}x{:.1}ms", ms / (*n).max(1) as f64))
             .collect();
+        // Every `{n}x...` segment reports PER-EVENT means — mixing a mean
+        // ms with a cumulative bytes/tokens figure in the same slot read as
+        // if both were per-event and overstated the tail entries.
         let paged: Vec<String> = self
             .page_ins
             .iter()
             .map(|(b, (n, bytes, ms))| {
-                format!("int{b}:{n}x{bytes}B/{:.1}ms", ms / (*n).max(1) as f64)
+                format!(
+                    "int{b}:{n}x{}B/{:.1}ms",
+                    bytes / (*n).max(1),
+                    ms / (*n).max(1) as f64
+                )
             })
             .collect();
         let matmul: Vec<String> = self
             .matmul_ms
             .iter()
             .map(|(b, (n, ms, bytes))| {
-                format!("int{b}:{n}x{:.2}ms/{bytes}B", ms / (*n).max(1) as f64)
+                format!(
+                    "int{b}:{n}x{:.2}ms/{}B",
+                    ms / (*n).max(1) as f64,
+                    bytes / (*n).max(1)
+                )
             })
             .collect();
         let prefill: Vec<String> = self
             .prefill_ms
             .iter()
             .map(|(b, (n, ms, toks))| {
-                format!("int{b}:{n}x{:.2}ms/{toks}tok", ms / (*n).max(1) as f64)
+                format!(
+                    "int{b}:{n}x{:.2}ms/{}tok",
+                    ms / (*n).max(1) as f64,
+                    toks / (*n).max(1)
+                )
             })
             .collect();
         let decode: Vec<String> = self
@@ -341,9 +367,10 @@ impl Metrics {
             .iter()
             .map(|(b, (r, m, ms, bytes))| {
                 format!(
-                    "int{b}:{r}x{:.1}occ/{:.3}ms/{bytes}B",
+                    "int{b}:{r}x{:.1}occ/{:.3}ms/{}B",
                     *m as f64 / (*r).max(1) as f64,
-                    ms / (*r).max(1) as f64
+                    ms / (*r).max(1) as f64,
+                    bytes / (*r).max(1)
                 )
             })
             .collect();
@@ -433,7 +460,8 @@ mod tests {
         assert_eq!(m.decode_steps(2), 1);
         assert_eq!(m.kv_bytes(), 4096);
         let r = m.report();
-        assert!(r.contains("prefill=[int4:2x3.00ms/32tok]"), "{r}");
+        // per-event mean tokens (32 total / 2 prefills), not the cumulative
+        assert!(r.contains("prefill=[int4:2x3.00ms/16tok]"), "{r}");
         assert!(r.contains("int4:2x0.500ms"), "{r}");
         assert!(r.contains("kv_bytes=4096"), "{r}");
     }
@@ -456,8 +484,27 @@ mod tests {
         assert!(m.rounds_per_sec() > 0.0);
         let r = m.report();
         assert!(r.contains("rounds=[int2:1x2.0occ"), "{r}");
-        assert!(r.contains("int4:2x2.0occ/0.400ms/200B"), "{r}");
+        // per-ROUND mean bytes (200 total / 2 rounds)
+        assert!(r.contains("int4:2x2.0occ/0.400ms/100B"), "{r}");
         assert!(r.contains("rounds_per_s="), "{r}");
+    }
+
+    #[test]
+    fn rounds_per_sec_measures_from_first_round_not_boot() {
+        let mut m = Metrics::default();
+        // No rounds yet: the rate is 0, not "0 rounds over idle time".
+        assert_eq!(m.rounds_per_sec(), 0.0);
+        // Idle before traffic must not dilute the rate: even after sitting
+        // a while post-boot, one round over ~no elapsed time since the
+        // FIRST round reads as a high rate, not rounds/idle-time.
+        std::thread::sleep(std::time::Duration::from_millis(30));
+        m.record_round(4, 1, 0.1, 100);
+        let rate = m.rounds_per_sec();
+        let from_boot = 1.0 / 0.030; // ≈33/s if measured from boot
+        assert!(
+            rate > 2.0 * from_boot,
+            "rate {rate:.1}/s looks measured from boot (~{from_boot:.1}/s)"
+        );
     }
 
     #[test]
@@ -493,6 +540,7 @@ mod tests {
         assert_eq!(m.batches, 3);
         let r = m.report();
         assert!(r.contains("paged=[int2:1x1536B/0.5ms]"), "{r}");
-        assert!(r.contains("int2:2x1.00ms/3072B"), "{r}");
+        // per-event mean bytes (3072 total / 2 batches)
+        assert!(r.contains("int2:2x1.00ms/1536B"), "{r}");
     }
 }

@@ -480,6 +480,18 @@ fn host_submit(
     waiters: &mut BTreeMap<u64, Sender<Response>>,
     metrics: &mut Metrics,
 ) {
+    // A duplicate in-flight id would silently overwrite the first
+    // request's waiter entry: its response events would go nowhere, the
+    // client would hang, and the scheduler would step BOTH streams while
+    // only one channel existed.  Ids are only reusable once the previous
+    // stream finished (its waiter entry is gone).
+    if waiters.contains_key(&req.id) {
+        eprintln!(
+            "serve worker: request {}: id already in flight — rejected",
+            req.id
+        );
+        return;
+    }
     // Only the first `seq` tokens reach the forward pass (prompts
     // truncate), so tokens in the clipped tail must not fail a request
     // they cannot affect.
@@ -638,7 +650,15 @@ fn pjrt_worker_loop(
                         .take(seq)
                         .find(|&&t| t < 0 || t as usize >= vocab)
                         .copied();
-                    if let Some(bad) = bad_token {
+                    if waiters.contains_key(&req.id) {
+                        // Same waiter-clobber hazard as the host path: an
+                        // in-flight id's channel must not be overwritten.
+                        eprintln!(
+                            "serve worker: request {}: id already in flight — rejected",
+                            req.id
+                        );
+                        drop(tx);
+                    } else if let Some(bad) = bad_token {
                         eprintln!(
                             "serve worker: request {}: token {bad} outside vocab [0, {vocab}) — rejected",
                             req.id

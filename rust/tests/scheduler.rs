@@ -862,6 +862,82 @@ fn host_server_serves_per_layer_requests() {
 }
 
 #[test]
+fn host_server_rejects_duplicate_in_flight_ids() {
+    // A generation long enough that request 7 is still streaming when the
+    // duplicate arrives (the worker drains its submit queue every round,
+    // and the stream needs ~60 rounds to finish).
+    let dims = ModelDims {
+        vocab: 48,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len: 64,
+        quantize_attn: false,
+    };
+    let (preset, model) = toy_transformer(dims, 127);
+    let server = Server::start_host(
+        preset,
+        model,
+        ServerConfig {
+            preset: "toy".into(),
+            max_wait_ms: 0.5,
+            warm_bits: vec![],
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let rx1 = server
+        .submit(Request::generate(
+            7,
+            vec![1, 2, 3],
+            PrecisionReq::Bits(4),
+            60,
+            Sampling::Greedy,
+        ))
+        .unwrap();
+    let dup = server
+        .submit(Request::generate(
+            7,
+            vec![4, 5],
+            PrecisionReq::Bits(4),
+            1,
+            Sampling::Greedy,
+        ))
+        .unwrap();
+    // The duplicate must be rejected (its channel closes) instead of
+    // silently overwriting the first stream's waiter entry — the clobber
+    // left the original client hanging forever on a channel nobody held.
+    assert!(dup.recv().is_err(), "duplicate in-flight id must reject");
+    let mut n = 0;
+    loop {
+        let r = rx1
+            .recv()
+            .expect("original stream must survive the duplicate submit");
+        assert_eq!(r.id, 7);
+        n += 1;
+        if r.done {
+            assert_eq!(r.tokens.len(), 60);
+            break;
+        }
+    }
+    assert_eq!(n, 60, "original stream must answer every token");
+    // Once the stream finished, its id is free for reuse.
+    let r = server
+        .infer(Request::generate(
+            7,
+            vec![9],
+            PrecisionReq::Bits(4),
+            2,
+            Sampling::Greedy,
+        ))
+        .unwrap();
+    assert!(r.done);
+    assert_eq!(r.tokens.len(), 2, "finished ids must be reusable");
+    server.shutdown().unwrap();
+}
+
+#[test]
 fn host_server_kv_budget_defers_but_answers_everyone() {
     let (preset, model) = toy_model(103);
     let d = preset.model.d_model;
