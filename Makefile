@@ -13,7 +13,7 @@ PYTHON ?= python3
 ARTIFACTS_DIR ?= $(abspath rust/artifacts)
 PRESETS ?= tiny,small,tiny_attn
 
-.PHONY: artifacts build test conformance bench clean-artifacts
+.PHONY: artifacts build test conformance bench bench-json clean-artifacts
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir $(ARTIFACTS_DIR) --presets $(PRESETS)
@@ -33,6 +33,13 @@ conformance:
 
 bench:
 	cd rust && cargo bench --bench quant_hot_paths
+
+# Run the bench and persist the ROADMAP perf-trajectory rows (nested
+# page-in bytes per precision, elastic shift latency, round throughput at
+# each watermark state) into BENCH_6.json at the repo root.  Override
+# MQ_BENCH_MS for a quicker (smoke) or steadier (long) measurement budget.
+bench-json:
+	cd rust && MQ_BENCH_OUT=$(abspath BENCH_6.json) cargo bench --bench quant_hot_paths
 
 clean-artifacts:
 	rm -rf $(ARTIFACTS_DIR)

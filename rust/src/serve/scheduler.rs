@@ -42,6 +42,15 @@
 //!   prefill that errors falls back to solo prefills the same way.  A
 //!   member whose KV/position capacity fills mid-round ends its own stream
 //!   (`done`, truncated) while the round's other members keep stepping.
+//! * **Elastic precision shifts** ([`Scheduler::shift_uniform`] /
+//!   [`Scheduler::shift_up_natives`], driven by the serving worker's
+//!   [`crate::serve::ElasticPlanner`]): under KV/queue pressure a whole
+//!   uniform packed group — live sessions AND queued requests — moves one
+//!   ladder rung down; once both low watermarks hold, displaced streams
+//!   return to their native precision.  A live session's plan swap is
+//!   geometry-checked ([`DecodeSession::switch_plan`]) and keeps its KV
+//!   rows, so a shift costs no recompute — and, because every precision is
+//!   an MSB-prefix view of the one nested payload, no new weight bytes.
 //!
 //! The scheduler is deliberately free of channels and threads: the serving
 //! worker ([`crate::serve::Server::start_host`]) owns it and calls
