@@ -7,8 +7,10 @@
 //! ISSUE 5 adds the continuous-batching rows (scheduler step rounds vs
 //! per-session stepping at 1/4/16 concurrent sessions); ISSUE 6 adds the
 //! nested-payload page-in rows, elastic precision-shift latency, and round
-//! throughput at each watermark state — persisted as JSON when
-//! `MQ_BENCH_OUT` names a path (`make bench-json` → `BENCH_6.json`).
+//! throughput at each watermark state; ISSUE 7 adds the self-speculative
+//! decode rows (plain vs int2-draft/int8-verify tokens/sec at k ∈ {2,4,8},
+//! c ∈ {1,4,16}, with accept rates) — persisted as JSON when
+//! `MQ_BENCH_OUT` names a path (`make bench-json` → `BENCH_7.json`).
 //!
 //! Run: `cargo bench --bench quant_hot_paths`
 
@@ -22,8 +24,8 @@ use matquant::model::testing::toy_transformer;
 use matquant::model::{manifest::ModelDims, PrecisionAssignment, Tensor};
 use matquant::quant::{self, ActQuantConfig, PackedTensor};
 use matquant::runtime::{
-    advance_sessions, argmax_logit, DecodeSession, ForwardPlan, ForwardWeights, HostForward,
-    Sampling,
+    advance_sessions, argmax_logit, speculative_round, DecodeSession, ForwardPlan,
+    ForwardWeights, HostForward, Sampling,
 };
 use matquant::serve::{
     Metrics, PlanKey, PrecisionReq, Request, Scheduler, SchedulerConfig, WeightStore,
@@ -701,15 +703,104 @@ fn main() {
         ));
     }
 
+    // ---- self-speculative decode: int2 draft / int8 verify (ISSUE 7) ----
+    // Plain vs speculative tokens/sec at k ∈ {2, 4, 8}, c ∈ {1, 4, 16},
+    // plus the draft accept rate and tokens per round.  Greedy output is
+    // bit-identical to plain decode by construction (the scheduler tests
+    // prove it), so the only open question is throughput: on this host both
+    // the draft and the verify stream the same shared master bytes, so the
+    // win tracks (accept rate × window width) against the k−1 extra draft
+    // passes — these rows quantify exactly where that trade lands.
+    let mut json_spec: Vec<String> = Vec::new();
+    for conc in [1usize, 4, 16] {
+        let prompts: Vec<Vec<i32>> = (0..conc)
+            .map(|c| {
+                (0..sp_len)
+                    .map(|i| ((i * 13 + 2 + 7 * c) % vocab) as i32)
+                    .collect()
+            })
+            .collect();
+        // Plain baseline: the scheduler's batched single-token step rounds
+        // on the target (int8) plan.
+        let plain_specs: Vec<(&[i32], Sampling, usize)> = prompts
+            .iter()
+            .map(|p| (p.as_slice(), Sampling::Greedy, sn_new + 1))
+            .collect();
+        let mut plain_s = 0.0f64;
+        for _ in 0..reps {
+            let mut sessions = DecodeSession::prefill_many(&plan8, &plain_specs).unwrap();
+            let t0 = Instant::now();
+            for _ in 0..sn_new {
+                let tokens: Vec<i32> = sessions.iter_mut().map(|s| s.sample().0).collect();
+                let mut refs: Vec<&mut DecodeSession> = sessions.iter_mut().collect();
+                advance_sessions(&mut refs, &tokens).unwrap();
+            }
+            plain_s += t0.elapsed().as_secs_f64();
+            std::hint::black_box(&sessions);
+        }
+        let plain_tps = (reps * conc * sn_new) as f64 / plain_s;
+        for k in [2usize, 4, 8] {
+            let spec_specs: Vec<(&[i32], Sampling, usize)> = prompts
+                .iter()
+                .map(|p| (p.as_slice(), Sampling::Greedy, sn_new + k + 1))
+                .collect();
+            let mut tok_total = 0usize;
+            let mut drafted = 0u64;
+            let mut accepted = 0u64;
+            let mut rounds_n = 0u64;
+            let mut spec_s = 0.0f64;
+            for _ in 0..reps {
+                let mut sessions = DecodeSession::prefill_many(&plan8, &spec_specs).unwrap();
+                let mut last: Vec<i32> = sessions.iter_mut().map(|s| s.sample().0).collect();
+                let mut emitted = vec![0usize; conc];
+                let t0 = Instant::now();
+                while emitted.iter().any(|&e| e < sn_new)
+                    && sessions.iter().all(|s| s.spec_window() >= k)
+                {
+                    let rounds = {
+                        let mut refs: Vec<&mut DecodeSession> =
+                            sessions.iter_mut().collect();
+                        speculative_round(&mut refs, &plan2, &last, k).unwrap()
+                    };
+                    for (i, r) in rounds.iter().enumerate() {
+                        emitted[i] += r.emitted.len();
+                        tok_total += r.emitted.len();
+                        drafted += r.drafted as u64;
+                        accepted += r.accepted as u64;
+                        last[i] = r.emitted.last().unwrap().0;
+                    }
+                    rounds_n += 1;
+                }
+                spec_s += t0.elapsed().as_secs_f64();
+                std::hint::black_box(&sessions);
+            }
+            let spec_tps = tok_total as f64 / spec_s;
+            let acc = if drafted > 0 {
+                accepted as f64 / drafted as f64
+            } else {
+                0.0
+            };
+            let tpr = tok_total as f64 / (rounds_n.max(1) * conc as u64) as f64;
+            println!(
+                "speculative c{conc:<2} k{k} int2-draft/int8-verify: plain {plain_tps:.0} tok/s | spec {spec_tps:.0} tok/s | {:.2}x | accept {acc:.2} | {tpr:.2} tok/round",
+                spec_tps / plain_tps
+            );
+            json_spec.push(format!(
+                "{{\"sessions\": {conc}, \"k\": {k}, \"plain_tok_per_s\": {plain_tps:.1}, \"spec_tok_per_s\": {spec_tps:.1}, \"accept_rate\": {acc:.3}, \"tokens_per_round\": {tpr:.3}}}"
+            ));
+        }
+    }
+
     // Hand-rolled JSON (the build is offline — no serde); the Makefile
     // `bench-json` target and the CI smoke step point MQ_BENCH_OUT at
-    // BENCH_6.json in the repo root.
+    // BENCH_7.json in the repo root.
     if let Ok(path) = std::env::var("MQ_BENCH_OUT") {
         let json = format!(
-            "{{\n  \"pr\": 6,\n  \"bench\": \"quant_hot_paths\",\n  \"model\": \"toy tiny-shaped (vocab 256, d_model 96, 4 layers, d_ff 384)\",\n  \"page_in_per_precision\": [\n    {}\n  ],\n  \"elastic_shift_latency\": [\n    {}\n  ],\n  \"round_throughput_per_watermark_state\": [\n    {}\n  ]\n}}\n",
+            "{{\n  \"pr\": 7,\n  \"bench\": \"quant_hot_paths\",\n  \"model\": \"toy tiny-shaped (vocab 256, d_model 96, 4 layers, d_ff 384)\",\n  \"page_in_per_precision\": [\n    {}\n  ],\n  \"elastic_shift_latency\": [\n    {}\n  ],\n  \"round_throughput_per_watermark_state\": [\n    {}\n  ],\n  \"speculative_decode\": [\n    {}\n  ]\n}}\n",
             json_page_in.join(",\n    "),
             json_shift.join(",\n    "),
-            json_rounds.join(",\n    ")
+            json_rounds.join(",\n    "),
+            json_spec.join(",\n    ")
         );
         std::fs::write(&path, &json).unwrap_or_else(|e| panic!("write bench json to {path}: {e}"));
         println!("bench rows persisted to {path}");

@@ -156,6 +156,23 @@ impl KvCache {
         }
         self.evicted = 0;
     }
+
+    /// Roll the cache back to `pos` positions, dropping every later row in
+    /// every layer — the speculative-decode rollback
+    /// ([`crate::runtime::speculative`]): rows appended provisionally for
+    /// draft tokens that failed verification vanish, and the rows up to
+    /// `pos` are untouched (they were never rewritten, only appended past).
+    /// A `pos` at or beyond a layer's length is a no-op for that layer, so
+    /// truncating mid-step (layers one ahead) is safe.  Allocation is
+    /// capacity-based, so [`KvCache::bytes`] — and the serving KV gauge —
+    /// never move on rollback.
+    pub fn truncate_to(&mut self, pos: usize) {
+        for l in &mut self.layers {
+            if l.len > pos {
+                l.len = pos;
+            }
+        }
+    }
 }
 
 /// How a session turns a logits row into the next token.
@@ -240,16 +257,19 @@ pub fn sample_logits(logits: &[f32], sampling: &Sampling, rng: &mut Rng) -> (i32
 /// capacity are truncated to its first `seq_len` tokens, and an empty
 /// prompt is padded with token 0 — both mirroring the batch serving path.
 pub struct DecodeSession {
-    plan: Arc<ForwardPlan>,
-    cache: KvCache,
+    // pub(crate): `runtime::speculative` drives draft/verify/rollback
+    // directly on the cache, position, and logits row — state transitions
+    // plain `advance` cannot express.
+    pub(crate) plan: Arc<ForwardPlan>,
+    pub(crate) cache: KvCache,
     /// Next-token distribution (updated by prefill and every advance).
-    logits: Vec<f32>,
+    pub(crate) logits: Vec<f32>,
     /// Positions consumed so far (prompt + fed-back tokens).
-    pos: usize,
+    pub(crate) pos: usize,
     prompt_len: usize,
     sampling: Sampling,
     rng: Rng,
-    generated: Vec<i32>,
+    pub(crate) generated: Vec<i32>,
 }
 
 impl DecodeSession {
@@ -379,6 +399,23 @@ impl DecodeSession {
         self.pos < self.plan.dims.seq_len && self.cache.len() < self.cache.capacity()
     }
 
+    /// How this session samples — speculative scheduling is restricted to
+    /// greedy members (temperature streams take the plain batched path so
+    /// their seeded [`crate::data::Rng`] stream is never perturbed).
+    pub fn sampling(&self) -> Sampling {
+        self.sampling
+    }
+
+    /// The widest speculation window open right now: how many consecutive
+    /// positions (verify rows) fit before the position window or the KV
+    /// capacity closes.  0 when the session cannot advance at all; a window
+    /// below 2 makes speculation pointless (1 draft + its verify IS a plain
+    /// step).
+    pub fn spec_window(&self) -> usize {
+        (self.plan.dims.seq_len - self.pos.min(self.plan.dims.seq_len))
+            .min(self.cache.capacity() - self.cache.len().min(self.cache.capacity()))
+    }
+
     /// Sample the next token from the current logits (recorded in
     /// [`DecodeSession::generated`]).  Does not advance the model — feed
     /// the token back through [`DecodeSession::advance`] to get the
@@ -504,6 +541,33 @@ mod tests {
         c.clear();
         assert!(c.is_empty());
         assert_eq!(c.keys(0), &[] as &[f32]);
+    }
+
+    #[test]
+    fn truncate_to_rolls_back_rows_without_moving_bytes() {
+        let mut c = KvCache::new(2, 2, 4);
+        let bytes = c.bytes();
+        let rows: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32, -(i as f32)]).collect();
+        for r in &rows {
+            c.push(0, r, r);
+            c.push(1, r, r);
+        }
+        assert_eq!(c.len(), 4);
+        // Rollback drops the provisional tail; surviving rows are intact.
+        c.truncate_to(2);
+        assert_eq!(c.len(), 2);
+        assert_eq!(c.layer_len(0), 2);
+        assert_eq!(c.keys(0), &[0.0, -0.0, 1.0, -1.0]);
+        assert_eq!(c.bytes(), bytes, "capacity-based bytes must not move");
+        // Truncating past the length is a no-op; re-pushing after rollback
+        // appends at the rolled-back position.
+        c.truncate_to(10);
+        assert_eq!(c.len(), 2);
+        c.push(0, &rows[3], &rows[3]);
+        assert_eq!(c.layer_len(0), 3);
+        assert_eq!(&c.keys(0)[4..], &[3.0, -3.0]);
+        c.truncate_to(0);
+        assert!(c.is_empty());
     }
 
     #[test]

@@ -19,13 +19,21 @@
 //!   [`ForwardPlan::decode_step_batch`] advance many sessions per **step
 //!   round** with one blocked GEMM per layer — bit-identical to solo
 //!   stepping (`cargo test --test scheduler`).
+//! * [`speculative`] — **self-speculative decoding** over the same plans:
+//!   the low-bit MSB-prefix view drafts `k−1` tokens, ONE batched
+//!   target-precision window pass ([`ForwardPlan::decode_window_batch`])
+//!   verifies every position, the longest agreeing prefix commits, and
+//!   rejected K/V rows roll back via [`KvCache::truncate_to`].  Greedy
+//!   output stays bit-identical to plain decode; only throughput changes.
 //!
 //! ```text
 //!   WeightStore ─► ForwardPlan (cached per precision spec)
 //!                    ├─ forward()          batched conformance / eval
 //!                    ├─ prefill_batch()    ragged multi-sequence KV capture
-//!                    └─ decode_step_batch  ◄─ serve::Scheduler step rounds
-//!                         └─ DecodeSession (KvCache) ─► streamed tokens
+//!                    ├─ decode_step_batch  ◄─ serve::Scheduler step rounds
+//!                    │    └─ DecodeSession (KvCache) ─► streamed tokens
+//!                    └─ decode_window_batch ◄─ speculative_round
+//!                         (int2 draft ─► int8 verify ─► truncate_to)
 //! ```
 
 pub mod decode;
@@ -33,9 +41,11 @@ pub mod engine;
 pub mod forward;
 pub mod literal;
 pub mod plan;
+pub mod speculative;
 
 pub use decode::{advance_sessions, sample_logits, DecodeSession, KvCache, Sampling};
 pub use engine::Engine;
 pub use forward::{argmax_logit, ForwardWeights, HostForward};
 pub use literal::{lit_i32, lit_scalar_i32, lit_tensor, tensor_from_literal};
 pub use plan::{arc_packed, compose_per_layer, plan_params, ForwardPlan};
+pub use speculative::{speculative_round, SpecRound};

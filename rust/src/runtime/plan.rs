@@ -677,6 +677,180 @@ impl ForwardPlan {
         Ok(logits.to_vec())
     }
 
+    /// Advance `m` independent sequences **`k` consecutive positions each**
+    /// in one batched pass — the speculative-decode verify step
+    /// ([`crate::runtime::speculative`]).  `tokens` holds `m × k` rows
+    /// member-major (`tokens[i*k + j]` is member `i`'s token at position
+    /// `positions[i] + j`); every member's `k` K/V rows are appended to its
+    /// cache (provisionally — the caller rolls rejected rows back via
+    /// [`KvCache::truncate_to`]), and the returned buffer holds logits at
+    /// **every** window position (`m × k × vocab`, row-major).
+    ///
+    /// Attention is causal *within* the window: row `(i, j)` attends
+    /// `positions[i] + j + 1` cached rows, exactly the prefix a solo
+    /// [`ForwardPlan::decode_step`] at that position would see.  Every
+    /// linear and norm processes rows independently, so the window pass is
+    /// **bit-identical** to `k` sequential solo steps feeding the same
+    /// tokens — which is what makes speculative verification lossless.
+    /// With `k == 1` this is exactly [`ForwardPlan::decode_step_batch`].
+    pub fn decode_window_batch(
+        &self,
+        tokens: &[i32],
+        k: usize,
+        positions: &[usize],
+        caches: &mut [&mut KvCache],
+    ) -> Result<Vec<f32>> {
+        let m = positions.len();
+        let d = self.dims.d_model;
+        let v = self.dims.vocab;
+        let f = self.dims.d_ff;
+        let h = self.dims.n_heads;
+        let dh = d / h;
+        ensure!(m >= 1, "empty verify window");
+        ensure!(k >= 1, "zero-width verify window");
+        ensure!(
+            tokens.len() == m * k && caches.len() == m,
+            "verify window arity mismatch: {} tokens for {m} members × k={k}, {} caches",
+            tokens.len(),
+            caches.len()
+        );
+        for i in 0..m {
+            let pos = positions[i];
+            let cache = &caches[i];
+            for j in 0..k {
+                let token = tokens[i * k + j];
+                ensure!(
+                    token >= 0 && (token as usize) < v,
+                    "token {token} outside vocab [0, {v}) (member {i}, window row {j})"
+                );
+            }
+            let end = pos
+                .checked_add(k)
+                .ok_or_else(|| anyhow!("position overflow (member {i})"))?;
+            ensure!(
+                end <= self.dims.seq_len && self.pos.shape[0] >= end,
+                "window [{pos}, {end}) outside the learned position table (member {i})"
+            );
+            ensure!(
+                cache.n_layers() == self.dims.n_layers && cache.width() == d,
+                "KV cache shape mismatch: {} layers × width {}, plan wants {} × {d} (member {i})",
+                cache.n_layers(),
+                cache.width(),
+                self.dims.n_layers
+            );
+            ensure!(
+                cache.len() == pos,
+                "KV cache holds {} positions, verify window expected {pos} (member {i})",
+                cache.len()
+            );
+            ensure!(
+                cache.capacity() >= end,
+                "KV cache capacity {} cannot hold the verify window end {end} (member {i})",
+                cache.capacity()
+            );
+        }
+        let n = m * k;
+        let max_nk = positions.iter().map(|&p| p + k).max().unwrap_or(k);
+        let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
+        let int8 = self.int8;
+        let mut scratch = self.scratch.borrow_mut();
+        let s = &mut *scratch;
+        grow(&mut s.x, n * d);
+        grow(&mut s.norm, n * d);
+        grow(&mut s.qb, n * d);
+        grow(&mut s.kb, n * d);
+        grow(&mut s.vb, n * d);
+        grow(&mut s.attn, n * d);
+        grow(&mut s.proj, n * d);
+        grow(&mut s.mid, n * f);
+        grow(&mut s.scores, max_nk);
+        grow(&mut s.logits, n * v);
+        let PlanScratch {
+            x,
+            norm,
+            qb,
+            kb,
+            vb,
+            attn,
+            proj,
+            mid,
+            scores,
+            logits,
+            ..
+        } = s;
+        let x = &mut x[..n * d];
+        let norm = &mut norm[..n * d];
+        let qb = &mut qb[..n * d];
+        let kb = &mut kb[..n * d];
+        let vb = &mut vb[..n * d];
+        let attn = &mut attn[..n * d];
+        let proj = &mut proj[..n * d];
+        let mid = &mut mid[..n * f];
+        let logits = &mut logits[..n * v];
+
+        for i in 0..m {
+            for j in 0..k {
+                let r = i * k + j;
+                let tok = tokens[r] as usize;
+                let erow = &self.embed.data[tok * d..(tok + 1) * d];
+                let p = positions[i] + j;
+                let prow = &self.pos.data[p * d..(p + 1) * d];
+                let row = &mut x[r * d..(r + 1) * d];
+                for c in 0..d {
+                    row[c] = erow[c] + prow[c];
+                }
+            }
+        }
+        for (l, layer) in self.layers.iter().enumerate() {
+            rmsnorm_rows(x, &layer.ln1.data, d, norm)?;
+            layer.wq.apply(norm, n, int8.as_ref(), qb)?;
+            layer.wk.apply(norm, n, int8.as_ref(), kb)?;
+            layer.wv.apply(norm, n, int8.as_ref(), vb)?;
+            for (i, c) in caches.iter_mut().enumerate() {
+                for j in 0..k {
+                    let r = i * k + j;
+                    c.push(l, &kb[r * d..(r + 1) * d], &vb[r * d..(r + 1) * d]);
+                }
+            }
+            attn.fill(0.0);
+            for (i, c) in caches.iter().enumerate() {
+                for j in 0..k {
+                    // Causal in-window: row j sees the prefix THROUGH its
+                    // own position only, never its window successors.
+                    let nk = positions[i] + j + 1;
+                    for head in 0..h {
+                        let hoff = (i * k + j) * d + head * dh;
+                        kernels::attend_single_query(
+                            &qb[hoff..hoff + dh],
+                            c.keys(l),
+                            c.vals(l),
+                            nk,
+                            d,
+                            head * dh,
+                            inv_sqrt_dh,
+                            &mut scores[..nk],
+                            &mut attn[hoff..hoff + dh],
+                        );
+                    }
+                }
+            }
+            layer.wo.apply(attn, n, int8.as_ref(), proj)?;
+            for (xi, pi) in x.iter_mut().zip(proj.iter()) {
+                *xi += *pi;
+            }
+            rmsnorm_rows(x, &layer.ln2.data, d, norm)?;
+            layer.w_in.apply(norm, n, int8.as_ref(), mid)?;
+            gelu_inplace(mid);
+            layer.w_out.apply(mid, n, int8.as_ref(), proj)?;
+            for (xi, pi) in x.iter_mut().zip(proj.iter()) {
+                *xi += *pi;
+            }
+        }
+        rmsnorm_rows(x, &self.ln_f.data, d, norm)?;
+        self.head.apply(norm, n, int8.as_ref(), logits)?;
+        Ok(logits.to_vec())
+    }
+
     /// Calibrate per-layer activation clips under `cfg`: run the forward
     /// over calibration `tokens` on an **f32** plan, capturing for every
     /// packed op the worst-case (max over token rows) post-smoothing clip
@@ -1040,6 +1214,97 @@ mod tests {
             let c = cal.clip_for(qn).unwrap_or(0.0);
             assert!(c > 0.0, "{qn} got clip {c}");
         }
+    }
+
+    #[test]
+    fn decode_window_batch_bit_identical_to_sequential_steps() {
+        let (preset, model) = toy_transformer(dims(), 11);
+        let dims = preset.model.clone();
+        let prompts: [&[i32]; 2] = [&[1, 2, 3], &[4, 5]];
+        let window: [&[i32]; 2] = [&[7, 8, 9], &[11, 12, 13]];
+        let k = 3;
+        for bits in [2u32, 8] {
+            for int8 in [false, true] {
+                let cfg = int8.then(ActQuantConfig::absmax);
+                let plan =
+                    ForwardPlan::packed_uniform(&dims, &model, bits, false, cfg, None).unwrap();
+                let mut caches: Vec<KvCache> = prompts
+                    .iter()
+                    .map(|_| KvCache::new(dims.n_layers, dims.d_model, dims.seq_len))
+                    .collect();
+                for (p, c) in prompts.iter().zip(caches.iter_mut()) {
+                    plan.prefill(p, c).unwrap();
+                }
+                // Reference: k sequential solo decode steps per member.
+                let mut ref_caches = caches.clone();
+                let mut want: Vec<Vec<f32>> = Vec::new();
+                for (i, toks) in window.iter().enumerate() {
+                    for (j, &t) in toks.iter().enumerate() {
+                        want.push(
+                            plan.decode_step(t, prompts[i].len() + j, &mut ref_caches[i])
+                                .unwrap(),
+                        );
+                    }
+                }
+                // One batched verify window over both members.
+                let flat: Vec<i32> = window.iter().flat_map(|w| w.iter().copied()).collect();
+                let positions: Vec<usize> = prompts.iter().map(|p| p.len()).collect();
+                let rows = {
+                    let mut refs: Vec<&mut KvCache> = caches.iter_mut().collect();
+                    plan.decode_window_batch(&flat, k, &positions, &mut refs).unwrap()
+                };
+                let v = dims.vocab;
+                for (r, w) in want.iter().enumerate() {
+                    for (c, (g, e)) in rows[r * v..(r + 1) * v].iter().zip(w).enumerate() {
+                        assert_eq!(
+                            g.to_bits(),
+                            e.to_bits(),
+                            "bits={bits} i8={int8} window row {r} logit {c}"
+                        );
+                    }
+                }
+                // The provisional K/V rows match the sequential ones too.
+                for (i, (got, refc)) in caches.iter().zip(&ref_caches).enumerate() {
+                    for l in 0..dims.n_layers {
+                        assert_eq!(got.keys(l), refc.keys(l), "member {i} layer {l} keys");
+                        assert_eq!(got.vals(l), refc.vals(l), "member {i} layer {l} vals");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn decode_window_batch_rejects_malformed_windows() {
+        let (preset, model) = toy_transformer(dims(), 13);
+        let dims = preset.model.clone();
+        let plan = ForwardPlan::packed_uniform(&dims, &model, 4, false, None, None).unwrap();
+        let mut c = KvCache::new(dims.n_layers, dims.d_model, dims.seq_len);
+        plan.prefill(&[1, 2], &mut c).unwrap();
+        // window runs past the position table
+        let too_long: Vec<i32> = vec![1; dims.seq_len];
+        let err = {
+            let mut refs = [&mut c];
+            plan.decode_window_batch(&too_long, dims.seq_len, &[2], &mut refs)
+        };
+        assert!(err.is_err(), "window past seq_len must reject");
+        // arity mismatch
+        let err = {
+            let mut refs = [&mut c];
+            plan.decode_window_batch(&[1, 2, 3], 2, &[2], &mut refs)
+        };
+        assert!(err.is_err(), "token arity mismatch must reject");
+        // cache not at the expected position
+        let err = {
+            let mut refs = [&mut c];
+            plan.decode_window_batch(&[1, 2], 2, &[5], &mut refs)
+        };
+        assert!(err.is_err(), "cache/position mismatch must reject");
+        // a failed validation mutated nothing: the cache still prefix-holds
+        // the prompt and a correct window still runs
+        assert_eq!(c.len(), 2);
+        let mut refs = [&mut c];
+        assert!(plan.decode_window_batch(&[3, 4], 2, &[2], &mut refs).is_ok());
     }
 
     #[test]

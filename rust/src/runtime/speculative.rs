@@ -1,0 +1,409 @@
+//! Self-speculative decoding on the nested payload: the **int2 prefix
+//! drafts, the int8 payload verifies** — same weights, zero extra memory.
+//!
+//! The MatQuant storage structure makes a speculation scheme possible that
+//! ordinary draft-model speculation cannot match: every low-bit precision
+//! is an MSB-prefix bit-slice view of the one resident int8 payload
+//! ([`crate::serve::WeightStore`]), so the draft model is *free* — no
+//! second checkpoint, no extra weight bytes, guaranteed architectural
+//! agreement with the target.  A speculative round on a group of sessions:
+//!
+//! ```text
+//!   tokens[i] (committed)             k-1 draft steps        ONE verify pass
+//!   ───────────────►  draft plan (int2): argmax-chain   target plan (int8):
+//!                     d₁ … d₍k₋₁₎, K/V appended          decode_window_batch
+//!                     provisionally, then ROLLED BACK ──► logits at EVERY
+//!                     (KvCache::truncate_to)              window position
+//!
+//!   accept: longest prefix where the target's own greedy pick aᵢ equals
+//!   the draft's dᵢ₊₁; the first mismatch row still emits the target's
+//!   correction, then the rejected K/V tail rolls back.
+//! ```
+//!
+//! **Losslessness.** Greedy output is **bit-identical** to plain
+//! target-precision decode, by construction: window row `j`'s logits are
+//! computed by the target plan on the token sequence `t, d₁ … d_j`, and
+//! row `j` is only *used* when `d₁ … d_j` all equal the target's own greedy
+//! picks `a₀ … a_{j−1}` — i.e. when the sequence is exactly what a plain
+//! target decode would have fed.  A mismatch at row `j` discards every
+//! later row and emits row `j`'s own argmax (the target's correction), so
+//! at least one token is always emitted per round, and every emitted token
+//! is the target's.  The draft influences *throughput only* (accept rate),
+//! never answers — drafting even attends the target-precision K/V rows of
+//! verified positions (an approximation that again only moves the accept
+//! rate).  `cargo test --test scheduler` proves the bit-identity across
+//! draft/target pairs ± int8 activations, mid-stream elastic shifts
+//! included.
+//!
+//! **Failure containment.** Any error mid-round (draft or verify) rolls
+//! every member's cache back to its entry position and leaves `pos`,
+//! `logits`, and `generated` untouched, so the caller can rerun the round
+//! as a plain batched step — the same containment contract as
+//! [`crate::runtime::advance_sessions`].
+//!
+//! Temperature-sampled sessions are excluded by validation: their seeded
+//! [`crate::data::Rng`] stream must consume exactly one draw per emitted
+//! token, which speculation cannot guarantee cheaply — the scheduler routes
+//! them through the plain batched path instead (and a test asserts the
+//! `(seed, prompt, weights) → same text` invariant survives).
+
+use std::sync::Arc;
+
+use anyhow::ensure;
+
+use super::decode::{DecodeSession, KvCache, Sampling};
+use super::forward::argmax_logit;
+use super::plan::ForwardPlan;
+use crate::Result;
+
+/// What one speculative round did to one member.
+#[derive(Debug, Clone)]
+pub struct SpecRound {
+    /// Every token emitted this round, in stream order, with its logit
+    /// under the **target** plan — between 1 (first draft rejected) and
+    /// `k` (all drafts accepted + the bonus token from the last row).
+    pub emitted: Vec<(i32, f32)>,
+    /// Draft tokens proposed (`k − 1`).
+    pub drafted: usize,
+    /// Draft tokens the target's own greedy picks agreed with.
+    pub accepted: usize,
+}
+
+/// Run one speculative round over sessions that share a target plan:
+/// draft `k − 1` tokens per member with `draft` (batched, argmax-chained),
+/// roll the draft K/V rows back, verify all `k` window positions in ONE
+/// batched target pass ([`ForwardPlan::decode_window_batch`]), and commit
+/// the longest agreeing prefix per member.  `tokens[i]` is member `i`'s
+/// committed last token (the round's input, exactly as
+/// [`crate::runtime::advance_sessions`] takes it).
+///
+/// Every member must be greedy, share the one target plan, and have a
+/// [`DecodeSession::spec_window`] of at least `k`; `k == 1` degenerates to
+/// a plain (draft-free) batched step.  On success each member's `pos`,
+/// cache, logits row, and `generated` are exactly where a plain decode
+/// emitting the same tokens would have left them.  On error **no member
+/// state changes** (caches roll back, positions/logits/streams untouched)
+/// and the caller falls back to a plain round.
+pub fn speculative_round(
+    sessions: &mut [&mut DecodeSession],
+    draft: &Arc<ForwardPlan>,
+    tokens: &[i32],
+    k: usize,
+) -> Result<Vec<SpecRound>> {
+    let m = sessions.len();
+    ensure!(m >= 1, "empty speculative round");
+    ensure!(
+        tokens.len() == m,
+        "speculative round arity mismatch: {m} sessions, {} tokens",
+        tokens.len()
+    );
+    ensure!(k >= 1, "zero-width speculation window");
+    let target = sessions[0].plan.clone();
+    {
+        let (t, d) = (&target.dims, &draft.dims);
+        ensure!(
+            t.vocab == d.vocab
+                && t.d_model == d.d_model
+                && t.n_layers == d.n_layers
+                && t.n_heads == d.n_heads
+                && t.d_ff == d.d_ff
+                && t.seq_len == d.seq_len,
+            "draft plan geometry differs from the target"
+        );
+    }
+    for (i, s) in sessions.iter().enumerate() {
+        ensure!(
+            Arc::ptr_eq(&s.plan, &target),
+            "speculative round mixes target plans (member {i})"
+        );
+        ensure!(
+            matches!(s.sampling(), Sampling::Greedy),
+            "speculative round requires greedy members (member {i}) — \
+             temperature streams take the plain path"
+        );
+        ensure!(
+            s.spec_window() >= k,
+            "speculation window {k} exceeds member {i}'s open window {}",
+            s.spec_window()
+        );
+    }
+    let origins: Vec<usize> = sessions.iter().map(|s| s.pos).collect();
+    let v = target.dims.vocab;
+
+    // Draft phase: argmax-chain k−1 tokens per member with the draft plan,
+    // batched in lockstep.  Draft K/V rows land in the members' caches
+    // provisionally; drafting therefore attends the target-precision rows
+    // of all verified positions (and draft rows inside the window) — any
+    // numeric drift only lowers the accept rate, never correctness.
+    // `flat[i*k + j]` is member i's window token j (flat[i*k] = tokens[i]).
+    let mut flat = vec![0i32; m * k];
+    for (i, &t) in tokens.iter().enumerate() {
+        flat[i * k] = t;
+    }
+    let mut roll_all_back = |sessions: &mut [&mut DecodeSession]| {
+        for (s, &orig) in sessions.iter_mut().zip(&origins) {
+            s.cache.truncate_to(orig);
+        }
+    };
+    for j in 1..k {
+        let step_tokens: Vec<i32> = (0..m).map(|i| flat[i * k + j - 1]).collect();
+        let positions: Vec<usize> = origins.iter().map(|&p| p + j - 1).collect();
+        let stepped = {
+            let mut caches: Vec<&mut KvCache> =
+                sessions.iter_mut().map(|s| &mut s.cache).collect();
+            draft.decode_step_batch(&step_tokens, &positions, &mut caches)
+        };
+        let rows = match stepped {
+            Ok(r) => r,
+            Err(e) => {
+                roll_all_back(sessions);
+                return Err(e.context("speculative draft step"));
+            }
+        };
+        for i in 0..m {
+            flat[i * k + j] = argmax_logit(&rows[i * v..(i + 1) * v]).0;
+        }
+    }
+    // Rollback: the draft rows were scaffolding.  The verify pass below
+    // recomputes every window position's K/V at target precision.
+    roll_all_back(sessions);
+
+    // Verify: ONE batched target pass over all m×k window rows.
+    let verified = {
+        let mut caches: Vec<&mut KvCache> = sessions.iter_mut().map(|s| &mut s.cache).collect();
+        target.decode_window_batch(&flat, k, &origins, &mut caches)
+    };
+    let rows = match verified {
+        Ok(r) => r,
+        Err(e) => {
+            roll_all_back(sessions);
+            return Err(e.context("speculative verify pass"));
+        }
+    };
+
+    // Accept phase: per member, walk the window emitting the target's own
+    // greedy pick at every row until it disagrees with the next draft
+    // token; the disagreeing row's pick is the correction, everything
+    // after it rolls back.
+    let mut out = Vec::with_capacity(m);
+    for (i, s) in sessions.iter_mut().enumerate() {
+        let orig = origins[i];
+        let mut round = SpecRound {
+            emitted: Vec::new(),
+            drafted: k - 1,
+            accepted: 0,
+        };
+        for j in 0..k {
+            let row = &rows[(i * k + j) * v..(i * k + j + 1) * v];
+            let (tok, logit) = argmax_logit(row);
+            s.generated.push(tok);
+            round.emitted.push((tok, logit));
+            let all_consumed = j + 1 == k;
+            if all_consumed || tok != flat[i * k + j + 1] {
+                // Window rows 0..=j consumed valid tokens (flat[0] is the
+                // committed input; drafts 1..=j each matched the previous
+                // row's pick) — keep exactly those j+1 K/V rows.
+                if !all_consumed {
+                    s.cache.truncate_to(orig + j + 1);
+                }
+                s.pos = orig + j + 1;
+                s.logits.clear();
+                s.logits.extend_from_slice(row);
+                break;
+            }
+            round.accepted += 1;
+        }
+        out.push(round);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::ModelDims;
+    use crate::model::testing::toy_transformer;
+    use crate::runtime::Sampling;
+
+    fn dims() -> ModelDims {
+        ModelDims {
+            vocab: 40,
+            d_model: 24,
+            n_layers: 2,
+            n_heads: 3,
+            d_ff: 48,
+            seq_len: 16,
+            quantize_attn: false,
+        }
+    }
+
+    /// Greedy-decode `n` tokens solo on `plan` — the reference stream.
+    fn plain_stream(plan: &Arc<ForwardPlan>, prompt: &[i32], n: usize) -> Vec<i32> {
+        let mut s = DecodeSession::with_budget(plan.clone(), prompt, Sampling::Greedy, n).unwrap();
+        let mut left = n;
+        loop {
+            let (tok, _) = s.sample();
+            left -= 1;
+            if left == 0 || !s.can_advance() {
+                break;
+            }
+            s.advance(tok).unwrap();
+        }
+        s.generated().to_vec()
+    }
+
+    /// Greedy-decode `n` tokens via speculative rounds (draft plan at
+    /// `draft_bits`), asserting per-round invariants along the way.
+    fn spec_stream(
+        target: &Arc<ForwardPlan>,
+        draft: &Arc<ForwardPlan>,
+        prompt: &[i32],
+        n: usize,
+        k: usize,
+    ) -> Vec<i32> {
+        let mut s =
+            DecodeSession::with_budget(target.clone(), prompt, Sampling::Greedy, n + k).unwrap();
+        let (mut last, _) = s.sample();
+        let mut emitted = 1usize;
+        while emitted < n && s.can_advance() {
+            let k_eff = k.min(s.spec_window()).min(n - emitted).max(1);
+            let rounds = {
+                let mut refs = [&mut s];
+                speculative_round(&mut refs, draft, &[last], k_eff).unwrap()
+            };
+            let r = &rounds[0];
+            assert!(!r.emitted.is_empty(), "a round must emit at least once");
+            assert!(r.emitted.len() <= k_eff);
+            assert_eq!(r.drafted, k_eff - 1);
+            assert!(r.accepted <= r.drafted);
+            // Post-round consistency: cache tracks pos, window reopens.
+            assert_eq!(s.cache.len(), s.pos);
+            emitted += r.emitted.len();
+            last = r.emitted.last().unwrap().0;
+        }
+        s.generated().to_vec()
+    }
+
+    #[test]
+    fn speculative_stream_bit_identical_to_plain_greedy() {
+        let (preset, model) = toy_transformer(dims(), 21);
+        let target =
+            ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+        let draft =
+            ForwardPlan::packed_uniform(&preset.model, &model, 2, false, None, None).unwrap();
+        for k in [2usize, 3, 4] {
+            for prompt in [&[1i32, 2, 3][..], &[7][..]] {
+                let n = 10;
+                let want = plain_stream(&target, prompt, n);
+                let got = spec_stream(&target, &draft, prompt, n, k);
+                assert_eq!(got[..n.min(got.len())], want[..n.min(want.len())],
+                    "k={k} prompt={prompt:?}: speculative stream diverged");
+            }
+        }
+    }
+
+    #[test]
+    fn self_speculation_accepts_everything() {
+        // Draft == target: every draft matches, so each round emits k
+        // tokens and accepts k−1 drafts — the accept-rate ceiling.
+        let (preset, model) = toy_transformer(dims(), 23);
+        let plan =
+            ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+        let mut s =
+            DecodeSession::with_budget(plan.clone(), &[1, 2], Sampling::Greedy, 12).unwrap();
+        let (last, _) = s.sample();
+        let rounds = {
+            let mut refs = [&mut s];
+            speculative_round(&mut refs, &plan, &[last], 4).unwrap()
+        };
+        assert_eq!(rounds[0].drafted, 3);
+        assert_eq!(rounds[0].accepted, 3, "identical draft must fully accept");
+        assert_eq!(rounds[0].emitted.len(), 4);
+    }
+
+    #[test]
+    fn speculative_round_validates_and_contains_failures() {
+        let (preset, model) = toy_transformer(dims(), 25);
+        let target =
+            ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+        let draft =
+            ForwardPlan::packed_uniform(&preset.model, &model, 2, false, None, None).unwrap();
+        // Temperature members must be rejected (their Rng stream is sacred).
+        let mut t = DecodeSession::with_budget(
+            target.clone(),
+            &[1, 2],
+            Sampling::Temperature { temp: 0.8, seed: 3 },
+            6,
+        )
+        .unwrap();
+        let (last, _) = t.sample();
+        let err = {
+            let mut refs = [&mut t];
+            speculative_round(&mut refs, &draft, &[last], 2)
+        };
+        assert!(err.is_err(), "temperature member must reject");
+        // A window wider than the open window must reject without mutating.
+        let mut g =
+            DecodeSession::with_budget(target.clone(), &[1, 2, 3], Sampling::Greedy, 4).unwrap();
+        let (last, _) = g.sample();
+        let (pos0, len0, gen0) = (g.positions(), g.cache.len(), g.generated().len());
+        let window = g.spec_window();
+        let err = {
+            let mut refs = [&mut g];
+            speculative_round(&mut refs, &draft, &[last], window + 1)
+        };
+        assert!(err.is_err(), "oversized window must reject");
+        assert_eq!(
+            (g.positions(), g.cache.len(), g.generated().len()),
+            (pos0, len0, gen0),
+            "failed round must not move member state"
+        );
+        // …and the member still speculates fine afterwards.
+        let ok = {
+            let mut refs = [&mut g];
+            speculative_round(&mut refs, &draft, &[last], window.min(2))
+        };
+        assert!(ok.is_ok());
+    }
+
+    #[test]
+    fn batched_speculative_round_matches_solo_rounds() {
+        let (preset, model) = toy_transformer(dims(), 27);
+        let target =
+            ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+        let draft =
+            ForwardPlan::packed_uniform(&preset.model, &model, 2, false, None, None).unwrap();
+        let prompts: [&[i32]; 3] = [&[1, 2, 3], &[9, 8], &[5]];
+        let k = 3;
+        // Solo references.
+        let mut solo_rounds = Vec::new();
+        for p in prompts {
+            let mut s =
+                DecodeSession::with_budget(target.clone(), p, Sampling::Greedy, 8).unwrap();
+            let (last, _) = s.sample();
+            let r = {
+                let mut refs = [&mut s];
+                speculative_round(&mut refs, &draft, &[last], k).unwrap()
+            };
+            solo_rounds.push((r[0].emitted.clone(), s.positions(), s.generated().to_vec()));
+        }
+        // One batched round over all three.
+        let specs: Vec<(&[i32], Sampling, usize)> =
+            prompts.iter().map(|p| (*p, Sampling::Greedy, 8)).collect();
+        let mut sessions = DecodeSession::prefill_many(&target, &specs).unwrap();
+        let tokens: Vec<i32> = sessions.iter_mut().map(|s| s.sample().0).collect();
+        let rounds = {
+            let mut refs: Vec<&mut DecodeSession> = sessions.iter_mut().collect();
+            speculative_round(&mut refs, &draft, &tokens, k).unwrap()
+        };
+        for (i, (want_emitted, want_pos, want_gen)) in solo_rounds.iter().enumerate() {
+            let got: Vec<(i32, u32)> =
+                rounds[i].emitted.iter().map(|&(t, l)| (t, l.to_bits())).collect();
+            let want: Vec<(i32, u32)> =
+                want_emitted.iter().map(|&(t, l)| (t, l.to_bits())).collect();
+            assert_eq!(got, want, "member {i}: batched round != solo round");
+            assert_eq!(sessions[i].positions(), *want_pos, "member {i} pos");
+            assert_eq!(sessions[i].generated(), want_gen.as_slice(), "member {i} stream");
+        }
+    }
+}

@@ -44,6 +44,18 @@ pub struct Metrics {
     /// so this line is directly comparable with solo per-session stepping
     /// (the batched-vs-solo step latency the rounds exist to shrink).
     decode_step_ms: BTreeMap<u32, (u64, f64)>,
+    /// Raw per-step decode latency samples, per precision — the
+    /// distribution behind [`Metrics::decode_percentile`].  Each sample is
+    /// the cost of ONE step (a member's share of its round), never a
+    /// stream-age figure: recording `enq.elapsed()` here once made decode
+    /// percentiles climb with stream lifetime instead of step cost.
+    decode_lat: BTreeMap<u32, Vec<f64>>,
+    /// Self-speculative rounds: target precision → (rounds, drafted,
+    /// accepted, emitted).  `accepted / drafted` is the draft accept rate
+    /// (how often the low-bit MSB-prefix view agrees with its own int8
+    /// payload); `emitted / rounds` is tokens per round, the speculation
+    /// speedup over plain decode's fixed 1 token/round.
+    spec: BTreeMap<u32, (u64, u64, u64, u64)>,
     /// Scheduler **step rounds**: precision → (rounds, member-steps, total
     /// ms, weight bytes streamed).  One round = one blocked fused GEMM
     /// sweep per layer across every live session of the precision group —
@@ -84,6 +96,8 @@ impl Default for Metrics {
             matmul_ms: BTreeMap::new(),
             prefill_ms: BTreeMap::new(),
             decode_step_ms: BTreeMap::new(),
+            decode_lat: BTreeMap::new(),
+            spec: BTreeMap::new(),
             round_ms: BTreeMap::new(),
             kv_bytes: 0,
             shifts: (0, 0),
@@ -152,6 +166,63 @@ impl Metrics {
         let e = self.decode_step_ms.entry(bits).or_insert((0, 0.0));
         e.0 += 1;
         e.1 += ms;
+        self.decode_lat.entry(bits).or_default().push(ms);
+    }
+
+    /// Percentile of per-step decode latency at `bits` (0 if no steps ran).
+    /// Step samples, not stream ages: a long-lived stream contributes many
+    /// small samples, so its p50 stays flat as it ages.
+    pub fn decode_percentile(&self, bits: u32, p: f64) -> f64 {
+        let Some(samples) = self.decode_lat.get(&bits) else {
+            return 0.0;
+        };
+        if samples.is_empty() {
+            return 0.0;
+        }
+        let mut v = samples.clone();
+        v.sort_by(|a, b| a.total_cmp(b));
+        let idx = ((v.len() as f64 - 1.0) * p / 100.0).round() as usize;
+        v[idx]
+    }
+
+    /// One self-speculative round at target precision `bits`: the draft
+    /// rung proposed `drafted` tokens (k−1 per member, summed), the target
+    /// accepted `accepted` of them, and `emitted` tokens reached streams
+    /// (accepted + one target pick per member).
+    pub fn record_spec_round(&mut self, bits: u32, drafted: u64, accepted: u64, emitted: u64) {
+        let e = self.spec.entry(bits).or_insert((0, 0, 0, 0));
+        e.0 += 1;
+        e.1 += drafted;
+        e.2 += accepted;
+        e.3 += emitted;
+    }
+
+    /// Speculative rounds run at target precision `bits`.
+    pub fn spec_rounds(&self, bits: u32) -> u64 {
+        self.spec.get(&bits).map_or(0, |e| e.0)
+    }
+
+    /// Draft accept rate at target precision `bits` (0 if nothing drafted):
+    /// the fraction of low-bit draft proposals the full payload agreed with.
+    pub fn spec_accept_rate(&self, bits: u32) -> f64 {
+        match self.spec.get(&bits) {
+            Some((_, d, a, _)) if *d > 0 => *a as f64 / *d as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Tokens emitted per speculative round at `bits` (plain decode = 1.0;
+    /// anything above is the speculation win).  0 if no rounds ran.
+    pub fn spec_tokens_per_round(&self, bits: u32) -> f64 {
+        match self.spec.get(&bits) {
+            Some((r, _, _, e)) if *r > 0 => *e as f64 / *r as f64,
+            _ => 0.0,
+        }
+    }
+
+    /// Tokens emitted by speculative rounds at `bits`.
+    pub fn spec_emitted(&self, bits: u32) -> u64 {
+        self.spec.get(&bits).map_or(0, |e| e.3)
     }
 
     /// One scheduler step round completed at `bits`: `members` sessions
@@ -374,8 +445,19 @@ impl Metrics {
                 )
             })
             .collect();
+        let spec: Vec<String> = self
+            .spec
+            .iter()
+            .map(|(b, (r, d, a, e))| {
+                format!(
+                    "int{b}:{r}x acc:{:.2} tok/rnd:{:.2}",
+                    if *d > 0 { *a as f64 / *d as f64 } else { 0.0 },
+                    *e as f64 / (*r).max(1) as f64
+                )
+            })
+            .collect();
         format!(
-            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}] prefill=[{}] decode=[{}] rounds=[{}] rounds_per_s={:.1} kv_bytes={} shifts=[down:{} up:{} moved:{} saved:{}B occ:{:.1}]",
+            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}] prefill=[{}] decode=[{}] rounds=[{}] rounds_per_s={:.1} kv_bytes={} shifts=[down:{} up:{} moved:{} saved:{}B occ:{:.1}] spec=[{}]",
             self.requests,
             self.batches,
             self.percentile(50.0),
@@ -395,7 +477,8 @@ impl Metrics {
             self.shifts.1,
             self.shift_moved,
             self.shift_saved_bytes,
-            self.mean_post_shift_occupancy()
+            self.mean_post_shift_occupancy(),
+            spec.join(" ")
         )
     }
 }
@@ -524,6 +607,40 @@ mod tests {
             r.contains("shifts=[down:2 up:1 moved:8 saved:1536B occ:3.0]"),
             "{r}"
         );
+    }
+
+    #[test]
+    fn spec_counters_and_report_segment() {
+        let mut m = Metrics::default();
+        assert_eq!(m.spec_rounds(8), 0);
+        assert_eq!(m.spec_accept_rate(8), 0.0);
+        assert_eq!(m.spec_tokens_per_round(8), 0.0);
+        // Round 1: one member, k=4 → 3 drafted, 3 accepted, 4 emitted.
+        m.record_spec_round(8, 3, 3, 4);
+        // Round 2: first draft rejected → 3 drafted, 0 accepted, 1 emitted.
+        m.record_spec_round(8, 3, 0, 1);
+        assert_eq!(m.spec_rounds(8), 2);
+        assert_eq!(m.spec_emitted(8), 5);
+        assert_eq!(m.spec_accept_rate(8), 0.5);
+        assert_eq!(m.spec_tokens_per_round(8), 2.5);
+        let r = m.report();
+        assert!(r.contains("spec=[int8:2x acc:0.50 tok/rnd:2.50]"), "{r}");
+    }
+
+    #[test]
+    fn decode_percentile_tracks_step_cost_not_stream_age() {
+        let mut m = Metrics::default();
+        assert_eq!(m.decode_percentile(4, 50.0), 0.0);
+        // A long-lived stream: 100 cheap steps.  Were the metric fed
+        // stream age (enq.elapsed), the samples would climb 1,2,3,…,100
+        // and p50 would read ~50; per-step cost keeps it flat.
+        for _ in 0..100 {
+            m.record_decode_step(4, 0.5);
+        }
+        assert_eq!(m.decode_percentile(4, 50.0), 0.5);
+        assert_eq!(m.decode_percentile(4, 99.0), 0.5);
+        m.record_decode_step(4, 2.0);
+        assert!(m.decode_percentile(4, 50.0) < 1.0);
     }
 
     #[test]

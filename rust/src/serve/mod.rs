@@ -45,6 +45,17 @@
 //!     sessions shift back up to their native precision.  Because every
 //!     precision is an MSB-prefix view of the one nested payload, the
 //!     shift pages in zero new weight bytes when the master is resident.
+//!
+//!   Self-speculative decode (ServerConfig { speculative }): greedy
+//!     streams in uniform packed groups draft k−1 tokens per round with
+//!     the low-bit MSB-prefix rung of their OWN payload (int2 by
+//!     default — a free draft model, zero extra weight bytes), verify the
+//!     whole window in one batched target-precision pass, commit the
+//!     longest agreeing prefix, and roll rejected K/V rows back
+//!     (KvCache::truncate_to).  Emitted tokens are bit-identical to plain
+//!     decode; accept-rate and tokens/round land in Metrics::report
+//!     (`spec=[...]`).  The elastic planner pauses speculation while a
+//!     high watermark is breached (draft slots cost KV headroom).
 //! ```
 
 pub mod batcher;
@@ -64,7 +75,7 @@ pub use request::{PrecisionReq, Request, Response};
 pub use scheduler::{
     projected_kv_bytes, RoundOutcome, Scheduler, SchedulerConfig, ShiftReport, UniformGroupLoad,
 };
-pub use server::{Server, ServerConfig};
+pub use server::{Server, ServerConfig, SpeculativeConfig};
 pub use weights::{PlanKey, WeightSet, WeightStore};
 
 // Generation-parameter types live with the decode engine; re-exported here

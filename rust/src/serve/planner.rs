@@ -204,6 +204,18 @@ impl ElasticPlanner {
     pub fn note_shift(&mut self, round: u64) {
         self.last_shift_round = Some(round);
     }
+
+    /// Whether self-speculative decode may run under the observed load:
+    /// only strictly below BOTH high watermarks.  Speculation spends
+    /// exactly what a breached watermark says is exhausted — `k`
+    /// provisional KV rows per member and extra draft compute — so the
+    /// serving worker suspends it the moment a downshift would be on the
+    /// table ([`crate::serve::Scheduler::suspend_speculation`]).  No
+    /// cooldown or hysteresis here: suspension is a pause, not a shift,
+    /// and may flap freely with the load.
+    pub fn speculation_allowed(&self, kv_bytes: u64, queue_depth: usize) -> bool {
+        kv_bytes < self.cfg.kv_high_bytes && queue_depth < self.cfg.queue_high
+    }
 }
 
 #[cfg(test)]
@@ -309,6 +321,18 @@ mod tests {
             assert_eq!(p.decide(r, 5000, 0), None, "round {r} inside cooldown");
         }
         assert_eq!(p.decide(14, 5000, 0), Some(ShiftDirection::Down));
+    }
+
+    #[test]
+    fn speculation_gated_by_high_watermarks() {
+        let p = ElasticPlanner::new(elastic_cfg());
+        assert!(p.speculation_allowed(0, 0));
+        assert!(p.speculation_allowed(999, 7), "just under both marks");
+        assert!(!p.speculation_allowed(1000, 0), "KV at the high mark");
+        assert!(!p.speculation_allowed(0, 8), "queue at the high mark");
+        // The hysteresis band suppresses SHIFTS but not speculation — a
+        // pause is free to flap with the load.
+        assert!(p.speculation_allowed(500, 4));
     }
 
     #[test]

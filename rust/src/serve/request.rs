@@ -98,6 +98,12 @@ impl Request {
 /// carries `done = true` and the complete `tokens` vector.
 /// [`crate::serve::Server::infer`] drains to the final event for callers
 /// who only want the finished result.
+///
+/// Under self-speculative serving ([`crate::serve::SpeculativeConfig`])
+/// one scheduler round may deliver several of these at once — the tokens
+/// a verify window accepted — with `compute_ms` the round's per-token
+/// share.  The events themselves are indistinguishable from plain
+/// decode's: same tokens, same logits, one event per token.
 #[derive(Debug, Clone)]
 pub struct Response {
     pub id: u64,

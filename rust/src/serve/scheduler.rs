@@ -51,6 +51,20 @@
 //!   geometry-checked ([`DecodeSession::switch_plan`]) and keeps its KV
 //!   rows, so a shift costs no recompute — and, because every precision is
 //!   an MSB-prefix view of the one nested payload, no new weight bytes.
+//! * **Self-speculative rounds** ([`Scheduler::set_speculation`] →
+//!   [`crate::runtime::speculative_round`]): a configured group's greedy
+//!   members draft `k−1` tokens per round with the low-bit MSB-prefix
+//!   rung of their own payload, verify the whole window in ONE batched
+//!   target pass, commit the longest agreeing prefix, and roll rejected
+//!   K/V rows back ([`crate::runtime::KvCache::truncate_to`]).  Emitted
+//!   streams stay bit-identical to plain decode — only tokens/round moves
+//!   (`spec=[...]` in [`Metrics::report`]).  Windows are atomic within a
+//!   round, so elastic shifts never land mid-speculation; the planner
+//!   suspends speculation entirely while a high watermark is breached
+//!   ([`Scheduler::suspend_speculation`]) because draft slots cost `k`
+//!   provisional KV rows per member (projected at admission by
+//!   [`projected_kv_bytes`]).  Temperature streams always take the plain
+//!   path so their seeded sampling never perturbs.
 //!
 //! The scheduler is deliberately free of channels and threads: the serving
 //! worker ([`crate::serve::Server::start_host`]) owns it and calls
@@ -67,21 +81,31 @@ use super::metrics::Metrics;
 use super::request::{Request, Response};
 use super::weights::PlanKey;
 use crate::model::manifest::ModelDims;
-use crate::runtime::{advance_sessions, DecodeSession, ForwardPlan};
+use crate::runtime::{advance_sessions, speculative_round, DecodeSession, ForwardPlan, Sampling};
 
 /// Projected resident KV bytes for one request's session — mirrors
 /// [`DecodeSession::with_budget`]'s cache sizing exactly (prompt +
 /// max_new − 1 positions, clamped to the model window, full-position
-/// rows across every layer's K and V pages).  Admission holds the
-/// [`SchedulerConfig::kv_capacity_bytes`] budget against this figure, and
-/// the server rejects at submit any request whose projection exceeds the
-/// budget **on its own** — such a request could never be admitted and
-/// would otherwise sit deferred forever.
-pub fn projected_kv_bytes(dims: &ModelDims, prompt_len: usize, max_new_tokens: usize) -> u64 {
+/// rows across every layer's K and V pages).  `spec_slots` is the `k`
+/// provisional positions a self-speculative group's sessions additionally
+/// reserve (the verify window's K/V rows exist before acceptance decides
+/// their fate, so admission must hold budget for them up front) — 0 for a
+/// plain group.  Admission holds the [`SchedulerConfig::kv_capacity_bytes`]
+/// budget against this figure, and the server rejects at submit any
+/// request whose projection exceeds the budget **on its own** — such a
+/// request could never be admitted and would otherwise sit deferred
+/// forever.
+pub fn projected_kv_bytes(
+    dims: &ModelDims,
+    prompt_len: usize,
+    max_new_tokens: usize,
+    spec_slots: usize,
+) -> u64 {
     let seq = dims.seq_len;
     let prompt = prompt_len.clamp(1, seq);
     let capacity = prompt
         .saturating_add(max_new_tokens.saturating_sub(1))
+        .saturating_add(spec_slots)
         .min(seq);
     (dims.n_layers * 2 * capacity * dims.d_model * 4) as u64
 }
@@ -192,10 +216,28 @@ pub struct UniformGroupLoad {
     pub pending: usize,
 }
 
+/// Self-speculative configuration for one target group: the draft-rung
+/// plan (an MSB-prefix view of the same payload), its width, and the
+/// verify-window size `k`.
+struct SpecPlan {
+    draft: Arc<ForwardPlan>,
+    draft_bits: u32,
+    k: usize,
+}
+
 /// The continuous-batching engine (see the module docs).
 pub struct Scheduler {
     cfg: SchedulerConfig,
     groups: BTreeMap<PlanKey, Group>,
+    /// Self-speculative decode per target group
+    /// ([`Scheduler::set_speculation`]): greedy members of a configured
+    /// group run draft/verify rounds instead of plain single-token steps.
+    spec: BTreeMap<PlanKey, SpecPlan>,
+    /// Pause switch ([`Scheduler::suspend_speculation`]) — the elastic
+    /// planner flips it under KV/queue pressure, because a speculative
+    /// round holds `k` provisional K/V rows per member and drafts cost
+    /// extra compute that pressure rounds cannot spare.
+    spec_suspended: bool,
     /// Monotone round counter — rotates the admission starting group.
     round: u64,
 }
@@ -205,7 +247,61 @@ impl Scheduler {
         Scheduler {
             cfg,
             groups: BTreeMap::new(),
+            spec: BTreeMap::new(),
+            spec_suspended: false,
             round: 0,
+        }
+    }
+
+    /// Enable self-speculative decode for the target group `key`: greedy
+    /// members draft `k − 1` tokens per round with `draft` (the
+    /// `draft_bits` MSB-prefix rung of the same nested payload) and verify
+    /// the whole window in one batched target pass.  `k < 2` clears the
+    /// entry instead (a 1-wide window IS plain decode).  Temperature
+    /// members of the group always take the plain path — their seeded
+    /// `Rng` stream must consume exactly one draw per emitted token.
+    pub fn set_speculation(&mut self, key: PlanKey, draft: Arc<ForwardPlan>, draft_bits: u32, k: usize) {
+        if k >= 2 {
+            self.spec.insert(
+                key,
+                SpecPlan {
+                    draft,
+                    draft_bits,
+                    k,
+                },
+            );
+        } else {
+            self.spec.remove(&key);
+        }
+    }
+
+    /// Drop the speculative configuration for `key` (members fall back to
+    /// plain rounds from the next round on; no in-flight state to unwind —
+    /// speculation windows are atomic within a round).
+    pub fn clear_speculation(&mut self, key: &PlanKey) {
+        self.spec.remove(key);
+    }
+
+    /// Pause (`true`) or resume (`false`) all speculative decode without
+    /// dropping the per-group configuration — the elastic planner's lever
+    /// while a watermark is breached.
+    pub fn suspend_speculation(&mut self, suspend: bool) {
+        self.spec_suspended = suspend;
+    }
+
+    /// Whether speculation is currently paused.
+    pub fn speculation_suspended(&self) -> bool {
+        self.spec_suspended
+    }
+
+    /// The provisional draft slots (`k`) admission must reserve for a
+    /// request joining group `key` — 0 when the group does not speculate
+    /// or the request samples with temperature (temperature streams never
+    /// enter a speculation window).
+    fn spec_slots(&self, key: &PlanKey, sampling: &Sampling) -> usize {
+        match (self.spec.get(key), sampling) {
+            (Some(sp), Sampling::Greedy) => sp.k,
+            _ => 0,
         }
     }
 
@@ -516,88 +612,267 @@ impl Scheduler {
     }
 
     /// Decode phase: one batched step round per group with live members.
+    ///
+    /// A group with a speculative configuration splits its members per
+    /// round: greedy members whose stream can still absorb a ≥2-token
+    /// window run ONE [`speculative_round`] at the common window width
+    /// (the minimum of every eligible member's open window, remaining
+    /// budget, and the configured `k` — windows are atomic, so elastic
+    /// shifts, which run between rounds, can never land mid-window);
+    /// everyone else — temperature streams, members on their last token —
+    /// takes the plain batched step.  A failed speculative round rolls
+    /// back completely ([`speculative_round`]'s containment contract) and
+    /// its members re-run in the plain step, so speculation can slow a
+    /// round but never lose one.
     fn step_groups(
         &mut self,
         metrics: &mut Metrics,
         sink: &mut dyn FnMut(u64, Response) -> bool,
         out: &mut RoundOutcome,
     ) {
-        for g in self.groups.values_mut() {
+        for (key, g) in self.groups.iter_mut() {
             if g.live.is_empty() {
                 continue;
             }
-            let m = g.live.len();
-            let tokens: Vec<i32> = g.live.iter().map(|l| l.last).collect();
-            let t0 = Instant::now();
-            let stepped = {
-                let mut refs: Vec<&mut DecodeSession> =
-                    g.live.iter_mut().map(|l| &mut l.session).collect();
-                advance_sessions(&mut refs, &tokens)
+            // Partition: which members speculate this round, and how wide.
+            let mut spec_mask = vec![false; g.live.len()];
+            let mut k_eff = 0usize;
+            let sp = if self.spec_suspended {
+                None
+            } else {
+                self.spec.get(key)
             };
-            match stepped {
-                Ok(()) => {
-                    let round_ms = t0.elapsed().as_secs_f64() * 1e3;
-                    metrics.record_round(g.bits, m, round_ms, g.plan.weight_bytes() as u64);
-                    out.stepped += m;
-                    let share = round_ms / m as f64;
-                    let mut i = 0;
-                    while i < g.live.len() {
-                        metrics.record_decode_step(g.bits, share);
-                        let fate = Self::emit_sampled(
-                            g.bits,
-                            g.int8,
-                            &mut g.live[i],
-                            share,
-                            metrics,
-                            sink,
-                        );
-                        match fate {
-                            Fate::Alive => i += 1,
-                            Fate::Retire => {
-                                g.live.remove(i);
+            if let Some(sp) = sp {
+                k_eff = sp.k;
+                let mut any = false;
+                for (i, l) in g.live.iter().enumerate() {
+                    let w = sp.k.min(l.remaining).min(l.session.spec_window());
+                    if matches!(l.session.sampling(), Sampling::Greedy) && w >= 2 {
+                        spec_mask[i] = true;
+                        k_eff = k_eff.min(w);
+                        any = true;
+                    }
+                }
+                if !any || k_eff < 2 {
+                    spec_mask.iter_mut().for_each(|b| *b = false);
+                    k_eff = 0;
+                }
+            }
+            // Retirement is deferred to one sweep so the two sub-rounds
+            // never invalidate each other's member indices.
+            let mut retire = vec![false; g.live.len()];
+
+            // Speculative sub-round.
+            if k_eff >= 2 {
+                let sp = sp.expect("spec config checked above");
+                let draft = sp.draft.clone();
+                let draft_bits = sp.draft_bits;
+                let tokens: Vec<i32> = g
+                    .live
+                    .iter()
+                    .zip(&spec_mask)
+                    .filter(|(_, &m)| m)
+                    .map(|(l, _)| l.last)
+                    .collect();
+                let t0 = Instant::now();
+                let res = {
+                    let mut refs: Vec<&mut DecodeSession> = g
+                        .live
+                        .iter_mut()
+                        .zip(&spec_mask)
+                        .filter(|(_, &m)| m)
+                        .map(|(l, _)| &mut l.session)
+                        .collect();
+                    speculative_round(&mut refs, &draft, &tokens, k_eff)
+                };
+                match res {
+                    Ok(rounds) => {
+                        let round_ms = t0.elapsed().as_secs_f64() * 1e3;
+                        let members = rounds.len();
+                        let emitted: usize = rounds.iter().map(|r| r.emitted.len()).sum();
+                        let drafted: u64 = rounds.iter().map(|r| r.drafted as u64).sum();
+                        let accepted: u64 = rounds.iter().map(|r| r.accepted as u64).sum();
+                        // Bytes streamed this round: the draft payload once
+                        // per draft step plus the target payload once for
+                        // the batched verify — the figure that makes the
+                        // draft/verify cost comparable in operand bytes.
+                        let bytes = g.plan.weight_bytes() as u64
+                            + (k_eff as u64 - 1) * draft.weight_bytes() as u64;
+                        metrics.record_round(g.bits, members, round_ms, bytes);
+                        metrics.record_spec_round(g.bits, drafted, accepted, emitted as u64);
+                        out.stepped += members;
+                        // Per-token share: a speculative round's cost
+                        // amortizes over every token it emitted.
+                        let share = round_ms / emitted.max(1) as f64;
+                        let mut ri = 0usize;
+                        for (i, l) in g.live.iter_mut().enumerate() {
+                            if !spec_mask[i] {
+                                continue;
+                            }
+                            let r = &rounds[ri];
+                            ri += 1;
+                            for _ in 0..r.emitted.len() {
+                                metrics.record_decode_step(g.bits, share);
+                            }
+                            if let Fate::Retire =
+                                Self::emit_spec(g.bits, g.int8, l, &r.emitted, share, metrics, sink)
+                            {
+                                retire[i] = true;
                             }
                         }
                     }
+                    Err(e) => {
+                        // Containment: the round rolled itself back — the
+                        // members are exactly where they started, so they
+                        // simply join this round's plain step below.
+                        eprintln!(
+                            "serve scheduler: int{draft_bits}-draft/int{} speculative round failed ({e:#}); falling back to plain",
+                            g.bits
+                        );
+                        spec_mask.iter_mut().for_each(|b| *b = false);
+                    }
                 }
-                Err(e) => {
-                    // Containment: a member that cannot step (validated
-                    // away in normal operation) must not stall the round's
-                    // other members — retry solo, retiring only the
-                    // members that actually fail.
-                    eprintln!(
-                        "serve scheduler: int{} step round failed ({e:#}); retrying members solo",
-                        g.bits
-                    );
-                    let mut i = 0;
-                    while i < g.live.len() {
-                        let l = &mut g.live[i];
-                        let t1 = Instant::now();
-                        match l.session.advance(l.last) {
-                            Ok(()) => {
-                                let ms = t1.elapsed().as_secs_f64() * 1e3;
-                                metrics.record_round(g.bits, 1, ms, g.plan.weight_bytes() as u64);
-                                metrics.record_decode_step(g.bits, ms);
-                                out.stepped += 1;
-                                match Self::emit_sampled(g.bits, g.int8, l, ms, metrics, sink) {
-                                    Fate::Alive => i += 1,
-                                    Fate::Retire => {
-                                        g.live.remove(i);
+            }
+
+            // Plain sub-round: everyone the speculative pass did not step.
+            let plain: Vec<usize> = (0..g.live.len()).filter(|&i| !spec_mask[i]).collect();
+            if !plain.is_empty() {
+                let m = plain.len();
+                let tokens: Vec<i32> = plain.iter().map(|&i| g.live[i].last).collect();
+                let t0 = Instant::now();
+                let stepped = {
+                    let mut refs: Vec<&mut DecodeSession> = g
+                        .live
+                        .iter_mut()
+                        .zip(&spec_mask)
+                        .filter(|(_, &m)| !m)
+                        .map(|(l, _)| &mut l.session)
+                        .collect();
+                    advance_sessions(&mut refs, &tokens)
+                };
+                match stepped {
+                    Ok(()) => {
+                        let round_ms = t0.elapsed().as_secs_f64() * 1e3;
+                        metrics.record_round(g.bits, m, round_ms, g.plan.weight_bytes() as u64);
+                        out.stepped += m;
+                        let share = round_ms / m as f64;
+                        for &i in &plain {
+                            metrics.record_decode_step(g.bits, share);
+                            let fate = Self::emit_sampled(
+                                g.bits,
+                                g.int8,
+                                &mut g.live[i],
+                                share,
+                                metrics,
+                                sink,
+                            );
+                            if let Fate::Retire = fate {
+                                retire[i] = true;
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // Containment: a member that cannot step (validated
+                        // away in normal operation) must not stall the
+                        // round's other members — retry solo, retiring only
+                        // the members that actually fail.
+                        eprintln!(
+                            "serve scheduler: int{} step round failed ({e:#}); retrying members solo",
+                            g.bits
+                        );
+                        for &i in &plain {
+                            let l = &mut g.live[i];
+                            let t1 = Instant::now();
+                            match l.session.advance(l.last) {
+                                Ok(()) => {
+                                    let ms = t1.elapsed().as_secs_f64() * 1e3;
+                                    metrics.record_round(
+                                        g.bits,
+                                        1,
+                                        ms,
+                                        g.plan.weight_bytes() as u64,
+                                    );
+                                    metrics.record_decode_step(g.bits, ms);
+                                    out.stepped += 1;
+                                    if let Fate::Retire =
+                                        Self::emit_sampled(g.bits, g.int8, l, ms, metrics, sink)
+                                    {
+                                        retire[i] = true;
                                     }
                                 }
-                            }
-                            Err(e) => {
-                                eprintln!(
-                                    "serve scheduler: request {}: decode step failed: {e:#}",
-                                    l.id
-                                );
-                                out.failed.push(l.id);
-                                g.live.remove(i);
+                                Err(e) => {
+                                    eprintln!(
+                                        "serve scheduler: request {}: decode step failed: {e:#}",
+                                        l.id
+                                    );
+                                    out.failed.push(l.id);
+                                    retire[i] = true;
+                                }
                             }
                         }
                     }
                 }
             }
+
+            // One retirement sweep, indices computed before any removal.
+            let mut fates = retire.into_iter();
+            g.live.retain(|_| !fates.next().expect("one fate per member"));
         }
+    }
+
+    /// Stream the tokens one speculative round emitted for one member —
+    /// the multi-token sibling of [`Scheduler::emit_sampled`].  The round
+    /// already committed the tokens to the session ([`speculative_round`]
+    /// pushes them and leaves `logits` at the last accepted row), so this
+    /// only does the bookkeeping: one [`Response`] event per token,
+    /// `remaining` decrements, retirement on completion/truncation/hangup.
+    fn emit_spec(
+        bits: u32,
+        int8: bool,
+        l: &mut Live,
+        emitted: &[(i32, f32)],
+        share_ms: f64,
+        metrics: &mut Metrics,
+        sink: &mut dyn FnMut(u64, Response) -> bool,
+    ) -> Fate {
+        let n = emitted.len();
+        for (j, &(tok, logit)) in emitted.iter().enumerate() {
+            l.decode_ms += share_ms;
+            l.last = tok;
+            l.remaining = l.remaining.saturating_sub(1);
+            // The window never exceeds the member's remaining budget, so
+            // `remaining` can only hit 0 on the window's last token; the
+            // capacity check matters on the last token alone (earlier
+            // tokens' rows are already committed).
+            let done = l.remaining == 0 || (j + 1 == n && !l.session.can_advance());
+            let resp = Response {
+                id: l.id,
+                next_token: tok,
+                logit,
+                tokens: if done {
+                    l.session.generated().to_vec()
+                } else {
+                    Vec::new()
+                },
+                done,
+                bits,
+                int8_acts: int8,
+                queue_ms: 0.0,
+                compute_ms: share_ms,
+                prefill_ms: l.prefill_ms,
+                decode_ms: l.decode_ms,
+                batch_size: l.batch_size,
+            };
+            if done {
+                metrics.record(share_ms, bits, l.batch_size);
+                let _ = sink(l.id, resp);
+                return Fate::Retire;
+            }
+            if !sink(l.id, resp) {
+                return Fate::Retire;
+            }
+        }
+        Fate::Alive
     }
 
     /// Shared post-step bookkeeping for one member whose logits just
@@ -640,7 +915,14 @@ impl Scheduler {
             batch_size: l.batch_size,
         };
         if done {
-            metrics.record(l.enq.elapsed().as_secs_f64() * 1e3, bits, l.batch_size);
+            // The latency sample is the round's actual step cost, NOT
+            // `l.enq.elapsed()` — that is the stream's AGE, which made a
+            // long-lived stream's decode percentiles climb monotonically
+            // with its lifetime instead of measuring step work.  The
+            // enqueue-to-first-token figure still lands via the prefill
+            // path ([`Scheduler::start_stream`]), where it is a genuine
+            // time-to-first-token.
+            metrics.record(step_ms, bits, l.batch_size);
             let _ = sink(l.id, resp);
             return Fate::Retire;
         }
@@ -692,6 +974,7 @@ impl Scheduler {
                         &g.plan.dims,
                         p.req.prompt.len(),
                         p.req.max_new_tokens,
+                        self.spec_slots(&keys[ki], &p.req.sampling),
                     );
                     let fits = match self.cfg.kv_capacity_bytes {
                         None => true,
@@ -711,6 +994,18 @@ impl Scheduler {
             }
         }
         for (key, n) in admit {
+            // Sessions of a speculating group reserve `k` extra cache
+            // positions — the provisional verify-window rows a speculative
+            // round holds before acceptance — so the budget passed to the
+            // prefill matches what admission just projected.  Temperature
+            // requests never speculate and get the plain budget.
+            let spec_k = self.spec.get(&key).map_or(0, |s| s.k);
+            let budget_for = |sampling: &Sampling, max_new: usize| -> usize {
+                match sampling {
+                    Sampling::Greedy => max_new.saturating_add(spec_k),
+                    _ => max_new,
+                }
+            };
             let g = self.groups.get_mut(&key).expect("admitted group exists");
             let plan = g.plan.clone();
             let bits = g.bits;
@@ -725,7 +1020,7 @@ impl Scheduler {
                         (
                             p.req.prompt.as_slice(),
                             p.req.sampling,
-                            p.req.max_new_tokens,
+                            budget_for(&p.req.sampling, p.req.max_new_tokens),
                         )
                     })
                     .collect();
@@ -756,7 +1051,7 @@ impl Scheduler {
                             plan.clone(),
                             &p.req.prompt,
                             p.req.sampling,
-                            p.req.max_new_tokens,
+                            budget_for(&p.req.sampling, p.req.max_new_tokens),
                         ) {
                             Ok(session) => {
                                 let ms = t1.elapsed().as_secs_f64() * 1e3;

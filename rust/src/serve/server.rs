@@ -21,7 +21,12 @@
 //!   admission, a round-robin fairness cap, and KV-pressure-aware
 //!   deferral ([`ServerConfig::kv_capacity_bytes`]).  Responses
 //!   **stream**: one [`Response`] event per token on the request's
-//!   channel, the last with `done`.
+//!   channel, the last with `done`.  With
+//!   [`ServerConfig::speculative`] set, greedy packed-group streams run
+//!   self-speculative rounds (low-bit MSB-prefix drafts, one batched
+//!   target verify, KV rollback) — several events may arrive per round,
+//!   bit-identical to plain decode, paused by the elastic planner under
+//!   watermark pressure.
 //!
 //! The prefill/decode interleave policy lives in the scheduler, not here:
 //! this loop only moves messages, resolves plans, and forwards events.
@@ -90,6 +95,39 @@ pub struct ServerConfig {
     /// serves f32-exact reference numerics by contract, so elastic serving
     /// wants `warm_bits: vec![]`.  `None` disables shifting.
     pub elastic: Option<ElasticConfig>,
+    /// Host backend: **self-speculative decoding** (opt-in; `None`
+    /// disables it).  Greedy streams in uniform packed groups above
+    /// `draft_bits` draft `k − 1` tokens per round with the `draft_bits`
+    /// MSB-prefix view of their own nested payload and verify the window
+    /// in one batched target pass — emitted tokens are bit-identical to
+    /// plain decode, only tokens/round changes.  Costs `k` provisional KV
+    /// slots per stream (projected at admission) and draft compute, so
+    /// the elastic planner suspends it while a high watermark is breached.
+    /// Temperature requests always decode plain.
+    pub speculative: Option<SpeculativeConfig>,
+}
+
+/// Self-speculative decode knobs ([`ServerConfig::speculative`]).
+#[derive(Debug, Clone, Copy)]
+pub struct SpeculativeConfig {
+    /// The MSB-prefix rung that drafts (2 = int2 drafts).  Groups at or
+    /// below this width never speculate — there is no cheaper rung to
+    /// draft with.
+    pub draft_bits: u32,
+    /// Verify-window width `k`: each speculative round feeds 1 committed
+    /// token plus `k − 1` drafts through one batched target pass, emitting
+    /// between 1 and `k` tokens.  Values below 2 disable speculation (a
+    /// 1-wide window IS plain decode).
+    pub k: usize,
+}
+
+impl Default for SpeculativeConfig {
+    fn default() -> Self {
+        SpeculativeConfig {
+            draft_bits: 2,
+            k: 4,
+        }
+    }
 }
 
 impl Default for ServerConfig {
@@ -103,6 +141,7 @@ impl Default for ServerConfig {
             max_prefills_per_round: 4,
             kv_capacity_bytes: None,
             elastic: None,
+            speculative: None,
         }
     }
 }
@@ -329,6 +368,20 @@ fn host_worker_loop(
         }
         // Clients that hung up free their streams (and KV pages) now.
         sched.prune(&|id| waiters.contains_key(&id));
+        // Refresh the resident-KV gauge after the prune: a hangup can be
+        // the loop's last event, and the stale pre-prune figure would
+        // otherwise survive until (or past) shutdown.
+        metrics.set_kv_bytes(sched.resident_kv_bytes());
+        // Speculation runs only while the elastic watermarks have
+        // headroom: a speculative round holds k provisional KV rows per
+        // member and spends draft compute — exactly the resources a
+        // breached watermark says are gone.  Without an elastic config
+        // speculation is unconditional.
+        if let Some(planner) = elastic.as_ref() {
+            sched.suspend_speculation(
+                !planner.speculation_allowed(sched.resident_kv_bytes(), sched.pending_prefills()),
+            );
+        }
         let outcome = sched.run_round(&mut metrics, &mut |id, resp| {
             if resp.done {
                 if let Some(tx) = waiters.remove(&id) {
@@ -362,6 +415,10 @@ fn host_worker_loop(
                 &mut waiters,
                 &mut metrics,
             );
+            // A shift can retire streams (failed plan swaps) after the
+            // round already set the gauge — recompute so the gauge never
+            // carries bytes of sessions that no longer exist.
+            metrics.set_kv_bytes(sched.resident_kv_bytes());
         }
     }
 }
@@ -531,10 +588,33 @@ fn host_submit(
             return;
         }
     }
+    // Per-layer traffic is grouped and reported under the map's maximum
+    // bit-width (deterministic and group-consistent — the uniform
+    // `precision` field does not describe what actually ran).
+    let bits = match &req.per_layer {
+        Some(map) => *map.iter().max().expect("validated non-empty"),
+        None => req.precision.bits(),
+    };
+    // Would this request land in a speculating group?  Then its session
+    // reserves k provisional verify-window slots, and the projection must
+    // say so — admission and the submit-time budget check otherwise
+    // under-count the stream by k positions of K/V.
+    let spec_slots = cfg
+        .speculative
+        .as_ref()
+        .filter(|s| {
+            s.k >= 2
+                && req.per_layer.is_none()
+                && matches!(req.sampling, Sampling::Greedy)
+                && bits > s.draft_bits
+                && (req.int8_acts || !cfg.warm_bits.contains(&bits))
+        })
+        .map_or(0, |s| s.k);
     if let Some(cap) = cfg.kv_capacity_bytes {
         // A request whose KV page alone exceeds the budget could never be
         // admitted — deferring it would park it (and its client) forever.
-        let projected = projected_kv_bytes(&preset.model, req.prompt.len(), req.max_new_tokens);
+        let projected =
+            projected_kv_bytes(&preset.model, req.prompt.len(), req.max_new_tokens, spec_slots);
         if projected > cap {
             eprintln!(
                 "serve worker: request {}: projected KV {projected}B exceeds the {cap}B budget — rejected",
@@ -543,13 +623,6 @@ fn host_submit(
             return;
         }
     }
-    // Per-layer traffic is grouped and reported under the map's maximum
-    // bit-width (deterministic and group-consistent — the uniform
-    // `precision` field does not describe what actually ran).
-    let bits = match &req.per_layer {
-        Some(map) => *map.iter().max().expect("validated non-empty"),
-        None => req.precision.bits(),
-    };
     let int8 = if req.int8_acts {
         Some(cfg.act_quant)
     } else {
@@ -590,6 +663,25 @@ fn host_submit(
     };
     match resolved {
         Ok((key, plan)) => {
+            // First greedy request of a speculation-eligible packed group:
+            // resolve the draft rung (an MSB-prefix view of the SAME
+            // nested payload — a store cache hit after the first time, and
+            // zero new weight bytes under the nested store) and arm the
+            // group.  Registration is idempotent; a failed draft build
+            // just means the group serves plain.
+            if spec_slots >= 2 {
+                if let Some(s) = &cfg.speculative {
+                    match store.plan_packed(model, &preset.model, s.draft_bits, int8, metrics) {
+                        Ok(draft) => {
+                            sched.set_speculation(key.clone(), draft, s.draft_bits, s.k)
+                        }
+                        Err(e) => eprintln!(
+                            "serve worker: request {}: int{} draft plan failed ({e:#}); serving plain",
+                            req.id, s.draft_bits
+                        ),
+                    }
+                }
+            }
             let id = req.id;
             waiters.insert(id, tx);
             sched.submit(key, plan, bits, req.int8_acts, req, Instant::now());

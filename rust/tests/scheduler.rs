@@ -31,7 +31,7 @@ use matquant::quant::ActQuantConfig;
 use matquant::runtime::{advance_sessions, DecodeSession, ForwardPlan, Sampling};
 use matquant::serve::{
     Metrics, PlanKey, PrecisionReq, Request, Response, Scheduler, SchedulerConfig, Server,
-    ServerConfig,
+    ServerConfig, SpeculativeConfig,
 };
 
 fn toy_dims() -> ModelDims {
@@ -934,6 +934,363 @@ fn host_server_rejects_duplicate_in_flight_ids() {
         .unwrap();
     assert!(r.done);
     assert_eq!(r.tokens.len(), 2, "finished ids must be reusable");
+    server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Self-speculative rounds: low-bit draft / target verify, bit-identical to
+// plain decode (the losslessness contract), across draft/target pairs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn speculative_rounds_bit_identical_across_draft_target_pairs() {
+    let (preset, model) = toy_model(131);
+    for (draft_bits, target_bits) in [(2u32, 8u32), (2, 4), (4, 8)] {
+        for int8 in [false, true] {
+            let cfg = int8.then(ActQuantConfig::absmax);
+            let target =
+                ForwardPlan::packed_uniform(&preset.model, &model, target_bits, false, cfg, None)
+                    .unwrap();
+            let draft =
+                ForwardPlan::packed_uniform(&preset.model, &model, draft_bits, false, cfg, None)
+                    .unwrap();
+            let key = PlanKey::Packed { bits: target_bits, int8 };
+            // Seeded random specs: greedy streams speculate; the
+            // temperature stream must ride the plain sub-round untouched.
+            let mut rng = Rng::new(3000 + (draft_bits * 10 + target_bits) as u64 + int8 as u64);
+            let mut specs: Vec<Spec> = (0..3)
+                .map(|_| {
+                    let plen = 1 + rng.below(3);
+                    let prompt: Vec<i32> = (0..plen).map(|_| rng.below(40) as i32).collect();
+                    (prompt, Sampling::Greedy, 3 + rng.below(4))
+                })
+                .collect();
+            specs.push((
+                vec![rng.below(40) as i32],
+                Sampling::Temperature {
+                    temp: 0.7 + rng.f64() as f32,
+                    seed: rng.next_u64(),
+                },
+                4,
+            ));
+            let mut sched = Scheduler::new(SchedulerConfig::default());
+            sched.set_speculation(key.clone(), draft.clone(), draft_bits, 3);
+            let mut metrics = Metrics::default();
+            let inject: Vec<Inject> = specs
+                .iter()
+                .enumerate()
+                .map(|(i, sp)| {
+                    let req = Request {
+                        int8_acts: int8,
+                        ..Request::generate(
+                            i as u64 + 1,
+                            sp.0.clone(),
+                            PrecisionReq::Bits(target_bits),
+                            sp.2,
+                            sp.1,
+                        )
+                    };
+                    (0, key.clone(), target.clone(), target_bits, int8, req)
+                })
+                .collect();
+            let events = drive(&mut sched, &mut metrics, inject, 64);
+            let label = format!("int{draft_bits}-draft/int{target_bits} i8={int8}");
+            for (i, sp) in specs.iter().enumerate() {
+                let id = i as u64 + 1;
+                let (toks, fin) = stream_of(&events[&id], id);
+                let (_, want) = solo_trace(&target, sp);
+                assert_eq!(toks, want, "{label} req {id}: speculative stream != plain solo");
+                assert_eq!(fin, want, "{label} req {id}: final stream != plain solo");
+            }
+            // Speculation actually ran (the streams above were not all
+            // served by the plain fallback) and its counters landed.
+            assert!(metrics.spec_rounds(target_bits) > 0, "{label}: no speculative rounds");
+            assert!(metrics.spec_emitted(target_bits) > 0, "{label}: no speculative tokens");
+            assert!(
+                metrics.spec_tokens_per_round(target_bits) >= 1.0,
+                "{label}: a speculative round must emit at least one token"
+            );
+        }
+    }
+}
+
+#[test]
+fn speculation_survives_mid_stream_elastic_downshift() {
+    let (preset, model) = toy_model(137);
+    let plan8 = ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+    let plan4 = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    let draft = ForwardPlan::packed_uniform(&preset.model, &model, 2, false, None, None).unwrap();
+    let key8 = PlanKey::Packed { bits: 8, int8: false };
+    let key4 = PlanKey::Packed { bits: 4, int8: false };
+    let spec: Spec = (vec![1, 2, 3], Sampling::Greedy, 7);
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    // Both rungs speculate, so the downshift lands BETWEEN speculation
+    // windows of an actively speculating stream (windows are atomic within
+    // a round — the shift can never split one).
+    sched.set_speculation(key8.clone(), draft.clone(), 2, 3);
+    sched.set_speculation(key4.clone(), draft.clone(), 2, 3);
+    let mut metrics = Metrics::default();
+    sched.submit(
+        key8,
+        plan8.clone(),
+        8,
+        false,
+        Request::generate(1, spec.0.clone(), PrecisionReq::Bits(8), spec.2, spec.1),
+        Instant::now(),
+    );
+    let mut events: Vec<(u32, i32)> = Vec::new();
+    let mut round = 0usize;
+    while sched.has_work() {
+        let ev = &mut events;
+        sched.run_round(&mut metrics, &mut |_, resp| {
+            ev.push((resp.bits, resp.next_token));
+            true
+        });
+        if round == 1 {
+            // Round 0 admitted (token 0), round 1 ran a speculative int8
+            // window — now shift the stream down mid-flight.
+            assert!(metrics.spec_rounds(8) > 0, "no int8 speculation before the shift");
+            let rep = sched.shift_uniform(8, false, 4, plan4.clone());
+            assert_eq!(rep.moved_live, 1, "the live stream must shift down");
+            assert!(rep.failed.is_empty());
+        }
+        round += 1;
+        assert!(round < 64, "speculating elastic scheduler failed to drain");
+    }
+    assert!(
+        metrics.spec_rounds(4) > 0,
+        "speculation must resume on the downshifted rung"
+    );
+    let toks: Vec<i32> = events.iter().map(|&(_, t)| t).collect();
+    let bits: Vec<u32> = events.iter().map(|&(b, _)| b).collect();
+    assert_eq!(toks.len(), 7, "every requested token answers across the shift");
+    // The served-bits trace tells us exactly which token index the shift
+    // landed at; the stream must equal a solo session whose plan pointer
+    // swaps at that same index.
+    let idx = bits.iter().position(|&b| b == 4).expect("stream never downshifted");
+    assert!(idx > 0, "admission served at int8");
+    assert!(bits[idx..].iter().all(|&b| b == 4), "no spurious upshift");
+    let want = solo_shifted_trace(&plan8, &spec, &[(idx, plan4.clone())]);
+    assert_eq!(toks, want, "shifted speculative stream != switched solo");
+}
+
+#[test]
+fn temperature_streams_keep_their_seeded_rng_stream_under_speculation() {
+    // Satellite contract: enabling speculation anywhere in the group must
+    // not perturb a temperature session's seeded Rng stream — the
+    // (seed, prompt, weights) → same-text invariant.  The temperature
+    // member decodes next to speculating greedy members and still matches
+    // a solo session from a world with no speculation at all.
+    let (preset, model) = toy_model(139);
+    let target = ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+    let draft = ForwardPlan::packed_uniform(&preset.model, &model, 2, false, None, None).unwrap();
+    let key = PlanKey::Packed { bits: 8, int8: false };
+    let temp_spec: Spec = (
+        vec![6, 7],
+        Sampling::Temperature { temp: 0.9, seed: 42 },
+        6,
+    );
+    let (_, want) = solo_trace(&target, &temp_spec);
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    sched.set_speculation(key.clone(), draft, 2, 4);
+    let mut metrics = Metrics::default();
+    let inject: Vec<Inject> = vec![
+        (
+            0,
+            key.clone(),
+            target.clone(),
+            8,
+            false,
+            Request::generate(1, vec![1, 2, 3], PrecisionReq::Bits(8), 6, Sampling::Greedy),
+        ),
+        (
+            0,
+            key.clone(),
+            target.clone(),
+            8,
+            false,
+            Request::generate(2, temp_spec.0.clone(), PrecisionReq::Bits(8), temp_spec.2, temp_spec.1),
+        ),
+    ];
+    let events = drive(&mut sched, &mut metrics, inject, 64);
+    assert!(metrics.spec_rounds(8) > 0, "the greedy member must speculate");
+    let (toks, fin) = stream_of(&events[&2], 2);
+    assert_eq!(toks, want, "temperature stream perturbed by group speculation");
+    assert_eq!(fin, want);
+}
+
+// ---------------------------------------------------------------------------
+// Metric regressions: completion latency is step cost (not stream age), and
+// the resident-KV gauge drains to zero
+// ---------------------------------------------------------------------------
+
+#[test]
+fn completion_latency_records_step_cost_not_stream_age() {
+    // Regression: stream completion used to record `enq.elapsed()` — the
+    // stream's AGE — into the request-latency histogram, so a long-lived
+    // stream pushed p50/p99 up with its lifetime.  The fixed code records
+    // the final round's step cost, which is a small slice of the total.
+    let dims = ModelDims {
+        vocab: 48,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len: 64,
+        quantize_attn: false,
+    };
+    let (preset, model) = toy_transformer(dims, 149);
+    let plan = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    let key = PlanKey::Packed { bits: 4, int8: false };
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    let mut metrics = Metrics::default();
+    let t0 = Instant::now();
+    let inject: Vec<Inject> = vec![(
+        0,
+        key,
+        plan,
+        4,
+        false,
+        Request::generate(1, vec![1, 2, 3], PrecisionReq::Bits(4), 40, Sampling::Greedy),
+    )];
+    let events = drive(&mut sched, &mut metrics, inject, 64);
+    let total_ms = t0.elapsed().as_secs_f64() * 1e3;
+    assert_eq!(events[&1].len(), 40, "the stream must run long");
+    // One completed stream → one request-latency sample.  40 decode rounds
+    // ran, so the stream's age is ≈40 step costs; a sample anywhere near
+    // the age means the bug is back.
+    let p50 = metrics.percentile(50.0);
+    assert!(
+        p50 < total_ms / 4.0,
+        "completion sample {p50:.3}ms looks like stream age (stream lived {total_ms:.3}ms)"
+    );
+    // Per-step decode percentiles stay flat as the stream ages: every
+    // sample is one round's step cost, never a cumulative figure.
+    let d99 = metrics.decode_percentile(4, 99.0);
+    assert!(
+        d99 < total_ms / 4.0,
+        "decode p99 {d99:.3}ms looks cumulative (stream lived {total_ms:.3}ms)"
+    );
+}
+
+#[test]
+fn kv_gauge_tracks_residency_and_returns_to_zero_after_drain() {
+    // Regression sweep for the resident-KV gauge across every retirement
+    // path in one run: normal completion, KV-capacity truncation, a
+    // mid-stream client hangup, and speculative rounds (whose rollback
+    // must not move the gauge — allocation is capacity-based).
+    let (preset, model) = toy_model(151);
+    let seq = preset.model.seq_len;
+    let target = ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+    let draft = ForwardPlan::packed_uniform(&preset.model, &model, 2, false, None, None).unwrap();
+    let key = PlanKey::Packed { bits: 8, int8: false };
+    let mut sched = Scheduler::new(SchedulerConfig::default());
+    sched.set_speculation(key.clone(), draft, 2, 3);
+    let mut metrics = Metrics::default();
+    let mk = |id, prompt: Vec<i32>, max_new| {
+        Request::generate(id, prompt, PrecisionReq::Bits(8), max_new, Sampling::Greedy)
+    };
+    sched.submit(key.clone(), target.clone(), 8, false, mk(1, vec![1, 2, 3], 6), Instant::now());
+    // Truncates at the position window long before its budget.
+    sched.submit(
+        key.clone(),
+        target.clone(),
+        8,
+        false,
+        mk(2, (0..seq as i32 - 2).map(|i| i % 5).collect(), seq),
+        Instant::now(),
+    );
+    sched.submit(key.clone(), target.clone(), 8, false, mk(3, vec![4, 5], 8), Instant::now());
+    let mut hangup_events = 0usize;
+    let mut round = 0usize;
+    while sched.has_work() {
+        sched.run_round(&mut metrics, &mut |id, _| {
+            if id == 3 {
+                hangup_events += 1;
+                hangup_events < 2 // client 3 hangs up after its 2nd event
+            } else {
+                true
+            }
+        });
+        assert_eq!(
+            metrics.kv_bytes(),
+            sched.resident_kv_bytes(),
+            "round {round}: gauge drifted from true residency"
+        );
+        round += 1;
+        assert!(round < 64, "gauge sweep failed to drain");
+    }
+    assert!(metrics.spec_rounds(8) > 0, "speculation must have run in this sweep");
+    assert_eq!(sched.live_sessions(), 0);
+    assert_eq!(sched.pending_prefills(), 0);
+    assert_eq!(
+        metrics.kv_bytes(),
+        0,
+        "gauge must return to zero once every stream drained"
+    );
+}
+
+// ---------------------------------------------------------------------------
+// End-to-end: the host server serves speculatively when configured
+// ---------------------------------------------------------------------------
+
+#[test]
+fn host_server_speculative_serving_is_lossless_and_reports_metrics() {
+    let (preset, model) = toy_model(157);
+    let target = ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+    let greedy_spec: Spec = (vec![1, 2, 3], Sampling::Greedy, 6);
+    let temp_spec: Spec = (vec![4, 5], Sampling::Temperature { temp: 0.9, seed: 13 }, 5);
+    let (_, greedy_want) = solo_trace(&target, &greedy_spec);
+    let (_, temp_want) = solo_trace(&target, &temp_spec);
+    let server = Server::start_host(
+        preset.clone(),
+        model,
+        ServerConfig {
+            preset: "toy".into(),
+            max_wait_ms: 0.5,
+            warm_bits: vec![],
+            speculative: Some(SpeculativeConfig { draft_bits: 2, k: 4 }),
+            ..ServerConfig::default()
+        },
+    )
+    .unwrap();
+    let submits = [
+        (1u64, &greedy_spec, &greedy_want),
+        (2u64, &temp_spec, &temp_want),
+    ];
+    let rxs: Vec<_> = submits
+        .iter()
+        .map(|(id, sp, _)| {
+            server
+                .submit(Request::generate(
+                    *id,
+                    sp.0.clone(),
+                    PrecisionReq::Bits(8),
+                    sp.2,
+                    sp.1,
+                ))
+                .unwrap()
+        })
+        .collect();
+    for ((id, sp, want), rx) in submits.iter().zip(rxs) {
+        let mut toks = Vec::new();
+        let fin = loop {
+            let r = rx.recv().unwrap_or_else(|e| panic!("req {id}: {e}"));
+            assert_eq!(r.bits, 8);
+            toks.push(r.next_token);
+            if r.done {
+                break r.tokens;
+            }
+        };
+        assert_eq!(toks.len(), sp.2, "req {id}: one event per token");
+        assert_eq!(&toks, *want, "req {id}: speculative serving changed the stream");
+        assert_eq!(&fin, *want, "req {id}: final stream diverged");
+    }
+    let report = server.metrics_report().unwrap();
+    assert!(
+        report.contains("spec=[int8:"),
+        "report must carry speculation counters: {report}"
+    );
     server.shutdown().unwrap();
 }
 
