@@ -36,11 +36,12 @@ bench:
 
 # Run the bench and persist the ROADMAP perf-trajectory rows (nested
 # page-in bytes per precision, elastic shift latency, round throughput at
-# each watermark state, plain vs self-speculative decode tokens/sec with
-# accept rates) into BENCH_7.json at the repo root.  Override MQ_BENCH_MS
-# for a quicker (smoke) or steadier (long) measurement budget.
+# each watermark state, plain vs self-speculative decode tokens/sec, and
+# the paged-KV rows: concurrent streams at a fixed KV budget plus
+# paged-attend step latency) into BENCH_8.json at the repo root.  Override
+# MQ_BENCH_MS for a quicker (smoke) or steadier (long) measurement budget.
 bench-json:
-	cd rust && MQ_BENCH_OUT=$(abspath BENCH_7.json) cargo bench --bench quant_hot_paths
+	cd rust && MQ_BENCH_OUT=$(abspath BENCH_8.json) cargo bench --bench quant_hot_paths
 
 clean-artifacts:
 	rm -rf $(ARTIFACTS_DIR)

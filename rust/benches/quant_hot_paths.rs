@@ -9,8 +9,12 @@
 //! nested-payload page-in rows, elastic precision-shift latency, and round
 //! throughput at each watermark state; ISSUE 7 adds the self-speculative
 //! decode rows (plain vs int2-draft/int8-verify tokens/sec at k ∈ {2,4,8},
-//! c ∈ {1,4,16}, with accept rates) — persisted as JSON when
-//! `MQ_BENCH_OUT` names a path (`make bench-json` → `BENCH_7.json`).
+//! c ∈ {1,4,16}, with accept rates); ISSUE 8 adds the paged-KV rows
+//! (max concurrent streams at one fixed KV budget — analytic contiguous
+//! reservation vs measured paged-f32 vs paged-int8 admission — plus the
+//! paged-attend decode step latency per page geometry) — persisted as
+//! JSON when `MQ_BENCH_OUT` names a path (`make bench-json` →
+//! `BENCH_8.json`).
 //!
 //! Run: `cargo bench --bench quant_hot_paths`
 
@@ -25,10 +29,11 @@ use matquant::model::{manifest::ModelDims, PrecisionAssignment, Tensor};
 use matquant::quant::{self, ActQuantConfig, PackedTensor};
 use matquant::runtime::{
     advance_sessions, argmax_logit, speculative_round, DecodeSession, ForwardPlan,
-    ForwardWeights, HostForward, Sampling,
+    ForwardWeights, HostForward, KvConfig, PagePool, Sampling,
 };
 use matquant::serve::{
-    Metrics, PlanKey, PrecisionReq, Request, Scheduler, SchedulerConfig, WeightStore,
+    projected_kv_bytes, Metrics, PlanKey, PrecisionReq, Request, Scheduler, SchedulerConfig,
+    WeightStore,
 };
 use matquant::util::bench::{bench, default_budget};
 
@@ -617,6 +622,7 @@ fn main() {
         let mut sched = Scheduler::new(SchedulerConfig {
             max_prefills_per_round: conc,
             kv_capacity_bytes: None,
+            kv: KvConfig::default(),
         });
         let mut metrics = Metrics::default();
         for c in 0..conc {
@@ -791,16 +797,142 @@ fn main() {
         }
     }
 
+    // ---- paged KV: concurrent streams at one fixed KV budget (ISSUE 8) ----
+    // The tentpole's capacity claim, measured.  One budget — enough for
+    // exactly 4 contiguous full-window reservations (the pre-paging
+    // accounting: every stream holds seq_len f32 rows for its whole
+    // life) — then the same budget under page-granular admission with f32
+    // and int8 pages.  Paged admission projects ceil(capacity/page_size)
+    // pages per layer for the request's *actual* window and defers on
+    // actually-resident pool bytes, so shorter windows and denser rows
+    // both turn straight into admitted streams; the peak-concurrency
+    // figures come from the live scheduler, not the formula.
+    let dims = &preset.model;
+    let contig_per_stream =
+        (dims.n_layers as u64) * 2 * (dims.seq_len as u64) * (dims.d_model as u64) * 4;
+    let kv_budget = 4 * contig_per_stream;
+    let mut json_kv: Vec<String> = Vec::new();
+    json_kv.push(format!(
+        "{{\"kv\": \"contiguous f32 (analytic)\", \"per_stream_bytes\": {contig_per_stream}, \"max_streams\": {}, \"peak_streams\": {}}}",
+        kv_budget / contig_per_stream,
+        kv_budget / contig_per_stream
+    ));
+    let n_req = 48usize;
+    for (tag, kv) in [
+        ("paged f32 ps=8 ", KvConfig::f32_paged(8)),
+        ("paged int8 ps=8", KvConfig::int8(8)),
+    ] {
+        let per_stream = projected_kv_bytes(dims, sp_len, sn_new, 0, &kv);
+        let mut sched = Scheduler::new(SchedulerConfig {
+            max_prefills_per_round: n_req,
+            kv_capacity_bytes: Some(kv_budget),
+            kv,
+        });
+        let mut metrics = Metrics::default();
+        for c in 0..n_req {
+            let prompt: Vec<i32> = (0..sp_len)
+                .map(|i| ((i * 13 + 2 + 7 * c) % vocab) as i32)
+                .collect();
+            sched.submit(
+                PlanKey::Packed {
+                    bits: 8,
+                    int8: false,
+                },
+                plan8.clone(),
+                8,
+                false,
+                Request::generate(
+                    c as u64,
+                    prompt,
+                    PrecisionReq::Bits(8),
+                    sn_new,
+                    Sampling::Greedy,
+                ),
+                Instant::now(),
+            );
+        }
+        let mut done = 0usize;
+        let mut peak = 0usize;
+        let mut rounds = 0u64;
+        let t0 = Instant::now();
+        while done < n_req {
+            sched.run_round(&mut metrics, &mut |_, r| {
+                if r.done {
+                    done += 1;
+                }
+                true
+            });
+            peak = peak.max(sched.live_sessions());
+            rounds += 1;
+            assert!(rounds < 10_000, "scheduler failed to drain the kv bench");
+        }
+        let ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "kv budget {kv_budget}B (= {} contiguous streams): {tag} projects {per_stream}B/stream ({} by projection) | peak {peak} concurrent, {n_req} streams drained in {rounds} rounds / {ms:.1} ms | peak pool {}B",
+            kv_budget / contig_per_stream,
+            kv_budget / per_stream,
+            sched.pool().peak_bytes()
+        );
+        json_kv.push(format!(
+            "{{\"kv\": \"{}\", \"per_stream_bytes\": {per_stream}, \"max_streams\": {}, \"peak_streams\": {peak}}}",
+            tag.trim_end(),
+            kv_budget / per_stream
+        ));
+    }
+
+    // ---- paged-attend decode step latency (ISSUE 8) ----
+    // The attend walk now strides page segments instead of one contiguous
+    // row block.  Page-size sweep at f32 (identical math, different walk
+    // granularity) plus int8 pages (inline per-row dequant): steady-state
+    // single-stream decode on the int8 weight plan, prompt 16 + 16 steps
+    // (to capacity).
+    let mut json_attend: Vec<String> = Vec::new();
+    for (tag, kv) in [
+        ("f32 ps=16 (default)", KvConfig::default()),
+        ("f32 ps=4           ", KvConfig::f32_paged(4)),
+        ("f32 ps=32          ", KvConfig::f32_paged(32)),
+        ("int8 ps=16         ", KvConfig::int8(16)),
+    ] {
+        let pool = PagePool::unbounded(kv);
+        let mut decode_s = 0.0f64;
+        for _ in 0..reps {
+            let mut sess = DecodeSession::with_budget_pooled(
+                plan8.clone(),
+                &gen_prompt,
+                Sampling::Greedy,
+                usize::MAX,
+                Some(&pool),
+            )
+            .unwrap();
+            let t1 = Instant::now();
+            for _ in 0..n_new {
+                let (tok, _) = sess.sample();
+                sess.advance(tok).unwrap();
+            }
+            decode_s += t1.elapsed().as_secs_f64();
+            std::hint::black_box(sess.logits());
+        }
+        let tps = (reps * n_new) as f64 / decode_s;
+        let step_us = decode_s / (reps * n_new) as f64 * 1e6;
+        println!("paged attend {tag} @ int8 weights: {tps:.0} tok/s | {step_us:.1} us/step");
+        json_attend.push(format!(
+            "{{\"kv\": \"{}\", \"decode_tok_per_s\": {tps:.1}, \"step_us\": {step_us:.2}}}",
+            tag.trim_end()
+        ));
+    }
+
     // Hand-rolled JSON (the build is offline — no serde); the Makefile
     // `bench-json` target and the CI smoke step point MQ_BENCH_OUT at
-    // BENCH_7.json in the repo root.
+    // BENCH_8.json in the repo root.
     if let Ok(path) = std::env::var("MQ_BENCH_OUT") {
         let json = format!(
-            "{{\n  \"pr\": 7,\n  \"bench\": \"quant_hot_paths\",\n  \"model\": \"toy tiny-shaped (vocab 256, d_model 96, 4 layers, d_ff 384)\",\n  \"page_in_per_precision\": [\n    {}\n  ],\n  \"elastic_shift_latency\": [\n    {}\n  ],\n  \"round_throughput_per_watermark_state\": [\n    {}\n  ],\n  \"speculative_decode\": [\n    {}\n  ]\n}}\n",
+            "{{\n  \"pr\": 8,\n  \"bench\": \"quant_hot_paths\",\n  \"model\": \"toy tiny-shaped (vocab 256, d_model 96, 4 layers, d_ff 384)\",\n  \"page_in_per_precision\": [\n    {}\n  ],\n  \"elastic_shift_latency\": [\n    {}\n  ],\n  \"round_throughput_per_watermark_state\": [\n    {}\n  ],\n  \"speculative_decode\": [\n    {}\n  ],\n  \"kv_concurrency_at_fixed_budget\": [\n    {}\n  ],\n  \"paged_attend_step_latency\": [\n    {}\n  ]\n}}\n",
             json_page_in.join(",\n    "),
             json_shift.join(",\n    "),
             json_rounds.join(",\n    "),
-            json_spec.join(",\n    ")
+            json_spec.join(",\n    "),
+            json_kv.join(",\n    "),
+            json_attend.join(",\n    ")
         );
         std::fs::write(&path, &json).unwrap_or_else(|e| panic!("write bench json to {path}: {e}"));
         println!("bench rows persisted to {path}");

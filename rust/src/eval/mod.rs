@@ -6,12 +6,14 @@
 //! artifact-free [`HostEvaluator`] (a [`crate::runtime::ForwardPlan`] per
 //! precision spec, fused packed kernels — quality tables for every
 //! r ∈ {1..8} ± Mix'n'Match run anywhere the server runs, see
-//! [`host_quality_table`]).
+//! [`host_quality_table`]).  [`decode_log_perplexity`] scores the same
+//! stream through the KV-cached **decode path** instead, so paged-KV
+//! storage choices (f32 vs int8 pages) get a quality number too.
 
 pub mod perplexity;
 pub mod tables;
 pub mod tasks;
 
-pub use perplexity::{host_quality_table, Evaluator, HostEvaluator};
+pub use perplexity::{decode_log_perplexity, host_quality_table, Evaluator, HostEvaluator};
 pub use tables::{quality_table, TableBuilder};
 pub use tasks::{task_suite, TaskReport};

@@ -24,7 +24,7 @@ use super::tables::{pplx, quality_table, TableBuilder};
 use crate::data::{Batcher, Corpus, VOCAB};
 use crate::model::manifest::ModelDims;
 use crate::model::{PresetInfo, QuantizedModel, Tensor};
-use crate::runtime::{lit_i32, lit_tensor, Engine, ForwardPlan};
+use crate::runtime::{lit_i32, lit_tensor, Engine, ForwardPlan, KvCache, KvConfig, PagePool};
 use crate::Result;
 
 /// Evaluation driver bound to one engine + preset.
@@ -211,6 +211,47 @@ impl HostEvaluator {
     }
 }
 
+/// Teacher-forced mean log-perplexity through the **decode path**: each
+/// held-out row (batch 1, `n_rows` rows) is scored token by token with
+/// [`ForwardPlan::decode_step_batch`] against a paged [`KvCache`] built
+/// under `kv` — exactly the KV representation the server holds between
+/// rounds.  The forward-path evaluators ([`HostEvaluator`],
+/// [`host_quality_table`]) never read cached K/V, so this is the one that
+/// judges KV storage quality: with f32 pages it reproduces the forward
+/// path bit for bit (the decode step's position-by-position conformance
+/// contract), and with [`KvConfig::int8`] pages it measures the quality
+/// cost of storing K/V rows as int8 codes + per-row scales.
+pub fn decode_log_perplexity(
+    plan: Arc<ForwardPlan>,
+    kv: KvConfig,
+    corpus_seed: u64,
+    eval_seed: u64,
+    n_rows: usize,
+) -> Result<f64> {
+    ensure!(n_rows >= 1, "empty decode eval");
+    ensure!(
+        plan.dims.vocab >= VOCAB,
+        "decode eval needs the byte vocabulary: plan vocab {} < {VOCAB}",
+        plan.dims.vocab
+    );
+    let t = plan.dims.seq_len;
+    let v = plan.dims.vocab;
+    let pool = PagePool::unbounded(kv);
+    let mut batcher = Batcher::new(Corpus::new(corpus_seed), eval_seed, 1, t + 1);
+    let mut ce = 0.0f64;
+    let mut count = 0u64;
+    for _ in 0..n_rows {
+        let block = batcher.next_block();
+        let mut cache = KvCache::with_pool(plan.dims.n_layers, plan.dims.d_model, t, pool.clone());
+        for ti in 0..t {
+            let logits = plan.decode_step_batch(&block[ti..ti + 1], &[ti], &mut [&mut cache])?;
+            ce += cross_entropy_nats(&logits[..v], block[ti + 1] as usize);
+            count += 1;
+        }
+    }
+    Ok(ce / count.max(1) as f64)
+}
+
 /// `−log softmax(row)[label]`, max-subtracted, accumulated in f64.
 fn cross_entropy_nats(row: &[f32], label: usize) -> f64 {
     let mut mx = f32::NEG_INFINITY;
@@ -358,6 +399,45 @@ mod tests {
             let p = v.get("log pplx.").unwrap().as_f64().unwrap();
             assert!(p.is_finite() && p > 0.0, "{line}");
         }
+    }
+
+    #[test]
+    fn decode_path_perplexity_matches_the_forward_path_on_f32_pages() {
+        let (preset, model) = toy_transformer(eval_dims(), 3);
+        let plan =
+            ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+        // Same held-out blocks: batch-1 forward eval vs token-by-token
+        // decode eval.  The decode step is bit-identical to the reference
+        // forward position by position, and both sides accumulate CE in
+        // the same order, so the means agree exactly — and the page size
+        // cannot matter for f32 pages.
+        let fwd = HostEvaluator::new(plan.clone(), 1)
+            .unwrap()
+            .log_perplexity(11, 12, 2)
+            .unwrap();
+        let paged = decode_log_perplexity(plan.clone(), KvConfig::f32_paged(3), 11, 12, 2).unwrap();
+        let paged_wide =
+            decode_log_perplexity(plan, KvConfig::f32_paged(16), 11, 12, 2).unwrap();
+        assert!(fwd.is_finite() && fwd > 0.0, "pplx {fwd}");
+        assert_eq!(fwd, paged, "decode-path f32 pages must be bit-identical");
+        assert_eq!(paged, paged_wide, "page size must not change f32 results");
+    }
+
+    #[test]
+    fn int8_kv_pages_cost_bounded_quality() {
+        let (preset, model) = toy_transformer(eval_dims(), 3);
+        let plan =
+            ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+        let f32p = decode_log_perplexity(plan.clone(), KvConfig::f32_paged(4), 11, 12, 2).unwrap();
+        let int8 = decode_log_perplexity(plan, KvConfig::int8(4), 11, 12, 2).unwrap();
+        assert!(int8.is_finite() && int8 > 0.0, "pplx {int8}");
+        // Per-row absmax K/V quantization is lossy but mild; a blow-up
+        // here means scales are being dropped or misapplied somewhere in
+        // the paged read path.
+        assert!(
+            (int8 - f32p).abs() < 1.0,
+            "int8 KV {int8} vs f32 KV {f32p} nats"
+        );
     }
 
     #[test]

@@ -17,6 +17,17 @@
 //! lives at `hoff..hoff + dh` inside each row.  That makes the same kernel
 //! consume both the forward's `(t, d)` K/V scratch and the decode engine's
 //! `(len, d)` cache pages without reshaping.
+//!
+//! Since the KV cache went paged (PR 8), the decode path instead calls
+//! [`attend_single_query_paged`]: the same query attends over a *sequence of
+//! segments* ([`KvSegment`]) — one per physical page the session's block
+//! table maps — in logical row order.  For f32 segments the walk performs
+//! the exact floating-point operations of [`attend_single_query`] in the
+//! exact order (segmentation only changes which slice a row is read from),
+//! so paged-f32 attention is bit-identical to the contiguous kernel.  Int8
+//! segments dequantize inline: each row carries one symmetric scale, folded
+//! into the score (`q·codes · k_scale · inv_sqrt_dh`) and the value
+//! accumulation (`p · v_scale · codes[c]`) without materializing f32 rows.
 
 /// One causal-attention query over `n` cached key/value rows:
 ///
@@ -82,6 +93,144 @@ pub fn attend_single_query(
         let vrow = &vals[vo..vo + dh];
         for c in 0..dh {
             out[c] += pj * vrow[c];
+        }
+    }
+}
+
+/// A run of consecutive K/V rows from one physical page, as borrowed by
+/// the paged attend walk.  Slices start at the segment's first row (offset
+/// 0 = segment row 0) and hold `rows` rows of `stride` floats / codes.
+#[derive(Debug, Clone, Copy)]
+pub enum KvSegment<'a> {
+    /// Raw f32 rows — identical layout to the contiguous cache.
+    F32 {
+        rows: usize,
+        k: &'a [f32],
+        v: &'a [f32],
+    },
+    /// Int8 code rows with one symmetric dequant scale per row
+    /// (`value = code * scale`), stored beside the page.
+    Int8 {
+        rows: usize,
+        k: &'a [i8],
+        v: &'a [i8],
+        k_scales: &'a [f32],
+        v_scales: &'a [f32],
+    },
+}
+
+impl KvSegment<'_> {
+    /// Rows this segment contributes to the logical K/V sequence.
+    pub fn rows(&self) -> usize {
+        match self {
+            KvSegment::F32 { rows, .. } | KvSegment::Int8 { rows, .. } => *rows,
+        }
+    }
+}
+
+/// [`attend_single_query`] over a paged K/V sequence: `segs` concatenated
+/// in order form the `n` logical rows the query attends over.  F32
+/// segments reproduce the contiguous kernel's operations bit-for-bit;
+/// int8 segments dequantize inline through their per-row scales (see the
+/// module docs).  `scores` is caller scratch of length >= `n`; `out` is
+/// accumulated into, exactly like the contiguous kernel.
+#[allow(clippy::too_many_arguments)]
+pub fn attend_single_query_paged(
+    q: &[f32],
+    segs: &[KvSegment<'_>],
+    n: usize,
+    stride: usize,
+    hoff: usize,
+    inv_sqrt_dh: f32,
+    scores: &mut [f32],
+    out: &mut [f32],
+) {
+    let dh = q.len();
+    debug_assert!(scores.len() >= n, "scores scratch too short");
+    debug_assert!(out.len() == dh, "output/head width mismatch");
+    debug_assert_eq!(
+        segs.iter().map(|s| s.rows()).sum::<usize>(),
+        n,
+        "segments must cover exactly n rows"
+    );
+    // Pass 1: scores in logical row order, walking segments.
+    let mut j = 0usize;
+    for seg in segs {
+        match seg {
+            KvSegment::F32 { rows, k, .. } => {
+                for r in 0..*rows {
+                    let ko = r * stride + hoff;
+                    let krow = &k[ko..ko + dh];
+                    let mut s = 0.0f32;
+                    for c in 0..dh {
+                        s += q[c] * krow[c];
+                    }
+                    scores[j] = s * inv_sqrt_dh;
+                    j += 1;
+                }
+            }
+            KvSegment::Int8 { rows, k, k_scales, .. } => {
+                for r in 0..*rows {
+                    let ko = r * stride + hoff;
+                    let krow = &k[ko..ko + dh];
+                    let mut s = 0.0f32;
+                    for c in 0..dh {
+                        s += q[c] * krow[c] as f32;
+                    }
+                    scores[j] = s * k_scales[r] * inv_sqrt_dh;
+                    j += 1;
+                }
+            }
+        }
+    }
+    debug_assert_eq!(j, n);
+    // Max-subtracted softmax over scores[0..n] — verbatim the contiguous
+    // kernel's block, so f32 paging stays bit-identical.
+    let mut mx = f32::NEG_INFINITY;
+    for &s in &scores[..n] {
+        if s > mx {
+            mx = s;
+        }
+    }
+    let mut sum = 0.0f32;
+    for s in scores[..n].iter_mut() {
+        *s = (*s - mx).exp();
+        sum += *s;
+    }
+    let inv_sum = if sum > 0.0 { 1.0 / sum } else { 0.0 };
+    // Pass 2: p·v accumulation in the same logical order.
+    let mut j = 0usize;
+    for seg in segs {
+        match seg {
+            KvSegment::F32 { rows, v, .. } => {
+                for r in 0..*rows {
+                    let pj = scores[j] * inv_sum;
+                    j += 1;
+                    if pj == 0.0 {
+                        continue;
+                    }
+                    let vo = r * stride + hoff;
+                    let vrow = &v[vo..vo + dh];
+                    for c in 0..dh {
+                        out[c] += pj * vrow[c];
+                    }
+                }
+            }
+            KvSegment::Int8 { rows, v, v_scales, .. } => {
+                for r in 0..*rows {
+                    let pj = scores[j] * inv_sum;
+                    j += 1;
+                    if pj == 0.0 {
+                        continue;
+                    }
+                    let pv = pj * v_scales[r];
+                    let vo = r * stride + hoff;
+                    let vrow = &v[vo..vo + dh];
+                    for c in 0..dh {
+                        out[c] += pv * vrow[c] as f32;
+                    }
+                }
+            }
         }
     }
 }
@@ -158,5 +307,125 @@ mod tests {
         attend_single_query(&q, &keys, &vals, 1, 1, 0, 1.0, &mut scores, &mut out);
         // score -inf → exp 0 → sum 0 → inv_sum 0 → out untouched
         assert_eq!(out[0], 0.0);
+    }
+
+    /// Deterministic pseudo-random floats (no external rng in kernels).
+    fn lcg_rows(seed: u64, n: usize) -> Vec<f32> {
+        let mut state = seed.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+        (0..n)
+            .map(|_| {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+                ((state >> 33) as f32 / (1u64 << 31) as f32) - 0.5
+            })
+            .collect()
+    }
+
+    #[test]
+    fn paged_f32_is_bit_identical_to_contiguous_for_every_segmentation() {
+        let stride = 6;
+        let dh = 3;
+        let n = 7;
+        let keys = lcg_rows(11, n * stride);
+        let vals = lcg_rows(22, n * stride);
+        let q = lcg_rows(33, dh);
+        for hoff in [0usize, 3] {
+            let mut scores = vec![0.0f32; n];
+            let mut want = vec![0.0f32; dh];
+            attend_single_query(&q, &keys, &vals, n, stride, hoff, 0.7, &mut scores, &mut want);
+            // Sweep every two-cut segmentation of the 7 rows (incl. empty-free
+            // single segment and page-boundary-like splits).
+            for cut1 in 0..=n {
+                for cut2 in cut1..=n {
+                    let segs = [
+                        KvSegment::F32 {
+                            rows: cut1,
+                            k: &keys[..cut1 * stride],
+                            v: &vals[..cut1 * stride],
+                        },
+                        KvSegment::F32 {
+                            rows: cut2 - cut1,
+                            k: &keys[cut1 * stride..cut2 * stride],
+                            v: &vals[cut1 * stride..cut2 * stride],
+                        },
+                        KvSegment::F32 {
+                            rows: n - cut2,
+                            k: &keys[cut2 * stride..],
+                            v: &vals[cut2 * stride..],
+                        },
+                    ];
+                    let mut got = vec![0.0f32; dh];
+                    let mut s2 = vec![0.0f32; n];
+                    attend_single_query_paged(
+                        &q, &segs, n, stride, hoff, 0.7, &mut s2, &mut got,
+                    );
+                    assert_eq!(
+                        got.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        want.iter().map(|x| x.to_bits()).collect::<Vec<_>>(),
+                        "segmentation ({cut1},{cut2}) hoff {hoff} diverged"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn int8_segments_dequantize_through_per_row_scales() {
+        // Codes chosen so code*scale reproduces exact f32 values; the paged
+        // int8 walk must then match the f32 kernel exactly.
+        let stride = 2;
+        let n = 3;
+        let k_codes: Vec<i8> = vec![10, -20, 40, 5, -8, 16];
+        let v_codes: Vec<i8> = vec![100, 50, -25, 10, 64, -32];
+        let k_scales = [0.5f32, 0.25, 0.125];
+        let v_scales = [0.1f32, 0.2, 0.05];
+        let keys: Vec<f32> = k_codes
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| c as f32 * k_scales[i / stride])
+            .collect();
+        let vals: Vec<f32> = v_codes
+            .iter()
+            .enumerate()
+            .map(|(i, &c)| c as f32 * v_scales[i / stride])
+            .collect();
+        let q = [0.3f32, -0.9];
+        let mut scores = [0.0f32; 3];
+        let mut want = [0.0f32; 2];
+        attend_single_query(&q, &keys, &vals, n, stride, 0, 1.0, &mut scores, &mut want);
+        let segs = [
+            KvSegment::Int8 {
+                rows: 2,
+                k: &k_codes[..4],
+                v: &v_codes[..4],
+                k_scales: &k_scales[..2],
+                v_scales: &v_scales[..2],
+            },
+            KvSegment::Int8 {
+                rows: 1,
+                k: &k_codes[4..],
+                v: &v_codes[4..],
+                k_scales: &k_scales[2..],
+                v_scales: &v_scales[2..],
+            },
+        ];
+        let mut got = [0.0f32; 2];
+        let mut s2 = [0.0f32; 3];
+        attend_single_query_paged(&q, &segs, n, stride, 0, 1.0, &mut s2, &mut got);
+        for (g, w) in got.iter().zip(&want) {
+            assert!((g - w).abs() < 1e-5, "{got:?} vs {want:?}");
+        }
+    }
+
+    #[test]
+    fn paged_walk_accumulates_into_out_like_the_contiguous_kernel() {
+        let segs = [KvSegment::F32 {
+            rows: 1,
+            k: &[1.0f32],
+            v: &[2.0f32],
+        }];
+        let mut scores = [0.0f32; 1];
+        let mut out = [10.0f32];
+        attend_single_query_paged(&[1.0f32], &segs, 1, 1, 0, 1.0, &mut scores, &mut out);
+        assert_eq!(out[0], 12.0);
     }
 }

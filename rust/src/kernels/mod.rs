@@ -13,7 +13,9 @@
 //!   kernels::fused  dequant_packed_into / slice_dequant_into
 //!   kernels::matmul matvec/matmul_packed_into, i8→i32 GEMV
 //!   kernels::attention  single-query causal attention (shared by the
-//!                   full forward and the KV-cached decode step)
+//!                   full forward and the KV-cached decode step), plus
+//!                   the paged-segment walk over KV pages (f32 or int8
+//!                   with inline per-row dequant)
 //!        │
 //!   model::registry QuantizedTensor::materialize / pack_sliced,
 //!                   PackedWeight payload handles (+ byte accounting)
@@ -62,7 +64,7 @@ pub mod lut;
 pub mod matmul;
 pub mod testing;
 
-pub use attention::attend_single_query;
+pub use attention::{attend_single_query, attend_single_query_paged, KvSegment};
 pub use cursor::BitCursor;
 pub use fused::{dequant_packed, dequant_packed_into, slice_dequant, slice_dequant_into};
 pub use matmul::{

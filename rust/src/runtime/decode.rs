@@ -21,53 +21,94 @@
 //! temperature sampling draws from the seeded [`crate::data::Rng`]
 //! (identical streams across platforms), so a `(seed, prompt, weights)`
 //! triple always generates the same text.
+//!
+//! # The paging layer: `PagePool` → block table → paged attend
+//!
+//! Since PR 8 the cache is **paged**: [`KvCache`] is a per-session *block
+//! table* — per layer, an ordered list of `Arc<PageData>` handles into a
+//! shared [`crate::runtime::kv::PagePool`] — not a contiguous buffer.
+//! Pages hold `KvConfig::page_size` positions and are allocated lazily as
+//! rows are pushed, so a young stream holds one page per layer, not its
+//! full capacity; [`KvCache::truncate_to`] (speculative rollback) and
+//! [`KvCache::clear`] return whole pages to the pool, and eviction at
+//! capacity advances a window start instead of memmoving the layer
+//! (drained head pages are recycled — flat per-token cost).  Attention
+//! reads go through [`KvCache::attend`], which walks the block table as
+//! segments ([`crate::kernels::attend_single_query_paged`]) — for f32
+//! pages this performs the contiguous kernel's float ops in the exact
+//! order, so **paged f32 decoding is bit-identical to the pre-paging
+//! cache**; int8 pages (opt-in via [`crate::runtime::kv::KvDtype::Int8`])
+//! dequantize inline through per-row scales.  Two caches on one pool may
+//! map the *same* physical page (copy-on-write prefix sharing,
+//! [`KvCache::adopt_prefix`] / [`DecodeSession::prefill_shared`]); a write
+//! into a shared page clones it first, so siblings never observe each
+//! other's tokens.
 
 use anyhow::ensure;
 use std::sync::Arc;
 
 use super::forward::argmax_logit;
+use super::kv::{KvConfig, PageData, PagePool};
 use super::plan::ForwardPlan;
 use crate::data::Rng;
+use crate::kernels;
 use crate::Result;
 
-/// Per-layer, per-sequence K/V page buffers.
+/// A per-session block-table view over pooled K/V pages.
 ///
-/// Rows are full `d_model` positions (head-major inside the row), stored in
-/// logical position order so [`crate::kernels::attend_single_query`] can
-/// stream them with `stride = d_model` — the exact memory pattern of the
-/// batched forward's K/V scratch.  Capacity is allocated up front
-/// ([`KvCache::bytes`] is the honest resident figure); pushing past
-/// capacity evicts the **oldest** position (an O(len·d) shift that keeps
-/// logical order, counted in [`KvCache::evicted`]).  [`DecodeSession`]
-/// never evicts — it stops at capacity, because learned positions make a
-/// slid window semantically different — but window-style callers get the
-/// accounting for free.
+/// Rows are full `d_model` positions (head-major inside the row) in
+/// logical position order; physically they live in fixed-size pages drawn
+/// from a [`PagePool`] ([`KvCache::with_pool`] — [`KvCache::new`] makes a
+/// private unbounded f32 pool so solo callers need no pool plumbing).
+/// Pushing past `capacity` evicts the **oldest** position by advancing the
+/// window start — O(1), with drained head pages recycled through the pool
+/// — counted in [`KvCache::evicted`].  [`DecodeSession`] never evicts — it
+/// stops at capacity, because learned positions make a slid window
+/// semantically different — but window-style callers get the accounting
+/// for free.  [`KvCache::bytes`] reports pages actually mapped (resident),
+/// not capacity.
 #[derive(Debug, Clone)]
 pub struct KvCache {
+    pool: PagePool,
+    cfg: KvConfig,
     d: usize,
     capacity: usize,
     layers: Vec<LayerKv>,
     evicted: u64,
 }
 
+/// One layer's block table: logical row `j` lives at physical row
+/// `start + j`, i.e. page `(start + j) / page_size`, slot
+/// `(start + j) % page_size`.  `start < page_size` always (a fully-drained
+/// head page is returned to the pool).
 #[derive(Debug, Clone)]
 struct LayerKv {
-    k: Vec<f32>,
-    v: Vec<f32>,
+    pages: Vec<Arc<PageData>>,
+    start: usize,
     len: usize,
 }
 
 impl KvCache {
-    /// Allocate `n_layers` K/V page pairs of `capacity` positions × `d`
-    /// floats each.
+    /// A solo cache: `n_layers` block tables over a private unbounded
+    /// f32 pool (default page geometry).  Bit-identical to the pre-paging
+    /// contiguous cache on every decode path.
     pub fn new(n_layers: usize, d: usize, capacity: usize) -> Self {
+        Self::with_pool(n_layers, d, capacity, PagePool::unbounded(KvConfig::default()))
+    }
+
+    /// A cache drawing pages from a shared pool (the serving path — the
+    /// scheduler owns the pool; every session's block table maps into it).
+    pub fn with_pool(n_layers: usize, d: usize, capacity: usize, pool: PagePool) -> Self {
+        let cfg = pool.cfg();
         KvCache {
+            pool,
+            cfg,
             d,
             capacity,
             layers: (0..n_layers)
                 .map(|_| LayerKv {
-                    k: vec![0.0; capacity * d],
-                    v: vec![0.0; capacity * d],
+                    pages: Vec::new(),
+                    start: 0,
                     len: 0,
                 })
                 .collect(),
@@ -86,6 +127,16 @@ impl KvCache {
 
     pub fn capacity(&self) -> usize {
         self.capacity
+    }
+
+    /// The page geometry of the pool this cache draws from.
+    pub fn kv_config(&self) -> KvConfig {
+        self.cfg
+    }
+
+    /// The pool this cache's block tables map into.
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
     }
 
     /// Positions materialized across **all** layers (mid-step, layers that
@@ -108,51 +159,219 @@ impl KvCache {
         self.evicted
     }
 
-    /// Allocated K/V bytes — what serving reports as KV residency.
+    /// Bytes of pages this cache currently maps — **resident**, not
+    /// capacity: a 1-token stream holds one page per layer.  Pages shared
+    /// with a sibling cache count here (each mapper's view), but only once
+    /// in the pool's [`PagePool::resident_bytes`] gauge.
     pub fn bytes(&self) -> usize {
-        self.layers.len() * 2 * self.capacity * self.d * 4
+        let pages: usize = self.layers.iter().map(|l| l.pages.len()).sum();
+        pages * self.cfg.page_bytes(self.d)
+    }
+
+    /// Physical pages this cache currently maps (all layers).
+    pub fn resident_pages(&self) -> usize {
+        self.layers.iter().map(|l| l.pages.len()).sum()
     }
 
     /// Append one position's K and V rows (`d` floats each) to `layer`,
-    /// evicting the layer's oldest position when full.
+    /// evicting the layer's oldest position when full.  Eviction is O(1):
+    /// the window start advances and a fully-drained head page returns to
+    /// the pool (recycled by a later tail allocation) — no memmove.  A
+    /// write landing in a page still mapped by another cache breaks the
+    /// share first (copy-on-write, content copied verbatim).
     pub fn push(&mut self, layer: usize, k_row: &[f32], v_row: &[f32]) {
         let d = self.d;
         assert_eq!(k_row.len(), d, "K row width mismatch");
         assert_eq!(v_row.len(), d, "V row width mismatch");
         assert!(self.capacity > 0, "zero-capacity KV cache");
-        let lk = &mut self.layers[layer];
-        if lk.len == self.capacity {
-            lk.k.copy_within(d.., 0);
-            lk.v.copy_within(d.., 0);
-            lk.len -= 1;
-            if layer == 0 {
-                self.evicted += 1;
+        let ps = self.cfg.page_size;
+        let popped = {
+            let lk = &mut self.layers[layer];
+            if lk.len == self.capacity {
+                lk.start += 1;
+                lk.len -= 1;
+                if layer == 0 {
+                    self.evicted += 1;
+                }
+                if lk.start == ps {
+                    lk.start = 0;
+                    Some(lk.pages.remove(0))
+                } else {
+                    None
+                }
+            } else {
+                None
             }
+        };
+        if let Some(p) = popped {
+            self.pool.release(p);
         }
-        let off = lk.len * d;
-        lk.k[off..off + d].copy_from_slice(k_row);
-        lk.v[off..off + d].copy_from_slice(v_row);
+        let idx = self.layers[layer].start + self.layers[layer].len;
+        let (pg, off) = (idx / ps, idx % ps);
+        if pg == self.layers[layer].pages.len() {
+            // Lazy tail allocation — the first page a young stream holds.
+            let page = self.pool.alloc(d);
+            self.layers[layer].pages.push(page);
+        }
+        let pool = &self.pool;
+        let lk = &mut self.layers[layer];
+        if Arc::get_mut(&mut lk.pages[pg]).is_none() {
+            // Copy-on-write break: the page is shared with a sibling block
+            // table (prefix sharing or a cloned cache).  Clone it verbatim
+            // — codes AND scales, never re-quantized — then write.
+            let mut fresh = pool.alloc(d);
+            Arc::get_mut(&mut fresh)
+                .expect("freshly allocated page is unshared")
+                .copy_from(&lk.pages[pg]);
+            let old = std::mem::replace(&mut lk.pages[pg], fresh);
+            pool.release(old);
+            pool.note_cow_break();
+        }
+        Arc::get_mut(&mut lk.pages[pg])
+            .expect("page unshared after CoW check")
+            .write_row(off, d, k_row, v_row);
         lk.len += 1;
     }
 
-    /// The filled key rows of `layer` (logical position order,
-    /// `layer_len × d`).
-    pub fn keys(&self, layer: usize) -> &[f32] {
-        let lk = &self.layers[layer];
-        &lk.k[..lk.len * self.d]
+    /// Dequantized key rows of `layer` in logical position order
+    /// (`layer_len × d` floats) — for tests and conformance checks; the
+    /// hot path attends pages in place via [`KvCache::attend`].
+    pub fn key_rows(&self, layer: usize) -> Vec<f32> {
+        self.read_rows(layer, true)
     }
 
-    /// The filled value rows of `layer`.
-    pub fn vals(&self, layer: usize) -> &[f32] {
-        let lk = &self.layers[layer];
-        &lk.v[..lk.len * self.d]
+    /// Dequantized value rows of `layer` (see [`KvCache::key_rows`]).
+    pub fn val_rows(&self, layer: usize) -> Vec<f32> {
+        self.read_rows(layer, false)
     }
 
-    /// Drop every cached position and reset the eviction counter (the
-    /// cache can be re-prefilled as a fresh sequence).
+    fn read_rows(&self, layer: usize, keys: bool) -> Vec<f32> {
+        let lk = &self.layers[layer];
+        let (d, ps) = (self.d, self.cfg.page_size);
+        let mut out = vec![0.0f32; lk.len * d];
+        for j in 0..lk.len {
+            let idx = lk.start + j;
+            let dst = &mut out[j * d..(j + 1) * d];
+            if keys {
+                lk.pages[idx / ps].read_k_row(idx % ps, d, dst);
+            } else {
+                lk.pages[idx / ps].read_v_row(idx % ps, d, dst);
+            }
+        }
+        out
+    }
+
+    /// The block-table segments covering the first `n` logical rows of
+    /// `layer`, in logical order — the paged attend walk's input.
+    fn segments(&self, layer: usize, n: usize) -> Vec<kernels::KvSegment<'_>> {
+        let lk = &self.layers[layer];
+        debug_assert!(n <= lk.len, "attend over unmaterialized rows");
+        let ps = self.cfg.page_size;
+        let mut segs = Vec::with_capacity(lk.pages.len());
+        let mut row = lk.start;
+        let mut left = n;
+        while left > 0 {
+            let (pg, off) = (row / ps, row % ps);
+            let take = (ps - off).min(left);
+            segs.push(lk.pages[pg].segment(off, take, self.d));
+            row += take;
+            left -= take;
+        }
+        segs
+    }
+
+    /// Single-query attention for one position over the first `n` cached
+    /// rows of `layer`, all heads: `q_row`/`out_row` are full `d_model`
+    /// rows (head `h` at `h·dh`), `scores` is caller scratch of length
+    /// ≥ `n`.  Walks the block table via
+    /// [`crate::kernels::attend_single_query_paged`] — bit-identical to
+    /// the contiguous [`crate::kernels::attend_single_query`] on f32
+    /// pages, inline per-row dequant on int8 pages.
+    #[allow(clippy::too_many_arguments)]
+    pub fn attend(
+        &self,
+        layer: usize,
+        n: usize,
+        q_row: &[f32],
+        n_heads: usize,
+        inv_sqrt_dh: f32,
+        scores: &mut [f32],
+        out_row: &mut [f32],
+    ) {
+        let d = self.d;
+        let dh = d / n_heads;
+        let segs = self.segments(layer, n);
+        for head in 0..n_heads {
+            let hoff = head * dh;
+            kernels::attend_single_query_paged(
+                &q_row[hoff..hoff + dh],
+                &segs,
+                n,
+                d,
+                hoff,
+                inv_sqrt_dh,
+                &mut scores[..n],
+                &mut out_row[hoff..hoff + dh],
+            );
+        }
+    }
+
+    /// Map the first `rows` positions of `donor`'s block tables into this
+    /// (empty) cache **without copying**: both tables reference the same
+    /// physical pages (Arc clones; the pool gauge counts them once) — the
+    /// copy-on-write prefix share behind
+    /// [`DecodeSession::prefill_shared`].  `rows` must be page-aligned so
+    /// shared pages are full (the adopter's own tokens land in fresh tail
+    /// pages; only rollback into the shared region triggers a CoW break).
+    pub fn adopt_prefix(&mut self, donor: &KvCache, rows: usize) -> Result<()> {
+        ensure!(self.is_empty(), "adopt_prefix requires an empty cache");
+        ensure!(
+            self.d == donor.d && self.cfg == donor.cfg,
+            "adopt_prefix across page geometries"
+        );
+        ensure!(
+            self.pool.same_pool(&donor.pool),
+            "adopt_prefix across page pools"
+        );
+        ensure!(
+            self.layers.len() == donor.layers.len(),
+            "adopt_prefix layer-count mismatch"
+        );
+        let ps = self.cfg.page_size;
+        ensure!(
+            rows > 0 && rows % ps == 0,
+            "shared prefix must be a positive page multiple, got {rows} rows at page_size {ps}"
+        );
+        ensure!(rows <= self.capacity, "shared prefix exceeds adopter capacity");
+        let pages = rows / ps;
+        for (li, lk) in self.layers.iter_mut().enumerate() {
+            let dl = &donor.layers[li];
+            ensure!(dl.start == 0, "donor layer {li} has evicted rows");
+            ensure!(
+                dl.len >= rows,
+                "donor layer {li} holds {} rows < shared {rows}",
+                dl.len
+            );
+            lk.pages.extend(dl.pages[..pages].iter().cloned());
+            lk.len = rows;
+        }
+        let n = (pages * self.layers.len()) as u64;
+        self.pool
+            .note_shared(n, n * self.cfg.page_bytes(self.d) as u64);
+        Ok(())
+    }
+
+    /// Drop every cached position, return all pages to the pool, and reset
+    /// the eviction counter (the cache can be re-prefilled as a fresh
+    /// sequence).
     pub fn clear(&mut self) {
-        for l in &mut self.layers {
-            l.len = 0;
+        let pool = &self.pool;
+        for lk in &mut self.layers {
+            for p in lk.pages.drain(..) {
+                pool.release(p);
+            }
+            lk.start = 0;
+            lk.len = 0;
         }
         self.evicted = 0;
     }
@@ -163,13 +382,38 @@ impl KvCache {
     /// draft tokens that failed verification vanish, and the rows up to
     /// `pos` are untouched (they were never rewritten, only appended past).
     /// A `pos` at or beyond a layer's length is a no-op for that layer, so
-    /// truncating mid-step (layers one ahead) is safe.  Allocation is
-    /// capacity-based, so [`KvCache::bytes`] — and the serving KV gauge —
-    /// never move on rollback.
+    /// truncating mid-step (layers one ahead) is safe.  Whole pages past
+    /// the new tail **return to the pool** — rollback frees memory instead
+    /// of holding peak ([`KvCache::bytes`] and the serving gauge shrink).
     pub fn truncate_to(&mut self, pos: usize) {
-        for l in &mut self.layers {
-            if l.len > pos {
-                l.len = pos;
+        let ps = self.cfg.page_size;
+        let pool = &self.pool;
+        for lk in &mut self.layers {
+            if lk.len <= pos {
+                continue;
+            }
+            lk.len = pos;
+            if lk.len == 0 {
+                lk.start = 0;
+            }
+            let keep = if lk.len == 0 {
+                0
+            } else {
+                (lk.start + lk.len).div_ceil(ps)
+            };
+            for p in lk.pages.split_off(keep) {
+                pool.release(p);
+            }
+        }
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        let pool = &self.pool;
+        for lk in &mut self.layers {
+            for p in lk.pages.drain(..) {
+                pool.release(p);
             }
         }
     }
@@ -261,12 +505,19 @@ pub struct DecodeSession {
     // directly on the cache, position, and logits row — state transitions
     // plain `advance` cannot express.
     pub(crate) plan: Arc<ForwardPlan>,
+    /// The plan the prompt was prefilled on.  [`DecodeSession::switch_plan`]
+    /// moves `plan` but never this — copy-on-write prefix sharing matches
+    /// donors on the plan that actually computed their prompt K/V rows.
+    prefix_plan: Arc<ForwardPlan>,
     pub(crate) cache: KvCache,
     /// Next-token distribution (updated by prefill and every advance).
     pub(crate) logits: Vec<f32>,
     /// Positions consumed so far (prompt + fed-back tokens).
     pub(crate) pos: usize,
     prompt_len: usize,
+    /// The prompt as prefilled (post truncate/pad) — the prefix-sharing
+    /// donor match key.
+    prompt: Vec<i32>,
     sampling: Sampling,
     rng: Rng,
     pub(crate) generated: Vec<i32>,
@@ -294,7 +545,19 @@ impl DecodeSession {
         sampling: Sampling,
         max_new_tokens: usize,
     ) -> Result<Self> {
-        let mut v = Self::prefill_many(&plan, &[(prompt, sampling, max_new_tokens)])?;
+        Self::with_budget_pooled(plan, prompt, sampling, max_new_tokens, None)
+    }
+
+    /// [`DecodeSession::with_budget`] drawing KV pages from a shared pool
+    /// (`None` falls back to a private unbounded pool).
+    pub fn with_budget_pooled(
+        plan: Arc<ForwardPlan>,
+        prompt: &[i32],
+        sampling: Sampling,
+        max_new_tokens: usize,
+        pool: Option<&PagePool>,
+    ) -> Result<Self> {
+        let mut v = Self::prefill_many_pooled(&plan, &[(prompt, sampling, max_new_tokens)], pool)?;
         Ok(v.pop().expect("one spec yields one session"))
     }
 
@@ -312,6 +575,18 @@ impl DecodeSession {
         plan: &Arc<ForwardPlan>,
         specs: &[(&[i32], Sampling, usize)],
     ) -> Result<Vec<DecodeSession>> {
+        Self::prefill_many_pooled(plan, specs, None)
+    }
+
+    /// [`DecodeSession::prefill_many`] drawing every session's KV pages
+    /// from a shared [`PagePool`] (`None` gives each session a private
+    /// unbounded pool).  The serving scheduler passes its pool here so
+    /// admission can budget actual resident pages across all streams.
+    pub fn prefill_many_pooled(
+        plan: &Arc<ForwardPlan>,
+        specs: &[(&[i32], Sampling, usize)],
+        pool: Option<&PagePool>,
+    ) -> Result<Vec<DecodeSession>> {
         ensure!(!specs.is_empty(), "empty prefill batch");
         let seq = plan.dims.seq_len;
         let mut toks_list: Vec<Vec<i32>> = Vec::with_capacity(specs.len());
@@ -328,7 +603,12 @@ impl DecodeSession {
                 .len()
                 .saturating_add(max_new_tokens.saturating_sub(1))
                 .min(seq);
-            caches.push(KvCache::new(plan.dims.n_layers, plan.dims.d_model, capacity));
+            caches.push(match pool {
+                Some(p) => {
+                    KvCache::with_pool(plan.dims.n_layers, plan.dims.d_model, capacity, p.clone())
+                }
+                None => KvCache::new(plan.dims.n_layers, plan.dims.d_model, capacity),
+            });
             toks_list.push(toks);
         }
         let prompts: Vec<&[i32]> = toks_list.iter().map(|v| v.as_slice()).collect();
@@ -347,18 +627,99 @@ impl DecodeSession {
                 Sampling::Temperature { seed, .. } => Rng::new(*seed),
                 Sampling::Greedy => Rng::new(0),
             };
+            let pos = toks.len();
             out.push(DecodeSession {
                 plan: plan.clone(),
+                prefix_plan: plan.clone(),
                 cache,
                 logits: logits[i * v..(i + 1) * v].to_vec(),
-                pos: toks.len(),
-                prompt_len: toks.len(),
+                pos,
+                prompt_len: pos,
+                prompt: toks,
                 sampling: *sampling,
                 rng,
                 generated: Vec::new(),
             });
         }
         Ok(out)
+    }
+
+    /// Build a session whose prompt shares a page-aligned prefix with a
+    /// live `donor` session **without recomputing or copying it**: the
+    /// first `shared` K/V rows are adopted as shared physical pages
+    /// ([`KvCache::adopt_prefix`]; the pool counts them once) and only the
+    /// remaining `prompt_len − shared` suffix rows run through one causal
+    /// window pass ([`ForwardPlan::decode_window_batch`]).  Both the
+    /// adopted rows and the windowed suffix are bit-identical to a full
+    /// solo prefill — the same equivalence contracts that back speculative
+    /// verification — so the resulting session is indistinguishable from
+    /// one built with [`DecodeSession::with_budget_pooled`], it just
+    /// skipped the shared prefix's compute and memory.
+    ///
+    /// Errors (without touching the donor) when the prefix is not a
+    /// positive page multiple strictly inside the prompt, the donor was
+    /// prefilled on a different plan, its prompt/cache no longer hold the
+    /// prefix, or the pools differ.
+    pub fn prefill_shared(
+        plan: &Arc<ForwardPlan>,
+        prompt: &[i32],
+        sampling: Sampling,
+        max_new_tokens: usize,
+        pool: &PagePool,
+        donor: &DecodeSession,
+        shared: usize,
+    ) -> Result<DecodeSession> {
+        sampling.validate()?;
+        let seq = plan.dims.seq_len;
+        let mut toks: Vec<i32> = prompt.iter().copied().take(seq).collect();
+        if toks.is_empty() {
+            toks.push(0);
+        }
+        ensure!(
+            shared >= 1 && shared < toks.len(),
+            "shared prefix must cover 1..prompt_len-1 rows, got {shared} of {}",
+            toks.len()
+        );
+        ensure!(
+            Arc::ptr_eq(&donor.prefix_plan, plan),
+            "donor prompt was prefilled on a different plan"
+        );
+        ensure!(
+            donor.prompt.len() >= shared && donor.prompt[..shared] == toks[..shared],
+            "donor prompt does not share the first {shared} tokens"
+        );
+        ensure!(
+            donor.cache.len() >= shared,
+            "donor cache no longer holds the shared prefix"
+        );
+        let capacity = toks
+            .len()
+            .saturating_add(max_new_tokens.saturating_sub(1))
+            .min(seq);
+        let mut cache =
+            KvCache::with_pool(plan.dims.n_layers, plan.dims.d_model, capacity, pool.clone());
+        cache.adopt_prefix(&donor.cache, shared)?;
+        let k = toks.len() - shared;
+        let logits_all = plan.decode_window_batch(&toks[shared..], k, &[shared], &mut [&mut cache])?;
+        let v = plan.dims.vocab;
+        let logits = logits_all[(k - 1) * v..k * v].to_vec();
+        let rng = match sampling {
+            Sampling::Temperature { seed, .. } => Rng::new(seed),
+            Sampling::Greedy => Rng::new(0),
+        };
+        let pos = toks.len();
+        Ok(DecodeSession {
+            plan: plan.clone(),
+            prefix_plan: plan.clone(),
+            cache,
+            logits,
+            pos,
+            prompt_len: pos,
+            prompt: toks,
+            sampling,
+            rng,
+            generated: Vec::new(),
+        })
     }
 
     /// The current next-token distribution (one `vocab`-wide row).
@@ -371,6 +732,20 @@ impl DecodeSession {
     /// round member to share one plan).
     pub fn plan(&self) -> &Arc<ForwardPlan> {
         &self.plan
+    }
+
+    /// The plan the prompt was prefilled on (unchanged by
+    /// [`DecodeSession::switch_plan`]) — prefix-sharing donors must match
+    /// the admitting plan here, or their cached prompt rows would differ
+    /// from what the new stream's prefill would compute.
+    pub fn prefix_plan(&self) -> &Arc<ForwardPlan> {
+        &self.prefix_plan
+    }
+
+    /// The prompt as prefilled (post truncate/pad) — what prefix-sharing
+    /// compares against.
+    pub fn prompt_tokens(&self) -> &[i32] {
+        &self.prompt
     }
 
     /// Prompt positions consumed by the prefill (post truncate/pad).
@@ -388,7 +763,8 @@ impl DecodeSession {
         &self.generated
     }
 
-    /// Resident KV bytes of this sequence.
+    /// Resident KV bytes of this sequence — pages actually mapped, not
+    /// capacity (a young stream reports one page per layer).
     pub fn kv_bytes(&self) -> usize {
         self.cache.bytes()
     }
@@ -519,7 +895,7 @@ mod tests {
     #[test]
     fn kv_cache_accounting_and_eviction() {
         let mut c = KvCache::new(2, 3, 2);
-        assert_eq!(c.bytes(), 2 * 2 * 2 * 3 * 4);
+        assert_eq!(c.bytes(), 0, "lazy allocation: empty cache maps no pages");
         assert!(c.is_empty());
         let rows: Vec<Vec<f32>> = (0..3)
             .map(|i| (0..3).map(|j| (i * 3 + j) as f32).collect())
@@ -530,44 +906,133 @@ mod tests {
             assert_eq!(c.len(), i + 1);
         }
         assert_eq!(c.evicted(), 0);
-        assert_eq!(c.keys(0), &[0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
+        let pb = c.kv_config().page_bytes(3);
+        assert_eq!(c.bytes(), 2 * pb, "one page per layer after 2 rows");
+        assert_eq!(c.key_rows(0), vec![0.0, 1.0, 2.0, 3.0, 4.0, 5.0]);
         // third push evicts the oldest, preserving logical order
         c.push(0, &rows[2], &rows[2]);
         c.push(1, &rows[2], &rows[2]);
         assert_eq!(c.len(), 2);
         assert_eq!(c.evicted(), 1);
-        assert_eq!(c.keys(0), &[3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
-        assert_eq!(c.vals(1), c.keys(1));
+        assert_eq!(c.key_rows(0), vec![3.0, 4.0, 5.0, 6.0, 7.0, 8.0]);
+        assert_eq!(c.val_rows(1), c.key_rows(1));
         c.clear();
         assert!(c.is_empty());
-        assert_eq!(c.keys(0), &[] as &[f32]);
+        assert_eq!(c.key_rows(0), Vec::<f32>::new());
+        assert_eq!(c.bytes(), 0, "clear returns every page to the pool");
+        assert_eq!(c.pool().resident_pages(), 0);
     }
 
     #[test]
-    fn truncate_to_rolls_back_rows_without_moving_bytes() {
-        let mut c = KvCache::new(2, 2, 4);
-        let bytes = c.bytes();
-        let rows: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32, -(i as f32)]).collect();
+    fn eviction_at_capacity_recycles_pages_instead_of_reallocating() {
+        // Regression for the O(len·d) copy_within eviction: a stream
+        // pinned at capacity must neither memmove rows nor allocate fresh
+        // pages per token — the drained head page is recycled at the tail.
+        let pool = PagePool::unbounded(KvConfig::f32_paged(3));
+        let mut c = KvCache::with_pool(1, 4, 6, pool.clone());
+        let row = |i: usize| vec![i as f32; 4];
+        for i in 0..6 {
+            c.push(0, &row(i), &row(i));
+        }
+        let fresh_after_fill = pool.fresh_allocs();
+        assert_eq!(fresh_after_fill, 2, "6 rows at page_size 3 = 2 pages");
+        for i in 6..60 {
+            c.push(0, &row(i), &row(i));
+        }
+        assert_eq!(c.len(), 6);
+        assert_eq!(c.evicted(), 54);
+        // Steady state: at most one transient extra page per layer, and
+        // every post-fill allocation beyond it came from the free list.
+        assert!(
+            pool.fresh_allocs() <= fresh_after_fill + 1,
+            "eviction must not allocate fresh pages per token: {} fresh",
+            pool.fresh_allocs()
+        );
+        assert!(
+            pool.recycle_hits() >= 10,
+            "drained head pages must be recycled, got {} hits",
+            pool.recycle_hits()
+        );
+        assert!(c.resident_pages() <= 3);
+        // Logical order survives the rotating window.
+        let keys = c.key_rows(0);
+        let want: Vec<f32> = (54..60).flat_map(|i| vec![i as f32; 4]).collect();
+        assert_eq!(keys, want);
+    }
+
+    #[test]
+    fn truncate_to_returns_whole_pages_to_the_pool() {
+        let pool = PagePool::unbounded(KvConfig::f32_paged(2));
+        let mut c = KvCache::with_pool(2, 2, 8, pool.clone());
+        let rows: Vec<Vec<f32>> = (0..7).map(|i| vec![i as f32, -(i as f32)]).collect();
         for r in &rows {
             c.push(0, r, r);
             c.push(1, r, r);
         }
-        assert_eq!(c.len(), 4);
-        // Rollback drops the provisional tail; surviving rows are intact.
-        c.truncate_to(2);
-        assert_eq!(c.len(), 2);
-        assert_eq!(c.layer_len(0), 2);
-        assert_eq!(c.keys(0), &[0.0, -0.0, 1.0, -1.0]);
-        assert_eq!(c.bytes(), bytes, "capacity-based bytes must not move");
+        assert_eq!(c.len(), 7);
+        assert_eq!(c.resident_pages(), 2 * 4, "ceil(7/2) pages per layer");
+        let bytes_full = c.bytes();
+        // Rollback mid-page: 3 rows keep ceil(3/2) = 2 pages per layer.
+        c.truncate_to(3);
+        assert_eq!(c.len(), 3);
+        assert_eq!(c.layer_len(0), 3);
+        assert_eq!(c.key_rows(0), vec![0.0, -0.0, 1.0, -1.0, 2.0, -2.0]);
+        assert_eq!(c.resident_pages(), 2 * 2);
+        assert!(c.bytes() < bytes_full, "rollback frees memory, not peak");
+        assert_eq!(pool.resident_pages(), 2 * 2, "pages went back to the pool");
         // Truncating past the length is a no-op; re-pushing after rollback
         // appends at the rolled-back position.
         c.truncate_to(10);
-        assert_eq!(c.len(), 2);
+        assert_eq!(c.len(), 3);
         c.push(0, &rows[3], &rows[3]);
-        assert_eq!(c.layer_len(0), 3);
-        assert_eq!(&c.keys(0)[4..], &[3.0, -3.0]);
+        assert_eq!(c.layer_len(0), 4);
+        assert_eq!(&c.key_rows(0)[6..], &[3.0, -3.0]);
         c.truncate_to(0);
         assert!(c.is_empty());
+        assert_eq!(c.bytes(), 0);
+        assert_eq!(pool.resident_pages(), 0);
+    }
+
+    #[test]
+    fn cow_break_preserves_the_sibling_rows() {
+        let pool = PagePool::unbounded(KvConfig::f32_paged(2));
+        let mut donor = KvCache::with_pool(1, 2, 6, pool.clone());
+        let rows: Vec<Vec<f32>> = (0..4).map(|i| vec![i as f32, 10.0 + i as f32]).collect();
+        for r in &rows {
+            donor.push(0, r, r);
+        }
+        assert_eq!(pool.resident_pages(), 2);
+        let mut adopter = KvCache::with_pool(1, 2, 6, pool.clone());
+        adopter.adopt_prefix(&donor, 2).unwrap();
+        assert_eq!(adopter.len(), 2);
+        assert_eq!(
+            pool.resident_pages(),
+            2,
+            "a shared page is counted once in the pool"
+        );
+        assert_eq!(pool.shared_pages(), 1);
+        // The adopter's own tokens land in a fresh tail page — no break.
+        adopter.push(0, &[7.0, 7.5], &[7.0, 7.5]);
+        assert_eq!(pool.cow_breaks(), 0);
+        assert_eq!(pool.resident_pages(), 3);
+        // Roll back INTO the shared page and diverge: the write must clone
+        // the page, leaving the donor's rows bit-intact.
+        adopter.truncate_to(1);
+        adopter.push(0, &[9.0, 9.5], &[9.0, 9.5]);
+        assert_eq!(pool.cow_breaks(), 1, "divergent write breaks the share");
+        assert_eq!(adopter.key_rows(0), vec![0.0, 10.0, 9.0, 9.5]);
+        assert_eq!(
+            donor.key_rows(0),
+            vec![0.0, 10.0, 1.0, 11.0, 2.0, 12.0, 3.0, 13.0],
+            "sibling rows must not be corrupted by the divergent write"
+        );
+        // Misaligned / oversized adoptions are rejected.
+        let mut bad = KvCache::with_pool(1, 2, 6, pool.clone());
+        assert!(bad.adopt_prefix(&donor, 3).is_err(), "mid-page prefix");
+        assert!(bad.adopt_prefix(&donor, 6).is_err(), "beyond donor rows");
+        let other_pool = PagePool::unbounded(KvConfig::f32_paged(2));
+        let mut foreign = KvCache::with_pool(1, 2, 6, other_pool);
+        assert!(foreign.adopt_prefix(&donor, 2).is_err(), "cross-pool");
     }
 
     #[test]

@@ -1,0 +1,501 @@
+//! The KV paging layer: `PagePool` → block table → paged attend.
+//!
+//! PR 5's `KvCache` was one contiguous f32 buffer per session, eagerly
+//! allocated at full capacity — the admission unit was a whole stream and
+//! `kv_capacity_bytes` capped concurrency far below what the nested-payload
+//! weight side can feed.  This module breaks K/V into **fixed-size pages**
+//! drawn from a shared [`PagePool`]:
+//!
+//! * [`KvConfig`] — the page geometry: `page_size` rows per page and the
+//!   storage [`KvDtype`] (`F32`, or opt-in `Int8` with per-row scales kept
+//!   beside the page's codes, quantized through the same symmetric row
+//!   quantizer as int8 activations — `quant::quantize_acts_into`).
+//! * [`PageData`] — one page: `page_size` K rows + `page_size` V rows,
+//!   either f32 or int8 codes + scale vectors.  Pages are handed out as
+//!   `Arc<PageData>` so two sessions with a common prompt prefix can map
+//!   the **same physical page** (copy-on-write prefix sharing: the pool
+//!   gauge counts a shared page once; the first divergent write to a
+//!   shared page clones it — `cow_breaks` counts those).
+//! * [`PagePool`] — the allocator the scheduler/server owns: lazy
+//!   allocation (a 1-token stream holds one page per layer, not its full
+//!   capacity), a free list so eviction/truncation **recycles** pages
+//!   instead of re-allocating, and residency/sharing gauges
+//!   (`resident_bytes` is what the admission budget and `Metrics::kv_bytes`
+//!   now report — actual pages in use, not capacity).
+//!
+//! Allocation is *soft*: `alloc` never fails, so a live stream can always
+//! finish — the byte budget is enforced at **admission** (defer new
+//! prefills while `resident_bytes + projected pages` exceeds the cap), the
+//! PR 5 "defer, never evict" contract at page granularity.
+//!
+//! The block-table view over these pages lives in
+//! [`crate::runtime::decode::KvCache`]; the segment walk that attends over
+//! them (dequantizing int8 inline) is
+//! [`crate::kernels::attend_single_query_paged`].
+
+use std::sync::{Arc, Mutex};
+
+use crate::kernels::KvSegment;
+use crate::quant::{quantize_acts_into, ActQuantConfig};
+
+/// K/V storage element type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum KvDtype {
+    /// 4 bytes per element — bit-identical to the pre-paging contiguous
+    /// cache (pure layout refactor).
+    F32,
+    /// 1 byte per element + one f32 scale per row (kept beside the page);
+    /// opt-in, judged by decode-path quality deltas.
+    Int8,
+}
+
+/// Page geometry for a [`PagePool`] and every cache drawing from it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct KvConfig {
+    /// Rows (token positions) per page, per layer.  Smaller pages waste
+    /// less on short streams but cost more table walks.
+    pub page_size: usize,
+    /// Storage type for K/V elements.
+    pub dtype: KvDtype,
+}
+
+impl Default for KvConfig {
+    fn default() -> Self {
+        KvConfig {
+            page_size: 16,
+            dtype: KvDtype::F32,
+        }
+    }
+}
+
+impl KvConfig {
+    /// F32 pages of `page_size` rows (bit-identical to contiguous KV).
+    pub fn f32_paged(page_size: usize) -> Self {
+        assert!(page_size >= 1, "page_size must be >= 1");
+        KvConfig {
+            page_size,
+            dtype: KvDtype::F32,
+        }
+    }
+
+    /// Int8 pages of `page_size` rows (~4x more rows per byte).
+    pub fn int8(page_size: usize) -> Self {
+        assert!(page_size >= 1, "page_size must be >= 1");
+        KvConfig {
+            page_size,
+            dtype: KvDtype::Int8,
+        }
+    }
+
+    /// Bytes one page occupies at model width `d` (K + V rows, plus the
+    /// per-row scale vectors on the int8 path).
+    pub fn page_bytes(&self, d: usize) -> usize {
+        match self.dtype {
+            KvDtype::F32 => 2 * self.page_size * d * 4,
+            KvDtype::Int8 => 2 * self.page_size * d + 2 * self.page_size * 4,
+        }
+    }
+}
+
+/// One physical K/V page: `page_size` K rows and V rows of width `d`.
+#[derive(Debug, Clone)]
+pub enum PageData {
+    F32 {
+        k: Vec<f32>,
+        v: Vec<f32>,
+    },
+    Int8 {
+        k: Vec<i8>,
+        v: Vec<i8>,
+        k_scales: Vec<f32>,
+        v_scales: Vec<f32>,
+    },
+}
+
+impl PageData {
+    fn fresh(cfg: KvConfig, d: usize) -> PageData {
+        let n = cfg.page_size * d;
+        match cfg.dtype {
+            KvDtype::F32 => PageData::F32 {
+                k: vec![0.0; n],
+                v: vec![0.0; n],
+            },
+            KvDtype::Int8 => PageData::Int8 {
+                k: vec![0; n],
+                v: vec![0; n],
+                k_scales: vec![1.0; cfg.page_size],
+                v_scales: vec![1.0; cfg.page_size],
+            },
+        }
+    }
+
+    /// Does this (recycled) page's buffer geometry fit `cfg` at width `d`?
+    fn fits(&self, cfg: KvConfig, d: usize) -> bool {
+        let n = cfg.page_size * d;
+        match (self, cfg.dtype) {
+            (PageData::F32 { k, v }, KvDtype::F32) => k.len() == n && v.len() == n,
+            (PageData::Int8 { k, v, k_scales, .. }, KvDtype::Int8) => {
+                k.len() == n && v.len() == n && k_scales.len() == cfg.page_size
+            }
+            _ => false,
+        }
+    }
+
+    fn byte_size(&self) -> usize {
+        match self {
+            PageData::F32 { k, v } => (k.len() + v.len()) * 4,
+            PageData::Int8 {
+                k,
+                v,
+                k_scales,
+                v_scales,
+            } => k.len() + v.len() + (k_scales.len() + v_scales.len()) * 4,
+        }
+    }
+
+    /// Write one K/V row at page-local `row`.  The int8 path quantizes the
+    /// row symmetrically (absmax, the activation quantizer) and stores its
+    /// scale beside the page.
+    pub fn write_row(&mut self, row: usize, d: usize, k_row: &[f32], v_row: &[f32]) {
+        debug_assert_eq!(k_row.len(), d);
+        debug_assert_eq!(v_row.len(), d);
+        match self {
+            PageData::F32 { k, v } => {
+                k[row * d..(row + 1) * d].copy_from_slice(k_row);
+                v[row * d..(row + 1) * d].copy_from_slice(v_row);
+            }
+            PageData::Int8 {
+                k,
+                v,
+                k_scales,
+                v_scales,
+            } => {
+                let cfg = ActQuantConfig::absmax();
+                k_scales[row] = quantize_acts_into(k_row, &cfg, &mut k[row * d..(row + 1) * d]);
+                v_scales[row] = quantize_acts_into(v_row, &cfg, &mut v[row * d..(row + 1) * d]);
+            }
+        }
+    }
+
+    /// Overwrite this page with `other`'s content verbatim (codes AND
+    /// scales — a copy-on-write break must not re-quantize).
+    pub fn copy_from(&mut self, other: &PageData) {
+        match (self, other) {
+            (PageData::F32 { k, v }, PageData::F32 { k: ok, v: ov }) => {
+                k.copy_from_slice(ok);
+                v.copy_from_slice(ov);
+            }
+            (
+                PageData::Int8 {
+                    k,
+                    v,
+                    k_scales,
+                    v_scales,
+                },
+                PageData::Int8 {
+                    k: ok,
+                    v: ov,
+                    k_scales: oks,
+                    v_scales: ovs,
+                },
+            ) => {
+                k.copy_from_slice(ok);
+                v.copy_from_slice(ov);
+                k_scales.copy_from_slice(oks);
+                v_scales.copy_from_slice(ovs);
+            }
+            _ => panic!("copy_from across KV dtypes"),
+        }
+    }
+
+    /// A borrowed kernel segment over `rows` rows starting at page-local
+    /// `row` (segment-row 0 lands at slice offset 0).
+    pub fn segment(&self, row: usize, rows: usize, d: usize) -> KvSegment<'_> {
+        match self {
+            PageData::F32 { k, v } => KvSegment::F32 {
+                rows,
+                k: &k[row * d..(row + rows) * d],
+                v: &v[row * d..(row + rows) * d],
+            },
+            PageData::Int8 {
+                k,
+                v,
+                k_scales,
+                v_scales,
+            } => KvSegment::Int8 {
+                rows,
+                k: &k[row * d..(row + rows) * d],
+                v: &v[row * d..(row + rows) * d],
+                k_scales: &k_scales[row..row + rows],
+                v_scales: &v_scales[row..row + rows],
+            },
+        }
+    }
+
+    /// Dequantize one K row into `out` (logical-order copies for tests and
+    /// conformance checks).
+    pub fn read_k_row(&self, row: usize, d: usize, out: &mut [f32]) {
+        match self {
+            PageData::F32 { k, .. } => out.copy_from_slice(&k[row * d..(row + 1) * d]),
+            PageData::Int8 { k, k_scales, .. } => {
+                let s = k_scales[row];
+                for (o, &c) in out.iter_mut().zip(&k[row * d..(row + 1) * d]) {
+                    *o = c as f32 * s;
+                }
+            }
+        }
+    }
+
+    /// Dequantize one V row into `out`.
+    pub fn read_v_row(&self, row: usize, d: usize, out: &mut [f32]) {
+        match self {
+            PageData::F32 { v, .. } => out.copy_from_slice(&v[row * d..(row + 1) * d]),
+            PageData::Int8 { v, v_scales, .. } => {
+                let s = v_scales[row];
+                for (o, &c) in out.iter_mut().zip(&v[row * d..(row + 1) * d]) {
+                    *o = c as f32 * s;
+                }
+            }
+        }
+    }
+}
+
+/// Keep at most this many recycled pages parked in the free list.
+const FREE_LIST_CAP: usize = 256;
+
+#[derive(Debug)]
+struct PoolInner {
+    cfg: KvConfig,
+    capacity_bytes: Option<u64>,
+    resident_pages: usize,
+    resident_bytes: u64,
+    peak_bytes: u64,
+    fresh_allocs: u64,
+    recycle_hits: u64,
+    shared_pages: u64,
+    shared_bytes: u64,
+    cow_breaks: u64,
+    free: Vec<PageData>,
+}
+
+/// The shared page allocator (see the module docs).  Clones are handles to
+/// the same pool; every gauge counts physical pages once, however many
+/// block tables map them.
+#[derive(Debug, Clone)]
+pub struct PagePool {
+    inner: Arc<Mutex<PoolInner>>,
+}
+
+impl PagePool {
+    /// A pool with the given page geometry and an optional byte budget
+    /// (admission-time only — `alloc` itself never fails).
+    pub fn new(cfg: KvConfig, capacity_bytes: Option<u64>) -> PagePool {
+        assert!(cfg.page_size >= 1, "page_size must be >= 1");
+        PagePool {
+            inner: Arc::new(Mutex::new(PoolInner {
+                cfg,
+                capacity_bytes,
+                resident_pages: 0,
+                resident_bytes: 0,
+                peak_bytes: 0,
+                fresh_allocs: 0,
+                recycle_hits: 0,
+                shared_pages: 0,
+                shared_bytes: 0,
+                cow_breaks: 0,
+                free: Vec::new(),
+            })),
+        }
+    }
+
+    /// A budget-free pool (solo sessions, tests).
+    pub fn unbounded(cfg: KvConfig) -> PagePool {
+        PagePool::new(cfg, None)
+    }
+
+    /// The page geometry every cache on this pool uses.
+    pub fn cfg(&self) -> KvConfig {
+        self.inner.lock().unwrap().cfg
+    }
+
+    /// Check out one page at model width `d`.  Recycles a free-listed page
+    /// when one fits, otherwise allocates fresh; never fails (the byte
+    /// budget gates admission, not allocation).
+    pub fn alloc(&self, d: usize) -> Arc<PageData> {
+        let mut inner = self.inner.lock().unwrap();
+        let cfg = inner.cfg;
+        let mut page = None;
+        while let Some(p) = inner.free.pop() {
+            if p.fits(cfg, d) {
+                page = Some(p);
+                break;
+            }
+            // Geometry changed under this pool (different d) — drop it.
+        }
+        let page = match page {
+            Some(p) => {
+                inner.recycle_hits += 1;
+                p
+            }
+            None => {
+                inner.fresh_allocs += 1;
+                PageData::fresh(cfg, d)
+            }
+        };
+        let bytes = page.byte_size() as u64;
+        inner.resident_pages += 1;
+        inner.resident_bytes += bytes;
+        if inner.resident_bytes > inner.peak_bytes {
+            inner.peak_bytes = inner.resident_bytes;
+        }
+        Arc::new(page)
+    }
+
+    /// Return a page handle.  If this was the last reference the physical
+    /// page leaves residency and parks in the free list; a still-shared
+    /// page stays resident (its other holders keep it counted — once).
+    pub fn release(&self, page: Arc<PageData>) {
+        if let Ok(p) = Arc::try_unwrap(page) {
+            let mut inner = self.inner.lock().unwrap();
+            inner.resident_pages -= 1;
+            inner.resident_bytes -= p.byte_size() as u64;
+            if inner.free.len() < FREE_LIST_CAP {
+                inner.free.push(p);
+            }
+        }
+    }
+
+    /// Bytes of pages currently checked out (shared pages counted once) —
+    /// the residency gauge admission and metrics report.
+    pub fn resident_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().resident_bytes
+    }
+
+    /// Physical pages currently checked out.
+    pub fn resident_pages(&self) -> usize {
+        self.inner.lock().unwrap().resident_pages
+    }
+
+    /// High-water mark of `resident_bytes`.
+    pub fn peak_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().peak_bytes
+    }
+
+    /// The admission byte budget, if any.
+    pub fn capacity_bytes(&self) -> Option<u64> {
+        self.inner.lock().unwrap().capacity_bytes
+    }
+
+    /// Pages allocated fresh (free list missed).  Flat under steady-state
+    /// eviction — the page-recycling regression gauge.
+    pub fn fresh_allocs(&self) -> u64 {
+        self.inner.lock().unwrap().fresh_allocs
+    }
+
+    /// Allocations served from the free list.
+    pub fn recycle_hits(&self) -> u64 {
+        self.inner.lock().unwrap().recycle_hits
+    }
+
+    /// Cumulative pages adopted through prefix sharing.
+    pub fn shared_pages(&self) -> u64 {
+        self.inner.lock().unwrap().shared_pages
+    }
+
+    /// Cumulative bytes a second (or later) mapping of a shared page
+    /// avoided allocating.
+    pub fn shared_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().shared_bytes
+    }
+
+    /// Copy-on-write breaks: writes that hit a shared page and cloned it.
+    pub fn cow_breaks(&self) -> u64 {
+        self.inner.lock().unwrap().cow_breaks
+    }
+
+    /// Record a prefix adoption (called by `KvCache::adopt_prefix`).
+    pub fn note_shared(&self, pages: u64, bytes: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.shared_pages += pages;
+        inner.shared_bytes += bytes;
+    }
+
+    /// Record a copy-on-write break (called by `KvCache::push`).
+    pub fn note_cow_break(&self) {
+        self.inner.lock().unwrap().cow_breaks += 1;
+    }
+
+    /// Do two handles name the same physical pool?
+    pub fn same_pool(&self, other: &PagePool) -> bool {
+        Arc::ptr_eq(&self.inner, &other.inner)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn page_bytes_count_scales_on_the_int8_path() {
+        let f = KvConfig::f32_paged(8);
+        let q = KvConfig::int8(8);
+        assert_eq!(f.page_bytes(16), 2 * 8 * 16 * 4);
+        assert_eq!(q.page_bytes(16), 2 * 8 * 16 + 2 * 8 * 4);
+        assert!(q.page_bytes(16) * 3 < f.page_bytes(16), "int8 pages ~4x denser");
+    }
+
+    #[test]
+    fn pool_counts_residency_and_recycles_released_pages() {
+        let pool = PagePool::unbounded(KvConfig::f32_paged(4));
+        let pb = KvConfig::f32_paged(4).page_bytes(8) as u64;
+        let a = pool.alloc(8);
+        let b = pool.alloc(8);
+        assert_eq!(pool.resident_pages(), 2);
+        assert_eq!(pool.resident_bytes(), 2 * pb);
+        assert_eq!(pool.fresh_allocs(), 2);
+        pool.release(a);
+        assert_eq!(pool.resident_pages(), 1);
+        // The next alloc recycles the parked buffer instead of growing.
+        let c = pool.alloc(8);
+        assert_eq!(pool.fresh_allocs(), 2);
+        assert_eq!(pool.recycle_hits(), 1);
+        assert_eq!(pool.resident_pages(), 2);
+        assert_eq!(pool.peak_bytes(), 2 * pb);
+        pool.release(b);
+        pool.release(c);
+        assert_eq!(pool.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn shared_page_stays_resident_until_the_last_holder_releases() {
+        let pool = PagePool::unbounded(KvConfig::f32_paged(2));
+        let a = pool.alloc(4);
+        let a2 = a.clone(); // a second block table maps the same page
+        assert_eq!(pool.resident_pages(), 1, "shared page counted once");
+        pool.release(a);
+        assert_eq!(pool.resident_pages(), 1, "still held by the sibling");
+        pool.release(a2);
+        assert_eq!(pool.resident_pages(), 0);
+    }
+
+    #[test]
+    fn int8_rows_round_trip_within_quantizer_error() {
+        let cfg = KvConfig::int8(2);
+        let d = 8;
+        let mut page = PageData::fresh(cfg, d);
+        let krow: Vec<f32> = (0..d).map(|i| (i as f32 - 3.5) * 0.25).collect();
+        let vrow: Vec<f32> = (0..d).map(|i| (i as f32) * -0.125).collect();
+        page.write_row(1, d, &krow, &vrow);
+        let mut back = vec![0.0f32; d];
+        page.read_k_row(1, d, &mut back);
+        let amax = krow.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+        for (g, w) in back.iter().zip(&krow) {
+            assert!((g - w).abs() <= amax / 127.0 + 1e-6, "{g} vs {w}");
+        }
+        page.read_v_row(1, d, &mut back);
+        for (g, w) in back.iter().zip(&vrow) {
+            let vmax = vrow.iter().fold(0.0f32, |m, x| m.max(x.abs()));
+            assert!((g - w).abs() <= vmax / 127.0 + 1e-6, "{g} vs {w}");
+        }
+    }
+}

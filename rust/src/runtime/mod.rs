@@ -19,6 +19,11 @@
 //!   [`ForwardPlan::decode_step_batch`] advance many sessions per **step
 //!   round** with one blocked GEMM per layer — bit-identical to solo
 //!   stepping (`cargo test --test scheduler`).
+//! * [`kv`] — the **paged KV layer** under all of the above: a shared
+//!   [`PagePool`] hands out fixed-size K/V pages ([`KvConfig`]: f32 or
+//!   int8 rows) that each session's [`KvCache`] block table maps lazily,
+//!   recycles on eviction/rollback, and copy-on-write-shares across
+//!   streams with a common prompt prefix.
 //! * [`speculative`] — **self-speculative decoding** over the same plans:
 //!   the low-bit MSB-prefix view drafts `k−1` tokens, ONE batched
 //!   target-precision window pass ([`ForwardPlan::decode_window_batch`])
@@ -39,11 +44,13 @@
 pub mod decode;
 pub mod engine;
 pub mod forward;
+pub mod kv;
 pub mod literal;
 pub mod plan;
 pub mod speculative;
 
 pub use decode::{advance_sessions, sample_logits, DecodeSession, KvCache, Sampling};
+pub use kv::{KvConfig, KvDtype, PagePool};
 pub use engine::Engine;
 pub use forward::{argmax_logit, ForwardWeights, HostForward};
 pub use literal::{lit_i32, lit_scalar_i32, lit_tensor, tensor_from_literal};

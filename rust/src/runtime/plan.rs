@@ -645,20 +645,15 @@ impl ForwardPlan {
             attn.fill(0.0);
             for (i, c) in caches.iter().enumerate() {
                 let nk = c.layer_len(l);
-                for head in 0..h {
-                    let hoff = i * d + head * dh;
-                    kernels::attend_single_query(
-                        &qb[hoff..hoff + dh],
-                        c.keys(l),
-                        c.vals(l),
-                        nk,
-                        d,
-                        head * dh,
-                        inv_sqrt_dh,
-                        &mut scores[..nk],
-                        &mut attn[hoff..hoff + dh],
-                    );
-                }
+                c.attend(
+                    l,
+                    nk,
+                    &qb[i * d..(i + 1) * d],
+                    h,
+                    inv_sqrt_dh,
+                    scores,
+                    &mut attn[i * d..(i + 1) * d],
+                );
             }
             layer.wo.apply(attn, m, int8.as_ref(), proj)?;
             for (xi, pi) in x.iter_mut().zip(proj.iter()) {
@@ -818,20 +813,16 @@ impl ForwardPlan {
                     // Causal in-window: row j sees the prefix THROUGH its
                     // own position only, never its window successors.
                     let nk = positions[i] + j + 1;
-                    for head in 0..h {
-                        let hoff = (i * k + j) * d + head * dh;
-                        kernels::attend_single_query(
-                            &qb[hoff..hoff + dh],
-                            c.keys(l),
-                            c.vals(l),
-                            nk,
-                            d,
-                            head * dh,
-                            inv_sqrt_dh,
-                            &mut scores[..nk],
-                            &mut attn[hoff..hoff + dh],
-                        );
-                    }
+                    let r = i * k + j;
+                    c.attend(
+                        l,
+                        nk,
+                        &qb[r * d..(r + 1) * d],
+                        h,
+                        inv_sqrt_dh,
+                        scores,
+                        &mut attn[r * d..(r + 1) * d],
+                    );
                 }
             }
             layer.wo.apply(attn, n, int8.as_ref(), proj)?;
@@ -1266,8 +1257,8 @@ mod tests {
                 // The provisional K/V rows match the sequential ones too.
                 for (i, (got, refc)) in caches.iter().zip(&ref_caches).enumerate() {
                     for l in 0..dims.n_layers {
-                        assert_eq!(got.keys(l), refc.keys(l), "member {i} layer {l} keys");
-                        assert_eq!(got.vals(l), refc.vals(l), "member {i} layer {l} vals");
+                        assert_eq!(got.key_rows(l), refc.key_rows(l), "member {i} layer {l} keys");
+                        assert_eq!(got.val_rows(l), refc.val_rows(l), "member {i} layer {l} vals");
                     }
                 }
             }

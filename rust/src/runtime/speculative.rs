@@ -39,7 +39,10 @@
 //! every member's cache back to its entry position and leaves `pos`,
 //! `logits`, and `generated` untouched, so the caller can rerun the round
 //! as a plain batched step — the same containment contract as
-//! [`crate::runtime::advance_sessions`].
+//! [`crate::runtime::advance_sessions`].  Rollback is page-aware: the
+//! cache is a block table over [`crate::runtime::PagePool`] pages, and
+//! `truncate_to` hands fully-drained tail pages straight back to the pool
+//! for recycling, so rejected draft rows never strand KV capacity.
 //!
 //! Temperature-sampled sessions are excluded by validation: their seeded
 //! [`crate::data::Rng`] stream must consume exactly one draw per emitted

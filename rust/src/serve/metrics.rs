@@ -64,8 +64,14 @@ pub struct Metrics {
     /// (`member-steps / rounds` is the mean round occupancy).
     round_ms: BTreeMap<u32, (u64, u64, f64, u64)>,
     /// Resident KV-cache bytes across live decode sessions (gauge, set by
-    /// the worker after every step round).
+    /// the worker after every step round).  With the paged pool this is
+    /// the pool's checked-out bytes — shared CoW pages count once.
     kv_bytes: u64,
+    /// KV page-pool gauges: resident pages, bytes deduplicated by
+    /// copy-on-write prefix sharing (each shared page's size counted once
+    /// per *extra* mapping), and cumulative CoW breaks (writes into a
+    /// shared page that forced a private copy).
+    kv_pool: (u64, u64, u64),
     /// Elastic precision shifts applied (downshifts, upshifts).
     shifts: (u64, u64),
     /// Sessions + queued requests moved by shifts.
@@ -100,6 +106,7 @@ impl Default for Metrics {
             spec: BTreeMap::new(),
             round_ms: BTreeMap::new(),
             kv_bytes: 0,
+            kv_pool: (0, 0, 0),
             shifts: (0, 0),
             shift_moved: 0,
             shift_saved_bytes: 0,
@@ -325,6 +332,27 @@ impl Metrics {
         self.kv_bytes
     }
 
+    /// Update the page-pool gauges (resident pages, bytes saved by CoW
+    /// prefix sharing, cumulative CoW breaks).
+    pub fn set_kv_pool(&mut self, pages: u64, shared_bytes: u64, cow_breaks: u64) {
+        self.kv_pool = (pages, shared_bytes, cow_breaks);
+    }
+
+    /// Resident KV pages in the pool.
+    pub fn kv_pages(&self) -> u64 {
+        self.kv_pool.0
+    }
+
+    /// Bytes deduplicated by copy-on-write prefix sharing.
+    pub fn kv_shared_bytes(&self) -> u64 {
+        self.kv_pool.1
+    }
+
+    /// Cumulative copy-on-write breaks (private copies of shared pages).
+    pub fn kv_cow_breaks(&self) -> u64 {
+        self.kv_pool.2
+    }
+
     /// Decode steps executed at `bits` (0 if none).
     pub fn decode_steps(&self, bits: u32) -> u64 {
         self.decode_step_ms.get(&bits).map_or(0, |e| e.0)
@@ -457,7 +485,7 @@ impl Metrics {
             })
             .collect();
         format!(
-            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}] prefill=[{}] decode=[{}] rounds=[{}] rounds_per_s={:.1} kv_bytes={} shifts=[down:{} up:{} moved:{} saved:{}B occ:{:.1}] spec=[{}]",
+            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}] prefill=[{}] decode=[{}] rounds=[{}] rounds_per_s={:.1} kv_bytes={} shifts=[down:{} up:{} moved:{} saved:{}B occ:{:.1}] spec=[{}] kv=[pages:{} shared:{}B cow:{}]",
             self.requests,
             self.batches,
             self.percentile(50.0),
@@ -478,7 +506,10 @@ impl Metrics {
             self.shift_moved,
             self.shift_saved_bytes,
             self.mean_post_shift_occupancy(),
-            spec.join(" ")
+            spec.join(" "),
+            self.kv_pool.0,
+            self.kv_pool.1,
+            self.kv_pool.2
         )
     }
 }
@@ -547,6 +578,18 @@ mod tests {
         assert!(r.contains("prefill=[int4:2x3.00ms/16tok]"), "{r}");
         assert!(r.contains("int4:2x0.500ms"), "{r}");
         assert!(r.contains("kv_bytes=4096"), "{r}");
+    }
+
+    #[test]
+    fn kv_pool_gauges_surface_in_the_report() {
+        let mut m = Metrics::default();
+        assert_eq!((m.kv_pages(), m.kv_shared_bytes(), m.kv_cow_breaks()), (0, 0, 0));
+        m.set_kv_pool(7, 6144, 2);
+        assert_eq!(m.kv_pages(), 7);
+        assert_eq!(m.kv_shared_bytes(), 6144);
+        assert_eq!(m.kv_cow_breaks(), 2);
+        let r = m.report();
+        assert!(r.contains("kv=[pages:7 shared:6144B cow:2]"), "{r}");
     }
 
     #[test]

@@ -29,6 +29,17 @@
 //!     KV-pressure-aware deferral) ─► streamed Response events (one per
 //!     token, last marked done), any r ∈ {1..8}; f32 weight tensors never
 //!     exist on paged precisions.
+//!     KV is **paged** (`PagePool → block table → paged attend`): the
+//!     scheduler owns one [`crate::runtime::PagePool`] of fixed-size K/V
+//!     pages (ServerConfig { kv }: f32 pages by default — bit-identical to
+//!     a contiguous cache — or int8 rows + per-row scales for ~4× KV
+//!     density), each session's KvCache maps pages lazily as it grows and
+//!     recycles them on eviction/rollback, admission defers on
+//!     *page-rounded projections vs actually-resident pool bytes*, and a
+//!     pending prompt sharing a page-aligned prefix with a live stream
+//!     adopts the donor's pages copy-on-write and prefills only the suffix
+//!     (pool occupancy, shared bytes, and CoW breaks land in
+//!     Metrics::report `kv=[...]`).
 //!     Request { int8_acts } additionally quantizes the quantized-layer
 //!     inputs (quant::activations; fixed per-layer thresholds when a
 //!     calibration file is loaded) and reduces in the integer domain
@@ -79,5 +90,6 @@ pub use server::{Server, ServerConfig, SpeculativeConfig};
 pub use weights::{PlanKey, WeightSet, WeightStore};
 
 // Generation-parameter types live with the decode engine; re-exported here
-// because requests carry them.
-pub use crate::runtime::Sampling;
+// because requests carry them.  Likewise the KV page-pool geometry, which
+// `ServerConfig { kv }` / `SchedulerConfig { kv }` select.
+pub use crate::runtime::{KvConfig, KvDtype, PagePool, Sampling};

@@ -34,9 +34,27 @@
 //!   round, distributed round-robin across groups (one per group per turn,
 //!   rotating the starting group every round) so a hot precision cannot
 //!   starve the others.  When [`SchedulerConfig::kv_capacity_bytes`] is
-//!   set, a prefill whose projected KV page would push resident KV bytes
-//!   past the budget is **deferred** (kept queued, FIFO within its group)
-//!   rather than admitted — live streams are never evicted to make room.
+//!   set, a prefill whose projected KV pages would push **actually
+//!   resident** pool bytes past the budget is **deferred** (kept queued,
+//!   FIFO within its group) rather than admitted — live streams are never
+//!   evicted to make room.
+//! * **Paged KV** (`PagePool → block table → paged attend`,
+//!   [`crate::runtime::kv`]): the scheduler owns one [`PagePool`] sized by
+//!   [`SchedulerConfig::kv`] ([`Scheduler::pool`]); every admitted
+//!   session's [`crate::runtime::KvCache`] is a block table mapping pages
+//!   from it lazily, and [`Scheduler::resident_kv_bytes`] reports the
+//!   pool's actual residency — pages in use, not per-stream capacity.
+//!   Admission is therefore page-granular: a stream's *projection* is its
+//!   page-rounded full capacity ([`projected_kv_bytes`]), but what it
+//!   *holds* grows page by page, so streams admit against real usage
+//!   instead of whole-stream reservations.  (Allocation itself is soft:
+//!   live streams always run to completion; the budget is an admission
+//!   watermark, and transient overshoot from concurrent growth is bounded
+//!   by the live streams' projections.)  Pending requests whose prompt
+//!   shares a page-aligned prefix with a live member prefill **only the
+//!   suffix** and map the donor's pages copy-on-write
+//!   ([`DecodeSession::prefill_shared`]) — shared physical pages count
+//!   once in the pool gauge.
 //! * **Failure containment**: a round that errors falls back to solo
 //!   steps, retiring only the members that actually fail; a batched
 //!   prefill that errors falls back to solo prefills the same way.  A
@@ -81,25 +99,29 @@ use super::metrics::Metrics;
 use super::request::{Request, Response};
 use super::weights::PlanKey;
 use crate::model::manifest::ModelDims;
-use crate::runtime::{advance_sessions, speculative_round, DecodeSession, ForwardPlan, Sampling};
+use crate::runtime::{
+    advance_sessions, speculative_round, DecodeSession, ForwardPlan, KvConfig, PagePool, Sampling,
+};
 
 /// Projected resident KV bytes for one request's session — mirrors
 /// [`DecodeSession::with_budget`]'s cache sizing exactly (prompt +
-/// max_new − 1 positions, clamped to the model window, full-position
-/// rows across every layer's K and V pages).  `spec_slots` is the `k`
-/// provisional positions a self-speculative group's sessions additionally
-/// reserve (the verify window's K/V rows exist before acceptance decides
-/// their fate, so admission must hold budget for them up front) — 0 for a
-/// plain group.  Admission holds the [`SchedulerConfig::kv_capacity_bytes`]
-/// budget against this figure, and the server rejects at submit any
-/// request whose projection exceeds the budget **on its own** — such a
-/// request could never be admitted and would otherwise sit deferred
-/// forever.
+/// max_new − 1 positions, clamped to the model window), **page-rounded**
+/// under the pool geometry `kv`: each layer holds
+/// `ceil(capacity / page_size)` pages of [`KvConfig::page_bytes`] each.
+/// `spec_slots` is the `k` provisional positions a self-speculative
+/// group's sessions additionally reserve (the verify window's K/V rows
+/// exist before acceptance decides their fate, so admission must hold
+/// budget for them up front) — 0 for a plain group.  Admission holds the
+/// [`SchedulerConfig::kv_capacity_bytes`] budget against `resident pool
+/// bytes + this figure`, and the server rejects at submit any request
+/// whose projection exceeds the budget **on its own** — such a request
+/// could never be admitted and would otherwise sit deferred forever.
 pub fn projected_kv_bytes(
     dims: &ModelDims,
     prompt_len: usize,
     max_new_tokens: usize,
     spec_slots: usize,
+    kv: &KvConfig,
 ) -> u64 {
     let seq = dims.seq_len;
     let prompt = prompt_len.clamp(1, seq);
@@ -107,7 +129,8 @@ pub fn projected_kv_bytes(
         .saturating_add(max_new_tokens.saturating_sub(1))
         .saturating_add(spec_slots)
         .min(seq);
-    (dims.n_layers * 2 * capacity * dims.d_model * 4) as u64
+    let pages = capacity.div_ceil(kv.page_size);
+    (dims.n_layers as u64) * (pages as u64) * (kv.page_bytes(dims.d_model) as u64)
 }
 
 /// Scheduling policy knobs (see the module docs).
@@ -116,10 +139,14 @@ pub struct SchedulerConfig {
     /// Fairness cap: prefills admitted per round across all groups,
     /// distributed round-robin (minimum 1).
     pub max_prefills_per_round: usize,
-    /// KV admission budget in bytes across all live sessions; `None`
-    /// means unbounded.  Prefills that would exceed it are deferred, never
+    /// KV admission budget in bytes against the shared page pool's
+    /// **resident** bytes; `None` means unbounded.  Prefills whose
+    /// page-rounded projection would exceed it are deferred, never
     /// admitted over budget, and live streams are never evicted.
     pub kv_capacity_bytes: Option<u64>,
+    /// Page-pool geometry for every session's KV cache: page size in
+    /// token rows and row dtype (f32, or int8 with per-row scales).
+    pub kv: KvConfig,
 }
 
 impl Default for SchedulerConfig {
@@ -127,6 +154,7 @@ impl Default for SchedulerConfig {
         SchedulerConfig {
             max_prefills_per_round: 4,
             kv_capacity_bytes: None,
+            kv: KvConfig::default(),
         }
     }
 }
@@ -240,17 +268,26 @@ pub struct Scheduler {
     spec_suspended: bool,
     /// Monotone round counter — rotates the admission starting group.
     round: u64,
+    /// The shared KV page pool every admitted session draws from.
+    pool: PagePool,
 }
 
 impl Scheduler {
     pub fn new(cfg: SchedulerConfig) -> Self {
+        let pool = PagePool::new(cfg.kv, cfg.kv_capacity_bytes);
         Scheduler {
             cfg,
             groups: BTreeMap::new(),
             spec: BTreeMap::new(),
             spec_suspended: false,
             round: 0,
+            pool,
         }
+    }
+
+    /// The shared KV page pool (residency, recycling, and sharing gauges).
+    pub fn pool(&self) -> &PagePool {
+        &self.pool
     }
 
     /// Enable self-speculative decode for the target group `key`: greedy
@@ -567,14 +604,13 @@ impl Scheduler {
         self.groups.values().map(|g| g.pending.len()).sum()
     }
 
-    /// Resident KV bytes across all live sessions — the figure admission
-    /// holds under [`SchedulerConfig::kv_capacity_bytes`].
+    /// Resident KV bytes — the pool's actually checked-out pages (shared
+    /// pages counted once), NOT the sum of live-session capacities.  This
+    /// is the figure admission holds under
+    /// [`SchedulerConfig::kv_capacity_bytes`]: a young stream pins only
+    /// the pages it has mapped so far, so admission tracks real usage.
     pub fn resident_kv_bytes(&self) -> u64 {
-        self.groups
-            .values()
-            .flat_map(|g| g.live.iter())
-            .map(|l| l.session.kv_bytes() as u64)
-            .sum()
+        self.pool.resident_bytes()
     }
 
     /// Drop streams and queued requests whose client vanished (`alive`
@@ -605,6 +641,11 @@ impl Scheduler {
         self.step_groups(metrics, sink, &mut out);
         self.admit(metrics, sink, &mut out);
         metrics.set_kv_bytes(self.resident_kv_bytes());
+        metrics.set_kv_pool(
+            self.pool.resident_pages() as u64,
+            self.pool.shared_bytes(),
+            self.pool.cow_breaks(),
+        );
         self.groups
             .retain(|_, g| !g.live.is_empty() || !g.pending.is_empty());
         self.round = self.round.wrapping_add(1);
@@ -975,6 +1016,7 @@ impl Scheduler {
                         p.req.prompt.len(),
                         p.req.max_new_tokens,
                         self.spec_slots(&keys[ki], &p.req.sampling),
+                        &self.cfg.kv,
                     );
                     let fits = match self.cfg.kv_capacity_bytes {
                         None => true,
@@ -993,6 +1035,7 @@ impl Scheduler {
                 }
             }
         }
+        let pool = self.pool.clone();
         for (key, n) in admit {
             // Sessions of a speculating group reserve `k` extra cache
             // positions — the provisional verify-window rows a speculative
@@ -1010,8 +1053,53 @@ impl Scheduler {
             let plan = g.plan.clone();
             let bits = g.bits;
             let int8 = g.int8;
-            let batch: Vec<Pending> = g.pending.drain(..n).collect();
+            let drained: Vec<Pending> = g.pending.drain(..n).collect();
+            // Copy-on-write prefix sharing: a pending request whose prompt
+            // shares a page-aligned prefix with a live member of this group
+            // (one whose prompt K/V was computed on this very plan) adopts
+            // the donor's physical pages and prefills only the suffix in
+            // one window pass.  Misses — and any shared-prefill error —
+            // fall through to the plain batched prefill below.
+            let ps = pool.cfg().page_size;
+            let mut batch: Vec<Pending> = Vec::with_capacity(drained.len());
+            for p in drained {
+                let hit = Self::share_candidate(g, &p.req.prompt, plan.dims.seq_len, ps);
+                let Some((di, shared)) = hit else {
+                    batch.push(p);
+                    continue;
+                };
+                let t1 = Instant::now();
+                let res = DecodeSession::prefill_shared(
+                    &plan,
+                    &p.req.prompt,
+                    p.req.sampling,
+                    budget_for(&p.req.sampling, p.req.max_new_tokens),
+                    &pool,
+                    &g.live[di].session,
+                    shared,
+                );
+                match res {
+                    Ok(session) => {
+                        let ms = t1.elapsed().as_secs_f64() * 1e3;
+                        metrics.record_batch(bits, ms, plan.weight_bytes() as u64);
+                        let suffix = session.prompt_len().saturating_sub(shared);
+                        metrics.record_prefill(bits, ms, suffix as u64);
+                        Self::start_stream(g, bits, int8, p, session, ms, 1, t1, metrics, sink, out);
+                    }
+                    Err(e) => {
+                        eprintln!(
+                            "serve scheduler: request {}: shared prefill failed ({e:#}); \
+                             retrying without sharing",
+                            p.req.id
+                        );
+                        batch.push(p);
+                    }
+                }
+            }
             let m = batch.len();
+            if m == 0 {
+                continue;
+            }
             let t0 = Instant::now();
             let prefilled = {
                 let specs: Vec<(&[i32], crate::runtime::Sampling, usize)> = batch
@@ -1024,7 +1112,7 @@ impl Scheduler {
                         )
                     })
                     .collect();
-                DecodeSession::prefill_many(&plan, &specs)
+                DecodeSession::prefill_many_pooled(&plan, &specs, Some(&pool))
             };
             match prefilled {
                 Ok(sessions) => {
@@ -1047,11 +1135,12 @@ impl Scheduler {
                     );
                     for p in batch {
                         let t1 = Instant::now();
-                        match DecodeSession::with_budget(
+                        match DecodeSession::with_budget_pooled(
                             plan.clone(),
                             &p.req.prompt,
                             p.req.sampling,
                             budget_for(&p.req.sampling, p.req.max_new_tokens),
+                            Some(&pool),
                         ) {
                             Ok(session) => {
                                 let ms = t1.elapsed().as_secs_f64() * 1e3;
@@ -1073,6 +1162,40 @@ impl Scheduler {
                 }
             }
         }
+    }
+
+    /// The best live donor for a prompt about to prefill into `g`: the
+    /// member sharing the longest page-aligned common token prefix (at
+    /// least one whole page, and strictly shorter than the prompt — the
+    /// suffix window must produce the first logits row) whose prompt K/V
+    /// was computed on this group's plan (an elastically shifted member's
+    /// rows belong to a different precision and are never adopted) and
+    /// whose cache still holds the prefix rows.  Returns the donor's index
+    /// in `g.live` and the shared row count.
+    fn share_candidate(g: &Group, prompt: &[i32], seq: usize, ps: usize) -> Option<(usize, usize)> {
+        if prompt.is_empty() {
+            return None;
+        }
+        let plen = prompt.len().min(seq);
+        let mut best: Option<(usize, usize)> = None;
+        for (i, l) in g.live.iter().enumerate() {
+            if !Arc::ptr_eq(l.session.prefix_plan(), &g.plan) {
+                continue;
+            }
+            let dp = l.session.prompt_tokens();
+            let mut common = 0usize;
+            while common < plen && common < dp.len() && prompt[common] == dp[common] {
+                common += 1;
+            }
+            let shared = common.min(plen - 1) / ps * ps;
+            if shared >= ps
+                && l.session.positions() >= shared
+                && best.map_or(true, |(_, s)| shared > s)
+            {
+                best = Some((i, shared));
+            }
+        }
+        best
     }
 
     /// Post-prefill bookkeeping for one admitted request: sample the first

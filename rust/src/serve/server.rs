@@ -79,11 +79,19 @@ pub struct ServerConfig {
     /// round-robin across precision groups
     /// ([`SchedulerConfig::max_prefills_per_round`]).
     pub max_prefills_per_round: usize,
-    /// Host backend: KV admission budget in bytes across all live streams
-    /// ([`SchedulerConfig::kv_capacity_bytes`]).  Prefills that would
-    /// exceed it are deferred to a later round; live streams are never
-    /// evicted.  `None` = unbounded.
+    /// Host backend: KV admission budget in bytes against the shared page
+    /// pool's resident pages ([`SchedulerConfig::kv_capacity_bytes`]).
+    /// Prefills whose page-rounded projection would exceed it are deferred
+    /// to a later round; live streams are never evicted.  `None` =
+    /// unbounded.
     pub kv_capacity_bytes: Option<u64>,
+    /// Host backend: KV page-pool geometry
+    /// ([`crate::runtime::KvConfig`]) — page size in token rows and the
+    /// row dtype.  The default is 16-row f32 pages, bit-identical to a
+    /// contiguous cache; [`crate::runtime::KvConfig::int8`] stores K/V
+    /// rows as int8 codes + per-row scales for ~4× more live streams per
+    /// byte of budget at a bounded quality cost.
+    pub kv: crate::runtime::KvConfig,
     /// Host backend: **elastic precision under load**.  When set, the
     /// worker consults an [`ElasticPlanner`] after every scheduling round:
     /// above the high watermarks the highest uniform *packed* group's live
@@ -140,6 +148,7 @@ impl Default for ServerConfig {
             calibration: None,
             max_prefills_per_round: 4,
             kv_capacity_bytes: None,
+            kv: crate::runtime::KvConfig::default(),
             elastic: None,
             speculative: None,
         }
@@ -298,6 +307,7 @@ fn host_worker_loop(
     let mut sched = Scheduler::new(SchedulerConfig {
         max_prefills_per_round: cfg.max_prefills_per_round,
         kv_capacity_bytes: cfg.kv_capacity_bytes,
+        kv: cfg.kv,
     });
     let mut elastic = cfg.elastic.clone().map(ElasticPlanner::new);
 
@@ -613,8 +623,13 @@ fn host_submit(
     if let Some(cap) = cfg.kv_capacity_bytes {
         // A request whose KV page alone exceeds the budget could never be
         // admitted — deferring it would park it (and its client) forever.
-        let projected =
-            projected_kv_bytes(&preset.model, req.prompt.len(), req.max_new_tokens, spec_slots);
+        let projected = projected_kv_bytes(
+            &preset.model,
+            req.prompt.len(),
+            req.max_new_tokens,
+            spec_slots,
+            &cfg.kv,
+        );
         if projected > cap {
             eprintln!(
                 "serve worker: request {}: projected KV {projected}B exceeds the {cap}B budget — rejected",

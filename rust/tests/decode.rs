@@ -24,7 +24,8 @@ use matquant::model::testing::toy_transformer;
 use matquant::model::{PrecisionAssignment, PresetInfo, QuantizedModel};
 use matquant::quant::{ActCalibration, ActQuantConfig};
 use matquant::runtime::{
-    DecodeSession, ForwardPlan, ForwardWeights, HostForward, Sampling,
+    speculative_round, DecodeSession, ForwardPlan, ForwardWeights, HostForward, KvConfig,
+    PagePool, Sampling,
 };
 use matquant::serve::{Metrics, PlanKey, PrecisionReq, Request, Server, ServerConfig, WeightStore};
 
@@ -634,6 +635,238 @@ fn malformed_generation_params_rejected_without_stalling_batchmates() {
     let r = good.recv().expect("valid batchmate must still be answered");
     assert_eq!(r.id, 5);
     server.shutdown().unwrap();
+}
+
+// ---------------------------------------------------------------------------
+// Paged KV: page-boundary conformance, CoW sharing, pool residency
+// ---------------------------------------------------------------------------
+
+#[test]
+fn paged_f32_decode_bit_identical_across_page_sizes_and_boundary_prompts() {
+    // The tentpole acceptance property: the block-table walk over f32
+    // pages performs the exact float ops of the contiguous kernel, so ANY
+    // page size — including prompts landing exactly on, one short of, and
+    // one past a page boundary — reproduces the full re-forward bit for
+    // bit.
+    let (preset, model) = toy_model(59);
+    let v = preset.model.vocab;
+    let plan = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    for ps in [3usize, 4, 5] {
+        for plen in [ps - 1, ps, ps + 1] {
+            let prompt: Vec<i32> = (0..plen).map(|i| ((i * 13 + 5) % v) as i32).collect();
+            let pool = PagePool::unbounded(KvConfig::f32_paged(ps));
+            let mut session = DecodeSession::with_budget_pooled(
+                plan.clone(),
+                &prompt,
+                Sampling::Greedy,
+                usize::MAX,
+                Some(&pool),
+            )
+            .unwrap();
+            let full_plan = plan.clone();
+            assert_decode_matches_reforward(
+                &mut session,
+                &prompt,
+                |stream| {
+                    let t = stream.len();
+                    let full = full_plan.forward(stream, 1, t).unwrap();
+                    full.data[(t - 1) * v..t * v].to_vec()
+                },
+                &format!("paged ps={ps} plen={plen}"),
+            );
+        }
+    }
+}
+
+#[test]
+fn speculative_windows_cross_page_boundaries_losslessly() {
+    let (preset, model) = toy_model(61);
+    let target = ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+    let draft = ForwardPlan::packed_uniform(&preset.model, &model, 2, false, None, None).unwrap();
+    let prompt = vec![3i32, 1, 4];
+    // Plain reference stream on the wide default pages (one page holds the
+    // whole toy window — the contiguous baseline).
+    let mut plain = DecodeSession::new(target.clone(), &prompt, Sampling::Greedy).unwrap();
+    let mut expect = Vec::new();
+    loop {
+        let (tok, _) = plain.sample();
+        expect.push(tok);
+        if !plain.can_advance() {
+            break;
+        }
+        plain.advance(tok).unwrap();
+    }
+    // ps=3: the prompt fills page 0 exactly, so every 3-wide verify window
+    // spans a page boundary, and every rejection rolls K/V back mid-page.
+    let pool = PagePool::unbounded(KvConfig::f32_paged(3));
+    let mut s = DecodeSession::with_budget_pooled(
+        target.clone(),
+        &prompt,
+        Sampling::Greedy,
+        usize::MAX,
+        Some(&pool),
+    )
+    .unwrap();
+    let (mut last, _) = s.sample();
+    while s.generated().len() < expect.len() {
+        let w = s.spec_window().min(3);
+        if w >= 2 {
+            let r = speculative_round(&mut [&mut s], &draft, &[last], w).unwrap();
+            last = r[0].emitted.last().unwrap().0;
+        } else if s.can_advance() {
+            s.advance(last).unwrap();
+            let (tok, _) = s.sample();
+            last = tok;
+        } else {
+            break;
+        }
+    }
+    assert_eq!(s.generated(), &expect[..], "speculative paged stream diverged");
+    drop(s);
+    assert_eq!(pool.resident_pages(), 0, "dropped session must release its pages");
+}
+
+#[test]
+fn elastic_switch_plan_on_a_paged_session_stays_bit_identical() {
+    let (preset, model) = toy_model(67);
+    let p8 = ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
+    let p2 = ForwardPlan::packed_uniform(&preset.model, &model, 2, false, None, None).unwrap();
+    let prompt = vec![2i32, 7, 1, 8, 2];
+    // The same down-then-up shift schedule on the wide default pages and
+    // on 2-row pages must produce identical logits at every step: cached
+    // K/V rows carry across both the plan swap and the page cuts.
+    let run = |pool: Option<&PagePool>| -> Vec<Vec<f32>> {
+        let mut s = DecodeSession::with_budget_pooled(
+            p8.clone(),
+            &prompt,
+            Sampling::Greedy,
+            usize::MAX,
+            pool,
+        )
+        .unwrap();
+        let mut rows = vec![s.logits().to_vec()];
+        let mut step = 0usize;
+        loop {
+            let (tok, _) = s.sample();
+            if !s.can_advance() {
+                break;
+            }
+            if step == 2 {
+                s.switch_plan(p2.clone()).unwrap();
+            }
+            if step == 4 {
+                s.switch_plan(p8.clone()).unwrap();
+            }
+            s.advance(tok).unwrap();
+            rows.push(s.logits().to_vec());
+            step += 1;
+        }
+        rows
+    };
+    let want = run(None);
+    let pool = PagePool::unbounded(KvConfig::f32_paged(2));
+    let got = run(Some(&pool));
+    assert_eq!(want.len(), got.len(), "shifted runs diverged in length");
+    for (i, (w, g)) in want.iter().zip(&got).enumerate() {
+        for (j, (a, b)) in w.iter().zip(g).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "step {i} logit {j}: {a} vs {b}");
+        }
+    }
+    assert_eq!(pool.resident_pages(), 0);
+}
+
+#[test]
+fn cow_prefix_sharing_matches_solo_prefill_bit_for_bit() {
+    let (preset, model) = toy_model(71);
+    let plan = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    let pool = PagePool::unbounded(KvConfig::f32_paged(2));
+    let donor_prompt = vec![5i32, 9, 33, 2, 7, 1];
+    let donor = DecodeSession::with_budget_pooled(
+        plan.clone(),
+        &donor_prompt,
+        Sampling::Greedy,
+        4,
+        Some(&pool),
+    )
+    .unwrap();
+    // First 4 tokens (2 whole pages) shared, then the prompts diverge.
+    let sharer_prompt = vec![5i32, 9, 33, 2, 40, 3];
+    let shared = 4usize;
+    let via_share = DecodeSession::prefill_shared(
+        &plan,
+        &sharer_prompt,
+        Sampling::Greedy,
+        4,
+        &pool,
+        &donor,
+        shared,
+    )
+    .unwrap();
+    assert!(pool.shared_bytes() > 0, "no pages were actually shared");
+    let solo =
+        DecodeSession::with_budget_pooled(plan.clone(), &sharer_prompt, Sampling::Greedy, 4, None)
+            .unwrap();
+    for (j, (a, b)) in via_share.logits().iter().zip(solo.logits()).enumerate() {
+        assert_eq!(
+            a.to_bits(),
+            b.to_bits(),
+            "shared-prefill logit {j}: {a} vs {b}"
+        );
+    }
+    // Both sharer variants — and the donor — decode exactly like solo runs.
+    let drive = |mut s: DecodeSession| -> Vec<i32> {
+        for k in 0..4 {
+            let (tok, _) = s.sample();
+            if k + 1 < 4 && s.can_advance() {
+                s.advance(tok).unwrap();
+            }
+        }
+        s.generated().to_vec()
+    };
+    assert_eq!(drive(via_share), drive(solo), "sharer stream diverged");
+    let donor_solo = DecodeSession::with_budget_pooled(
+        plan.clone(),
+        &donor_prompt,
+        Sampling::Greedy,
+        4,
+        None,
+    )
+    .unwrap();
+    assert_eq!(
+        drive(donor),
+        drive(donor_solo),
+        "donor stream corrupted by sharing"
+    );
+    assert_eq!(pool.resident_pages(), 0, "all pages must return to the pool");
+}
+
+#[test]
+fn session_kv_bytes_track_resident_pages_not_capacity() {
+    let (preset, model) = toy_model(73);
+    let plan = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    let pool = PagePool::unbounded(KvConfig::f32_paged(4));
+    let page = KvConfig::f32_paged(4).page_bytes(preset.model.d_model);
+    let prompt = vec![1i32, 2];
+    let mut s = DecodeSession::with_budget_pooled(
+        plan.clone(),
+        &prompt,
+        Sampling::Greedy,
+        8,
+        Some(&pool),
+    )
+    .unwrap();
+    // 2 prompt rows map ONE page per layer — not the 8-position capacity.
+    assert_eq!(s.kv_bytes(), preset.model.n_layers * page);
+    assert_eq!(pool.resident_bytes() as usize, s.kv_bytes());
+    for _ in 0..3 {
+        let (tok, _) = s.sample();
+        s.advance(tok).unwrap();
+    }
+    // 5 rows cross the 4-row boundary → a second page per layer appears.
+    assert_eq!(s.positions(), 5);
+    assert_eq!(s.kv_bytes(), preset.model.n_layers * 2 * page);
+    drop(s);
+    assert_eq!(pool.resident_bytes(), 0);
 }
 
 #[test]

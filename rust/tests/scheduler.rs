@@ -30,8 +30,8 @@ use matquant::model::{PresetInfo, QuantizedModel};
 use matquant::quant::ActQuantConfig;
 use matquant::runtime::{advance_sessions, DecodeSession, ForwardPlan, Sampling};
 use matquant::serve::{
-    Metrics, PlanKey, PrecisionReq, Request, Response, Scheduler, SchedulerConfig, Server,
-    ServerConfig, SpeculativeConfig,
+    projected_kv_bytes, KvConfig, Metrics, PlanKey, PrecisionReq, Request, Response, Scheduler,
+    SchedulerConfig, Server, ServerConfig, SpeculativeConfig,
 };
 
 fn toy_dims() -> ModelDims {
@@ -376,17 +376,19 @@ fn truncated_member_retires_without_stalling_roundmates() {
 #[test]
 fn kv_pressure_defers_prefills_and_serves_them_later() {
     let (preset, model) = toy_model(83);
-    let d = preset.model.d_model;
-    let n_layers = preset.model.n_layers;
     let plan = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
     let key = PlanKey::Packed { bits: 4, int8: false };
-    // Each session: prompt 3 + (5-1) new = capacity 7 positions.
+    // Each session: prompt 3 + (5-1) new = capacity 7 positions, page-
+    // rounded under 2-row pages.  The budget fits exactly ONE projection,
+    // so the second prefill must wait until the first stream fully drains.
+    let kv = KvConfig::f32_paged(2);
     let spec: Spec = (vec![1, 2, 3], Sampling::Greedy, 5);
-    let per_session = (n_layers * 2 * 7 * d * 4) as u64;
-    let budget = per_session + per_session / 2; // one fits, two do not
+    let per_session = projected_kv_bytes(&preset.model, 3, 5, 0, &kv);
+    let budget = per_session;
     let mut sched = Scheduler::new(SchedulerConfig {
         max_prefills_per_round: 4,
         kv_capacity_bytes: Some(budget),
+        kv,
     });
     let mut metrics = Metrics::default();
     let mk = |id: u64| {
@@ -424,6 +426,94 @@ fn kv_pressure_defers_prefills_and_serves_them_later() {
     }
     // The deferred request was admitted only after the first finished.
     assert!(events[&2][0].round > events[&1][0].round);
+}
+
+#[test]
+fn admission_is_page_granular_against_actual_usage() {
+    // Regression for the whole-stream-reservation gauge: admission holds
+    // the budget against pages the pool has actually checked out, so a
+    // later request fits as soon as `resident + its projection` does —
+    // even when the SUM of both projections exceeds the budget (which the
+    // old reservation accounting would have serialized).
+    let (preset, model) = toy_model(83);
+    let plan = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    let key = PlanKey::Packed { bits: 4, int8: false };
+    let kv = KvConfig::f32_paged(2);
+    let spec: Spec = (vec![1, 2, 3], Sampling::Greedy, 5);
+    let per_session = projected_kv_bytes(&preset.model, 3, 5, 0, &kv);
+    // One byte short of two full projections: reservation accounting
+    // could never run these concurrently.
+    let budget = 2 * per_session - 1;
+    let mut sched = Scheduler::new(SchedulerConfig {
+        max_prefills_per_round: 4,
+        kv_capacity_bytes: Some(budget),
+        kv,
+    });
+    let mut metrics = Metrics::default();
+    let mk = |id: u64| Request::generate(id, spec.0.clone(), PrecisionReq::Bits(4), spec.2, spec.1);
+    // A at round 0; B arrives at round 1, while A is live but still pages
+    // short of its full projection.
+    let inject: Vec<Inject> = vec![
+        (0, key.clone(), plan.clone(), 4, false, mk(1)),
+        (1, key.clone(), plan.clone(), 4, false, mk(2)),
+    ];
+    let events = drive(&mut sched, &mut metrics, inject, 64);
+    let (_, want) = solo_trace(&plan, &spec);
+    for id in [1u64, 2] {
+        let (toks, fin) = stream_of(&events[&id], id);
+        assert_eq!(toks, want, "req {id}: stream diverged under page-granular admission");
+        assert_eq!(fin, want);
+    }
+    // B went live while A was still streaming — the streams overlapped.
+    assert!(
+        events[&2][0].round <= events[&1].last().unwrap().round,
+        "B (first event round {}) never overlapped A (last event round {})",
+        events[&2][0].round,
+        events[&1].last().unwrap().round
+    );
+}
+
+#[test]
+fn cow_prefix_sharing_through_the_scheduler_keeps_streams_solo_identical() {
+    let (preset, model) = toy_model(91);
+    let plan = ForwardPlan::packed_uniform(&preset.model, &model, 4, false, None, None).unwrap();
+    let key = PlanKey::Packed { bits: 4, int8: false };
+    // 2-row pages so a 4-token common prefix spans two whole shareable
+    // pages of the toy window.
+    let mut sched = Scheduler::new(SchedulerConfig {
+        max_prefills_per_round: 4,
+        kv_capacity_bytes: None,
+        kv: KvConfig::f32_paged(2),
+    });
+    let mut metrics = Metrics::default();
+    let donor_spec: Spec = (vec![7, 7, 1, 2, 9, 4], Sampling::Greedy, 6);
+    let sharer_spec: Spec = (vec![7, 7, 1, 2, 30, 5], Sampling::Greedy, 4);
+    let mk = |id: u64, sp: &Spec| {
+        Request::generate(id, sp.0.clone(), PrecisionReq::Bits(4), sp.2, sp.1)
+    };
+    // The sharer arrives two rounds in, while the donor is live — its
+    // 4-token page-aligned common prefix adopts the donor's pages and only
+    // the suffix prefills.
+    let inject: Vec<Inject> = vec![
+        (0, key.clone(), plan.clone(), 4, false, mk(1, &donor_spec)),
+        (2, key.clone(), plan.clone(), 4, false, mk(2, &sharer_spec)),
+    ];
+    let events = drive(&mut sched, &mut metrics, inject, 64);
+    for (id, sp) in [(1u64, &donor_spec), (2, &sharer_spec)] {
+        let (toks, fin) = stream_of(&events[&id], id);
+        let (_, want) = solo_trace(&plan, sp);
+        assert_eq!(toks, want, "req {id}: CoW sharing changed the stream");
+        assert_eq!(fin, want);
+    }
+    // Pages were actually shared, and the savings reached the gauges.
+    assert!(
+        sched.pool().shared_bytes() > 0,
+        "no pages were shared through admission"
+    );
+    assert!(metrics.kv_shared_bytes() > 0, "shared-page gauge never set");
+    assert_eq!(sched.live_sessions(), 0);
+    assert_eq!(metrics.kv_pages(), 0, "page gauge must drain to zero");
+    assert!(metrics.report().contains("kv=[pages:0 shared:"), "{}", metrics.report());
 }
 
 // ---------------------------------------------------------------------------
@@ -507,7 +597,7 @@ fn property_sweep_staggered_admissions_match_solo_streams() {
         }
         let mut sched = Scheduler::new(SchedulerConfig {
             max_prefills_per_round: 2, // force multi-round admission queues
-            kv_capacity_bytes: None,
+            ..SchedulerConfig::default()
         });
         let mut metrics = Metrics::default();
         let events = drive(&mut sched, &mut metrics, inject, 256);
@@ -1178,7 +1268,8 @@ fn kv_gauge_tracks_residency_and_returns_to_zero_after_drain() {
     // Regression sweep for the resident-KV gauge across every retirement
     // path in one run: normal completion, KV-capacity truncation, a
     // mid-stream client hangup, and speculative rounds (whose rollback
-    // must not move the gauge — allocation is capacity-based).
+    // returns whole drained pages to the pool — the gauge must track the
+    // pool's actual residency through all of it).
     let (preset, model) = toy_model(151);
     let seq = preset.model.seq_len;
     let target = ForwardPlan::packed_uniform(&preset.model, &model, 8, false, None, None).unwrap();
@@ -1297,11 +1388,13 @@ fn host_server_speculative_serving_is_lossless_and_reports_metrics() {
 #[test]
 fn host_server_kv_budget_defers_but_answers_everyone() {
     let (preset, model) = toy_model(103);
-    let d = preset.model.d_model;
-    let n_layers = preset.model.n_layers;
-    // capacity 7 positions per session (prompt 3 + 5 - 1); the budget
-    // fits exactly ONE such session at a time
-    let per_session = (n_layers * 2 * 7 * d * 4) as u64;
+    // capacity 7 positions per session (prompt 3 + 5 - 1), page-rounded
+    // under 4-row pages; the budget fits exactly ONE such projection at a
+    // time.  (4-row pages also make the full-window request below project
+    // strictly MORE pages than the budget, so submit-time rejection
+    // still has something to reject.)
+    let kv = KvConfig::f32_paged(4);
+    let per_session = projected_kv_bytes(&preset.model, 3, 5, 0, &kv);
     let server = Server::start_host(
         preset.clone(),
         model,
@@ -1310,6 +1403,7 @@ fn host_server_kv_budget_defers_but_answers_everyone() {
             max_wait_ms: 0.5,
             warm_bits: vec![],
             kv_capacity_bytes: Some(per_session),
+            kv,
             ..ServerConfig::default()
         },
     )
