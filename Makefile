@@ -13,7 +13,7 @@ PYTHON ?= python3
 ARTIFACTS_DIR ?= $(abspath rust/artifacts)
 PRESETS ?= tiny,small,tiny_attn
 
-.PHONY: artifacts build test conformance bench bench-json clean-artifacts
+.PHONY: artifacts build test conformance bench bench-json loadgen-smoke clean-artifacts
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir $(ARTIFACTS_DIR) --presets $(PRESETS)
@@ -26,22 +26,29 @@ test:
 	cd rust && cargo build --release && cargo test -q
 
 # The debug+release conformance matrix CI runs (kernels + host forward +
-# KV-cached decode + continuous-batching scheduler).
+# KV-cached decode + continuous-batching scheduler + TCP front door).
 conformance:
-	cd rust && cargo test -q --test kernel_conformance --test forward --test decode --test scheduler --test goldens --test quant_edges --test serving
-	cd rust && cargo test --release -q --test kernel_conformance --test forward --test decode --test scheduler --test goldens --test quant_edges --test serving
+	cd rust && cargo test -q --test kernel_conformance --test forward --test decode --test scheduler --test goldens --test quant_edges --test serving --test frontend
+	cd rust && cargo test --release -q --test kernel_conformance --test forward --test decode --test scheduler --test goldens --test quant_edges --test serving --test frontend
 
 bench:
 	cd rust && cargo bench --bench quant_hot_paths
 
 # Run the bench and persist the ROADMAP perf-trajectory rows (nested
 # page-in bytes per precision, elastic shift latency, round throughput at
-# each watermark state, plain vs self-speculative decode tokens/sec, and
-# the paged-KV rows: concurrent streams at a fixed KV budget plus
-# paged-attend step latency) into BENCH_8.json at the repo root.  Override
-# MQ_BENCH_MS for a quicker (smoke) or steadier (long) measurement budget.
+# each watermark state, plain vs self-speculative decode tokens/sec, the
+# paged-KV rows, and the front-door loadgen rows: p50/p99 TTFT +
+# tokens/sec at 1/2/4 workers under the mixed-precision trace, plus the
+# elastic on-vs-off row with shift counts and SLO attainment) into
+# BENCH_9.json at the repo root.  Override MQ_BENCH_MS for a quicker
+# (smoke) or steadier (long) measurement budget.
 bench-json:
-	cd rust && MQ_BENCH_OUT=$(abspath BENCH_8.json) cargo bench --bench quant_hot_paths
+	cd rust && MQ_BENCH_OUT=$(abspath BENCH_9.json) cargo bench --bench quant_hot_paths
+
+# One-command CI smoke for the scale-out front door: boots a 2-worker
+# fleet behind a real TCP socket and replays a tiny deterministic trace.
+loadgen-smoke:
+	cd rust && cargo run --release -- loadgen --self-host --workers 2 --requests 8 --rate 100
 
 clean-artifacts:
 	rm -rf $(ARTIFACTS_DIR)

@@ -12,9 +12,12 @@
 //! c ∈ {1,4,16}, with accept rates); ISSUE 8 adds the paged-KV rows
 //! (max concurrent streams at one fixed KV budget — analytic contiguous
 //! reservation vs measured paged-f32 vs paged-int8 admission — plus the
-//! paged-attend decode step latency per page geometry) — persisted as
-//! JSON when `MQ_BENCH_OUT` names a path (`make bench-json` →
-//! `BENCH_8.json`).
+//! paged-attend decode step latency per page geometry); ISSUE 9 adds the
+//! front-door loadgen rows (client-side p50/p99 TTFT + tokens/sec at
+//! 1/2/4 workers under the mixed-precision Poisson trace, plus the
+//! elastic on-vs-off pair with shift counts and SLO attainment) —
+//! persisted as JSON when `MQ_BENCH_OUT` names a path
+//! (`make bench-json` → `BENCH_9.json`).
 //!
 //! Run: `cargo bench --bench quant_hot_paths`
 
@@ -921,18 +924,165 @@ fn main() {
         ));
     }
 
+    // ---- scale-out front door: trace-driven loadgen (ISSUE 9) ----
+    // The new subsystem measured end to end: a real TCP socket, N workers
+    // (each its own Scheduler + ElasticPlanner) sharing one WeightStore and
+    // one fleet-global PagePool budget, driven by the deterministic Poisson
+    // trace with the 70/20/10 int8/int4/int2 mix.  Client-side TTFT
+    // (send → first chunk) and inter-token gaps, p50/p99, tokens/sec, and
+    // SLO attainment at 1/2/4 workers — plus the elastic on-vs-off pair
+    // under the same stressed trace, with the fleet's shift counters, to
+    // show what the watermark downshifts buy in attainment.
+    #[cfg(unix)]
+    let (json_front, json_front_elastic) = {
+        use matquant::loadgen::{run_trace, MixEntry, TraceConfig};
+        use matquant::serve::frontend::{HttpFrontend, PoolConfig, WorkerPool};
+        use matquant::serve::{ElasticConfig, ServerConfig};
+
+        let front_dims = || ModelDims {
+            vocab: 256,
+            d_model: 96,
+            n_layers: 4,
+            n_heads: 4,
+            d_ff: 384,
+            seq_len: 32,
+            quantize_attn: false,
+        };
+        // All precisions packed (no warm dense plans): every class streams
+        // the shared nested payload, and native int8 groups stay eligible
+        // for elastic downshifts.
+        let base_server = || ServerConfig {
+            preset: "bench".into(),
+            max_wait_ms: 0.5,
+            warm_bits: Vec::new(),
+            ..ServerConfig::default()
+        };
+        let trace = TraceConfig {
+            seed: 13,
+            requests: 36,
+            arrival_rate: 150.0,
+            prompt_len: (4, 8),
+            max_new_tokens: (2, 6),
+            vocab: front_dims().vocab,
+            mix: vec![
+                MixEntry::uniform(0.7, 8),
+                MixEntry::uniform(0.2, 4),
+                MixEntry::uniform(0.1, 2),
+            ],
+            ttft_slo_ms: 250.0,
+            tpot_slo_ms: 50.0,
+        };
+        let run_fleet = |workers: usize, server: ServerConfig, trace: &TraceConfig| {
+            let (p, m) = toy_transformer(front_dims(), 41);
+            let pool = WorkerPool::start(p, m, PoolConfig { workers, server }).unwrap();
+            let frontend = HttpFrontend::bind(pool, "127.0.0.1:0").unwrap();
+            let report = run_trace(&frontend.addr().to_string(), trace).unwrap();
+            let metrics = frontend.pool().fleet_metrics();
+            frontend.shutdown().unwrap();
+            (report, metrics)
+        };
+
+        let mut json_front: Vec<String> = Vec::new();
+        for workers in [1usize, 2, 4] {
+            let (report, _) = run_fleet(workers, base_server(), &trace);
+            let o = &report.overall;
+            println!(
+                "frontdoor w{workers} mix 70/20/10: ttft p50/p99 {:.2}/{:.2} ms | tpot p50/p99 {:.2}/{:.2} ms | {:.1} tok/s | slo {:.1}% | errors {}",
+                o.ttft_p50_ms,
+                o.ttft_p99_ms,
+                o.tpot_p50_ms,
+                o.tpot_p99_ms,
+                report.tokens_per_sec,
+                o.slo_attainment * 100.0,
+                report.errors
+            );
+            assert_eq!(report.errors, 0, "bench trace must complete cleanly");
+            let per_mix: Vec<String> = report
+                .per_mix
+                .iter()
+                .map(|r| r.to_json().to_string())
+                .collect();
+            json_front.push(format!(
+                "{{\"workers\": {workers}, \"ttft_p50_ms\": {:.3}, \"ttft_p99_ms\": {:.3}, \"tpot_p50_ms\": {:.3}, \"tpot_p99_ms\": {:.3}, \"tok_per_s\": {:.1}, \"slo_attainment\": {:.3}, \"per_mix\": [{}]}}",
+                o.ttft_p50_ms,
+                o.ttft_p99_ms,
+                o.tpot_p50_ms,
+                o.tpot_p99_ms,
+                report.tokens_per_sec,
+                o.slo_attainment,
+                per_mix.join(", ")
+            ));
+        }
+
+        // Elastic on vs off at 2 workers under pressure: a tight KV budget
+        // plus a faster trace so the watermarks actually trip, shifting the
+        // busiest native-int8 group down the nested ladder.
+        let stress = TraceConfig {
+            requests: 48,
+            arrival_rate: 400.0,
+            ..trace
+        };
+        let per_stream = projected_kv_bytes(&front_dims(), 8, 6, 0, &KvConfig::default());
+        let cap = per_stream * 3;
+        let mut json_front_elastic: Vec<String> = Vec::new();
+        for elastic_on in [false, true] {
+            let mut server = base_server();
+            server.kv_capacity_bytes = Some(cap);
+            if elastic_on {
+                server.elastic = Some(ElasticConfig {
+                    kv_high_bytes: cap / 2,
+                    kv_low_bytes: cap / 4,
+                    queue_high: 2,
+                    queue_low: 0,
+                    cooldown_rounds: 2,
+                    ..ElasticConfig::default()
+                });
+            }
+            let (report, metrics) = run_fleet(2, server, &stress);
+            let o = &report.overall;
+            let tag = if elastic_on { "on" } else { "off" };
+            println!(
+                "frontdoor elastic {tag} w2 kv-cap {cap}B: shifts {}down/{}up ({} sessions moved) | ttft p50/p99 {:.2}/{:.2} ms | {:.1} tok/s | slo {:.1}% | errors {}",
+                metrics.shifts_down(),
+                metrics.shifts_up(),
+                metrics.shift_moved(),
+                o.ttft_p50_ms,
+                o.ttft_p99_ms,
+                report.tokens_per_sec,
+                o.slo_attainment * 100.0,
+                report.errors
+            );
+            json_front_elastic.push(format!(
+                "{{\"elastic\": \"{tag}\", \"kv_capacity_bytes\": {cap}, \"shifts_down\": {}, \"shifts_up\": {}, \"sessions_moved\": {}, \"ttft_p50_ms\": {:.3}, \"ttft_p99_ms\": {:.3}, \"tok_per_s\": {:.1}, \"slo_attainment\": {:.3}, \"errors\": {}}}",
+                metrics.shifts_down(),
+                metrics.shifts_up(),
+                metrics.shift_moved(),
+                o.ttft_p50_ms,
+                o.ttft_p99_ms,
+                report.tokens_per_sec,
+                o.slo_attainment,
+                report.errors
+            ));
+        }
+        (json_front, json_front_elastic)
+    };
+    #[cfg(not(unix))]
+    let (json_front, json_front_elastic): (Vec<String>, Vec<String>) = (Vec::new(), Vec::new());
+
     // Hand-rolled JSON (the build is offline — no serde); the Makefile
     // `bench-json` target and the CI smoke step point MQ_BENCH_OUT at
-    // BENCH_8.json in the repo root.
+    // BENCH_9.json in the repo root.
     if let Ok(path) = std::env::var("MQ_BENCH_OUT") {
         let json = format!(
-            "{{\n  \"pr\": 8,\n  \"bench\": \"quant_hot_paths\",\n  \"model\": \"toy tiny-shaped (vocab 256, d_model 96, 4 layers, d_ff 384)\",\n  \"page_in_per_precision\": [\n    {}\n  ],\n  \"elastic_shift_latency\": [\n    {}\n  ],\n  \"round_throughput_per_watermark_state\": [\n    {}\n  ],\n  \"speculative_decode\": [\n    {}\n  ],\n  \"kv_concurrency_at_fixed_budget\": [\n    {}\n  ],\n  \"paged_attend_step_latency\": [\n    {}\n  ]\n}}\n",
+            "{{\n  \"pr\": 9,\n  \"bench\": \"quant_hot_paths\",\n  \"model\": \"toy tiny-shaped (vocab 256, d_model 96, 4 layers, d_ff 384)\",\n  \"page_in_per_precision\": [\n    {}\n  ],\n  \"elastic_shift_latency\": [\n    {}\n  ],\n  \"round_throughput_per_watermark_state\": [\n    {}\n  ],\n  \"speculative_decode\": [\n    {}\n  ],\n  \"kv_concurrency_at_fixed_budget\": [\n    {}\n  ],\n  \"paged_attend_step_latency\": [\n    {}\n  ],\n  \"frontdoor_loadgen\": [\n    {}\n  ],\n  \"frontdoor_elastic_on_vs_off\": [\n    {}\n  ]\n}}\n",
             json_page_in.join(",\n    "),
             json_shift.join(",\n    "),
             json_rounds.join(",\n    "),
             json_spec.join(",\n    "),
             json_kv.join(",\n    "),
-            json_attend.join(",\n    ")
+            json_attend.join(",\n    "),
+            json_front.join(",\n    "),
+            json_front_elastic.join(",\n    ")
         );
         std::fs::write(&path, &json).unwrap_or_else(|e| panic!("write bench json to {path}: {e}"));
         println!("bench rows persisted to {path}");

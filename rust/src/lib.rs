@@ -66,6 +66,22 @@
 //! stepping at 1/4/16 concurrent streams):
 //! `cargo bench --bench quant_hot_paths`.
 //!
+//! ## Scale-out front door (TCP serving + load harness)
+//!
+//! [`serve::frontend`] puts an async multi-worker fleet behind a real
+//! socket with zero new dependencies: a hand-rolled non-blocking
+//! HTTP/1.1 + chunked-NDJSON codec, a `poll(2)` readiness loop, and N
+//! workers (each its own Scheduler + ElasticPlanner) sharing the cached
+//! WeightStore plans, one fleet-global PagePool budget, and a
+//! precision-affinity admission queue with graceful drain and
+//! worker-death rebalance.  [`loadgen`] replays deterministic
+//! Poisson-arrival traces with per-precision traffic mixes against it
+//! and reports p50/p99 TTFT, p50/p99 per-token latency, tokens/sec, and
+//! SLO attainment.  `matquant serve` / `matquant loadgen --self-host`
+//! run it from the CLI; conformance (TCP byte-identity vs the
+//! in-process host backend, drain, worker death):
+//! `cargo test --test frontend`.  Unix-only.
+//!
 //! ## Build
 //!
 //! The build is fully offline: `anyhow` and `xla` resolve to vendored path
@@ -86,6 +102,8 @@ pub mod coordinator;
 pub mod data;
 pub mod eval;
 pub mod kernels;
+#[cfg(unix)]
+pub mod loadgen;
 pub mod mixnmatch;
 pub mod model;
 pub mod quant;

@@ -1,0 +1,525 @@
+//! Trace-driven load generator for the TCP front door: Poisson arrivals,
+//! sampled prompt/output lengths, a configurable per-precision traffic
+//! mix, and hundreds of concurrent blocking-client streams — reporting
+//! p50/p99 TTFT, p50/p99 per-token latency (TPOT), tokens/sec, and SLO
+//! attainment, overall and per mix entry.
+//!
+//! The generator measures what a *client* sees: TTFT is send-to-first-
+//! chunk over the real socket (connection, HTTP framing, queueing, and
+//! prefill included), TPOT is the gap between successive token chunks.
+//! The server's own [`crate::serve::Metrics`] TTFT counter measures
+//! submit-to-first-token inside the worker; comparing the two isolates
+//! the front-door overhead.
+//!
+//! Everything is deterministic under a fixed [`TraceConfig::seed`]
+//! except wall-clock timing itself: the same seed replays the same
+//! arrival times, prompts, lengths, and precision choices.
+//!
+//! Unix-only, like the frontend it drives.
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::data::Rng;
+use crate::runtime::Sampling;
+use crate::serve::frontend::codec;
+use crate::serve::request::{PrecisionReq, Request};
+use crate::util::json::Json;
+
+/// One precision class in the traffic mix.
+#[derive(Debug, Clone)]
+pub struct MixEntry {
+    /// Relative weight (fractions of the total across entries).
+    pub weight: f64,
+    pub bits: u32,
+    pub int8_acts: bool,
+    pub per_layer: Option<Vec<u32>>,
+}
+
+impl MixEntry {
+    pub fn uniform(weight: f64, bits: u32) -> MixEntry {
+        MixEntry {
+            weight,
+            bits,
+            int8_acts: false,
+            per_layer: None,
+        }
+    }
+
+    /// Row label, e.g. `int8`, `int4+a8`, `int8+pl`.
+    pub fn label(&self) -> String {
+        let mut s = format!("int{}", self.bits);
+        if self.int8_acts {
+            s.push_str("+a8");
+        }
+        if self.per_layer.is_some() {
+            s.push_str("+pl");
+        }
+        s
+    }
+}
+
+/// The trace shape: how much traffic, how fast, how long, at which
+/// precisions.
+#[derive(Debug, Clone)]
+pub struct TraceConfig {
+    pub seed: u64,
+    /// Total requests in the trace.
+    pub requests: usize,
+    /// Mean arrival rate in requests/second (exponential inter-arrivals
+    /// — a Poisson process).
+    pub arrival_rate: f64,
+    /// Prompt length sampled uniformly from this inclusive range (token
+    /// ids sampled from `[0, vocab)`).
+    pub prompt_len: (usize, usize),
+    /// Output length sampled uniformly from this inclusive range.
+    pub max_new_tokens: (usize, usize),
+    /// Vocabulary to sample prompt tokens from (the serving model's).
+    pub vocab: usize,
+    /// Traffic mix; weights need not sum to anything in particular.
+    pub mix: Vec<MixEntry>,
+    /// SLO: time-to-first-token at or under this attains.
+    pub ttft_slo_ms: f64,
+    /// SLO: mean per-token gap at or under this attains.
+    pub tpot_slo_ms: f64,
+}
+
+impl Default for TraceConfig {
+    fn default() -> Self {
+        TraceConfig {
+            seed: 7,
+            requests: 64,
+            arrival_rate: 100.0,
+            prompt_len: (4, 12),
+            max_new_tokens: (2, 6),
+            vocab: 64,
+            // The paper-motivated default: most traffic at int8, a tail
+            // sliced down the nested payload.
+            mix: vec![
+                MixEntry::uniform(0.7, 8),
+                MixEntry::uniform(0.2, 4),
+                MixEntry::uniform(0.1, 2),
+            ],
+            ttft_slo_ms: 250.0,
+            tpot_slo_ms: 100.0,
+        }
+    }
+}
+
+/// One request in a materialized trace: when it arrives and what it asks.
+#[derive(Debug, Clone)]
+pub struct PlannedRequest {
+    pub start_ms: f64,
+    pub mix_index: usize,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+}
+
+/// Materialize the trace deterministically from the seed: arrival times
+/// (exponential gaps), prompts, lengths, and mix choices.
+pub fn build_trace(cfg: &TraceConfig) -> Vec<PlannedRequest> {
+    let mut rng = Rng::new(cfg.seed);
+    let total_weight: f64 = cfg.mix.iter().map(|m| m.weight).sum();
+    let mut at_ms = 0.0f64;
+    let mut out = Vec::with_capacity(cfg.requests);
+    for _ in 0..cfg.requests {
+        // Exponential inter-arrival; clamp the uniform draw away from 0
+        // so ln() stays finite.
+        let u = rng.f64().max(1e-12);
+        at_ms += -u.ln() / cfg.arrival_rate.max(1e-9) * 1e3;
+        let mix_index = {
+            let mut pick = rng.f64() * total_weight;
+            let mut idx = cfg.mix.len() - 1;
+            for (i, m) in cfg.mix.iter().enumerate() {
+                if pick < m.weight {
+                    idx = i;
+                    break;
+                }
+                pick -= m.weight;
+            }
+            idx
+        };
+        let (lo, hi) = cfg.prompt_len;
+        let plen = lo + rng.below(hi.saturating_sub(lo) + 1);
+        let prompt: Vec<i32> = (0..plen.max(1))
+            .map(|_| rng.below(cfg.vocab.max(1)) as i32)
+            .collect();
+        let (glo, ghi) = cfg.max_new_tokens;
+        let gen = (glo + rng.below(ghi.saturating_sub(glo) + 1)).max(1);
+        out.push(PlannedRequest {
+            start_ms: at_ms,
+            mix_index,
+            prompt,
+            max_new_tokens: gen,
+        });
+    }
+    out
+}
+
+/// What one stream observed, client-side.
+#[derive(Debug, Clone)]
+struct StreamOutcome {
+    mix_index: usize,
+    /// Some(ms) once the first token chunk arrived.
+    ttft_ms: Option<f64>,
+    /// Gaps between successive token chunks.
+    gaps_ms: Vec<f64>,
+    tokens: usize,
+    error: Option<String>,
+}
+
+/// Aggregate latency row (overall, or one mix entry).
+#[derive(Debug, Clone)]
+pub struct LatencyRow {
+    pub label: String,
+    pub requests: usize,
+    pub completed: usize,
+    pub tokens: usize,
+    pub ttft_p50_ms: f64,
+    pub ttft_p99_ms: f64,
+    pub tpot_p50_ms: f64,
+    pub tpot_p99_ms: f64,
+    /// Fraction of *issued* requests that completed AND met both SLOs.
+    pub slo_attainment: f64,
+}
+
+/// The full report for one trace run.
+#[derive(Debug, Clone)]
+pub struct LoadReport {
+    pub overall: LatencyRow,
+    pub per_mix: Vec<LatencyRow>,
+    pub wall_ms: f64,
+    pub tokens_per_sec: f64,
+    pub errors: usize,
+}
+
+/// Nearest-rank percentile over unsorted samples, mirroring
+/// [`crate::serve::Metrics`]' percentile semantics (0.0 on empty).
+fn percentile(samples: &[f64], p: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.total_cmp(b));
+    let idx = ((p / 100.0) * (sorted.len() - 1) as f64).round() as usize;
+    sorted[idx.min(sorted.len() - 1)]
+}
+
+fn summarize(
+    label: String,
+    outcomes: &[&StreamOutcome],
+    cfg: &TraceConfig,
+) -> LatencyRow {
+    let requests = outcomes.len();
+    let completed = outcomes.iter().filter(|o| o.error.is_none()).count();
+    let tokens: usize = outcomes.iter().map(|o| o.tokens).sum();
+    let ttfts: Vec<f64> = outcomes.iter().filter_map(|o| o.ttft_ms).collect();
+    let gaps: Vec<f64> = outcomes.iter().flat_map(|o| o.gaps_ms.iter().copied()).collect();
+    let attained = outcomes
+        .iter()
+        .filter(|o| {
+            o.error.is_none()
+                && o.ttft_ms.is_some_and(|t| t <= cfg.ttft_slo_ms)
+                && (o.gaps_ms.is_empty() || {
+                    let mean = o.gaps_ms.iter().sum::<f64>() / o.gaps_ms.len() as f64;
+                    mean <= cfg.tpot_slo_ms
+                })
+        })
+        .count();
+    LatencyRow {
+        label,
+        requests,
+        completed,
+        tokens,
+        ttft_p50_ms: percentile(&ttfts, 50.0),
+        ttft_p99_ms: percentile(&ttfts, 99.0),
+        tpot_p50_ms: percentile(&gaps, 50.0),
+        tpot_p99_ms: percentile(&gaps, 99.0),
+        slo_attainment: if requests == 0 {
+            0.0
+        } else {
+            attained as f64 / requests as f64
+        },
+    }
+}
+
+/// Drive one stream: connect at its arrival time, POST, time the chunks.
+fn run_stream(addr: &str, cfg: &TraceConfig, planned: &PlannedRequest, id: u64) -> StreamOutcome {
+    let entry = &cfg.mix[planned.mix_index];
+    let mut outcome = StreamOutcome {
+        mix_index: planned.mix_index,
+        ttft_ms: None,
+        gaps_ms: Vec::new(),
+        tokens: 0,
+        error: None,
+    };
+    let mut req = Request::generate(
+        id,
+        planned.prompt.clone(),
+        PrecisionReq::Bits(entry.bits),
+        planned.max_new_tokens,
+        Sampling::Greedy,
+    );
+    req.int8_acts = entry.int8_acts;
+    req.per_layer = entry.per_layer.clone();
+    let body = codec::request_to_json(&req);
+    let run = || -> std::io::Result<(Option<f64>, Vec<f64>, usize, Option<String>)> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let mut writer = stream.try_clone()?;
+        let sent_at = Instant::now();
+        codec::write_generate(&mut writer, &body)?;
+        let mut reader = BufReader::new(stream);
+        let (status, headers) = codec::read_response_head(&mut reader)?;
+        if status != 200 {
+            let body = codec::read_body(&mut reader, &headers).unwrap_or_default();
+            return Ok((None, Vec::new(), 0, Some(format!("HTTP {status}: {body}"))));
+        }
+        let mut ttft = None;
+        let mut gaps = Vec::new();
+        let mut tokens = 0usize;
+        let mut last_at = sent_at;
+        let mut err = None;
+        while let Some(line) = codec::read_chunk(&mut reader)? {
+            let now = Instant::now();
+            let since_last = now.duration_since(last_at).as_secs_f64() * 1e3;
+            if ttft.is_none() {
+                ttft = Some(now.duration_since(sent_at).as_secs_f64() * 1e3);
+            } else {
+                gaps.push(since_last);
+            }
+            last_at = now;
+            match Json::parse(&line) {
+                Ok(event) => {
+                    if let Some(e) = event.opt("error") {
+                        err = Some(
+                            e.as_str().unwrap_or("stream error").to_string(),
+                        );
+                    } else {
+                        tokens += 1;
+                    }
+                }
+                Err(e) => err = Some(format!("bad event JSON: {e:#}")),
+            }
+        }
+        Ok((ttft, gaps, tokens, err))
+    };
+    match run() {
+        Ok((ttft, gaps, tokens, err)) => {
+            outcome.ttft_ms = ttft;
+            outcome.gaps_ms = gaps;
+            outcome.tokens = tokens;
+            outcome.error = err;
+        }
+        Err(e) => outcome.error = Some(format!("{e}")),
+    }
+    outcome
+}
+
+/// Replay the trace against a front door at `addr` (one OS thread per
+/// concurrent stream — arrivals overlap exactly as the Poisson clock
+/// dictates) and aggregate the report.
+pub fn run_trace(addr: &str, cfg: &TraceConfig) -> crate::Result<LoadReport> {
+    anyhow::ensure!(!cfg.mix.is_empty(), "traffic mix must have at least one entry");
+    let planned = build_trace(cfg);
+    let t0 = Instant::now();
+    let mut handles = Vec::with_capacity(planned.len());
+    for (i, p) in planned.into_iter().enumerate() {
+        let addr = addr.to_string();
+        let cfg = cfg.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("mq-loadgen-{i}"))
+                .spawn(move || {
+                    let due = Duration::from_secs_f64(p.start_ms / 1e3);
+                    let elapsed = t0.elapsed();
+                    if due > elapsed {
+                        std::thread::sleep(due - elapsed);
+                    }
+                    run_stream(&addr, &cfg, &p, i as u64 + 1)
+                })
+                .context("spawning loadgen stream")?,
+        );
+    }
+    let outcomes: Vec<StreamOutcome> = handles
+        .into_iter()
+        .map(|h| {
+            h.join().unwrap_or_else(|_| StreamOutcome {
+                mix_index: 0,
+                ttft_ms: None,
+                gaps_ms: Vec::new(),
+                tokens: 0,
+                error: Some("stream thread panicked".into()),
+            })
+        })
+        .collect();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let all: Vec<&StreamOutcome> = outcomes.iter().collect();
+    let overall = summarize("all".into(), &all, cfg);
+    let per_mix = cfg
+        .mix
+        .iter()
+        .enumerate()
+        .map(|(i, m)| {
+            let subset: Vec<&StreamOutcome> =
+                outcomes.iter().filter(|o| o.mix_index == i).collect();
+            summarize(m.label(), &subset, cfg)
+        })
+        .collect();
+    let tokens_per_sec = if wall_ms > 0.0 {
+        overall.tokens as f64 / (wall_ms / 1e3)
+    } else {
+        0.0
+    };
+    let errors = outcomes.iter().filter(|o| o.error.is_some()).count();
+    Ok(LoadReport {
+        overall,
+        per_mix,
+        wall_ms,
+        tokens_per_sec,
+        errors,
+    })
+}
+
+impl LatencyRow {
+    fn render(&self) -> String {
+        format!(
+            "{:<10} n={:<4} ok={:<4} tok={:<6} ttft p50/p99 = {:.2}/{:.2} ms  tpot p50/p99 = {:.2}/{:.2} ms  slo={:.1}%",
+            self.label,
+            self.requests,
+            self.completed,
+            self.tokens,
+            self.ttft_p50_ms,
+            self.ttft_p99_ms,
+            self.tpot_p50_ms,
+            self.tpot_p99_ms,
+            self.slo_attainment * 100.0
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("label", Json::str(self.label.clone())),
+            ("requests", Json::Num(self.requests as f64)),
+            ("completed", Json::Num(self.completed as f64)),
+            ("tokens", Json::Num(self.tokens as f64)),
+            ("ttft_p50_ms", Json::Num(self.ttft_p50_ms)),
+            ("ttft_p99_ms", Json::Num(self.ttft_p99_ms)),
+            ("tpot_p50_ms", Json::Num(self.tpot_p50_ms)),
+            ("tpot_p99_ms", Json::Num(self.tpot_p99_ms)),
+            ("slo_attainment", Json::Num(self.slo_attainment)),
+        ])
+    }
+}
+
+impl LoadReport {
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "trace: wall={:.1}ms  tokens/s={:.1}  errors={}\n",
+            self.wall_ms, self.tokens_per_sec, self.errors
+        ));
+        s.push_str(&self.overall.render());
+        s.push('\n');
+        for row in &self.per_mix {
+            s.push_str(&row.render());
+            s.push('\n');
+        }
+        s
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("wall_ms", Json::Num(self.wall_ms)),
+            ("tokens_per_sec", Json::Num(self.tokens_per_sec)),
+            ("errors", Json::Num(self.errors as f64)),
+            ("overall", self.overall.to_json()),
+            (
+                "per_mix",
+                Json::Arr(self.per_mix.iter().map(|r| r.to_json()).collect()),
+            ),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_and_well_formed() {
+        let cfg = TraceConfig {
+            requests: 50,
+            vocab: 32,
+            ..TraceConfig::default()
+        };
+        let a = build_trace(&cfg);
+        let b = build_trace(&cfg);
+        assert_eq!(a.len(), 50);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.start_ms, y.start_ms, "same seed, same arrivals");
+            assert_eq!(x.prompt, y.prompt);
+            assert_eq!(x.mix_index, y.mix_index);
+            assert_eq!(x.max_new_tokens, y.max_new_tokens);
+        }
+        let mut last = 0.0;
+        for p in &a {
+            assert!(p.start_ms >= last, "arrivals are monotone");
+            last = p.start_ms;
+            assert!(!p.prompt.is_empty());
+            assert!(p.prompt.iter().all(|&t| t >= 0 && (t as usize) < 32));
+            assert!(p.max_new_tokens >= 1);
+            assert!(p.mix_index < cfg.mix.len());
+        }
+        // Mix shares roughly track the weights (70/20/10 over 50 draws:
+        // the dominant class must dominate).
+        let counts = a.iter().fold([0usize; 3], |mut acc, p| {
+            acc[p.mix_index] += 1;
+            acc
+        });
+        assert!(counts[0] > counts[2], "70% class outdraws 10% class: {counts:?}");
+        // Different seed, different trace.
+        let c = build_trace(&TraceConfig { seed: 8, ..cfg });
+        assert!(
+            a.iter().zip(&c).any(|(x, y)| x.prompt != y.prompt || x.start_ms != y.start_ms),
+            "seed must matter"
+        );
+    }
+
+    #[test]
+    fn percentiles_and_slo_accounting() {
+        let samples: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        assert!((percentile(&samples, 50.0) - 50.0).abs() <= 1.0);
+        assert!((percentile(&samples, 99.0) - 99.0).abs() <= 1.0);
+        assert_eq!(percentile(&[], 50.0), 0.0);
+
+        let cfg = TraceConfig {
+            ttft_slo_ms: 10.0,
+            tpot_slo_ms: 5.0,
+            ..TraceConfig::default()
+        };
+        let good = StreamOutcome {
+            mix_index: 0,
+            ttft_ms: Some(8.0),
+            gaps_ms: vec![4.0, 4.0],
+            tokens: 3,
+            error: None,
+        };
+        let slow_first_token = StreamOutcome {
+            ttft_ms: Some(50.0),
+            ..good.clone()
+        };
+        let failed = StreamOutcome {
+            error: Some("worker died".into()),
+            ..good.clone()
+        };
+        let rows = [&good, &slow_first_token, &failed];
+        let row = summarize("all".into(), &rows, &cfg);
+        assert_eq!(row.requests, 3);
+        assert_eq!(row.completed, 2);
+        assert!((row.slo_attainment - 1.0 / 3.0).abs() < 1e-9);
+    }
+}

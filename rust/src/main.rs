@@ -6,6 +6,8 @@
 //!   eval --ckpt F [--bits B]      — evaluate a checkpoint at a precision
 //!   experiment --table N | --fig F — regenerate a paper table/figure
 //!   serve-demo [...]              — elastic-precision serving demo
+//!   serve [...]                   — multi-worker TCP front door (unix)
+//!   loadgen [...]                 — trace-driven load harness (unix)
 
 use anyhow::{bail, Context, Result};
 use matquant::coordinator::{experiments, train, Mode, Objective, TrainSpec};
@@ -35,8 +37,14 @@ fn run() -> Result<()> {
         "eval" => cmd_eval(&args),
         "experiment" => cmd_experiment(&args),
         "serve-demo" => cmd_serve_demo(&args),
+        #[cfg(unix)]
+        "serve" => cmd_serve(&args),
+        #[cfg(unix)]
+        "loadgen" => cmd_loadgen(&args),
         other => {
-            bail!("unknown command {other:?} (try: info, train, eval, experiment, serve-demo)")
+            bail!(
+                "unknown command {other:?} (try: info, train, eval, experiment, serve-demo, serve, loadgen)"
+            )
         }
     }
 }
@@ -255,5 +263,194 @@ fn cmd_serve_demo(args: &Args) -> Result<()> {
     println!("{ok}/{n} responses");
     println!("{}", server.metrics_report()?);
     server.shutdown()?;
+    Ok(())
+}
+
+/// A self-contained toy transformer built from dims flags — no artifacts
+/// needed, so `serve` / `loadgen --self-host` run anywhere the crate
+/// builds.
+#[cfg(unix)]
+fn toy_model_from_args(
+    args: &Args,
+) -> Result<(matquant::model::PresetInfo, QuantizedModel)> {
+    let dims = matquant::model::ModelDims {
+        vocab: args.get_usize("vocab", 64)?,
+        d_model: args.get_usize("d-model", 32)?,
+        n_layers: args.get_usize("layers", 2)?,
+        n_heads: args.get_usize("heads", 4)?,
+        d_ff: args.get_usize("d-ff", 64)?,
+        seq_len: args.get_usize("seq-len", 128)?,
+        quantize_attn: args.has_flag("quantize-attn"),
+    };
+    anyhow::ensure!(
+        dims.d_model % dims.n_heads == 0,
+        "--d-model must be divisible by --heads"
+    );
+    Ok(matquant::model::testing::toy_transformer(
+        dims,
+        args.get_u64("model-seed", 11)?,
+    ))
+}
+
+#[cfg(unix)]
+fn server_cfg_from_args(args: &Args) -> Result<matquant::serve::ServerConfig> {
+    use matquant::serve::{ElasticConfig, ServerConfig, SpeculativeConfig};
+    let kv_cap = args.get_u64("kv-cap", 0)?;
+    let mut cfg = ServerConfig {
+        preset: "toy".into(),
+        max_wait_ms: args.get_f32("wait-ms", 2.0)? as f64,
+        kv_capacity_bytes: if kv_cap > 0 { Some(kv_cap) } else { None },
+        ..ServerConfig::default()
+    };
+    if args.has_flag("elastic") {
+        let mut e = ElasticConfig::default();
+        if kv_cap > 0 {
+            e.kv_high_bytes = kv_cap * 3 / 4;
+            e.kv_low_bytes = kv_cap / 2;
+        }
+        e.queue_high = args.get_usize("queue-high", 6)?;
+        e.queue_low = args.get_usize("queue-low", 1)?;
+        cfg.elastic = Some(e);
+    }
+    if args.has_flag("spec") {
+        cfg.speculative = Some(SpeculativeConfig::default());
+    }
+    Ok(cfg)
+}
+
+/// `matquant serve`: the multi-worker TCP front door on a toy model.
+///
+/// ```text
+/// matquant serve --addr 127.0.0.1:8701 --workers 2 [--elastic] [--spec]
+///                [--kv-cap BYTES] [--duration-ms N]
+/// curl -N -d '{"prompt":[1,2,3],"bits":4,"max_new_tokens":8}' \
+///      http://127.0.0.1:8701/v1/generate
+/// ```
+#[cfg(unix)]
+fn cmd_serve(args: &Args) -> Result<()> {
+    use matquant::serve::frontend::HttpFrontend;
+    use matquant::serve::frontend::{PoolConfig, WorkerPool};
+    let (preset, model) = toy_model_from_args(args)?;
+    let pool = WorkerPool::start(
+        preset,
+        model,
+        PoolConfig {
+            workers: args.get_usize("workers", 2)?,
+            server: server_cfg_from_args(args)?,
+        },
+    )?;
+    let frontend = HttpFrontend::bind(pool, args.get_or("addr", "127.0.0.1:8701"))?;
+    println!("serving on http://{}", frontend.addr());
+    println!("  POST /v1/generate (chunked NDJSON, one event per token)");
+    println!("  GET  /healthz     GET /metrics");
+    let duration_ms = args.get_u64("duration-ms", 0)?;
+    if duration_ms > 0 {
+        std::thread::sleep(std::time::Duration::from_millis(duration_ms));
+        println!("{}", frontend.pool().metrics_report());
+        frontend.shutdown()?;
+    } else {
+        // Run until killed; the Drop impl stops the listener thread.
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(3600));
+        }
+    }
+    Ok(())
+}
+
+/// Parse `--mix "8:70,4:20,2:10"`; an `i` suffix on the bits token
+/// (`8i:20`) requests int8 activations for that class.
+#[cfg(unix)]
+fn parse_mix(spec: &str) -> Result<Vec<matquant::loadgen::MixEntry>> {
+    let mut mix = Vec::new();
+    for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+        let (bits_s, weight_s) = part
+            .trim()
+            .split_once(':')
+            .with_context(|| format!("mix entry {part:?}: expected BITS:WEIGHT"))?;
+        let (bits_s, int8) = match bits_s.strip_suffix('i') {
+            Some(b) => (b, true),
+            None => (bits_s, false),
+        };
+        let bits: u32 = bits_s
+            .parse()
+            .with_context(|| format!("mix entry {part:?}: bad bits"))?;
+        let weight: f64 = weight_s
+            .parse()
+            .with_context(|| format!("mix entry {part:?}: bad weight"))?;
+        anyhow::ensure!((1..=8).contains(&bits), "mix bits must be 1..=8");
+        anyhow::ensure!(weight > 0.0, "mix weight must be positive");
+        let mut entry = matquant::loadgen::MixEntry::uniform(weight, bits);
+        entry.int8_acts = int8;
+        mix.push(entry);
+    }
+    anyhow::ensure!(!mix.is_empty(), "--mix parsed to zero entries");
+    Ok(mix)
+}
+
+/// `matquant loadgen`: replay a deterministic Poisson trace against a
+/// front door and report TTFT/TPOT percentiles, tokens/sec, and SLO
+/// attainment.
+///
+/// ```text
+/// matquant loadgen --addr HOST:PORT --requests 64 --rate 50 \
+///                  --mix "8:70,4:20,2:10" [--json-out report.json]
+/// matquant loadgen --self-host --workers 2 --requests 16   # CI smoke
+/// ```
+#[cfg(unix)]
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use matquant::loadgen::{run_trace, TraceConfig};
+    use matquant::serve::frontend::{HttpFrontend, PoolConfig, WorkerPool};
+    let mut tcfg = TraceConfig {
+        seed: args.get_u64("seed", 7)?,
+        requests: args.get_usize("requests", 32)?,
+        arrival_rate: args.get_f32("rate", 50.0)? as f64,
+        prompt_len: (
+            args.get_usize("prompt-lo", 4)?,
+            args.get_usize("prompt-hi", 12)?,
+        ),
+        max_new_tokens: (args.get_usize("gen-lo", 2)?, args.get_usize("gen-hi", 6)?),
+        vocab: args.get_usize("vocab", 64)?,
+        mix: parse_mix(args.get_or("mix", "8:70,4:20,2:10"))?,
+        ttft_slo_ms: args.get_f32("ttft-slo", 250.0)? as f64,
+        tpot_slo_ms: args.get_f32("tpot-slo", 100.0)? as f64,
+    };
+    anyhow::ensure!(
+        tcfg.prompt_len.0 <= tcfg.prompt_len.1 && tcfg.max_new_tokens.0 <= tcfg.max_new_tokens.1,
+        "length ranges must be lo <= hi"
+    );
+    let report = if args.has_flag("self-host") {
+        let (preset, model) = toy_model_from_args(args)?;
+        tcfg.vocab = preset.model.vocab;
+        anyhow::ensure!(
+            tcfg.prompt_len.1 + tcfg.max_new_tokens.1 <= preset.model.seq_len,
+            "prompt-hi + gen-hi must fit --seq-len"
+        );
+        let pool = WorkerPool::start(
+            preset,
+            model,
+            PoolConfig {
+                workers: args.get_usize("workers", 2)?,
+                server: server_cfg_from_args(args)?,
+            },
+        )?;
+        let frontend = HttpFrontend::bind(pool, "127.0.0.1:0")?;
+        let addr = frontend.addr().to_string();
+        println!("self-hosting {} workers on {addr}", frontend.pool().workers());
+        let report = run_trace(&addr, &tcfg)?;
+        println!("{}", frontend.pool().metrics_report());
+        frontend.shutdown()?;
+        report
+    } else {
+        let addr = args
+            .get("addr")
+            .context("--addr HOST:PORT required (or --self-host)")?;
+        run_trace(addr, &tcfg)?
+    };
+    print!("{}", report.render());
+    if let Some(path) = args.get("json-out") {
+        std::fs::write(path, report.to_json().to_string())
+            .with_context(|| format!("writing {path}"))?;
+        println!("report: {path}");
+    }
     Ok(())
 }

@@ -13,8 +13,11 @@
 //!   precision), and plans at different precisions share the non-quantized
 //!   parameter `Arc`s.
 //! * **Reusable scratch** — activations, K/V buffers, and logits scratch
-//!   live inside the plan (grow-only, behind a `RefCell`), so steady-state
-//!   forwards and decode steps allocate nothing but their output row.
+//!   live inside the plan (grow-only, behind a `Mutex`), so steady-state
+//!   forwards and decode steps allocate nothing but their output row.  The
+//!   lock makes plans `Send + Sync`: `serve::frontend` workers share one
+//!   `Arc<ForwardPlan>` per `PlanKey` fleet-wide, and precision-affinity
+//!   dispatch keeps the lock effectively uncontended.
 //! * **Per-layer precision** — the packed builders accept a Mix'n'Match
 //!   bit-width map ([`ForwardPlan::packed_per_layer`]), so assignments from
 //!   [`crate::mixnmatch::sensitivity`] are *servable*, not just rankable.
@@ -47,9 +50,8 @@
 //! present, the quantizer runs with a fixed range instead of re-scanning
 //! every token row.
 
-use std::cell::RefCell;
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex, MutexGuard};
 
 use anyhow::{anyhow, ensure};
 
@@ -221,8 +223,15 @@ pub struct ForwardPlan {
     layers: Vec<PlanLayer>,
     ln_f: Arc<Tensor>,
     head: PlanLinear,
-    scratch: RefCell<PlanScratch>,
+    scratch: Mutex<PlanScratch>,
 }
+
+// Every shared handle inside a plan is an `Arc` over immutable data and the
+// scratch is lock-guarded, so plans cross worker threads freely.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<ForwardPlan>();
+};
 
 impl ForwardPlan {
     /// Build a plan over a dense materialized set (weights in
@@ -415,8 +424,16 @@ impl ForwardPlan {
             layers,
             ln_f,
             head,
-            scratch: RefCell::new(PlanScratch::default()),
+            scratch: Mutex::new(PlanScratch::default()),
         })
+    }
+
+    /// Lock the grow-only scratch.  A poisoned lock is recovered
+    /// deliberately: every forward re-grows and overwrites the buffers it
+    /// reads, so a panic on a sibling worker thread leaves nothing stale to
+    /// observe.
+    fn scratch(&self) -> MutexGuard<'_, PlanScratch> {
+        self.scratch.lock().unwrap_or_else(|p| p.into_inner())
     }
 
     /// The int8 activation policy this plan was built with.
@@ -590,7 +607,7 @@ impl ForwardPlan {
         let max_nk = positions.iter().map(|&p| p + 1).max().unwrap_or(1);
         let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
         let int8 = self.int8;
-        let mut scratch = self.scratch.borrow_mut();
+        let mut scratch = self.scratch();
         let s = &mut *scratch;
         grow(&mut s.x, m * d);
         grow(&mut s.norm, m * d);
@@ -748,7 +765,7 @@ impl ForwardPlan {
         let max_nk = positions.iter().map(|&p| p + k).max().unwrap_or(k);
         let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
         let int8 = self.int8;
-        let mut scratch = self.scratch.borrow_mut();
+        let mut scratch = self.scratch();
         let s = &mut *scratch;
         grow(&mut s.x, n * d);
         grow(&mut s.norm, n * d);
@@ -962,7 +979,7 @@ impl ForwardPlan {
 
         let n = b * t;
         let inv_sqrt_dh = 1.0 / (dh as f32).sqrt();
-        let mut scratch = self.scratch.borrow_mut();
+        let mut scratch = self.scratch();
         let s = &mut *scratch;
         grow(&mut s.x, n * d);
         grow(&mut s.norm, n * d);

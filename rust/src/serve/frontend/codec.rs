@@ -1,0 +1,525 @@
+//! Wire codec for the TCP front door: a deliberately small HTTP/1.1
+//! subset (enough for `POST /v1/generate` + `GET /metrics|/healthz`) and
+//! the NDJSON-over-chunked-transfer stream format — one chunk per
+//! generated token, a final chunk carrying the whole token vector and
+//! timings, then the zero-length terminator.
+//!
+//! Everything here is pure byte/string transformation: no sockets, no
+//! locks, no threads — the listener's readiness loop and the loadgen's
+//! blocking client both drive it, and the unit tests exercise round-trips
+//! without any I/O at all.
+//!
+//! Request body (`POST /v1/generate`, `Content-Length` required):
+//!
+//! ```json
+//! {"prompt": [1, 2, 3], "bits": 4, "int8": false,
+//!  "per_layer": [8, 4, 2], "max_new_tokens": 8,
+//!  "temperature": 0.8, "seed": 7}
+//! ```
+//!
+//! Only `prompt` is mandatory.  `bits` defaults to 8; `per_layer`
+//! overrides it (the map's maximum becomes the reported width, exactly as
+//! on the in-process path); omitting `temperature` means greedy decode.
+//! Clients may pin an `id`, but in-flight ids must be unique — the server
+//! otherwise assigns one.
+//!
+//! Response: `200 OK` + `Transfer-Encoding: chunked`, each chunk one JSON
+//! line.  Mid-stream events carry `{id, token, logit, bits, int8,
+//! done:false}`; the final event adds `tokens`, `queue_ms`, `prefill_ms`,
+//! `decode_ms`, `batch`; a terminal failure arrives in-band as
+//! `{id, error, done:true}`.  Pre-stream rejections are plain HTTP
+//! status responses (400 malformed / 503 draining) with a JSON error
+//! body — a client never hangs on a request the server will not serve.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, Read, Write};
+
+use crate::runtime::Sampling;
+use crate::serve::request::{PrecisionReq, Request, Response};
+use crate::util::json::Json;
+
+/// Cap on the header block of one request — a peer that streams an
+/// unbounded request line must exhaust its own socket, not our memory.
+pub const MAX_HEADER_BYTES: usize = 64 * 1024;
+/// Cap on a request body (prompts are token-id arrays; 8 MiB of JSON is
+/// ~1M tokens — far past any model window this repo serves).
+pub const MAX_BODY_BYTES: usize = 8 * 1024 * 1024;
+
+/// One parsed HTTP request off a connection's read buffer.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HttpRequest {
+    pub method: String,
+    pub path: String,
+    pub body: Vec<u8>,
+}
+
+/// Incremental HTTP/1.1 request parse off the front of `buf`.
+///
+/// * `Ok(None)` — the buffer does not yet hold a complete request; read
+///   more bytes and call again (nothing is consumed).
+/// * `Ok(Some(req))` — one complete request; its bytes are drained from
+///   `buf` (pipelined follow-ups stay put).
+/// * `Err(msg)` — the peer sent something we will never accept (oversized
+///   headers/body, chunked request body, malformed request line); the
+///   connection should answer 400 and close.
+pub fn parse_http_request(buf: &mut Vec<u8>) -> Result<Option<HttpRequest>, String> {
+    let Some(head_end) = find_subslice(buf, b"\r\n\r\n") else {
+        if buf.len() > MAX_HEADER_BYTES {
+            return Err("header block exceeds 64KiB".into());
+        }
+        return Ok(None);
+    };
+    if head_end > MAX_HEADER_BYTES {
+        return Err("header block exceeds 64KiB".into());
+    }
+    let head = String::from_utf8_lossy(&buf[..head_end]).into_owned();
+    let mut lines = head.split("\r\n");
+    let request_line = lines.next().unwrap_or("");
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(format!("malformed request line {request_line:?}"));
+    }
+    let mut content_length = 0usize;
+    for line in lines {
+        let Some((name, value)) = line.split_once(':') else {
+            continue;
+        };
+        let name = name.trim().to_ascii_lowercase();
+        let value = value.trim();
+        if name == "content-length" {
+            content_length = value
+                .parse::<usize>()
+                .map_err(|_| format!("bad content-length {value:?}"))?;
+        } else if name == "transfer-encoding" {
+            // We stream chunked *responses*; chunked *requests* are out of
+            // scope for a token-array API and rejecting beats misparsing.
+            return Err("chunked request bodies are not supported".into());
+        }
+    }
+    if content_length > MAX_BODY_BYTES {
+        return Err(format!("body of {content_length}B exceeds 8MiB"));
+    }
+    let body_start = head_end + 4;
+    if buf.len() < body_start + content_length {
+        return Ok(None);
+    }
+    let body = buf[body_start..body_start + content_length].to_vec();
+    buf.drain(..body_start + content_length);
+    Ok(Some(HttpRequest { method, path, body }))
+}
+
+fn find_subslice(haystack: &[u8], needle: &[u8]) -> Option<usize> {
+    haystack.windows(needle.len()).position(|w| w == needle)
+}
+
+/// Decode a `POST /v1/generate` JSON body into a [`Request`].
+/// `fallback_id` is the server-assigned id used when the client does not
+/// pin its own.  Shape errors come back as the 400 body text.
+pub fn request_from_json(body: &[u8], fallback_id: u64) -> Result<Request, String> {
+    let text = std::str::from_utf8(body).map_err(|_| "body is not UTF-8".to_string())?;
+    let j = Json::parse(text).map_err(|e| format!("bad JSON body: {e:#}"))?;
+    let prompt: Vec<i32> = j
+        .get("prompt")
+        .and_then(|p| p.as_arr())
+        .map_err(|e| format!("prompt: {e:#}"))?
+        .iter()
+        .map(|t| t.as_f64().map(|v| v as i32))
+        .collect::<crate::Result<_>>()
+        .map_err(|e| format!("prompt: {e:#}"))?;
+    let id = match j.opt("id") {
+        Some(v) => v.as_f64().map_err(|e| format!("id: {e:#}"))? as u64,
+        None => fallback_id,
+    };
+    let bits = match j.opt("bits") {
+        Some(v) => v.as_u32().map_err(|e| format!("bits: {e:#}"))?,
+        None => 8,
+    };
+    let int8_acts = match j.opt("int8") {
+        Some(v) => v.as_bool().map_err(|e| format!("int8: {e:#}"))?,
+        None => false,
+    };
+    let per_layer = match j.opt("per_layer") {
+        Some(v) => Some(
+            v.as_arr()
+                .map_err(|e| format!("per_layer: {e:#}"))?
+                .iter()
+                .map(|b| b.as_u32())
+                .collect::<crate::Result<Vec<u32>>>()
+                .map_err(|e| format!("per_layer: {e:#}"))?,
+        ),
+        None => None,
+    };
+    let max_new_tokens = match j.opt("max_new_tokens") {
+        Some(v) => v.as_usize().map_err(|e| format!("max_new_tokens: {e:#}"))?,
+        None => 1,
+    };
+    let sampling = match j.opt("temperature") {
+        Some(v) => {
+            let temp = v.as_f64().map_err(|e| format!("temperature: {e:#}"))? as f32;
+            let seed = match j.opt("seed") {
+                Some(s) => s.as_f64().map_err(|e| format!("seed: {e:#}"))? as u64,
+                None => 0,
+            };
+            Sampling::Temperature { temp, seed }
+        }
+        None => Sampling::Greedy,
+    };
+    Ok(Request {
+        id,
+        prompt,
+        precision: PrecisionReq::Bits(bits),
+        int8_acts,
+        max_new_tokens,
+        sampling,
+        per_layer,
+    })
+}
+
+/// One streamed token event as a JSON line.  The final event additionally
+/// carries the accumulated token vector and the request's timings, so a
+/// client that only reads the last line still gets the whole answer —
+/// mirroring the in-process path where the `done` [`Response`] is
+/// self-contained.
+pub fn event_json(resp: &Response) -> String {
+    let mut entries = vec![
+        ("id", Json::Num(resp.id as f64)),
+        ("token", Json::Num(resp.next_token as f64)),
+        ("logit", Json::Num(resp.logit as f64)),
+        ("bits", Json::Num(resp.bits as f64)),
+        ("int8", Json::Bool(resp.int8_acts)),
+        ("done", Json::Bool(resp.done)),
+    ];
+    if resp.done {
+        entries.push((
+            "tokens",
+            Json::Arr(resp.tokens.iter().map(|&t| Json::Num(t as f64)).collect()),
+        ));
+        entries.push(("queue_ms", Json::Num(resp.queue_ms)));
+        entries.push(("prefill_ms", Json::Num(resp.prefill_ms)));
+        entries.push(("decode_ms", Json::Num(resp.decode_ms)));
+        entries.push(("batch", Json::Num(resp.batch_size as f64)));
+    }
+    Json::obj(entries).to_string()
+}
+
+/// A terminal in-band error event — the stream's last chunk when a
+/// request dies after headers were already committed (worker death,
+/// failed plan swap, validation rejection inside the worker).
+pub fn error_json(id: u64, msg: &str) -> String {
+    Json::obj(vec![
+        ("id", Json::Num(id as f64)),
+        ("error", Json::str(msg)),
+        ("done", Json::Bool(true)),
+    ])
+    .to_string()
+}
+
+/// Frame one NDJSON line as an HTTP/1.1 chunk (the newline rides inside
+/// the chunk so `lines()`-style clients work unframed too).
+pub fn encode_chunk(line: &str) -> Vec<u8> {
+    let mut data = Vec::with_capacity(line.len() + 16);
+    data.extend_from_slice(format!("{:x}\r\n", line.len() + 1).as_bytes());
+    data.extend_from_slice(line.as_bytes());
+    data.push(b'\n');
+    data.extend_from_slice(b"\r\n");
+    data
+}
+
+/// The zero-length terminating chunk.
+pub fn final_chunk() -> &'static [u8] {
+    b"0\r\n\r\n"
+}
+
+/// Response head for a token stream: committed once the request is
+/// accepted into the shared queue, before the first token exists.
+pub fn stream_head() -> &'static [u8] {
+    b"HTTP/1.1 200 OK\r\nContent-Type: application/x-ndjson\r\nTransfer-Encoding: chunked\r\nConnection: keep-alive\r\n\r\n"
+}
+
+/// A complete non-streaming response (rejections, `/metrics`,
+/// `/healthz`, 404s) with `Content-Length` so keep-alive framing holds.
+pub fn simple_response(status: u16, reason: &str, content_type: &str, body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status} {reason}\r\nContent-Type: {content_type}\r\nContent-Length: {}\r\nConnection: keep-alive\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// JSON error body for a pre-stream rejection (400/503).
+pub fn error_response(status: u16, reason: &str, msg: &str) -> Vec<u8> {
+    let body = Json::obj(vec![("error", Json::str(msg))]).to_string();
+    simple_response(status, reason, "application/json", &body)
+}
+
+// ---------------------------------------------------------------------------
+// Client side (blocking) — used by the loadgen and the conformance tests.
+// ---------------------------------------------------------------------------
+
+/// Serialize a generate request body; the inverse of
+/// [`request_from_json`] minus the server-side defaults.
+pub fn request_to_json(req: &Request) -> String {
+    let mut entries = vec![(
+        "prompt",
+        Json::Arr(req.prompt.iter().map(|&t| Json::Num(t as f64)).collect()),
+    )];
+    entries.push(("id", Json::Num(req.id as f64)));
+    entries.push(("bits", Json::Num(req.precision.bits() as f64)));
+    entries.push(("int8", Json::Bool(req.int8_acts)));
+    entries.push(("max_new_tokens", Json::Num(req.max_new_tokens as f64)));
+    if let Some(map) = &req.per_layer {
+        entries.push((
+            "per_layer",
+            Json::Arr(map.iter().map(|&b| Json::Num(b as f64)).collect()),
+        ));
+    }
+    if let Sampling::Temperature { temp, seed } = req.sampling {
+        entries.push(("temperature", Json::Num(temp as f64)));
+        entries.push(("seed", Json::Num(seed as f64)));
+    }
+    Json::obj(entries).to_string()
+}
+
+/// Write one `POST /v1/generate` over a blocking stream.
+pub fn write_generate(w: &mut impl Write, body: &str) -> std::io::Result<()> {
+    write!(
+        w,
+        "POST /v1/generate HTTP/1.1\r\nHost: mq\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )?;
+    w.flush()
+}
+
+/// Write one bodyless GET over a blocking stream.
+pub fn write_get(w: &mut impl Write, path: &str) -> std::io::Result<()> {
+    write!(w, "GET {path} HTTP/1.1\r\nHost: mq\r\n\r\n")?;
+    w.flush()
+}
+
+/// Blocking read of a response head: status code + lowercased headers.
+/// Leaves the reader positioned at the first body byte.
+pub fn read_response_head(
+    r: &mut impl BufRead,
+) -> std::io::Result<(u16, BTreeMap<String, String>)> {
+    let status_line = read_crlf_line(r)?;
+    let status = status_line
+        .split_whitespace()
+        .nth(1)
+        .and_then(|s| s.parse::<u16>().ok())
+        .ok_or_else(|| bad_data(format!("bad status line {status_line:?}")))?;
+    let mut headers = BTreeMap::new();
+    loop {
+        let line = read_crlf_line(r)?;
+        if line.is_empty() {
+            break;
+        }
+        if let Some((name, value)) = line.split_once(':') {
+            headers.insert(
+                name.trim().to_ascii_lowercase(),
+                value.trim().to_string(),
+            );
+        }
+    }
+    Ok((status, headers))
+}
+
+/// Blocking read of one chunked-transfer chunk: `Ok(Some(line))` per
+/// event (trailing newline stripped), `Ok(None)` at the terminator.
+pub fn read_chunk(r: &mut impl BufRead) -> std::io::Result<Option<String>> {
+    let size_line = read_crlf_line(r)?;
+    let size = usize::from_str_radix(size_line.trim(), 16)
+        .map_err(|_| bad_data(format!("bad chunk size {size_line:?}")))?;
+    if size == 0 {
+        let _ = read_crlf_line(r)?; // trailing CRLF after the 0 chunk
+        return Ok(None);
+    }
+    let mut data = vec![0u8; size];
+    r.read_exact(&mut data)?;
+    let mut crlf = [0u8; 2];
+    r.read_exact(&mut crlf)?;
+    let mut text = String::from_utf8_lossy(&data).into_owned();
+    if text.ends_with('\n') {
+        text.pop();
+    }
+    Ok(Some(text))
+}
+
+/// Blocking read of a `Content-Length` body (the non-streaming
+/// responses).
+pub fn read_body(r: &mut impl BufRead, headers: &BTreeMap<String, String>) -> std::io::Result<String> {
+    let len = headers
+        .get("content-length")
+        .and_then(|v| v.parse::<usize>().ok())
+        .unwrap_or(0);
+    let mut body = vec![0u8; len];
+    r.read_exact(&mut body)?;
+    Ok(String::from_utf8_lossy(&body).into_owned())
+}
+
+fn read_crlf_line(r: &mut impl BufRead) -> std::io::Result<String> {
+    let mut line = String::new();
+    let n = r.read_line(&mut line)?;
+    if n == 0 {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::UnexpectedEof,
+            "connection closed mid-response",
+        ));
+    }
+    while line.ends_with('\n') || line.ends_with('\r') {
+        line.pop();
+    }
+    Ok(line)
+}
+
+fn bad_data(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn post_bytes(body: &str) -> Vec<u8> {
+        format!(
+            "POST /v1/generate HTTP/1.1\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )
+        .into_bytes()
+    }
+
+    #[test]
+    fn http_parse_is_incremental_and_pipelined() {
+        let body = r#"{"prompt":[1,2]}"#;
+        let full = post_bytes(body);
+        // Byte-at-a-time arrival: no prefix parses early, the full buffer
+        // parses exactly once.
+        let mut buf = Vec::new();
+        for (i, &b) in full.iter().enumerate() {
+            buf.push(b);
+            let parsed = parse_http_request(&mut buf).unwrap();
+            if i + 1 < full.len() {
+                assert!(parsed.is_none(), "parsed early at byte {i}");
+            } else {
+                let req = parsed.expect("complete request must parse");
+                assert_eq!(req.method, "POST");
+                assert_eq!(req.path, "/v1/generate");
+                assert_eq!(req.body, body.as_bytes());
+            }
+        }
+        assert!(buf.is_empty(), "consumed request must drain the buffer");
+        // Pipelined: two requests back-to-back parse in order, leaving
+        // the second intact after the first.
+        let mut buf = post_bytes(body);
+        buf.extend_from_slice(b"GET /healthz HTTP/1.1\r\n\r\n");
+        let first = parse_http_request(&mut buf).unwrap().unwrap();
+        assert_eq!(first.method, "POST");
+        let second = parse_http_request(&mut buf).unwrap().unwrap();
+        assert_eq!((second.method.as_str(), second.path.as_str()), ("GET", "/healthz"));
+        assert!(buf.is_empty());
+    }
+
+    #[test]
+    fn http_parse_rejects_hostile_input() {
+        // Chunked request bodies: unsupported, must error not hang.
+        let mut buf =
+            b"POST /v1/generate HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n".to_vec();
+        assert!(parse_http_request(&mut buf).is_err());
+        // A header block that never terminates must be cut off at the cap.
+        let mut buf = vec![b'A'; MAX_HEADER_BYTES + 1];
+        assert!(parse_http_request(&mut buf).is_err());
+        // Garbage request line.
+        let mut buf = b"NONSENSE\r\n\r\n".to_vec();
+        assert!(parse_http_request(&mut buf).is_err());
+    }
+
+    #[test]
+    fn request_json_round_trips_every_field() {
+        let req = Request {
+            id: 42,
+            prompt: vec![3, 1, 4],
+            precision: PrecisionReq::Bits(4),
+            int8_acts: true,
+            max_new_tokens: 7,
+            sampling: Sampling::Temperature { temp: 0.5, seed: 9 },
+            per_layer: Some(vec![8, 4, 2]),
+        };
+        let body = request_to_json(&req);
+        let back = request_from_json(body.as_bytes(), 999).unwrap();
+        assert_eq!(back.id, 42);
+        assert_eq!(back.prompt, vec![3, 1, 4]);
+        assert_eq!(back.precision.bits(), 4);
+        assert!(back.int8_acts);
+        assert_eq!(back.max_new_tokens, 7);
+        assert_eq!(back.per_layer, Some(vec![8, 4, 2]));
+        match back.sampling {
+            Sampling::Temperature { temp, seed } => {
+                assert!((temp - 0.5).abs() < 1e-6);
+                assert_eq!(seed, 9);
+            }
+            other => panic!("sampling did not round-trip: {other:?}"),
+        }
+        // Defaults: bits=8, greedy, one token, server-assigned id.
+        let min = request_from_json(br#"{"prompt":[0]}"#, 7).unwrap();
+        assert_eq!(min.id, 7);
+        assert_eq!(min.precision.bits(), 8);
+        assert_eq!(min.max_new_tokens, 1);
+        assert!(matches!(min.sampling, Sampling::Greedy));
+        assert!(min.per_layer.is_none());
+        // Malformed bodies answer with a reason, not a panic.
+        assert!(request_from_json(b"not json", 0).is_err());
+        assert!(request_from_json(br#"{"bits":8}"#, 0).is_err());
+    }
+
+    #[test]
+    fn chunk_frames_round_trip_through_the_client_reader() {
+        let resp = Response {
+            id: 5,
+            next_token: 17,
+            logit: 1.25,
+            tokens: vec![17, 3],
+            done: true,
+            bits: 4,
+            int8_acts: false,
+            queue_ms: 1.5,
+            compute_ms: 2.0,
+            prefill_ms: 0.5,
+            decode_ms: 1.0,
+            batch_size: 2,
+        };
+        let mut wire = Vec::new();
+        wire.extend_from_slice(&encode_chunk(&event_json(&resp)));
+        wire.extend_from_slice(&encode_chunk(&error_json(6, "gone")));
+        wire.extend_from_slice(final_chunk());
+        let mut r = std::io::BufReader::new(&wire[..]);
+        let first = read_chunk(&mut r).unwrap().unwrap();
+        let j = Json::parse(&first).unwrap();
+        assert_eq!(j.get("id").unwrap().as_f64().unwrap() as u64, 5);
+        assert_eq!(j.get("token").unwrap().as_f64().unwrap() as i32, 17);
+        assert!(j.get("done").unwrap().as_bool().unwrap());
+        assert_eq!(
+            j.get("tokens").unwrap().as_arr().unwrap().len(),
+            2,
+            "final event carries the full token vector"
+        );
+        let second = read_chunk(&mut r).unwrap().unwrap();
+        let j = Json::parse(&second).unwrap();
+        assert_eq!(j.get("error").unwrap().as_str().unwrap(), "gone");
+        assert!(read_chunk(&mut r).unwrap().is_none(), "terminator ends the stream");
+    }
+
+    #[test]
+    fn response_heads_parse_back() {
+        let wire = simple_response(503, "Service Unavailable", "application/json", "{}");
+        let mut r = std::io::BufReader::new(&wire[..]);
+        let (status, headers) = read_response_head(&mut r).unwrap();
+        assert_eq!(status, 503);
+        assert_eq!(read_body(&mut r, &headers).unwrap(), "{}");
+        let mut r = std::io::BufReader::new(stream_head());
+        let (status, headers) = read_response_head(&mut r).unwrap();
+        assert_eq!(status, 200);
+        assert_eq!(headers.get("transfer-encoding").map(String::as_str), Some("chunked"));
+    }
+}

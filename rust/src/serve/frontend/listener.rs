@@ -1,0 +1,537 @@
+//! The async connection layer: one thread runs a `poll(2)` readiness
+//! loop over a non-blocking [`TcpListener`] and every live connection —
+//! no per-connection threads, no async runtime, no new crates.  The only
+//! platform surface is `poll(2)` itself, bound by a four-line FFI
+//! declaration (`libc` is already in every Rust process's link line).
+//!
+//! Data flow:
+//!
+//! ```text
+//!   accept → Conn.rbuf → codec::parse_http_request → route
+//!     POST /v1/generate → WorkerPool::submit_with_sink(TcpSink)
+//!       accepted  → chunked head into Conn.wbuf; worker threads push
+//!                   token chunks into ConnHandle.outbox and wake the
+//!                   loop (UnixStream pair); the loop moves outbox →
+//!                   wbuf → socket
+//!       rejected  → 400/503 + JSON error, synchronously — a client
+//!                   never hangs on a request the pool will not serve
+//!     GET /metrics → fleet-merged Metrics::report
+//!     GET /healthz → {"ok":true}
+//! ```
+//!
+//! Connection lifecycle: keep-alive; one *streaming* request at a time
+//! per connection (a pipelined second request waits in `rbuf` until the
+//! stream's final chunk is queued).  A hangup mid-stream flips the
+//! handle's `alive` flag — the worker's next `event()` push returns
+//! `false` and the scheduler retires and prunes the stream, freeing its
+//! KV pages.
+
+use std::collections::VecDeque;
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::os::unix::io::AsRawFd;
+use std::os::unix::net::UnixStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::Context;
+
+use super::codec;
+use super::pool::{EventSink, SubmitError, WorkerPool};
+use crate::serve::request::Response;
+use crate::Result;
+
+mod sys {
+    //! Minimal `poll(2)` binding — the one readiness syscall the loop
+    //! needs, vendored instead of pulled from a crate.
+    #[repr(C)]
+    pub struct PollFd {
+        pub fd: i32,
+        pub events: i16,
+        pub revents: i16,
+    }
+
+    pub const POLLIN: i16 = 0x001;
+    pub const POLLOUT: i16 = 0x004;
+    pub const POLLERR: i16 = 0x008;
+    pub const POLLHUP: i16 = 0x010;
+
+    extern "C" {
+        fn poll(fds: *mut PollFd, nfds: u64, timeout: i32) -> i32;
+    }
+
+    /// Wait for readiness on `fds` (revents filled in place).  Errors
+    /// (EINTR) are indistinguishable from "nothing ready" to the caller,
+    /// which is exactly how the loop treats both.
+    pub fn poll_fds(fds: &mut [PollFd], timeout_ms: i32) -> i32 {
+        unsafe { poll(fds.as_mut_ptr(), fds.len() as u64, timeout_ms) }
+    }
+}
+
+/// Wakes the readiness loop from worker threads: one byte down a
+/// non-blocking socketpair the loop polls alongside its TCP fds.  A full
+/// pipe is fine — the loop is already guaranteed to wake.
+pub(crate) struct Waker {
+    tx: UnixStream,
+}
+
+impl Waker {
+    pub fn wake(&self) {
+        let _ = (&self.tx).write(&[1u8]);
+    }
+}
+
+/// The cross-thread half of a connection: worker threads (via
+/// [`TcpSink`]) push encoded bytes into `outbox` and wake the loop; the
+/// loop owns the socket and everything else.
+pub(crate) struct ConnHandle {
+    alive: AtomicBool,
+    /// A chunked response is in flight: gates pipelined request parsing,
+    /// connection close, and the sink-drop error path.
+    streaming: AtomicBool,
+    outbox: Mutex<VecDeque<Vec<u8>>>,
+    waker: Arc<Waker>,
+}
+
+impl ConnHandle {
+    fn new(waker: Arc<Waker>) -> ConnHandle {
+        ConnHandle {
+            alive: AtomicBool::new(true),
+            streaming: AtomicBool::new(false),
+            outbox: Mutex::new(VecDeque::new()),
+            waker,
+        }
+    }
+
+    /// Queue bytes for the socket; `false` once the peer is gone.
+    fn push(&self, bytes: Vec<u8>) -> bool {
+        if !self.alive.load(Ordering::Acquire) {
+            return false;
+        }
+        self.outbox
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .push_back(bytes);
+        self.waker.wake();
+        true
+    }
+
+    fn is_streaming(&self) -> bool {
+        self.streaming.load(Ordering::Acquire)
+    }
+
+    fn set_streaming(&self, on: bool) {
+        self.streaming.store(on, Ordering::Release);
+        if !on {
+            self.waker.wake(); // the loop may now parse a pipelined request
+        }
+    }
+
+    fn outbox_is_empty(&self) -> bool {
+        self.outbox
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .is_empty()
+    }
+}
+
+/// [`EventSink`] over a connection: encodes each [`Response`] as one
+/// chunk, terminates the stream on `done`/failure, and — if dropped
+/// without either (e.g. the whole pool was torn down) — emits a terminal
+/// error chunk so the client is never left hanging on a half-open
+/// stream.
+pub(crate) struct TcpSink {
+    conn: Arc<ConnHandle>,
+    id: u64,
+    finished: bool,
+}
+
+impl TcpSink {
+    pub fn new(conn: Arc<ConnHandle>, id: u64) -> TcpSink {
+        TcpSink {
+            conn,
+            id,
+            finished: false,
+        }
+    }
+
+    fn terminate(&mut self, msg: &str) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        if self
+            .conn
+            .push(codec::encode_chunk(&codec::error_json(self.id, msg)))
+        {
+            self.conn.push(codec::final_chunk().to_vec());
+        }
+        self.conn.set_streaming(false);
+    }
+}
+
+impl EventSink for TcpSink {
+    fn event(&mut self, resp: &Response) -> bool {
+        if self.finished {
+            return false;
+        }
+        let ok = self.conn.push(codec::encode_chunk(&codec::event_json(resp)));
+        if resp.done {
+            self.finished = true;
+            if ok {
+                self.conn.push(codec::final_chunk().to_vec());
+            }
+            self.conn.set_streaming(false);
+        }
+        ok
+    }
+
+    fn fail(&mut self, msg: &str) {
+        self.terminate(msg);
+    }
+
+    fn rejected(&mut self) {
+        // Pre-queue rejection: the listener answers with an HTTP status;
+        // in-band chunks would corrupt the connection.
+        self.finished = true;
+    }
+}
+
+impl Drop for TcpSink {
+    fn drop(&mut self) {
+        self.terminate("stream aborted");
+    }
+}
+
+/// Loop-owned connection state.
+struct Conn {
+    stream: TcpStream,
+    handle: Arc<ConnHandle>,
+    rbuf: Vec<u8>,
+    wbuf: Vec<u8>,
+    close_after_flush: bool,
+    dead: bool,
+}
+
+impl Conn {
+    fn new(stream: TcpStream, waker: Arc<Waker>) -> Conn {
+        Conn {
+            stream,
+            handle: Arc::new(ConnHandle::new(waker)),
+            rbuf: Vec::new(),
+            wbuf: Vec::new(),
+            close_after_flush: false,
+            dead: false,
+        }
+    }
+}
+
+/// The TCP front door: bind, then a dedicated thread multiplexes every
+/// connection over the shared [`WorkerPool`].
+pub struct HttpFrontend {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    waker: Arc<Waker>,
+    thread: Option<JoinHandle<()>>,
+    pool: WorkerPool,
+}
+
+impl HttpFrontend {
+    /// Bind `addr` (e.g. `"127.0.0.1:0"` for an ephemeral port in tests)
+    /// and start the readiness loop over `pool`.
+    pub fn bind(pool: WorkerPool, addr: &str) -> Result<HttpFrontend> {
+        let listener = TcpListener::bind(addr).context("binding front door")?;
+        listener
+            .set_nonblocking(true)
+            .context("non-blocking listener")?;
+        let addr = listener.local_addr().context("front door addr")?;
+        let (wake_tx, wake_rx) = UnixStream::pair().context("wake channel")?;
+        wake_tx.set_nonblocking(true).context("wake tx")?;
+        wake_rx.set_nonblocking(true).context("wake rx")?;
+        let waker = Arc::new(Waker { tx: wake_tx });
+        let stop = Arc::new(AtomicBool::new(false));
+        let thread = {
+            let waker = Arc::clone(&waker);
+            let stop = Arc::clone(&stop);
+            let pool = pool.clone();
+            std::thread::Builder::new()
+                .name("mq-frontend".into())
+                .spawn(move || event_loop(listener, wake_rx, waker, stop, pool))
+                .context("spawning frontend loop")?
+        };
+        Ok(HttpFrontend {
+            addr,
+            stop,
+            waker,
+            thread: Some(thread),
+            pool,
+        })
+    }
+
+    /// The bound address (resolves `:0` to the real port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    pub fn pool(&self) -> &WorkerPool {
+        &self.pool
+    }
+
+    /// Stop accepting connections, close the loop, then drain the worker
+    /// pool ([`WorkerPool::shutdown`] — in-flight streams finish first).
+    pub fn shutdown(mut self) -> Result<()> {
+        self.stop_loop();
+        self.pool.shutdown()
+    }
+
+    fn stop_loop(&mut self) {
+        self.stop.store(true, Ordering::Release);
+        self.waker.wake();
+        if let Some(h) = self.thread.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for HttpFrontend {
+    fn drop(&mut self) {
+        // The loop thread must not outlive the handle; the pool is NOT
+        // drained here — other clones may still own it (explicit
+        // `shutdown()` drains).
+        self.stop_loop();
+    }
+}
+
+fn event_loop(
+    listener: TcpListener,
+    mut wake_rx: UnixStream,
+    waker: Arc<Waker>,
+    stop: Arc<AtomicBool>,
+    pool: WorkerPool,
+) {
+    let mut conns: Vec<Conn> = Vec::new();
+    while !stop.load(Ordering::Acquire) {
+        // Interest set: listener + waker + every conn.  Outboxes move
+        // into wbufs first so write interest is accurate.
+        let mut fds = Vec::with_capacity(2 + conns.len());
+        fds.push(sys::PollFd {
+            fd: listener.as_raw_fd(),
+            events: sys::POLLIN,
+            revents: 0,
+        });
+        fds.push(sys::PollFd {
+            fd: wake_rx.as_raw_fd(),
+            events: sys::POLLIN,
+            revents: 0,
+        });
+        for c in &mut conns {
+            drain_outbox(c);
+            let mut events = sys::POLLIN;
+            if !c.wbuf.is_empty() {
+                events |= sys::POLLOUT;
+            }
+            fds.push(sys::PollFd {
+                fd: c.stream.as_raw_fd(),
+                events,
+                revents: 0,
+            });
+        }
+        sys::poll_fds(&mut fds, 50);
+        if fds[1].revents & sys::POLLIN != 0 {
+            let mut buf = [0u8; 256];
+            loop {
+                match wake_rx.read(&mut buf) {
+                    Ok(0) | Err(_) => break,
+                    Ok(_) => continue,
+                }
+            }
+        }
+        let n_old = fds.len() - 2;
+        for i in 0..n_old {
+            let revents = fds[2 + i].revents;
+            let c = &mut conns[i];
+            if revents & (sys::POLLIN | sys::POLLERR | sys::POLLHUP) != 0 {
+                read_into(c);
+            }
+            if !c.dead && !c.close_after_flush && !c.handle.is_streaming() {
+                parse_and_route(c, &pool);
+            }
+            // A worker may have queued chunks during routing: pick them
+            // up now rather than a poll cycle later.
+            drain_outbox(c);
+            flush(c);
+        }
+        if fds[0].revents & sys::POLLIN != 0 {
+            loop {
+                match listener.accept() {
+                    Ok((s, _peer)) => {
+                        if s.set_nonblocking(true).is_err() {
+                            continue;
+                        }
+                        let _ = s.set_nodelay(true);
+                        conns.push(Conn::new(s, Arc::clone(&waker)));
+                    }
+                    Err(_) => break, // WouldBlock or transient accept error
+                }
+            }
+        }
+        conns.retain(|c| {
+            let done_closing = c.close_after_flush
+                && c.wbuf.is_empty()
+                && c.handle.outbox_is_empty()
+                && !c.handle.is_streaming();
+            if c.dead || done_closing {
+                // Workers discover the hangup on their next push.
+                c.handle.alive.store(false, Ordering::Release);
+                false
+            } else {
+                true
+            }
+        });
+    }
+    // Loop teardown: flag every connection dead so in-flight sinks
+    // return false and their streams retire.
+    for c in &conns {
+        c.handle.alive.store(false, Ordering::Release);
+    }
+}
+
+/// Move worker-queued bytes into the loop-owned write buffer (FIFO — the
+/// stream head always precedes the first token chunk because it entered
+/// `wbuf` directly at accept time).
+fn drain_outbox(c: &mut Conn) {
+    let mut outbox = c.handle.outbox.lock().unwrap_or_else(|p| p.into_inner());
+    while let Some(bytes) = outbox.pop_front() {
+        c.wbuf.extend_from_slice(&bytes);
+    }
+}
+
+fn read_into(c: &mut Conn) {
+    let mut tmp = [0u8; 4096];
+    loop {
+        match c.stream.read(&mut tmp) {
+            Ok(0) => {
+                c.dead = true;
+                return;
+            }
+            Ok(n) => {
+                c.rbuf.extend_from_slice(&tmp[..n]);
+                if c.rbuf.len() > codec::MAX_HEADER_BYTES + codec::MAX_BODY_BYTES {
+                    c.dead = true; // unbounded peer; cut it off
+                    return;
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+fn flush(c: &mut Conn) {
+    while !c.wbuf.is_empty() {
+        match c.stream.write(&c.wbuf) {
+            Ok(0) => {
+                c.dead = true;
+                return;
+            }
+            Ok(n) => {
+                c.wbuf.drain(..n);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => return,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(_) => {
+                c.dead = true;
+                return;
+            }
+        }
+    }
+}
+
+/// Parse as many complete requests as the buffer holds, stopping at a
+/// streaming response (events must not interleave with a second
+/// response) or a protocol error (400 + close).
+fn parse_and_route(c: &mut Conn, pool: &WorkerPool) {
+    loop {
+        match codec::parse_http_request(&mut c.rbuf) {
+            Ok(Some(req)) => {
+                route(c, req, pool);
+                if c.handle.is_streaming() || c.close_after_flush {
+                    return;
+                }
+            }
+            Ok(None) => return,
+            Err(msg) => {
+                c.wbuf
+                    .extend_from_slice(&codec::error_response(400, "Bad Request", &msg));
+                c.close_after_flush = true;
+                return;
+            }
+        }
+    }
+}
+
+fn route(c: &mut Conn, req: codec::HttpRequest, pool: &WorkerPool) {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/generate") => {
+            let parsed = codec::request_from_json(&req.body, pool.next_request_id());
+            let r = match parsed {
+                Ok(r) => r,
+                Err(msg) => {
+                    c.wbuf
+                        .extend_from_slice(&codec::error_response(400, "Bad Request", &msg));
+                    return;
+                }
+            };
+            let id = r.id;
+            let sink = TcpSink::new(Arc::clone(&c.handle), id);
+            // Streaming is flagged BEFORE the submit: the instant the
+            // entry is queued a worker may serve and finish it, and its
+            // end-of-stream clear must not race a later set.
+            c.handle.set_streaming(true);
+            match pool.submit_with_sink(r, Box::new(sink)) {
+                Ok(()) => {
+                    // Head first — token chunks queue behind it in the
+                    // outbox and land in wbuf strictly later.
+                    c.wbuf.extend_from_slice(codec::stream_head());
+                }
+                Err(e) => {
+                    c.handle.set_streaming(false);
+                    let (status, reason) = match &e {
+                        SubmitError::Draining => (503, "Service Unavailable"),
+                        SubmitError::Rejected(_) => (400, "Bad Request"),
+                    };
+                    c.wbuf.extend_from_slice(&codec::error_response(
+                        status,
+                        reason,
+                        &e.to_string(),
+                    ));
+                }
+            }
+        }
+        ("GET", "/healthz") => {
+            c.wbuf.extend_from_slice(&codec::simple_response(
+                200,
+                "OK",
+                "application/json",
+                "{\"ok\":true}",
+            ));
+        }
+        ("GET", "/metrics") => {
+            let report = pool.metrics_report();
+            c.wbuf
+                .extend_from_slice(&codec::simple_response(200, "OK", "text/plain", &report));
+        }
+        _ => {
+            c.wbuf.extend_from_slice(&codec::error_response(
+                404,
+                "Not Found",
+                &format!("no route for {} {}", req.method, req.path),
+            ));
+        }
+    }
+}

@@ -1,0 +1,40 @@
+//! The scale-out front door: a TCP/HTTP streaming interface over an
+//! N-worker serving fleet.
+//!
+//! ```text
+//!   TCP listener (poll(2) readiness loop, non-blocking sockets)
+//!     → codec (HTTP/1.1 subset; NDJSON chunks, one per token)
+//!       → shared admission queue (PlanKey affinity, fleet KV budget,
+//!         drain-aware, duplicate-id fencing)
+//!         → per-worker Scheduler + ElasticPlanner
+//!           (shared WeightStore plans, shared PagePool pages)
+//!           → streamed chunks back through the connection outbox
+//! ```
+//!
+//! Module split:
+//!
+//! * [`codec`] — pure bytes↔types: incremental HTTP request parsing,
+//!   chunk framing, request/event JSON, and the blocking client-side
+//!   readers the loadgen and tests use.
+//! * [`pool`] — the worker fleet: shared admission queue with
+//!   precision-affinity dispatch and a PagePool-budget take gate,
+//!   graceful drain, worker-death rebalance, fleet-merged metrics.
+//! * [`listener`] — the readiness loop owning every socket; worker
+//!   threads reach a connection only through its thread-safe outbox.
+//!
+//! The serving semantics (validation, plan resolution, speculation
+//! arming, elastic shifting) are the SAME code paths as the in-process
+//! [`crate::serve::Server`] host backend — `prepare_submit` and
+//! `apply_elastic` are shared — so a response streamed over TCP is
+//! byte-identical (token ids, done flags) to the same request served
+//! in-process.
+//!
+//! Unix-only (`poll(2)`, `AsRawFd`, `UnixStream` wake channel); gated at
+//! the `serve` module with `#[cfg(unix)]`.
+
+pub mod codec;
+pub mod listener;
+pub mod pool;
+
+pub use listener::HttpFrontend;
+pub use pool::{ChannelSink, EventSink, PoolConfig, SubmitError, WorkerPool};

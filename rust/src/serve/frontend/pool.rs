@@ -1,0 +1,789 @@
+//! The N-worker pool behind the TCP front door.
+//!
+//! Topology: every worker thread owns its own [`Scheduler`] (continuous
+//! batching, paged KV, self-speculative decode) and its own
+//! [`ElasticPlanner`], while ALL workers share
+//!
+//! * one [`WeightStore`] behind a mutex — [`crate::runtime::ForwardPlan`]s
+//!   resolve once per [`PlanKey`] fleet-wide (the store is only touched at
+//!   admission and on elastic shifts, never inside a decode round);
+//! * one [`crate::runtime::PagePool`] — every scheduler is built with
+//!   [`Scheduler::with_pool`], so the KV admission budget
+//!   ([`ServerConfig::kv_capacity_bytes`]) is a *fleet* budget measured
+//!   against truly resident pages, and prefix-sharing (copy-on-write page
+//!   adoption) works across workers;
+//! * one admission queue — submits land here and workers pull their
+//!   assignments between rounds.
+//!
+//! Dispatch is **precision-affine**: requests resolving to the same
+//! [`PlanKey`] route to the same worker (first key sighting picks the
+//! least-loaded worker), keeping step-round groups dense — ten int4
+//! streams on one worker share each round's fused GEMM; spread over four
+//! workers they would quadruple the payload streaming per token.  The
+//! queue is **budget-aware**: a worker only takes an entry when the
+//! shared pool has headroom for its page-rounded KV projection, so a
+//! burst parks in the queue instead of thrashing admission inside a
+//! scheduler.
+//!
+//! Failure semantics — nothing is ever silently dropped:
+//!
+//! * [`WorkerPool::begin_drain`] — new submits fail fast with
+//!   [`SubmitError::Draining`]; queued + live work finishes, then workers
+//!   exit.
+//! * [`WorkerPool::kill_worker`] — the victim's *queued* (never
+//!   prefilled) requests re-enter the shared queue, carrying their
+//!   original enqueue time, and complete on surviving workers; its *live*
+//!   streams get a terminal error event (their KV pages lived in the dead
+//!   scheduler); its pages return to the shared pool when the scheduler
+//!   drops.
+//! * [`WorkerPool::shutdown`] — drain, join, then explicitly fail
+//!   whatever could not be served (e.g. every worker was killed first).
+
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use anyhow::Context;
+
+use crate::model::{PresetInfo, QuantizedModel};
+use crate::quant::ActCalibration;
+use crate::serve::metrics::Metrics;
+use crate::serve::planner::ElasticPlanner;
+use crate::serve::request::{Request, Response};
+use crate::serve::scheduler::{projected_kv_bytes, Scheduler, SchedulerConfig};
+use crate::serve::server::{apply_elastic, prepare_submit, spec_slots_for, ServerConfig};
+use crate::serve::weights::{PlanKey, WeightStore};
+use crate::Result;
+
+/// Where a stream's events go.  The TCP listener implements this over a
+/// connection's outbox; in-process callers use [`ChannelSink`].  Exactly
+/// one terminal signal is delivered per accepted request: a `done`
+/// [`Response`] through [`EventSink::event`], or one
+/// [`EventSink::fail`].
+pub trait EventSink: Send {
+    /// Deliver one token event.  Returning `false` means the client is
+    /// gone — the stream will be retired and pruned.
+    fn event(&mut self, resp: &Response) -> bool;
+    /// Deliver a terminal error (worker death, failed plan swap,
+    /// validation rejection) — the stream is over.
+    fn fail(&mut self, msg: &str);
+    /// Synchronous pre-queue rejection: the submitter reports the error
+    /// out-of-band (HTTP status line, `Err` return), so the sink must go
+    /// quiet — a TCP sink that emitted an in-band error chunk here would
+    /// corrupt the connection with stream framing no head was sent for.
+    fn rejected(&mut self) {}
+}
+
+/// [`EventSink`] over an mpsc channel — the in-process path.  A terminal
+/// failure is signalled by dropping the sender: the receiver sees a recv
+/// error exactly as with [`crate::serve::Server`]'s host path.
+pub struct ChannelSink(pub Sender<Response>);
+
+impl EventSink for ChannelSink {
+    fn event(&mut self, resp: &Response) -> bool {
+        self.0.send(resp.clone()).is_ok()
+    }
+    fn fail(&mut self, _msg: &str) {
+        // Dropping the sender (when self drops) closes the channel; the
+        // blocked client unblocks with a recv error.
+    }
+}
+
+/// Why a submit was refused *synchronously* — the caller finds out
+/// immediately, never by timeout.
+#[derive(Debug)]
+pub enum SubmitError {
+    /// [`WorkerPool::begin_drain`] has run; the pool accepts no new work.
+    Draining,
+    /// The request can never be served (duplicate in-flight id, no live
+    /// workers left).
+    Rejected(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Draining => write!(f, "server draining"),
+            SubmitError::Rejected(msg) => write!(f, "{msg}"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// Pool knobs: worker count plus the per-worker serving configuration
+/// (shared verbatim with the single-worker [`crate::serve::Server`] so a
+/// fleet of one is configured exactly like the host path).
+#[derive(Debug, Clone)]
+pub struct PoolConfig {
+    pub workers: usize,
+    pub server: ServerConfig,
+}
+
+/// One queued request: its sink, original enqueue time (TTFT counts from
+/// here, not from when a worker picks it up), affinity key, assigned
+/// worker, and page-rounded KV projection for the budget gate.
+struct QueueEntry {
+    req: Request,
+    sink: Box<dyn EventSink>,
+    enq: Instant,
+    key: PlanKey,
+    worker: usize,
+    projected: u64,
+}
+
+struct QueueState {
+    entries: VecDeque<QueueEntry>,
+    /// PlanKey → worker that serves it (precision affinity).
+    affinity: BTreeMap<PlanKey, usize>,
+    /// Requests assigned to each worker (queued + owned) — the
+    /// least-loaded pick for a first-seen key.
+    loads: Vec<usize>,
+    /// Workers that have exited (killed or drained) — their queued
+    /// entries are up for rehoming.
+    dead: Vec<bool>,
+    /// Kill orders not yet observed by their worker.
+    kills: Vec<bool>,
+    /// Ids queued or live anywhere in the fleet — duplicate submits are
+    /// rejected exactly as on the single-worker path.
+    in_flight: BTreeSet<u64>,
+    draining: bool,
+}
+
+struct PoolShared {
+    q: Mutex<QueueState>,
+    cv: Condvar,
+    pool: crate::runtime::PagePool,
+    store: Mutex<WeightStore>,
+    model: QuantizedModel,
+    preset: PresetInfo,
+    cfg: ServerConfig,
+    /// Per-worker metrics, merged on demand ([`Metrics::merge`]) into the
+    /// fleet view — workers never contend on a shared metrics lock inside
+    /// a round.
+    metrics: Vec<Mutex<Metrics>>,
+    /// Server-assigned request ids (TCP clients that do not pin one).
+    /// Starts high so client-pinned small ids never collide.
+    next_id: AtomicU64,
+}
+
+// The whole point of the pool: everything a worker touches is shareable.
+const _: fn() = || {
+    fn assert_send_sync<T: Send + Sync>() {}
+    assert_send_sync::<PoolShared>();
+};
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Classify a request exactly as [`prepare_submit`] will: reporting
+/// width, plan key (affinity), and page-rounded KV projection (budget
+/// gate).  Kept in lock-step via [`spec_slots_for`].
+fn classify(cfg: &ServerConfig, preset: &PresetInfo, req: &Request) -> (u32, PlanKey, u64) {
+    let bits = match &req.per_layer {
+        Some(map) if !map.is_empty() => *map.iter().max().expect("non-empty"),
+        _ => req.precision.bits(),
+    };
+    let key = if let Some(map) = &req.per_layer {
+        PlanKey::PerLayer {
+            bits: map.clone(),
+            int8: req.int8_acts,
+        }
+    } else if req.int8_acts || !cfg.warm_bits.contains(&bits) {
+        PlanKey::Packed {
+            bits,
+            int8: req.int8_acts,
+        }
+    } else {
+        PlanKey::Warm(bits)
+    };
+    let projected = projected_kv_bytes(
+        &preset.model,
+        req.prompt.len(),
+        req.max_new_tokens,
+        spec_slots_for(cfg, req, bits),
+        &cfg.kv,
+    );
+    (bits, key, projected)
+}
+
+/// Handle to a running worker fleet.  Clones share the fleet; shutdown is
+/// explicit ([`WorkerPool::shutdown`]), never drop-driven, because any
+/// clone (e.g. the one the TCP listener holds) may outlive another.
+#[derive(Clone)]
+pub struct WorkerPool {
+    shared: Arc<PoolShared>,
+    threads: Arc<Mutex<Vec<JoinHandle<()>>>>,
+}
+
+impl WorkerPool {
+    /// Boot `cfg.workers` worker threads over one shared weight store and
+    /// one shared page pool.  Warm plans and the activation calibration
+    /// build once, before any worker starts.
+    pub fn start(preset: PresetInfo, model: QuantizedModel, cfg: PoolConfig) -> Result<WorkerPool> {
+        let workers = cfg.workers.max(1);
+        let server_cfg = cfg.server;
+        let pool = crate::runtime::PagePool::new(server_cfg.kv, server_cfg.kv_capacity_bytes);
+        let mut store = WeightStore::new();
+        let mut boot_metrics = Metrics::default();
+        if let Some(path) = &server_cfg.calibration {
+            match ActCalibration::load(path) {
+                Ok(c) => store.set_calibration(Some(Arc::new(c))),
+                Err(e) => eprintln!("pool: calibration {path:?}: {e:#}"),
+            }
+        }
+        for &b in &server_cfg.warm_bits {
+            if let Err(e) = store.plan_warm(&model, &preset.model, b, &mut boot_metrics) {
+                eprintln!("pool: warm plan int{b}: {e:#}");
+            }
+        }
+        let mut metrics = Vec::with_capacity(workers);
+        metrics.push(Mutex::new(boot_metrics)); // boot plan-build bytes land on worker 0
+        for _ in 1..workers {
+            metrics.push(Mutex::new(Metrics::default()));
+        }
+        let shared = Arc::new(PoolShared {
+            q: Mutex::new(QueueState {
+                entries: VecDeque::new(),
+                affinity: BTreeMap::new(),
+                loads: vec![0; workers],
+                dead: vec![false; workers],
+                kills: vec![false; workers],
+                in_flight: BTreeSet::new(),
+                draining: false,
+            }),
+            cv: Condvar::new(),
+            pool,
+            store: Mutex::new(store),
+            model,
+            preset,
+            cfg: server_cfg,
+            metrics,
+            next_id: AtomicU64::new(1 << 48),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let s = Arc::clone(&shared);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("mq-pool-worker-{i}"))
+                    .spawn(move || worker_loop(s, i))
+                    .context("spawning pool worker")?,
+            );
+        }
+        Ok(WorkerPool {
+            shared,
+            threads: Arc::new(Mutex::new(handles)),
+        })
+    }
+
+    /// Enqueue a request with an arbitrary sink.  Fails *synchronously*
+    /// when the pool is draining, the id is already in flight, or no live
+    /// worker remains — the caller can answer the client immediately
+    /// instead of letting it hang.
+    pub fn submit_with_sink(
+        &self,
+        req: Request,
+        mut sink: Box<dyn EventSink>,
+    ) -> std::result::Result<(), SubmitError> {
+        let s = &self.shared;
+        let (_bits, key, projected) = classify(&s.cfg, &s.preset, &req);
+        let mut q = lock(&s.q);
+        if q.draining {
+            drop(q);
+            sink.rejected();
+            return Err(SubmitError::Draining);
+        }
+        if q.in_flight.contains(&req.id) {
+            drop(q);
+            sink.rejected();
+            return Err(SubmitError::Rejected(format!(
+                "request id {} already in flight",
+                req.id
+            )));
+        }
+        let worker = match q.affinity.get(&key) {
+            Some(&w) if !q.dead[w] && !q.kills[w] => w,
+            _ => {
+                let picked = (0..q.loads.len())
+                    .filter(|&w| !q.dead[w] && !q.kills[w])
+                    .min_by_key(|&w| q.loads[w]);
+                match picked {
+                    Some(w) => w,
+                    None => {
+                        drop(q);
+                        sink.rejected();
+                        return Err(SubmitError::Rejected("no live workers".into()));
+                    }
+                }
+            }
+        };
+        q.affinity.insert(key.clone(), worker);
+        q.loads[worker] += 1;
+        q.in_flight.insert(req.id);
+        q.entries.push_back(QueueEntry {
+            req,
+            sink,
+            enq: Instant::now(),
+            key,
+            worker,
+            projected,
+        });
+        drop(q);
+        s.cv.notify_all();
+        Ok(())
+    }
+
+    /// Submit with a channel sink; mirrors [`crate::serve::Server::submit`]
+    /// — one [`Response`] per token, the last with `done`, and a closed
+    /// channel (recv error) on terminal failure.
+    pub fn submit(&self, req: Request) -> std::result::Result<Receiver<Response>, SubmitError> {
+        let (tx, rx) = mpsc::channel();
+        self.submit_with_sink(req, Box::new(ChannelSink(tx)))?;
+        Ok(rx)
+    }
+
+    /// Blocking convenience: submit and wait for the final event.
+    pub fn infer(&self, req: Request) -> Result<Response> {
+        let rx = self.submit(req).map_err(|e| anyhow::anyhow!("{e}"))?;
+        loop {
+            let r = rx.recv().context("waiting for pool response")?;
+            if r.done {
+                return Ok(r);
+            }
+        }
+    }
+
+    /// Stop accepting work.  Every submit from this point on fails fast
+    /// with [`SubmitError::Draining`]; queued and live work still
+    /// completes, after which workers exit.
+    pub fn begin_drain(&self) {
+        lock(&self.shared.q).draining = true;
+        self.shared.cv.notify_all();
+    }
+
+    /// Whether a drain has begun.
+    pub fn draining(&self) -> bool {
+        lock(&self.shared.q).draining
+    }
+
+    /// Order worker `idx` to die before its next round.  Its queued
+    /// requests re-enter the shared queue; its live streams get terminal
+    /// error events; its KV pages return to the shared pool.
+    pub fn kill_worker(&self, idx: usize) {
+        let mut q = lock(&self.shared.q);
+        if idx < q.kills.len() {
+            q.kills[idx] = true;
+        }
+        drop(q);
+        self.shared.cv.notify_all();
+    }
+
+    /// Workers that have not exited (or been ordered to).
+    pub fn live_workers(&self) -> usize {
+        let q = lock(&self.shared.q);
+        (0..q.dead.len()).filter(|&w| !q.dead[w] && !q.kills[w]).count()
+    }
+
+    pub fn workers(&self) -> usize {
+        self.shared.metrics.len()
+    }
+
+    /// The worker a request would currently route to (tests).
+    pub fn route_of(&self, req: &Request) -> Option<usize> {
+        let (_b, key, _p) = classify(&self.shared.cfg, &self.shared.preset, req);
+        lock(&self.shared.q).affinity.get(&key).copied()
+    }
+
+    /// Handle to the fleet-shared KV page pool (gauges in tests/benches).
+    pub fn page_pool(&self) -> crate::runtime::PagePool {
+        self.shared.pool.clone()
+    }
+
+    /// Server-assigned id for a client that did not pin one.
+    pub fn next_request_id(&self) -> u64 {
+        self.shared.next_id.fetch_add(1, Ordering::Relaxed)
+    }
+
+    /// Merge every worker's metrics into one fleet view; the KV gauge is
+    /// re-read from the shared pool (the single source of truth all
+    /// workers gauge against).
+    pub fn fleet_metrics(&self) -> Metrics {
+        let mut fleet = Metrics::default();
+        for m in &self.shared.metrics {
+            fleet.merge(&lock(m));
+        }
+        fleet.set_kv_bytes(self.shared.pool.resident_bytes());
+        fleet
+    }
+
+    pub fn metrics_report(&self) -> String {
+        self.fleet_metrics().report()
+    }
+
+    /// Drain and join the fleet.  Whatever could not be served (every
+    /// worker died before the queue emptied) is failed explicitly — no
+    /// sink is ever silently dropped.
+    pub fn shutdown(&self) -> Result<()> {
+        self.begin_drain();
+        let handles: Vec<JoinHandle<()>> = lock(&self.threads).drain(..).collect();
+        for h in handles {
+            let _ = h.join();
+        }
+        let leftovers: Vec<QueueEntry> = {
+            let mut q = lock(&self.shared.q);
+            let left: Vec<QueueEntry> = q.entries.drain(..).collect();
+            for e in &left {
+                q.in_flight.remove(&e.req.id);
+            }
+            left
+        };
+        for mut e in leftovers {
+            e.sink
+                .fail("server shut down before the request was served");
+        }
+        Ok(())
+    }
+}
+
+impl PoolShared {
+    /// A worker finished (served or failed) requests it owned: release
+    /// their ids and its load share, and wake budget-gated takers — the
+    /// pages those streams held are free now.
+    fn finish(&self, ids: &[u64], worker: usize) {
+        if ids.is_empty() {
+            return;
+        }
+        let mut q = lock(&self.q);
+        for id in ids {
+            q.in_flight.remove(id);
+        }
+        q.loads[worker] = q.loads[worker].saturating_sub(ids.len());
+        drop(q);
+        self.cv.notify_all();
+    }
+}
+
+enum Pulled {
+    /// Kill order observed.
+    Kill,
+    /// Draining and nothing left for this worker — exit gracefully.
+    Exit,
+    /// Assigned entries whose KV projection fits the shared pool *now*
+    /// (possibly empty when called non-blocking).
+    Work(Vec<QueueEntry>),
+}
+
+/// Pull this worker's queue assignments.  Budget gate: an entry is taken
+/// only if the shared pool's resident bytes plus everything taken this
+/// call leaves room for its projection — otherwise it stays queued (the
+/// scheduler would only re-defer it internally, but then its KV pressure
+/// would be invisible to the other workers' admission).  Entries assigned
+/// to dead workers are rehomed to the caller.  Blocks (bounded by the
+/// batch window) only when `may_block`.
+fn take_assigned(shared: &PoolShared, idx: usize, may_block: bool) -> Pulled {
+    let mut q = lock(&shared.q);
+    loop {
+        if q.kills[idx] {
+            return Pulled::Kill;
+        }
+        let cap = shared.cfg.kv_capacity_bytes;
+        let mut projected_sum = 0u64;
+        let mut taken = Vec::new();
+        let mut mine_gated = false;
+        let mut i = 0;
+        while i < q.entries.len() {
+            let assigned = q.entries[i].worker;
+            let mine = assigned == idx || q.dead[assigned];
+            if !mine {
+                i += 1;
+                continue;
+            }
+            let fits = cap.map_or(true, |c| {
+                shared
+                    .pool
+                    .resident_bytes()
+                    .saturating_add(projected_sum)
+                    .saturating_add(q.entries[i].projected)
+                    <= c
+            });
+            if !fits {
+                mine_gated = true;
+                i += 1;
+                continue;
+            }
+            projected_sum += q.entries[i].projected;
+            let mut e = q.entries.remove(i).expect("index in bounds");
+            if e.worker != idx {
+                let old = e.worker;
+                q.loads[old] = q.loads[old].saturating_sub(1);
+                q.loads[idx] += 1;
+                q.affinity.insert(e.key.clone(), idx);
+                e.worker = idx;
+            }
+            taken.push(e);
+        }
+        if !taken.is_empty() || !may_block {
+            return Pulled::Work(taken);
+        }
+        if q.draining && !mine_gated {
+            // No new submits can arrive and nothing queued (or
+            // rehomeable) belongs to this worker: done.
+            return Pulled::Exit;
+        }
+        let timeout = Duration::from_micros((shared.cfg.max_wait_ms * 1000.0) as u64 + 100);
+        q = match shared.cv.wait_timeout(q, timeout) {
+            Ok((g, _)) => g,
+            Err(p) => p.into_inner().0,
+        };
+    }
+}
+
+/// One pool worker: pull assignments, admit them through the SAME
+/// validation/plan-resolution path as the single-worker server
+/// ([`prepare_submit`]), then run scheduling rounds — prune, speculation
+/// gate, round, elastic — exactly like the host loop, over this worker's
+/// private scheduler and metrics.
+fn worker_loop(shared: Arc<PoolShared>, idx: usize) {
+    let seq = shared.preset.model.seq_len;
+    let vocab = shared.preset.model.vocab;
+    let mut sched = Scheduler::with_pool(
+        SchedulerConfig {
+            max_prefills_per_round: shared.cfg.max_prefills_per_round,
+            kv_capacity_bytes: shared.cfg.kv_capacity_bytes,
+            kv: shared.cfg.kv,
+        },
+        shared.pool.clone(),
+    );
+    let mut elastic = shared.cfg.elastic.clone().map(ElasticPlanner::new);
+    let mut waiters: BTreeMap<u64, Box<dyn EventSink>> = BTreeMap::new();
+
+    loop {
+        let mut done_ids: Vec<u64> = Vec::new();
+        match take_assigned(&shared, idx, !sched.has_work()) {
+            Pulled::Kill => {
+                die(&shared, idx, sched, waiters);
+                return;
+            }
+            Pulled::Exit => {
+                let mut q = lock(&shared.q);
+                q.dead[idx] = true;
+                drop(q);
+                shared.cv.notify_all();
+                return;
+            }
+            Pulled::Work(batch) => {
+                if !batch.is_empty() {
+                    // Lock order everywhere: queue (released) → store →
+                    // metrics.
+                    let mut store = lock(&shared.store);
+                    let mut metrics = lock(&shared.metrics[idx]);
+                    for entry in batch {
+                        let QueueEntry {
+                            req, mut sink, enq, ..
+                        } = entry;
+                        match prepare_submit(
+                            &req,
+                            seq,
+                            vocab,
+                            &shared.cfg,
+                            &shared.model,
+                            &shared.preset,
+                            &mut store,
+                            &mut sched,
+                            &mut metrics,
+                        ) {
+                            Ok(p) => {
+                                let int8 = req.int8_acts;
+                                waiters.insert(req.id, sink);
+                                sched.submit(p.key, p.plan, p.bits, int8, req, enq);
+                            }
+                            Err(msg) => {
+                                sink.fail(&msg);
+                                done_ids.push(req.id);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        if !sched.has_work() {
+            shared.finish(&done_ids, idx);
+            continue;
+        }
+        // Clients that hung up free their streams (and KV pages) now.
+        sched.prune(&|id| waiters.contains_key(&id));
+        {
+            let mut metrics = lock(&shared.metrics[idx]);
+            metrics.set_kv_bytes(sched.resident_kv_bytes());
+            if let Some(planner) = elastic.as_ref() {
+                sched.suspend_speculation(!planner.speculation_allowed(
+                    sched.resident_kv_bytes(),
+                    sched.pending_prefills(),
+                ));
+            }
+            let outcome = sched.run_round(&mut metrics, &mut |id, resp| {
+                if resp.done {
+                    if let Some(mut s) = waiters.remove(&id) {
+                        let _ = s.event(&resp);
+                    }
+                    done_ids.push(id);
+                    false
+                } else {
+                    let alive = waiters.get_mut(&id).is_some_and(|s| s.event(&resp));
+                    if !alive {
+                        waiters.remove(&id);
+                        done_ids.push(id);
+                    }
+                    alive
+                }
+            });
+            for id in outcome.failed {
+                if let Some(mut s) = waiters.remove(&id) {
+                    s.fail("stream failed mid-round");
+                }
+                done_ids.push(id);
+            }
+        }
+        if let Some(planner) = elastic.as_mut() {
+            let mut store = lock(&shared.store);
+            let mut metrics = lock(&shared.metrics[idx]);
+            for id in apply_elastic(
+                planner,
+                &mut sched,
+                &mut store,
+                &shared.model,
+                &shared.preset,
+                &shared.cfg,
+                &mut metrics,
+            ) {
+                if let Some(mut s) = waiters.remove(&id) {
+                    s.fail("stream could not survive a precision shift");
+                }
+                done_ids.push(id);
+            }
+            metrics.set_kv_bytes(sched.resident_kv_bytes());
+        }
+        shared.finish(&done_ids, idx);
+    }
+}
+
+/// Kill-order teardown: requeue what never started, error what did, give
+/// the pages back (scheduler drop), and only then mark the slot dead so
+/// survivors rehome the requeued entries.
+fn die(
+    shared: &PoolShared,
+    idx: usize,
+    mut sched: Scheduler,
+    mut waiters: BTreeMap<u64, Box<dyn EventSink>>,
+) {
+    // Queued-but-never-prefilled requests keep their sink and their
+    // original enqueue time (their TTFT honestly includes this detour).
+    let mut requeue: Vec<(Request, Instant, Box<dyn EventSink>)> = Vec::new();
+    for (req, enq) in sched.drain_pending() {
+        if let Some(sink) = waiters.remove(&req.id) {
+            requeue.push((req, enq, sink));
+        }
+    }
+    // Live streams cannot move — their KV pages live in this scheduler.
+    let mut failed_ids = Vec::new();
+    for (id, mut sink) in std::mem::take(&mut waiters) {
+        sink.fail("worker died mid-stream");
+        failed_ids.push(id);
+    }
+    // Scheduler drop releases every session's pages to the shared pool
+    // BEFORE survivors see the rehomed entries, so the freed budget is
+    // visible to their take gate.
+    drop(sched);
+
+    let mut q = lock(&shared.q);
+    q.dead[idx] = true;
+    q.kills[idx] = false;
+    q.loads[idx] = 0;
+    for id in &failed_ids {
+        q.in_flight.remove(id);
+    }
+    let any_alive = (0..q.dead.len()).any(|w| !q.dead[w] && !q.kills[w]);
+    let mut orphans: Vec<Box<dyn EventSink>> = Vec::new();
+    for (req, enq, sink) in requeue {
+        if any_alive {
+            let (_b, key, projected) = classify(&shared.cfg, &shared.preset, &req);
+            // Leave `worker` pointing at the dead slot: any live worker's
+            // take gate rehomes it (and takes over the affinity).
+            q.entries.push_back(QueueEntry {
+                req,
+                sink,
+                enq,
+                key,
+                worker: idx,
+                projected,
+            });
+        } else {
+            q.in_flight.remove(&req.id);
+            orphans.push(sink);
+        }
+    }
+    drop(q);
+    // Sinks are failed outside the queue lock — a sink may do I/O.
+    for mut sink in orphans {
+        sink.fail("worker died with no survivors to take the request");
+    }
+    shared.cv.notify_all();
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::request::PrecisionReq;
+
+    fn cfg() -> ServerConfig {
+        ServerConfig {
+            warm_bits: vec![8],
+            ..ServerConfig::default()
+        }
+    }
+
+    #[test]
+    fn classify_matches_the_server_plan_key_rules() {
+        let preset = crate::model::testing::toy_transformer_preset(crate::model::ModelDims {
+            vocab: 16,
+            d_model: 8,
+            n_layers: 2,
+            n_heads: 2,
+            d_ff: 16,
+            seq_len: 64,
+            quantize_attn: false,
+        });
+        let c = cfg();
+        let warm = Request::new(1, vec![1, 2], PrecisionReq::Bits(8));
+        assert!(matches!(
+            classify(&c, &preset, &warm).1,
+            PlanKey::Warm(8)
+        ));
+        let packed = Request::new(2, vec![1, 2], PrecisionReq::Bits(4));
+        assert!(matches!(
+            classify(&c, &preset, &packed).1,
+            PlanKey::Packed { bits: 4, int8: false }
+        ));
+        let mut int8 = Request::new(3, vec![1, 2], PrecisionReq::Bits(8));
+        int8.int8_acts = true;
+        // int8 at a warm precision still needs the packed plan.
+        assert!(matches!(
+            classify(&c, &preset, &int8).1,
+            PlanKey::Packed { bits: 8, int8: true }
+        ));
+        let mut per_layer = Request::new(4, vec![1, 2], PrecisionReq::Bits(8));
+        per_layer.per_layer = Some(vec![2, 4, 8]);
+        let (bits, key, _) = classify(&c, &preset, &per_layer);
+        assert_eq!(bits, 8, "per-layer traffic groups under the map maximum");
+        assert!(matches!(key, PlanKey::PerLayer { .. }));
+        // Projection grows with the generation budget.
+        let short = Request::generate(5, vec![1; 4], PrecisionReq::Bits(4), 1, crate::runtime::Sampling::Greedy);
+        let long = Request::generate(6, vec![1; 4], PrecisionReq::Bits(4), 64, crate::runtime::Sampling::Greedy);
+        assert!(classify(&c, &preset, &long).2 > classify(&c, &preset, &short).2);
+    }
+}

@@ -50,6 +50,13 @@ pub struct Metrics {
     /// stream-age figure: recording `enq.elapsed()` here once made decode
     /// percentiles climb with stream lifetime instead of step cost.
     decode_lat: BTreeMap<u32, Vec<f64>>,
+    /// Raw time-to-first-token samples, per precision: submit → first
+    /// sampled token, recorded once per stream at prefill
+    /// ([`crate::serve::Scheduler`]'s stream start).  First-class because
+    /// the SLO report needs TTFT percentiles split from per-step decode
+    /// latency — folding first-token cost into the prefill/decode lines
+    /// hid the number a newly arrived request actually waits.
+    ttft: BTreeMap<u32, Vec<f64>>,
     /// Self-speculative rounds: target precision → (rounds, drafted,
     /// accepted, emitted).  `accepted / drafted` is the draft accept rate
     /// (how often the low-bit MSB-prefix view agrees with its own int8
@@ -103,6 +110,7 @@ impl Default for Metrics {
             prefill_ms: BTreeMap::new(),
             decode_step_ms: BTreeMap::new(),
             decode_lat: BTreeMap::new(),
+            ttft: BTreeMap::new(),
             spec: BTreeMap::new(),
             round_ms: BTreeMap::new(),
             kv_bytes: 0,
@@ -180,7 +188,27 @@ impl Metrics {
     /// Step samples, not stream ages: a long-lived stream contributes many
     /// small samples, so its p50 stays flat as it ages.
     pub fn decode_percentile(&self, bits: u32, p: f64) -> f64 {
-        let Some(samples) = self.decode_lat.get(&bits) else {
+        Self::sample_percentile(self.decode_lat.get(&bits), p)
+    }
+
+    /// One stream's time-to-first-token at `bits`: submit → first sampled
+    /// token, in milliseconds.  Recorded exactly once per stream.
+    pub fn record_ttft(&mut self, bits: u32, ms: f64) {
+        self.ttft.entry(bits).or_default().push(ms);
+    }
+
+    /// Percentile of time-to-first-token at `bits` (0 if no stream started).
+    pub fn ttft_percentile(&self, bits: u32, p: f64) -> f64 {
+        Self::sample_percentile(self.ttft.get(&bits), p)
+    }
+
+    /// Streams that reached their first token at `bits`.
+    pub fn ttft_count(&self, bits: u32) -> u64 {
+        self.ttft.get(&bits).map_or(0, |v| v.len() as u64)
+    }
+
+    fn sample_percentile(samples: Option<&Vec<f64>>, p: f64) -> f64 {
+        let Some(samples) = samples else {
             return 0.0;
         };
         if samples.is_empty() {
@@ -190,6 +218,92 @@ impl Metrics {
         v.sort_by(|a, b| a.total_cmp(b));
         let idx = ((v.len() as f64 - 1.0) * p / 100.0).round() as usize;
         v[idx]
+    }
+
+    /// Fold another worker's counters into this one — fleet aggregation
+    /// for the multi-worker front end ([`crate::serve::frontend`]), where
+    /// every worker owns a private `Metrics` (no lock on the hot path) and
+    /// the fleet report is the merge.  Cumulative counters and raw sample
+    /// vectors add; gauges (`kv_bytes`, `kv_pool`) take the elementwise
+    /// max — with a shared page pool every worker gauges the same figure,
+    /// so max = latest-observed, never a double count; epochs take the
+    /// earliest so rates stay denominated over real wall time.
+    pub fn merge(&mut self, other: &Metrics) {
+        self.start = self.start.min(other.start);
+        self.first_round = match (self.first_round, other.first_round) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        self.latencies_ms.extend_from_slice(&other.latencies_ms);
+        self.batch_sizes.extend_from_slice(&other.batch_sizes);
+        for (b, n) in &other.per_bits {
+            *self.per_bits.entry(*b).or_default() += n;
+        }
+        for (b, (n, ms)) in &other.materialize_ms {
+            let e = self.materialize_ms.entry(*b).or_insert((0, 0.0));
+            e.0 += n;
+            e.1 += ms;
+        }
+        for (b, (n, bytes, ms)) in &other.page_ins {
+            let e = self.page_ins.entry(*b).or_insert((0, 0, 0.0));
+            e.0 += n;
+            e.1 += bytes;
+            e.2 += ms;
+        }
+        for (b, bytes) in &other.page_in_saved {
+            *self.page_in_saved.entry(*b).or_default() += bytes;
+        }
+        for (b, (n, ms, bytes)) in &other.matmul_ms {
+            let e = self.matmul_ms.entry(*b).or_insert((0, 0.0, 0));
+            e.0 += n;
+            e.1 += ms;
+            e.2 += bytes;
+        }
+        for (b, (n, ms, toks)) in &other.prefill_ms {
+            let e = self.prefill_ms.entry(*b).or_insert((0, 0.0, 0));
+            e.0 += n;
+            e.1 += ms;
+            e.2 += toks;
+        }
+        for (b, (n, ms)) in &other.decode_step_ms {
+            let e = self.decode_step_ms.entry(*b).or_insert((0, 0.0));
+            e.0 += n;
+            e.1 += ms;
+        }
+        for (b, v) in &other.decode_lat {
+            self.decode_lat.entry(*b).or_default().extend_from_slice(v);
+        }
+        for (b, v) in &other.ttft {
+            self.ttft.entry(*b).or_default().extend_from_slice(v);
+        }
+        for (b, (r, d, a, e0)) in &other.spec {
+            let e = self.spec.entry(*b).or_insert((0, 0, 0, 0));
+            e.0 += r;
+            e.1 += d;
+            e.2 += a;
+            e.3 += e0;
+        }
+        for (b, (r, m, ms, bytes)) in &other.round_ms {
+            let e = self.round_ms.entry(*b).or_insert((0, 0, 0.0, 0));
+            e.0 += r;
+            e.1 += m;
+            e.2 += ms;
+            e.3 += bytes;
+        }
+        self.kv_bytes = self.kv_bytes.max(other.kv_bytes);
+        self.kv_pool = (
+            self.kv_pool.0.max(other.kv_pool.0),
+            self.kv_pool.1.max(other.kv_pool.1),
+            self.kv_pool.2.max(other.kv_pool.2),
+        );
+        self.shifts.0 += other.shifts.0;
+        self.shifts.1 += other.shifts.1;
+        self.shift_moved += other.shift_moved;
+        self.shift_saved_bytes += other.shift_saved_bytes;
+        self.shift_occupancy.0 += other.shift_occupancy.0;
+        self.shift_occupancy.1 += other.shift_occupancy.1;
+        self.requests += other.requests;
+        self.batches += other.batches;
     }
 
     /// One self-speculative round at target precision `bits`: the draft
@@ -461,6 +575,18 @@ impl Metrics {
             .iter()
             .map(|(b, (n, ms))| format!("int{b}:{n}x{:.3}ms", ms / (*n).max(1) as f64))
             .collect();
+        let ttft: Vec<String> = self
+            .ttft
+            .iter()
+            .map(|(b, v)| {
+                format!(
+                    "int{b}:{}x p50:{:.2}ms p99:{:.2}ms",
+                    v.len(),
+                    Self::sample_percentile(Some(v), 50.0),
+                    Self::sample_percentile(Some(v), 99.0)
+                )
+            })
+            .collect();
         let rounds: Vec<String> = self
             .round_ms
             .iter()
@@ -485,7 +611,7 @@ impl Metrics {
             })
             .collect();
         format!(
-            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}] prefill=[{}] decode=[{}] rounds=[{}] rounds_per_s={:.1} kv_bytes={} shifts=[down:{} up:{} moved:{} saved:{}B occ:{:.1}] spec=[{}] kv=[pages:{} shared:{}B cow:{}]",
+            "requests={} batches={} p50={:.2}ms p99={:.2}ms throughput={:.1} req/s mean_batch={:.1} mix=[{}] weight_builds=[{}] paged=[{}] matmul=[{}] prefill=[{}] decode=[{}] ttft=[{}] rounds=[{}] rounds_per_s={:.1} kv_bytes={} shifts=[down:{} up:{} moved:{} saved:{}B occ:{:.1}] spec=[{}] kv=[pages:{} shared:{}B cow:{}]",
             self.requests,
             self.batches,
             self.percentile(50.0),
@@ -498,6 +624,7 @@ impl Metrics {
             matmul.join(" "),
             prefill.join(" "),
             decode.join(" "),
+            ttft.join(" "),
             rounds.join(" "),
             self.rounds_per_sec(),
             self.kv_bytes,
@@ -684,6 +811,60 @@ mod tests {
         assert_eq!(m.decode_percentile(4, 99.0), 0.5);
         m.record_decode_step(4, 2.0);
         assert!(m.decode_percentile(4, 50.0) < 1.0);
+    }
+
+    #[test]
+    fn ttft_percentiles_split_from_decode_latency() {
+        let mut m = Metrics::default();
+        assert_eq!(m.ttft_percentile(8, 50.0), 0.0);
+        assert_eq!(m.ttft_count(8), 0);
+        // TTFT samples are one-per-stream; decode steps must not feed them.
+        for i in 0..10 {
+            m.record_ttft(8, 10.0 + i as f64);
+        }
+        m.record_decode_step(8, 0.5);
+        assert_eq!(m.ttft_count(8), 10);
+        assert!(m.ttft_percentile(8, 50.0) >= 10.0);
+        assert!(m.ttft_percentile(8, 99.0) <= 19.0);
+        // decode percentiles stay on step cost, unmoved by TTFT samples
+        assert_eq!(m.decode_percentile(8, 99.0), 0.5);
+        let r = m.report();
+        assert!(r.contains("ttft=[int8:10x p50:"), "{r}");
+    }
+
+    #[test]
+    fn merge_aggregates_workers_into_a_fleet_view() {
+        let mut a = Metrics::default();
+        let mut b = Metrics::default();
+        a.record(1.0, 8, 1);
+        b.record(3.0, 4, 2);
+        b.record(5.0, 8, 2);
+        a.record_ttft(8, 12.0);
+        b.record_ttft(8, 20.0);
+        b.record_ttft(4, 7.0);
+        a.record_decode_step(8, 0.5);
+        b.record_decode_step(8, 1.5);
+        a.record_round(8, 2, 0.4, 100);
+        b.record_round(8, 3, 0.6, 100);
+        a.record_shift(true, 2, 64, 3);
+        b.record_shift(false, 1, 0, 1);
+        a.set_kv_pool(5, 0, 1);
+        b.set_kv_pool(7, 128, 0); // same shared pool, later observation
+        a.merge(&b);
+        assert_eq!(a.requests, 3);
+        assert_eq!(a.ttft_count(8), 2);
+        assert_eq!(a.ttft_count(4), 1);
+        assert_eq!(a.decode_steps(8), 2);
+        assert_eq!(a.rounds(8), 2);
+        assert_eq!(a.round_member_steps(8), 5);
+        assert_eq!(a.shifts_down(), 1);
+        assert_eq!(a.shifts_up(), 1);
+        // gauges: elementwise max, never summed (shared pool, one figure)
+        assert_eq!(a.kv_pages(), 7);
+        assert_eq!(a.kv_shared_bytes(), 128);
+        assert_eq!(a.kv_cow_breaks(), 1);
+        let r = a.report();
+        assert!(r.contains("int4:1") && r.contains("int8:2"), "{r}");
     }
 
     #[test]

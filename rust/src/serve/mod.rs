@@ -57,6 +57,30 @@
 //!     precision is an MSB-prefix view of the one nested payload, the
 //!     shift pages in zero new weight bytes when the master is resident.
 //!
+//!   Scale-out front door (serve::frontend, unix-only): the same host
+//!     workers behind a real socket, scaled to N —
+//!
+//!       TCP listener (poll(2) readiness loop, non-blocking sockets)
+//!         → codec (HTTP/1.1 subset, chunked NDJSON — one event/token)
+//!           → shared admission queue (PlanKey affinity, fleet-global
+//!             PagePool budget gate, graceful drain, death rebalance)
+//!             → per-worker Scheduler + ElasticPlanner
+//!               → streamed chunks through the connection outbox
+//!
+//!     Workers share the Arc'd WeightStore plan cache and ONE PagePool
+//!     budget; validation/plan-resolution/speculation/elastic are the
+//!     same code paths as Server::start_host, so a TCP stream is
+//!     byte-identical to the in-process answer.  `matquant serve` boots
+//!     it; `matquant loadgen` replays deterministic Poisson traces with
+//!     per-precision mixes against it and reports p50/p99 TTFT / TPOT,
+//!     tokens/sec, and SLO attainment:
+//!
+//!       matquant serve --addr 127.0.0.1:8701 --workers 2
+//!       curl -N -d '{"prompt":[1,2,3],"bits":4,"max_new_tokens":8}' \
+//!            http://127.0.0.1:8701/v1/generate
+//!       matquant loadgen --self-host --workers 2 --requests 64 \
+//!                        --rate 100 --mix "8:70,4:20,2:10"
+//!
 //!   Self-speculative decode (ServerConfig { speculative }): greedy
 //!     streams in uniform packed groups draft k−1 tokens per round with
 //!     the low-bit MSB-prefix rung of their OWN payload (int2 by
@@ -70,6 +94,8 @@
 //! ```
 
 pub mod batcher;
+#[cfg(unix)]
+pub mod frontend;
 pub mod metrics;
 pub mod planner;
 pub mod request;
@@ -78,6 +104,8 @@ pub mod server;
 pub mod weights;
 
 pub use batcher::DynamicBatcher;
+#[cfg(unix)]
+pub use frontend::{HttpFrontend, PoolConfig, WorkerPool};
 pub use metrics::Metrics;
 pub use planner::{
     plan_deployment, DeploymentPlan, ElasticConfig, ElasticPlanner, ShiftDirection,

@@ -285,6 +285,43 @@ impl Scheduler {
         }
     }
 
+    /// Build a scheduler over an **externally owned** page pool instead of
+    /// a private one — the fleet mode: every `serve::frontend` worker's
+    /// scheduler draws pages from ONE shared pool, so the
+    /// [`SchedulerConfig::kv_capacity_bytes`] admission watermark holds
+    /// against fleet-wide residency, not per-worker residency.  The pool's
+    /// geometry wins over `cfg.kv` (sessions must allocate pages the pool
+    /// actually hands out).
+    pub fn with_pool(mut cfg: SchedulerConfig, pool: PagePool) -> Self {
+        cfg.kv = pool.cfg();
+        Scheduler {
+            cfg,
+            groups: BTreeMap::new(),
+            spec: BTreeMap::new(),
+            spec_suspended: false,
+            round: 0,
+            pool,
+        }
+    }
+
+    /// Pull every queued (not yet prefilled) request out of every group —
+    /// the rebalance path when this scheduler's worker dies or drains:
+    /// the extracted requests re-enter the fleet's shared admission queue
+    /// and complete on a surviving worker.  Live streams are untouched
+    /// (they either finish here or are failed explicitly by the caller);
+    /// groups left with no members are dropped.
+    pub fn drain_pending(&mut self) -> Vec<(Request, Instant)> {
+        let mut out = Vec::new();
+        for g in self.groups.values_mut() {
+            for p in g.pending.drain(..) {
+                out.push((p.req, p.enq));
+            }
+        }
+        self.groups
+            .retain(|_, g| !g.live.is_empty() || !g.pending.is_empty());
+        out
+    }
+
     /// The shared KV page pool (residency, recycling, and sharing gauges).
     pub fn pool(&self) -> &PagePool {
         &self.pool
@@ -1229,6 +1266,10 @@ impl Scheduler {
             native_bits: p.native_bits,
         };
         let (tok, logit) = live.session.sample();
+        // Submit → first sampled token: the TTFT sample the SLO report is
+        // built on, recorded for every stream (finished-at-prefill or not)
+        // and kept separate from the per-step decode latency counters.
+        metrics.record_ttft(bits, p.enq.elapsed().as_secs_f64() * 1e3);
         live.last = tok;
         live.remaining -= 1;
         let done = live.remaining == 0 || !live.session.can_advance();

@@ -415,16 +415,17 @@ fn host_worker_loop(
             waiters.remove(&id);
         }
         if let Some(planner) = elastic.as_mut() {
-            apply_elastic(
+            for id in apply_elastic(
                 planner,
                 &mut sched,
                 &mut store,
                 &model,
                 &preset,
                 &cfg,
-                &mut waiters,
                 &mut metrics,
-            );
+            ) {
+                waiters.remove(&id);
+            }
             // A shift can retire streams (failed plan swaps) after the
             // round already set the gauge — recompute so the gauge never
             // carries bytes of sessions that no longer exist.
@@ -434,25 +435,26 @@ fn host_worker_loop(
 }
 
 /// Consult the elastic planner against the load the round just left behind
-/// and apply at most one shift.  Shift failures (a stream that cannot
-/// switch plans) close the affected response channels exactly like
-/// mid-round failures; a decision with nothing to move starts no cooldown,
-/// so the planner keeps watching.
+/// and apply at most one shift.  Returns the ids of streams the shift
+/// failed (a stream that cannot switch plans) — the caller closes their
+/// response channels exactly like mid-round failures.  A decision with
+/// nothing to move starts no cooldown, so the planner keeps watching.
+/// Shared by the single-worker host loop and the `serve::frontend` pool
+/// workers (each worker runs its own planner over its own scheduler).
 #[allow(clippy::too_many_arguments)]
-fn apply_elastic(
+pub(crate) fn apply_elastic(
     planner: &mut ElasticPlanner,
     sched: &mut Scheduler,
     store: &mut WeightStore,
     model: &QuantizedModel,
     preset: &PresetInfo,
     cfg: &ServerConfig,
-    waiters: &mut BTreeMap<u64, Sender<Response>>,
     metrics: &mut Metrics,
-) {
+) -> Vec<u64> {
     let round = sched.round();
     let Some(dir) = planner.decide(round, sched.resident_kv_bytes(), sched.pending_prefills())
     else {
-        return;
+        return Vec::new();
     };
     let failed = match dir {
         ShiftDirection::Down => {
@@ -465,7 +467,7 @@ fn apply_elastic(
                 .filter(|g| planner.cfg.next_down(g.bits).is_some())
                 .max_by_key(|g| g.bits)
             else {
-                return;
+                return Vec::new();
             };
             let to_bits = planner.cfg.next_down(cand.bits).expect("filtered above");
             let int8 = if cand.int8 { Some(cfg.act_quant) } else { None };
@@ -476,7 +478,7 @@ fn apply_elastic(
                 Ok(p) => p,
                 Err(e) => {
                     eprintln!("serve worker: elastic downshift plan int{to_bits}: {e:#}");
-                    return;
+                    return Vec::new();
                 }
             };
             let saved = metrics.page_in_saved_bytes(to_bits).saturating_sub(saved0);
@@ -524,19 +526,47 @@ fn apply_elastic(
             report.failed
         }
     };
-    for id in failed {
-        waiters.remove(&id);
-    }
+    failed
 }
 
-/// Validate one host request and enqueue it with its resolved plan.
-/// Rejecting here (the dropped sender surfaces as a recv error on the
-/// client) keeps a malformed request out of every round, so it cannot
-/// fail innocent round members or stall a stream.
+/// Verify-window KV slots this request would reserve if admitted into a
+/// speculating group (0 when the config or request shape is ineligible).
+/// Shared by [`prepare_submit`] and the frontend pool's budget-aware
+/// queue gate so the two projections cannot disagree.
+pub(crate) fn spec_slots_for(cfg: &ServerConfig, req: &Request, bits: u32) -> usize {
+    cfg.speculative
+        .as_ref()
+        .filter(|s| {
+            s.k >= 2
+                && req.per_layer.is_none()
+                && matches!(req.sampling, Sampling::Greedy)
+                && bits > s.draft_bits
+                && (req.int8_acts || !cfg.warm_bits.contains(&bits))
+        })
+        .map_or(0, |s| s.k)
+}
+
+/// A validated request with its resolved plan — everything
+/// [`Scheduler::submit`] needs.  Produced by [`prepare_submit`].
+pub(crate) struct PreparedSubmit {
+    pub key: PlanKey,
+    pub plan: Arc<crate::runtime::ForwardPlan>,
+    /// The uniform bit-width the request resolved to (a per-layer map's
+    /// maximum — the group/reporting width).
+    pub bits: u32,
+}
+
+/// Validate one host request against the model/window limits and resolve
+/// its forward plan, arming its group's speculative draft when eligible.
+/// Shared by the single-worker host loop and every
+/// [`crate::serve::frontend`] pool worker, so the two front doors cannot
+/// drift: a request the in-process path rejects is rejected with the same
+/// reason over TCP (where the message becomes the 400 body instead of a
+/// log line).  Rejecting at submit keeps a malformed request out of every
+/// round, so it cannot fail innocent round members or stall a stream.
 #[allow(clippy::too_many_arguments)]
-fn host_submit(
-    req: Request,
-    tx: Sender<Response>,
+pub(crate) fn prepare_submit(
+    req: &Request,
     seq: usize,
     vocab: usize,
     cfg: &ServerConfig,
@@ -544,21 +574,8 @@ fn host_submit(
     preset: &PresetInfo,
     store: &mut WeightStore,
     sched: &mut Scheduler,
-    waiters: &mut BTreeMap<u64, Sender<Response>>,
     metrics: &mut Metrics,
-) {
-    // A duplicate in-flight id would silently overwrite the first
-    // request's waiter entry: its response events would go nowhere, the
-    // client would hang, and the scheduler would step BOTH streams while
-    // only one channel existed.  Ids are only reusable once the previous
-    // stream finished (its waiter entry is gone).
-    if waiters.contains_key(&req.id) {
-        eprintln!(
-            "serve worker: request {}: id already in flight — rejected",
-            req.id
-        );
-        return;
-    }
+) -> std::result::Result<PreparedSubmit, String> {
     // Only the first `seq` tokens reach the forward pass (prompts
     // truncate), so tokens in the clipped tail must not fail a request
     // they cannot affect.
@@ -569,33 +586,25 @@ fn host_submit(
         .find(|&&t| t < 0 || t as usize >= vocab)
         .copied();
     if let Some(bad) = bad_token {
-        eprintln!(
-            "serve worker: request {}: token {bad} outside vocab [0, {vocab}) — rejected",
-            req.id
-        );
-        return;
+        return Err(format!("token {bad} outside vocab [0, {vocab})"));
     }
     if req.max_new_tokens == 0 || req.max_new_tokens > seq {
         // 0 would produce an empty stream; anything past the position
         // capacity can never be served and would pin a round slot for
         // nothing.
-        eprintln!(
-            "serve worker: request {}: max_new_tokens {} outside [1, {seq}] — rejected",
-            req.id, req.max_new_tokens
-        );
-        return;
+        return Err(format!(
+            "max_new_tokens {} outside [1, {seq}]",
+            req.max_new_tokens
+        ));
     }
     if let Err(e) = req.sampling.validate() {
-        eprintln!("serve worker: request {}: {e:#} — rejected", req.id);
-        return;
+        return Err(format!("{e:#}"));
     }
     if let Some(map) = &req.per_layer {
         if map.is_empty() || map.iter().any(|b| !(1..=8).contains(b)) {
-            eprintln!(
-                "serve worker: request {}: per-layer map {map:?} invalid (bits must be in [1, 8]) — rejected",
-                req.id
-            );
-            return;
+            return Err(format!(
+                "per-layer map {map:?} invalid (bits must be in [1, 8])"
+            ));
         }
     }
     // Per-layer traffic is grouped and reported under the map's maximum
@@ -609,17 +618,7 @@ fn host_submit(
     // reserves k provisional verify-window slots, and the projection must
     // say so — admission and the submit-time budget check otherwise
     // under-count the stream by k positions of K/V.
-    let spec_slots = cfg
-        .speculative
-        .as_ref()
-        .filter(|s| {
-            s.k >= 2
-                && req.per_layer.is_none()
-                && matches!(req.sampling, Sampling::Greedy)
-                && bits > s.draft_bits
-                && (req.int8_acts || !cfg.warm_bits.contains(&bits))
-        })
-        .map_or(0, |s| s.k);
+    let spec_slots = spec_slots_for(cfg, req, bits);
     if let Some(cap) = cfg.kv_capacity_bytes {
         // A request whose KV page alone exceeds the budget could never be
         // admitted — deferring it would park it (and its client) forever.
@@ -631,11 +630,9 @@ fn host_submit(
             &cfg.kv,
         );
         if projected > cap {
-            eprintln!(
-                "serve worker: request {}: projected KV {projected}B exceeds the {cap}B budget — rejected",
-                req.id
-            );
-            return;
+            return Err(format!(
+                "projected KV {projected}B exceeds the {cap}B budget"
+            ));
         }
     }
     let int8 = if req.int8_acts {
@@ -676,36 +673,66 @@ fn host_submit(
             .plan_warm(model, &preset.model, bits, metrics)
             .map(|p| (PlanKey::Warm(bits), p))
     };
-    match resolved {
-        Ok((key, plan)) => {
-            // First greedy request of a speculation-eligible packed group:
-            // resolve the draft rung (an MSB-prefix view of the SAME
-            // nested payload — a store cache hit after the first time, and
-            // zero new weight bytes under the nested store) and arm the
-            // group.  Registration is idempotent; a failed draft build
-            // just means the group serves plain.
-            if spec_slots >= 2 {
-                if let Some(s) = &cfg.speculative {
-                    match store.plan_packed(model, &preset.model, s.draft_bits, int8, metrics) {
-                        Ok(draft) => {
-                            sched.set_speculation(key.clone(), draft, s.draft_bits, s.k)
-                        }
-                        Err(e) => eprintln!(
-                            "serve worker: request {}: int{} draft plan failed ({e:#}); serving plain",
-                            req.id, s.draft_bits
-                        ),
-                    }
-                }
+    let (key, plan) = resolved.map_err(|e| format!("plan build failed: {e:#}"))?;
+    // First greedy request of a speculation-eligible packed group:
+    // resolve the draft rung (an MSB-prefix view of the SAME nested
+    // payload — a store cache hit after the first time, and zero new
+    // weight bytes under the nested store) and arm the group.
+    // Registration is idempotent; a failed draft build just means the
+    // group serves plain.
+    if spec_slots >= 2 {
+        if let Some(s) = &cfg.speculative {
+            match store.plan_packed(model, &preset.model, s.draft_bits, int8, metrics) {
+                Ok(draft) => sched.set_speculation(key.clone(), draft, s.draft_bits, s.k),
+                Err(e) => eprintln!(
+                    "serve worker: request {}: int{} draft plan failed ({e:#}); serving plain",
+                    req.id, s.draft_bits
+                ),
             }
+        }
+    }
+    Ok(PreparedSubmit { key, plan, bits })
+}
+
+/// Validate one host request and enqueue it with its resolved plan.
+/// Rejecting here (the dropped sender surfaces as a recv error on the
+/// client) keeps a malformed request out of every round.
+#[allow(clippy::too_many_arguments)]
+fn host_submit(
+    req: Request,
+    tx: Sender<Response>,
+    seq: usize,
+    vocab: usize,
+    cfg: &ServerConfig,
+    model: &QuantizedModel,
+    preset: &PresetInfo,
+    store: &mut WeightStore,
+    sched: &mut Scheduler,
+    waiters: &mut BTreeMap<u64, Sender<Response>>,
+    metrics: &mut Metrics,
+) {
+    // A duplicate in-flight id would silently overwrite the first
+    // request's waiter entry: its response events would go nowhere, the
+    // client would hang, and the scheduler would step BOTH streams while
+    // only one channel existed.  Ids are only reusable once the previous
+    // stream finished (its waiter entry is gone).
+    if waiters.contains_key(&req.id) {
+        eprintln!(
+            "serve worker: request {}: id already in flight — rejected",
+            req.id
+        );
+        return;
+    }
+    match prepare_submit(
+        &req, seq, vocab, cfg, model, preset, store, sched, metrics,
+    ) {
+        Ok(p) => {
             let id = req.id;
             waiters.insert(id, tx);
-            sched.submit(key, plan, bits, req.int8_acts, req, Instant::now());
+            sched.submit(p.key, p.plan, p.bits, req.int8_acts, req, Instant::now());
         }
-        Err(e) => {
-            eprintln!(
-                "serve worker: request {}: plan build failed: {e:#} — rejected",
-                req.id
-            );
+        Err(msg) => {
+            eprintln!("serve worker: request {}: {msg} — rejected", req.id);
         }
     }
 }

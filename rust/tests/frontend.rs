@@ -1,0 +1,374 @@
+//! Front-door conformance: the TCP/HTTP streaming interface must be a
+//! transparent skin over the in-process host backend.
+//!
+//! * **Byte identity** — a response streamed over the socket by a
+//!   2-worker fleet carries the same token ids, bits, activation mode,
+//!   and done flags as the same request served by `Server::start_host`
+//!   on an identically-seeded model, across r ∈ {2, 4, 8} ± int8 ± a
+//!   Mix'n'Match per-layer map.
+//! * **Drain** — once `begin_drain` runs, new submits are rejected
+//!   immediately (typed error in-process, HTTP 503 over TCP); no client
+//!   ever hangs.
+//! * **Worker death** — killing a worker fails its live streams cleanly
+//!   (channel terminates, never silence), rehomes its queued requests to
+//!   the survivors where they complete in full, and returns every page
+//!   to the pool once the fleet drains.
+//! * **Loadgen smoke** — the trace harness drives a real 2-worker fleet
+//!   end to end with zero errors.
+//!
+//! Unix-only, like the frontend itself.
+#![cfg(unix)]
+
+use std::io::BufReader;
+use std::net::TcpStream;
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+use matquant::loadgen::{MixEntry, TraceConfig};
+use matquant::model::manifest::ModelDims;
+use matquant::model::testing::toy_transformer;
+use matquant::model::{PresetInfo, QuantizedModel};
+use matquant::serve::frontend::{codec, HttpFrontend, PoolConfig, SubmitError, WorkerPool};
+use matquant::serve::{
+    projected_kv_bytes, PrecisionReq, Request, Response, Sampling, Server, ServerConfig,
+};
+use matquant::util::json::Json;
+
+fn toy_dims() -> ModelDims {
+    ModelDims {
+        vocab: 64,
+        d_model: 32,
+        n_layers: 2,
+        n_heads: 4,
+        d_ff: 64,
+        seq_len: 64,
+        quantize_attn: false,
+    }
+}
+
+fn toy(seed: u64) -> (PresetInfo, QuantizedModel) {
+    toy_transformer(toy_dims(), seed)
+}
+
+fn cfg() -> ServerConfig {
+    ServerConfig {
+        preset: "toy".into(),
+        max_wait_ms: 0.5,
+        warm_bits: vec![8],
+        ..ServerConfig::default()
+    }
+}
+
+fn fleet(workers: usize, seed: u64, server: ServerConfig) -> HttpFrontend {
+    let (preset, model) = toy(seed);
+    let pool = WorkerPool::start(preset, model, PoolConfig { workers, server }).unwrap();
+    HttpFrontend::bind(pool, "127.0.0.1:0").unwrap()
+}
+
+/// What one TCP generate call produced: the status, the error body (for
+/// non-200s), and every parsed NDJSON event.
+struct TcpRun {
+    status: u16,
+    body: Option<String>,
+    events: Vec<Json>,
+}
+
+fn tcp_generate(addr: &str, req: &Request) -> TcpRun {
+    let stream = TcpStream::connect(addr).unwrap();
+    stream.set_nodelay(true).unwrap();
+    stream
+        .set_read_timeout(Some(Duration::from_secs(60)))
+        .unwrap();
+    let mut w = stream.try_clone().unwrap();
+    codec::write_generate(&mut w, &codec::request_to_json(req)).unwrap();
+    let mut r = BufReader::new(stream);
+    let (status, headers) = codec::read_response_head(&mut r).unwrap();
+    if status != 200 {
+        let body = codec::read_body(&mut r, &headers).unwrap();
+        return TcpRun {
+            status,
+            body: Some(body),
+            events: Vec::new(),
+        };
+    }
+    let mut events = Vec::new();
+    while let Some(line) = codec::read_chunk(&mut r).unwrap() {
+        events.push(Json::parse(&line).unwrap());
+    }
+    TcpRun {
+        status,
+        body: None,
+        events,
+    }
+}
+
+/// One in-process stream, fully drained: (token, bits, int8, done) per
+/// event plus the final accumulated token vector.
+struct RefStream {
+    events: Vec<(i32, u32, bool, bool)>,
+    tokens: Vec<i32>,
+}
+
+fn drain_stream(rx: &Receiver<Response>) -> RefStream {
+    let mut events = Vec::new();
+    loop {
+        let r = rx
+            .recv_timeout(Duration::from_secs(60))
+            .expect("in-process stream stalled");
+        events.push((r.next_token, r.bits, r.int8_acts, r.done));
+        if r.done {
+            return RefStream {
+                events,
+                tokens: r.tokens,
+            };
+        }
+    }
+}
+
+/// r ∈ {2, 4, 8} × {f32, int8 activations}, plus one per-layer map.
+fn request_matrix(preset: &PresetInfo) -> Vec<Request> {
+    let vocab = preset.model.vocab as i32;
+    let mut reqs = Vec::new();
+    let mut id = 1u64;
+    for &bits in &[2u32, 4, 8] {
+        for &int8 in &[false, true] {
+            let prompt: Vec<i32> = (0..6).map(|j| (j * 5 + id as i32 * 3) % vocab).collect();
+            let mut r =
+                Request::generate(id, prompt, PrecisionReq::Bits(bits), 4, Sampling::Greedy);
+            r.int8_acts = int8;
+            reqs.push(r);
+            id += 1;
+        }
+    }
+    let prompt: Vec<i32> = (0..6).map(|j| (j * 7 + 1) % vocab).collect();
+    let mut r = Request::generate(id, prompt, PrecisionReq::Bits(8), 4, Sampling::Greedy);
+    r.per_layer = Some(vec![8, 2]);
+    reqs.push(r);
+    reqs
+}
+
+#[test]
+fn tcp_streams_are_byte_identical_to_the_in_process_host_backend() {
+    let seed = 101;
+
+    // Reference: the in-process host backend on the seeded toy model.
+    let (preset, model) = toy(seed);
+    let reqs = request_matrix(&preset);
+    let server = Server::start_host(preset, model, cfg()).unwrap();
+    let want: Vec<RefStream> = reqs
+        .iter()
+        .map(|req| drain_stream(&server.submit(req.clone()).unwrap()))
+        .collect();
+    server.shutdown().unwrap();
+
+    // Same seed, same model — served over TCP by a 2-worker fleet.
+    let frontend = fleet(2, seed, cfg());
+    let addr = frontend.addr().to_string();
+    for (req, reference) in reqs.iter().zip(&want) {
+        let got = tcp_generate(&addr, req);
+        assert_eq!(got.status, 200, "req {}: {:?}", req.id, got.body);
+        assert_eq!(
+            got.events.len(),
+            reference.events.len(),
+            "req {}: event count",
+            req.id
+        );
+        for (i, e) in got.events.iter().enumerate() {
+            let (token, bits, int8, done) = reference.events[i];
+            assert_eq!(e.get("id").unwrap().as_f64().unwrap() as u64, req.id);
+            assert_eq!(
+                e.get("token").unwrap().as_f64().unwrap() as i32,
+                token,
+                "req {} event {i}: token id must be byte-identical",
+                req.id
+            );
+            assert_eq!(e.get("bits").unwrap().as_u32().unwrap(), bits);
+            assert_eq!(e.get("int8").unwrap().as_bool().unwrap(), int8);
+            assert_eq!(
+                e.get("done").unwrap().as_bool().unwrap(),
+                done,
+                "req {} event {i}: done flag",
+                req.id
+            );
+        }
+        let last = got.events.last().unwrap();
+        let tokens: Vec<i32> = last
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(tokens, reference.tokens, "req {}: final token vector", req.id);
+    }
+    frontend.shutdown().unwrap();
+}
+
+#[test]
+fn drain_rejects_new_submits_immediately_without_hanging_clients() {
+    let frontend = fleet(2, 7, cfg());
+    let addr = frontend.addr().to_string();
+    frontend.pool().begin_drain();
+
+    // In-process: the typed error, synchronously.
+    let req = Request::generate(1, vec![1, 2, 3], PrecisionReq::Bits(4), 2, Sampling::Greedy);
+    let err = frontend
+        .pool()
+        .submit(req.clone())
+        .err()
+        .expect("a draining pool must reject new submits");
+    assert!(matches!(err, SubmitError::Draining), "{err}");
+
+    // Over TCP: an immediate 503 — the client gets an answer, not a hang
+    // and not a half-open stream.
+    let t0 = Instant::now();
+    let got = tcp_generate(&addr, &req);
+    assert_eq!(got.status, 503);
+    assert!(
+        got.body.unwrap().contains("draining"),
+        "the rejection must say why"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "drain rejection must be immediate"
+    );
+    frontend.shutdown().unwrap();
+}
+
+#[test]
+fn worker_death_rebalances_queued_work_and_the_pool_gauge_returns_to_zero() {
+    let (preset, model) = toy(33);
+    let vocab = preset.model.vocab as i32;
+    let prompt_len = 8usize;
+    let gen = 40usize;
+    let mut server = cfg();
+    // Budget the fleet-global pool for EXACTLY one stream of this shape:
+    // while the live stream holds any page, no queued entry passes the
+    // take gate on any worker — the queue stays queued until pages free.
+    let one_stream = projected_kv_bytes(&preset.model, prompt_len, gen, 0, &server.kv);
+    server.kv_capacity_bytes = Some(one_stream);
+    let pool = WorkerPool::start(
+        preset,
+        model,
+        PoolConfig {
+            workers: 2,
+            server,
+        },
+    )
+    .unwrap();
+
+    let shape = |id: u64| {
+        Request::generate(
+            id,
+            (0..prompt_len as i32).map(|j| (j * 3 + id as i32) % vocab).collect(),
+            PrecisionReq::Bits(4),
+            gen,
+            Sampling::Greedy,
+        )
+    };
+
+    // One live stream; wait for its first token so it is mid-flight.
+    let live_req = shape(1);
+    let live_rx = pool.submit(live_req.clone()).unwrap();
+    let first = live_rx
+        .recv_timeout(Duration::from_secs(30))
+        .expect("live stream must start");
+    assert!(!first.done, "generation must still be in flight");
+    let victim = pool.route_of(&live_req).expect("live key must have a route");
+
+    // Queue four more same-key requests (affinity → the victim) — all
+    // budget-gated behind the live stream's pages — then kill the victim.
+    let queued: Vec<Receiver<Response>> = (0..4)
+        .map(|i| pool.submit(shape(10 + i)).unwrap())
+        .collect();
+    pool.kill_worker(victim);
+
+    // The live stream terminates cleanly: a final done event if its last
+    // round won the race, otherwise a channel disconnect — never silence.
+    let deadline = Instant::now() + Duration::from_secs(30);
+    loop {
+        match live_rx.recv_timeout(Duration::from_millis(250)) {
+            Ok(r) if r.done => break,
+            Ok(_) => {}
+            Err(RecvTimeoutError::Disconnected) => break,
+            Err(RecvTimeoutError::Timeout) => assert!(
+                Instant::now() < deadline,
+                "live stream must terminate after its worker dies"
+            ),
+        }
+    }
+
+    // Every queued request completes IN FULL on the survivor.
+    for (i, rx) in queued.into_iter().enumerate() {
+        let deadline = Instant::now() + Duration::from_secs(120);
+        let mut events = 0usize;
+        loop {
+            match rx.recv_timeout(Duration::from_millis(250)) {
+                Ok(r) => {
+                    events += 1;
+                    if r.done {
+                        assert_eq!(
+                            r.tokens.len(),
+                            gen,
+                            "queued request {i} must generate every token"
+                        );
+                        break;
+                    }
+                }
+                Err(RecvTimeoutError::Disconnected) => {
+                    panic!("queued request {i} was dropped instead of rebalanced")
+                }
+                Err(RecvTimeoutError::Timeout) => assert!(
+                    Instant::now() < deadline,
+                    "queued request {i} hung after rebalance"
+                ),
+            }
+        }
+        assert_eq!(events, gen, "queued request {i}: one event per token");
+    }
+    assert_eq!(pool.live_workers(), 1, "exactly the victim died");
+
+    // Full drain: every page back in the pool.
+    pool.shutdown().unwrap();
+    assert_eq!(
+        pool.page_pool().resident_bytes(),
+        0,
+        "KV pool gauge must return to zero after drain"
+    );
+}
+
+#[test]
+fn loadgen_smoke_drives_a_two_worker_fleet_with_zero_errors() {
+    let frontend = fleet(2, 55, cfg());
+    let addr = frontend.addr().to_string();
+    let tcfg = TraceConfig {
+        seed: 3,
+        requests: 12,
+        arrival_rate: 200.0,
+        prompt_len: (2, 6),
+        max_new_tokens: (1, 3),
+        vocab: toy_dims().vocab,
+        mix: vec![
+            MixEntry::uniform(0.5, 8),
+            MixEntry::uniform(0.3, 4),
+            MixEntry::uniform(0.2, 2),
+        ],
+        ttft_slo_ms: 60_000.0,
+        tpot_slo_ms: 60_000.0,
+    };
+    let report = matquant::loadgen::run_trace(&addr, &tcfg).unwrap();
+    assert_eq!(report.errors, 0, "{}", report.render());
+    assert_eq!(report.overall.requests, 12);
+    assert_eq!(report.overall.completed, 12);
+    assert!(report.overall.tokens >= 12, "at least one token each");
+    assert!(report.overall.ttft_p50_ms > 0.0);
+    assert!(
+        (report.overall.slo_attainment - 1.0).abs() < 1e-9,
+        "with infinite SLOs every completed request attains"
+    );
+    assert_eq!(report.per_mix.len(), 3);
+    let mix_total: usize = report.per_mix.iter().map(|r| r.requests).sum();
+    assert_eq!(mix_total, 12, "every request belongs to exactly one mix row");
+    frontend.shutdown().unwrap();
+}
