@@ -285,13 +285,6 @@ fn run_stream(addr: &str, cfg: &TraceConfig, planned: &PlannedRequest, id: u64) 
         let mut err = None;
         while let Some(line) = codec::read_chunk(&mut reader)? {
             let now = Instant::now();
-            let since_last = now.duration_since(last_at).as_secs_f64() * 1e3;
-            if ttft.is_none() {
-                ttft = Some(now.duration_since(sent_at).as_secs_f64() * 1e3);
-            } else {
-                gaps.push(since_last);
-            }
-            last_at = now;
             match Json::parse(&line) {
                 Ok(event) => {
                     if let Some(e) = event.opt("error") {
@@ -300,6 +293,18 @@ fn run_stream(addr: &str, cfg: &TraceConfig, planned: &PlannedRequest, id: u64) 
                         );
                     } else {
                         tokens += 1;
+                        // Latency accounting is per *token* event only —
+                        // an in-band error chunk (e.g. worker death
+                        // before any token) must not contribute a fake
+                        // TTFT/gap sample to the percentiles.
+                        if err.is_none() {
+                            if ttft.is_none() {
+                                ttft = Some(now.duration_since(sent_at).as_secs_f64() * 1e3);
+                            } else {
+                                gaps.push(now.duration_since(last_at).as_secs_f64() * 1e3);
+                            }
+                            last_at = now;
+                        }
                     }
                 }
                 Err(e) => err = Some(format!("bad event JSON: {e:#}")),

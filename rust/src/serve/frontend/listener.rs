@@ -355,6 +355,13 @@ fn event_loop(
                 read_into(c);
             }
             if !c.dead && !c.close_after_flush && !c.handle.is_streaming() {
+                // A stream may have finished since the top-of-loop drain.
+                // Its final chunks were pushed before the streaming flag
+                // cleared (Release store, Acquire load above), so drain
+                // them into wbuf NOW — parsing a pipelined request first
+                // would append its response ahead of those still-queued
+                // chunks and emit out-of-order bytes on the wire.
+                drain_outbox(c);
                 parse_and_route(c, &pool);
             }
             // A worker may have queued chunks during routing: pick them

@@ -292,6 +292,19 @@ impl WorkerPool {
     ) -> std::result::Result<(), SubmitError> {
         let s = &self.shared;
         let (_bits, key, projected) = classify(&s.cfg, &s.preset, &req);
+        // Mirror `prepare_submit`: a request whose page-rounded KV
+        // projection alone exceeds the fleet budget can never pass the
+        // take-time gate (resident + projected <= cap fails even at
+        // resident = 0) — enqueueing it would park the client forever
+        // and wedge drain (the assigned worker never exits).
+        if let Some(cap) = s.cfg.kv_capacity_bytes {
+            if projected > cap {
+                sink.rejected();
+                return Err(SubmitError::Rejected(format!(
+                    "projected KV {projected}B exceeds the {cap}B budget"
+                )));
+            }
+        }
         let mut q = lock(&s.q);
         if q.draining {
             drop(q);

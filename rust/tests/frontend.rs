@@ -237,6 +237,55 @@ fn drain_rejects_new_submits_immediately_without_hanging_clients() {
 }
 
 #[test]
+fn oversized_kv_projection_is_rejected_synchronously_not_parked_forever() {
+    let (preset, model) = toy(11);
+    let mut server = cfg();
+    let prompt_len = 8usize;
+    let gen = 16usize;
+    // Budget the fleet below ONE stream of this shape: such a request
+    // could never pass the take-time gate, so it must be rejected at
+    // submit — parking it would hang the client and wedge shutdown.
+    let projected = projected_kv_bytes(&preset.model, prompt_len, gen, 0, &server.kv);
+    server.kv_capacity_bytes = Some(projected - 1);
+    let pool = WorkerPool::start(preset, model, PoolConfig { workers: 2, server }).unwrap();
+    let frontend = HttpFrontend::bind(pool, "127.0.0.1:0").unwrap();
+    let addr = frontend.addr().to_string();
+
+    let req = Request::generate(
+        1,
+        (0..prompt_len as i32).collect(),
+        PrecisionReq::Bits(4),
+        gen,
+        Sampling::Greedy,
+    );
+
+    // In-process: the typed error, synchronously.
+    let err = frontend
+        .pool()
+        .submit(req.clone())
+        .err()
+        .expect("an over-budget projection must be rejected at submit");
+    assert!(matches!(err, SubmitError::Rejected(_)), "{err}");
+    assert!(err.to_string().contains("exceeds"), "{err}");
+
+    // Over TCP: an immediate 400, never an accepted stream that hangs.
+    let t0 = Instant::now();
+    let got = tcp_generate(&addr, &req);
+    assert_eq!(got.status, 400);
+    assert!(
+        got.body.unwrap().contains("exceeds"),
+        "the rejection must say why"
+    );
+    assert!(
+        t0.elapsed() < Duration::from_secs(5),
+        "over-budget rejection must be immediate"
+    );
+
+    // Nothing was parked on the queue, so drain + join completes.
+    frontend.shutdown().unwrap();
+}
+
+#[test]
 fn worker_death_rebalances_queued_work_and_the_pool_gauge_returns_to_zero() {
     let (preset, model) = toy(33);
     let vocab = preset.model.vocab as i32;
