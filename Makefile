@@ -13,7 +13,7 @@ PYTHON ?= python3
 ARTIFACTS_DIR ?= $(abspath rust/artifacts)
 PRESETS ?= tiny,small,tiny_attn
 
-.PHONY: artifacts build test conformance bench bench-json loadgen-smoke clean-artifacts
+.PHONY: artifacts build test conformance bench bench-json loadgen-smoke solve-smoke clean-artifacts
 
 artifacts:
 	cd python && $(PYTHON) -m compile.aot --out-dir $(ARTIFACTS_DIR) --presets $(PRESETS)
@@ -28,8 +28,8 @@ test:
 # The debug+release conformance matrix CI runs (kernels + host forward +
 # KV-cached decode + continuous-batching scheduler + TCP front door).
 conformance:
-	cd rust && cargo test -q --test kernel_conformance --test forward --test decode --test scheduler --test goldens --test quant_edges --test serving --test frontend
-	cd rust && cargo test --release -q --test kernel_conformance --test forward --test decode --test scheduler --test goldens --test quant_edges --test serving --test frontend
+	cd rust && cargo test -q --test kernel_conformance --test forward --test decode --test scheduler --test goldens --test quant_edges --test serving --test frontend --test solver
+	cd rust && cargo test --release -q --test kernel_conformance --test forward --test decode --test scheduler --test goldens --test quant_edges --test serving --test frontend --test solver
 
 bench:
 	cd rust && cargo bench --bench quant_hot_paths
@@ -37,18 +37,24 @@ bench:
 # Run the bench and persist the ROADMAP perf-trajectory rows (nested
 # page-in bytes per precision, elastic shift latency, round throughput at
 # each watermark state, plain vs self-speculative decode tokens/sec, the
-# paged-KV rows, and the front-door loadgen rows: p50/p99 TTFT +
-# tokens/sec at 1/2/4 workers under the mixed-precision trace, plus the
-# elastic on-vs-off row with shift counts and SLO attainment) into
-# BENCH_9.json at the repo root.  Override MQ_BENCH_MS for a quicker
-# (smoke) or steadier (long) measurement budget.
+# paged-KV rows, the front-door loadgen rows, and the MatGPTQ
+# accuracy-frontier rows: minmax-vs-solver distilled decode perplexity per
+# rung with measured effective bits, plus the outlier-budget sweep to the
+# ≈2.05-bit point) into BENCH_10.json at the repo root.  Override
+# MQ_BENCH_MS for a quicker (smoke) or steadier (long) measurement budget.
 bench-json:
-	cd rust && MQ_BENCH_OUT=$(abspath BENCH_9.json) cargo bench --bench quant_hot_paths
+	cd rust && MQ_BENCH_OUT=$(abspath BENCH_10.json) cargo bench --bench quant_hot_paths
 
 # One-command CI smoke for the scale-out front door: boots a 2-worker
 # fleet behind a real TCP socket and replays a tiny deterministic trace.
 loadgen-smoke:
 	cd rust && cargo run --release -- loadgen --self-host --workers 2 --requests 8 --rate 100
+
+# One-command CI smoke for the MatGPTQ post-training solver: calibrate
+# Grams on teacher-sampled rows, refine, sweep the outlier budget, and
+# score minmax vs solver int2 on the distilled decode metric.
+solve-smoke:
+	cd rust && cargo run --release -- solve --calib-rows 8 --eval-rows 4
 
 clean-artifacts:
 	rm -rf $(ARTIFACTS_DIR)

@@ -15,9 +15,12 @@
 //! paged-attend decode step latency per page geometry); ISSUE 9 adds the
 //! front-door loadgen rows (client-side p50/p99 TTFT + tokens/sec at
 //! 1/2/4 workers under the mixed-precision Poisson trace, plus the
-//! elastic on-vs-off pair with shift counts and SLO attainment) —
+//! elastic on-vs-off pair with shift counts and SLO attainment);
+//! ISSUE 10 adds the MatGPTQ accuracy-frontier rows (minmax-vs-solver
+//! distilled decode perplexity per rung with measured effective bits,
+//! plus the Eq. 8 outlier-budget sweep to the ≈2.05-bit point) —
 //! persisted as JSON when `MQ_BENCH_OUT` names a path
-//! (`make bench-json` → `BENCH_9.json`).
+//! (`make bench-json` → `BENCH_10.json`).
 //!
 //! Run: `cargo bench --bench quant_hot_paths`
 
@@ -1069,12 +1072,98 @@ fn main() {
     #[cfg(not(unix))]
     let (json_front, json_front_elastic): (Vec<String>, Vec<String>) = (Vec::new(), Vec::new());
 
+    // ---- MatGPTQ post-training solver (ISSUE 10) ----
+    // The accuracy-frontier rows: calibrate Grams on teacher-sampled rows,
+    // re-round under the Hessian-weighted nested-MSB objective, then score
+    // minmax vs solver masters per rung on the distilled decode metric
+    // (CE against the int8 teacher's own samples — entropy + KL, so the
+    // comparison is ordered by weight fidelity) with measured effective
+    // bits, plus the Eq. 8 outlier-budget sweep landing the ≈2.05-bit
+    // point.
+    let mut json_solver: Vec<String> = Vec::new();
+    let mut json_outlier: Vec<String> = Vec::new();
+    {
+        use matquant::eval::{distill_decode_log_perplexity, sample_decode_rows};
+        use matquant::quant::solver::{sweep_outlier_budgets, SolverConfig};
+
+        let sdims = ModelDims {
+            vocab: 256,
+            d_model: 32,
+            n_layers: 2,
+            n_heads: 4,
+            d_ff: 64,
+            seq_len: 16,
+            quantize_attn: false,
+        };
+        let (sp, smodel) = toy_transformer(sdims, 11);
+        let kv = KvConfig::f32_paged(8);
+        let teacher =
+            ForwardPlan::packed_uniform(&sp.model, &smodel, 8, false, None, None).unwrap();
+        let seed = 5u64;
+        let t0 = Instant::now();
+        let calib = sample_decode_rows(&teacher, kv, seed ^ 0xCA11B, 24).unwrap();
+        let mut grams = std::collections::BTreeMap::new();
+        for row in &calib {
+            teacher
+                .accumulate_grams(&row[..sdims.seq_len], 1, sdims.seq_len, &mut grams)
+                .unwrap();
+        }
+        let calib_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let t0 = Instant::now();
+        let (refined, report) = smodel.solve_refined(&grams, &SolverConfig::default()).unwrap();
+        let solve_ms = t0.elapsed().as_secs_f64() * 1e3;
+        println!(
+            "matgptq solve: {} grams over {} rows in {calib_ms:.1} ms | {} tensors refined in {solve_ms:.1} ms",
+            grams.len(),
+            calib.len(),
+            report.tensors.len()
+        );
+        let n_q = smodel.quantized_params().max(1) as f64;
+        for bits in [2u32, 4, 8] {
+            let m_plan =
+                ForwardPlan::packed_uniform(&sp.model, &smodel, bits, false, None, None).unwrap();
+            let s_plan =
+                ForwardPlan::packed_uniform(&sp.model, &refined, bits, false, None, None).unwrap();
+            let ce_m = distill_decode_log_perplexity(&teacher, &m_plan, kv, seed, 8).unwrap();
+            let ce_s = distill_decode_log_perplexity(&teacher, &s_plan, kv, seed, 8).unwrap();
+            let eb = smodel.storage_bytes(&PrecisionAssignment::uniform(bits)) as f64 * 8.0 / n_q;
+            println!(
+                "matgptq int{bits}: distilled decode log pplx minmax {ce_m:.4} -> solver {ce_s:.4} | weighted rel err {:.5} -> {:.5} | {eb:.3} eff bits/w",
+                report.mean_base_rel(bits),
+                report.mean_solved_rel(bits)
+            );
+            json_solver.push(format!(
+                "{{\"bits\": {bits}, \"minmax_log_pplx\": {ce_m:.5}, \"solver_log_pplx\": {ce_s:.5}, \"minmax_rel_err\": {:.6}, \"solver_rel_err\": {:.6}, \"eff_bits_per_weight\": {eb:.4}}}",
+                report.mean_base_rel(bits),
+                report.mean_solved_rel(bits)
+            ));
+        }
+        let pts =
+            sweep_outlier_budgets(&refined, &grams, 2, &[0.0, 0.02, 0.05, 0.1, 0.25]).unwrap();
+        for p in &pts {
+            println!(
+                "matgptq outlier sweep @ int2: budget {:.3} -> {:.3} eff bits, rel err {:.5}, {} overlays",
+                p.budget,
+                p.effective_bits,
+                p.rel_err,
+                p.enabled.len()
+            );
+            json_outlier.push(format!(
+                "{{\"budget\": {:.4}, \"effective_bits\": {:.4}, \"rel_err\": {:.6}, \"tensors_with_overlay\": {}}}",
+                p.budget,
+                p.effective_bits,
+                p.rel_err,
+                p.enabled.len()
+            ));
+        }
+    }
+
     // Hand-rolled JSON (the build is offline — no serde); the Makefile
     // `bench-json` target and the CI smoke step point MQ_BENCH_OUT at
-    // BENCH_9.json in the repo root.
+    // BENCH_10.json in the repo root.
     if let Ok(path) = std::env::var("MQ_BENCH_OUT") {
         let json = format!(
-            "{{\n  \"pr\": 9,\n  \"bench\": \"quant_hot_paths\",\n  \"model\": \"toy tiny-shaped (vocab 256, d_model 96, 4 layers, d_ff 384)\",\n  \"page_in_per_precision\": [\n    {}\n  ],\n  \"elastic_shift_latency\": [\n    {}\n  ],\n  \"round_throughput_per_watermark_state\": [\n    {}\n  ],\n  \"speculative_decode\": [\n    {}\n  ],\n  \"kv_concurrency_at_fixed_budget\": [\n    {}\n  ],\n  \"paged_attend_step_latency\": [\n    {}\n  ],\n  \"frontdoor_loadgen\": [\n    {}\n  ],\n  \"frontdoor_elastic_on_vs_off\": [\n    {}\n  ]\n}}\n",
+            "{{\n  \"pr\": 10,\n  \"bench\": \"quant_hot_paths\",\n  \"model\": \"toy tiny-shaped (vocab 256, d_model 96, 4 layers, d_ff 384); solver rows on vocab 256, d_model 32, 2 layers, d_ff 64\",\n  \"page_in_per_precision\": [\n    {}\n  ],\n  \"elastic_shift_latency\": [\n    {}\n  ],\n  \"round_throughput_per_watermark_state\": [\n    {}\n  ],\n  \"speculative_decode\": [\n    {}\n  ],\n  \"kv_concurrency_at_fixed_budget\": [\n    {}\n  ],\n  \"paged_attend_step_latency\": [\n    {}\n  ],\n  \"frontdoor_loadgen\": [\n    {}\n  ],\n  \"frontdoor_elastic_on_vs_off\": [\n    {}\n  ],\n  \"matgptq_minmax_vs_solver_per_rung\": [\n    {}\n  ],\n  \"matgptq_outlier_budget_sweep_int2\": [\n    {}\n  ]\n}}\n",
             json_page_in.join(",\n    "),
             json_shift.join(",\n    "),
             json_rounds.join(",\n    "),
@@ -1082,7 +1171,9 @@ fn main() {
             json_kv.join(",\n    "),
             json_attend.join(",\n    "),
             json_front.join(",\n    "),
-            json_front_elastic.join(",\n    ")
+            json_front_elastic.join(",\n    "),
+            json_solver.join(",\n    "),
+            json_outlier.join(",\n    ")
         );
         std::fs::write(&path, &json).unwrap_or_else(|e| panic!("write bench json to {path}: {e}"));
         println!("bench rows persisted to {path}");

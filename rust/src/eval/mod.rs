@@ -9,11 +9,19 @@
 //! [`host_quality_table`]).  [`decode_log_perplexity`] scores the same
 //! stream through the KV-cached **decode path** instead, so paged-KV
 //! storage choices (f32 vs int8 pages) get a quality number too.
+//! [`distill_decode_log_perplexity`] scores a quantized student on rows
+//! *sampled from an int8 teacher* ([`sample_decode_rows`]) — CE there is
+//! entropy + KL(teacher‖student), so quality ordering tracks weight
+//! fidelity even on random-init toy models, which is what the MatGPTQ
+//! solver comparisons ([`crate::quant::solver`]) assert on.
 
 pub mod perplexity;
 pub mod tables;
 pub mod tasks;
 
-pub use perplexity::{decode_log_perplexity, host_quality_table, Evaluator, HostEvaluator};
+pub use perplexity::{
+    decode_log_perplexity, distill_decode_log_perplexity, host_quality_table, sample_decode_rows,
+    Evaluator, HostEvaluator,
+};
 pub use tables::{quality_table, TableBuilder};
 pub use tasks::{task_suite, TaskReport};

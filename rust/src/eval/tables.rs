@@ -81,12 +81,19 @@ impl TableBuilder {
 }
 
 /// The canonical quality-table layout (Tables 1–8's
-/// `Data type | Method | log pplx.` columns) — shared by the artifact
-/// suite and the host path
+/// `Data type | Method | log pplx.` columns plus the measured
+/// effective-bits-per-weight — true packed storage over quantized param
+/// count, so "2.05-bit" claims are a measurement, not an assertion) —
+/// shared by the artifact suite and the host path
 /// ([`crate::eval::perplexity::host_quality_table`]) so both render
 /// directly comparable rows.
 pub fn quality_table(title: impl Into<String>) -> TableBuilder {
-    TableBuilder::new(title, &["Data type", "Method", "log pplx."])
+    TableBuilder::new(title, &["Data type", "Method", "log pplx.", "eff. bits/w"])
+}
+
+/// Effective-bits formatting for the quality table's fourth column.
+pub fn eff_bits(x: f64) -> String {
+    format!("{x:.3}")
 }
 
 /// Format helpers matching the paper's number style.

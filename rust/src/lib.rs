@@ -82,6 +82,27 @@
 //! in-process host backend, drain, worker death):
 //! `cargo test --test frontend`.  Unix-only.
 //!
+//! ## Post-training accuracy: the MatGPTQ solver
+//!
+//! [`quant::solver`] refines the int8 masters purely post-training:
+//! `calibrate → Gram → nested-MSB GPTQ → outlier sweep → nested
+//! payload`.  Per-linear input Grams accumulate through the live plan
+//! ([`runtime::ForwardPlan::accumulate_grams`]), a dampened Cholesky
+//! factor turns them into error-feedback weights, and each column's
+//! int8 code is re-chosen to minimize the Hessian-weighted error of its
+//! *nested slices* at rungs {2, 4, 8} — so one refined master improves
+//! every precision the serving path slices from it, with zero serving
+//! changes ([`model::QuantizedModel::solve_refined`]).  The Eq. 8
+//! outlier-budget sweep ([`quant::solver::sweep_outlier_budgets`])
+//! lands the paper's ≈2.05-bit point.  Quality is judged on the
+//! distilled decode metric ([`eval::distill_decode_log_perplexity`]):
+//! students are scored on rows sampled from the int8 teacher, so
+//! cross-entropy decomposes as entropy + KL and its ordering tracks
+//! weight fidelity even on random-init toy models.  `matquant solve`
+//! runs the pipeline from the CLI; `cargo test --test solver` proves
+//! bit-exact serving per rung and the solver-beats-minmax int2
+//! comparison.
+//!
 //! ## Build
 //!
 //! The build is fully offline: `anyhow` and `xla` resolve to vendored path

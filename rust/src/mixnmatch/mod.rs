@@ -10,12 +10,16 @@
 //! down the packed-domain path: it ranks layers by quantization damage
 //! with fused r-bit matvec probes (`y_r = x·W_r` straight from the
 //! payload, no weight materialization at all) and greedily spends a bit
-//! budget where the probe says it hurts most.
+//! budget where the probe says it hurts most.  When the MatGPTQ solver has
+//! run, [`sensitivity::solver_sensitivity`] supplies the same rows from
+//! real calibration curvature instead of random probes.
 
 pub mod pareto;
 pub mod sensitivity;
 pub mod strategy;
 
 pub use pareto::{pareto_frontier, Point};
-pub use sensitivity::{probe_sensitivity, suggest_assignment, SensitivityRow};
+pub use sensitivity::{
+    probe_sensitivity, solver_sensitivity, suggest_assignment, SensitivityRow,
+};
 pub use strategy::{assignments_for, compositions, Strategy};

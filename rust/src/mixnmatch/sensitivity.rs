@@ -80,6 +80,25 @@ pub fn probe_sensitivity(
     Ok(rows)
 }
 
+/// Sensitivity rows from the MatGPTQ solver's Hessian-weighted residuals
+/// ([`crate::model::QuantizedModel::solve_refined`]): one row per solved
+/// tensor, `rel_err` the post-solve `sqrt(ΔᵀHΔ / wᵀHw)` per rung.  Unlike
+/// [`probe_sensitivity`]'s random-vector damage estimate, these numbers
+/// carry the *calibration data's* curvature — feed them to
+/// [`suggest_assignment`] unchanged so Mix'n'Match upgrades the layers the
+/// real input distribution says are fragile.
+pub fn solver_sensitivity(report: &crate::quant::solver::SolverReport) -> Vec<SensitivityRow> {
+    report
+        .tensors
+        .iter()
+        .map(|t| SensitivityRow {
+            name: t.name.clone(),
+            layer: t.layer,
+            rel_err: t.solved_rel.clone(),
+        })
+        .collect()
+}
+
 /// Greedy budgeted assignment from probe rows: every layer starts at the
 /// cheapest probed width; while the *average* per-layer bits stay within
 /// `budget_avg_bits`, upgrade the layer with the largest error at its
@@ -201,5 +220,38 @@ mod tests {
         assert_eq!(suggest_assignment(&rows, 4, 8.0), vec![8, 8, 8, 8]);
         // minimal budget → everything cheapest
         assert_eq!(suggest_assignment(&rows, 4, 2.0), vec![2, 2, 2, 2]);
+    }
+
+    #[test]
+    fn solver_rows_drive_assignment() {
+        use crate::quant::solver::{SolverReport, TensorReport};
+        // Layer 1's tensor is much more damaged at int2 → a mid budget
+        // must upgrade layer 1 before layer 0.
+        let report = SolverReport {
+            tensors: vec![
+                TensorReport {
+                    name: "layer0.ffn.w_in".into(),
+                    layer: 0,
+                    damp: 1e-3,
+                    fallback: false,
+                    base_rel: vec![(2, 0.06), (4, 0.02), (8, 0.001)],
+                    solved_rel: vec![(2, 0.05), (4, 0.01), (8, 0.001)],
+                },
+                TensorReport {
+                    name: "layer1.ffn.w_in".into(),
+                    layer: 1,
+                    damp: 1e-3,
+                    fallback: false,
+                    base_rel: vec![(2, 0.9), (4, 0.3), (8, 0.01)],
+                    solved_rel: vec![(2, 0.8), (4, 0.2), (8, 0.01)],
+                },
+            ],
+        };
+        let rows = solver_sensitivity(&report);
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[1].layer, 1);
+        assert_eq!(rows[1].rel_err[0], (2, 0.8));
+        let assign = suggest_assignment(&rows, 2, 3.0);
+        assert_eq!(assign, vec![2, 4], "budget goes to the fragile layer");
     }
 }

@@ -16,6 +16,7 @@ use anyhow::{anyhow, ensure};
 use super::manifest::PresetInfo;
 use super::tensor::Tensor;
 use crate::kernels;
+use crate::quant::solver;
 use crate::quant::{self, BitSliceView, ExtraBitOverlay, PackedTensor, Scales};
 use crate::{Result, MASTER_BITS};
 
@@ -317,6 +318,39 @@ impl QuantizedTensor {
         (self.fp.clone(), vec![0.0; self.d_out])
     }
 
+    /// The smoothing-folded weight `W⊙s` (plain `W` for QAT models) — the
+    /// exact tensor the master codes quantize, and therefore the solver's
+    /// reconstruction target.
+    pub fn smoothed_weight(&self) -> Vec<f32> {
+        match &self.smooth {
+            None => self.fp.data.clone(),
+            Some((s, _)) => self
+                .fp
+                .data
+                .chunks_exact(self.d_out)
+                .enumerate()
+                .flat_map(|(i, row)| row.iter().map(move |&x| x * s[i]))
+                .collect(),
+        }
+    }
+
+    /// The same tensor with a **replacement int8 master** (solver-refined
+    /// codes): scales, smoothing, and the f32 reference are untouched, so
+    /// every downstream consumer — `BitSliceView` nested serving, compact
+    /// payloads, the bias fold — works on the refined master unchanged.
+    pub fn with_codes(&self, codes_f: &[f32]) -> Result<Self> {
+        ensure!(
+            codes_f.len() == self.d_in * self.d_out,
+            "replacement codes: {} values for a {}x{} tensor",
+            codes_f.len(),
+            self.d_in,
+            self.d_out
+        );
+        let mut qt = self.clone();
+        qt.codes = Arc::new(PackedTensor::pack(codes_f, MASTER_BITS));
+        Ok(qt)
+    }
+
     /// Deployment storage in bytes at `bits` (packed codes + scales +
     /// extra-precision overlay when applicable).
     pub fn storage_bytes(&self, bits: u32, extra_precision: bool) -> usize {
@@ -460,7 +494,7 @@ impl PackedWeight {
     /// fused matmul entry points (borrowed pass-through for QAT models) —
     /// one implementation so the two paths' smoothing numerics cannot
     /// drift.
-    fn fold_input<'a>(&self, xs: &'a [f32], scratch: &'a mut Vec<f32>) -> &'a [f32] {
+    pub(crate) fn fold_input<'a>(&self, xs: &'a [f32], scratch: &'a mut Vec<f32>) -> &'a [f32] {
         match &self.inv_smooth {
             None => xs,
             Some(inv) => {
@@ -874,6 +908,75 @@ impl QuantizedModel {
             );
         }
         Ok(out)
+    }
+
+    /// Total quantized parameter count (denominator of every
+    /// bits-per-weight number).
+    pub fn quantized_params(&self) -> usize {
+        self.quantized.values().map(|qt| qt.d_in * qt.d_out).sum()
+    }
+
+    /// MatGPTQ refinement: re-round every quantized tensor's int8 master
+    /// under the nested-MSB objective with Hessian-weighted error feedback
+    /// ([`crate::quant::solver`]), using the calibration Grams captured by
+    /// [`crate::runtime::ForwardPlan::accumulate_grams`].  Tensors without
+    /// a usable Gram fall back to the identity factor (independent
+    /// nearest-nested-code rounding — still rung-aware, just without
+    /// feedback).
+    ///
+    /// Returns the refined registry — scales, smoothing, params, and
+    /// ordering shared with `self`; only the master codes differ — plus a
+    /// per-tensor [`solver::SolverReport`] of minmax-vs-solved residuals
+    /// (real curvature input for [`crate::mixnmatch::sensitivity`]).
+    pub fn solve_refined(
+        &self,
+        grams: &BTreeMap<String, solver::Gram>,
+        cfg: &solver::SolverConfig,
+    ) -> Result<(QuantizedModel, solver::SolverReport)> {
+        let lut = solver::CodeLut::new(&cfg.rung_weights);
+        let ep = cfg.rung_weights.extra_precision;
+        let mut quantized = BTreeMap::new();
+        let mut tensors = Vec::new();
+        for qn in &self.quantized_order {
+            let qt = &self.quantized[qn];
+            let w_eff = qt.smoothed_weight();
+            let gram = grams.get(qn).filter(|g| g.dim() == qt.d_in);
+            let factor = match gram {
+                Some(g) => solver::GptqFactor::from_gram(g, cfg.damp_frac),
+                None => solver::GptqFactor::identity(qt.d_in),
+            };
+            let codes =
+                solver::solve_codes(&w_eff, qt.d_in, qt.d_out, &qt.scales, &factor, &lut);
+            let base_codes = qt.codes.unpack();
+            let mut base_rel = Vec::new();
+            let mut solved_rel = Vec::new();
+            for r in cfg.rung_weights.rungs() {
+                let (e0, n0) = solver::weighted_residual(
+                    &base_codes, &w_eff, qt.d_in, qt.d_out, &qt.scales, gram, r, ep,
+                );
+                let (e1, n1) = solver::weighted_residual(
+                    &codes, &w_eff, qt.d_in, qt.d_out, &qt.scales, gram, r, ep,
+                );
+                base_rel.push((r, solver::relative(e0, n0)));
+                solved_rel.push((r, solver::relative(e1, n1)));
+            }
+            tensors.push(solver::TensorReport {
+                name: qn.clone(),
+                layer: layer_of(qn),
+                damp: factor.damp,
+                fallback: factor.fallback,
+                base_rel,
+                solved_rel,
+            });
+            quantized.insert(qn.clone(), qt.with_codes(&codes)?);
+        }
+        let model = QuantizedModel {
+            params: self.params.clone(),
+            quantized,
+            param_order: self.param_order.clone(),
+            quantized_order: self.quantized_order.clone(),
+        };
+        Ok((model, solver::SolverReport { tensors }))
     }
 
     /// Bits per quantized parameter under `assign` (x-axis of Fig. 2/3).

@@ -121,6 +121,15 @@ pub fn act_clip(x: &[f32], cfg: &ActQuantConfig) -> f32 {
     };
     const BUCKETS: usize = 1 << ACT_HIST_BITS;
     let to_bucket = (BUCKETS - 1) as f32 / absmax;
+    if !to_bucket.is_finite() {
+        // Subnormal-magnitude rows (absmax ≲ 7.5e-37): 255/absmax
+        // overflows to +inf, every entry saturates into the top bucket,
+        // and the returned edge `(i+1)/inf` degenerates to a zero-width
+        // clip — an all-zero code vector for a perfectly valid constant
+        // row.  The histogram can't resolve anything at this scale, so
+        // the exact range is the right clip.
+        return absmax;
+    }
     let mut hist = [0u64; BUCKETS];
     for &v in x {
         let a = v.abs();
@@ -244,6 +253,34 @@ mod tests {
             assert!(qa.q.iter().all(|&q| q == 0), "clip {bad}");
             assert_eq!(qa.scale, 1.0);
         }
+    }
+
+    #[test]
+    fn tiny_constant_rows_survive_percentile_clip() {
+        // Regression: absmax small enough that 255/absmax overflows to
+        // +inf used to collapse the histogram clip to a zero-width range
+        // (bucket edge (i+1)/inf = 0) — valid constant rows quantized to
+        // all-zero codes.  The clip must fall back to the exact range.
+        for tiny in [1e-38f32, 7e-37, f32::MIN_POSITIVE] {
+            let x = vec![tiny; 64];
+            let cfg = ActQuantConfig::clipped(0.999);
+            let clip = act_clip(&x, &cfg);
+            assert_eq!(clip, tiny, "clip must be the row's absmax");
+            let qa = quantize_acts(&x, &cfg);
+            assert!(
+                qa.q.iter().all(|&q| q == ACT_QMAX as i8),
+                "constant row must hit the top code, got {:?}",
+                &qa.q[..4]
+            );
+            // round-trip stays at the right magnitude
+            let back = qa.q[0] as f32 * qa.scale;
+            assert!((back - tiny).abs() <= tiny * 0.01);
+        }
+        // ... and ordinary magnitudes still use the histogram path.
+        let mut x = vec![0.1f32; 1000];
+        x[0] = 100.0;
+        let clip = act_clip(&x, &ActQuantConfig::clipped(0.99));
+        assert!(clip < 1.0, "outlier must still be shed: clip {clip}");
     }
 
     #[test]

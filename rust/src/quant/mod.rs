@@ -14,7 +14,10 @@
 //!   histogram-percentile clip) — the producer for the integer-domain GEMV,
 //! * persisted per-layer activation-clip calibration ([`calibration`]):
 //!   thresholds computed once offline, stored as JSON beside the
-//!   checkpoint, and baked into serving plans as fixed-clip quantizers.
+//!   checkpoint, and baked into serving plans as fixed-clip quantizers,
+//! * the MatGPTQ post-training solver ([`solver`]): calibration Grams →
+//!   dampened Cholesky → nested-MSB GPTQ rounding → Eq. 8 outlier-budget
+//!   sweep, refining the int8 masters the nested serving path slices.
 
 pub mod activations;
 pub mod calibration;
@@ -22,6 +25,7 @@ pub mod histogram;
 pub mod minmax;
 pub mod packed;
 pub mod slicing;
+pub mod solver;
 
 pub use activations::{act_clip, quantize_acts, quantize_acts_into, ActQuantConfig, QuantizedActs};
 pub use calibration::ActCalibration;

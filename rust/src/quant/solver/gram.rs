@@ -1,0 +1,358 @@
+//! Input Gram matrices and their dampened Cholesky machinery — the
+//! curvature side of the MatGPTQ solver.
+//!
+//! `H = Σ XᵀX` over calibration batches is the layerwise proxy Hessian of
+//! the output-MSE objective `‖XW − XŴ‖²` (GPTQ, Frantar et al.).  The
+//! accumulator runs in f64 (calibration sums thousands of token rows;
+//! f32 accumulation loses the small-eigenvalue tail that the solver's
+//! error feedback depends on) and is captured through the forward plan
+//! ([`crate::runtime::ForwardPlan::accumulate_grams`]) **after** the
+//! OmniQuant `1/s` smoothing fold — exactly the values the fused matmuls
+//! multiply against the quantized payload.
+//!
+//! [`GptqFactor`] turns a Gram into the upper-triangular `U` with
+//! `(H + λI)⁻¹ = UᵀU` that GPTQ's error-feedback sweep consumes.  Rank
+//! deficiency is the *normal* case (calibration batches shorter than
+//! `d_in`, dead ReLU-style rows), so factorization always dampens by
+//! `λ = damp_frac · mean(diag H)`, escalates λ ×10 on a failed Cholesky
+//! pivot, and degenerates to the identity factor (zero error propagation —
+//! plain nearest-code rounding) when no finite factorization exists.
+
+use crate::Result;
+use anyhow::ensure;
+
+/// How many ×10 damping escalations to attempt before falling back to the
+/// identity factor.
+const DAMP_RETRIES: usize = 8;
+
+/// A per-tensor input Gram accumulator: `h[i][k] = Σ_rows x_i·x_k` in f64.
+#[derive(Debug, Clone)]
+pub struct Gram {
+    d: usize,
+    h: Vec<f64>,
+    /// Token rows accumulated so far.
+    pub rows: usize,
+}
+
+impl Gram {
+    pub fn new(d: usize) -> Self {
+        Gram {
+            d,
+            h: vec![0.0; d * d],
+            rows: 0,
+        }
+    }
+
+    /// Input dimension (`d_in` of the linear this Gram belongs to).
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// Row-major `d × d` Gram entries.
+    pub fn entries(&self) -> &[f64] {
+        &self.h
+    }
+
+    /// Accumulate `m` activation rows (`xs` is row-major `(m, d)`):
+    /// `H += XᵀX`.  Non-finite rows are skipped whole — a poisoned
+    /// calibration batch must not poison the factorization.
+    pub fn accumulate(&mut self, xs: &[f32], m: usize) -> Result<()> {
+        ensure!(
+            xs.len() == m * self.d,
+            "gram accumulate: {} values for {} rows of dim {}",
+            xs.len(),
+            m,
+            self.d
+        );
+        let d = self.d;
+        for row in xs.chunks_exact(d.max(1)) {
+            if !row.iter().all(|v| v.is_finite()) {
+                continue;
+            }
+            for i in 0..d {
+                let xi = row[i] as f64;
+                if xi == 0.0 {
+                    continue;
+                }
+                let hrow = &mut self.h[i * d..(i + 1) * d];
+                for (hk, &xk) in hrow.iter_mut().zip(row) {
+                    *hk += xi * xk as f64;
+                }
+            }
+            self.rows += 1;
+        }
+        Ok(())
+    }
+
+    /// `mean(diag H)` — the damping reference scale.
+    pub fn mean_diag(&self) -> f64 {
+        if self.d == 0 {
+            return 0.0;
+        }
+        (0..self.d).map(|i| self.h[i * self.d + i]).sum::<f64>() / self.d as f64
+    }
+}
+
+/// The factored curvature a GPTQ sweep consumes: upper-triangular `U` with
+/// `(H + λI)⁻¹ = UᵀU`, plus the damping that was actually needed.
+#[derive(Debug, Clone)]
+pub struct GptqFactor {
+    d: usize,
+    /// Row-major upper-triangular `U` (entries below the diagonal zero).
+    u: Vec<f64>,
+    /// The λ that produced a successful factorization (0 for identity).
+    pub damp: f64,
+    /// True when no dampened Cholesky succeeded (or no Gram existed) and
+    /// the factor degenerated to the identity — error propagation off.
+    pub fallback: bool,
+}
+
+impl GptqFactor {
+    /// The identity factor: `U = I`, zero error propagation.  This is the
+    /// correct degenerate solver — each row rounds independently to its
+    /// nearest nested code, exactly minmax-with-LUT behavior.
+    pub fn identity(d: usize) -> Self {
+        let mut u = vec![0.0; d * d];
+        for i in 0..d {
+            u[i * d + i] = 1.0;
+        }
+        GptqFactor {
+            d,
+            u,
+            damp: 0.0,
+            fallback: true,
+        }
+    }
+
+    /// Factor a Gram with dampened Cholesky: `λ = damp_frac·mean(diag H)`,
+    /// escalated ×10 up to [`DAMP_RETRIES`] times on pivot failure, then
+    /// the identity fallback.  A Gram with no accumulated rows (or an
+    /// all-zero diagonal) goes straight to the fallback.
+    pub fn from_gram(gram: &Gram, damp_frac: f64) -> Self {
+        let d = gram.dim();
+        let scale = gram.mean_diag();
+        if d == 0 || gram.rows == 0 || !(scale > 0.0) || !scale.is_finite() {
+            return Self::identity(d);
+        }
+        let mut damp = damp_frac.max(1e-12) * scale;
+        for _ in 0..DAMP_RETRIES {
+            if let Some(u) = factor_damped(gram.entries(), d, damp) {
+                return GptqFactor {
+                    d,
+                    u,
+                    damp,
+                    fallback: false,
+                };
+            }
+            damp *= 10.0;
+        }
+        Self::identity(d)
+    }
+
+    pub fn dim(&self) -> usize {
+        self.d
+    }
+
+    /// `U[i][k]` (zero below the diagonal).
+    #[inline(always)]
+    pub fn u(&self, i: usize, k: usize) -> f64 {
+        self.u[i * self.d + k]
+    }
+
+    /// The error-feedback row for pivot `i`: `U[i][k]/U[i][i]` for
+    /// `k > i` (empty under the identity fallback's zero propagation).
+    pub fn propagation_row(&self, i: usize) -> impl Iterator<Item = (usize, f64)> + '_ {
+        let dii = self.u(i, i);
+        let d = self.d;
+        ((i + 1)..d).map(move |k| (k, self.u(i, k) / dii))
+    }
+}
+
+/// Lower Cholesky of `A = H + λI`; `None` on a non-positive pivot.
+fn cholesky_lower(h: &[f64], d: usize, damp: f64) -> Option<Vec<f64>> {
+    let mut l = vec![0.0f64; d * d];
+    for i in 0..d {
+        for j in 0..=i {
+            let mut s = h[i * d + j];
+            if i == j {
+                s += damp;
+            }
+            for k in 0..j {
+                s -= l[i * d + k] * l[j * d + k];
+            }
+            if i == j {
+                if !(s > 0.0) || !s.is_finite() {
+                    return None;
+                }
+                l[i * d + i] = s.sqrt();
+            } else {
+                l[i * d + j] = s / l[j * d + j];
+            }
+        }
+    }
+    Some(l)
+}
+
+/// `U` upper-triangular with `(H + λI)⁻¹ = UᵀU`:
+/// Cholesky `A = L·Lᵀ` → `A⁻¹ = L⁻ᵀL⁻¹` by triangular solves → Cholesky of
+/// the inverse (`A⁻¹ = Lh·Lhᵀ`) → `U = Lhᵀ`.  Any non-finite intermediate
+/// fails the whole attempt (the caller escalates damping).
+fn factor_damped(h: &[f64], d: usize, damp: f64) -> Option<Vec<f64>> {
+    let l = cholesky_lower(h, d, damp)?;
+    // L⁻¹ by forward substitution, column by column.
+    let mut linv = vec![0.0f64; d * d];
+    for j in 0..d {
+        linv[j * d + j] = 1.0 / l[j * d + j];
+        for i in (j + 1)..d {
+            let mut s = 0.0;
+            for k in j..i {
+                s -= l[i * d + k] * linv[k * d + j];
+            }
+            linv[i * d + j] = s / l[i * d + i];
+        }
+    }
+    // A⁻¹ = L⁻ᵀ·L⁻¹ (symmetric).
+    let mut ainv = vec![0.0f64; d * d];
+    for i in 0..d {
+        for j in i..d {
+            let mut s = 0.0;
+            // (L⁻ᵀL⁻¹)[i][j] = Σ_k L⁻¹[k][i]·L⁻¹[k][j]; L⁻¹ lower.
+            for k in j..d {
+                s += linv[k * d + i] * linv[k * d + j];
+            }
+            if !s.is_finite() {
+                return None;
+            }
+            ainv[i * d + j] = s;
+            ainv[j * d + i] = s;
+        }
+    }
+    let lh = cholesky_lower(&ainv, d, 0.0)?;
+    // U = Lhᵀ.
+    let mut u = vec![0.0f64; d * d];
+    for i in 0..d {
+        for j in 0..=i {
+            u[j * d + i] = lh[i * d + j];
+        }
+    }
+    Some(u)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn matmul(a: &[f64], b: &[f64], d: usize) -> Vec<f64> {
+        let mut c = vec![0.0; d * d];
+        for i in 0..d {
+            for k in 0..d {
+                let aik = a[i * d + k];
+                if aik == 0.0 {
+                    continue;
+                }
+                for j in 0..d {
+                    c[i * d + j] += aik * b[k * d + j];
+                }
+            }
+        }
+        c
+    }
+
+    fn assert_close(a: &[f64], b: &[f64], tol: f64, what: &str) {
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert!((x - y).abs() < tol, "{what}[{i}]: {x} vs {y}");
+        }
+    }
+
+    #[test]
+    fn gram_accumulates_xtx() {
+        let mut g = Gram::new(3);
+        let xs = [1.0f32, 2.0, 3.0, -1.0, 0.5, 0.0];
+        g.accumulate(&xs, 2).unwrap();
+        assert_eq!(g.rows, 2);
+        // H[0][1] = 1·2 + (−1)·0.5
+        assert!((g.entries()[1] - 1.5).abs() < 1e-12);
+        assert!((g.entries()[0] - 2.0).abs() < 1e-12);
+        // symmetric
+        assert_eq!(g.entries()[1], g.entries()[3]);
+    }
+
+    #[test]
+    fn gram_skips_poisoned_rows() {
+        let mut g = Gram::new(2);
+        let xs = [1.0f32, 1.0, f32::NAN, 1.0, 2.0, 2.0];
+        g.accumulate(&xs, 3).unwrap();
+        assert_eq!(g.rows, 2);
+        assert!((g.entries()[0] - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn factor_inverts_full_rank_gram() {
+        // Well-conditioned H from more rows than dims.
+        let d = 4;
+        let mut g = Gram::new(d);
+        let mut rng = crate::data::Rng::new(7);
+        let rows = 32;
+        let xs: Vec<f32> = (0..rows * d).map(|_| rng.range_f32(-1.0, 1.0)).collect();
+        g.accumulate(&xs, rows).unwrap();
+        let f = GptqFactor::from_gram(&g, 0.01);
+        assert!(!f.fallback);
+        // UᵀU must be (H + λI)⁻¹: check (H+λI)·UᵀU ≈ I.
+        let mut utu = vec![0.0; d * d];
+        for i in 0..d {
+            for j in 0..d {
+                let mut s = 0.0;
+                for k in 0..d {
+                    s += f.u(k, i) * f.u(k, j);
+                }
+                utu[i * d + j] = s;
+            }
+        }
+        let mut a: Vec<f64> = g.entries().to_vec();
+        for i in 0..d {
+            a[i * d + i] += f.damp;
+        }
+        let prod = matmul(&a, &utu, d);
+        let mut eye = vec![0.0; d * d];
+        for i in 0..d {
+            eye[i * d + i] = 1.0;
+        }
+        assert_close(&prod, &eye, 1e-6, "A·UᵀU");
+    }
+
+    #[test]
+    fn rank_deficient_gram_dampens_not_fails() {
+        // One calibration row for a 3-dim layer: rank-1 Gram.  The damped
+        // factorization must succeed without the identity fallback.
+        let mut g = Gram::new(3);
+        g.accumulate(&[1.0, 2.0, -1.0], 1).unwrap();
+        let f = GptqFactor::from_gram(&g, 0.01);
+        assert!(!f.fallback, "damping should rescue a rank-1 gram");
+        assert!(f.damp > 0.0);
+        for i in 0..3 {
+            assert!(f.u(i, i).is_finite() && f.u(i, i) > 0.0);
+        }
+    }
+
+    #[test]
+    fn empty_gram_falls_back_to_identity() {
+        let g = Gram::new(4);
+        let f = GptqFactor::from_gram(&g, 0.01);
+        assert!(f.fallback);
+        for i in 0..4 {
+            assert_eq!(f.u(i, i), 1.0);
+            assert_eq!(f.propagation_row(i).count(), 4 - i - 1);
+            assert!(f.propagation_row(i).all(|(_, v)| v == 0.0));
+        }
+    }
+
+    #[test]
+    fn single_dim_gram_factors() {
+        let mut g = Gram::new(1);
+        g.accumulate(&[2.0, 3.0], 2).unwrap();
+        let f = GptqFactor::from_gram(&g, 0.01);
+        assert!(!f.fallback);
+        // H = 13, λ = 0.13 → U = 1/sqrt(13.13)
+        assert!((f.u(0, 0) - 1.0 / (13.13f64).sqrt()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,136 @@
+//! MatGPTQ — the post-training accuracy frontier (MatQuant without
+//! co-training).
+//!
+//! Data flow, end to end:
+//!
+//! ```text
+//!   calibration tokens
+//!     → ForwardPlan::accumulate_grams      (runtime/plan.rs: per-linear
+//!        H = ΣXᵀX, captured AFTER the OmniQuant 1/s fold)
+//!     → GptqFactor::from_gram              (gram.rs: dampened Cholesky,
+//!        (H+λI)⁻¹ = UᵀU, ×10 λ escalation, identity fallback)
+//!     → solve_codes                        (matgptq.rs: GPTQ row sweep,
+//!        each code argmin of Σ_r λ_r(t − S_r(c))² via the 256-entry LUT,
+//!        error feedback through U)
+//!     → QuantizedModel::solve_refined      (model/registry.rs: repack the
+//!        refined int8 masters; scales/smoothing/serving path unchanged)
+//!     → sweep_outlier_budgets              (outliers.rs: Eq. 8 extra-bit
+//!        budgets per tensor → the 2.05-bit effective-precision point)
+//! ```
+//!
+//! The output is only a better int8 master: every downstream consumer —
+//! `BitSliceView` nested serving, compact payload export, Mix'n'Match
+//! per-layer maps, speculative decode — works on the refined model with
+//! **zero serving-side changes**.  Per-tensor residuals double as real
+//! curvature input for [`crate::mixnmatch::sensitivity`].
+
+pub mod gram;
+pub mod matgptq;
+pub mod outliers;
+
+pub use gram::{GptqFactor, Gram};
+pub use matgptq::{relative, solve_codes, weighted_residual, CodeLut, RungWeights};
+pub use outliers::{packed_views_with_outliers, sweep_outlier_budgets, OutlierSweepPoint};
+
+/// Configuration for [`crate::model::QuantizedModel::solve_refined`].
+#[derive(Debug, Clone)]
+pub struct SolverConfig {
+    /// The nested per-rung objective (default mirrors the training loss:
+    /// `λ_2 = 1.0, λ_4 = λ_8 = 0.1`).
+    pub rung_weights: RungWeights,
+    /// Cholesky damping as a fraction of `mean(diag H)` (GPTQ's 1%).
+    pub damp_frac: f64,
+}
+
+impl Default for SolverConfig {
+    fn default() -> Self {
+        SolverConfig {
+            rung_weights: RungWeights::default(),
+            damp_frac: 0.01,
+        }
+    }
+}
+
+/// Per-tensor solver outcome: the damping that factorized its Gram and the
+/// Hessian-weighted relative residual (`sqrt(err/norm)`) per rung, for the
+/// pre-solve (minmax) and post-solve codes.
+#[derive(Debug, Clone)]
+pub struct TensorReport {
+    pub name: String,
+    pub layer: usize,
+    /// λ actually used (0 when the identity fallback fired).
+    pub damp: f64,
+    /// True when no Gram existed or no dampened Cholesky succeeded.
+    pub fallback: bool,
+    /// `(rung, rel_err)` of the original minmax master codes.
+    pub base_rel: Vec<(u32, f64)>,
+    /// `(rung, rel_err)` of the solver-refined codes.
+    pub solved_rel: Vec<(u32, f64)>,
+}
+
+/// The full [`crate::model::QuantizedModel::solve_refined`] outcome.
+#[derive(Debug, Clone, Default)]
+pub struct SolverReport {
+    pub tensors: Vec<TensorReport>,
+}
+
+impl SolverReport {
+    /// Mean relative residual across tensors at `rung` (solved codes).
+    pub fn mean_solved_rel(&self, rung: u32) -> f64 {
+        mean_rel(&self.tensors, rung, |t| &t.solved_rel)
+    }
+
+    /// Mean relative residual across tensors at `rung` (minmax codes).
+    pub fn mean_base_rel(&self, rung: u32) -> f64 {
+        mean_rel(&self.tensors, rung, |t| &t.base_rel)
+    }
+
+    /// Human-readable per-tensor table.
+    pub fn render(&self) -> String {
+        let mut s = String::from(
+            "tensor                         damp        rung  minmax    solved\n",
+        );
+        for t in &self.tensors {
+            for (i, &(r, solved)) in t.solved_rel.iter().enumerate() {
+                let base = t.base_rel.get(i).map_or(f64::NAN, |&(_, b)| b);
+                let head = if i == 0 {
+                    format!(
+                        "{:<28}  {:<10}",
+                        t.name,
+                        if t.fallback {
+                            "identity".to_string()
+                        } else {
+                            format!("{:.2e}", t.damp)
+                        }
+                    )
+                } else {
+                    format!("{:<28}  {:<10}", "", "")
+                };
+                s.push_str(&format!(
+                    "{head}  int{r:<2}  {base:<8.5}  {solved:<8.5}\n"
+                ));
+            }
+        }
+        s
+    }
+}
+
+fn mean_rel<'a, F>(tensors: &'a [TensorReport], rung: u32, pick: F) -> f64
+where
+    F: Fn(&'a TensorReport) -> &'a Vec<(u32, f64)>,
+{
+    let vals: Vec<f64> = tensors
+        .iter()
+        .filter_map(|t| {
+            pick(t)
+                .iter()
+                .find(|&&(r, _)| r == rung)
+                .map(|&(_, v)| v)
+        })
+        .collect();
+    if vals.is_empty() {
+        0.0
+    } else {
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+}

@@ -1,0 +1,219 @@
+//! Eq. 8 outlier-budget sweep — spend extra-bit overlay storage where the
+//! solver residuals say it pays.
+//!
+//! Extra-Precision slicing admits the `2^r` overflow bucket; each overflow
+//! code costs one extra stored bit (the sparse overlay of
+//! [`crate::quant::ExtraBitOverlay`]), so enabling EP on a tensor raises
+//! its average bits/param from `r` to `r + overflow_fraction`.  The sweep
+//! scores every quantized tensor's Hessian-weighted residual at the rung
+//! with EP off vs on, then greedily enables tensors by error-reduction per
+//! extra bit until an average-extra-bits budget is exhausted — landing the
+//! paper's 2.05-bit effective-precision point when the budget covers the
+//! natural overflow mass of an int2 model.
+//!
+//! A sweep point is *servable*, not just a score: [`packed_views_with_outliers`]
+//! builds the per-tensor-EP `BitSliceView` handle map that drops into
+//! [`crate::runtime::ForwardPlan::from_packed`] unchanged.
+
+use std::collections::{BTreeMap, BTreeSet};
+
+use super::gram::Gram;
+use super::matgptq::{relative, weighted_residual};
+use crate::model::{PackedWeight, QuantizedModel};
+use crate::quant::overflow_fraction;
+use crate::{Result, MASTER_BITS};
+
+/// One point of the outlier-budget sweep.
+#[derive(Debug, Clone)]
+pub struct OutlierSweepPoint {
+    /// The average-extra-bits budget this point was solved under.
+    pub budget: f64,
+    /// Tensors whose Eq. 8 overlay the budget admits.
+    pub enabled: BTreeSet<String>,
+    /// Achieved model-wide average bits/param (`rung` + spent overlay bits).
+    pub effective_bits: f64,
+    /// Aggregate Hessian-weighted relative error at the rung under this
+    /// enablement (`sqrt(Σerr/Σnorm)` across quantized tensors).
+    pub rel_err: f64,
+}
+
+/// Per-tensor sweep inputs: the residual with EP off/on and the overlay
+/// cost in average bits contributed model-wide.
+struct TensorGain {
+    name: String,
+    err_off: f64,
+    err_on: f64,
+    /// Model-wide average-bits cost of enabling this tensor's overlay
+    /// (`overflow_fraction · n_tensor / n_total`).
+    cost: f64,
+}
+
+/// Sweep Eq. 8 outlier budgets at serving rung `rung` against the solver
+/// residuals.  `budgets` are average extra bits/param over the whole
+/// quantized weight set (e.g. `[0.0, 0.02, 0.05, 0.1, 0.25]`); each point
+/// reports the greedy-optimal tensor enablement, the achieved effective
+/// bits, and the aggregate weighted relative error.  Tensors missing from
+/// `grams` (or dimension-mismatched) score against the identity Hessian.
+pub fn sweep_outlier_budgets(
+    model: &QuantizedModel,
+    grams: &BTreeMap<String, Gram>,
+    rung: u32,
+    budgets: &[f64],
+) -> Result<Vec<OutlierSweepPoint>> {
+    let n_total: usize = model
+        .quantized
+        .values()
+        .map(|qt| qt.d_in * qt.d_out)
+        .sum();
+    let mut gains = Vec::new();
+    let mut norm_total = 0.0f64;
+    for qn in &model.quantized_order {
+        let qt = &model.quantized[qn];
+        let codes = qt.codes.unpack();
+        let w_eff = qt.smoothed_weight();
+        let gram = grams.get(qn).filter(|g| g.dim() == qt.d_in);
+        let (err_off, norm) = weighted_residual(
+            &codes, &w_eff, qt.d_in, qt.d_out, &qt.scales, gram, rung, false,
+        );
+        let (err_on, _) = weighted_residual(
+            &codes, &w_eff, qt.d_in, qt.d_out, &qt.scales, gram, rung, true,
+        );
+        let of = overflow_fraction(&codes, MASTER_BITS, rung);
+        norm_total += norm;
+        gains.push(TensorGain {
+            name: qn.clone(),
+            err_off,
+            err_on,
+            cost: of * (qt.d_in * qt.d_out) as f64 / n_total.max(1) as f64,
+        });
+    }
+    // Greedy order: error reduction per extra bit, descending.  Zero-cost
+    // tensors (no overflow codes at this rung) change nothing either way
+    // and sort last.
+    let mut order: Vec<usize> = (0..gains.len()).collect();
+    order.sort_by(|&a, &b| {
+        let ra = ratio(&gains[a]);
+        let rb = ratio(&gains[b]);
+        rb.partial_cmp(&ra).unwrap_or(std::cmp::Ordering::Equal)
+    });
+    let mut out = Vec::with_capacity(budgets.len());
+    for &budget in budgets {
+        let mut enabled = BTreeSet::new();
+        let mut spent = 0.0f64;
+        for &i in &order {
+            let g = &gains[i];
+            if g.cost == 0.0 || g.err_on >= g.err_off {
+                continue;
+            }
+            if spent + g.cost <= budget + 1e-12 {
+                spent += g.cost;
+                enabled.insert(g.name.clone());
+            }
+        }
+        let err: f64 = gains
+            .iter()
+            .map(|g| {
+                if enabled.contains(&g.name) {
+                    g.err_on
+                } else {
+                    g.err_off
+                }
+            })
+            .sum();
+        out.push(OutlierSweepPoint {
+            budget,
+            effective_bits: rung as f64 + spent,
+            rel_err: relative(err, norm_total),
+            enabled,
+        });
+    }
+    Ok(out)
+}
+
+fn ratio(g: &TensorGain) -> f64 {
+    if g.cost <= 0.0 {
+        return f64::NEG_INFINITY;
+    }
+    (g.err_off - g.err_on) / g.cost
+}
+
+/// Build the servable handle map for a sweep point: every quantized tensor
+/// as a nested `BitSliceView` at `bits`, with Eq. 8 extra precision on
+/// exactly the `enabled` tensors.  Drops into
+/// [`crate::runtime::ForwardPlan::from_packed`] like any uniform map.
+pub fn packed_views_with_outliers(
+    model: &QuantizedModel,
+    bits: u32,
+    enabled: &BTreeSet<String>,
+) -> Result<BTreeMap<String, PackedWeight>> {
+    let mut out = BTreeMap::new();
+    for qn in &model.quantized_order {
+        let qt = &model.quantized[qn];
+        out.insert(qn.clone(), qt.packed_view(bits, enabled.contains(qn))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Rng;
+    use crate::model::{QuantizedTensor, Tensor};
+
+    fn toy_model(seed: u64, tensors: &[(&str, usize, usize)]) -> QuantizedModel {
+        let mut rng = Rng::new(seed);
+        let mut quantized = BTreeMap::new();
+        let mut order = Vec::new();
+        for &(name, d_in, d_out) in tensors {
+            let data: Vec<f32> = (0..d_in * d_out)
+                .map(|_| rng.range_f32(-1.0, 1.0))
+                .collect();
+            let fp = Tensor::new(vec![d_in, d_out], data).unwrap();
+            quantized.insert(
+                name.to_string(),
+                QuantizedTensor::from_weight(fp, None, None, None).unwrap(),
+            );
+            order.push(name.to_string());
+        }
+        QuantizedModel::from_parts(BTreeMap::new(), quantized, vec![], order)
+    }
+
+    #[test]
+    fn sweep_is_monotone_in_budget() {
+        let model = toy_model(5, &[("layer0.a", 32, 16), ("layer1.b", 32, 16)]);
+        let grams = BTreeMap::new();
+        let pts =
+            sweep_outlier_budgets(&model, &grams, 2, &[0.0, 0.01, 0.05, 0.2, 1.0]).unwrap();
+        assert_eq!(pts.len(), 5);
+        for w in pts.windows(2) {
+            assert!(
+                w[1].rel_err <= w[0].rel_err + 1e-12,
+                "more budget must not hurt: {} → {}",
+                w[0].rel_err,
+                w[1].rel_err
+            );
+            assert!(w[1].effective_bits >= w[0].effective_bits - 1e-12);
+        }
+        // Zero budget enables nothing and serves exactly `rung` bits.
+        assert!(pts[0].enabled.is_empty());
+        assert!((pts[0].effective_bits - 2.0).abs() < 1e-12);
+        // A generous budget enables the overlay everywhere there is gain,
+        // landing the paper's "2 + overflow mass" effective precision.
+        let last = pts.last().unwrap();
+        assert!(!last.enabled.is_empty());
+        assert!(last.effective_bits > 2.0 && last.effective_bits < 2.3);
+        assert!(last.rel_err < pts[0].rel_err);
+    }
+
+    #[test]
+    fn sweep_points_are_servable() {
+        let model = toy_model(9, &[("layer0.a", 16, 8)]);
+        let pts = sweep_outlier_budgets(&model, &BTreeMap::new(), 2, &[1.0]).unwrap();
+        let views = packed_views_with_outliers(&model, 2, &pts[0].enabled).unwrap();
+        let qt = &model.quantized["layer0.a"];
+        let ep = pts[0].enabled.contains("layer0.a");
+        let (want, _) = qt.materialize(2, ep).unwrap();
+        let (got, _) = views["layer0.a"].decode().unwrap();
+        assert_eq!(got.data, want.data);
+    }
+}

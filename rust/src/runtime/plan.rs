@@ -61,6 +61,7 @@ use crate::kernels;
 use crate::model::manifest::ModelDims;
 use crate::model::registry::{layer_of, per_layer_bits};
 use crate::model::{PackedWeight, PrecisionAssignment, QuantizedModel, Tensor};
+use crate::quant::solver::Gram;
 use crate::quant::{ActCalibration, ActQuantConfig};
 use crate::Result;
 
@@ -92,6 +93,16 @@ enum PlanOp {
         bias: Option<Arc<Tensor>>,
     },
     Packed(Arc<PackedWeight>),
+}
+
+/// What a calibration forward captures at every packed linear: worst-case
+/// activation clips ([`ForwardPlan::calibrate`]) or input Gram matrices
+/// for the MatGPTQ solver ([`ForwardPlan::accumulate_grams`]).  Both see
+/// the **post-smoothing-fold** activations — the values the fused matmuls
+/// actually consume.
+enum LinearTap<'a> {
+    Clips(&'a ActQuantConfig, &'a mut BTreeMap<String, f32>),
+    Grams(&'a mut BTreeMap<String, Gram>),
 }
 
 /// A resolved linear layer: the op plus its manifest name (error context +
@@ -877,7 +888,15 @@ impl ForwardPlan {
             "calibrate on an f32 plan — the captured activations must be unquantized"
         );
         let mut clips = BTreeMap::new();
-        self.forward_impl(tokens, b, t, None, None, Some((cfg, &mut clips)), false)?;
+        self.forward_impl(
+            tokens,
+            b,
+            t,
+            None,
+            None,
+            Some(LinearTap::Clips(cfg, &mut clips)),
+            false,
+        )?;
         clips.retain(|_, c| *c > 0.0);
         Ok(ActCalibration {
             clip_fraction: cfg.clip_fraction,
@@ -885,20 +904,54 @@ impl ForwardPlan {
         })
     }
 
+    /// Accumulate per-linear input Gram matrices `H = ΣXᵀX` over the
+    /// calibration `tokens` — the curvature input of the MatGPTQ solver
+    /// ([`crate::quant::solver`], consumed by
+    /// [`crate::model::QuantizedModel::solve_refined`]).  Rows are
+    /// captured **after** the OmniQuant `1/s` smoothing fold, i.e. exactly
+    /// the values the fused matmuls multiply against the quantized
+    /// payload.  Call repeatedly to pool batches into the same map; each
+    /// packed linear accumulates under its manifest name.
+    pub fn accumulate_grams(
+        &self,
+        tokens: &[i32],
+        b: usize,
+        t: usize,
+        grams: &mut BTreeMap<String, Gram>,
+    ) -> Result<()> {
+        ensure!(
+            self.int8.is_none(),
+            "gram capture on an f32 plan — the captured activations must be unquantized"
+        );
+        self.forward_impl(tokens, b, t, None, None, Some(LinearTap::Grams(grams)), false)?;
+        Ok(())
+    }
+
     fn apply_linear(
         &self,
         lin: &PlanLinear,
         xs: &[f32],
         m: usize,
-        calib: &mut Option<(&ActQuantConfig, &mut BTreeMap<String, f32>)>,
+        tap: &mut Option<LinearTap<'_>>,
         out: &mut [f32],
     ) -> Result<()> {
-        if let Some((cfg, map)) = calib.as_mut() {
+        if let Some(t) = tap.as_mut() {
             if let PlanOp::Packed(pw) = &lin.op {
-                let c = pw.act_clip(xs, m, *cfg);
-                let e = map.entry(lin.name.clone()).or_insert(0.0);
-                if c > *e {
-                    *e = c;
+                match t {
+                    LinearTap::Clips(cfg, map) => {
+                        let c = pw.act_clip(xs, m, cfg);
+                        let e = map.entry(lin.name.clone()).or_insert(0.0);
+                        if c > *e {
+                            *e = c;
+                        }
+                    }
+                    LinearTap::Grams(map) => {
+                        let mut scratch = Vec::new();
+                        let folded = pw.fold_input(xs, &mut scratch);
+                        map.entry(lin.name.clone())
+                            .or_insert_with(|| Gram::new(pw.d_in))
+                            .accumulate(folded, m)?;
+                    }
                 }
             }
         }
@@ -920,7 +973,7 @@ impl ForwardPlan {
         t: usize,
         lens: Option<&[usize]>,
         mut kv: Option<&mut [&mut KvCache]>,
-        mut calib: Option<(&ActQuantConfig, &mut BTreeMap<String, f32>)>,
+        mut calib: Option<LinearTap<'_>>,
         last_only: bool,
     ) -> Result<Vec<f32>> {
         let d = self.dims.d_model;
